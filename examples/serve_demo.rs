@@ -1,0 +1,121 @@
+//! END-TO-END DRIVER: the full three-layer stack on a real workload.
+//!
+//! Proves all layers compose: Pallas kernels (L1) lowered by JAX (L2) to
+//! HLO artifacts, loaded by the PJRT runtime, driven by the Rust serving
+//! coordinator (L3) under batched concurrent traffic — with the native
+//! backend run side by side for comparison and cross-validation.
+//!
+//! Requires `make artifacts`. Run:
+//!     cargo run --release --example serve_demo
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gbf::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, FilterBackend, NativeBackend, PjrtBackend};
+use gbf::filter::params::FilterConfig;
+use gbf::runtime::actor::EngineActor;
+use gbf::runtime::manifest::{default_artifact_dir, Manifest};
+use gbf::workload::keygen::{disjoint_key_sets, unique_keys};
+use gbf::workload::zipf::Zipf;
+
+const N_CLIENTS: usize = 8;
+const ADDS_PER_CLIENT: usize = 20_000;
+const QUERIES_PER_CLIENT: usize = 30_000;
+
+fn drive(coordinator: Arc<Coordinator>) -> anyhow::Result<()> {
+    println!(
+        "\n=== {} backend: {} shards, filter {} ===",
+        coordinator.backend_name(),
+        coordinator.num_shards(),
+        coordinator.filter_config().name()
+    );
+
+    // Phase 1: concurrent clients ingest disjoint key ranges.
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..N_CLIENTS {
+            let coordinator = Arc::clone(&coordinator);
+            scope.spawn(move || {
+                let keys = unique_keys(ADDS_PER_CLIENT, 0xADD + c as u64);
+                coordinator.add_blocking(&keys).expect("add");
+            });
+        }
+    });
+    let ingest_dt = t0.elapsed();
+    let total_adds = N_CLIENTS * ADDS_PER_CLIENT;
+    println!(
+        "ingest : {total_adds} adds in {ingest_dt:?} ({:.2} M ops/s)",
+        total_adds as f64 / ingest_dt.as_secs_f64() / 1e6
+    );
+
+    // Phase 2: mixed lookup traffic — Zipf-skewed over the hot keys,
+    // plus absent keys to exercise the negative path.
+    let t1 = Instant::now();
+    let mut client_results = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..N_CLIENTS {
+            let coordinator = Arc::clone(&coordinator);
+            handles.push(scope.spawn(move || {
+                let hot = unique_keys(ADDS_PER_CLIENT, 0xADD + c as u64);
+                let mut zipf = Zipf::new(hot.len() as u64, 1.2, c as u64);
+                let trace = zipf.trace(&hot, QUERIES_PER_CLIENT / 2);
+                let (_, absent) = disjoint_key_sets(1, QUERIES_PER_CLIENT / 2, 0xBAD + c as u64);
+                let pos = coordinator.query_blocking(&trace).expect("query");
+                let neg = coordinator.query_blocking(&absent).expect("query");
+                let false_neg = pos.iter().filter(|&&h| !h).count();
+                let false_pos = neg.iter().filter(|&&h| h).count();
+                (false_neg, false_pos, neg.len())
+            }));
+        }
+        for h in handles {
+            client_results.push(h.join().unwrap());
+        }
+    });
+    let query_dt = t1.elapsed();
+    let total_queries = N_CLIENTS * QUERIES_PER_CLIENT;
+    let false_negs: usize = client_results.iter().map(|r| r.0).sum();
+    let false_pos: usize = client_results.iter().map(|r| r.1).sum();
+    let negatives: usize = client_results.iter().map(|r| r.2).sum();
+    println!(
+        "lookup : {total_queries} queries in {query_dt:?} ({:.2} M ops/s)",
+        total_queries as f64 / query_dt.as_secs_f64() / 1e6
+    );
+    println!(
+        "quality: false negatives {false_negs} (MUST be 0), FPR {:.3e} over {negatives} absent keys",
+        false_pos as f64 / negatives as f64
+    );
+    anyhow::ensure!(false_negs == 0, "false negatives through the serving stack!");
+    println!("{}", coordinator.metrics().report());
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = FilterConfig::default(); // matches the AOT artifacts (1 MiB)
+    let policy = BatchPolicy { max_batch: 4096, max_wait: Duration::from_micros(300) };
+
+    // --- native backend ---
+    let native = Coordinator::new(
+        CoordinatorConfig { num_shards: 4, policy: policy.clone() },
+        |_| Ok(Box::new(NativeBackend::new(cfg, 1)?) as Box<dyn FilterBackend>),
+    )?;
+    drive(Arc::new(native))?;
+
+    // --- PJRT backend: the AOT Pallas artifacts on the request path ---
+    match Manifest::load(&default_artifact_dir()) {
+        Ok(manifest) => {
+            let actor = EngineActor::spawn_with_manifest(manifest.clone())?;
+            let client = actor.client();
+            let pjrt = Coordinator::new(CoordinatorConfig { num_shards: 2, policy }, move |_| {
+                Ok(Box::new(PjrtBackend::new(client.clone(), &manifest, cfg, "pallas")?)
+                    as Box<dyn FilterBackend>)
+            })?;
+            drive(Arc::new(pjrt))?;
+            println!("\nend-to-end OK: L1 Pallas -> L2 JAX -> HLO -> PJRT -> L3 coordinator");
+        }
+        Err(e) => {
+            println!("\nskipping PJRT leg: {e:#} (run `make artifacts`)");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,11 @@
+"""Build-time compile package: L2 JAX model + L1 Pallas kernels + AOT lowering.
+
+Python in this package runs ONLY at build time (`make artifacts`); the Rust
+coordinator executes the lowered HLO artifacts via PJRT at request time.
+
+All filter arithmetic is on uint64 words/keys, so 64-bit mode is mandatory.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

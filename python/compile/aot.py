@@ -1,0 +1,191 @@
+"""AOT pipeline: lower every (config, op, batch) to HLO text + manifest.
+
+HLO *text* (not a serialized HloModuleProto) is the interchange format: the
+`xla` crate's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit
+instruction ids, while the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Also emits artifacts/golden.json - cross-language test vectors that pin the
+Rust hash/filter implementations bit-for-bit to the Python reference.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import hashing as H
+from .kernels import ref
+from .kernels.patterns import gen_probes
+from .params import FilterConfig
+
+# ---------------------------------------------------------------- artifacts
+
+# The default artifact set: the paper's headline SBF configuration, the
+# RBBF extreme, a CSBF, the WarpCore-style BBF comparator, and a CBF
+# baseline. log2_m_words=17 -> 1 MiB filters (shape is baked into the HLO).
+DEFAULT_LOG2_M = 17
+DEFAULT_BATCHES = (256, 4096)
+
+
+def default_configs() -> list[FilterConfig]:
+    m = DEFAULT_LOG2_M
+    return [
+        FilterConfig(variant="sbf", block_bits=256, k=16, theta=1, phi=4, log2_m_words=m),
+        FilterConfig(variant="rbbf", block_bits=64, k=16, log2_m_words=m),
+        FilterConfig(variant="csbf", block_bits=512, k=16, z=2, theta=1, phi=8, log2_m_words=m),
+        FilterConfig(variant="bbf", block_bits=256, k=16, scheme="iter", theta=4, phi=1, log2_m_words=m),
+        FilterConfig(variant="cbf", k=16, log2_m_words=m),
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    # return_tuple=False: every op here has a single array output, so the
+    # ENTRY root is the bare array. This lets the Rust runtime keep the
+    # filter as a device-resident PjRtBuffer and feed the add-output buffer
+    # straight back as the next call's input (no host round-trip).
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(cfg: FilterConfig, op: str, batch: int, impl: str) -> str:
+    fn = model.build_op(cfg, op, batch, impl=impl)
+    lowered = jax.jit(fn).lower(*model.abstract_inputs(cfg, op, batch))
+    return to_hlo_text(lowered)
+
+
+def artifact_name(cfg: FilterConfig, op: str, batch: int, impl: str) -> str:
+    suffix = f"_{impl}" if impl != "pallas" else ""
+    return f"{cfg.name()}_{op}_n{batch}{suffix}"
+
+
+def build_artifacts(out_dir: str, configs, batches, with_jnp_ablation: bool = True):
+    entries = []
+    jobs = [(cfg, op, batch, "pallas") for cfg in configs for op in ("contains", "add") for batch in batches]
+    if with_jnp_ablation:
+        head = configs[0]
+        jobs += [(head, op, max(batches), "jnp") for op in ("contains", "add")]
+    for cfg, op, batch, impl in jobs:
+        name = artifact_name(cfg, op, batch, impl)
+        fname = name + ".hlo.txt"
+        t0 = time.time()
+        text = lower_one(cfg, op, batch, impl)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "op": op,
+            "impl": impl,
+            "batch": batch,
+            **cfg.to_dict(),
+        }
+        entries.append(entry)
+        print(f"  {name}: {len(text)} chars in {time.time() - t0:.2f}s")
+    return entries
+
+
+# ------------------------------------------------------------------- golden
+
+
+def _hex(x) -> str:
+    return f"{int(x):016x}"
+
+
+def golden_configs() -> list[FilterConfig]:
+    m = 10  # 1024 words - small enough to dump, large enough to exercise blocks
+    return [
+        FilterConfig(variant="sbf", block_bits=256, k=16, log2_m_words=m),
+        FilterConfig(variant="sbf", block_bits=1024, k=16, log2_m_words=m),
+        FilterConfig(variant="rbbf", block_bits=64, k=16, log2_m_words=m),
+        FilterConfig(variant="csbf", block_bits=512, k=16, z=2, log2_m_words=m),
+        FilterConfig(variant="csbf", block_bits=1024, k=16, z=4, log2_m_words=m),
+        FilterConfig(variant="bbf", block_bits=256, k=16, log2_m_words=m),
+        FilterConfig(variant="bbf", block_bits=256, k=16, scheme="iter", log2_m_words=m),
+        FilterConfig(variant="cbf", k=16, log2_m_words=m),
+        FilterConfig(variant="sbf", block_bits=128, word_bits=32, k=8, log2_m_words=m),
+    ]
+
+
+def build_golden(out_dir: str, n_keys: int = 64):
+    keys = np.array(H._splitmix64_stream(42, n_keys), dtype=np.uint64)
+    base = H.xxh64_u64(keys)
+    cases = []
+    for cfg in golden_configs():
+        cfg.validate()
+        word_idx, masks = gen_probes(cfg, keys)
+        words = ref.new_filter(cfg)
+        ref.add_ref(cfg, words, keys[: n_keys // 2])
+        hits = ref.contains_ref(cfg, words, keys)
+        nz = np.nonzero(words)[0]
+        cases.append(
+            {
+                "config": cfg.to_dict(),
+                "probes": [
+                    {
+                        "key": _hex(keys[i]),
+                        "words": [int(w) for w in word_idx[i]],
+                        "masks": [_hex(mk) for mk in masks[i]],
+                    }
+                    for i in range(8)
+                ],
+                "inserted": n_keys // 2,
+                "filter_nonzero": [[int(i), _hex(words[i])] for i in nz],
+                "contains": [int(b) for b in hits],
+            }
+        )
+    doc = {
+        "seed_base": _hex(H.SEED_BASE),
+        "salt_stream_seed": _hex(H.SALT_STREAM_SEED),
+        "salts": [_hex(s) for s in H.SALTS],
+        "keys": [_hex(k) for k in keys],
+        "base_hashes": [_hex(b) for b in base],
+        "cases": cases,
+    }
+    path = os.path.join(out_dir, "golden.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"  golden.json: {len(cases)} cases")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--log2-m-words", type=int, default=DEFAULT_LOG2_M)
+    ap.add_argument("--skip-hlo", action="store_true", help="only regenerate golden.json")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    print("golden vectors:")
+    build_golden(args.out_dir)
+
+    entries = []
+    if not args.skip_hlo:
+        print("artifacts:")
+        configs = default_configs()
+        if args.log2_m_words != DEFAULT_LOG2_M:
+            configs = [
+                FilterConfig(**{**c.to_dict(), "log2_m_words": args.log2_m_words}) for c in configs
+            ]
+        entries = build_artifacts(args.out_dir, configs, DEFAULT_BATCHES)
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(entries)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""L1 kernels: shared fingerprint pipeline, pure-numpy oracle, Pallas kernels."""

@@ -1,0 +1,129 @@
+"""Fingerprint pipeline: xxHash64 base hash + branchless multiplicative salts.
+
+Paper §4.2: one strong base hash per key (xxHash64 [6]), then every bit
+position / block index / group-sector choice is derived by multiplying the
+base hash with a distinct odd 64-bit constant and keeping the *top* bits of
+the product (Dietzfelbinger-style universal hashing [9]). This is branchless,
+needs exactly one hash evaluation per key, and maps 1:1 onto the inlined-salt
+code generation the paper performs with C++ templates.
+
+The module is array-library agnostic: every function works on numpy *and*
+jax.numpy uint64 arrays (both wrap modulo 2^64 and keep uint64 under NEP 50
+weak promotion), so the same code serves the numpy oracle (ref.py), the JAX
+model (model.py) and the Pallas kernels (sbf_kernel.py). The Rust mirror
+lives in rust/src/hash/; artifacts/golden.json pins them bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+# xxHash64 primes (Collet [6]).
+XXH_PRIME64_1 = 0x9E3779B185EBCA87
+XXH_PRIME64_2 = 0xC2B2AE3D27D4EB4F
+XXH_PRIME64_3 = 0x165667B19E3779F9
+XXH_PRIME64_4 = 0x85EBCA77C2B2AE63
+XXH_PRIME64_5 = 0x27D4EB2F165667C5
+
+# Base-hash seed (fixed across the whole stack).
+SEED_BASE = 0xB10000F117E55EED
+
+# Salt schedule: a splitmix64 stream seeded with the fractional bits of pi,
+# forced odd. Salt roles:
+#   SALTS[0]          block selection
+#   SALTS[1 + g]      CSBF group-g sector selection (g < 16)
+#   SALTS[17 + i]     fingerprint bit i (i < 79)
+SALT_STREAM_SEED = 0x243F6A8885A308D3
+NUM_SALTS = 96
+
+
+def _splitmix64_stream(seed: int, count: int) -> tuple[int, ...]:
+    out, state = [], seed & MASK64
+    for _ in range(count):
+        state = (state + 0x9E3779B97F4A7C15) & MASK64
+        z = state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        out.append(z ^ (z >> 31))
+    return tuple(out)
+
+
+SALTS: tuple[int, ...] = tuple(x | 1 for x in _splitmix64_stream(SALT_STREAM_SEED, NUM_SALTS))
+
+
+def salt_block() -> int:
+    return SALTS[0]
+
+
+def salt_group(g: int) -> int:
+    assert 0 <= g < 16
+    return SALTS[1 + g]
+
+
+def salt_bit(i: int) -> int:
+    assert 0 <= i < NUM_SALTS - 17
+    return SALTS[17 + i]
+
+
+def _u64(x: int):
+    """A uint64 constant usable with both numpy and jnp arrays."""
+    return np.uint64(x & MASK64)
+
+
+def rotl64(x, r: int):
+    """Rotate-left on uint64 arrays."""
+    return (x << _u64(r)) | (x >> _u64(64 - r))
+
+
+def xxh64_u64(key, seed: int = SEED_BASE):
+    """xxHash64 of a single 8-byte little-endian lane (the u64 key).
+
+    This is the exact XXH64 algorithm specialized to an 8-byte input:
+    no stripe accumulators, one mid-loop fold, then the avalanche.
+    `key` is a uint64 array (numpy or jnp); returns the same array type.
+    """
+    # Modular wraparound is the point of every multiply below; keep numpy
+    # from warning about it (jnp wraps silently anyway).
+    np.seterr(over="ignore")
+    h = _u64(seed + XXH_PRIME64_5 + 8)
+    k1 = key * _u64(XXH_PRIME64_2)
+    k1 = rotl64(k1, 31)
+    k1 = k1 * _u64(XXH_PRIME64_1)
+    h = h ^ k1
+    h = rotl64(h, 27) * _u64(XXH_PRIME64_1) + _u64(XXH_PRIME64_4)
+    # avalanche
+    h = h ^ (h >> _u64(33))
+    h = h * _u64(XXH_PRIME64_2)
+    h = h ^ (h >> _u64(29))
+    h = h * _u64(XXH_PRIME64_3)
+    h = h ^ (h >> _u64(32))
+    return h
+
+
+def tophash(base, salt: int, nbits: int):
+    """Universal multiplicative hash: top `nbits` of (base * salt) mod 2^64.
+
+    nbits == 0 yields all-zeros (e.g. block index when there is one block).
+    """
+    if nbits == 0:
+        return base & _u64(0)
+    return (base * _u64(salt)) >> _u64(64 - nbits)
+
+
+def iter_chain(base, length: int, log2_range: int):
+    """WarpCore-style iterative re-hash pattern generation (paper §4.2).
+
+    h_0 = base; h_{i+1} = xxh64(h_i ^ (i+1)). Position i is the top
+    log2_range bits of h_i. Returns a list of `length` position arrays.
+    Sequential by construction - this is the scheme whose serial latency the
+    paper's multiplicative hashing removes.
+    """
+    positions = []
+    h = base
+    for i in range(length):
+        positions.append(h >> _u64(64 - log2_range))
+        if i + 1 < length:
+            h = xxh64_u64(h ^ _u64(i + 1))
+    return positions

@@ -1,0 +1,135 @@
+"""Key-pattern generation for every filter variant (paper §2.1 + §4.2).
+
+For a batch of keys this produces the probe set: `P = cfg.words_per_key`
+pairs of (word index into the filter array, word-sized bit mask). Insertion
+ORs each mask into its word; lookup tests that every mask is fully present.
+
+The representation is uniform across variants:
+    cbf   P = k     one single-bit mask anywhere in the filter
+    bbf   P = k     one single-bit mask anywhere in the key's block
+    rbbf  P = 1     all k bits in the key's single word   (s = 1)
+    sbf   P = s     k/s bits in each word of the key's block
+    csbf  P = z     k/z bits in one chosen sector per group
+
+Array-library agnostic (numpy or jax.numpy uint64 inputs).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..params import FilterConfig
+from . import hashing as H
+
+
+def _one(x):
+    """uint64 1 compatible with numpy/jnp broadcasting."""
+    return np.uint64(1)
+
+
+def block_index(cfg: FilterConfig, base):
+    """Block selector: top log2(num_blocks) bits of base * SALT_BLOCK."""
+    return H.tophash(base, H.salt_block(), cfg.log2_num_blocks)
+
+
+def gen_probes(cfg: FilterConfig, keys):
+    """Return (word_idx, masks): two [n, P] arrays (int64 / uint64).
+
+    Masks always fit the word size; callers cast to uint32 when S = 32.
+    """
+    base = H.xxh64_u64(keys)
+    v = cfg.variant
+    log2_s_bits = cfg.log2_word_bits
+
+    if v == "cbf":
+        words, masks = [], []
+        for i in range(cfg.k):
+            pos = H.tophash(base, H.salt_bit(i), cfg.log2_m_bits)
+            words.append((pos >> np.uint64(log2_s_bits)).astype(np.int64))
+            masks.append(_one(base) << (pos & np.uint64(cfg.word_bits - 1)))
+        return _stack(words), _stack(masks)
+
+    blk = block_index(cfg, base)
+    bw0 = (blk.astype(np.int64)) * np.int64(cfg.s)
+
+    if v in ("sbf", "rbbf"):
+        kpw = cfg.k_per_word
+        words, masks = [], []
+        for w in range(cfg.s):
+            m = None
+            for j in range(kpw):
+                pos = H.tophash(base, H.salt_bit(w * kpw + j), log2_s_bits)
+                bit = _one(base) << pos
+                m = bit if m is None else (m | bit)
+            words.append(bw0 + np.int64(w))
+            masks.append(m)
+        return _stack(words), _stack(masks)
+
+    if v == "bbf":
+        if cfg.scheme == "iter":
+            positions = H.iter_chain(base, cfg.k, cfg.log2_block_bits)
+        else:
+            positions = [
+                H.tophash(base, H.salt_bit(i), cfg.log2_block_bits) for i in range(cfg.k)
+            ]
+        words, masks = [], []
+        for pos in positions:
+            words.append(bw0 + (pos >> np.uint64(log2_s_bits)).astype(np.int64))
+            masks.append(_one(base) << (pos & np.uint64(cfg.word_bits - 1)))
+        return _stack(words), _stack(masks)
+
+    if v == "csbf":
+        spg, kpg = cfg.sectors_per_group, cfg.k_per_group
+        log2_spg = spg.bit_length() - 1
+        words, masks = [], []
+        for g in range(cfg.z):
+            sec = H.tophash(base, H.salt_group(g), log2_spg).astype(np.int64)
+            words.append(bw0 + np.int64(g * spg) + sec)
+            m = None
+            for j in range(kpg):
+                pos = H.tophash(base, H.salt_bit(g * kpg + j), log2_s_bits)
+                bit = _one(base) << pos
+                m = bit if m is None else (m | bit)
+            masks.append(m)
+        return _stack(words), _stack(masks)
+
+    raise ValueError(v)
+
+
+def gen_block_masks(cfg: FilterConfig, keys):
+    """Blocked variants only: (block_word0[n], mask_vec[n, s]).
+
+    The per-key probe set expanded to a dense s-word block mask - the shape
+    insertion kernels want: one contiguous load + OR + store per key
+    (the Pallas analogue of issuing all block atomics in one tight window,
+    paper §5.2 "temporal coalescing").
+    """
+    assert cfg.is_blocked
+    word_idx, masks = gen_probes(cfg, keys)
+    bw0 = (word_idx[:, 0] // cfg.s) * cfg.s  # block start is invariant per key
+    local = word_idx - bw0[:, None]  # [n, P] in 0..s-1
+    if cfg.variant in ("sbf", "rbbf"):
+        return bw0, masks  # already dense: P == s, local == arange(s)
+    # Scatter P probes into s slots with OR (duplicates possible for bbf).
+    # Built from scalar comparisons only: Pallas kernels may not capture
+    # array constants, so no arange/one-hot tables here. The (s x P) compare
+    # grid is statically unrolled, mirroring the paper's template unrolling.
+    s, P = cfg.s, masks.shape[1]
+    cols = []
+    for w_slot in range(s):
+        acc = None
+        for p in range(P):
+            hit = (local[:, p] == w_slot).astype(masks.dtype)
+            contrib = masks[:, p] * hit
+            acc = contrib if acc is None else (acc | contrib)
+        cols.append(acc)
+    return bw0, _stack(cols)
+
+
+def _stack(cols):
+    """Stack per-probe columns to [n, P]; works for numpy and jnp arrays."""
+    if isinstance(cols[0], np.ndarray):
+        return np.stack(cols, axis=1)
+    import jax.numpy as jnp
+
+    return jnp.stack(cols, axis=1)

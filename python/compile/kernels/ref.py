@@ -1,0 +1,54 @@
+"""Pure-numpy oracle for every filter variant.
+
+This is the correctness ground truth for the Pallas kernels (pytest) and for
+the Rust native backend (via artifacts/golden.json). Deliberately simple and
+sequential-in-spirit: numpy's `bitwise_or.at` handles duplicate indices the
+same way atomic OR does.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..params import FilterConfig
+from .patterns import gen_probes
+
+
+def word_dtype(cfg: FilterConfig):
+    return np.uint64 if cfg.word_bits == 64 else np.uint32
+
+
+def new_filter(cfg: FilterConfig) -> np.ndarray:
+    return np.zeros(cfg.m_words, dtype=word_dtype(cfg))
+
+
+def add_ref(cfg: FilterConfig, words: np.ndarray, keys: np.ndarray) -> np.ndarray:
+    """Insert keys; returns the updated filter (in place on `words`)."""
+    keys = np.asarray(keys, dtype=np.uint64)
+    word_idx, masks = gen_probes(cfg, keys)
+    np.bitwise_or.at(words, word_idx.ravel(), masks.ravel().astype(words.dtype))
+    return words
+
+
+def contains_ref(cfg: FilterConfig, words: np.ndarray, keys: np.ndarray) -> np.ndarray:
+    """Membership test; returns bool[n]."""
+    keys = np.asarray(keys, dtype=np.uint64)
+    word_idx, masks = gen_probes(cfg, keys)
+    masks = masks.astype(words.dtype)
+    got = words[word_idx]
+    return ((got & masks) == masks).all(axis=1)
+
+
+def measure_fpr(cfg: FilterConfig, n_insert: int, n_query: int, seed: int = 7) -> float:
+    """Empirical FPR per the paper's §5.1 methodology (scaled down):
+
+    insert n_insert distinct keys, query n_query keys disjoint from them,
+    report the false-positive fraction.
+    """
+    rng = np.random.default_rng(seed)
+    # even keys are inserted, odd keys queried -> disjoint by construction
+    ins = (rng.choice(np.iinfo(np.int64).max, size=n_insert, replace=False).astype(np.uint64)) << np.uint64(1)
+    qry = ((rng.choice(np.iinfo(np.int64).max, size=n_query, replace=False).astype(np.uint64)) << np.uint64(1)) | np.uint64(1)
+    words = new_filter(cfg)
+    add_ref(cfg, words, ins)
+    return float(contains_ref(cfg, words, qry).mean())

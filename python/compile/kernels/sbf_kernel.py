@@ -1,0 +1,126 @@
+"""L1 Pallas kernels: bulk `contains` and `add` for every filter variant.
+
+The paper's compute hot-spot - fused fingerprint generation + filter probe -
+is expressed as Pallas kernels parameterized by the (Θ, Φ) vectorization
+design space of §4.1:
+
+  * Φ (vertical): contiguous words consumed per vector step. In the lookup
+    kernel the per-key probe axis is reshaped into [steps, Θ, Φ] and reduced
+    innermost-first, mirroring `ld.global.vN` wide loads feeding a statically
+    unrolled loop.
+  * Θ (horizontal): lanes cooperating on one key. The Θ axis of the same
+    reshape models the cooperative-group split; the final `all` over Θ is the
+    warp-vote.
+
+Every (Θ, Φ) layout computes bit-identical results (property-tested); the
+layouts differ in HLO structure, and their *hardware* consequences are
+modeled by rust/src/gpu_sim (see DESIGN.md §1).
+
+Insertion performs one contiguous read-modify-write OR per key block inside
+a sequential `fori_loop`. Pallas interpret mode executes this determin-
+istically; OR's commutativity makes the order irrelevant, which is exactly
+why the CUDA original can use relaxed atomics. A scalar `n_valid` input
+supports partially-filled batches (the coordinator pads to a fixed shape).
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): these kernels carry
+the paper's *algorithmic* design space. On a real TPU the block probe maps
+to VMEM-tiled gathers rather than L1-sector loads; `interpret=True` is
+mandatory here because Mosaic custom-calls cannot execute on the CPU PJRT
+plugin.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..params import FilterConfig
+from .patterns import gen_block_masks, gen_probes
+
+
+def word_dtype(cfg: FilterConfig):
+    return jnp.uint64 if cfg.word_bits == 64 else jnp.uint32
+
+
+def _structured_all(ok, cfg: FilterConfig):
+    """Reduce the per-probe axis in (steps, Θ, Φ) order (paper Fig. 2)."""
+    n, P = ok.shape
+    tp = cfg.theta * cfg.phi
+    if tp > 1 and P % tp == 0:
+        ok = ok.reshape(n, P // tp, cfg.theta, cfg.phi)
+        return ok.all(axis=3).all(axis=2).all(axis=1)
+    return ok.all(axis=1)
+
+
+def make_contains(cfg: FilterConfig, batch: int, interpret: bool = True):
+    """Bulk lookup kernel: (filter[m_words], keys[batch]) -> hits uint8[batch]."""
+    cfg.validate()
+    dtype = word_dtype(cfg)
+    P = cfg.words_per_key
+
+    def kernel(f_ref, k_ref, o_ref):
+        keys = k_ref[...]
+        word_idx, masks = gen_probes(cfg, keys)
+        masks = masks.astype(dtype)
+        got = f_ref[word_idx.reshape(-1)].reshape(batch, P)
+        ok = (got & masks) == masks
+        o_ref[...] = _structured_all(ok, cfg).astype(jnp.uint8)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.uint8),
+        interpret=interpret,
+    )
+
+
+def make_add(cfg: FilterConfig, batch: int, interpret: bool = True):
+    """Bulk insert kernel:
+    (keys[batch], n_valid[1] i32, filter[m_words]) -> filter'[m_words].
+
+    The filter argument is aliased to the output, so the kernel performs
+    in-place OR updates - the functional analogue of `atomicOr` (§2.2).
+    """
+    cfg.validate()
+    dtype = word_dtype(cfg)
+    s = cfg.s
+
+    if cfg.is_blocked:
+
+        def kernel(k_ref, n_ref, f_ref, o_ref):
+            del f_ref  # aliased into o_ref
+            keys = k_ref[...]
+            bw0, mvec = gen_block_masks(cfg, keys)
+            mvec = mvec.astype(dtype)
+
+            def body(i, carry):
+                # One contiguous RMW per key: the tightest possible window
+                # for the paper's temporal atomic-coalescing (§5.2).
+                blk = o_ref[pl.ds(bw0[i], s)]
+                o_ref[pl.ds(bw0[i], s)] = blk | mvec[i]
+                return carry
+
+            jax.lax.fori_loop(0, n_ref[0], body, 0)
+
+    else:  # cbf: probes scatter across the whole array
+
+        def kernel(k_ref, n_ref, f_ref, o_ref):
+            del f_ref
+            keys = k_ref[...]
+            word_idx, masks = gen_probes(cfg, keys)
+            masks = masks.astype(dtype)
+
+            def body(i, carry):
+                for p in range(cfg.k):  # statically unrolled (§4.2)
+                    w = o_ref[pl.ds(word_idx[i, p], 1)]
+                    o_ref[pl.ds(word_idx[i, p], 1)] = w | masks[i, p]
+                return carry
+
+            jax.lax.fori_loop(0, n_ref[0], body, 0)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((cfg.m_words,), dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )

@@ -1,0 +1,106 @@
+"""L2: the JAX compute graph around the L1 kernels.
+
+`build_op` returns a jit-able function for one (config, op, batch) triple.
+Two implementations are provided:
+
+  * impl="pallas"  - the L1 Pallas kernel (interpret mode), the default for
+                     AOT artifacts; the paper's hot-spot lives here.
+  * impl="jnp"     - the same computation expressed directly in jax.numpy;
+                     used as an L2-level ablation artifact (bench: does the
+                     kernelized version lower to leaner HLO?) and as a
+                     correctness cross-check.
+
+Either implementation lowers to a single HLO module per (config, op, batch)
+via aot.py, which the Rust runtime loads and executes on the request path.
+
+Operation signatures (fixed shapes, uint64 keys):
+  contains: (filter[m_words], keys[batch])              -> hits  uint8[batch]
+  add:      (keys[batch], n_valid[1] i32, filter[m..])  -> filter'[m_words]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import sbf_kernel
+from .kernels.patterns import gen_block_masks, gen_probes
+from .params import FilterConfig
+
+
+def word_dtype(cfg: FilterConfig):
+    return jnp.uint64 if cfg.word_bits == 64 else jnp.uint32
+
+
+def contains_jnp(cfg: FilterConfig, batch: int):
+    """Pure-jnp bulk lookup (gather + masked compare + structured all)."""
+
+    def fn(words, keys):
+        word_idx, masks = gen_probes(cfg, keys)
+        masks = masks.astype(words.dtype)
+        got = words[word_idx.reshape(-1)].reshape(batch, cfg.words_per_key)
+        ok = (got & masks) == masks
+        return sbf_kernel._structured_all(ok, cfg).astype(jnp.uint8)
+
+    return fn
+
+
+def add_jnp(cfg: FilterConfig, batch: int):
+    """Pure-jnp bulk insert (sequential OR via fori_loop, no Pallas)."""
+    s = cfg.s
+
+    if cfg.is_blocked:
+
+        def fn(keys, n_valid, words):
+            bw0, mvec = gen_block_masks(cfg, keys)
+            mvec = mvec.astype(words.dtype)
+
+            def body(i, w):
+                blk = jax.lax.dynamic_slice(w, (bw0[i],), (s,))
+                return jax.lax.dynamic_update_slice(w, blk | mvec[i], (bw0[i],))
+
+            return jax.lax.fori_loop(0, n_valid[0], body, words)
+
+    else:
+
+        def fn(keys, n_valid, words):
+            word_idx, masks = gen_probes(cfg, keys)
+            masks = masks.astype(words.dtype)
+
+            def body(i, w):
+                for p in range(cfg.k):
+                    cur = jax.lax.dynamic_slice(w, (word_idx[i, p],), (1,))
+                    w = jax.lax.dynamic_update_slice(w, cur | masks[i, p : p + 1], (word_idx[i, p],))
+                return w
+
+            return jax.lax.fori_loop(0, n_valid[0], body, words)
+
+    return fn
+
+
+def build_op(cfg: FilterConfig, op: str, batch: int, impl: str = "pallas"):
+    """Return the callable for one artifact; see module docstring for sigs."""
+    cfg.validate()
+    if impl == "pallas":
+        if op == "contains":
+            return sbf_kernel.make_contains(cfg, batch)
+        if op == "add":
+            return sbf_kernel.make_add(cfg, batch)
+    elif impl == "jnp":
+        if op == "contains":
+            return contains_jnp(cfg, batch)
+        if op == "add":
+            return add_jnp(cfg, batch)
+    raise ValueError(f"unknown op/impl {op!r}/{impl!r}")
+
+
+def abstract_inputs(cfg: FilterConfig, op: str, batch: int):
+    """ShapeDtypeStructs matching build_op's calling convention."""
+    words = jax.ShapeDtypeStruct((cfg.m_words,), word_dtype(cfg))
+    keys = jax.ShapeDtypeStruct((batch,), jnp.uint64)
+    n_valid = jax.ShapeDtypeStruct((1,), jnp.int32)
+    if op == "contains":
+        return (words, keys)
+    if op == "add":
+        return (keys, n_valid, words)
+    raise ValueError(op)

@@ -1,0 +1,231 @@
+"""Filter geometry, validation, and the paper's accuracy math (Eq. 1-3).
+
+This module is the single Python source of truth for filter configuration.
+`rust/src/filter/params.rs` mirrors it field-for-field; the cross-language
+golden tests (artifacts/golden.json) pin the two against each other.
+
+Terminology (paper §2.1-§2.2):
+    m_bits      total filter size in bits (power of two here)
+    m_words     m_bits / S
+    S           word ("sector" in the paper's filter sense) size in bits
+    B           block size in bits, one block per key for blocked variants
+    s           words per block = B / S
+    k           fingerprint bits per key
+    z           CSBF: number of sector groups per block
+    c           bits per element = m / n
+    Θ (theta)   horizontal vectorization: lanes cooperating per key
+    Φ (phi)     vertical vectorization: contiguous words per vector load
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+VARIANTS = ("cbf", "bbf", "rbbf", "sbf", "csbf")
+SCHEMES = ("mult", "iter")
+
+
+def _is_pow2(x: int) -> bool:
+    return x > 0 and (x & (x - 1)) == 0
+
+
+def _log2(x: int) -> int:
+    assert _is_pow2(x), f"{x} is not a power of two"
+    return x.bit_length() - 1
+
+
+@dataclass(frozen=True)
+class FilterConfig:
+    """A fully-specified filter configuration.
+
+    The default is the paper's headline configuration: an SBF with
+    B = 256-bit blocks of S = 64-bit words and k = 16 fingerprint bits.
+    """
+
+    variant: str = "sbf"
+    log2_m_words: int = 17  # 2^17 * 8 B = 1 MiB filter
+    word_bits: int = 64  # S; the paper keeps S = 64 throughout §5
+    block_bits: int = 256  # B
+    k: int = 16
+    z: int = 1  # CSBF group count (ignored otherwise)
+    scheme: str = "mult"  # "iter" = WarpCore-style sequential re-hash
+    theta: int = 1  # Θ
+    phi: int = 1  # Φ
+
+    # ---- derived ----
+    @property
+    def m_words(self) -> int:
+        return 1 << self.log2_m_words
+
+    @property
+    def m_bits(self) -> int:
+        return self.m_words * self.word_bits
+
+    @property
+    def s(self) -> int:
+        """Words per block."""
+        return self.block_bits // self.word_bits
+
+    @property
+    def num_blocks(self) -> int:
+        return self.m_bits // self.block_bits
+
+    @property
+    def log2_num_blocks(self) -> int:
+        return _log2(self.num_blocks)
+
+    @property
+    def log2_word_bits(self) -> int:
+        return _log2(self.word_bits)
+
+    @property
+    def log2_block_bits(self) -> int:
+        return _log2(self.block_bits)
+
+    @property
+    def log2_m_bits(self) -> int:
+        return _log2(self.m_bits)
+
+    @property
+    def k_per_word(self) -> int:
+        """SBF/RBBF: fingerprint bits per block word."""
+        return self.k // self.s
+
+    @property
+    def k_per_group(self) -> int:
+        """CSBF: fingerprint bits per sector group."""
+        return self.k // self.z
+
+    @property
+    def sectors_per_group(self) -> int:
+        """CSBF: candidate sectors per group."""
+        return self.s // self.z
+
+    @property
+    def words_per_key(self) -> int:
+        """P: how many (word, mask) probes one key generates."""
+        if self.variant == "cbf":
+            return self.k
+        if self.variant in ("sbf", "rbbf"):
+            return self.s
+        if self.variant == "bbf":
+            return self.k
+        if self.variant == "csbf":
+            return self.z
+        raise ValueError(self.variant)
+
+    @property
+    def is_blocked(self) -> bool:
+        return self.variant != "cbf"
+
+    # ---- validation ----
+    def validate(self) -> "FilterConfig":
+        v = self.variant
+        if v not in VARIANTS:
+            raise ValueError(f"unknown variant {v!r}")
+        if self.scheme not in SCHEMES:
+            raise ValueError(f"unknown scheme {self.scheme!r}")
+        if self.word_bits not in (32, 64):
+            raise ValueError("word_bits must be 32 or 64")
+        if not (0 < self.log2_m_words <= 34):
+            raise ValueError("log2_m_words out of range")
+        if not (1 <= self.k <= 62):
+            raise ValueError("k must be in 1..=62 (salt table budget)")
+        if self.scheme == "iter" and v != "bbf":
+            raise ValueError("iter scheme models WarpCore's BBF only")
+        if v == "cbf":
+            if self.theta != 1 or self.phi != 1:
+                raise ValueError("cbf has no block vectorization layout")
+            return self
+        if not _is_pow2(self.block_bits):
+            raise ValueError("block_bits must be a power of two")
+        if self.block_bits < self.word_bits:
+            raise ValueError("block must hold at least one word")
+        if self.block_bits > self.m_bits:
+            raise ValueError("block larger than filter")
+        if v == "rbbf" and self.block_bits != self.word_bits:
+            raise ValueError("rbbf requires B == S")
+        if v in ("sbf", "rbbf"):
+            if self.k % self.s != 0 or self.k < self.s:
+                raise ValueError("sbf requires k to be a positive multiple of s")
+        if v == "csbf":
+            if not _is_pow2(self.z) or self.z > self.s or self.z < 1:
+                raise ValueError("csbf requires power-of-two z <= s")
+            if self.k % self.z != 0:
+                raise ValueError("csbf requires k % z == 0")
+            if self.z > 16:
+                raise ValueError("csbf group salt budget is 16")
+        if not _is_pow2(self.theta) or not _is_pow2(self.phi):
+            raise ValueError("theta and phi must be powers of two")
+        if self.theta * self.phi > max(self.s, 1):
+            raise ValueError("theta*phi must not exceed words per block")
+        return self
+
+    # ---- naming (mirrors rust & manifest) ----
+    def name(self) -> str:
+        parts = [self.variant, f"B{self.block_bits}", f"S{self.word_bits}", f"k{self.k}"]
+        if self.variant == "csbf":
+            parts.append(f"z{self.z}")
+        if self.scheme != "mult":
+            parts.append(self.scheme)
+        parts.append(f"m{self.log2_m_words}")
+        return "_".join(parts)
+
+    def to_dict(self) -> dict:
+        return {
+            "variant": self.variant,
+            "log2_m_words": self.log2_m_words,
+            "word_bits": self.word_bits,
+            "block_bits": self.block_bits,
+            "k": self.k,
+            "z": self.z,
+            "scheme": self.scheme,
+            "theta": self.theta,
+            "phi": self.phi,
+        }
+
+
+# ---- the paper's accuracy math ----
+
+
+def fpr_classic(m_bits: int, n: int, k: int) -> float:
+    """Eq. (1): f = (1 - e^{-kn/m})^k."""
+    if n == 0:
+        return 0.0
+    return (1.0 - math.exp(-k * n / m_bits)) ** k
+
+
+def optimal_k(m_bits: int, n: int) -> int:
+    """Eq. (2): k = (m/n) ln 2, rounded to the nearest positive integer."""
+    return max(1, round(m_bits / n * math.log(2)))
+
+
+def fpr_min(c: float) -> float:
+    """Eq. (3): f_min = (1/2)^(c ln 2)."""
+    return 0.5 ** (c * math.log(2))
+
+
+def space_optimal_n(m_bits: int, k: int) -> int:
+    """§5.1: the space-error-rate-optimal number of keys for a given (m, k).
+
+    Solving Eq. (2) for n: k = (m/n) ln 2  =>  n = m ln 2 / k.
+    """
+    return max(1, int(m_bits * math.log(2) / k))
+
+
+def fpr_blocked(m_bits: int, n: int, k: int, block_bits: int, terms: int = 64) -> float:
+    """Putze et al.'s Poisson-mixture approximation for blocked filters.
+
+    A block of B bits behaves as a classical Bloom filter loaded with a
+    Poisson(n*B/m)-distributed number of keys; the blocked FPR is the
+    expectation of Eq. (1) over that distribution.
+    """
+    if n == 0:
+        return 0.0
+    lam = n * block_bits / m_bits
+    total, pmf = 0.0, math.exp(-lam)
+    for i in range(terms):
+        total += pmf * fpr_classic(block_bits, i, k)
+        pmf *= lam / (i + 1)
+    return total

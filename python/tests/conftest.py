@@ -1,0 +1,17 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def random_keys(rng, n: int) -> np.ndarray:
+    """Distinct-ish random uint64 keys (collision probability negligible)."""
+    return rng.integers(0, np.iinfo(np.int64).max, size=n).astype(np.uint64)

@@ -1,0 +1,126 @@
+"""Hypothesis property sweeps over kernel shapes, dtypes, and configs.
+
+The randomized counterpart of test_kernels.py: configurations, key sets,
+batch sizes and (Θ, Φ) layouts are drawn by hypothesis; every draw must
+keep the Pallas kernels equal to the numpy oracle.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, sbf_kernel
+from compile.kernels import hashing as H
+from compile.kernels.patterns import gen_probes
+from compile.params import FilterConfig
+
+# keep runtimes CI-friendly: small filters, modest batches, few examples
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def filter_configs(draw):
+    variant = draw(st.sampled_from(["sbf", "rbbf", "csbf", "bbf", "cbf"]))
+    word_bits = draw(st.sampled_from([32, 64]))
+    if variant == "rbbf":
+        block_bits = word_bits
+    elif variant == "cbf":
+        block_bits = 256
+    else:
+        block_bits = word_bits * draw(st.sampled_from([1, 2, 4, 8, 16]))
+    block_bits = min(block_bits, 1024)
+    s = max(1, block_bits // word_bits)
+    if variant in ("sbf", "rbbf"):
+        k = s * draw(st.integers(1, max(1, min(4, 48 // s))))
+    elif variant == "csbf":
+        k = 16
+    else:
+        k = draw(st.integers(1, 20))
+    z = draw(st.sampled_from([zz for zz in (1, 2, 4, 8) if zz <= s])) if variant == "csbf" else 1
+    scheme = draw(st.sampled_from(["mult", "iter"])) if variant == "bbf" else "mult"
+    cfg = FilterConfig(
+        variant=variant,
+        word_bits=word_bits,
+        block_bits=block_bits,
+        k=min(k, 62),
+        z=z,
+        scheme=scheme,
+        log2_m_words=draw(st.integers(8, 11)),
+    )
+    return cfg.validate()
+
+
+def keys_array(seed: int, n: int) -> np.ndarray:
+    return np.array(H._splitmix64_stream(seed ^ 0xABCDEF, n), dtype=np.uint64)
+
+
+@given(cfg=filter_configs(), seed=st.integers(0, 2**32 - 1))
+@settings(**SETTINGS)
+def test_contains_kernel_matches_oracle(cfg, seed):
+    batch = 64
+    ins = keys_array(seed, 100)
+    words = ref.new_filter(cfg)
+    ref.add_ref(cfg, words, ins)
+    queries = np.concatenate([ins[: batch // 2], keys_array(seed + 1, batch - batch // 2)])
+    fn = sbf_kernel.make_contains(cfg, batch)
+    got = np.asarray(fn(jnp.asarray(words), jnp.asarray(queries)))
+    want = ref.contains_ref(cfg, words, queries).astype(np.uint8)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(cfg=filter_configs(), seed=st.integers(0, 2**32 - 1), n_valid=st.integers(0, 64))
+@settings(**SETTINGS)
+def test_add_kernel_matches_oracle_with_padding(cfg, seed, n_valid):
+    batch = 64
+    keys = keys_array(seed, batch)
+    fn = sbf_kernel.make_add(cfg, batch)
+    got = np.asarray(
+        fn(jnp.asarray(keys), jnp.array([n_valid], dtype=jnp.int32), jnp.asarray(ref.new_filter(cfg)))
+    )
+    want = ref.add_ref(cfg, ref.new_filter(cfg), keys[:n_valid])
+    np.testing.assert_array_equal(got, want)
+
+
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    theta=st.sampled_from([1, 2, 4]),
+    phi=st.sampled_from([1, 2, 4]),
+)
+@settings(**SETTINGS)
+def test_theta_phi_layouts_bit_identical(seed, theta, phi):
+    base = FilterConfig(variant="sbf", block_bits=1024, k=16, log2_m_words=10)
+    cfg = FilterConfig(**{**base.to_dict(), "theta": theta, "phi": phi}).validate()
+    ins = keys_array(seed, 80)
+    words = ref.new_filter(cfg)
+    ref.add_ref(cfg, words, ins)
+    queries = np.concatenate([ins[:32], keys_array(seed + 7, 32)])
+    got = np.asarray(sbf_kernel.make_contains(cfg, 64)(jnp.asarray(words), jnp.asarray(queries)))
+    want = np.asarray(
+        sbf_kernel.make_contains(base.validate(), 64)(jnp.asarray(words), jnp.asarray(queries))
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+@given(cfg=filter_configs(), seed=st.integers(0, 2**32 - 1))
+@settings(**SETTINGS)
+def test_probe_geometry_invariants(cfg, seed):
+    keys = keys_array(seed, 64)
+    word_idx, masks = gen_probes(cfg, keys)
+    assert word_idx.shape == (64, cfg.words_per_key)
+    assert word_idx.min() >= 0 and word_idx.max() < cfg.m_words
+    assert (masks != 0).all()
+    if cfg.word_bits == 32:
+        assert (masks >> np.uint64(32) == 0).all()
+    if cfg.is_blocked:
+        blk = word_idx // cfg.s
+        assert (blk == blk[:, :1]).all()
+
+
+@given(cfg=filter_configs(), seed=st.integers(0, 2**32 - 1))
+@settings(**SETTINGS)
+def test_oracle_no_false_negatives_and_order_invariance(cfg, seed):
+    keys = keys_array(seed, 200)
+    w1 = ref.add_ref(cfg, ref.new_filter(cfg), keys)
+    assert ref.contains_ref(cfg, w1, keys).all()
+    w2 = ref.add_ref(cfg, ref.new_filter(cfg), keys[::-1].copy())
+    np.testing.assert_array_equal(w1, w2)

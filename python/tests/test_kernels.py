@@ -1,0 +1,126 @@
+"""Pallas kernel vs numpy oracle - the CORE L1 correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref, sbf_kernel
+from compile.params import FilterConfig
+
+from conftest import random_keys
+
+KCONFIGS = [
+    FilterConfig(variant="sbf", block_bits=256, k=16, log2_m_words=10),
+    FilterConfig(variant="sbf", block_bits=256, k=16, theta=2, phi=2, log2_m_words=10),
+    FilterConfig(variant="sbf", block_bits=1024, k=16, theta=4, phi=4, log2_m_words=10),
+    FilterConfig(variant="rbbf", block_bits=64, k=16, log2_m_words=10),
+    FilterConfig(variant="csbf", block_bits=512, k=16, z=2, log2_m_words=10),
+    FilterConfig(variant="bbf", block_bits=256, k=16, log2_m_words=10),
+    FilterConfig(variant="bbf", block_bits=256, k=16, scheme="iter", log2_m_words=10),
+    FilterConfig(variant="cbf", k=16, log2_m_words=10),
+    FilterConfig(variant="sbf", block_bits=128, word_bits=32, k=8, log2_m_words=10),
+]
+IDS = [c.name() + (f"_t{c.theta}p{c.phi}" if c.theta * c.phi > 1 else "") for c in KCONFIGS]
+
+BATCH = 128
+
+
+def _mk_filter(cfg, rng, fill=200):
+    keys = random_keys(rng, fill)
+    words = ref.new_filter(cfg)
+    ref.add_ref(cfg, words, keys)
+    return words, keys
+
+
+@pytest.mark.parametrize("cfg", KCONFIGS, ids=IDS)
+def test_contains_kernel_matches_ref(cfg, rng):
+    cfg.validate()
+    words, inserted = _mk_filter(cfg, rng)
+    queries = np.concatenate([inserted[:BATCH // 2], random_keys(rng, BATCH - BATCH // 2)])
+    fn = sbf_kernel.make_contains(cfg, BATCH)
+    got = np.asarray(fn(jnp.asarray(words), jnp.asarray(queries)))
+    want = ref.contains_ref(cfg, words, queries).astype(np.uint8)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("cfg", KCONFIGS, ids=IDS)
+def test_add_kernel_matches_ref(cfg, rng):
+    cfg.validate()
+    keys = random_keys(rng, BATCH)
+    fn = sbf_kernel.make_add(cfg, BATCH)
+    got = np.asarray(
+        fn(jnp.asarray(keys), jnp.array([BATCH], dtype=jnp.int32), jnp.asarray(ref.new_filter(cfg)))
+    )
+    want = ref.add_ref(cfg, ref.new_filter(cfg), keys)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("cfg", KCONFIGS, ids=IDS)
+def test_add_kernel_respects_n_valid(cfg, rng):
+    """Padding keys beyond n_valid must not touch the filter."""
+    cfg.validate()
+    keys = random_keys(rng, BATCH)
+    n_valid = 37
+    fn = sbf_kernel.make_add(cfg, BATCH)
+    got = np.asarray(
+        fn(jnp.asarray(keys), jnp.array([n_valid], dtype=jnp.int32), jnp.asarray(ref.new_filter(cfg)))
+    )
+    want = ref.add_ref(cfg, ref.new_filter(cfg), keys[:n_valid])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_add_kernel_accumulates(rng):
+    """Two sequential bulk adds == one combined add."""
+    cfg = KCONFIGS[0].validate()
+    k1, k2 = random_keys(rng, BATCH), random_keys(rng, BATCH)
+    fn = sbf_kernel.make_add(cfg, BATCH)
+    nv = jnp.array([BATCH], dtype=jnp.int32)
+    f1 = fn(jnp.asarray(k1), nv, jnp.asarray(ref.new_filter(cfg)))
+    f2 = np.asarray(fn(jnp.asarray(k2), nv, f1))
+    want = ref.add_ref(cfg, ref.add_ref(cfg, ref.new_filter(cfg), k1), k2)
+    np.testing.assert_array_equal(f2, want)
+
+
+THETA_PHI_LAYOUTS = [(1, 1), (1, 4), (2, 2), (4, 1), (2, 1), (1, 2)]
+
+
+@pytest.mark.parametrize("theta,phi", THETA_PHI_LAYOUTS)
+def test_layouts_bit_identical(theta, phi, rng):
+    """Paper §4.1: the (Θ, Φ) layout is a performance knob, never a
+    semantics knob - every layout must return identical results."""
+    base = FilterConfig(variant="sbf", block_bits=256, k=16, log2_m_words=10)
+    cfg = FilterConfig(**{**base.to_dict(), "theta": theta, "phi": phi}).validate()
+    words, inserted = _mk_filter(cfg, rng)
+    queries = np.concatenate([inserted[:64], random_keys(rng, 64)])
+    fn = sbf_kernel.make_contains(cfg, BATCH)
+    got = np.asarray(fn(jnp.asarray(words), jnp.asarray(queries)))
+    ref_fn = sbf_kernel.make_contains(base.validate(), BATCH)
+    want = np.asarray(ref_fn(jnp.asarray(words), jnp.asarray(queries)))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("op", ["contains", "add"])
+def test_jnp_impl_matches_pallas(op, rng):
+    """L2 ablation implementation == L1 kernel."""
+    cfg = KCONFIGS[0].validate()
+    keys = random_keys(rng, BATCH)
+    words, _ = _mk_filter(cfg, rng)
+    pallas_fn = model.build_op(cfg, op, BATCH, impl="pallas")
+    jnp_fn = model.build_op(cfg, op, BATCH, impl="jnp")
+    if op == "contains":
+        args = (jnp.asarray(words), jnp.asarray(keys))
+    else:
+        args = (jnp.asarray(keys), jnp.array([BATCH], dtype=jnp.int32), jnp.asarray(words))
+    np.testing.assert_array_equal(np.asarray(pallas_fn(*args)), np.asarray(jnp_fn(*args)))
+
+
+def test_kernel_no_false_negatives_end_to_end(rng):
+    """Insert through the add kernel, query through the contains kernel."""
+    cfg = KCONFIGS[0].validate()
+    keys = random_keys(rng, BATCH)
+    add = sbf_kernel.make_add(cfg, BATCH)
+    contains = sbf_kernel.make_contains(cfg, BATCH)
+    words = add(jnp.asarray(keys), jnp.array([BATCH], dtype=jnp.int32), jnp.asarray(ref.new_filter(cfg)))
+    hits = np.asarray(contains(words, jnp.asarray(keys)))
+    assert (hits == 1).all()

@@ -1,0 +1,198 @@
+"""Semantics tests for every filter variant against the numpy oracle."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.patterns import gen_block_masks, gen_probes
+from compile.params import FilterConfig, fpr_blocked, fpr_classic, fpr_min, optimal_k, space_optimal_n
+
+from conftest import random_keys
+
+ALL_CONFIGS = [
+    FilterConfig(variant="sbf", block_bits=256, k=16, log2_m_words=12),
+    FilterConfig(variant="sbf", block_bits=512, k=8, log2_m_words=12),
+    FilterConfig(variant="sbf", block_bits=1024, k=16, log2_m_words=12),
+    FilterConfig(variant="rbbf", block_bits=64, k=16, log2_m_words=12),
+    FilterConfig(variant="rbbf", block_bits=64, k=4, log2_m_words=12),
+    FilterConfig(variant="csbf", block_bits=512, k=16, z=2, log2_m_words=12),
+    FilterConfig(variant="csbf", block_bits=1024, k=16, z=4, log2_m_words=12),
+    FilterConfig(variant="csbf", block_bits=1024, k=8, z=8, log2_m_words=12),
+    FilterConfig(variant="bbf", block_bits=256, k=16, log2_m_words=12),
+    FilterConfig(variant="bbf", block_bits=256, k=16, scheme="iter", log2_m_words=12),
+    FilterConfig(variant="cbf", k=16, log2_m_words=12),
+    FilterConfig(variant="cbf", k=7, log2_m_words=12),
+    FilterConfig(variant="sbf", block_bits=128, word_bits=32, k=8, log2_m_words=12),
+    FilterConfig(variant="rbbf", block_bits=32, word_bits=32, k=4, log2_m_words=12),
+]
+
+IDS = [c.name() for c in ALL_CONFIGS]
+
+
+@pytest.mark.parametrize("cfg", ALL_CONFIGS, ids=IDS)
+def test_no_false_negatives(cfg, rng):
+    """The defining Bloom filter property: inserted keys always hit."""
+    cfg.validate()
+    keys = random_keys(rng, 2000)
+    words = ref.new_filter(cfg)
+    ref.add_ref(cfg, words, keys)
+    assert ref.contains_ref(cfg, words, keys).all()
+
+
+@pytest.mark.parametrize("cfg", ALL_CONFIGS, ids=IDS)
+def test_empty_filter_rejects_everything(cfg, rng):
+    cfg.validate()
+    keys = random_keys(rng, 500)
+    words = ref.new_filter(cfg)
+    assert not ref.contains_ref(cfg, words, keys).any()
+
+
+@pytest.mark.parametrize("cfg", ALL_CONFIGS, ids=IDS)
+def test_probe_geometry(cfg, rng):
+    """Word indices in range; masks nonzero, within word width, and with at
+    most k set bits total; blocked variants stay inside one block."""
+    cfg.validate()
+    keys = random_keys(rng, 512)
+    word_idx, masks = gen_probes(cfg, keys)
+    n, P = word_idx.shape
+    assert P == cfg.words_per_key
+    assert word_idx.min() >= 0 and word_idx.max() < cfg.m_words
+    assert (masks != 0).all()
+    if cfg.word_bits == 32:
+        assert (masks >> np.uint64(32) == 0).all()
+    popcnt = np.vectorize(lambda x: bin(int(x)).count("1"))(masks)
+    assert (popcnt.sum(axis=1) <= cfg.k).all()
+    assert (popcnt.sum(axis=1) >= 1).all()
+    if cfg.is_blocked:
+        blk = word_idx // cfg.s
+        assert (blk == blk[:, :1]).all(), "probes must stay inside one block"
+
+
+@pytest.mark.parametrize("cfg", ALL_CONFIGS, ids=IDS)
+def test_add_idempotent(cfg, rng):
+    cfg.validate()
+    keys = random_keys(rng, 300)
+    w1 = ref.new_filter(cfg)
+    ref.add_ref(cfg, w1, keys)
+    w2 = w1.copy()
+    ref.add_ref(cfg, w2, keys)
+    np.testing.assert_array_equal(w1, w2)
+
+
+@pytest.mark.parametrize("cfg", ALL_CONFIGS, ids=IDS)
+def test_add_order_invariant(cfg, rng):
+    cfg.validate()
+    keys = random_keys(rng, 300)
+    w1 = ref.new_filter(cfg)
+    ref.add_ref(cfg, w1, keys)
+    w2 = ref.new_filter(cfg)
+    ref.add_ref(cfg, w2, keys[::-1].copy())
+    np.testing.assert_array_equal(w1, w2)
+
+
+@pytest.mark.parametrize("cfg", ALL_CONFIGS, ids=IDS)
+def test_block_masks_equal_probes(cfg, rng):
+    """gen_block_masks (the insert-kernel shape) must encode exactly the
+    probe set of gen_probes."""
+    if not cfg.is_blocked:
+        pytest.skip("cbf has no block masks")
+    cfg.validate()
+    keys = random_keys(rng, 256)
+    bw0, mvec = gen_block_masks(cfg, keys)
+    word_idx, masks = gen_probes(cfg, keys)
+    dense = np.zeros((len(keys), cfg.s), dtype=np.uint64)
+    for i in range(len(keys)):
+        for p in range(masks.shape[1]):
+            dense[i, word_idx[i, p] - bw0[i]] |= masks[i, p]
+    np.testing.assert_array_equal(np.asarray(mvec, dtype=np.uint64), dense)
+    assert (bw0 % cfg.s == 0).all()
+
+
+def test_sbf_spreads_bits_evenly(rng):
+    """SBF: every word of the block receives exactly k/s bits (<= collisions)."""
+    cfg = FilterConfig(variant="sbf", block_bits=256, k=16, log2_m_words=12).validate()
+    keys = random_keys(rng, 200)
+    _, masks = gen_probes(cfg, keys)
+    popcnt = np.vectorize(lambda x: bin(int(x)).count("1"))(masks)
+    assert (popcnt <= cfg.k_per_word).all()
+    assert (popcnt >= 1).all()
+
+
+def test_csbf_group_structure(rng):
+    """CSBF: probe g lands in group g's sector range."""
+    cfg = FilterConfig(variant="csbf", block_bits=1024, k=16, z=4, log2_m_words=12).validate()
+    keys = random_keys(rng, 300)
+    word_idx, _ = gen_probes(cfg, keys)
+    local = word_idx % cfg.s
+    spg = cfg.sectors_per_group
+    for g in range(cfg.z):
+        assert (local[:, g] >= g * spg).all()
+        assert (local[:, g] < (g + 1) * spg).all()
+
+
+def test_variant_fprs_are_ordered(rng):
+    """At equal size/k, measured FPR: CBF < SBF(large B) <= SBF(256) < RBBF."""
+    m, k = 12, 16
+    n_ins = space_optimal_n((1 << m) * 64, k)
+    fprs = {}
+    for name, cfg in {
+        "cbf": FilterConfig(variant="cbf", k=k, log2_m_words=m),
+        "sbf256": FilterConfig(variant="sbf", block_bits=256, k=k, log2_m_words=m),
+        "rbbf": FilterConfig(variant="rbbf", block_bits=64, k=k, log2_m_words=m),
+    }.items():
+        fprs[name] = ref.measure_fpr(cfg.validate(), n_ins, 20000)
+    assert fprs["cbf"] < fprs["sbf256"] < fprs["rbbf"], fprs
+
+
+def test_fpr_matches_theory():
+    """Measured CBF FPR tracks Eq. (1) within noise."""
+    cfg = FilterConfig(variant="cbf", k=8, log2_m_words=12).validate()
+    n = space_optimal_n(cfg.m_bits, cfg.k)
+    measured = ref.measure_fpr(cfg, n, 40000)
+    theory = fpr_classic(cfg.m_bits, n, cfg.k)
+    assert theory / 3 < max(measured, 1e-9) < theory * 3, (measured, theory)
+
+
+def test_blocked_fpr_approximation():
+    """Putze Poisson mixture: blocked FPR above classical, below 4x for B=512."""
+    m_bits = (1 << 12) * 64
+    k = 8
+    n = space_optimal_n(m_bits, k)
+    f_c = fpr_classic(m_bits, n, k)
+    f_b = fpr_blocked(m_bits, n, k, 512)
+    assert f_c < f_b < 40 * f_c
+
+
+def test_eq2_eq3_consistency():
+    for c in (8, 12, 16, 23):
+        k = optimal_k(c * 1000, 1000)
+        assert abs(k - c * np.log(2)) <= 0.51
+        assert 0 < fpr_min(c) < 1
+
+
+def test_space_optimal_n_roundtrip():
+    m_bits = 1 << 20
+    for k in (4, 8, 16):
+        n = space_optimal_n(m_bits, k)
+        # at the space-optimal load, bits-per-key * ln2 ~= k
+        assert abs(m_bits / n * np.log(2) - k) < 0.01 * k
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        dict(variant="sbf", block_bits=256, k=15),  # k % s != 0
+        dict(variant="sbf", block_bits=192, k=12),  # B not pow2
+        dict(variant="rbbf", block_bits=128, k=16),  # B != S
+        dict(variant="csbf", block_bits=512, k=16, z=3),  # z not pow2
+        dict(variant="csbf", block_bits=512, k=15, z=2),  # k % z != 0
+        dict(variant="cbf", k=16, theta=2),  # cbf has no layout
+        dict(variant="sbf", block_bits=256, k=16, theta=8, phi=2),  # theta*phi > s
+        dict(variant="sbf", block_bits=256, k=16, scheme="iter"),  # iter is bbf-only
+        dict(variant="bbf", block_bits=256, k=0),
+        dict(variant="nope"),
+    ],
+)
+def test_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        FilterConfig(**bad).validate()

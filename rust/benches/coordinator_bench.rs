@@ -1,0 +1,80 @@
+//! Coordinator benchmarks: batcher formation, router, end-to-end service
+//! throughput under different batch policies (the L3 hot path).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gbf::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, FilterBackend, NativeBackend, Router};
+use gbf::filter::params::FilterConfig;
+use gbf::infra::bench::{black_box, BenchGroup};
+use gbf::workload::keygen::unique_keys;
+
+fn native(shards: usize, policy: BatchPolicy) -> Coordinator {
+    Coordinator::new(CoordinatorConfig { num_shards: shards, policy }, |_| {
+        Ok(Box::new(NativeBackend::new(
+            FilterConfig { log2_m_words: 18, ..Default::default() },
+            1,
+        )?) as Box<dyn FilterBackend>)
+    })
+    .unwrap()
+}
+
+fn main() {
+    let keys = unique_keys(1 << 16, 4);
+
+    let mut router = BenchGroup::new("router");
+    let r = Router::new(8);
+    router.bench("shard_of x 65k", Some(keys.len() as u64), || {
+        let mut acc = 0usize;
+        for &k in &keys {
+            acc += r.shard_of(k);
+        }
+        black_box(acc);
+    });
+    router.bench("partition x 65k", Some(keys.len() as u64), || {
+        black_box(r.partition(&keys));
+    });
+
+    let mut e2e = BenchGroup::new("coordinator end-to-end (native backend)");
+    for (label, max_batch, wait_us) in [
+        ("batch 256 / 100µs", 256usize, 100u64),
+        ("batch 4096 / 200µs", 4096, 200),
+        ("batch 16384 / 500µs", 16384, 500),
+    ] {
+        let c = Arc::new(native(
+            4,
+            BatchPolicy { max_batch, max_wait: Duration::from_micros(wait_us) },
+        ));
+        let coordinator = Arc::clone(&c);
+        let bench_keys = keys.clone();
+        e2e.bench(&format!("query {label}"), Some(keys.len() as u64), move || {
+            // 4 concurrent clients, keys split between them
+            std::thread::scope(|scope| {
+                for chunk in bench_keys.chunks(bench_keys.len() / 4) {
+                    let coordinator = Arc::clone(&coordinator);
+                    scope.spawn(move || {
+                        black_box(coordinator.query_blocking(chunk).unwrap());
+                    });
+                }
+            });
+        });
+        println!("    -> {}", c.metrics().report().replace('\n', "\n    -> "));
+    }
+
+    let mut shards = BenchGroup::new("shard scaling (batch 4096)");
+    for s in [1usize, 2, 4, 8] {
+        let c = Arc::new(native(s, BatchPolicy { max_batch: 4096, max_wait: Duration::from_micros(200) }));
+        let coordinator = Arc::clone(&c);
+        let bench_keys = keys.clone();
+        shards.bench(&format!("query {s} shards"), Some(keys.len() as u64), move || {
+            std::thread::scope(|scope| {
+                for chunk in bench_keys.chunks(bench_keys.len() / 4) {
+                    let coordinator = Arc::clone(&coordinator);
+                    scope.spawn(move || {
+                        black_box(coordinator.query_blocking(chunk).unwrap());
+                    });
+                }
+            });
+        });
+    }
+}

@@ -1,0 +1,77 @@
+//! Native filter benchmarks: bulk add/contains per variant, thread
+//! scaling, the specialized headline hot path, and the coalescer model.
+
+use gbf::filter::params::{FilterConfig, Variant};
+use gbf::filter::sbf::bulk_contains_b256_k16;
+use gbf::filter::Bloom;
+use gbf::gpu_sim::coalescer::{add_trace, Coalescer};
+use gbf::infra::bench::{black_box, BenchGroup};
+use gbf::workload::keygen::unique_keys;
+
+const N: usize = 1 << 20;
+
+fn cfg(variant: Variant, block_bits: u32, z: u32) -> FilterConfig {
+    FilterConfig { variant, block_bits, k: 16, z, log2_m_words: 21, ..Default::default() }
+}
+
+fn main() {
+    let keys = unique_keys(N, 2);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    let mut group = BenchGroup::new("native filter bulk ops (16 MiB filter)");
+    for (name, c) in [
+        ("sbf B=256", cfg(Variant::Sbf, 256, 1)),
+        ("sbf B=1024", cfg(Variant::Sbf, 1024, 1)),
+        ("rbbf B=64", cfg(Variant::Rbbf, 64, 1)),
+        ("csbf B=512 z=2", cfg(Variant::Csbf, 512, 2)),
+        ("bbf B=256", cfg(Variant::Bbf, 256, 1)),
+        ("cbf", cfg(Variant::Cbf, 256, 1)),
+    ] {
+        let filter = Bloom::<u64>::new(c.validate().unwrap()).unwrap();
+        group.bench(&format!("bulk_add {name} ({threads}T)"), Some(N as u64), || {
+            filter.bulk_add(&keys, threads);
+        });
+        group.bench(&format!("bulk_contains {name} ({threads}T)"), Some(N as u64), || {
+            black_box(filter.bulk_contains(&keys, threads));
+        });
+    }
+
+    let mut scaling = BenchGroup::new("thread scaling (sbf B=256)");
+    let filter = Bloom::<u64>::new(cfg(Variant::Sbf, 256, 1)).unwrap();
+    filter.bulk_add(&keys, threads);
+    for t in [1usize, 2, 4, threads] {
+        scaling.bench(&format!("bulk_contains {t}T"), Some(N as u64), || {
+            black_box(filter.bulk_contains(&keys, t));
+        });
+    }
+
+    let mut special = BenchGroup::new("specialized hot path (B=256 k=16 lookup)");
+    let snapshot = filter.snapshot();
+    let mut out = Vec::new();
+    special.bench("generic engine 1T", Some(N as u64), || {
+        black_box(filter.bulk_contains(&keys, 1));
+    });
+    special.bench("bulk_contains_b256_k16 1T", Some(N as u64), || {
+        bulk_contains_b256_k16(&snapshot, &keys, &mut out);
+        black_box(out.len());
+    });
+
+    // coalescer ablation: why Θ = s wins for construction (§5.2)
+    let mut coal = BenchGroup::new("coalescer trace model (B=1024 add)");
+    let c1024 = cfg(Variant::Sbf, 1024, 1).validate().unwrap();
+    let trace_keys = unique_keys(32 * 256, 3);
+    for (theta, phi) in [(1u32, 1u32), (4, 1), (16, 1)] {
+        let trace = add_trace(&c1024, theta, phi, &trace_keys);
+        let stats = Coalescer::default().run(&trace);
+        println!(
+            "  layout Θ={theta:<2} Φ={phi}: {} accesses -> {} transactions (merge x{:.2})",
+            stats.accesses,
+            stats.transactions,
+            stats.merge_factor()
+        );
+        coal.bench(&format!("trace+simulate Θ={theta}"), Some(trace_keys.len() as u64), || {
+            let trace = add_trace(&c1024, theta, phi, &trace_keys);
+            black_box(Coalescer::default().run(&trace));
+        });
+    }
+}

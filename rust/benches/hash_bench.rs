@@ -1,0 +1,64 @@
+//! Hash-pipeline benchmarks: xxHash64, pattern generation per variant.
+//! (custom harness — criterion is unavailable offline; same methodology:
+//! warmup + CV-converged repetition, see infra::bench)
+
+use gbf::filter::params::{FilterConfig, Scheme, Variant};
+use gbf::hash::pattern::{BlockMask, ProbePlan, ProbeSet};
+use gbf::hash::{base_hash, xxh64_u64};
+use gbf::infra::bench::{black_box, BenchGroup};
+use gbf::workload::keygen::unique_keys;
+
+const N: usize = 1 << 20;
+
+fn main() {
+    let keys = unique_keys(N, 1);
+    let mut group = BenchGroup::new("hash pipeline");
+
+    group.bench("xxh64_u64 x 1M", Some(N as u64), || {
+        let mut acc = 0u64;
+        for &k in &keys {
+            acc ^= xxh64_u64(k, 0);
+        }
+        black_box(acc);
+    });
+
+    group.bench("base_hash x 1M", Some(N as u64), || {
+        let mut acc = 0u64;
+        for &k in &keys {
+            acc ^= base_hash(k);
+        }
+        black_box(acc);
+    });
+
+    // pattern generation per variant (the §4.2 hot loop)
+    let configs = [
+        ("sbf B=256", FilterConfig { variant: Variant::Sbf, block_bits: 256, k: 16, log2_m_words: 20, ..Default::default() }),
+        ("sbf B=1024", FilterConfig { variant: Variant::Sbf, block_bits: 1024, k: 16, log2_m_words: 20, ..Default::default() }),
+        ("rbbf B=64", FilterConfig { variant: Variant::Rbbf, block_bits: 64, k: 16, log2_m_words: 20, ..Default::default() }),
+        ("csbf B=512 z=2", FilterConfig { variant: Variant::Csbf, block_bits: 512, k: 16, z: 2, log2_m_words: 20, ..Default::default() }),
+        ("bbf mult B=256", FilterConfig { variant: Variant::Bbf, block_bits: 256, k: 16, log2_m_words: 20, ..Default::default() }),
+        ("bbf iter B=256 (WC)", FilterConfig { variant: Variant::Bbf, block_bits: 256, k: 16, scheme: Scheme::Iter, log2_m_words: 20, ..Default::default() }),
+        ("cbf", FilterConfig { variant: Variant::Cbf, k: 16, log2_m_words: 20, ..Default::default() }),
+    ];
+    for (name, cfg) in configs {
+        let plan = ProbePlan::new(&cfg.validate().unwrap());
+        let mut probes = ProbeSet::default();
+        group.bench(&format!("gen_probes {name}"), Some(N as u64), || {
+            for &k in &keys {
+                plan.gen_probes(k, &mut probes);
+                black_box(probes.masks[0]);
+            }
+        });
+    }
+
+    // block-mask form (the insert path shape)
+    let cfg = FilterConfig { variant: Variant::Sbf, block_bits: 256, k: 16, log2_m_words: 20, ..Default::default() };
+    let plan = ProbePlan::new(&cfg.validate().unwrap());
+    let mut bm = BlockMask::default();
+    group.bench("gen_block_mask sbf B=256", Some(N as u64), || {
+        for &k in &keys {
+            plan.gen_block_mask(k, &mut bm);
+            black_box(bm.masks[0]);
+        }
+    });
+}

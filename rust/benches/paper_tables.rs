@@ -1,0 +1,51 @@
+//! Paper-table regeneration bench: runs the full experiment harness (one
+//! bench per table and figure, per deliverable (d)) and times the PJRT
+//! artifact execution path when artifacts are present.
+
+use gbf::experiments;
+use gbf::filter::params::FilterConfig;
+use gbf::infra::bench::{black_box, BenchGroup};
+use gbf::runtime::actor::EngineActor;
+use gbf::runtime::manifest::{default_artifact_dir, Manifest};
+use gbf::workload::keygen::unique_keys;
+
+fn main() {
+    // every table & figure of the paper's evaluation
+    for exp in ["table1", "table2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "gups", "cpu", "calibration"] {
+        let t0 = std::time::Instant::now();
+        experiments::run(exp, Some(std::path::Path::new("results"))).expect(exp);
+        println!("[{exp}] regenerated in {:?}", t0.elapsed());
+    }
+
+    // PJRT artifact execution throughput (the request-path numbers)
+    let Ok(manifest) = Manifest::load(&default_artifact_dir()) else {
+        println!("no artifacts: skipping PJRT bench (run `make artifacts`)");
+        return;
+    };
+    let actor = EngineActor::spawn_with_manifest(manifest.clone()).expect("engine");
+    let client = actor.client();
+    let cfg = FilterConfig::default();
+    let mut group = BenchGroup::new("PJRT artifact execution (headline sbf_B256)");
+    for batch in manifest.batch_sizes(&cfg, "contains", "pallas") {
+        let contains = manifest.find(&cfg, "contains", batch, "pallas").unwrap().name.clone();
+        let add = manifest.find(&cfg, "add", batch, "pallas").unwrap().name.clone();
+        let keys = unique_keys(batch, 5);
+        let state = client.create_state(cfg).unwrap();
+        client.add(&add, state, keys.clone(), batch).unwrap();
+        group.bench(&format!("contains n={batch}"), Some(batch as u64), || {
+            black_box(client.contains(&contains, state, keys.clone()).unwrap());
+        });
+        group.bench(&format!("add n={batch}"), Some(batch as u64), || {
+            client.add(&add, state, keys.clone(), batch).unwrap();
+        });
+    }
+    // jnp-impl ablation twin (L2 vs L1 artifact)
+    if let Some(spec) = manifest.find(&cfg, "contains", 4096, "jnp") {
+        let keys = unique_keys(4096, 6);
+        let words = vec![0u64; cfg.m_words() as usize];
+        let name = spec.name.clone();
+        group.bench("contains n=4096 (jnp ablation)", Some(4096), || {
+            black_box(client.contains_words(&name, words.clone(), keys.clone()).unwrap());
+        });
+    }
+}

@@ -1,0 +1,97 @@
+//! Empirical false-positive-rate measurement (paper §5.1 methodology).
+//!
+//! "The false-positive rate is measured by first inserting the
+//! space-error-rate-optimal number of distinct keys into the filter ...
+//! We then query N keys not present in the insertion set and record the
+//! fraction of false-positive responses."
+
+use anyhow::Result;
+
+use crate::filter::params::{space_optimal_n, FilterConfig};
+use crate::filter::AnyBloom;
+use crate::workload::keygen::disjoint_key_sets;
+
+/// Measure FPR for a config with explicit insert/query counts.
+pub fn measure_fpr(cfg: &FilterConfig, n_insert: usize, n_query: usize, seed: u64) -> Result<f64> {
+    let filter = AnyBloom::new(*cfg)?;
+    let (ins, qry) = disjoint_key_sets(n_insert, n_query, seed);
+    filter.bulk_add(&ins, 0);
+    let hits = filter.bulk_contains(&qry, 0);
+    Ok(hits.iter().filter(|&&b| b).count() as f64 / n_query as f64)
+}
+
+/// Measure FPR at the paper's space-optimal load (`n = m ln2 / k`).
+pub fn measure_fpr_space_optimal(cfg: &FilterConfig, n_query: usize, seed: u64) -> Result<FprReport> {
+    let n = space_optimal_n(cfg.m_bits(), cfg.k) as usize;
+    let fpr = measure_fpr(cfg, n, n_query, seed)?;
+    Ok(FprReport {
+        cfg: *cfg,
+        n_insert: n,
+        n_query,
+        fpr,
+        fpr_classic_theory: crate::filter::params::fpr_classic(cfg.m_bits(), n as u64, cfg.k),
+        fpr_blocked_theory: if cfg.is_blocked() {
+            crate::filter::params::fpr_blocked(cfg.m_bits(), n as u64, cfg.k, cfg.block_bits)
+        } else {
+            crate::filter::params::fpr_classic(cfg.m_bits(), n as u64, cfg.k)
+        },
+    })
+}
+
+/// One FPR measurement with the matching theory values.
+#[derive(Debug, Clone)]
+pub struct FprReport {
+    pub cfg: FilterConfig,
+    pub n_insert: usize,
+    pub n_query: usize,
+    pub fpr: f64,
+    /// Eq. (1) for an unblocked filter of the same size.
+    pub fpr_classic_theory: f64,
+    /// Putze Poisson mixture for the blocked layout.
+    pub fpr_blocked_theory: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::params::Variant;
+
+    #[test]
+    fn blocked_fpr_close_to_poisson_mixture() {
+        let cfg = FilterConfig {
+            variant: Variant::Sbf,
+            block_bits: 256,
+            k: 16,
+            log2_m_words: 12,
+            ..Default::default()
+        };
+        let rep = measure_fpr_space_optimal(&cfg, 60_000, 11).unwrap();
+        // the blocked theory should be within ~3x of measurement
+        assert!(
+            rep.fpr < rep.fpr_blocked_theory * 3.0 + 5e-4
+                && rep.fpr > rep.fpr_blocked_theory / 4.0 - 5e-4,
+            "measured {} vs blocked theory {}",
+            rep.fpr,
+            rep.fpr_blocked_theory
+        );
+        // and strictly above the classical bound
+        assert!(rep.fpr_blocked_theory > rep.fpr_classic_theory);
+    }
+
+    #[test]
+    fn fpr_ordering_cbf_sbf_rbbf() {
+        // Fig. 4's accuracy axis: CBF < SBF(256) < RBBF at iso (m, k)
+        let m = 12;
+        let mk = |variant, block_bits| FilterConfig {
+            variant,
+            block_bits,
+            k: 16,
+            log2_m_words: m,
+            ..Default::default()
+        };
+        let f_cbf = measure_fpr_space_optimal(&mk(Variant::Cbf, 256), 40_000, 5).unwrap().fpr;
+        let f_sbf = measure_fpr_space_optimal(&mk(Variant::Sbf, 256), 40_000, 5).unwrap().fpr;
+        let f_rbbf = measure_fpr_space_optimal(&mk(Variant::Rbbf, 64), 40_000, 5).unwrap().fpr;
+        assert!(f_cbf <= f_sbf && f_sbf < f_rbbf, "{f_cbf} {f_sbf} {f_rbbf}");
+    }
+}

@@ -1,0 +1,4 @@
+//! Measurement & statistics (S12): empirical FPR, summary statistics.
+
+pub mod fpr;
+pub mod stats;

@@ -1,0 +1,170 @@
+//! Summary statistics used by the bench harness and the metrics pipeline.
+
+/// Streaming summary: count/mean/variance (Welford) + min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn record(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Coefficient of variation — the bench loop's convergence criterion
+    /// (the paper: "repeated execution until the measurement variance fell
+    /// below a predefined threshold").
+    pub fn cv(&self) -> f64 {
+        if self.mean.abs() < f64::EPSILON {
+            f64::INFINITY
+        } else {
+            self.stddev() / self.mean.abs()
+        }
+    }
+}
+
+/// Exact percentile over a sample (sorts a copy; fine at bench scales).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty() && (0.0..=100.0).contains(&p));
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0 * (v.len() - 1) as f64).round() as usize;
+    v[rank]
+}
+
+/// Latency histogram with exponential buckets (ns scale), lock-free record.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<std::sync::atomic::AtomicU64>,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// 64 buckets: bucket i counts latencies in [2^i, 2^{i+1}) ns.
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..64).map(|_| std::sync::atomic::AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        let idx = (64 - ns.max(1).leading_zeros() as usize - 1).min(63);
+        self.buckets[idx].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(std::sync::atomic::Ordering::Relaxed)).sum()
+    }
+
+    /// Approximate percentile (upper bucket bound), ns.
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (p / 100.0 * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(std::sync::atomic::Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        u64::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_matches_closed_form() {
+        let mut s = Summary::default();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.record(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.stddev() - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let v: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert!((percentile(&v, 50.0) - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_monotone() {
+        let h = LatencyHistogram::new();
+        for ns in [100u64, 200, 400, 800, 1600, 3200, 6400, 12800] {
+            for _ in 0..10 {
+                h.record_ns(ns);
+            }
+        }
+        assert_eq!(h.count(), 80);
+        assert!(h.percentile_ns(50.0) <= h.percentile_ns(99.0));
+        assert!(h.percentile_ns(99.0) >= 6400);
+    }
+
+    #[test]
+    fn cv_converges() {
+        let mut s = Summary::default();
+        for _ in 0..100 {
+            s.record(10.0);
+        }
+        assert!(s.cv() < 1e-9);
+    }
+}

@@ -1,0 +1,163 @@
+//! Execution backends: native Rust filters or AOT PJRT artifacts.
+
+use anyhow::{bail, Context, Result};
+
+use crate::filter::params::FilterConfig;
+use crate::filter::AnyBloom;
+use crate::runtime::actor::EngineClient;
+use crate::runtime::Manifest;
+
+/// What a shard executes its batches on.
+pub trait FilterBackend: Send + Sync {
+    fn config(&self) -> &FilterConfig;
+    fn backend_name(&self) -> &'static str;
+    /// Insert a batch of keys.
+    fn bulk_add(&self, keys: &[u64]) -> Result<()>;
+    /// Look up a batch of keys.
+    fn bulk_contains(&self, keys: &[u64]) -> Result<Vec<bool>>;
+    /// Current filter words (diagnostics / state hand-off).
+    fn snapshot(&self) -> Vec<u64>;
+}
+
+/// Native backend: the multithreaded Rust filter library (S3).
+pub struct NativeBackend {
+    filter: AnyBloom,
+    threads: usize,
+}
+
+impl NativeBackend {
+    pub fn new(cfg: FilterConfig, threads: usize) -> Result<Self> {
+        Ok(NativeBackend { filter: AnyBloom::new(cfg)?, threads })
+    }
+}
+
+impl FilterBackend for NativeBackend {
+    fn config(&self) -> &FilterConfig {
+        self.filter.config()
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn bulk_add(&self, keys: &[u64]) -> Result<()> {
+        self.filter.bulk_add(keys, self.threads);
+        Ok(())
+    }
+
+    fn bulk_contains(&self, keys: &[u64]) -> Result<Vec<bool>> {
+        Ok(self.filter.bulk_contains(keys, self.threads))
+    }
+
+    fn snapshot(&self) -> Vec<u64> {
+        self.filter.snapshot()
+    }
+}
+
+/// PJRT backend: executes the AOT artifacts through the engine actor; the
+/// filter word state lives inside the actor (the "device memory").
+///
+/// Batches larger than the biggest artifact batch are chunked; the final
+/// partial chunk is padded (lookups: pad results dropped; inserts: the
+/// `n_valid` scalar masks the padding inside the kernel).
+pub struct PjrtBackend {
+    engine: EngineClient,
+    cfg: FilterConfig,
+    state: u64,
+    /// (batch size, artifact name), ascending by batch.
+    contains_arts: Vec<(usize, String)>,
+    add_arts: Vec<(usize, String)>,
+}
+
+impl PjrtBackend {
+    pub fn new(engine: EngineClient, manifest: &Manifest, cfg: FilterConfig, impl_: &str) -> Result<Self> {
+        if cfg.word_bits != 64 {
+            bail!("PJRT backend currently serves 64-bit-word artifacts");
+        }
+        let mut contains_arts = Vec::new();
+        let mut add_arts = Vec::new();
+        for a in manifest.for_config(&cfg, impl_) {
+            match a.op.as_str() {
+                "contains" => contains_arts.push((a.batch, a.name.clone())),
+                "add" => add_arts.push((a.batch, a.name.clone())),
+                _ => {}
+            }
+        }
+        contains_arts.sort();
+        add_arts.sort();
+        if contains_arts.is_empty() || add_arts.is_empty() {
+            bail!("no artifacts for config {} impl {impl_}", cfg.name());
+        }
+        let state = engine.create_state(cfg)?;
+        Ok(PjrtBackend { engine, cfg, state, contains_arts, add_arts })
+    }
+
+    /// Smallest artifact batch that fits n, else the largest.
+    fn pick(arts: &[(usize, String)], n: usize) -> &(usize, String) {
+        arts.iter().find(|(b, _)| *b >= n).unwrap_or_else(|| arts.last().unwrap())
+    }
+
+    /// Overwrite filter state (e.g. warm-start from a native filter).
+    pub fn load_words(&self, words: Vec<u64>) -> Result<()> {
+        self.engine.load_words(self.state, words)
+    }
+}
+
+impl FilterBackend for PjrtBackend {
+    fn config(&self) -> &FilterConfig {
+        &self.cfg
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn bulk_add(&self, keys: &[u64]) -> Result<()> {
+        for chunk in keys.chunks(self.add_arts.last().unwrap().0) {
+            let (batch, name) = Self::pick(&self.add_arts, chunk.len());
+            let mut padded = chunk.to_vec();
+            padded.resize(*batch, 0);
+            self.engine
+                .add(name, self.state, padded, chunk.len())
+                .with_context(|| format!("pjrt add via {name}"))?;
+        }
+        Ok(())
+    }
+
+    fn bulk_contains(&self, keys: &[u64]) -> Result<Vec<bool>> {
+        let mut out = Vec::with_capacity(keys.len());
+        for chunk in keys.chunks(self.contains_arts.last().unwrap().0) {
+            let (batch, name) = Self::pick(&self.contains_arts, chunk.len());
+            let mut padded = chunk.to_vec();
+            padded.resize(*batch, 0);
+            let hits = self
+                .engine
+                .contains(name, self.state, padded)
+                .with_context(|| format!("pjrt contains via {name}"))?;
+            out.extend(hits[..chunk.len()].iter().map(|&b| b != 0));
+        }
+        Ok(out)
+    }
+
+    fn snapshot(&self) -> Vec<u64> {
+        self.engine.snapshot(self.state).unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::keygen::unique_keys;
+
+    #[test]
+    fn native_backend_round_trip() {
+        let be = NativeBackend::new(FilterConfig { log2_m_words: 12, ..Default::default() }, 2).unwrap();
+        let keys = unique_keys(1000, 1);
+        be.bulk_add(&keys).unwrap();
+        assert!(be.bulk_contains(&keys).unwrap().iter().all(|&b| b));
+        let absent = unique_keys(1000, 2);
+        let fp = be.bulk_contains(&absent).unwrap().iter().filter(|&&b| b).count();
+        assert!(fp < 50, "fp = {fp}");
+        assert_eq!(be.snapshot().len(), 1 << 12);
+    }
+}

@@ -1,0 +1,350 @@
+//! Per-shard dynamic batcher (the vLLM-style continuous-batching knob).
+//!
+//! Requests accumulate in a queue; a worker drains a run of same-operation
+//! requests when either (a) `max_batch` are waiting, or (b) the oldest has
+//! waited `max_wait`. Bigger batches amortize per-call overhead (crucial
+//! for the PJRT backend, whose artifacts are fixed-shape); the deadline
+//! bounds tail latency under light load.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::backend::FilterBackend;
+use crate::coordinator::metrics::Metrics;
+
+/// Batch formation policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 4096, max_wait: Duration::from_micros(200) }
+    }
+}
+
+/// Where a request's result goes.
+pub enum ReplySink {
+    /// One-shot channel (single-request API).
+    Single(Sender<anyhow::Result<bool>>),
+    /// Slot `idx` of a shared bulk sink — one allocation per *client call*
+    /// instead of per key, the L3 hot-path optimization (§Perf).
+    Bulk { sink: std::sync::Arc<BulkSink>, idx: usize },
+}
+
+/// Shared result collector for blocking bulk calls.
+pub struct BulkSink {
+    state: Mutex<BulkState>,
+    done: Condvar,
+}
+
+struct BulkState {
+    results: Vec<bool>,
+    remaining: usize,
+    error: Option<String>,
+}
+
+impl BulkSink {
+    pub fn new(n: usize) -> std::sync::Arc<Self> {
+        std::sync::Arc::new(BulkSink {
+            state: Mutex::new(BulkState { results: vec![false; n], remaining: n, error: None }),
+            done: Condvar::new(),
+        })
+    }
+
+    /// Complete one slot (used by tests and single-slot callers).
+    pub fn complete(&self, idx: usize, result: anyhow::Result<bool>) {
+        let mut st = self.state.lock().unwrap();
+        match result {
+            Ok(hit) => st.results[idx] = hit,
+            Err(e) => {
+                st.error.get_or_insert_with(|| format!("{e:#}"));
+            }
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Fill a run of consecutive completions under one lock (batch fan-out).
+    fn complete_run(&self, items: &[(usize, bool)], error: Option<&str>) {
+        let mut st = self.state.lock().unwrap();
+        for &(idx, hit) in items {
+            st.results[idx] = hit;
+        }
+        if let Some(e) = error {
+            st.error.get_or_insert_with(|| e.to_string());
+        }
+        st.remaining -= items.len();
+        if st.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every slot completed; returns the results.
+    pub fn wait(&self) -> anyhow::Result<Vec<bool>> {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+        if let Some(e) = st.error.take() {
+            anyhow::bail!("{e}");
+        }
+        Ok(std::mem::take(&mut st.results))
+    }
+}
+
+/// One queued request.
+pub struct Pending {
+    pub is_add: bool,
+    pub key: u64,
+    pub enqueued: Instant,
+    pub reply: ReplySink,
+}
+
+struct Queue {
+    inner: Mutex<VecDeque<Pending>>,
+    available: Condvar,
+    stop: AtomicBool,
+}
+
+/// A shard's batcher: owns the queue; `run` is the worker body.
+pub struct Batcher {
+    queue: Arc<Queue>,
+    policy: BatchPolicy,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            queue: Arc::new(Queue {
+                inner: Mutex::new(VecDeque::new()),
+                available: Condvar::new(),
+                stop: AtomicBool::new(false),
+            }),
+            policy,
+        }
+    }
+
+    pub fn handle(&self) -> BatcherHandle {
+        BatcherHandle { queue: Arc::clone(&self.queue) }
+    }
+
+    /// Worker loop: drain batches and execute them on `backend` until stop.
+    pub fn run(&self, backend: &dyn FilterBackend, metrics: &Metrics) {
+        loop {
+            let batch = self.next_batch();
+            let Some(batch) = batch else { return };
+            execute_batch(batch, backend, metrics);
+        }
+    }
+
+    /// Collect the next same-op run, honoring the policy. None on shutdown.
+    fn next_batch(&self) -> Option<Vec<Pending>> {
+        let mut q = self.queue.inner.lock().unwrap();
+        loop {
+            if let Some(front) = q.front() {
+                let deadline = front.enqueued + self.policy.max_wait;
+                // take the longest same-op prefix (preserves FIFO semantics
+                // between an add and a later query of the same key)
+                let is_add = front.is_add;
+                let run_len = q.iter().take(self.policy.max_batch).take_while(|p| p.is_add == is_add).count();
+                let now = Instant::now();
+                if run_len >= self.policy.max_batch
+                    || now >= deadline
+                    || run_len == q.len() && self.queue.stop.load(Ordering::SeqCst)
+                {
+                    let take = run_len.min(self.policy.max_batch);
+                    return Some(q.drain(..take).collect());
+                }
+                // wait for more work or the deadline
+                let wait = deadline.saturating_duration_since(now);
+                let (guard, _timeout) = self.queue.available.wait_timeout(q, wait).unwrap();
+                q = guard;
+            } else {
+                if self.queue.stop.load(Ordering::SeqCst) {
+                    return None;
+                }
+                q = self.queue.available.wait(q).unwrap();
+            }
+        }
+    }
+
+    pub fn stop(&self) {
+        self.queue.stop.store(true, Ordering::SeqCst);
+        self.queue.available.notify_all();
+    }
+}
+
+/// Cheap cloneable submit-side handle.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    queue: Arc<Queue>,
+}
+
+impl BatcherHandle {
+    pub fn submit(&self, p: Pending) {
+        self.queue.inner.lock().unwrap().push_back(p);
+        self.queue.available.notify_one();
+    }
+
+    /// Enqueue many requests under one lock acquisition.
+    pub fn submit_many(&self, ps: impl Iterator<Item = Pending>) {
+        let mut q = self.queue.inner.lock().unwrap();
+        q.extend(ps);
+        drop(q);
+        self.queue.available.notify_one();
+    }
+
+    pub fn depth(&self) -> usize {
+        self.queue.inner.lock().unwrap().len()
+    }
+}
+
+/// Execute one formed batch and fan results back out. Consecutive bulk
+/// replies to the same sink are grouped so the whole group completes under
+/// one lock acquisition.
+fn execute_batch(batch: Vec<Pending>, backend: &dyn FilterBackend, metrics: &Metrics) {
+    debug_assert!(!batch.is_empty());
+    let is_add = batch[0].is_add;
+    let keys: Vec<u64> = batch.iter().map(|p| p.key).collect();
+    let queue_wait_ns = batch
+        .iter()
+        .map(|p| p.enqueued.elapsed().as_nanos() as u64)
+        .max()
+        .unwrap_or(0);
+    let t0 = Instant::now();
+    let (hits, error) = if is_add {
+        match backend.bulk_add(&keys) {
+            Ok(()) => (vec![true; keys.len()], None),
+            Err(e) => (vec![false; keys.len()], Some(format!("{e:#}"))),
+        }
+    } else {
+        match backend.bulk_contains(&keys) {
+            Ok(h) => (h, None),
+            Err(e) => (vec![false; keys.len()], Some(format!("{e:#}"))),
+        }
+    };
+    let exec_ns = t0.elapsed().as_nanos() as u64;
+    metrics.record_batch(is_add, keys.len() as u64, queue_wait_ns, exec_ns);
+
+    let mut iter = batch.into_iter().zip(hits).peekable();
+    let mut run: Vec<(usize, bool)> = Vec::new();
+    while let Some((p, hit)) = iter.next() {
+        match p.reply {
+            ReplySink::Single(tx) => {
+                let _ = tx.send(match &error {
+                    None => Ok(hit),
+                    Some(e) => Err(anyhow::anyhow!("{e}")),
+                });
+            }
+            ReplySink::Bulk { sink, idx } => {
+                run.clear();
+                run.push((idx, hit));
+                while let Some((next, _)) = iter.peek() {
+                    let same = matches!(&next.reply,
+                        ReplySink::Bulk { sink: s2, .. } if std::sync::Arc::ptr_eq(&sink, s2));
+                    if !same {
+                        break;
+                    }
+                    let (p2, h2) = iter.next().unwrap();
+                    if let ReplySink::Bulk { idx: i2, .. } = p2.reply {
+                        run.push((i2, h2));
+                    }
+                }
+                sink.complete_run(&run, error.as_deref());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::filter::params::FilterConfig;
+    use std::sync::mpsc::channel;
+
+    fn spawn_batcher(policy: BatchPolicy) -> (Arc<Batcher>, BatcherHandle, Arc<Metrics>, std::thread::JoinHandle<()>) {
+        let batcher = Arc::new(Batcher::new(policy));
+        let handle = batcher.handle();
+        let metrics = Arc::new(Metrics::default());
+        let (b, m) = (Arc::clone(&batcher), Arc::clone(&metrics));
+        let join = std::thread::spawn(move || {
+            let backend = NativeBackend::new(FilterConfig { log2_m_words: 12, ..Default::default() }, 1).unwrap();
+            b.run(&backend, &m);
+        });
+        (batcher, handle, metrics, join)
+    }
+
+    #[test]
+    fn batches_form_and_reply() {
+        let (batcher, handle, metrics, join) =
+            spawn_batcher(BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(2) });
+        let mut rxs = Vec::new();
+        for key in 0..200u64 {
+            let (tx, rx) = channel();
+            handle.submit(Pending { is_add: true, key, enqueued: Instant::now(), reply: ReplySink::Single(tx) });
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap());
+        }
+        // now query the same keys
+        let mut rxs = Vec::new();
+        for key in 0..200u64 {
+            let (tx, rx) = channel();
+            handle.submit(Pending { is_add: false, key, enqueued: Instant::now(), reply: ReplySink::Single(tx) });
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap(), "no false negatives");
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.adds, 200);
+        assert_eq!(snap.queries, 200);
+        assert!(snap.mean_batch_size > 1.0, "batching actually happened: {}", snap.mean_batch_size);
+        batcher.stop();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn deadline_fires_for_single_request() {
+        let (batcher, handle, _metrics, join) =
+            spawn_batcher(BatchPolicy { max_batch: 1 << 20, max_wait: Duration::from_millis(5) });
+        let (tx, rx) = channel();
+        let t0 = Instant::now();
+        handle.submit(Pending { is_add: true, key: 7, enqueued: Instant::now(), reply: ReplySink::Single(tx) });
+        assert!(rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap());
+        // replied well before an unbounded batch would have formed
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        batcher.stop();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn fifo_between_add_and_query_of_same_key() {
+        let (batcher, handle, _m, join) =
+            spawn_batcher(BatchPolicy { max_batch: 512, max_wait: Duration::from_micros(100) });
+        // interleave: add k, then query k — the query must see the add
+        let mut rxs = Vec::new();
+        for key in 1000..1100u64 {
+            let (tx, _rx) = channel();
+            handle.submit(Pending { is_add: true, key, enqueued: Instant::now(), reply: ReplySink::Single(tx) });
+            let (tx2, rx2) = channel();
+            handle.submit(Pending { is_add: false, key, enqueued: Instant::now(), reply: ReplySink::Single(tx2) });
+            rxs.push(rx2);
+        }
+        for rx in rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap());
+        }
+        batcher.stop();
+        join.join().unwrap();
+    }
+}

@@ -1,0 +1,121 @@
+//! Coordinator metrics: counters + latency histograms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::analytics::stats::LatencyHistogram;
+
+/// Shared, lock-free metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub adds: AtomicU64,
+    pub queries: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_keys: AtomicU64,
+    pub queue_wait: LatencyHistogramField,
+    pub exec_time: LatencyHistogramField,
+    pub e2e_latency: LatencyHistogramField,
+}
+
+/// Newtype so Default works on the histogram.
+#[derive(Debug)]
+pub struct LatencyHistogramField(pub LatencyHistogram);
+
+impl Default for LatencyHistogramField {
+    fn default() -> Self {
+        LatencyHistogramField(LatencyHistogram::new())
+    }
+}
+
+impl Metrics {
+    pub fn record_batch(&self, op_is_add: bool, keys: u64, queue_wait_ns: u64, exec_ns: u64) {
+        if op_is_add {
+            self.adds.fetch_add(keys, Ordering::Relaxed);
+        } else {
+            self.queries.fetch_add(keys, Ordering::Relaxed);
+        }
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_keys.fetch_add(keys, Ordering::Relaxed);
+        self.queue_wait.0.record_ns(queue_wait_ns);
+        self.exec_time.0.record_ns(exec_ns);
+    }
+
+    pub fn record_e2e(&self, ns: u64) {
+        self.e2e_latency.0.record_ns(ns);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let keys = self.batched_keys.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            adds: self.adds.load(Ordering::Relaxed),
+            queries: self.queries.load(Ordering::Relaxed),
+            batches,
+            mean_batch_size: if batches == 0 { 0.0 } else { keys as f64 / batches as f64 },
+            queue_wait_p50_ns: self.queue_wait.0.percentile_ns(50.0),
+            queue_wait_p99_ns: self.queue_wait.0.percentile_ns(99.0),
+            exec_p50_ns: self.exec_time.0.percentile_ns(50.0),
+            exec_p99_ns: self.exec_time.0.percentile_ns(99.0),
+            e2e_p50_ns: self.e2e_latency.0.percentile_ns(50.0),
+            e2e_p99_ns: self.e2e_latency.0.percentile_ns(99.0),
+        }
+    }
+}
+
+/// Point-in-time metrics view.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub adds: u64,
+    pub queries: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub queue_wait_p50_ns: u64,
+    pub queue_wait_p99_ns: u64,
+    pub exec_p50_ns: u64,
+    pub exec_p99_ns: u64,
+    pub e2e_p50_ns: u64,
+    pub e2e_p99_ns: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "ops: {} adds, {} queries in {} batches (mean {:.1} keys/batch)\n\
+             queue wait p50/p99: {:.1}/{:.1} µs | exec p50/p99: {:.1}/{:.1} µs | e2e p50/p99: {:.1}/{:.1} µs",
+            self.adds,
+            self.queries,
+            self.batches,
+            self.mean_batch_size,
+            self.queue_wait_p50_ns as f64 / 1e3,
+            self.queue_wait_p99_ns as f64 / 1e3,
+            self.exec_p50_ns as f64 / 1e3,
+            self.exec_p99_ns as f64 / 1e3,
+            self.e2e_p50_ns as f64 / 1e3,
+            self.e2e_p99_ns as f64 / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::default();
+        m.record_batch(true, 100, 1000, 5000);
+        m.record_batch(false, 300, 2000, 7000);
+        let s = m.snapshot();
+        assert_eq!(s.adds, 100);
+        assert_eq!(s.queries, 300);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_size - 200.0).abs() < 1e-9);
+        assert!(s.exec_p99_ns >= 4096);
+    }
+
+    #[test]
+    fn report_readable() {
+        let m = Metrics::default();
+        m.record_batch(false, 10, 100, 100);
+        assert!(m.snapshot().report().contains("batches"));
+    }
+}

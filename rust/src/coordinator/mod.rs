@@ -1,0 +1,24 @@
+//! Serving coordinator (S8): the L3 request path.
+//!
+//! A vLLM-router-style filter service: clients submit single-key `add` /
+//! `query` requests; the coordinator routes each key to a shard, a
+//! per-shard **dynamic batcher** packs requests into bulk operations
+//! (size- or deadline-triggered, the classic throughput/latency knob), and
+//! a backend executes the batch — either the native Rust filter library or
+//! a PJRT executable produced by the AOT pipeline. Metrics record queue
+//! wait, execution time, and batch-size distributions.
+//!
+//! Sharding serializes writes per shard (the state-management analogue of
+//! per-SM atomic ownership) while different shards proceed in parallel.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use backend::{FilterBackend, NativeBackend, PjrtBackend};
+pub use batcher::{BatchPolicy, BulkSink, ReplySink};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::Router;
+pub use server::{Coordinator, CoordinatorConfig, Op as RequestOp};

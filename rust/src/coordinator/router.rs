@@ -1,0 +1,96 @@
+//! Key-to-shard routing.
+//!
+//! A salted multiplicative hash *decorrelated from the filter's own block
+//! selector* (different salt role) spreads keys uniformly over shards, so
+//! each shard's filter partition fills evenly and per-shard batches stay
+//! balanced under uniform and skewed traffic alike.
+
+use crate::hash::{base_hash, salts, tophash};
+
+/// Routes keys to `num_shards` (power of two) shards.
+#[derive(Debug, Clone)]
+pub struct Router {
+    log2_shards: u32,
+    salt: u64,
+}
+
+impl Router {
+    pub fn new(num_shards: usize) -> Self {
+        assert!(num_shards.is_power_of_two() && num_shards > 0 && num_shards <= 1 << 16);
+        // reuse the tail of the salt schedule - roles 0..79 belong to the
+        // filter itself, so take the last slot for routing
+        Router { log2_shards: num_shards.trailing_zeros(), salt: salts()[crate::hash::NUM_SALTS - 1] }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        1usize << self.log2_shards
+    }
+
+    #[inline]
+    pub fn shard_of(&self, key: u64) -> usize {
+        tophash(base_hash(key), self.salt, self.log2_shards) as usize
+    }
+
+    /// Partition a key batch into per-shard vectors, remembering the
+    /// original positions so results can be scattered back in order.
+    pub fn partition(&self, keys: &[u64]) -> Vec<(Vec<u64>, Vec<usize>)> {
+        let mut parts: Vec<(Vec<u64>, Vec<usize>)> =
+            (0..self.num_shards()).map(|_| (Vec::new(), Vec::new())).collect();
+        for (i, &k) in keys.iter().enumerate() {
+            let s = self.shard_of(k);
+            parts[s].0.push(k);
+            parts[s].1.push(i);
+        }
+        parts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::keygen::unique_keys;
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let r = Router::new(8);
+        for key in unique_keys(10_000, 1) {
+            let s = r.shard_of(key);
+            assert!(s < 8);
+            assert_eq!(s, r.shard_of(key));
+        }
+    }
+
+    #[test]
+    fn balanced_under_uniform_keys() {
+        let r = Router::new(8);
+        let keys = unique_keys(80_000, 2);
+        let parts = r.partition(&keys);
+        for (ks, _) in &parts {
+            let frac = ks.len() as f64 / keys.len() as f64;
+            assert!((frac - 0.125).abs() < 0.02, "shard fraction {frac}");
+        }
+    }
+
+    #[test]
+    fn partition_preserves_positions() {
+        let r = Router::new(4);
+        let keys = unique_keys(1000, 3);
+        let parts = r.partition(&keys);
+        let mut seen = vec![false; keys.len()];
+        for (ks, idxs) in &parts {
+            assert_eq!(ks.len(), idxs.len());
+            for (k, &i) in ks.iter().zip(idxs) {
+                assert_eq!(*k, keys[i]);
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn single_shard_works() {
+        let r = Router::new(1);
+        assert_eq!(r.shard_of(42), 0);
+    }
+}

@@ -1,0 +1,254 @@
+//! The coordinator: shards + routers + batchers wired together.
+
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::filter::params::FilterConfig;
+
+use super::backend::FilterBackend;
+use super::batcher::{BatchPolicy, Batcher, BatcherHandle, BulkSink, Pending, ReplySink};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::router::Router;
+
+/// Request kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Add,
+    Query,
+}
+
+/// Coordinator construction parameters.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Power-of-two shard count; each shard owns a filter partition.
+    pub num_shards: usize,
+    pub policy: BatchPolicy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { num_shards: 4, policy: BatchPolicy::default() }
+    }
+}
+
+struct Shard {
+    batcher: Arc<Batcher>,
+    handle: BatcherHandle,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+/// The serving coordinator (see module docs of [`crate::coordinator`]).
+pub struct Coordinator {
+    router: Router,
+    shards: Vec<Shard>,
+    metrics: Arc<Metrics>,
+    filter_config: FilterConfig,
+    backend_name: &'static str,
+}
+
+impl Coordinator {
+    /// Build a coordinator; `make_backend(shard_idx)` constructs each
+    /// shard's backend (each shard owns an independent filter partition).
+    pub fn new(
+        cfg: CoordinatorConfig,
+        mut make_backend: impl FnMut(usize) -> Result<Box<dyn FilterBackend>>,
+    ) -> Result<Coordinator> {
+        let router = Router::new(cfg.num_shards);
+        let metrics = Arc::new(Metrics::default());
+        let mut shards = Vec::with_capacity(cfg.num_shards);
+        let mut filter_config = None;
+        let mut backend_name = "unknown";
+        for idx in 0..cfg.num_shards {
+            let backend = make_backend(idx)?;
+            filter_config.get_or_insert(*backend.config());
+            backend_name = backend.backend_name();
+            let batcher = Arc::new(Batcher::new(cfg.policy.clone()));
+            let handle = batcher.handle();
+            let worker = {
+                let batcher = Arc::clone(&batcher);
+                let metrics = Arc::clone(&metrics);
+                std::thread::Builder::new()
+                    .name(format!("gbf-shard-{idx}"))
+                    .spawn(move || batcher.run(backend.as_ref(), &metrics))?
+            };
+            shards.push(Shard { batcher, handle, worker: Some(worker) });
+        }
+        Ok(Coordinator {
+            router,
+            shards,
+            metrics,
+            filter_config: filter_config.expect("at least one shard"),
+            backend_name,
+        })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn filter_config(&self) -> &FilterConfig {
+        &self.filter_config
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend_name
+    }
+
+    /// Submit one request; the receiver yields the result asynchronously.
+    pub fn submit(&self, op: Op, key: u64) -> Receiver<Result<bool>> {
+        let (tx, rx) = channel();
+        let shard = self.router.shard_of(key);
+        self.shards[shard].handle.submit(Pending {
+            is_add: op == Op::Add,
+            key,
+            enqueued: Instant::now(),
+            reply: ReplySink::Single(tx),
+        });
+        rx
+    }
+
+    /// Submit a whole batch through one shared sink (one allocation per
+    /// call, one lock per formed batch — the L3 hot path, see §Perf).
+    fn submit_bulk(&self, op: Op, keys: &[u64]) -> std::sync::Arc<BulkSink> {
+        let sink = BulkSink::new(keys.len());
+        let now = Instant::now();
+        let is_add = op == Op::Add;
+        if self.shards.len() == 1 {
+            self.shards[0].handle.submit_many(keys.iter().enumerate().map(|(idx, &key)| Pending {
+                is_add,
+                key,
+                enqueued: now,
+                reply: ReplySink::Bulk { sink: std::sync::Arc::clone(&sink), idx },
+            }));
+        } else {
+            for (shard, (part_keys, part_idx)) in self.router.partition(keys).into_iter().enumerate() {
+                if part_keys.is_empty() {
+                    continue;
+                }
+                self.shards[shard].handle.submit_many(
+                    part_keys.iter().zip(&part_idx).map(|(&key, &idx)| Pending {
+                        is_add,
+                        key,
+                        enqueued: now,
+                        reply: ReplySink::Bulk { sink: std::sync::Arc::clone(&sink), idx },
+                    }),
+                );
+            }
+        }
+        sink
+    }
+
+    /// Blocking bulk insert: routes, batches, waits for all replies.
+    pub fn add_blocking(&self, keys: &[u64]) -> Result<()> {
+        let t0 = Instant::now();
+        let sink = self.submit_bulk(Op::Add, keys);
+        sink.wait()?;
+        self.metrics.record_e2e(t0.elapsed().as_nanos() as u64);
+        Ok(())
+    }
+
+    /// Blocking bulk query preserving input order.
+    pub fn query_blocking(&self, keys: &[u64]) -> Result<Vec<bool>> {
+        let t0 = Instant::now();
+        let sink = self.submit_bulk(Op::Query, keys);
+        let out = sink.wait()?;
+        self.metrics.record_e2e(t0.elapsed().as_nanos() as u64);
+        Ok(out)
+    }
+
+    /// Queue depth across shards (backpressure signal).
+    pub fn queue_depth(&self) -> usize {
+        self.shards.iter().map(|s| s.handle.depth()).sum()
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for s in &self.shards {
+            s.batcher.stop();
+        }
+        for s in &mut self.shards {
+            if let Some(w) = s.worker.take() {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::workload::keygen::{disjoint_key_sets, unique_keys};
+    use std::time::Duration;
+
+    fn native_coordinator(num_shards: usize) -> Coordinator {
+        let cfg = CoordinatorConfig {
+            num_shards,
+            policy: BatchPolicy { max_batch: 512, max_wait: Duration::from_micros(200) },
+        };
+        Coordinator::new(cfg, |_| {
+            Ok(Box::new(NativeBackend::new(
+                FilterConfig { log2_m_words: 14, ..Default::default() },
+                1,
+            )?) as Box<dyn FilterBackend>)
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn end_to_end_no_false_negatives() {
+        let c = native_coordinator(4);
+        let keys = unique_keys(5000, 1);
+        c.add_blocking(&keys).unwrap();
+        let hits = c.query_blocking(&keys).unwrap();
+        assert!(hits.iter().all(|&h| h));
+        let m = c.metrics();
+        assert_eq!(m.adds, 5000);
+        assert_eq!(m.queries, 5000);
+        assert!(m.mean_batch_size > 4.0, "batching effective: {}", m.mean_batch_size);
+    }
+
+    #[test]
+    fn absent_keys_mostly_rejected() {
+        let c = native_coordinator(2);
+        let (ins, qry) = disjoint_key_sets(20_000, 5_000, 2);
+        c.add_blocking(&ins).unwrap();
+        let hits = c.query_blocking(&qry).unwrap();
+        let fp = hits.iter().filter(|&&h| h).count();
+        assert!(fp < 100, "fp = {fp}");
+    }
+
+    #[test]
+    fn single_shard_coordinator() {
+        let c = native_coordinator(1);
+        let keys = unique_keys(100, 3);
+        c.add_blocking(&keys).unwrap();
+        assert!(c.query_blocking(&keys).unwrap().iter().all(|&h| h));
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let c = Arc::new(native_coordinator(4));
+        let mut joins = Vec::new();
+        for t in 0..8u64 {
+            let c = Arc::clone(&c);
+            joins.push(std::thread::spawn(move || {
+                let keys = unique_keys(2000, 100 + t);
+                c.add_blocking(&keys).unwrap();
+                assert!(c.query_blocking(&keys).unwrap().iter().all(|&h| h));
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(c.metrics().adds, 16_000);
+    }
+}

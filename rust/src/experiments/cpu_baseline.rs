@@ -1,0 +1,84 @@
+//! The CPU baseline rows of §5.2/§5.3 — *real measurements* on this
+//! testbed's multithreaded native SBF (plus the specialized hot path).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::filter::params::{space_optimal_n, FilterConfig, Variant};
+use crate::filter::sbf::bulk_contains_b256_k16;
+use crate::filter::Bloom;
+use crate::workload::keygen::unique_keys;
+
+use super::report::{emit, Table};
+
+fn measure(cfg: &FilterConfig, n_keys: usize, threads: usize) -> Result<(f64, f64)> {
+    let filter = Bloom::<u64>::new(*cfg)?;
+    let keys = unique_keys(n_keys, 0xC0FFEE);
+    let t0 = Instant::now();
+    filter.bulk_add(&keys, threads);
+    let add_gelems = n_keys as f64 / t0.elapsed().as_secs_f64() / 1e9;
+    let t1 = Instant::now();
+    let hits = filter.bulk_contains(&keys, threads);
+    let contains_gelems = n_keys as f64 / t1.elapsed().as_secs_f64() / 1e9;
+    assert!(hits.iter().all(|&h| h), "false negative in baseline measurement");
+    Ok((add_gelems, contains_gelems))
+}
+
+pub fn run(out_dir: Option<&Path>) -> Result<String> {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut table = Table::new(
+        &format!("CPU SBF baseline (measured on this testbed, {threads} threads)"),
+        &["regime", "filter", "keys", "add GElem/s", "contains GElem/s"],
+    );
+
+    // cache-resident: 2 MB filter (fits L2/L3 of most server CPUs)
+    let cache_cfg = FilterConfig { variant: Variant::Sbf, block_bits: 256, k: 16, log2_m_words: 18, ..Default::default() };
+    let n_cache = space_optimal_n(cache_cfg.m_bits(), cache_cfg.k) as usize;
+    let (a, c) = measure(&cache_cfg, n_cache, threads)?;
+    table.row(vec!["cache".into(), "2 MB".into(), n_cache.to_string(), format!("{a:.3}"), format!("{c:.3}")]);
+
+    // DRAM-resident: 256 MB filter
+    let dram_cfg = FilterConfig { variant: Variant::Sbf, block_bits: 256, k: 16, log2_m_words: 25, ..Default::default() };
+    let n_dram = 8_000_000usize; // partial fill keeps the run quick; rate is load-insensitive
+    let (a, c) = measure(&dram_cfg, n_dram, threads)?;
+    table.row(vec!["DRAM".into(), "256 MB".into(), n_dram.to_string(), format!("{a:.3}"), format!("{c:.3}")]);
+
+    // the perf-specialized lookup hot path (B = 256, k = 16)
+    let filter = Bloom::<u64>::new(cache_cfg)?;
+    let keys = unique_keys(n_cache, 0xC0FFEE);
+    filter.bulk_add(&keys, threads);
+    let snapshot = filter.snapshot();
+    let mut results = Vec::new();
+    let t0 = Instant::now();
+    bulk_contains_b256_k16(&snapshot, &keys, &mut results);
+    let specialized = keys.len() as f64 / t0.elapsed().as_secs_f64() / 1e9;
+    table.row(vec![
+        "cache".into(),
+        "2 MB (specialized, 1T)".into(),
+        keys.len().to_string(),
+        "-".into(),
+        format!("{specialized:.3}"),
+    ]);
+
+    let mut text = emit(&table, out_dir, "cpu_baseline")?;
+    let note = "paper 16-core EPYC rows: DRAM 0.45/0.65, cache 1.2/8.8 GElem/s (add/contains); per-core: 0.028/0.041 and 0.075/0.55\n";
+    print!("{note}");
+    text.push_str(note);
+    Ok(text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_measures_sane_rates() {
+        let cfg = FilterConfig { variant: Variant::Sbf, block_bits: 256, k: 16, log2_m_words: 16, ..Default::default() };
+        let (add, contains) = measure(&cfg, 200_000, 2).unwrap();
+        // anything under 1 MElem/s or over 100 GElem/s would be a harness bug
+        assert!(add > 1e-3 && add < 100.0, "add {add}");
+        assert!(contains > 1e-3 && contains < 100.0, "contains {contains}");
+    }
+}

@@ -1,0 +1,88 @@
+//! Tables 1 & 2: the Θ×B vectorization-layout throughput grids.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::gpu_sim::{model, Features, Op, Residency, B200};
+
+use super::paper_data::{grid_config, LOG2_M_DRAM, LOG2_M_L2};
+use super::report::{emit, Table};
+
+const BLOCKS: [u32; 5] = [64, 128, 256, 512, 1024];
+const THETAS: [u32; 5] = [1, 2, 4, 8, 16];
+
+fn grid(title: &str, op: Op, residency: Residency, log2_m: u32) -> Table {
+    let mut table = Table::new(title, &["Op", "B", "Θ=1", "Θ=2", "Θ=4", "Θ=8", "Θ=16"]);
+    for block_bits in BLOCKS {
+        let cfg = grid_config(block_bits, log2_m);
+        let s = cfg.s();
+        let mut cells = vec![op.as_str().to_string(), block_bits.to_string()];
+        let mut best = f64::MIN;
+        let mut col_vals = Vec::new();
+        for theta in THETAS {
+            if theta > s {
+                col_vals.push(None);
+                continue;
+            }
+            let phi = model::max_phi(&cfg, theta);
+            let p = model::predict(&cfg, op, theta, phi, residency, &B200, Features::default());
+            best = best.max(p.gelems_per_sec);
+            col_vals.push(Some(p.gelems_per_sec));
+        }
+        for v in col_vals {
+            cells.push(match v {
+                None => String::new(),
+                Some(x) if (x - best).abs() < 1e-9 => format!("*{x:.2}"),
+                Some(x) => format!("{x:.2}"),
+            });
+        }
+        table.row(cells);
+    }
+    table
+}
+
+/// Table 1: 1 GB (DRAM-resident) filter on B200. `*` marks the per-row
+/// best layout (the paper's bold entries).
+pub fn table1(out_dir: Option<&Path>) -> Result<String> {
+    let mut out = String::new();
+    for (op, name) in [(Op::Contains, "table1_contains"), (Op::Add, "table1_add")] {
+        let t = grid(
+            &format!("Table 1 (model): bulk {} — 1 GB DRAM filter, B200 [GElem/s]", op.as_str()),
+            op,
+            Residency::Dram,
+            LOG2_M_DRAM,
+        );
+        out.push_str(&emit(&t, out_dir, name)?);
+    }
+    Ok(out)
+}
+
+/// Table 2: 32 MB (L2-resident) filter on B200.
+pub fn table2(out_dir: Option<&Path>) -> Result<String> {
+    let mut out = String::new();
+    for (op, name) in [(Op::Contains, "table2_contains"), (Op::Add, "table2_add")] {
+        let t = grid(
+            &format!("Table 2 (model): bulk {} — 32 MB L2 filter, B200 [GElem/s]", op.as_str()),
+            op,
+            Residency::L2,
+            LOG2_M_L2,
+        );
+        out.push_str(&emit(&t, out_dir, name)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render() {
+        let t1 = table1(None).unwrap();
+        assert!(t1.contains("1024"));
+        assert!(t1.contains('*'));
+        let t2 = table2(None).unwrap();
+        assert!(t2.contains("Table 2"));
+    }
+}

@@ -1,0 +1,118 @@
+//! The speed-of-light micro-benchmark (§5.2 footnote 2, §5.4).
+//!
+//! Two parts:
+//! * the paper-reported random-access GUPS ceilings per GPU architecture
+//!   (the dashed bounds of Figs 7-8), straight from the arch table;
+//! * a **real** HPCC-RandomAccess-style measurement on this testbed's CPU
+//!   (random 64-bit loads and atomic ORs over a DRAM-resident table),
+//!   which anchors the CPU baseline rows.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::gpu_sim::GpuArch;
+use crate::hash::splitmix64;
+
+use super::report::{emit, Table};
+
+/// Random-read GUPS over `table_words` u64s, `ops` accesses, `threads`.
+pub fn cpu_gups_read(table_words: usize, ops: usize, threads: usize) -> f64 {
+    let table: Vec<u64> = (0..table_words as u64).collect();
+    let mask = (table_words - 1) as u64;
+    assert!(table_words.is_power_of_two());
+    let t0 = Instant::now();
+    let per_thread = ops / threads.max(1);
+    std::thread::scope(|scope| {
+        for t in 0..threads.max(1) {
+            let table = &table;
+            scope.spawn(move || {
+                let mut state = 0x1234_5678u64 ^ (t as u64) << 32;
+                let mut acc = 0u64;
+                for _ in 0..per_thread {
+                    let idx = (splitmix64(&mut state) & mask) as usize;
+                    acc = acc.wrapping_add(table[idx]);
+                }
+                std::hint::black_box(acc);
+            });
+        }
+    });
+    (per_thread * threads.max(1)) as f64 / t0.elapsed().as_secs_f64() / 1e9
+}
+
+/// Random atomic-OR GUPS (the construction-side ceiling).
+pub fn cpu_gups_write(table_words: usize, ops: usize, threads: usize) -> f64 {
+    let table: Vec<AtomicU64> = (0..table_words).map(|_| AtomicU64::new(0)).collect();
+    let mask = (table_words - 1) as u64;
+    assert!(table_words.is_power_of_two());
+    let t0 = Instant::now();
+    let per_thread = ops / threads.max(1);
+    std::thread::scope(|scope| {
+        for t in 0..threads.max(1) {
+            let table = &table;
+            scope.spawn(move || {
+                let mut state = 0x9876_5432u64 ^ (t as u64) << 32;
+                for _ in 0..per_thread {
+                    let h = splitmix64(&mut state);
+                    table[(h & mask) as usize].fetch_or(1u64 << (h >> 58), Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    (per_thread * threads.max(1)) as f64 / t0.elapsed().as_secs_f64() / 1e9
+}
+
+pub fn run(out_dir: Option<&Path>) -> Result<String> {
+    let mut out = String::new();
+
+    let mut gpu = Table::new(
+        "Speed-of-light: random-access GUPS ceilings (paper §5.4)",
+        &["platform", "memory", "read GUPS", "write GUPS", "peak BW TB/s"],
+    );
+    for arch in GpuArch::all() {
+        gpu.row(vec![
+            arch.name.into(),
+            arch.memory.into(),
+            format!("{:.1}", arch.gups_read),
+            format!("{:.1}", arch.gups_write),
+            format!("{:.1}", arch.peak_bw_tbs),
+        ]);
+    }
+    out.push_str(&emit(&gpu, out_dir, "gups_gpu")?);
+
+    // real measurement on this testbed (256 MB table, DRAM-resident)
+    let words = 1usize << 25;
+    let ops = 8_000_000usize;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut cpu = Table::new(
+        "Speed-of-light: measured CPU RandomAccess on this testbed (256 MB table)",
+        &["threads", "read GUPS", "write (atomic OR) GUPS"],
+    );
+    for t in [1usize, threads] {
+        cpu.row(vec![
+            t.to_string(),
+            format!("{:.3}", cpu_gups_read(words, ops, t)),
+            format!("{:.3}", cpu_gups_write(words, ops, t)),
+        ]);
+    }
+    out.push_str(&emit(&cpu, out_dir, "gups_cpu")?);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_gups_positive_and_scales() {
+        let read1 = cpu_gups_read(1 << 20, 400_000, 1);
+        assert!(read1 > 0.001, "{read1}");
+        let write1 = cpu_gups_write(1 << 20, 400_000, 1);
+        assert!(write1 > 0.001, "{write1}");
+        let read4 = cpu_gups_read(1 << 20, 1_600_000, 4);
+        // parallel should not be dramatically slower than serial
+        assert!(read4 > read1 * 0.8, "read1 {read1} read4 {read4}");
+    }
+}

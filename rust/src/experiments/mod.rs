@@ -1,0 +1,60 @@
+//! Experiment harness (S10): regenerates every table and figure of the
+//! paper's evaluation (§5) and writes paper-style rows plus CSVs.
+//!
+//! | id | paper artifact | module |
+//! |----|----------------|--------|
+//! | table1 | Θ×B grid, 1 GB DRAM filter | [`grids`] |
+//! | table2 | Θ×B grid, 32 MB L2 filter | [`grids`] |
+//! | fig4 | throughput-vs-FPR frontier (4 panels) | [`fig4`] |
+//! | fig5-fig8 | cross-architecture comparisons | [`arch_figs`] |
+//! | fig9 | optimization breakdown | [`fig9`] |
+//! | gups | speed-of-light micro-benchmark | [`gups`] |
+//! | fpr | §5.1 FPR methodology (real measurement) | [`fig4`] |
+//! | cpu | CPU baseline rows (real measurement) | [`cpu_baseline`] |
+//! | calibration | model residuals vs the paper's B200 tables | [`paper_data`] |
+//!
+//! Throughput numbers for GPU rows come from the calibrated performance
+//! model (`gpu_sim`); FPR numbers are *real measurements* on the native
+//! filter library; CPU rows are real measurements on this testbed.
+
+pub mod arch_figs;
+pub mod cpu_baseline;
+pub mod fig4;
+pub mod fig9;
+pub mod grids;
+pub mod gups;
+pub mod paper_data;
+pub mod report;
+
+use anyhow::{bail, Result};
+
+/// Run an experiment by id; returns the rendered report (also printed).
+pub fn run(exp: &str, out_dir: Option<&std::path::Path>) -> Result<String> {
+    let text = match exp {
+        "table1" => grids::table1(out_dir)?,
+        "table2" => grids::table2(out_dir)?,
+        "fig4" => fig4::run(out_dir)?,
+        "fig5" => arch_figs::run(arch_figs::Fig::Fig5, out_dir)?,
+        "fig6" => arch_figs::run(arch_figs::Fig::Fig6, out_dir)?,
+        "fig7" => arch_figs::run(arch_figs::Fig::Fig7, out_dir)?,
+        "fig8" => arch_figs::run(arch_figs::Fig::Fig8, out_dir)?,
+        "fig9" => fig9::run(out_dir)?,
+        "gups" => gups::run(out_dir)?,
+        "fpr" => fig4::fpr_only(out_dir)?,
+        "cpu" => cpu_baseline::run(out_dir)?,
+        "calibration" => paper_data::calibration_report(out_dir)?,
+        "all" => {
+            let mut all = String::new();
+            for e in [
+                "table1", "table2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "gups", "cpu",
+                "calibration",
+            ] {
+                all.push_str(&run(e, out_dir)?);
+                all.push('\n');
+            }
+            all
+        }
+        _ => bail!("unknown experiment {exp:?} (try table1|table2|fig4..fig9|gups|fpr|cpu|calibration|all)"),
+    };
+    Ok(text)
+}

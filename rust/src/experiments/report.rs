@@ -1,0 +1,112 @@
+//! Report rendering helpers: aligned text tables + CSV output.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A simple column-aligned table builder.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n## {}", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.header, &widths));
+        let _ = writeln!(out, "{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    /// Write as CSV into `dir/<name>.csv`.
+    pub fn write_csv(&self, dir: &Path, name: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut text = self.header.join(",");
+        text.push('\n');
+        for row in &self.rows {
+            text.push_str(&row.join(","));
+            text.push('\n');
+        }
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, text).with_context(|| format!("writing {path:?}"))
+    }
+}
+
+/// Format a throughput value like the paper (GElem/s, 2 decimals).
+pub fn gelems(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format an FPR in scientific notation.
+pub fn fpr(x: f64) -> String {
+    format!("{x:.2e}")
+}
+
+/// Emit + optionally persist a table; returns rendered text.
+pub fn emit(table: &Table, out_dir: Option<&Path>, csv_name: &str) -> Result<String> {
+    let text = table.render();
+    print!("{text}");
+    if let Some(dir) = out_dir {
+        table.write_csv(dir, csv_name)?;
+    }
+    Ok(text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo", &["B", "Θ=1", "Θ=2"]);
+        t.row(vec!["64".into(), "48.69".into(), "-".into()]);
+        t.row(vec!["1024".into(), "12.81".into(), "36.01".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("48.69"));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("gbf_report_test");
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.write_csv(&dir, "t").unwrap();
+        let text = std::fs::read_to_string(dir.join("t.csv")).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+}

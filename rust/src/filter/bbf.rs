@@ -1,0 +1,131 @@
+//! Blocked Bloom Filter (paper §2.1.2), including the WarpCore comparator.
+//!
+//! k bits anywhere inside one cache-line-sized block. Unlike the SBF, bits
+//! are *not* spread evenly across words — some words get several bits, some
+//! none — which is exactly the uneven-update distribution the paper blames
+//! for WarpCore's poor atomic coalescing (§5.2).
+//!
+//! `Bbf::warpcore` pins the WarpCore design point: iterative re-hash
+//! pattern generation (§4.2) and the static fully-horizontal layout
+//! (Θ = s, Φ = 1) recorded in the config for the performance model.
+
+use anyhow::Result;
+
+use super::bloom::Bloom;
+use super::params::{FilterConfig, Scheme, Variant};
+
+/// Typed BBF over 64-bit words.
+pub struct Bbf {
+    inner: Bloom<u64>,
+}
+
+impl Bbf {
+    /// BBF with multiplicative hashing (our optimized pattern scheme).
+    pub fn new(log2_m_words: u32, block_bits: u32, k: u32) -> Result<Self> {
+        let cfg = FilterConfig {
+            variant: Variant::Bbf,
+            log2_m_words,
+            block_bits,
+            k,
+            ..Default::default()
+        };
+        Ok(Bbf { inner: Bloom::new(cfg)? })
+    }
+
+    /// The WarpCore comparator: sequential re-hash pattern generation and
+    /// the rigid Θ = s, Φ = 1 thread mapping (paper §3/§5).
+    pub fn warpcore(log2_m_words: u32, block_bits: u32, k: u32) -> Result<Self> {
+        let mut cfg = FilterConfig {
+            variant: Variant::Bbf,
+            log2_m_words,
+            block_bits,
+            k,
+            scheme: Scheme::Iter,
+            ..Default::default()
+        };
+        cfg.theta = cfg.s();
+        cfg.phi = 1;
+        Ok(Bbf { inner: Bloom::new(cfg)? })
+    }
+
+    pub fn inner(&self) -> &Bloom<u64> {
+        &self.inner
+    }
+
+    pub fn add(&self, key: u64) {
+        self.inner.add(key)
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.inner.contains(key)
+    }
+
+    pub fn bulk_add(&self, keys: &[u64], threads: usize) {
+        self.inner.bulk_add(keys, threads)
+    }
+
+    pub fn bulk_contains(&self, keys: &[u64], threads: usize) -> Vec<bool> {
+        self.inner.bulk_contains(keys, threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::pattern::{ProbePlan, ProbeSet};
+    use crate::workload::keygen::unique_keys;
+
+    #[test]
+    fn no_false_negatives_both_schemes() {
+        for f in [Bbf::new(12, 256, 16).unwrap(), Bbf::warpcore(12, 256, 16).unwrap()] {
+            let keys = unique_keys(2000, 1);
+            f.bulk_add(&keys, 2);
+            assert!(f.bulk_contains(&keys, 1).iter().all(|&b| b));
+        }
+    }
+
+    #[test]
+    fn schemes_produce_different_patterns() {
+        let mult = Bbf::new(12, 256, 16).unwrap();
+        let iter = Bbf::warpcore(12, 256, 16).unwrap();
+        let (pm, pi) = (ProbePlan::new(mult.inner().config()), ProbePlan::new(iter.inner().config()));
+        let (mut a, mut b) = (ProbeSet::default(), ProbeSet::default());
+        let mut differs = false;
+        for key in 0..100u64 {
+            pm.gen_probes(key, &mut a);
+            pi.gen_probes(key, &mut b);
+            differs |= a.masks[..a.len] != b.masks[..b.len] || a.words[..a.len] != b.words[..b.len];
+        }
+        assert!(differs);
+    }
+
+    #[test]
+    fn warpcore_layout_is_fully_horizontal() {
+        let f = Bbf::warpcore(12, 256, 16).unwrap();
+        assert_eq!(f.inner().config().theta, f.inner().config().s());
+        assert_eq!(f.inner().config().phi, 1);
+    }
+
+    #[test]
+    fn bits_unevenly_distributed() {
+        // In a BBF the per-word bit counts inside one key's block vary;
+        // find at least one key whose block has an untouched word.
+        let f = Bbf::new(12, 256, 16).unwrap();
+        let plan = ProbePlan::new(f.inner().config());
+        let mut probes = ProbeSet::default();
+        let s = f.inner().config().s() as u64;
+        let mut found_uneven = false;
+        for key in 0..200u64 {
+            plan.gen_probes(key, &mut probes);
+            let mut words_touched = std::collections::HashSet::new();
+            for (w, _) in probes.iter() {
+                words_touched.insert(w);
+            }
+            if (words_touched.len() as u64) < s {
+                found_uneven = true;
+                break;
+            }
+        }
+        assert!(found_uneven);
+    }
+}

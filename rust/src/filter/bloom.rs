@@ -1,0 +1,617 @@
+//! The shared filter engine: atomic word storage + bulk operations.
+//!
+//! Insertions use `fetch_or` with relaxed ordering — the CPU analogue of the
+//! GPU's relaxed `atomicOr` (§2.2): OR is commutative and idempotent, so no
+//! ordering between concurrent inserts is required, and a `SeqCst` fence at
+//! the end of each bulk call publishes the bits to subsequent readers.
+//!
+//! Bulk operations shard the key range over `std::thread::scope` threads
+//! (the paper's CPU baseline is "a multithreaded CPU SBF implementation").
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+use anyhow::{ensure, Result};
+
+use crate::hash::pattern::{BlockMask, ProbePlan, ProbeSet};
+
+use super::params::FilterConfig;
+
+/// Word abstraction so one engine serves S = 64 and S = 32 filters.
+pub trait FilterWord: Copy + Eq + Send + Sync + std::fmt::Debug + 'static {
+    const BITS: u32;
+    type Atomic: Send + Sync;
+
+    fn zero_atomic() -> Self::Atomic;
+    fn load(a: &Self::Atomic) -> Self;
+    fn fetch_or(a: &Self::Atomic, mask: Self);
+    fn store(a: &Self::Atomic, v: Self);
+    fn from_u64(x: u64) -> Self;
+    fn to_u64(self) -> u64;
+    fn count_ones(self) -> u32;
+}
+
+impl FilterWord for u64 {
+    const BITS: u32 = 64;
+    type Atomic = AtomicU64;
+
+    fn zero_atomic() -> AtomicU64 {
+        AtomicU64::new(0)
+    }
+    #[inline]
+    fn load(a: &AtomicU64) -> u64 {
+        a.load(Ordering::Relaxed)
+    }
+    #[inline]
+    fn fetch_or(a: &AtomicU64, mask: u64) {
+        a.fetch_or(mask, Ordering::Relaxed);
+    }
+    #[inline]
+    fn store(a: &AtomicU64, v: u64) {
+        a.store(v, Ordering::Relaxed);
+    }
+    #[inline]
+    fn from_u64(x: u64) -> u64 {
+        x
+    }
+    #[inline]
+    fn to_u64(self) -> u64 {
+        self
+    }
+    #[inline]
+    fn count_ones(self) -> u32 {
+        u64::count_ones(self)
+    }
+}
+
+impl FilterWord for u32 {
+    const BITS: u32 = 32;
+    type Atomic = AtomicU32;
+
+    fn zero_atomic() -> AtomicU32 {
+        AtomicU32::new(0)
+    }
+    #[inline]
+    fn load(a: &AtomicU32) -> u32 {
+        a.load(Ordering::Relaxed)
+    }
+    #[inline]
+    fn fetch_or(a: &AtomicU32, mask: u32) {
+        a.fetch_or(mask, Ordering::Relaxed);
+    }
+    #[inline]
+    fn store(a: &AtomicU32, v: u32) {
+        a.store(v, Ordering::Relaxed);
+    }
+    #[inline]
+    fn from_u64(x: u64) -> u32 {
+        x as u32
+    }
+    #[inline]
+    fn to_u64(self) -> u64 {
+        self as u64
+    }
+    #[inline]
+    fn count_ones(self) -> u32 {
+        u32::count_ones(self)
+    }
+}
+
+/// The filter engine. See module docs.
+pub struct Bloom<W: FilterWord = u64> {
+    cfg: FilterConfig,
+    plan: ProbePlan,
+    words: Box<[W::Atomic]>,
+}
+
+impl<W: FilterWord> Bloom<W> {
+    /// Allocate an empty filter for `cfg` (validates it).
+    pub fn new(cfg: FilterConfig) -> Result<Self> {
+        let cfg = cfg.validate()?;
+        ensure!(
+            cfg.word_bits == W::BITS,
+            "config word_bits {} != engine word type {}",
+            cfg.word_bits,
+            W::BITS
+        );
+        let words = (0..cfg.m_words()).map(|_| W::zero_atomic()).collect();
+        Ok(Bloom { cfg, plan: ProbePlan::new(&cfg), words })
+    }
+
+    pub fn config(&self) -> &FilterConfig {
+        &self.cfg
+    }
+
+    pub fn plan(&self) -> &ProbePlan {
+        &self.plan
+    }
+
+    pub fn m_words(&self) -> usize {
+        self.words.len()
+    }
+
+    // ---- single-key operations ----
+
+    /// Insert one key (lock-free; callable concurrently).
+    #[inline]
+    pub fn add(&self, key: u64) {
+        if self.cfg.is_blocked() {
+            let mut bm = BlockMask::default();
+            self.plan.gen_block_mask(key, &mut bm);
+            for w in 0..bm.s {
+                let mask = bm.masks[w];
+                if mask != 0 {
+                    W::fetch_or(&self.words[bm.block_word0 as usize + w], W::from_u64(mask));
+                }
+            }
+        } else {
+            let mut probes = ProbeSet::default();
+            self.plan.gen_probes(key, &mut probes);
+            for (w, m) in probes.iter() {
+                W::fetch_or(&self.words[w as usize], W::from_u64(m));
+            }
+        }
+    }
+
+    /// Membership test for one key.
+    #[inline]
+    pub fn contains(&self, key: u64) -> bool {
+        let mut probes = ProbeSet::default();
+        self.plan.gen_probes(key, &mut probes);
+        let ok = self.check_probes(&probes);
+        ok
+    }
+
+    // ---- bulk operations ----
+
+    /// Bulk insert across `threads` OS threads (0 = available parallelism).
+    pub fn bulk_add(&self, keys: &[u64], threads: usize) {
+        let threads = effective_threads(threads, keys.len());
+        if threads <= 1 {
+            self.add_run(keys);
+        } else {
+            let chunk = keys.len().div_ceil(threads);
+            std::thread::scope(|scope| {
+                for part in keys.chunks(chunk) {
+                    scope.spawn(move || self.add_run(part));
+                }
+            });
+        }
+        std::sync::atomic::fence(Ordering::SeqCst);
+    }
+
+    /// One thread's insert loop, pipelined like [`Self::contains_run`]:
+    /// hash + prefetch a window ahead, then issue the atomic ORs. Probe
+    /// words are distinct for SBF/RBBF/CSBF so the ProbeSet feeds atomics
+    /// directly; BBF merges duplicate words through the dense block mask
+    /// first (fewer atomics, the §5.2 coalescing story in miniature).
+    fn add_run(&self, keys: &[u64]) {
+        use crate::filter::params::Variant;
+        use crate::hash::base_hash;
+        const LOOKAHEAD: usize = 8;
+        let plan = &self.plan;
+        match self.cfg.variant {
+            Variant::Sbf | Variant::Rbbf | Variant::Csbf => {
+                let s = self.cfg.s() as u64;
+                let mut bases = [0u64; LOOKAHEAD];
+                let mut probes = ProbeSet::default();
+                for chunk_keys in keys.chunks(LOOKAHEAD) {
+                    for (i, &key) in chunk_keys.iter().enumerate() {
+                        let base = base_hash(key);
+                        bases[i] = base;
+                        self.prefetch((plan.block_index(base) * s) as usize, s as usize);
+                    }
+                    for &base in bases.iter().take(chunk_keys.len()) {
+                        plan.gen_probes_from_base(base, &mut probes);
+                        for i in 0..probes.len {
+                            let m = probes.masks[i];
+                            if m != 0 {
+                                W::fetch_or(&self.words[probes.words[i] as usize], W::from_u64(m));
+                            }
+                        }
+                    }
+                }
+            }
+            Variant::Bbf | Variant::Cbf => {
+                let mut probes = ProbeSet::default();
+                let mut bm = BlockMask::default();
+                for &k in keys {
+                    self.add_with_buffers(k, &mut probes, &mut bm);
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn add_with_buffers(&self, key: u64, probes: &mut ProbeSet, bm: &mut BlockMask) {
+        if self.cfg.is_blocked() {
+            self.plan.gen_block_mask(key, bm);
+            for w in 0..bm.s {
+                let mask = bm.masks[w];
+                if mask != 0 {
+                    W::fetch_or(&self.words[bm.block_word0 as usize + w], W::from_u64(mask));
+                }
+            }
+        } else {
+            self.plan.gen_probes(key, probes);
+            for (w, m) in probes.iter() {
+                W::fetch_or(&self.words[w as usize], W::from_u64(m));
+            }
+        }
+    }
+
+    /// Bulk membership test; returns one bool per key.
+    pub fn bulk_contains(&self, keys: &[u64], threads: usize) -> Vec<bool> {
+        let threads = effective_threads(threads, keys.len());
+        let mut out = vec![false; keys.len()];
+        if threads <= 1 {
+            self.contains_run(keys, &mut out);
+        } else {
+            let chunk = keys.len().div_ceil(threads);
+            std::thread::scope(|scope| {
+                for (part_keys, part_out) in keys.chunks(chunk).zip(out.chunks_mut(chunk)) {
+                    scope.spawn(move || self.contains_run(part_keys, part_out));
+                }
+            });
+        }
+        out
+    }
+
+    /// One thread's lookup loop: variant-monomorphic hot paths with a
+    /// software-prefetch pipeline (hash a window ahead, prefetch the block
+    /// cache lines, then probe) — the CPU analogue of §4.1's decoupled
+    /// fetch/compute schedule. Falls back to the generic probe walk for
+    /// CBF (whole-array scatter; prefetching k lines per key still helps).
+    fn contains_run(&self, keys: &[u64], out: &mut [bool]) {
+        use crate::hash::base_hash;
+        const LOOKAHEAD: usize = 8;
+        let plan = &self.plan;
+        match self.cfg.variant {
+            crate::filter::params::Variant::Sbf
+            | crate::filter::params::Variant::Rbbf
+            | crate::filter::params::Variant::Csbf
+            | crate::filter::params::Variant::Bbf => {
+                let s = self.cfg.s() as u64;
+                // pipeline stage 1: base hashes + block starts (+ prefetch)
+                let mut bases = [0u64; LOOKAHEAD];
+                let mut bw0s = [0usize; LOOKAHEAD];
+                let mut probes = ProbeSet::default();
+                for (chunk_keys, chunk_out) in keys.chunks(LOOKAHEAD).zip(out.chunks_mut(LOOKAHEAD)) {
+                    for (i, &key) in chunk_keys.iter().enumerate() {
+                        let base = base_hash(key);
+                        let bw0 = (plan.block_index(base) * s) as usize;
+                        bases[i] = base;
+                        bw0s[i] = bw0;
+                        self.prefetch(bw0, s as usize);
+                    }
+                    // pipeline stage 2: pattern + probe with early exit
+                    for (i, slot) in chunk_out.iter_mut().enumerate() {
+                        plan.gen_probes_from_base(bases[i], &mut probes);
+                        *slot = self.check_probes(&probes);
+                    }
+                }
+            }
+            crate::filter::params::Variant::Cbf => {
+                let mut probe_buf: Vec<ProbeSet> = (0..LOOKAHEAD).map(|_| ProbeSet::default()).collect();
+                for (chunk_keys, chunk_out) in keys.chunks(LOOKAHEAD).zip(out.chunks_mut(LOOKAHEAD)) {
+                    for (i, &key) in chunk_keys.iter().enumerate() {
+                        plan.gen_probes(key, &mut probe_buf[i]);
+                        for (w, _) in probe_buf[i].iter() {
+                            self.prefetch(w as usize, 1);
+                        }
+                    }
+                    for (i, slot) in chunk_out.iter_mut().enumerate() {
+                        *slot = self.check_probes(&probe_buf[i]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Prefetch the cache lines backing words [w0, w0+len).
+    #[inline]
+    fn prefetch(&self, w0: usize, len: usize) {
+        #[cfg(target_arch = "x86_64")]
+        unsafe {
+            let base = self.words.as_ptr() as *const u8;
+            let stride = std::mem::size_of::<W::Atomic>();
+            let mut off = w0 * stride;
+            let end = (w0 + len) * stride;
+            while off < end {
+                std::arch::x86_64::_mm_prefetch::<{ std::arch::x86_64::_MM_HINT_T0 }>(
+                    base.add(off) as *const i8,
+                );
+                off += 64;
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = (w0, len);
+        }
+    }
+
+    #[inline]
+    fn check_probes(&self, probes: &ProbeSet) -> bool {
+        // early exit on the first missing bit pattern
+        for i in 0..probes.len {
+            let m = probes.masks[i];
+            if (W::load(&self.words[probes.words[i] as usize]).to_u64() & m) != m {
+                return false;
+            }
+        }
+        true
+    }
+
+    // ---- state management (coordinator / PJRT sync) ----
+
+    /// Snapshot the words as u64 values (lossless for both word sizes).
+    pub fn snapshot(&self) -> Vec<u64> {
+        self.words.iter().map(|a| W::load(a).to_u64()).collect()
+    }
+
+    /// Overwrite the filter content (e.g. with PJRT `add` output).
+    pub fn load_words(&self, words: &[u64]) -> Result<()> {
+        ensure!(words.len() == self.words.len(), "word count mismatch");
+        for (a, &w) in self.words.iter().zip(words) {
+            W::store(a, W::from_u64(w));
+        }
+        Ok(())
+    }
+
+    /// OR external word content into the filter (merge of two filters).
+    pub fn merge_words(&self, words: &[u64]) -> Result<()> {
+        ensure!(words.len() == self.words.len(), "word count mismatch");
+        for (a, &w) in self.words.iter().zip(words) {
+            if w != 0 {
+                W::fetch_or(a, W::from_u64(w));
+            }
+        }
+        Ok(())
+    }
+
+    /// Union with another filter of the identical configuration.
+    pub fn merge(&self, other: &Self) -> Result<()> {
+        ensure!(self.cfg == *other.config(), "config mismatch");
+        for (a, b) in self.words.iter().zip(other.words.iter()) {
+            let w = W::load(b);
+            if w.to_u64() != 0 {
+                W::fetch_or(a, w);
+            }
+        }
+        Ok(())
+    }
+
+    /// Reset every word to zero.
+    pub fn clear(&self) {
+        for a in self.words.iter() {
+            W::store(a, W::from_u64(0));
+        }
+    }
+
+    /// Number of set bits (diagnostic; not concurrent-safe w.r.t. writers).
+    pub fn count_ones(&self) -> u64 {
+        self.words.iter().map(|a| W::load(a).count_ones() as u64).sum()
+    }
+
+    /// Fraction of set bits.
+    pub fn fill_ratio(&self) -> f64 {
+        self.count_ones() as f64 / self.cfg.m_bits() as f64
+    }
+}
+
+fn effective_threads(threads: usize, work: usize) -> usize {
+    let t = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    t.min(work.max(1)).min(64)
+}
+
+/// Word-size-erased filter for runtime-configured pipelines.
+pub enum AnyBloom {
+    W64(Bloom<u64>),
+    W32(Bloom<u32>),
+}
+
+impl AnyBloom {
+    pub fn new(cfg: FilterConfig) -> Result<Self> {
+        Ok(match cfg.word_bits {
+            64 => AnyBloom::W64(Bloom::new(cfg)?),
+            32 => AnyBloom::W32(Bloom::new(cfg)?),
+            _ => anyhow::bail!("unsupported word size"),
+        })
+    }
+
+    pub fn config(&self) -> &FilterConfig {
+        match self {
+            AnyBloom::W64(b) => b.config(),
+            AnyBloom::W32(b) => b.config(),
+        }
+    }
+
+    pub fn add(&self, key: u64) {
+        match self {
+            AnyBloom::W64(b) => b.add(key),
+            AnyBloom::W32(b) => b.add(key),
+        }
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        match self {
+            AnyBloom::W64(b) => b.contains(key),
+            AnyBloom::W32(b) => b.contains(key),
+        }
+    }
+
+    pub fn bulk_add(&self, keys: &[u64], threads: usize) {
+        match self {
+            AnyBloom::W64(b) => b.bulk_add(keys, threads),
+            AnyBloom::W32(b) => b.bulk_add(keys, threads),
+        }
+    }
+
+    pub fn bulk_contains(&self, keys: &[u64], threads: usize) -> Vec<bool> {
+        match self {
+            AnyBloom::W64(b) => b.bulk_contains(keys, threads),
+            AnyBloom::W32(b) => b.bulk_contains(keys, threads),
+        }
+    }
+
+    pub fn snapshot(&self) -> Vec<u64> {
+        match self {
+            AnyBloom::W64(b) => b.snapshot(),
+            AnyBloom::W32(b) => b.snapshot(),
+        }
+    }
+
+    pub fn load_words(&self, words: &[u64]) -> Result<()> {
+        match self {
+            AnyBloom::W64(b) => b.load_words(words),
+            AnyBloom::W32(b) => b.load_words(words),
+        }
+    }
+
+    pub fn clear(&self) {
+        match self {
+            AnyBloom::W64(b) => b.clear(),
+            AnyBloom::W32(b) => b.clear(),
+        }
+    }
+
+    pub fn fill_ratio(&self) -> f64 {
+        match self {
+            AnyBloom::W64(b) => b.fill_ratio(),
+            AnyBloom::W32(b) => b.fill_ratio(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::params::Variant;
+    use crate::workload::keygen::unique_keys;
+
+    fn all_cfgs() -> Vec<FilterConfig> {
+        let m = 12;
+        vec![
+            FilterConfig { variant: Variant::Sbf, block_bits: 256, k: 16, log2_m_words: m, ..Default::default() },
+            FilterConfig { variant: Variant::Rbbf, block_bits: 64, k: 16, log2_m_words: m, ..Default::default() },
+            FilterConfig { variant: Variant::Csbf, block_bits: 512, k: 16, z: 2, log2_m_words: m, ..Default::default() },
+            FilterConfig { variant: Variant::Bbf, block_bits: 256, k: 16, log2_m_words: m, ..Default::default() },
+            FilterConfig { variant: Variant::Cbf, k: 16, log2_m_words: m, ..Default::default() },
+        ]
+    }
+
+    #[test]
+    fn no_false_negatives_every_variant() {
+        for cfg in all_cfgs() {
+            let f = Bloom::<u64>::new(cfg).unwrap();
+            let keys = unique_keys(2000, 1);
+            f.bulk_add(&keys, 1);
+            assert!(f.bulk_contains(&keys, 1).iter().all(|&b| b), "{}", cfg.name());
+        }
+    }
+
+    #[test]
+    fn empty_filter_rejects() {
+        for cfg in all_cfgs() {
+            let f = Bloom::<u64>::new(cfg).unwrap();
+            let keys = unique_keys(500, 2);
+            assert!(!f.bulk_contains(&keys, 1).iter().any(|&b| b));
+        }
+    }
+
+    #[test]
+    fn parallel_add_equals_serial() {
+        for cfg in all_cfgs() {
+            let keys = unique_keys(5000, 3);
+            let serial = Bloom::<u64>::new(cfg).unwrap();
+            serial.bulk_add(&keys, 1);
+            let parallel = Bloom::<u64>::new(cfg).unwrap();
+            parallel.bulk_add(&keys, 8);
+            assert_eq!(serial.snapshot(), parallel.snapshot(), "{}", cfg.name());
+        }
+    }
+
+    #[test]
+    fn parallel_contains_equals_serial() {
+        let cfg = all_cfgs()[0];
+        let f = Bloom::<u64>::new(cfg).unwrap();
+        let ins = unique_keys(3000, 4);
+        f.bulk_add(&ins, 4);
+        let mut queries = ins[..1000].to_vec();
+        queries.extend(unique_keys(1000, 5));
+        assert_eq!(f.bulk_contains(&queries, 1), f.bulk_contains(&queries, 8));
+    }
+
+    #[test]
+    fn snapshot_load_roundtrip() {
+        let cfg = all_cfgs()[0];
+        let f = Bloom::<u64>::new(cfg).unwrap();
+        f.bulk_add(&unique_keys(1000, 6), 1);
+        let snap = f.snapshot();
+        let g = Bloom::<u64>::new(cfg).unwrap();
+        g.load_words(&snap).unwrap();
+        assert_eq!(g.snapshot(), snap);
+        assert!(g.bulk_contains(&unique_keys(1000, 6), 1).iter().all(|&b| b));
+    }
+
+    #[test]
+    fn merge_is_union() {
+        let cfg = all_cfgs()[0];
+        let (a, b) = (Bloom::<u64>::new(cfg).unwrap(), Bloom::<u64>::new(cfg).unwrap());
+        let (ka, kb) = (unique_keys(500, 7), unique_keys(500, 8));
+        a.bulk_add(&ka, 1);
+        b.bulk_add(&kb, 1);
+        a.merge(&b).unwrap();
+        assert!(a.bulk_contains(&ka, 1).iter().all(|&x| x));
+        assert!(a.bulk_contains(&kb, 1).iter().all(|&x| x));
+    }
+
+    #[test]
+    fn u32_engine_works() {
+        let cfg = FilterConfig {
+            variant: Variant::Sbf,
+            block_bits: 128,
+            word_bits: 32,
+            k: 8,
+            log2_m_words: 12,
+            ..Default::default()
+        };
+        let f = Bloom::<u32>::new(cfg).unwrap();
+        let keys = unique_keys(1000, 9);
+        f.bulk_add(&keys, 2);
+        assert!(f.bulk_contains(&keys, 2).iter().all(|&b| b));
+        // every stored word must fit in 32 bits
+        assert!(f.snapshot().iter().all(|&w| w >> 32 == 0));
+    }
+
+    #[test]
+    fn word_size_mismatch_rejected() {
+        let cfg = FilterConfig { word_bits: 32, block_bits: 128, k: 8, ..Default::default() };
+        assert!(Bloom::<u64>::new(cfg).is_err());
+    }
+
+    #[test]
+    fn clear_resets() {
+        let cfg = all_cfgs()[0];
+        let f = Bloom::<u64>::new(cfg).unwrap();
+        f.bulk_add(&unique_keys(100, 10), 1);
+        assert!(f.count_ones() > 0);
+        f.clear();
+        assert_eq!(f.count_ones(), 0);
+    }
+
+    #[test]
+    fn fill_ratio_tracks_eq1() {
+        // After inserting n keys the expected fill is 1 - e^{-kn/m}.
+        let cfg = all_cfgs()[0];
+        let f = Bloom::<u64>::new(cfg).unwrap();
+        let n = 8000usize;
+        f.bulk_add(&unique_keys(n, 11), 1);
+        let expect = 1.0 - (-(cfg.k as f64) * n as f64 / cfg.m_bits() as f64).exp();
+        let got = f.fill_ratio();
+        assert!((got - expect).abs() < 0.02, "got {got}, expect {expect}");
+    }
+}

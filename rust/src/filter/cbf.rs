@@ -1,0 +1,96 @@
+//! Classical Bloom Filter (paper §2.1.1, Bloom 1970).
+//!
+//! k bits anywhere in the array: the best accuracy per bit (Eq. 1–3) and
+//! the worst memory behaviour — every probe is an independent random
+//! access, which is why the paper uses it as the accuracy anchor and the
+//! throughput floor.
+
+use anyhow::Result;
+
+use super::bloom::Bloom;
+use super::params::{FilterConfig, Variant};
+
+/// Typed CBF over 64-bit words.
+pub struct Cbf {
+    inner: Bloom<u64>,
+}
+
+impl Cbf {
+    pub fn new(log2_m_words: u32, k: u32) -> Result<Self> {
+        let cfg = FilterConfig { variant: Variant::Cbf, log2_m_words, k, ..Default::default() };
+        Ok(Cbf { inner: Bloom::new(cfg)? })
+    }
+
+    /// CBF with the Eq. (2)-optimal k for an expected `n` keys.
+    pub fn with_optimal_k(log2_m_words: u32, expected_n: u64) -> Result<Self> {
+        let m_bits = (1u64 << log2_m_words) * 64;
+        let k = super::params::optimal_k(m_bits, expected_n).min(62);
+        Self::new(log2_m_words, k)
+    }
+
+    pub fn inner(&self) -> &Bloom<u64> {
+        &self.inner
+    }
+
+    pub fn add(&self, key: u64) {
+        self.inner.add(key)
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.inner.contains(key)
+    }
+
+    pub fn bulk_add(&self, keys: &[u64], threads: usize) {
+        self.inner.bulk_add(keys, threads)
+    }
+
+    pub fn bulk_contains(&self, keys: &[u64], threads: usize) -> Vec<bool> {
+        self.inner.bulk_contains(keys, threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::keygen::unique_keys;
+
+    #[test]
+    fn no_false_negatives() {
+        let f = Cbf::new(12, 16).unwrap();
+        let keys = unique_keys(2000, 1);
+        f.bulk_add(&keys, 2);
+        assert!(f.bulk_contains(&keys, 1).iter().all(|&b| b));
+    }
+
+    #[test]
+    fn probes_span_whole_filter() {
+        // unlike blocked variants, CBF probes should cover distant words
+        let f = Cbf::new(12, 16).unwrap();
+        f.bulk_add(&unique_keys(200, 2), 1);
+        let snap = f.inner().snapshot();
+        let nz: Vec<usize> = snap.iter().enumerate().filter(|(_, &w)| w != 0).map(|(i, _)| i).collect();
+        let spread = nz.last().unwrap() - nz.first().unwrap();
+        assert!(spread > snap.len() / 2, "probes clustered: spread {spread}");
+    }
+
+    #[test]
+    fn fpr_tracks_eq1() {
+        use crate::analytics::fpr::measure_fpr;
+        use crate::filter::params::{fpr_classic, space_optimal_n};
+        let cfg = FilterConfig { variant: Variant::Cbf, k: 8, log2_m_words: 12, ..Default::default() };
+        let n = space_optimal_n(cfg.m_bits(), cfg.k) as usize;
+        let measured = measure_fpr(&cfg, n, 50_000, 5).unwrap();
+        let theory = fpr_classic(cfg.m_bits(), n as u64, cfg.k);
+        assert!(
+            measured < theory * 3.0 + 1e-4 && measured > theory / 3.0 - 1e-4,
+            "measured {measured} vs theory {theory}"
+        );
+    }
+
+    #[test]
+    fn optimal_k_constructor() {
+        let f = Cbf::with_optimal_k(12, 16_000).unwrap();
+        let k = f.inner().config().k;
+        assert!(k >= 8 && k <= 16, "k = {k}");
+    }
+}

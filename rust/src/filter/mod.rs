@@ -1,0 +1,24 @@
+//! The filter library: geometry/params plus the five variants of paper §2.1.
+//!
+//! [`bloom::Bloom`] is the shared engine — lock-free concurrent inserts via
+//! atomic OR, multithreaded bulk operations — parameterized by a
+//! [`params::FilterConfig`] and the word type (`u64` for S = 64, `u32` for
+//! S = 32). The per-variant modules ([`cbf`], [`bbf`], [`rbbf`], [`sbf`],
+//! [`csbf`]) expose typed constructors and variant-specific helpers; they
+//! all delegate to the engine, which mirrors the Python reference
+//! bit-for-bit (pinned by `artifacts/golden.json`).
+//!
+//! This is simultaneously: the paper's *CPU baseline* (multithreaded SBF),
+//! the native request-path backend of the coordinator, and the oracle the
+//! PJRT artifacts are validated against.
+
+pub mod bbf;
+pub mod bloom;
+pub mod cbf;
+pub mod csbf;
+pub mod params;
+pub mod rbbf;
+pub mod sbf;
+
+pub use bloom::{AnyBloom, Bloom, FilterWord};
+pub use params::{FilterConfig, Scheme, Variant};

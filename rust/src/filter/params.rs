@@ -1,0 +1,404 @@
+//! Filter geometry, validation, and the paper's accuracy math (Eq. 1–3).
+//!
+//! Field-for-field mirror of `python/compile/params.py`; the cross-language
+//! golden tests pin the two against each other.
+
+use anyhow::{bail, Result};
+
+/// The five filter variants of paper §2.1 (Figure 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Classical Bloom filter: k bits anywhere in the array.
+    Cbf,
+    /// Blocked Bloom filter: k bits anywhere inside one block.
+    Bbf,
+    /// Register-blocked: block == machine word.
+    Rbbf,
+    /// Sectorized: k/s bits in *each* word of the block.
+    Sbf,
+    /// Cache-sectorized: z groups; k/z bits in one chosen sector per group.
+    Csbf,
+}
+
+impl Variant {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Variant::Cbf => "cbf",
+            Variant::Bbf => "bbf",
+            Variant::Rbbf => "rbbf",
+            Variant::Sbf => "sbf",
+            Variant::Csbf => "csbf",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "cbf" => Variant::Cbf,
+            "bbf" => Variant::Bbf,
+            "rbbf" => Variant::Rbbf,
+            "sbf" => Variant::Sbf,
+            "csbf" => Variant::Csbf,
+            _ => bail!("unknown variant {s:?}"),
+        })
+    }
+}
+
+/// Key-pattern generation scheme (paper §4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Branchless multiplicative hashing (the paper's contribution).
+    Mult,
+    /// WarpCore-style sequential re-hash (comparator).
+    Iter,
+}
+
+impl Scheme {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Scheme::Mult => "mult",
+            Scheme::Iter => "iter",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "mult" => Scheme::Mult,
+            "iter" => Scheme::Iter,
+            _ => bail!("unknown scheme {s:?}"),
+        })
+    }
+}
+
+/// A fully-specified filter configuration.
+///
+/// Defaults to the paper's headline configuration: SBF, B = 256-bit blocks,
+/// S = 64-bit words, k = 16 fingerprint bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FilterConfig {
+    pub variant: Variant,
+    /// log2 of the total number of words (total size = 2^log2_m_words * S bits).
+    pub log2_m_words: u32,
+    /// S: word size in bits (32 or 64).
+    pub word_bits: u32,
+    /// B: block size in bits (power of two; ignored for CBF).
+    pub block_bits: u32,
+    /// k: fingerprint bits per key.
+    pub k: u32,
+    /// z: CSBF group count (1 otherwise).
+    pub z: u32,
+    pub scheme: Scheme,
+    /// Θ: horizontal vectorization (lanes cooperating per key).
+    pub theta: u32,
+    /// Φ: vertical vectorization (contiguous words per vector load).
+    pub phi: u32,
+}
+
+impl Default for FilterConfig {
+    fn default() -> Self {
+        FilterConfig {
+            variant: Variant::Sbf,
+            log2_m_words: 17,
+            word_bits: 64,
+            block_bits: 256,
+            k: 16,
+            z: 1,
+            scheme: Scheme::Mult,
+            theta: 1,
+            phi: 1,
+        }
+    }
+}
+
+impl FilterConfig {
+    /// Convenience constructor for the common case.
+    pub fn new(variant: Variant, log2_m_words: u32, block_bits: u32, k: u32) -> Self {
+        FilterConfig { variant, log2_m_words, block_bits, k, ..Default::default() }
+    }
+
+    // ---- derived geometry ----
+
+    pub fn m_words(&self) -> u64 {
+        1u64 << self.log2_m_words
+    }
+
+    pub fn m_bits(&self) -> u64 {
+        self.m_words() * self.word_bits as u64
+    }
+
+    /// s: words per block.
+    pub fn s(&self) -> u32 {
+        self.block_bits / self.word_bits
+    }
+
+    pub fn num_blocks(&self) -> u64 {
+        self.m_bits() / self.block_bits as u64
+    }
+
+    pub fn log2_num_blocks(&self) -> u32 {
+        self.num_blocks().trailing_zeros()
+    }
+
+    pub fn log2_word_bits(&self) -> u32 {
+        self.word_bits.trailing_zeros()
+    }
+
+    pub fn log2_block_bits(&self) -> u32 {
+        self.block_bits.trailing_zeros()
+    }
+
+    pub fn log2_m_bits(&self) -> u32 {
+        self.log2_m_words + self.log2_word_bits()
+    }
+
+    /// SBF/RBBF: fingerprint bits per block word.
+    pub fn k_per_word(&self) -> u32 {
+        self.k / self.s()
+    }
+
+    /// CSBF: fingerprint bits per sector group.
+    pub fn k_per_group(&self) -> u32 {
+        self.k / self.z
+    }
+
+    /// CSBF: candidate sectors per group.
+    pub fn sectors_per_group(&self) -> u32 {
+        self.s() / self.z
+    }
+
+    /// P: number of (word, mask) probes one key generates.
+    pub fn words_per_key(&self) -> u32 {
+        match self.variant {
+            Variant::Cbf | Variant::Bbf => self.k,
+            Variant::Sbf | Variant::Rbbf => self.s(),
+            Variant::Csbf => self.z,
+        }
+    }
+
+    pub fn is_blocked(&self) -> bool {
+        self.variant != Variant::Cbf
+    }
+
+    /// Filter size in bytes.
+    pub fn size_bytes(&self) -> u64 {
+        self.m_bits() / 8
+    }
+
+    // ---- validation (mirror of params.py::validate) ----
+
+    pub fn validate(&self) -> Result<Self> {
+        if self.word_bits != 32 && self.word_bits != 64 {
+            bail!("word_bits must be 32 or 64");
+        }
+        if self.log2_m_words == 0 || self.log2_m_words > 34 {
+            bail!("log2_m_words out of range");
+        }
+        if self.k == 0 || self.k > 62 {
+            bail!("k must be in 1..=62 (salt table budget)");
+        }
+        if self.scheme == Scheme::Iter && self.variant != Variant::Bbf {
+            bail!("iter scheme models WarpCore's BBF only");
+        }
+        if self.variant == Variant::Cbf {
+            if self.theta != 1 || self.phi != 1 {
+                bail!("cbf has no block vectorization layout");
+            }
+            return Ok(*self);
+        }
+        if !self.block_bits.is_power_of_two() {
+            bail!("block_bits must be a power of two");
+        }
+        if self.block_bits < self.word_bits {
+            bail!("block must hold at least one word");
+        }
+        if self.block_bits as u64 > self.m_bits() {
+            bail!("block larger than filter");
+        }
+        if self.variant == Variant::Rbbf && self.block_bits != self.word_bits {
+            bail!("rbbf requires B == S");
+        }
+        if matches!(self.variant, Variant::Sbf | Variant::Rbbf) {
+            let s = self.s();
+            if self.k % s != 0 || self.k < s {
+                bail!("sbf requires k to be a positive multiple of s");
+            }
+        }
+        if self.variant == Variant::Csbf {
+            if !self.z.is_power_of_two() || self.z > self.s() || self.z == 0 {
+                bail!("csbf requires power-of-two z <= s");
+            }
+            if self.k % self.z != 0 {
+                bail!("csbf requires k % z == 0");
+            }
+            if self.z > 16 {
+                bail!("csbf group salt budget is 16");
+            }
+        }
+        if !self.theta.is_power_of_two() || !self.phi.is_power_of_two() {
+            bail!("theta and phi must be powers of two");
+        }
+        if self.theta * self.phi > self.s().max(1) {
+            bail!("theta*phi must not exceed words per block");
+        }
+        Ok(*self)
+    }
+
+    /// Logical-filter equality ignoring the (Θ, Φ) layout hints: two
+    /// configs that differ only in vectorization produce bit-identical
+    /// filters (property-tested), so artifact lookup matches on this.
+    pub fn same_filter(&self, other: &FilterConfig) -> bool {
+        let a = FilterConfig { theta: 1, phi: 1, ..*self };
+        let b = FilterConfig { theta: 1, phi: 1, ..*other };
+        a == b
+    }
+
+    /// Canonical name (matches Python `FilterConfig.name()` / manifest keys).
+    pub fn name(&self) -> String {
+        let mut parts = vec![
+            self.variant.as_str().to_string(),
+            format!("B{}", self.block_bits),
+            format!("S{}", self.word_bits),
+            format!("k{}", self.k),
+        ];
+        if self.variant == Variant::Csbf {
+            parts.push(format!("z{}", self.z));
+        }
+        if self.scheme != Scheme::Mult {
+            parts.push(self.scheme.as_str().to_string());
+        }
+        parts.push(format!("m{}", self.log2_m_words));
+        parts.join("_")
+    }
+}
+
+// ---- the paper's accuracy math ----
+
+/// Eq. (1): `f = (1 - e^{-kn/m})^k`.
+pub fn fpr_classic(m_bits: u64, n: u64, k: u32) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    (1.0 - (-(k as f64) * n as f64 / m_bits as f64).exp()).powi(k as i32)
+}
+
+/// Eq. (2): `k = (m/n) ln 2`, rounded to the nearest positive integer.
+pub fn optimal_k(m_bits: u64, n: u64) -> u32 {
+    ((m_bits as f64 / n as f64) * std::f64::consts::LN_2).round().max(1.0) as u32
+}
+
+/// Eq. (3): `f_min = (1/2)^(c ln 2)` for `c = m/n` bits per key.
+pub fn fpr_min(c: f64) -> f64 {
+    0.5f64.powf(c * std::f64::consts::LN_2)
+}
+
+/// §5.1: the space-error-rate-optimal key count: `n = m ln 2 / k`.
+pub fn space_optimal_n(m_bits: u64, k: u32) -> u64 {
+    ((m_bits as f64 * std::f64::consts::LN_2 / k as f64) as u64).max(1)
+}
+
+/// Putze et al.'s Poisson-mixture FPR approximation for blocked filters.
+pub fn fpr_blocked(m_bits: u64, n: u64, k: u32, block_bits: u32) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let lam = n as f64 * block_bits as f64 / m_bits as f64;
+    let mut total = 0.0;
+    let mut pmf = (-lam).exp();
+    for i in 0..64u64 {
+        total += pmf * fpr_classic(block_bits as u64, i, k);
+        pmf *= lam / (i as f64 + 1.0);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sbf(block_bits: u32, k: u32) -> FilterConfig {
+        FilterConfig { variant: Variant::Sbf, block_bits, k, log2_m_words: 12, ..Default::default() }
+    }
+
+    #[test]
+    fn headline_config_geometry() {
+        let c = FilterConfig::default().validate().unwrap();
+        assert_eq!(c.s(), 4);
+        assert_eq!(c.words_per_key(), 4);
+        assert_eq!(c.k_per_word(), 4);
+        assert_eq!(c.m_words(), 1 << 17);
+        assert_eq!(c.num_blocks(), (1 << 17) * 64 / 256);
+        assert_eq!(c.name(), "sbf_B256_S64_k16_m17");
+    }
+
+    #[test]
+    fn validation_accepts_paper_grid() {
+        // the Table 1/2 grid: B in {64..1024}, k = 16, S = 64
+        for block_bits in [64u32, 128, 256, 512, 1024] {
+            let v = if block_bits == 64 { Variant::Rbbf } else { Variant::Sbf };
+            let c = FilterConfig { variant: v, block_bits, k: 16, log2_m_words: 20, ..Default::default() };
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        assert!(sbf(256, 15).validate().is_err()); // k % s != 0
+        assert!(sbf(192, 12).validate().is_err()); // B not pow2
+        assert!(FilterConfig { variant: Variant::Rbbf, block_bits: 128, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(FilterConfig { variant: Variant::Csbf, block_bits: 512, k: 16, z: 3, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(FilterConfig { variant: Variant::Cbf, theta: 2, ..Default::default() }.validate().is_err());
+        assert!(FilterConfig { theta: 8, phi: 2, ..Default::default() }.validate().is_err()); // 16 > s=4
+        assert!(FilterConfig { scheme: Scheme::Iter, ..Default::default() }.validate().is_err());
+        assert!(FilterConfig { k: 0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn eq1_eq3_sanity() {
+        let m = 1u64 << 23;
+        let n = space_optimal_n(m, 16);
+        let f = fpr_classic(m, n, 16);
+        // at the space-optimal load the classical FPR is ~2^-16-ish
+        assert!(f > 0.0 && f < 1e-3, "f = {f}");
+        assert!((optimal_k(m, n) as i64 - 16).abs() <= 1);
+        assert!(fpr_min(23.0) < fpr_min(8.0));
+    }
+
+    #[test]
+    fn blocked_fpr_above_classical() {
+        let m = 1u64 << 23;
+        let n = space_optimal_n(m, 8);
+        assert!(fpr_blocked(m, n, 8, 512) > fpr_classic(m, n, 8));
+        assert!(fpr_blocked(m, n, 8, 512) < 1.0);
+    }
+
+    #[test]
+    fn rbbf_is_sbf_extreme() {
+        let c = FilterConfig { variant: Variant::Rbbf, block_bits: 64, k: 16, log2_m_words: 12, ..Default::default() }
+            .validate()
+            .unwrap();
+        assert_eq!(c.s(), 1);
+        assert_eq!(c.words_per_key(), 1);
+        assert_eq!(c.k_per_word(), 16);
+    }
+
+    #[test]
+    fn csbf_geometry() {
+        let c = FilterConfig {
+            variant: Variant::Csbf,
+            block_bits: 1024,
+            k: 16,
+            z: 4,
+            log2_m_words: 14,
+            ..Default::default()
+        }
+        .validate()
+        .unwrap();
+        assert_eq!(c.s(), 16);
+        assert_eq!(c.sectors_per_group(), 4);
+        assert_eq!(c.k_per_group(), 4);
+        assert_eq!(c.words_per_key(), 4);
+    }
+}

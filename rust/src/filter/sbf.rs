@@ -1,0 +1,133 @@
+//! Sectorized Bloom Filter (paper §2.1.4) — the paper's primary subject.
+//!
+//! k/s fingerprint bits in *every* word of the key's block: whole-word
+//! compares, contiguous memory, and the (Θ, Φ)-vectorizable layout that
+//! §4 optimizes. This module adds a perf-tuned monomorphic bulk path for
+//! the headline configuration (B = 256, S = 64, k = 16) used by the CPU
+//! baseline benchmarks.
+
+use anyhow::Result;
+
+use crate::hash::{base_hash, salt_bit, salt_block, tophash};
+
+use super::bloom::Bloom;
+use super::params::{FilterConfig, Variant};
+
+/// Typed SBF over 64-bit words.
+pub struct Sbf {
+    inner: Bloom<u64>,
+}
+
+impl Sbf {
+    /// An SBF with `B = block_bits`, `k` fingerprint bits, `2^log2_m_words`
+    /// 64-bit words.
+    pub fn new(log2_m_words: u32, block_bits: u32, k: u32) -> Result<Self> {
+        let cfg = FilterConfig {
+            variant: Variant::Sbf,
+            log2_m_words,
+            block_bits,
+            k,
+            ..Default::default()
+        };
+        Ok(Sbf { inner: Bloom::new(cfg)? })
+    }
+
+    /// The paper's headline configuration: B = 256, S = 64, k = 16.
+    pub fn headline(log2_m_words: u32) -> Result<Self> {
+        Self::new(log2_m_words, 256, 16)
+    }
+
+    pub fn inner(&self) -> &Bloom<u64> {
+        &self.inner
+    }
+
+    pub fn add(&self, key: u64) {
+        self.inner.add(key)
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.inner.contains(key)
+    }
+
+    pub fn bulk_add(&self, keys: &[u64], threads: usize) {
+        self.inner.bulk_add(keys, threads)
+    }
+
+    pub fn bulk_contains(&self, keys: &[u64], threads: usize) -> Vec<bool> {
+        self.inner.bulk_contains(keys, threads)
+    }
+}
+
+/// Perf-specialized bulk lookup for the headline config (B=256, S=64, k=16):
+/// fully unrolled s = 4 / k_per_word = 4 pattern generation with inlined
+/// salts — the Rust analogue of the paper's template-inlined multipliers
+/// (§4.2 challenge 1). Requires `filter_words.len()` to be a power of two
+/// and ≥ 4.
+pub fn bulk_contains_b256_k16(words: &[u64], keys: &[u64], out: &mut Vec<bool>) {
+    debug_assert!(words.len().is_power_of_two() && words.len() >= 4);
+    let log2_num_blocks = (words.len() / 4).trailing_zeros();
+    let sb = salt_block();
+    // salts inlined into locals: the compiler keeps them in registers
+    let s: [u64; 16] = std::array::from_fn(salt_bit);
+    out.clear();
+    out.reserve(keys.len());
+    for &key in keys {
+        let base = base_hash(key);
+        let bw0 = (tophash(base, sb, log2_num_blocks) * 4) as usize;
+        let mut ok = true;
+        // statically unrolled over the 4 words x 4 bits
+        macro_rules! word_check {
+            ($w:literal) => {{
+                let m = (1u64 << tophash(base, s[$w * 4], 6))
+                    | (1u64 << tophash(base, s[$w * 4 + 1], 6))
+                    | (1u64 << tophash(base, s[$w * 4 + 2], 6))
+                    | (1u64 << tophash(base, s[$w * 4 + 3], 6));
+                ok &= (words[bw0 + $w] & m) == m;
+            }};
+        }
+        word_check!(0);
+        word_check!(1);
+        word_check!(2);
+        word_check!(3);
+        out.push(ok);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::keygen::unique_keys;
+
+    #[test]
+    fn headline_no_false_negatives() {
+        let f = Sbf::headline(12).unwrap();
+        let keys = unique_keys(3000, 1);
+        f.bulk_add(&keys, 2);
+        assert!(f.bulk_contains(&keys, 2).iter().all(|&b| b));
+    }
+
+    #[test]
+    fn specialized_path_matches_engine() {
+        let f = Sbf::headline(12).unwrap();
+        let ins = unique_keys(3000, 2);
+        f.bulk_add(&ins, 1);
+        let mut queries = ins[..1500].to_vec();
+        queries.extend(unique_keys(1500, 3));
+        let want = f.bulk_contains(&queries, 1);
+        let snapshot = f.inner().snapshot();
+        let mut got = Vec::new();
+        bulk_contains_b256_k16(&snapshot, &queries, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn each_word_gets_k_per_word_bits() {
+        let f = Sbf::headline(10).unwrap();
+        f.add(0xABCDEF);
+        let snap = f.inner().snapshot();
+        let set_words: Vec<_> = snap.iter().filter(|&&w| w != 0).collect();
+        // exactly 4 words touched (one block), each with <= 4 bits
+        assert_eq!(set_words.len(), 4);
+        assert!(set_words.iter().all(|w| w.count_ones() <= 4 && w.count_ones() >= 1));
+    }
+}

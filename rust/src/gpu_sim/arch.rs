@@ -1,0 +1,139 @@
+//! GPU architecture descriptions (paper §2.2 + §5.4).
+//!
+//! Only *published or paper-reported* constants live here: SM counts,
+//! clocks, memory technology, L2 capacities, and the random-access GUPS
+//! ceilings the paper measured with the HPC-Challenge RandomAccess
+//! microbenchmark ("speed-of-light" bounds, §5.4). Everything else the
+//! model needs is derived by scaling from the B200 calibration.
+
+/// One GPU architecture.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuArch {
+    pub name: &'static str,
+    /// Streaming multiprocessor count.
+    pub sm_count: u32,
+    /// Boost clock, GHz.
+    pub clock_ghz: f64,
+    /// Unified L2 capacity, bytes.
+    pub l2_bytes: u64,
+    /// Memory technology (for reporting).
+    pub memory: &'static str,
+    /// Peak DRAM bandwidth, TB/s (for reporting / roofline context).
+    pub peak_bw_tbs: f64,
+    /// §5.4: measured random 64-bit *read* GUPS (giga-updates/s) — the
+    /// DRAM-resident lookup speed-of-light.
+    pub gups_read: f64,
+    /// §5.4: measured random 64-bit *write/atomic* GUPS — the DRAM-resident
+    /// construction speed-of-light.
+    pub gups_write: f64,
+}
+
+impl GpuArch {
+    /// Relative compute capability vs B200 (SM count x clock).
+    pub fn compute_scale(&self) -> f64 {
+        (self.sm_count as f64 * self.clock_ghz) / (B200.sm_count as f64 * B200.clock_ghz)
+    }
+
+    /// Does a filter of `bytes` fit the L2 cache domain (§5.3)?
+    pub fn is_cache_resident(&self, bytes: u64) -> bool {
+        // modest headroom for the streamed key/result buffers; the paper's
+        // 32 MB case is L2-resident on all three platforms (H200: 50 MB L2)
+        bytes * 5 <= self.l2_bytes * 4
+    }
+
+    pub fn by_name(name: &str) -> Option<&'static GpuArch> {
+        match name.to_ascii_lowercase().as_str() {
+            "b200" => Some(&B200),
+            "h200" | "h200sxm" | "h200-sxm" => Some(&H200),
+            "rtx" | "rtxpro6000" | "rtx-pro-6000" | "rtx_pro_6000" => Some(&RTX_PRO_6000),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [&'static GpuArch; 3] {
+        [&B200, &H200, &RTX_PRO_6000]
+    }
+}
+
+/// NVIDIA B200 (Blackwell, HBM3e): the paper's primary platform.
+pub const B200: GpuArch = GpuArch {
+    name: "B200",
+    sm_count: 148,
+    clock_ghz: 1.67,
+    l2_bytes: 126 * 1024 * 1024,
+    memory: "HBM3e",
+    peak_bw_tbs: 8.0,
+    gups_read: 52.9,
+    gups_write: 23.7,
+};
+
+/// NVIDIA H200 SXM (Hopper, HBM3e, fewer stacks).
+pub const H200: GpuArch = GpuArch {
+    name: "H200 SXM",
+    sm_count: 132,
+    clock_ghz: 1.59,
+    l2_bytes: 50 * 1024 * 1024,
+    memory: "HBM3e",
+    peak_bw_tbs: 3.3,
+    gups_read: 40.4,
+    gups_write: 16.2,
+};
+
+/// NVIDIA RTX PRO 6000 Blackwell Server Edition (GDDR7).
+pub const RTX_PRO_6000: GpuArch = GpuArch {
+    name: "RTX PRO 6000",
+    sm_count: 188,
+    clock_ghz: 2.4,
+    l2_bytes: 128 * 1024 * 1024,
+    memory: "GDDR7",
+    peak_bw_tbs: 1.8,
+    gups_read: 16.0,
+    gups_write: 6.5,
+};
+
+/// CUDA memory-system constants (§2.2).
+pub mod mem {
+    /// Minimum DRAM access granularity: one 32-byte sector (256 bits).
+    pub const SECTOR_BYTES: u64 = 32;
+    /// Cache line: four sectors.
+    pub const LINE_BYTES: u64 = 128;
+    /// Warp width.
+    pub const WARP: usize = 32;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_gups_ratios() {
+        // §5.4 ordering: B200 > H200 > RTX for random access
+        assert!(B200.gups_read > H200.gups_read && H200.gups_read > RTX_PRO_6000.gups_read);
+        assert!(B200.gups_write > H200.gups_write && H200.gups_write > RTX_PRO_6000.gups_write);
+    }
+
+    #[test]
+    fn residency_32mb_vs_1gb() {
+        // the paper's two regimes: 32 MB cache-resident, 1 GB DRAM-resident
+        let mb32 = 32 * 1024 * 1024;
+        let gb1 = 1024 * 1024 * 1024;
+        for arch in GpuArch::all() {
+            assert!(arch.is_cache_resident(mb32), "{}", arch.name);
+            assert!(!arch.is_cache_resident(gb1), "{}", arch.name);
+        }
+    }
+
+    #[test]
+    fn rtx_compute_advantage() {
+        // §5.4: RTX PRO 6000 has a 42% SM advantage over H200 and
+        // a newer architecture/higher clock -> clearly more compute
+        assert!(RTX_PRO_6000.compute_scale() > H200.compute_scale() * 1.3);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(GpuArch::by_name("b200").unwrap().name, "B200");
+        assert_eq!(GpuArch::by_name("H200").unwrap().sm_count, 132);
+        assert!(GpuArch::by_name("tpu").is_none());
+    }
+}

@@ -1,0 +1,203 @@
+//! Trace-driven temporal-coalescing simulator (paper §2.2).
+//!
+//! "Accesses from threads on the same SM that target the same cache line or
+//! even sector can be merged into a single L2 request through temporal
+//! coalescing. ... Flushes occur if accesses span too many distinct cache
+//! lines over time."
+//!
+//! This module replays *real* hashed-key access traces as warp step streams
+//! and counts merged sector transactions. It serves two purposes:
+//! (1) validate the analytic transaction counts used by the predictor, and
+//! (2) the coalescing ablation bench (why fully-horizontal add layouts win).
+
+use std::collections::VecDeque;
+
+use crate::filter::params::FilterConfig;
+use crate::hash::pattern::{BlockMask, ProbePlan};
+
+use super::arch::mem;
+
+/// One warp-step: the set of sector addresses issued in lock-step.
+pub type WarpStep = Vec<u64>;
+
+/// Temporal coalescer model: an open-transaction table of recent cache
+/// lines. An access to an open line merges; a new line opens a transaction
+/// (evicting the oldest beyond `capacity` or older than `window` steps).
+pub struct Coalescer {
+    /// How many steps an open line stays mergeable.
+    pub window: u32,
+    /// Maximum simultaneously open lines (MSHR-like budget).
+    pub capacity: usize,
+}
+
+impl Default for Coalescer {
+    fn default() -> Self {
+        // Short window: on a loaded SM, unrelated warps interleave between
+        // consecutive instructions of one warp, flushing the combiner.
+        Coalescer { window: 2, capacity: 16 }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoalesceStats {
+    pub accesses: u64,
+    pub transactions: u64,
+    /// Distinct 32B sectors covered by the transactions (traffic volume).
+    pub sectors: u64,
+}
+
+impl CoalesceStats {
+    /// Accesses merged per transaction (higher = better coalescing).
+    pub fn merge_factor(&self) -> f64 {
+        self.accesses as f64 / self.transactions.max(1) as f64
+    }
+}
+
+impl Coalescer {
+    /// Run the trace; addresses are *sector* indices.
+    pub fn run(&self, steps: &[WarpStep]) -> CoalesceStats {
+        let mut open: VecDeque<(u64, u32)> = VecDeque::new(); // (line, step issued)
+        let mut transactions = 0u64;
+        let mut accesses = 0u64;
+        let mut sectors_seen = std::collections::HashSet::new();
+        for (t, step) in steps.iter().enumerate() {
+            let t = t as u32;
+            // expire stale lines
+            while let Some(&(_, issued)) = open.front() {
+                if t.saturating_sub(issued) > self.window {
+                    open.pop_front();
+                } else {
+                    break;
+                }
+            }
+            for &sector in step {
+                accesses += 1;
+                sectors_seen.insert(sector);
+                let line = sector / (mem::LINE_BYTES / mem::SECTOR_BYTES);
+                if let Some(entry) = open.iter_mut().find(|(l, _)| *l == line) {
+                    entry.1 = t; // refresh
+                } else {
+                    transactions += 1;
+                    open.push_back((line, t));
+                    if open.len() > self.capacity {
+                        open.pop_front();
+                    }
+                }
+            }
+        }
+        CoalesceStats { accesses, transactions, sectors: sectors_seen.len() as u64 }
+    }
+}
+
+/// Build the warp access trace of a bulk **add** for a blocked config under
+/// a (Θ, Φ) layout (§4.1 Fig. 2): the warp holds 32 keys; groups of Θ lanes
+/// process their keys one after another; per key the group updates the
+/// block's words in strides of Θ·Φ — so a fully horizontal layout (Θ = s)
+/// issues all of a block's atomics in a single step.
+pub fn add_trace(cfg: &FilterConfig, theta: u32, phi: u32, keys: &[u64]) -> Vec<WarpStep> {
+    let plan = ProbePlan::new(cfg);
+    let s = cfg.s() as usize;
+    let theta = theta.max(1) as usize;
+    let phi = phi.max(1) as usize;
+    let words_per_sector = (mem::SECTOR_BYTES * 8 / cfg.word_bits as u64) as usize;
+    let mut steps = Vec::new();
+    let mut bm = BlockMask::default();
+    for warp_keys in keys.chunks(mem::WARP) {
+        let groups: Vec<&[u64]> = warp_keys.chunks(theta).collect();
+        // groups iterate over their keys in lock-step; each key takes
+        // ceil(s / (theta*phi)) strided update steps
+        let keys_per_group = groups.iter().map(|g| g.len()).max().unwrap_or(0);
+        let strides = s.div_ceil(theta * phi);
+        for key_slot in 0..keys_per_group {
+            for stride in 0..strides {
+                let mut step: WarpStep = Vec::new();
+                for group in &groups {
+                    let Some(&key) = group.get(key_slot) else { continue };
+                    plan.gen_block_mask(key, &mut bm);
+                    // lanes of the group issue words [stride*theta*phi, ...)
+                    let lo = stride * theta * phi;
+                    let hi = (lo + theta * phi).min(s);
+                    for w in lo..hi {
+                        if bm.masks[w] != 0 {
+                            let word = bm.block_word0 + w as u64;
+                            step.push(word / words_per_sector as u64);
+                        }
+                    }
+                }
+                if !step.is_empty() {
+                    steps.push(step);
+                }
+            }
+        }
+    }
+    steps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::params::Variant;
+    use crate::workload::keygen::unique_keys;
+
+    fn cfg(block_bits: u32) -> FilterConfig {
+        FilterConfig {
+            variant: if block_bits == 64 { Variant::Rbbf } else { Variant::Sbf },
+            block_bits,
+            k: 16,
+            log2_m_words: 20,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn same_sector_merges() {
+        let c = Coalescer::default();
+        let stats = c.run(&[vec![7, 7, 7, 7]]);
+        assert_eq!(stats.transactions, 1);
+        assert_eq!(stats.accesses, 4);
+    }
+
+    #[test]
+    fn distant_sectors_do_not_merge() {
+        let c = Coalescer::default();
+        let stats = c.run(&[vec![0, 1000, 2000, 3000]]);
+        assert_eq!(stats.transactions, 4);
+    }
+
+    #[test]
+    fn window_expiry_flushes() {
+        let c = Coalescer { window: 1, capacity: 16 };
+        // same line revisited after > window steps -> second transaction
+        let steps: Vec<WarpStep> = vec![vec![4], vec![999], vec![888], vec![4]];
+        let stats = c.run(&steps);
+        assert_eq!(stats.transactions, 4);
+    }
+
+    #[test]
+    fn horizontal_add_coalesces_better() {
+        // the §5.2 claim: Θ = s maximizes temporal locality of block atomics
+        let cfg = cfg(1024); // s = 16
+        let keys = unique_keys(512, 3);
+        let coal = Coalescer::default();
+        let horiz = coal.run(&add_trace(&cfg, 16, 1, &keys));
+        let vert = coal.run(&add_trace(&cfg, 1, 1, &keys));
+        assert!(
+            horiz.transactions * 2 < vert.transactions,
+            "horizontal {} vs vertical {}",
+            horiz.transactions,
+            vert.transactions
+        );
+        // traffic volume (distinct sectors) is identical — only merging differs
+        assert_eq!(horiz.sectors, vert.sectors);
+    }
+
+    #[test]
+    fn rbbf_single_word_always_one_transaction_per_key() {
+        let cfg = cfg(64);
+        let keys = unique_keys(320, 4);
+        let stats = Coalescer::default().run(&add_trace(&cfg, 1, 1, &keys));
+        // each key touches one word = one sector; different keys rarely share
+        assert!(stats.transactions <= keys.len() as u64);
+        assert!(stats.transactions > keys.len() as u64 / 2);
+    }
+}

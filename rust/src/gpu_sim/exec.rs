@@ -1,0 +1,229 @@
+//! Per-operation instruction cost model (paper §4.2–§4.3, §5.3).
+//!
+//! Counts issued instructions per filter operation from the kernel
+//! structure. These counts drive the compute-bound arm of the predictor
+//! and the optimization-breakdown figure (Fig. 9), where the deltas between
+//! pattern schemes and cooperation modes are exactly what is being measured.
+
+use crate::filter::params::{FilterConfig, Scheme, Variant};
+
+/// Feature toggles for the optimization-breakdown ablations (Fig. 9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Features {
+    /// §4.2 branchless multiplicative hashing (off = iterative re-hash).
+    pub mult_hash: bool,
+    /// §4.1 horizontal vectorization (off forces Θ = 1).
+    pub horizontal_vec: bool,
+    /// §4.3 adaptive thread cooperation (off = every lane redundantly
+    /// recomputes the group-uniform hash/block index).
+    pub adaptive_coop: bool,
+}
+
+impl Default for Features {
+    fn default() -> Self {
+        Features { mult_hash: true, horizontal_vec: true, adaptive_coop: true }
+    }
+}
+
+impl Features {
+    pub fn all_off() -> Self {
+        Features { mult_hash: false, horizontal_vec: false, adaptive_coop: false }
+    }
+}
+
+/// Instruction counts for one operation by one cooperative group.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InstCounts {
+    /// Base-hash evaluation (xxHash64 on the key).
+    pub hash: f64,
+    /// Pattern generation (multiplies/shifts or sequential re-hashes).
+    pub pattern: f64,
+    /// Memory instructions (wide loads / atomics issued, not latency).
+    pub memory: f64,
+    /// Word compare/OR and reduction ALU work.
+    pub alu: f64,
+    /// Group cooperation overhead (shuffles, votes, syncs) — 0 when Θ = 1.
+    pub coop: f64,
+    /// Redundant group-uniform work (non-adaptive cooperation).
+    pub redundant: f64,
+}
+
+impl InstCounts {
+    pub fn total(&self) -> f64 {
+        self.hash + self.pattern + self.memory + self.alu + self.coop + self.redundant
+    }
+}
+
+/// µop cost of one xxHash64 evaluation of a u64 lane (mul/rot/xor chain).
+pub const XXH64_UOPS: f64 = 12.0;
+/// µops per multiplicative fingerprint bit (mul + shift + or).
+pub const MULT_BIT_UOPS: f64 = 3.0;
+/// Effective µops per step of a *cheap incremental* re-hash (mix the
+/// previous hash with a constant — the "unoptimized SBF" baseline of
+/// Fig. 9, which still avoids k full hash evaluations).
+pub const ITER_HASH_UOPS: f64 = 5.0;
+/// µops for block-index derivation (mul + shift).
+pub const BLOCK_IDX_UOPS: f64 = 2.0;
+/// Shuffle-broadcast + participation overhead per cooperating lane step.
+pub const SHUFFLE_UOPS: f64 = 6.0;
+/// Ballot/all-vote for the lookup result when Θ > 1.
+pub const VOTE_UOPS: f64 = 8.0;
+
+/// Instruction counts for one `contains` or `add` of a single key,
+/// aggregated over the Θ cooperating lanes (i.e. per *operation*, not per
+/// lane — the predictor divides by issue bandwidth).
+pub fn instruction_counts(
+    cfg: &FilterConfig,
+    op_is_add: bool,
+    theta: u32,
+    phi: u32,
+    feats: Features,
+) -> InstCounts {
+    let theta = if feats.horizontal_vec { theta } else { 1 };
+    let k = cfg.k as f64;
+    let s = cfg.s().max(1) as f64;
+    let p = cfg.words_per_key() as f64;
+    let mut c = InstCounts::default();
+
+    // --- base hash: once per key with adaptive cooperation (§4.3), else
+    // redundantly evaluated by each of the Θ lanes.
+    c.hash = XXH64_UOPS;
+    let uniform_work = XXH64_UOPS + BLOCK_IDX_UOPS;
+    if !feats.adaptive_coop && theta > 1 {
+        c.redundant = uniform_work * (theta - 1) as f64;
+    }
+
+    // --- pattern generation
+    let scheme = if feats.mult_hash { cfg.scheme } else { Scheme::Iter };
+    match scheme {
+        Scheme::Mult => {
+            c.pattern = BLOCK_IDX_UOPS + k * MULT_BIT_UOPS;
+            if cfg.variant == Variant::Csbf {
+                // one extra salted multiply per group-sector selection
+                c.pattern += cfg.z as f64 * MULT_BIT_UOPS;
+            }
+        }
+        Scheme::Iter => {
+            if !feats.adaptive_coop && theta > 1 {
+                // WarpCore mode: reproducing bit i requires the whole chain
+                // of *full* hash evaluations up to i, and the rigid Θ = s
+                // mapping makes every lane evaluate it redundantly (§3:
+                // "rigid thread-cooperation scheme ... suboptimal resource
+                // utilization").
+                c.pattern = BLOCK_IDX_UOPS + k * (XXH64_UOPS + 1.0);
+                c.redundant += c.pattern * (theta - 1) as f64;
+            } else {
+                // single-lane incremental re-hash (Fig. 9's unoptimized
+                // baseline): one cheap mix per additional bit
+                c.pattern = BLOCK_IDX_UOPS + k * (ITER_HASH_UOPS + 1.0);
+            }
+        }
+    }
+
+    // --- memory instructions + ALU
+    if op_is_add {
+        // one atomic OR per touched word (atomics cannot be vectorized,
+        // §4.1); plus mask staging ALU
+        c.memory = p;
+        c.alu = p;
+    } else {
+        // Φ-wide loads: the group issues s/Φ load instructions for blocked
+        // variants that read the whole block, P loads for probe-wise ones
+        let loads = match cfg.variant {
+            Variant::Sbf | Variant::Rbbf | Variant::Bbf => (s / phi as f64).max(1.0),
+            Variant::Csbf => p, // z scattered words, no contiguity to widen
+            Variant::Cbf => p,
+        };
+        c.memory = loads;
+        // compare+and per probe word, plus the structured reduction
+        c.alu = p * 2.0 + (p / (theta as f64 * phi as f64)).max(1.0);
+    }
+
+    // --- cooperation overhead (§4.3): broadcast each key's hash to the
+    // group, one shuffle step per key processed by the group, plus the
+    // result vote for lookups
+    if theta > 1 {
+        c.coop = SHUFFLE_UOPS * theta as f64;
+        if !op_is_add {
+            c.coop += VOTE_UOPS;
+        }
+    }
+
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sbf(block_bits: u32) -> FilterConfig {
+        FilterConfig { block_bits, k: 16, log2_m_words: 20, ..Default::default() }
+    }
+
+    #[test]
+    fn mult_hash_cheaper_than_iter() {
+        let cfg = sbf(256);
+        let mult = instruction_counts(&cfg, false, 1, 4, Features::default());
+        let iter = instruction_counts(
+            &cfg,
+            false,
+            1,
+            4,
+            Features { mult_hash: false, ..Features::default() },
+        );
+        assert!(iter.pattern > mult.pattern * 1.5, "{} vs {}", iter.pattern, mult.pattern);
+    }
+
+    #[test]
+    fn adaptive_coop_removes_redundant_work() {
+        let cfg = sbf(1024);
+        let on = instruction_counts(&cfg, false, 4, 4, Features::default());
+        let off = instruction_counts(
+            &cfg,
+            false,
+            4,
+            4,
+            Features { adaptive_coop: false, ..Features::default() },
+        );
+        assert_eq!(on.redundant, 0.0);
+        assert!(off.redundant > 0.0);
+        assert!(off.total() > on.total());
+    }
+
+    #[test]
+    fn wider_phi_fewer_loads() {
+        let cfg = sbf(1024); // s = 16
+        let narrow = instruction_counts(&cfg, false, 1, 1, Features::default());
+        let wide = instruction_counts(&cfg, false, 1, 8, Features::default());
+        assert!(narrow.memory > wide.memory * 4.0);
+    }
+
+    #[test]
+    fn theta_adds_coop_overhead() {
+        let cfg = sbf(512);
+        let solo = instruction_counts(&cfg, false, 1, 8, Features::default());
+        let group = instruction_counts(&cfg, false, 8, 1, Features::default());
+        assert_eq!(solo.coop, 0.0);
+        assert!(group.coop > 0.0);
+    }
+
+    #[test]
+    fn add_issues_one_atomic_per_word() {
+        let cfg = sbf(256); // s = 4
+        let c = instruction_counts(&cfg, true, 4, 1, Features::default());
+        assert_eq!(c.memory, 4.0);
+    }
+
+    #[test]
+    fn horizontal_vec_off_forces_theta1() {
+        let cfg = sbf(512);
+        let c = instruction_counts(
+            &cfg,
+            true,
+            8,
+            1,
+            Features { horizontal_vec: false, ..Features::default() },
+        );
+        assert_eq!(c.coop, 0.0);
+    }
+}

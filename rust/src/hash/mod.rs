@@ -1,0 +1,220 @@
+//! Fingerprint pipeline: xxHash64 base hash + branchless multiplicative salts.
+//!
+//! Bit-for-bit mirror of `python/compile/kernels/hashing.py` (paper §4.2).
+//! One strong base hash per key; every derived quantity (block index, group
+//! sector, fingerprint bit) is the **top bits** of `base * salt` for a
+//! distinct odd 64-bit salt — Dietzfelbinger-style universal hashing, fully
+//! branchless, one multiply per derived value.
+//!
+//! The salt schedule is a splitmix64 stream seeded with the fractional bits
+//! of π, forced odd. `artifacts/golden.json` pins Rust and Python to the
+//! same bits; `rust/tests/golden_cross_language.rs` enforces it.
+
+pub mod pattern;
+
+/// xxHash64 primes (Collet).
+pub const XXH_PRIME64_1: u64 = 0x9E3779B185EBCA87;
+pub const XXH_PRIME64_2: u64 = 0xC2B2AE3D27D4EB4F;
+pub const XXH_PRIME64_3: u64 = 0x165667B19E3779F9;
+pub const XXH_PRIME64_4: u64 = 0x85EBCA77C2B2AE63;
+pub const XXH_PRIME64_5: u64 = 0x27D4EB2F165667C5;
+
+/// Base-hash seed, fixed across the whole stack (Python + Rust + artifacts).
+pub const SEED_BASE: u64 = 0xB10000F117E55EED;
+
+/// Seed of the salt-schedule splitmix64 stream (fractional bits of π).
+pub const SALT_STREAM_SEED: u64 = 0x243F6A8885A308D3;
+
+/// Number of salts in the schedule.
+pub const NUM_SALTS: usize = 96;
+
+/// One step of splitmix64; advances `state` and returns the output.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// The salt schedule, computed once at startup.
+///
+/// Roles (identical to Python):
+/// * `SALTS[0]`        — block selection
+/// * `SALTS[1 + g]`    — CSBF group-`g` sector selection (`g < 16`)
+/// * `SALTS[17 + i]`   — fingerprint bit `i` (`i < 79`)
+pub fn salts() -> &'static [u64; NUM_SALTS] {
+    use std::sync::OnceLock;
+    static SALTS: OnceLock<[u64; NUM_SALTS]> = OnceLock::new();
+    SALTS.get_or_init(|| {
+        let mut out = [0u64; NUM_SALTS];
+        let mut state = SALT_STREAM_SEED;
+        for slot in out.iter_mut() {
+            *slot = splitmix64(&mut state) | 1;
+        }
+        out
+    })
+}
+
+/// Salt used for block selection.
+#[inline]
+pub fn salt_block() -> u64 {
+    salts()[0]
+}
+
+/// Salt used for CSBF group-`g` sector selection.
+#[inline]
+pub fn salt_group(g: usize) -> u64 {
+    debug_assert!(g < 16);
+    salts()[1 + g]
+}
+
+/// Salt used for fingerprint bit `i`.
+#[inline]
+pub fn salt_bit(i: usize) -> u64 {
+    debug_assert!(i < NUM_SALTS - 17);
+    salts()[17 + i]
+}
+
+/// xxHash64 of a single 8-byte little-endian lane (the u64 key).
+///
+/// The exact XXH64 algorithm specialized to an 8-byte input: no stripe
+/// accumulators, one mid-loop fold, then the avalanche. Matches
+/// `xxh64(key.to_le_bytes(), seed)` of the canonical implementation.
+#[inline]
+pub fn xxh64_u64(key: u64, seed: u64) -> u64 {
+    let mut h = seed
+        .wrapping_add(XXH_PRIME64_5)
+        .wrapping_add(8);
+    let mut k1 = key.wrapping_mul(XXH_PRIME64_2);
+    k1 = k1.rotate_left(31);
+    k1 = k1.wrapping_mul(XXH_PRIME64_1);
+    h ^= k1;
+    h = h.rotate_left(27).wrapping_mul(XXH_PRIME64_1).wrapping_add(XXH_PRIME64_4);
+    // avalanche
+    h ^= h >> 33;
+    h = h.wrapping_mul(XXH_PRIME64_2);
+    h ^= h >> 29;
+    h = h.wrapping_mul(XXH_PRIME64_3);
+    h ^= h >> 32;
+    h
+}
+
+/// Base hash with the stack-wide seed.
+#[inline]
+pub fn base_hash(key: u64) -> u64 {
+    xxh64_u64(key, SEED_BASE)
+}
+
+/// Universal multiplicative hash: top `nbits` of `base * salt` (mod 2^64).
+///
+/// `nbits == 0` yields 0 (e.g. block index when the filter is one block).
+#[inline]
+pub fn tophash(base: u64, salt: u64, nbits: u32) -> u64 {
+    if nbits == 0 {
+        0
+    } else {
+        base.wrapping_mul(salt) >> (64 - nbits)
+    }
+}
+
+/// WarpCore-style iterative re-hash chain (paper §4.2): `h_0 = base`,
+/// `h_{i+1} = xxh64(h_i ^ (i+1))`; position `i` is the top `log2_range`
+/// bits of `h_i`. Calls `emit(i, pos)` for each of `length` positions.
+#[inline]
+pub fn iter_chain(base: u64, length: usize, log2_range: u32, mut emit: impl FnMut(usize, u64)) {
+    let mut h = base;
+    for i in 0..length {
+        emit(i, h >> (64 - log2_range));
+        if i + 1 < length {
+            h = xxh64_u64(h ^ (i as u64 + 1), SEED_BASE);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut s1 = SALT_STREAM_SEED;
+        let mut s2 = SALT_STREAM_SEED;
+        for _ in 0..100 {
+            assert_eq!(splitmix64(&mut s1), splitmix64(&mut s2));
+        }
+    }
+
+    #[test]
+    fn salts_are_odd_and_distinct() {
+        let s = salts();
+        assert!(s.iter().all(|x| x & 1 == 1));
+        let mut sorted: Vec<u64> = s.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), NUM_SALTS);
+    }
+
+    #[test]
+    fn salt_roles_disjoint() {
+        let mut roles = vec![salt_block()];
+        roles.extend((0..16).map(salt_group));
+        roles.extend((0..62).map(salt_bit));
+        let n = roles.len();
+        roles.sort_unstable();
+        roles.dedup();
+        assert_eq!(roles.len(), n);
+    }
+
+    #[test]
+    fn xxh64_avalanche() {
+        // flipping one input bit flips ~half the output bits
+        let keys: Vec<u64> = (0..64u64).map(|i| i.wrapping_mul(0x9E3779B97F4A7C15)).collect();
+        let mut total = 0u32;
+        let mut count = 0u32;
+        for &k in &keys {
+            let h0 = base_hash(k);
+            for bit in 0..64 {
+                total += (h0 ^ base_hash(k ^ (1 << bit))).count_ones();
+                count += 1;
+            }
+        }
+        let avg = total as f64 / count as f64;
+        assert!(avg > 24.0 && avg < 40.0, "avalanche avg {avg}");
+    }
+
+    #[test]
+    fn tophash_range_and_zero() {
+        for nbits in [1u32, 3, 6, 20, 63] {
+            for key in 0..256u64 {
+                let t = tophash(base_hash(key), salt_bit(0), nbits);
+                assert!(t < (1u64 << nbits));
+            }
+        }
+        assert_eq!(tophash(0xdeadbeef, salt_bit(1), 0), 0);
+    }
+
+    #[test]
+    fn tophash_uniformity_chi2() {
+        let buckets = 64usize;
+        let mut counts = vec![0u64; buckets];
+        let n = 1usize << 14;
+        for key in 0..n as u64 {
+            counts[tophash(base_hash(key), salt_bit(3), 6) as usize] += 1;
+        }
+        let expected = n as f64 / buckets as f64;
+        let chi2: f64 = counts.iter().map(|&c| (c as f64 - expected).powi(2) / expected).sum();
+        assert!(chi2 < 120.0, "chi2 = {chi2}");
+    }
+
+    #[test]
+    fn iter_chain_advances() {
+        let base = base_hash(1234);
+        let mut pos = Vec::new();
+        iter_chain(base, 8, 8, |_, p| pos.push(p));
+        assert_eq!(pos.len(), 8);
+        assert!(pos.iter().all(|&p| p < 256));
+        assert!(pos.windows(2).any(|w| w[0] != w[1]));
+    }
+}

@@ -1,0 +1,334 @@
+//! Key-pattern generation for every filter variant (paper §2.1 + §4.2).
+//!
+//! Mirror of `python/compile/kernels/patterns.py`: for one key this produces
+//! `P = cfg.words_per_key()` probes — (word index, word-sized bit mask)
+//! pairs. Insertion ORs each mask into its word; lookup tests that every
+//! mask is fully present.
+//!
+//! [`ProbePlan`] precomputes all per-config constants (log2s, salt slices)
+//! once, so the per-key path is pure shift/multiply arithmetic — the Rust
+//! analogue of the paper's compile-time salt inlining (§4.2 challenge 1).
+
+use crate::filter::params::{FilterConfig, Scheme, Variant};
+
+use super::{base_hash, iter_chain, salt_bit, salt_block, salt_group, tophash};
+
+/// Upper bound on probes per key (k ≤ 62, s ≤ 32).
+pub const MAX_PROBES: usize = 64;
+
+/// Upper bound on words per block (B = 1024, S = 32).
+pub const MAX_S: usize = 32;
+
+/// Reusable probe buffer; `words[i]` is a global word index.
+#[derive(Debug, Clone)]
+pub struct ProbeSet {
+    pub len: usize,
+    pub words: [u64; MAX_PROBES],
+    pub masks: [u64; MAX_PROBES],
+}
+
+impl Default for ProbeSet {
+    fn default() -> Self {
+        ProbeSet { len: 0, words: [0; MAX_PROBES], masks: [0; MAX_PROBES] }
+    }
+}
+
+impl ProbeSet {
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        (0..self.len).map(move |i| (self.words[i], self.masks[i]))
+    }
+}
+
+/// Dense per-block form used by insertion: the key's whole block update as
+/// `s` word masks starting at `block_word0` (zero masks allowed for
+/// variants that leave words untouched, e.g. CSBF non-chosen sectors).
+#[derive(Debug, Clone)]
+pub struct BlockMask {
+    pub block_word0: u64,
+    pub s: usize,
+    pub masks: [u64; MAX_S],
+}
+
+impl Default for BlockMask {
+    fn default() -> Self {
+        BlockMask { block_word0: 0, s: 0, masks: [0; MAX_S] }
+    }
+}
+
+/// Precomputed per-config pattern-generation plan.
+#[derive(Debug, Clone)]
+pub struct ProbePlan {
+    pub cfg: FilterConfig,
+    variant: Variant,
+    scheme: Scheme,
+    s: u32,
+    k: u32,
+    z: u32,
+    k_per_word: u32,
+    k_per_group: u32,
+    sectors_per_group: u32,
+    log2_spg: u32,
+    log2_word_bits: u32,
+    log2_block_bits: u32,
+    log2_m_bits: u32,
+    log2_num_blocks: u32,
+    word_mask: u64,
+    salt_block: u64,
+    bit_salts: [u64; MAX_PROBES],
+    group_salts: [u64; 16],
+}
+
+impl ProbePlan {
+    pub fn new(cfg: &FilterConfig) -> Self {
+        let mut bit_salts = [0u64; MAX_PROBES];
+        for (i, slot) in bit_salts.iter_mut().enumerate().take(cfg.k as usize) {
+            *slot = salt_bit(i);
+        }
+        let mut group_salts = [0u64; 16];
+        for (g, slot) in group_salts.iter_mut().enumerate() {
+            *slot = salt_group(g);
+        }
+        let s = cfg.s();
+        ProbePlan {
+            cfg: *cfg,
+            variant: cfg.variant,
+            scheme: cfg.scheme,
+            s,
+            k: cfg.k,
+            z: cfg.z,
+            k_per_word: if cfg.is_blocked() { cfg.k / s.max(1) } else { 0 },
+            k_per_group: if cfg.variant == Variant::Csbf { cfg.k_per_group() } else { 0 },
+            sectors_per_group: if cfg.variant == Variant::Csbf { cfg.sectors_per_group() } else { 0 },
+            log2_spg: if cfg.variant == Variant::Csbf {
+                cfg.sectors_per_group().trailing_zeros()
+            } else {
+                0
+            },
+            log2_word_bits: cfg.log2_word_bits(),
+            log2_block_bits: if cfg.is_blocked() { cfg.log2_block_bits() } else { 0 },
+            log2_m_bits: cfg.log2_m_bits(),
+            log2_num_blocks: if cfg.is_blocked() { cfg.log2_num_blocks() } else { 0 },
+            word_mask: (cfg.word_bits - 1) as u64,
+            salt_block: salt_block(),
+            bit_salts,
+            group_salts,
+        }
+    }
+
+    /// Block index for a base hash (blocked variants).
+    #[inline]
+    pub fn block_index(&self, base: u64) -> u64 {
+        tophash(base, self.salt_block, self.log2_num_blocks)
+    }
+
+    /// Generate the probe set for `key` into `out`.
+    pub fn gen_probes(&self, key: u64, out: &mut ProbeSet) {
+        let base = base_hash(key);
+        self.gen_probes_from_base(base, out);
+    }
+
+    /// Same, starting from a precomputed base hash (the adaptive-cooperation
+    /// split of §4.3: hash once per key, reuse across cooperating lanes).
+    pub fn gen_probes_from_base(&self, base: u64, out: &mut ProbeSet) {
+        match self.variant {
+            Variant::Cbf => {
+                out.len = self.k as usize;
+                for i in 0..self.k as usize {
+                    let pos = tophash(base, self.bit_salts[i], self.log2_m_bits);
+                    out.words[i] = pos >> self.log2_word_bits;
+                    out.masks[i] = 1u64 << (pos & self.word_mask);
+                }
+            }
+            Variant::Sbf | Variant::Rbbf => {
+                let bw0 = self.block_index(base) * self.s as u64;
+                let kpw = self.k_per_word as usize;
+                out.len = self.s as usize;
+                for w in 0..self.s as usize {
+                    let mut mask = 0u64;
+                    for j in 0..kpw {
+                        let pos = tophash(base, self.bit_salts[w * kpw + j], self.log2_word_bits);
+                        mask |= 1u64 << pos;
+                    }
+                    out.words[w] = bw0 + w as u64;
+                    out.masks[w] = mask;
+                }
+            }
+            Variant::Bbf => {
+                let bw0 = self.block_index(base) * self.s as u64;
+                out.len = self.k as usize;
+                match self.scheme {
+                    Scheme::Mult => {
+                        for i in 0..self.k as usize {
+                            let pos = tophash(base, self.bit_salts[i], self.log2_block_bits);
+                            out.words[i] = bw0 + (pos >> self.log2_word_bits);
+                            out.masks[i] = 1u64 << (pos & self.word_mask);
+                        }
+                    }
+                    Scheme::Iter => {
+                        let (log2_wb, wm) = (self.log2_word_bits, self.word_mask);
+                        iter_chain(base, self.k as usize, self.log2_block_bits, |i, pos| {
+                            out.words[i] = bw0 + (pos >> log2_wb);
+                            out.masks[i] = 1u64 << (pos & wm);
+                        });
+                    }
+                }
+            }
+            Variant::Csbf => {
+                let bw0 = self.block_index(base) * self.s as u64;
+                let (spg, kpg) = (self.sectors_per_group as u64, self.k_per_group as usize);
+                out.len = self.z as usize;
+                for g in 0..self.z as usize {
+                    let sec = tophash(base, self.group_salts[g], self.log2_spg);
+                    let mut mask = 0u64;
+                    for j in 0..kpg {
+                        let pos = tophash(base, self.bit_salts[g * kpg + j], self.log2_word_bits);
+                        mask |= 1u64 << pos;
+                    }
+                    out.words[g] = bw0 + g as u64 * spg + sec;
+                    out.masks[g] = mask;
+                }
+            }
+        }
+    }
+
+    /// Dense block-mask form for insertion (blocked variants only).
+    pub fn gen_block_mask(&self, key: u64, out: &mut BlockMask) {
+        debug_assert!(self.cfg.is_blocked());
+        let mut probes = ProbeSet::default();
+        self.gen_probes(key, &mut probes);
+        let s = self.s as usize;
+        let bw0 = (probes.words[0] / self.s as u64) * self.s as u64;
+        out.block_word0 = bw0;
+        out.s = s;
+        out.masks[..s].fill(0);
+        for (w, m) in probes.iter() {
+            out.masks[(w - bw0) as usize] |= m;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(variant: Variant, block_bits: u32, k: u32, z: u32, scheme: Scheme) -> ProbePlan {
+        let cfg = FilterConfig {
+            variant,
+            block_bits,
+            k,
+            z,
+            scheme,
+            log2_m_words: 12,
+            ..Default::default()
+        }
+        .validate()
+        .unwrap();
+        ProbePlan::new(&cfg)
+    }
+
+    fn all_plans() -> Vec<ProbePlan> {
+        vec![
+            plan(Variant::Sbf, 256, 16, 1, Scheme::Mult),
+            plan(Variant::Sbf, 1024, 16, 1, Scheme::Mult),
+            plan(Variant::Rbbf, 64, 16, 1, Scheme::Mult),
+            plan(Variant::Bbf, 256, 16, 1, Scheme::Mult),
+            plan(Variant::Bbf, 256, 16, 1, Scheme::Iter),
+            plan(Variant::Csbf, 512, 16, 2, Scheme::Mult),
+            plan(Variant::Csbf, 1024, 16, 4, Scheme::Mult),
+            plan(Variant::Cbf, 256, 16, 1, Scheme::Mult),
+        ]
+    }
+
+    #[test]
+    fn probes_in_range() {
+        for p in all_plans() {
+            let mut probes = ProbeSet::default();
+            for key in 0..2000u64 {
+                p.gen_probes(key.wrapping_mul(0x9E3779B97F4A7C15), &mut probes);
+                assert_eq!(probes.len, p.cfg.words_per_key() as usize);
+                for (w, m) in probes.iter() {
+                    assert!(w < p.cfg.m_words(), "{} out of range for {}", w, p.cfg.name());
+                    assert_ne!(m, 0);
+                    if p.cfg.word_bits == 32 {
+                        assert_eq!(m >> 32, 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_probes_stay_in_block() {
+        for p in all_plans() {
+            if !p.cfg.is_blocked() {
+                continue;
+            }
+            let s = p.cfg.s() as u64;
+            let mut probes = ProbeSet::default();
+            for key in 0..500u64 {
+                p.gen_probes(key, &mut probes);
+                let blk = probes.words[0] / s;
+                for (w, _) in probes.iter() {
+                    assert_eq!(w / s, blk);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn total_bits_at_most_k() {
+        for p in all_plans() {
+            let mut probes = ProbeSet::default();
+            for key in 0..500u64 {
+                p.gen_probes(key, &mut probes);
+                let bits: u32 = probes.iter().map(|(_, m)| m.count_ones()).sum();
+                assert!(bits >= 1 && bits <= p.cfg.k, "{} bits for {}", bits, p.cfg.name());
+            }
+        }
+    }
+
+    #[test]
+    fn block_mask_equals_probes() {
+        for p in all_plans() {
+            if !p.cfg.is_blocked() {
+                continue;
+            }
+            let mut probes = ProbeSet::default();
+            let mut bm = BlockMask::default();
+            for key in 0..500u64 {
+                p.gen_probes(key, &mut probes);
+                p.gen_block_mask(key, &mut bm);
+                let mut dense = [0u64; MAX_S];
+                for (w, m) in probes.iter() {
+                    dense[(w - bm.block_word0) as usize] |= m;
+                }
+                assert_eq!(&dense[..bm.s], &bm.masks[..bm.s]);
+            }
+        }
+    }
+
+    #[test]
+    fn csbf_probe_in_group_range() {
+        let p = plan(Variant::Csbf, 1024, 16, 4, Scheme::Mult);
+        let spg = p.cfg.sectors_per_group() as u64;
+        let s = p.cfg.s() as u64;
+        let mut probes = ProbeSet::default();
+        for key in 0..500u64 {
+            p.gen_probes(key, &mut probes);
+            for (g, (w, _)) in probes.iter().enumerate() {
+                let local = w % s;
+                assert!(local >= g as u64 * spg && local < (g as u64 + 1) * spg);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = plan(Variant::Sbf, 256, 16, 1, Scheme::Mult);
+        let (mut a, mut b) = (ProbeSet::default(), ProbeSet::default());
+        p.gen_probes(42, &mut a);
+        p.gen_probes(42, &mut b);
+        assert_eq!(a.words, b.words);
+        assert_eq!(a.masks, b.masks);
+    }
+}

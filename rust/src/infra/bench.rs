@@ -1,0 +1,201 @@
+//! Measurement harness (criterion is unavailable offline).
+//!
+//! Mirrors the paper's nvbench methodology (§5.1): warmup, repeated
+//! execution until the coefficient of variation falls below a threshold,
+//! then mean/stddev/percentile reporting. Used by `rust/benches/*` (with
+//! `harness = false`) and by the experiment harness.
+
+use std::time::{Duration, Instant};
+
+use crate::analytics::stats::{percentile, Summary};
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: u32,
+    pub min_iters: u32,
+    pub max_iters: u32,
+    /// Convergence: stop when CV of iteration times < this (after min_iters).
+    pub target_cv: f64,
+    /// Hard wall-clock cap per benchmark.
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 200,
+            target_cv: 0.02,
+            max_time: Duration::from_secs(10),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for CI / `cargo bench` smoke runs.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            target_cv: 0.10,
+            max_time: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    /// Optional throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    /// Elements per second based on mean time.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|n| n as f64 / self.mean.as_secs_f64())
+    }
+
+    /// Giga-elements per second (the paper's unit).
+    pub fn gelem_per_sec(&self) -> Option<f64> {
+        self.throughput().map(|t| t / 1e9)
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.gelem_per_sec() {
+            Some(g) if g >= 0.01 => format!("  {g:8.3} GElem/s"),
+            Some(g) => format!("  {:8.3} MElem/s", g * 1e3),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>10.3?} ±{:>9.3?}  (p50 {:.3?}, p95 {:.3?}, n={}){}",
+            self.name, self.mean, self.stddev, self.p50, self.p95, self.iters, tp
+        )
+    }
+}
+
+/// Run one benchmark closure until convergence.
+pub fn run_bench<F: FnMut()>(name: &str, cfg: &BenchConfig, elements: Option<u64>, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let started = Instant::now();
+    let mut summary = Summary::default();
+    let mut samples: Vec<f64> = Vec::new();
+    let mut iters = 0u32;
+    while iters < cfg.max_iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        summary.record(dt);
+        samples.push(dt);
+        iters += 1;
+        if iters >= cfg.min_iters && summary.cv() < cfg.target_cv {
+            break;
+        }
+        if started.elapsed() > cfg.max_time && iters >= 3 {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(summary.mean()),
+        stddev: Duration::from_secs_f64(summary.stddev()),
+        p50: Duration::from_secs_f64(percentile(&samples, 50.0)),
+        p95: Duration::from_secs_f64(percentile(&samples, 95.0)),
+        min: Duration::from_secs_f64(summary.min()),
+        elements,
+    }
+}
+
+/// Group runner for bench binaries: prints a header and each result line.
+pub struct BenchGroup {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl BenchGroup {
+    pub fn new(title: &str) -> Self {
+        // honor `GBF_BENCH_QUICK=1` for fast smoke runs
+        let cfg = if std::env::var("GBF_BENCH_QUICK").is_ok() {
+            BenchConfig::quick()
+        } else {
+            BenchConfig::default()
+        };
+        println!("\n=== {title} ===");
+        BenchGroup { cfg, results: Vec::new() }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, elements: Option<u64>, f: F) -> &BenchResult {
+        let r = run_bench(name, &self.cfg, elements, f);
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from discarding a value (ptr read/write fence).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_stable_workload() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 50,
+            target_cv: 0.5,
+            max_time: Duration::from_secs(1),
+        };
+        let r = run_bench("spin", &cfg, Some(1000), || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let cfg = BenchConfig::quick();
+        let r = run_bench("noop", &cfg, None, || {
+            black_box(0);
+        });
+        assert!(r.min <= r.p50);
+        assert!(r.p50 <= r.p95.max(r.p50));
+    }
+
+    #[test]
+    fn report_contains_throughput() {
+        let cfg = BenchConfig::quick();
+        let r = run_bench("t", &cfg, Some(1_000_000_000), || {
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        assert!(r.report().contains("GElem/s") || r.report().contains("MElem/s"));
+    }
+}

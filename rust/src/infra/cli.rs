@@ -1,0 +1,153 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `program <subcommand> --flag value --switch positional...`,
+//! `--flag=value`, typed accessors with defaults, and usage validation
+//! (unknown-flag detection via a declared flag set).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = iter.next();
+            }
+        }
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if stripped.is_empty() {
+                    out.positional.extend(iter);
+                    break;
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.switches.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().with_context(|| format!("bad value for --{key}: {v:?}")),
+        }
+    }
+
+    pub fn required(&self, key: &str) -> Result<&str> {
+        self.get(key).with_context(|| format!("missing required flag --{key}"))
+    }
+
+    pub fn has_switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    /// Error on flags/switches not in the declared set (catches typos).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys().chain(self.switches.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // NOTE: a flag followed by a bare token consumes it as its value, so
+        // switches must come last or use `--`; this mirrors the docs.
+        let a = parse("bench --exp table1 --arch b200 out.csv --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.get("exp"), Some("table1"));
+        assert_eq!(a.get("arch"), Some("b200"));
+        assert!(a.has_switch("verbose"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("serve --port=8080 --threads=4");
+        assert_eq!(a.get_parse::<u16>("port", 0).unwrap(), 8080);
+        assert_eq!(a.get_parse::<usize>("threads", 1).unwrap(), 4);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse("run --x 1");
+        assert_eq!(a.get_or("y", "fallback"), "fallback");
+        assert!(a.required("z").is_err());
+        assert_eq!(a.get_parse::<u32>("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("cmd --flag value --dry-run");
+        assert_eq!(a.get("flag"), Some("value"));
+        assert!(a.has_switch("dry-run"));
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("cmd --good 1 --bad 2");
+        assert!(a.check_known(&["good"]).is_err());
+        assert!(a.check_known(&["good", "bad"]).is_ok());
+    }
+
+    #[test]
+    fn bad_parse_reports_flag() {
+        let a = parse("cmd --n notanumber");
+        let err = a.get_parse::<u32>("n", 0).unwrap_err().to_string();
+        assert!(err.contains("--n"), "{err}");
+    }
+
+    #[test]
+    fn double_dash_positional() {
+        let a = parse("cmd --flag v -- --not-a-flag pos");
+        assert_eq!(a.positional, vec!["--not-a-flag", "pos"]);
+    }
+}

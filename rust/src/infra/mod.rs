@@ -1,0 +1,18 @@
+//! Offline infrastructure substrates (S13).
+//!
+//! The build environment has no network access and only the `xla` crate's
+//! dependency closure cached, so the usual ecosystem crates (serde_json,
+//! clap, criterion, proptest, tokio, rayon) are unavailable. Per the
+//! reproduction rules the substrates are built from scratch:
+//!
+//! * [`json`]      — minimal JSON parser/writer (artifact manifest, golden vectors)
+//! * [`cli`]       — flag/subcommand argument parser
+//! * [`bench`]     — criterion-style measurement harness (warmup, CV-convergence, percentiles)
+//! * [`threadpool`]— fixed worker pool with a shared injector queue
+//! * [`prop`]      — property-test driver (seeded generators + failure reporting)
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod threadpool;

@@ -1,0 +1,113 @@
+//! Minimal property-test driver (proptest is unavailable offline).
+//!
+//! Seeded generators over a splitmix64 stream + a case runner that reports
+//! the failing seed and case index so failures are reproducible with
+//! `GBF_PROP_SEED=<seed>`. No shrinking — cases are kept small instead.
+
+use crate::hash::splitmix64;
+
+/// Deterministic generator state handed to each property case.
+pub struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { state: seed ^ 0x9E37_79B9_7F4A_7C15 }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        splitmix64(&mut self.state)
+    }
+
+    /// Uniform in [0, bound).
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        self.u64() % bound
+    }
+
+    /// Uniform in [lo, hi].
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u64() & 1 == 1
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        (self.u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// A power of two in [2^lo, 2^hi].
+    pub fn pow2(&mut self, lo: u32, hi: u32) -> u64 {
+        1u64 << self.range(lo as u64, hi as u64)
+    }
+
+    /// Vector of distinct u64 keys.
+    pub fn keys(&mut self, n: usize) -> Vec<u64> {
+        crate::workload::keygen::unique_keys(n, self.u64())
+    }
+}
+
+/// Run `cases` property cases; panics with seed + case index on failure.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: u32, mut property: F) {
+    let seed = std::env::var("GBF_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xD1CE_0000_0000_0001);
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64).wrapping_mul(0x2545F4914F6CDD1D);
+        let mut gen = Gen::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut gen)));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property {name:?} failed at case {case} (rerun with GBF_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_ranges_hold() {
+        check("ranges", 200, |g| {
+            let b = g.range(10, 20);
+            assert!((10..=20).contains(&b));
+            let p = g.pow2(2, 6);
+            assert!(p.is_power_of_two() && (4..=64).contains(&p));
+            let f = g.f64_unit();
+            assert!((0.0..1.0).contains(&f));
+        });
+    }
+
+    #[test]
+    fn keys_distinct() {
+        check("keys-distinct", 20, |g| {
+            let keys = g.keys(500);
+            let set: std::collections::HashSet<_> = keys.iter().collect();
+            assert_eq!(set.len(), keys.len());
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "GBF_PROP_SEED")]
+    fn failure_reports_seed() {
+        check("always-fails", 5, |g| {
+            assert!(g.u64() == 0, "expected failure");
+        });
+    }
+}

@@ -1,0 +1,38 @@
+//! # gbf — GPU-optimized Bloom filters as a Rust + JAX + Pallas stack
+//!
+//! Reproduction of *"Optimizing Bloom Filters for Modern GPU Architectures"*
+//! (CS.DC 2025). Three layers:
+//!
+//! * **L1/L2 (build time)** — `python/compile/`: Pallas kernels + JAX model,
+//!   AOT-lowered to HLO text artifacts (`make artifacts`).
+//! * **L3 (request time, this crate)** — the serving coordinator, the PJRT
+//!   runtime that executes the artifacts, the native CPU filter library
+//!   (the paper's CPU baseline and the correctness oracle), and the GPU
+//!   performance model that regenerates the paper's hardware evaluation.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! | module        | role |
+//! |---------------|------|
+//! | [`hash`]      | xxHash64 + multiplicative salt fingerprint pipeline (S1) |
+//! | [`filter`]    | filter geometry + the five variants (S2–S3) |
+//! | [`gpu_sim`]   | B200/H200/RTX PRO 6000 performance model (S9) |
+//! | [`runtime`]   | PJRT artifact loading & execution (S7) |
+//! | [`coordinator`] | router / dynamic batcher / filter state (S8) |
+//! | [`workload`]  | key generators, k-mer encoder, traces (S11) |
+//! | [`analytics`] | empirical FPR & statistics (S12) |
+//! | [`experiments`] | regenerates every paper table & figure (S10) |
+//! | [`infra`]     | offline substrates: JSON, CLI, thread pool, bench & property-test harnesses (S13) |
+
+pub mod analytics;
+pub mod coordinator;
+pub mod experiments;
+pub mod filter;
+pub mod gpu_sim;
+pub mod hash;
+pub mod infra;
+pub mod runtime;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

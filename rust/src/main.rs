@@ -1,0 +1,249 @@
+//! `gbf` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   info                         platform + artifact inventory
+//!   bench --exp <id>             regenerate a paper table/figure (S10)
+//!   fpr --variant ... --block .. measure FPR for one configuration
+//!   sim --variant ... --arch ..  query the GPU performance model
+//!   gups                         speed-of-light micro-benchmark
+//!   serve --requests N           run the serving coordinator demo
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use gbf::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, NativeBackend, PjrtBackend};
+use gbf::experiments;
+use gbf::filter::params::{space_optimal_n, FilterConfig, Scheme, Variant};
+use gbf::gpu_sim::{model, Features, GpuArch, Op};
+use gbf::infra::cli::Args;
+use gbf::runtime::actor::EngineActor;
+use gbf::runtime::manifest::{default_artifact_dir, Manifest};
+use gbf::workload::keygen::unique_keys;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("fpr") => cmd_fpr(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("gups") => experiments::run("gups", None).map(|_| ()),
+        Some("serve") => cmd_serve(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "gbf — GPU-optimized Bloom filters (Rust + JAX + Pallas reproduction)\n\n\
+         usage: gbf <command> [flags]\n\n\
+         commands:\n  \
+           info                         platform + artifact inventory\n  \
+           bench --exp <id> [--out d]   table1|table2|fig4..fig9|gups|fpr|cpu|calibration|all\n  \
+           fpr  --variant v --block B --k K [--z Z] [--log2-m N]\n  \
+           sim  --variant v --block B [--theta T] [--phi P] [--op o] [--arch a] [--size-mb M]\n  \
+           gups                         random-access speed-of-light\n  \
+           serve --requests N [--backend native|pjrt] [--shards S] [--batch B]"
+    );
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    println!("gbf — reproduction of 'Optimizing Bloom Filters for Modern GPU Architectures'");
+    println!("\nGPU architectures modeled:");
+    for arch in GpuArch::all() {
+        println!(
+            "  {:<14} {:>3} SMs @ {:.2} GHz, L2 {:>4} MB, {} ({} TB/s), GUPS r/w {:.1}/{:.1}",
+            arch.name,
+            arch.sm_count,
+            arch.clock_ghz,
+            arch.l2_bytes / (1024 * 1024),
+            arch.memory,
+            arch.peak_bw_tbs,
+            arch.gups_read,
+            arch.gups_write
+        );
+    }
+    let dir = default_artifact_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("\nAOT artifacts in {dir:?}: {}", m.artifacts.len());
+            for cfg in m.configs() {
+                let batches = m.batch_sizes(&cfg, "contains", "pallas");
+                println!("  {:<28} batches {:?}", cfg.name(), batches);
+            }
+        }
+        Err(e) => println!("\nno artifacts loaded ({e:#}); run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    args.check_known(&["exp", "out"])?;
+    let exp = args.get_or("exp", "all");
+    let out = args.get("out").map(PathBuf::from).or_else(|| Some(PathBuf::from("results")));
+    experiments::run(exp, out.as_deref())?;
+    if let Some(dir) = out {
+        println!("\nCSV written under {dir:?}");
+    }
+    Ok(())
+}
+
+fn parse_config(args: &Args) -> Result<FilterConfig> {
+    let cfg = FilterConfig {
+        variant: Variant::parse(args.get_or("variant", "sbf"))?,
+        block_bits: args.get_parse("block", 256u32)?,
+        word_bits: args.get_parse("word-bits", 64u32)?,
+        k: args.get_parse("k", 16u32)?,
+        z: args.get_parse("z", 1u32)?,
+        scheme: Scheme::parse(args.get_or("scheme", "mult"))?,
+        log2_m_words: args.get_parse("log2-m", 17u32)?,
+        theta: args.get_parse("theta", 1u32)?,
+        phi: args.get_parse("phi", 1u32)?,
+    };
+    cfg.validate()
+}
+
+fn cmd_fpr(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "variant", "block", "word-bits", "k", "z", "scheme", "log2-m", "theta", "phi", "queries",
+    ])?;
+    let cfg = parse_config(args)?;
+    let queries = args.get_parse("queries", 200_000usize)?;
+    let report = gbf::analytics::fpr::measure_fpr_space_optimal(&cfg, queries, 7)?;
+    println!("config            : {}", cfg.name());
+    println!("space-optimal n   : {}", report.n_insert);
+    println!("measured FPR      : {:.3e}  ({} queries)", report.fpr, report.n_query);
+    println!("Eq.(1) classic    : {:.3e}", report.fpr_classic_theory);
+    println!("Poisson blocked   : {:.3e}", report.fpr_blocked_theory);
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "variant", "block", "word-bits", "k", "z", "scheme", "log2-m", "theta", "phi", "op",
+        "arch", "size-mb",
+    ])?;
+    let mut cfg = parse_config(args)?;
+    if let Some(mb) = args.get("size-mb") {
+        let mb: u64 = mb.parse().context("--size-mb")?;
+        let words = mb * 1024 * 1024 / 8;
+        cfg = FilterConfig { log2_m_words: words.trailing_zeros().max(10), ..cfg }.validate()?;
+    }
+    let arch = GpuArch::by_name(args.get_or("arch", "b200")).context("unknown --arch")?;
+    let op = match args.get_or("op", "contains") {
+        "contains" => Op::Contains,
+        "add" => Op::Add,
+        other => bail!("unknown --op {other}"),
+    };
+    let residency = model::residency_of(&cfg, arch);
+    println!(
+        "config {} on {} ({:?}, {} MB filter)",
+        cfg.name(),
+        arch.name,
+        residency,
+        cfg.size_bytes() / (1024 * 1024)
+    );
+    let explicit = args.get("theta").is_some();
+    if explicit {
+        let p = model::predict(&cfg, op, cfg.theta, cfg.phi, residency, arch, Features::default());
+        print_prediction(cfg.theta, cfg.phi, &p);
+    } else {
+        println!("layout sweep ({}):", op.as_str());
+        for theta in model::theta_grid(&cfg) {
+            let phi = model::max_phi(&cfg, theta);
+            let p = model::predict(&cfg, op, theta, phi, residency, arch, Features::default());
+            print_prediction(theta, phi, &p);
+        }
+    }
+    Ok(())
+}
+
+fn print_prediction(theta: u32, phi: u32, p: &model::Prediction) {
+    println!(
+        "  Θ={theta:<2} Φ={phi:<2}  {:>8.2} GElem/s   (mem {:.1}, compute {:.1}; {:?}; {:.2} txn/op, {:.0} inst/op, occ {:.2})",
+        p.gelems_per_sec,
+        p.mem_bound,
+        p.compute_bound,
+        p.stall,
+        p.sector_transactions,
+        p.instructions,
+        p.occupancy
+    );
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.check_known(&["requests", "backend", "shards", "batch", "max-wait-us", "log2-m"])?;
+    let requests = args.get_parse("requests", 100_000usize)?;
+    let backend_kind = args.get_or("backend", "native");
+    let shards = args.get_parse("shards", 4usize)?;
+    let batch = args.get_parse("batch", 4096usize)?;
+    let max_wait_us = args.get_parse("max-wait-us", 200u64)?;
+    let log2_m = args.get_parse("log2-m", 17u32)?;
+
+    let policy = BatchPolicy { max_batch: batch, max_wait: std::time::Duration::from_micros(max_wait_us) };
+    let cc = CoordinatorConfig { num_shards: shards, policy };
+    let cfg = FilterConfig { log2_m_words: log2_m, ..Default::default() };
+
+    // keep the engine actor alive for the whole serve session
+    let _engine_holder;
+    let coordinator = match backend_kind {
+        "native" => Coordinator::new(cc, |_| {
+            Ok(Box::new(NativeBackend::new(cfg, 1)?) as Box<dyn gbf::coordinator::FilterBackend>)
+        })?,
+        "pjrt" => {
+            let manifest = Manifest::load(&default_artifact_dir())?;
+            let actor = EngineActor::spawn_with_manifest(manifest.clone())?;
+            let client = actor.client();
+            _engine_holder = actor;
+            Coordinator::new(cc, move |_| {
+                Ok(Box::new(PjrtBackend::new(client.clone(), &manifest, cfg, "pallas")?)
+                    as Box<dyn gbf::coordinator::FilterBackend>)
+            })?
+        }
+        other => bail!("unknown --backend {other}"),
+    };
+
+    println!(
+        "serving with {} backend, {} shards, batch {} / {}µs, filter {}",
+        coordinator.backend_name(),
+        coordinator.num_shards(),
+        batch,
+        max_wait_us,
+        cfg.name()
+    );
+    let n_add = requests / 2;
+    let keys = unique_keys(n_add, 0x5e12e);
+    let t0 = Instant::now();
+    coordinator.add_blocking(&keys)?;
+    let add_dt = t0.elapsed();
+    let t1 = Instant::now();
+    let hits = coordinator.query_blocking(&keys)?;
+    let query_dt = t1.elapsed();
+    anyhow::ensure!(hits.iter().all(|&h| h), "false negative during serve");
+    println!(
+        "adds   : {n_add} in {add_dt:?} ({:.2} M ops/s)",
+        n_add as f64 / add_dt.as_secs_f64() / 1e6
+    );
+    println!(
+        "queries: {n_add} in {query_dt:?} ({:.2} M ops/s)",
+        n_add as f64 / query_dt.as_secs_f64() / 1e6
+    );
+    println!("{}", coordinator.metrics().report());
+    let n = space_optimal_n(cfg.m_bits(), cfg.k);
+    println!("(filter space-optimal capacity: {n} keys)");
+    Ok(())
+}

@@ -1,0 +1,226 @@
+//! Engine actor: thread-confined PJRT engine with channel-based access.
+//!
+//! The `xla` crate's PJRT client is `!Send`/`!Sync` (internal `Rc`s), so
+//! the engine lives on a dedicated thread for its whole lifetime and the
+//! rest of the system talks to it through an mpsc request channel. Filter
+//! word state also lives *inside* the actor — the analogue of keeping the
+//! filter in GPU device memory instead of round-tripping it per call.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::filter::params::FilterConfig;
+
+use super::executor::{DeviceFilter, PjrtEngine};
+use super::manifest::Manifest;
+
+enum Req {
+    /// Register filter state for a config; replies with a state id.
+    CreateState { cfg: FilterConfig, reply: Sender<Result<u64>> },
+    /// Overwrite a state's words.
+    LoadWords { state: u64, words: Vec<u64>, reply: Sender<Result<()>> },
+    /// Snapshot a state's words.
+    Snapshot { state: u64, reply: Sender<Result<Vec<u64>>> },
+    /// Bulk insert into a state via the named artifact.
+    Add { artifact: String, state: u64, keys: Vec<u64>, n_valid: usize, reply: Sender<Result<()>> },
+    /// Bulk lookup against a state via the named artifact.
+    Contains { artifact: String, state: u64, keys: Vec<u64>, reply: Sender<Result<Vec<u8>>> },
+    /// Stateless lookup against caller-provided words (benchmarks).
+    ContainsWords { artifact: String, words: Vec<u64>, keys: Vec<u64>, reply: Sender<Result<Vec<u8>>> },
+    /// Stateless insert (benchmarks): returns updated words.
+    AddWords {
+        artifact: String,
+        words: Vec<u64>,
+        keys: Vec<u64>,
+        n_valid: usize,
+        reply: Sender<Result<Vec<u64>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send + Sync` handle to the engine actor. The raw mpsc
+/// `Sender` is `!Sync`, so it sits behind a mutex; sends are cheap and the
+/// real work happens on the actor thread.
+pub struct EngineClient {
+    tx: Mutex<Sender<Req>>,
+}
+
+impl Clone for EngineClient {
+    fn clone(&self) -> Self {
+        EngineClient { tx: Mutex::new(self.tx.lock().unwrap().clone()) }
+    }
+}
+
+/// Running actor plus its join handle.
+pub struct EngineActor {
+    client: EngineClient,
+    join: Option<std::thread::JoinHandle<()>>,
+    // keep a cloneable template sender for shutdown
+    shutdown_tx: Mutex<Option<Sender<Req>>>,
+}
+
+impl EngineActor {
+    /// Spawn the actor; it loads + compiles all artifacts on its thread.
+    pub fn spawn(artifact_dir: &Path) -> Result<EngineActor> {
+        let manifest = Manifest::load(artifact_dir)?;
+        Self::spawn_with_manifest(manifest)
+    }
+
+    pub fn spawn_with_manifest(manifest: Manifest) -> Result<EngineActor> {
+        let (tx, rx) = channel::<Req>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("gbf-pjrt-engine".into())
+            .spawn(move || actor_main(manifest, rx, ready_tx))?;
+        ready_rx
+            .recv()
+            .context("engine actor died during startup")?
+            .context("engine startup failed")?;
+        Ok(EngineActor {
+            client: EngineClient { tx: Mutex::new(tx.clone()) },
+            join: Some(join),
+            shutdown_tx: Mutex::new(Some(tx)),
+        })
+    }
+
+    pub fn client(&self) -> EngineClient {
+        self.client.clone()
+    }
+}
+
+impl Drop for EngineActor {
+    fn drop(&mut self) {
+        if let Some(tx) = self.shutdown_tx.lock().unwrap().take() {
+            let _ = tx.send(Req::Shutdown);
+        }
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn actor_main(manifest: Manifest, rx: Receiver<Req>, ready: Sender<Result<()>>) {
+    let engine = match PjrtEngine::load(&manifest) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    // filter states live as device-resident buffers inside the actor
+    let mut states: HashMap<u64, DeviceFilter> = HashMap::new();
+    let mut next_state = 1u64;
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Shutdown => break,
+            Req::CreateState { cfg, reply } => {
+                let r = (|| -> Result<u64> {
+                    let id = next_state;
+                    let zeros = vec![0u64; cfg.m_words() as usize];
+                    states.insert(id, engine.upload_filter(&zeros)?);
+                    next_state += 1;
+                    Ok(id)
+                })();
+                let _ = reply.send(r);
+            }
+            Req::LoadWords { state, words, reply } => {
+                let r = (|| -> Result<()> {
+                    let slot = states.get_mut(&state).ok_or_else(|| anyhow!("unknown state {state}"))?;
+                    if slot.m_words != words.len() {
+                        return Err(anyhow!("word count mismatch"));
+                    }
+                    *slot = engine.upload_filter(&words)?;
+                    Ok(())
+                })();
+                let _ = reply.send(r);
+            }
+            Req::Snapshot { state, reply } => {
+                let r = (|| -> Result<Vec<u64>> {
+                    let slot = states.get(&state).ok_or_else(|| anyhow!("unknown state {state}"))?;
+                    engine.download_filter(slot)
+                })();
+                let _ = reply.send(r);
+            }
+            Req::Add { artifact, state, keys, n_valid, reply } => {
+                let r = (|| -> Result<()> {
+                    let slot = states.get_mut(&state).ok_or_else(|| anyhow!("unknown state {state}"))?;
+                    engine.add(&artifact, &keys, n_valid, slot)
+                })();
+                let _ = reply.send(r);
+            }
+            Req::Contains { artifact, state, keys, reply } => {
+                let r = (|| -> Result<Vec<u8>> {
+                    let slot = states.get(&state).ok_or_else(|| anyhow!("unknown state {state}"))?;
+                    engine.contains(&artifact, slot, &keys)
+                })();
+                let _ = reply.send(r);
+            }
+            Req::ContainsWords { artifact, words, keys, reply } => {
+                let _ = reply.send(engine.contains_words(&artifact, &words, &keys));
+            }
+            Req::AddWords { artifact, words, keys, n_valid, reply } => {
+                let _ = reply.send(engine.add_words(&artifact, &keys, n_valid, &words));
+            }
+        }
+    }
+}
+
+impl EngineClient {
+    fn roundtrip<T>(&self, build: impl FnOnce(Sender<Result<T>>) -> Req) -> Result<T> {
+        let (tx, rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(build(tx))
+            .map_err(|_| anyhow!("engine actor gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine actor dropped reply"))?
+    }
+
+    pub fn create_state(&self, cfg: FilterConfig) -> Result<u64> {
+        self.roundtrip(|reply| Req::CreateState { cfg, reply })
+    }
+
+    pub fn load_words(&self, state: u64, words: Vec<u64>) -> Result<()> {
+        self.roundtrip(|reply| Req::LoadWords { state, words, reply })
+    }
+
+    pub fn snapshot(&self, state: u64) -> Result<Vec<u64>> {
+        self.roundtrip(|reply| Req::Snapshot { state, reply })
+    }
+
+    pub fn add(&self, artifact: &str, state: u64, keys: Vec<u64>, n_valid: usize) -> Result<()> {
+        if n_valid > keys.len() {
+            bail!("n_valid > batch");
+        }
+        let artifact = artifact.to_string();
+        self.roundtrip(move |reply| Req::Add { artifact, state, keys, n_valid, reply })
+    }
+
+    pub fn contains(&self, artifact: &str, state: u64, keys: Vec<u64>) -> Result<Vec<u8>> {
+        let artifact = artifact.to_string();
+        self.roundtrip(move |reply| Req::Contains { artifact, state, keys, reply })
+    }
+
+    pub fn contains_words(&self, artifact: &str, words: Vec<u64>, keys: Vec<u64>) -> Result<Vec<u8>> {
+        let artifact = artifact.to_string();
+        self.roundtrip(move |reply| Req::ContainsWords { artifact, words, keys, reply })
+    }
+
+    pub fn add_words(
+        &self,
+        artifact: &str,
+        words: Vec<u64>,
+        keys: Vec<u64>,
+        n_valid: usize,
+    ) -> Result<Vec<u64>> {
+        let artifact = artifact.to_string();
+        self.roundtrip(move |reply| Req::AddWords { artifact, words, keys, n_valid, reply })
+    }
+}

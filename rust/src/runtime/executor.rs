@@ -1,0 +1,179 @@
+//! PJRT execution engine: compile HLO text once, execute on the hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin). One compiled
+//! `PjRtLoadedExecutable` per artifact. The filter lives as a
+//! **device-resident `PjRtBuffer`**: `add` feeds its output buffer straight
+//! back as the next call's filter input, and `contains` reads it in place —
+//! no host round-trip of the filter words per call (the analogue of keeping
+//! the filter in GPU memory). Artifacts are lowered with
+//! `return_tuple=False`, so ENTRY roots are bare arrays.
+//!
+//! Calling conventions (must match `python/compile/model.py`):
+//!   contains: (filter u64[m], keys u64[n])                 -> hits u8[n]
+//!   add:      (keys u64[n], n_valid i32[1], filter u64[m]) -> filter' u64[m]
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// A compiled artifact.
+struct LoadedArtifact {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A device-resident filter (wrapper so callers never touch raw buffers).
+pub struct DeviceFilter {
+    pub(crate) buffer: xla::PjRtBuffer,
+    pub m_words: usize,
+}
+
+/// The engine: a PJRT CPU client plus all compiled executables.
+///
+/// NOT `Send`/`Sync` (the underlying client uses `Rc`); thread-confine it —
+/// see [`super::actor`] for the channel-based wrapper the coordinator uses.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, LoadedArtifact>,
+}
+
+impl PjrtEngine {
+    /// Create a client and compile every artifact in the manifest.
+    pub fn load(manifest: &Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut engine = PjrtEngine { client, artifacts: HashMap::new() };
+        for spec in &manifest.artifacts {
+            engine.compile_artifact(manifest, spec)?;
+        }
+        Ok(engine)
+    }
+
+    /// Create a client and compile only selected artifacts (faster startup).
+    pub fn load_filtered(
+        manifest: &Manifest,
+        mut keep: impl FnMut(&ArtifactSpec) -> bool,
+    ) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut engine = PjrtEngine { client, artifacts: HashMap::new() };
+        for spec in manifest.artifacts.iter().filter(|s| keep(s)) {
+            engine.compile_artifact(manifest, spec)?;
+        }
+        Ok(engine)
+    }
+
+    fn compile_artifact(&mut self, manifest: &Manifest, spec: &ArtifactSpec) -> Result<()> {
+        let path = manifest.hlo_path(spec);
+        let exe = self.compile_hlo_file(&path)?;
+        self.artifacts.insert(spec.name.clone(), LoadedArtifact { spec: spec.clone(), exe });
+        Ok(())
+    }
+
+    fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let path_str = path.to_str().context("non-utf8 path")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name).map(|a| &a.spec)
+    }
+
+    fn get(&self, name: &str) -> Result<&LoadedArtifact> {
+        self.artifacts.get(name).with_context(|| format!("artifact {name:?} not loaded"))
+    }
+
+    // ---- device-resident filter state ----
+
+    /// Upload filter words to the device.
+    pub fn upload_filter(&self, words: &[u64]) -> Result<DeviceFilter> {
+        let buffer = self
+            .client
+            .buffer_from_host_buffer(words, &[words.len()], None)
+            .context("uploading filter words")?;
+        Ok(DeviceFilter { buffer, m_words: words.len() })
+    }
+
+    /// Download filter words from the device.
+    pub fn download_filter(&self, filter: &DeviceFilter) -> Result<Vec<u64>> {
+        Ok(filter.buffer.to_literal_sync()?.to_vec::<u64>()?)
+    }
+
+    /// Bulk lookup against a device-resident filter. `keys.len()` must
+    /// equal the artifact batch; returns one 0/1 byte per key.
+    pub fn contains(&self, name: &str, filter: &DeviceFilter, keys: &[u64]) -> Result<Vec<u8>> {
+        let art = self.get(name)?;
+        if art.spec.op != "contains" {
+            bail!("artifact {name} is not a contains module");
+        }
+        if keys.len() != art.spec.batch {
+            bail!("batch mismatch: artifact {}, got {}", art.spec.batch, keys.len());
+        }
+        let keys_buf = self.client.buffer_from_host_buffer(keys, &[keys.len()], None)?;
+        let result = art.exe.execute_b(&[&filter.buffer, &keys_buf])?;
+        Ok(result[0][0].to_literal_sync()?.to_vec::<u8>()?)
+    }
+
+    /// Bulk insert into a device-resident filter; the filter buffer is
+    /// replaced by the executable's output buffer (no host round-trip).
+    /// Only the first `n_valid` keys are inserted (the rest is padding).
+    pub fn add(&self, name: &str, keys: &[u64], n_valid: usize, filter: &mut DeviceFilter) -> Result<()> {
+        let art = self.get(name)?;
+        if art.spec.op != "add" {
+            bail!("artifact {name} is not an add module");
+        }
+        if keys.len() != art.spec.batch {
+            bail!("batch mismatch: artifact {}, got {}", art.spec.batch, keys.len());
+        }
+        if n_valid > keys.len() {
+            bail!("n_valid {} > batch {}", n_valid, keys.len());
+        }
+        let keys_buf = self.client.buffer_from_host_buffer(keys, &[keys.len()], None)?;
+        let n_buf = self.client.buffer_from_host_buffer(&[n_valid as i32], &[1], None)?;
+        let mut result = art.exe.execute_b(&[&keys_buf, &n_buf, &filter.buffer])?;
+        filter.buffer = result
+            .pop()
+            .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
+            .context("add produced no output buffer")?;
+        Ok(())
+    }
+
+    // ---- literal-based convenience paths (tests / one-shot callers) ----
+
+    /// One-shot lookup with host-side filter words.
+    pub fn contains_words(&self, name: &str, filter_words: &[u64], keys: &[u64]) -> Result<Vec<u8>> {
+        let filter = self.upload_filter(filter_words)?;
+        self.contains(name, &filter, keys)
+    }
+
+    /// One-shot insert with host-side filter words; returns updated words.
+    pub fn add_words(
+        &self,
+        name: &str,
+        keys: &[u64],
+        n_valid: usize,
+        filter_words: &[u64],
+    ) -> Result<Vec<u64>> {
+        let mut filter = self.upload_filter(filter_words)?;
+        self.add(name, keys, n_valid, &mut filter)?;
+        self.download_filter(&filter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The PJRT round-trip tests live in rust/tests/runtime_integration.rs
+    // (they need `make artifacts` to have run).
+}

@@ -1,0 +1,154 @@
+//! Artifact manifest: what `make artifacts` produced and how to call it.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::filter::params::{FilterConfig, Scheme, Variant};
+use crate::infra::json::{self, Json};
+
+/// One lowered HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// "contains" | "add".
+    pub op: String,
+    /// "pallas" | "jnp" (the L2 ablation twin).
+    pub impl_: String,
+    /// Fixed batch size baked into the module.
+    pub batch: usize,
+    pub config: FilterConfig,
+}
+
+impl ArtifactSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        let config = FilterConfig {
+            variant: Variant::parse(v.expect("variant")?.as_str()?)?,
+            log2_m_words: v.expect("log2_m_words")?.as_u64()? as u32,
+            word_bits: v.expect("word_bits")?.as_u64()? as u32,
+            block_bits: v.expect("block_bits")?.as_u64()? as u32,
+            k: v.expect("k")?.as_u64()? as u32,
+            z: v.expect("z")?.as_u64()? as u32,
+            scheme: Scheme::parse(v.expect("scheme")?.as_str()?)?,
+            theta: v.expect("theta")?.as_u64()? as u32,
+            phi: v.expect("phi")?.as_u64()? as u32,
+        };
+        Ok(ArtifactSpec {
+            name: v.expect("name")?.as_str()?.to_string(),
+            file: v.expect("file")?.as_str()?.to_string(),
+            op: v.expect("op")?.as_str()?.to_string(),
+            impl_: v.expect("impl")?.as_str()?.to_string(),
+            batch: v.expect("batch")?.as_u64()? as usize,
+            config,
+        })
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let doc = json::parse_file(&dir.join("manifest.json"))?;
+        let version = doc.expect("version")?.as_u64()?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let artifacts = doc
+            .expect("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(ArtifactSpec::from_json)
+            .collect::<Result<Vec<_>>>()
+            .context("parsing artifact entries")?;
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Artifacts for one logical filter config & impl, keyed by (op, batch).
+    pub fn for_config<'a>(
+        &'a self,
+        cfg: &FilterConfig,
+        impl_: &str,
+    ) -> impl Iterator<Item = &'a ArtifactSpec> + 'a {
+        let cfg = *cfg;
+        let impl_ = impl_.to_string();
+        self.artifacts.iter().filter(move |a| a.config.same_filter(&cfg) && a.impl_ == impl_)
+    }
+
+    /// Find a specific artifact.
+    pub fn find(&self, cfg: &FilterConfig, op: &str, batch: usize, impl_: &str) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.config.same_filter(cfg) && a.op == op && a.batch == batch && a.impl_ == impl_)
+    }
+
+    /// The batch sizes available for (cfg, op, impl), ascending.
+    pub fn batch_sizes(&self, cfg: &FilterConfig, op: &str, impl_: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.config.same_filter(cfg) && a.op == op && a.impl_ == impl_)
+            .map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Distinct configs present (pallas impl).
+    pub fn configs(&self) -> Vec<FilterConfig> {
+        let mut out: Vec<FilterConfig> = Vec::new();
+        for a in &self.artifacts {
+            if a.impl_ == "pallas" && !out.iter().any(|c: &FilterConfig| c.same_filter(&a.config)) {
+                out.push(a.config);
+            }
+        }
+        out
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+/// Default artifact directory: `$GBF_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("GBF_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_available() -> Option<Manifest> {
+        let dir = default_artifact_dir();
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_if_built() {
+        // `make artifacts` must have run for the full check; skip otherwise
+        let Some(m) = manifest_available() else {
+            eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+            return;
+        };
+        assert!(!m.artifacts.is_empty());
+        for a in &m.artifacts {
+            assert!(m.hlo_path(a).exists(), "{} missing", a.file);
+            assert!(a.op == "contains" || a.op == "add");
+            a.config.validate().unwrap();
+        }
+        // the headline config must be present at two batch sizes
+        let head = FilterConfig::default();
+        let batches = m.batch_sizes(&head, "contains", "pallas");
+        assert_eq!(batches, vec![256, 4096]);
+        assert!(m.find(&head, "add", 4096, "pallas").is_some());
+        assert!(!m.configs().is_empty());
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime (S7): load `artifacts/*.hlo.txt` and execute them.
+//!
+//! The AOT bridge's Rust half. `python/compile/aot.py` lowers each
+//! (config, op, batch) to HLO **text** (the interchange format the bundled
+//! xla_extension 0.5.1 accepts — serialized protos from jax >= 0.5 carry
+//! 64-bit instruction ids it rejects); this module parses the manifest,
+//! compiles each module on the PJRT CPU client once, and exposes typed
+//! `contains` / `add` entry points the coordinator calls on the request
+//! path. Python never runs here.
+
+pub mod actor;
+pub mod executor;
+pub mod manifest;
+
+pub use executor::PjrtEngine;
+pub use manifest::{ArtifactSpec, Manifest};

@@ -1,0 +1,70 @@
+//! Unique-random key generation (paper §5.1: "N unique, random uint64 keys").
+//!
+//! The splitmix64 finalizer is a bijection on u64, so hashing a counter
+//! yields provably distinct keys without a dedup pass — exactly what the
+//! benchmarks need at N = 10^7..10^9 scale.
+
+use crate::hash::splitmix64;
+
+/// `n` distinct pseudo-random u64 keys for a seed (deterministic).
+pub fn unique_keys(n: usize, seed: u64) -> Vec<u64> {
+    let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) ^ 0x1234_5678_9ABC_DEF0;
+    (0..n).map(|_| splitmix64(&mut state)).collect()
+}
+
+/// Two disjoint distinct key sets (insert set, query set) — §5.1's FPR
+/// methodology needs queries guaranteed absent from the filter.
+/// Disjointness comes from tagging the low bit after a bijective mix.
+pub fn disjoint_key_sets(n_insert: usize, n_query: usize, seed: u64) -> (Vec<u64>, Vec<u64>) {
+    let mut s1 = seed.wrapping_mul(0x9E3779B97F4A7C15) ^ 0xAAAA_BBBB_CCCC_DDDD;
+    let mut s2 = seed.wrapping_mul(0xC2B2AE3D27D4EB4F) ^ 0x5555_6666_7777_8888;
+    let ins = (0..n_insert).map(|_| splitmix64(&mut s1) << 1).collect();
+    let qry = (0..n_query).map(|_| (splitmix64(&mut s2) << 1) | 1).collect();
+    (ins, qry)
+}
+
+/// Keys drawn *from* an existing set (true-positive lookups, §5.1:
+/// "pre-populate the filter with these keys, ensuring that all lookups
+/// yield true positive results").
+pub fn resample(keys: &[u64], n: usize, seed: u64) -> Vec<u64> {
+    let mut state = seed ^ 0xFEED_FACE_CAFE_BEEF;
+    (0..n).map(|_| keys[(splitmix64(&mut state) % keys.len() as u64) as usize]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn keys_are_unique() {
+        let keys = unique_keys(100_000, 42);
+        let set: HashSet<u64> = keys.iter().copied().collect();
+        assert_eq!(set.len(), keys.len());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(unique_keys(1000, 7), unique_keys(1000, 7));
+        assert_ne!(unique_keys(1000, 7), unique_keys(1000, 8));
+    }
+
+    #[test]
+    fn disjoint_sets_are_disjoint() {
+        let (ins, qry) = disjoint_key_sets(50_000, 50_000, 3);
+        let set: HashSet<u64> = ins.iter().copied().collect();
+        assert_eq!(set.len(), ins.len());
+        assert!(!qry.iter().any(|k| set.contains(k)));
+        let qset: HashSet<u64> = qry.iter().copied().collect();
+        assert_eq!(qset.len(), qry.len());
+    }
+
+    #[test]
+    fn resample_draws_from_set() {
+        let keys = unique_keys(1000, 1);
+        let set: HashSet<u64> = keys.iter().copied().collect();
+        for k in resample(&keys, 5000, 2) {
+            assert!(set.contains(&k));
+        }
+    }
+}

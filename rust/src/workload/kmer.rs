@@ -1,0 +1,166 @@
+//! Genomics workload: DNA k-mer extraction and 2-bit encoding.
+//!
+//! Bloom filters are a staple of sequence analysis (paper §1 cites k-mer
+//! counting, read classification, contamination screening). This module
+//! generates synthetic reads and encodes k-mers (k ≤ 32) into the u64 key
+//! space of the filter — the `kmer_screen` example builds on it.
+
+use crate::hash::splitmix64;
+
+/// 2-bit encode one base (A=0, C=1, G=2, T=3).
+#[inline]
+pub fn encode_base(b: u8) -> Option<u64> {
+    match b {
+        b'A' | b'a' => Some(0),
+        b'C' | b'c' => Some(1),
+        b'G' | b'g' => Some(2),
+        b'T' | b't' => Some(3),
+        _ => None,
+    }
+}
+
+/// Decode a 2-bit base.
+pub fn decode_base(v: u64) -> u8 {
+    match v & 3 {
+        0 => b'A',
+        1 => b'C',
+        2 => b'G',
+        _ => b'T',
+    }
+}
+
+/// Encode a k-mer (k ≤ 32) into a u64; returns `None` on ambiguous bases.
+pub fn encode_kmer(seq: &[u8]) -> Option<u64> {
+    assert!(seq.len() <= 32);
+    let mut v = 0u64;
+    for &b in seq {
+        v = (v << 2) | encode_base(b)?;
+    }
+    Some(v)
+}
+
+/// Reverse complement of a 2-bit-encoded k-mer.
+pub fn revcomp(kmer: u64, k: usize) -> u64 {
+    let mut out = 0u64;
+    let mut x = kmer;
+    for _ in 0..k {
+        out = (out << 2) | (3 - (x & 3));
+        x >>= 2;
+    }
+    out
+}
+
+/// Canonical form: min(kmer, revcomp) — strand-independent key.
+pub fn canonical(kmer: u64, k: usize) -> u64 {
+    kmer.min(revcomp(kmer, k))
+}
+
+/// Rolling k-mer extraction over a sequence; emits canonical encodings.
+pub fn extract_kmers(seq: &[u8], k: usize, out: &mut Vec<u64>) {
+    assert!(k <= 32 && k >= 1);
+    let mask = if k == 32 { u64::MAX } else { (1u64 << (2 * k)) - 1 };
+    let mut v = 0u64;
+    let mut valid = 0usize;
+    for &b in seq {
+        match encode_base(b) {
+            Some(code) => {
+                v = ((v << 2) | code) & mask;
+                valid += 1;
+                if valid >= k {
+                    out.push(canonical(v, k));
+                }
+            }
+            None => valid = 0, // ambiguous base breaks the window
+        }
+    }
+}
+
+/// Generate a random DNA sequence of length `len`.
+pub fn random_sequence(len: usize, seed: u64) -> Vec<u8> {
+    let mut state = seed ^ 0x6EE5_0D4A_5EED_0001;
+    (0..len).map(|_| decode_base(splitmix64(&mut state))).collect()
+}
+
+/// Synthetic reads: substrings of a reference with point mutations.
+pub fn mutate_reads(
+    reference: &[u8],
+    n_reads: usize,
+    read_len: usize,
+    error_rate: f64,
+    seed: u64,
+) -> Vec<Vec<u8>> {
+    let mut state = seed ^ 0xBAD5_EED5_0000_0001;
+    (0..n_reads)
+        .map(|_| {
+            let start = (splitmix64(&mut state) % (reference.len() - read_len) as u64) as usize;
+            reference[start..start + read_len]
+                .iter()
+                .map(|&b| {
+                    let roll = splitmix64(&mut state) as f64 / u64::MAX as f64;
+                    if roll < error_rate {
+                        decode_base(splitmix64(&mut state))
+                    } else {
+                        b
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let kmer = encode_kmer(b"ACGTACGTACGT").unwrap();
+        let mut decoded = Vec::new();
+        for i in (0..12).rev() {
+            decoded.push(decode_base(kmer >> (2 * i)));
+        }
+        assert_eq!(&decoded, b"ACGTACGTACGT");
+    }
+
+    #[test]
+    fn ambiguous_base_rejected() {
+        assert!(encode_kmer(b"ACGN").is_none());
+    }
+
+    #[test]
+    fn revcomp_is_involution() {
+        let kmer = encode_kmer(b"GATTACAGATTACA").unwrap();
+        assert_eq!(revcomp(revcomp(kmer, 14), 14), kmer);
+    }
+
+    #[test]
+    fn canonical_is_strand_independent() {
+        let fwd = encode_kmer(b"ACGTTGCA").unwrap();
+        let rev = revcomp(fwd, 8);
+        assert_eq!(canonical(fwd, 8), canonical(rev, 8));
+    }
+
+    #[test]
+    fn extract_counts() {
+        let mut out = Vec::new();
+        extract_kmers(b"ACGTACGTAC", 4, &mut out);
+        assert_eq!(out.len(), 7); // 10 - 4 + 1
+        out.clear();
+        extract_kmers(b"ACGNACGT", 4, &mut out);
+        assert_eq!(out.len(), 1); // N breaks the window; only last 4 valid
+    }
+
+    #[test]
+    fn reads_overlap_reference_kmers() {
+        let reference = random_sequence(5000, 1);
+        let reads = mutate_reads(&reference, 10, 100, 0.0, 2);
+        let mut ref_kmers = Vec::new();
+        extract_kmers(&reference, 21, &mut ref_kmers);
+        let ref_set: std::collections::HashSet<u64> = ref_kmers.into_iter().collect();
+        for read in reads {
+            let mut read_kmers = Vec::new();
+            extract_kmers(&read, 21, &mut read_kmers);
+            assert!(read_kmers.iter().all(|k| ref_set.contains(k)));
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Workload generators (S11): key streams, genomics k-mers, skewed traces.
+
+pub mod keygen;
+pub mod kmer;
+pub mod zipf;
+
+pub use keygen::{disjoint_key_sets, unique_keys};

@@ -1,0 +1,108 @@
+//! Skewed (Zipfian) key traces for serving benchmarks.
+//!
+//! Real lookup traffic (e.g. join probes, cache lookups) is rarely uniform;
+//! the coordinator benches use a Zipf trace to exercise the batcher under
+//! hot-key contention.
+
+use crate::hash::splitmix64;
+
+/// Zipf(α) sampler over ranks 1..=n using rejection-inversion
+/// (Hörmann & Derflinger). Deterministic for a seed.
+pub struct Zipf {
+    n: u64,
+    alpha: f64,
+    h_x1: f64,
+    h_n: f64,
+    state: u64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, alpha: f64, seed: u64) -> Self {
+        assert!(n >= 1 && alpha > 0.0 && (alpha - 1.0).abs() > 1e-9, "alpha != 1 supported");
+        let mut z = Zipf { n, alpha, h_x1: 0.0, h_n: 0.0, state: seed ^ 0x21F0_5EED_0000_0007 };
+        z.h_x1 = z.h_integral(1.5) - 1.0;
+        z.h_n = z.h_integral(n as f64 + 0.5);
+        z
+    }
+
+    fn h_integral(&self, x: f64) -> f64 {
+        // integral of x^-alpha: x^(1-alpha) / (1-alpha)
+        let one_minus = 1.0 - self.alpha;
+        x.powf(one_minus) / one_minus
+    }
+
+    fn h_integral_inv(&self, x: f64) -> f64 {
+        let one_minus = 1.0 - self.alpha;
+        (x * one_minus).powf(1.0 / one_minus)
+    }
+
+    fn uniform(&mut self) -> f64 {
+        (splitmix64(&mut self.state) >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Sample one rank in 1..=n (rank 1 is the hottest).
+    pub fn sample(&mut self) -> u64 {
+        loop {
+            let u = self.h_x1 + self.uniform() * (self.h_n - self.h_x1);
+            let x = self.h_integral_inv(u);
+            let k = x.round().clamp(1.0, self.n as f64);
+            // accept with probability proportional to the pmf/envelope ratio
+            let h_mid = self.h_integral(k + 0.5) - self.h_integral(k - 0.5);
+            if self.uniform() * h_mid.abs() <= k.powf(-self.alpha) {
+                return k as u64;
+            }
+        }
+    }
+
+    /// A trace of `len` keys drawn from `universe` with Zipfian rank skew.
+    pub fn trace(&mut self, universe: &[u64], len: usize) -> Vec<u64> {
+        (0..len)
+            .map(|_| universe[((self.sample() - 1) % universe.len() as u64) as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_in_range() {
+        let mut z = Zipf::new(1000, 1.2, 42);
+        for _ in 0..10_000 {
+            let r = z.sample();
+            assert!(r >= 1 && r <= 1000);
+        }
+    }
+
+    #[test]
+    fn skew_increases_with_alpha() {
+        let head_mass = |alpha: f64| {
+            let mut z = Zipf::new(10_000, alpha, 7);
+            let total = 20_000;
+            let head = (0..total).filter(|_| z.sample() <= 10).count();
+            head as f64 / total as f64
+        };
+        assert!(head_mass(1.5) > head_mass(0.5) + 0.1);
+    }
+
+    #[test]
+    fn rank1_is_hottest() {
+        let mut z = Zipf::new(100, 1.3, 9);
+        let mut counts = vec![0u32; 101];
+        for _ in 0..50_000 {
+            counts[z.sample() as usize] += 1;
+        }
+        let max_rank = counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0;
+        assert!(max_rank <= 2, "hottest rank was {max_rank}");
+    }
+
+    #[test]
+    fn trace_draws_from_universe() {
+        let universe: Vec<u64> = (100..200).collect();
+        let mut z = Zipf::new(50, 1.1, 3);
+        for k in z.trace(&universe, 1000) {
+            assert!((100..200).contains(&k));
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Coordinator integration: batching policy effects, backpressure,
+//! mixed workloads, metrics sanity, and the PJRT backend when available.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gbf::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, FilterBackend, NativeBackend, PjrtBackend, RequestOp,
+};
+use gbf::filter::params::FilterConfig;
+use gbf::runtime::actor::EngineActor;
+use gbf::runtime::manifest::{default_artifact_dir, Manifest};
+use gbf::workload::keygen::{disjoint_key_sets, unique_keys};
+use gbf::workload::zipf::Zipf;
+
+fn native(shards: usize, max_batch: usize, wait_us: u64) -> Coordinator {
+    Coordinator::new(
+        CoordinatorConfig {
+            num_shards: shards,
+            policy: BatchPolicy { max_batch, max_wait: Duration::from_micros(wait_us) },
+        },
+        |_| {
+            Ok(Box::new(NativeBackend::new(
+                FilterConfig { log2_m_words: 15, ..Default::default() },
+                1,
+            )?) as Box<dyn FilterBackend>)
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn mixed_interleaved_workload_is_consistent() {
+    let c = native(4, 1024, 150);
+    let keys = unique_keys(20_000, 1);
+    // interleave adds and queries in waves; earlier waves must stay visible
+    for wave in 0..4 {
+        let slice = &keys[wave * 5_000..(wave + 1) * 5_000];
+        c.add_blocking(slice).unwrap();
+        for prev in 0..=wave {
+            let check = &keys[prev * 5_000..prev * 5_000 + 500];
+            assert!(c.query_blocking(check).unwrap().iter().all(|&h| h), "wave {wave} prev {prev}");
+        }
+    }
+    let m = c.metrics();
+    assert_eq!(m.adds, 20_000);
+    assert!(m.batches > 0 && m.mean_batch_size >= 1.0);
+}
+
+#[test]
+fn zipf_hot_key_traffic() {
+    let c = native(2, 512, 100);
+    let universe = unique_keys(5_000, 2);
+    c.add_blocking(&universe).unwrap();
+    let mut z = Zipf::new(universe.len() as u64, 1.3, 7);
+    let trace = z.trace(&universe, 30_000);
+    let hits = c.query_blocking(&trace).unwrap();
+    assert!(hits.iter().all(|&h| h), "hot keys must always hit");
+}
+
+#[test]
+fn fpr_preserved_through_sharded_service() {
+    // sharding must not inflate FPR beyond the single-filter rate by more
+    // than noise (each shard is a smaller filter at the same load factor)
+    let c = native(4, 4096, 200);
+    let (ins, qry) = disjoint_key_sets(80_000, 40_000, 3);
+    c.add_blocking(&ins).unwrap();
+    let fp = c.query_blocking(&qry).unwrap().iter().filter(|&&h| h).count();
+    let fpr = fp as f64 / qry.len() as f64;
+    assert!(fpr < 0.05, "service fpr {fpr}");
+}
+
+#[test]
+fn single_request_latency_bounded_by_deadline() {
+    let c = native(1, 1 << 20, 2_000); // huge batch, 2ms deadline
+    let t0 = std::time::Instant::now();
+    let rx = c.submit(RequestOp::Add, 42);
+    rx.recv().unwrap().unwrap();
+    let dt = t0.elapsed();
+    assert!(dt < Duration::from_millis(500), "deadline flush too slow: {dt:?}");
+}
+
+#[test]
+fn queue_depth_drains() {
+    let c = native(2, 256, 100);
+    let keys = unique_keys(10_000, 4);
+    c.add_blocking(&keys).unwrap();
+    // after blocking calls return, queues must be empty
+    assert_eq!(c.queue_depth(), 0);
+}
+
+#[test]
+fn heavy_concurrency_stress() {
+    let c = Arc::new(native(4, 2048, 200));
+    std::thread::scope(|scope| {
+        for t in 0..16u64 {
+            let c = Arc::clone(&c);
+            scope.spawn(move || {
+                let keys = unique_keys(4_000, 50 + t);
+                c.add_blocking(&keys).unwrap();
+                let hits = c.query_blocking(&keys).unwrap();
+                assert!(hits.iter().all(|&h| h));
+            });
+        }
+    });
+    assert_eq!(c.metrics().adds, 64_000);
+}
+
+#[test]
+fn pjrt_backend_through_coordinator() {
+    let Ok(manifest) = Manifest::load(&default_artifact_dir()) else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let actor = EngineActor::spawn_with_manifest(manifest.clone()).unwrap();
+    let client = actor.client();
+    let cfg = FilterConfig::default();
+    let c = Coordinator::new(
+        CoordinatorConfig {
+            num_shards: 2,
+            policy: BatchPolicy { max_batch: 4096, max_wait: Duration::from_micros(300) },
+        },
+        move |_| {
+            Ok(Box::new(PjrtBackend::new(client.clone(), &manifest, cfg, "pallas")?)
+                as Box<dyn FilterBackend>)
+        },
+    )
+    .unwrap();
+    assert_eq!(c.backend_name(), "pjrt");
+    let keys = unique_keys(6_000, 5);
+    c.add_blocking(&keys).unwrap();
+    assert!(c.query_blocking(&keys).unwrap().iter().all(|&h| h));
+    let (_, absent) = disjoint_key_sets(1, 6_000, 6);
+    let fp = c.query_blocking(&absent).unwrap().iter().filter(|&&h| h).count();
+    assert!(fp < 600, "pjrt fpr too high: {fp}/6000");
+}

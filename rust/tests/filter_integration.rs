@@ -1,0 +1,124 @@
+//! Cross-module filter integration: variants x engine x analytics.
+
+use gbf::analytics::fpr::{measure_fpr, measure_fpr_space_optimal};
+use gbf::filter::params::{fpr_min, space_optimal_n, FilterConfig, Scheme, Variant};
+use gbf::filter::{AnyBloom, Bloom};
+use gbf::workload::keygen::{disjoint_key_sets, resample, unique_keys};
+
+fn every_variant(m: u32) -> Vec<FilterConfig> {
+    vec![
+        FilterConfig { variant: Variant::Sbf, block_bits: 256, k: 16, log2_m_words: m, ..Default::default() },
+        FilterConfig { variant: Variant::Sbf, block_bits: 512, k: 8, log2_m_words: m, ..Default::default() },
+        FilterConfig { variant: Variant::Sbf, block_bits: 1024, k: 16, log2_m_words: m, ..Default::default() },
+        FilterConfig { variant: Variant::Rbbf, block_bits: 64, k: 16, log2_m_words: m, ..Default::default() },
+        FilterConfig { variant: Variant::Csbf, block_bits: 512, k: 16, z: 2, log2_m_words: m, ..Default::default() },
+        FilterConfig { variant: Variant::Csbf, block_bits: 1024, k: 16, z: 4, log2_m_words: m, ..Default::default() },
+        FilterConfig { variant: Variant::Bbf, block_bits: 256, k: 16, log2_m_words: m, ..Default::default() },
+        FilterConfig { variant: Variant::Bbf, block_bits: 256, k: 16, scheme: Scheme::Iter, log2_m_words: m, ..Default::default() },
+        FilterConfig { variant: Variant::Cbf, k: 16, log2_m_words: m, ..Default::default() },
+        FilterConfig { variant: Variant::Sbf, block_bits: 128, word_bits: 32, k: 8, log2_m_words: m, ..Default::default() },
+    ]
+}
+
+#[test]
+fn lifecycle_every_variant() {
+    for cfg in every_variant(14) {
+        let filter = AnyBloom::new(cfg).unwrap();
+        let (ins, qry) = disjoint_key_sets(20_000, 20_000, 1);
+        filter.bulk_add(&ins, 0);
+        // contract: no false negatives
+        assert!(filter.bulk_contains(&ins, 0).iter().all(|&h| h), "{}", cfg.name());
+        // resampled lookups (true-positive benchmark shape, §5.1)
+        let hot = resample(&ins, 10_000, 2);
+        assert!(filter.bulk_contains(&hot, 0).iter().all(|&h| h));
+        // false positives exist but are bounded
+        let fp = filter.bulk_contains(&qry, 0).iter().filter(|&&h| h).count();
+        assert!(fp < 2_000, "{}: fp={fp}", cfg.name());
+        // clear resets
+        filter.clear();
+        assert!(!filter.bulk_contains(&ins[..100], 0).iter().any(|&h| h));
+    }
+}
+
+#[test]
+fn fpr_respects_space_optimal_floor() {
+    // At the space-optimal load no variant can beat fpr_min(c) (Eq. 3);
+    // blocked variants sit above it, CBF close to it.
+    let m = 14u32;
+    for cfg in every_variant(m) {
+        if cfg.word_bits != 64 {
+            continue;
+        }
+        let c_bits = cfg.m_bits() as f64 / space_optimal_n(cfg.m_bits(), cfg.k) as f64;
+        let floor = fpr_min(c_bits);
+        let rep = measure_fpr_space_optimal(&cfg, 100_000, 3).unwrap();
+        assert!(
+            rep.fpr >= floor * 0.5 - 1e-7,
+            "{}: measured {} below Eq.(3) floor {}",
+            cfg.name(),
+            rep.fpr,
+            floor
+        );
+        assert!(rep.fpr < 0.1, "{}: unusably high fpr {}", cfg.name(), rep.fpr);
+    }
+}
+
+#[test]
+fn fpr_falls_with_more_bits_per_key() {
+    // sweep c = m/n by inserting fewer keys into the same filter
+    let cfg = FilterConfig { log2_m_words: 14, ..Default::default() };
+    let n_opt = space_optimal_n(cfg.m_bits(), cfg.k) as usize;
+    let f_full = measure_fpr(&cfg, n_opt, 100_000, 5).unwrap();
+    let f_half = measure_fpr(&cfg, n_opt / 2, 100_000, 5).unwrap();
+    let f_quarter = measure_fpr(&cfg, n_opt / 4, 100_000, 5).unwrap();
+    assert!(f_quarter <= f_half && f_half <= f_full, "{f_quarter} {f_half} {f_full}");
+}
+
+#[test]
+fn merge_distributes_over_partitioned_builds() {
+    // building two shards and merging == building one filter with all keys
+    let cfg = FilterConfig { log2_m_words: 13, ..Default::default() };
+    let keys = unique_keys(30_000, 9);
+    let (a, b) = keys.split_at(15_000);
+    let fa = Bloom::<u64>::new(cfg).unwrap();
+    let fb = Bloom::<u64>::new(cfg).unwrap();
+    fa.bulk_add(a, 0);
+    fb.bulk_add(b, 0);
+    fa.merge(&fb).unwrap();
+    let full = Bloom::<u64>::new(cfg).unwrap();
+    full.bulk_add(&keys, 0);
+    assert_eq!(fa.snapshot(), full.snapshot());
+}
+
+#[test]
+fn snapshot_transfers_between_engines() {
+    // native -> words -> fresh filter (the PJRT state hand-off path)
+    let cfg = FilterConfig { log2_m_words: 13, ..Default::default() };
+    let keys = unique_keys(10_000, 11);
+    let src = Bloom::<u64>::new(cfg).unwrap();
+    src.bulk_add(&keys, 0);
+    let dst = Bloom::<u64>::new(cfg).unwrap();
+    dst.load_words(&src.snapshot()).unwrap();
+    assert!(dst.bulk_contains(&keys, 0).iter().all(|&h| h));
+}
+
+#[test]
+fn concurrent_insert_and_query_is_safe() {
+    // lock-free adds while queries run: queries on inserted prefixes must
+    // always hit (monotone filter growth can only add bits)
+    let cfg = FilterConfig { log2_m_words: 14, ..Default::default() };
+    let filter = std::sync::Arc::new(Bloom::<u64>::new(cfg).unwrap());
+    let keys = unique_keys(64_000, 13);
+    let phase1 = keys[..32_000].to_vec();
+    filter.bulk_add(&phase1, 0);
+    std::thread::scope(|scope| {
+        let f2 = std::sync::Arc::clone(&filter);
+        let rest = keys[32_000..].to_vec();
+        scope.spawn(move || f2.bulk_add(&rest, 2));
+        // concurrent queries of already-inserted keys
+        for chunk in phase1.chunks(8_000) {
+            assert!(filter.bulk_contains(chunk, 1).iter().all(|&h| h));
+        }
+    });
+    assert!(filter.bulk_contains(&keys, 0).iter().all(|&h| h));
+}

@@ -1,0 +1,193 @@
+//! Property-based tests (infra::prop) over randomized configurations,
+//! key sets, and layouts — the invariants the paper's design rests on.
+
+use gbf::filter::params::{FilterConfig, Scheme, Variant};
+use gbf::filter::AnyBloom;
+use gbf::gpu_sim::{model, Features, Op, Residency, B200};
+use gbf::hash::pattern::{BlockMask, ProbePlan, ProbeSet};
+use gbf::infra::prop::{check, Gen};
+
+/// Draw a random *valid* filter configuration.
+fn arb_config(g: &mut Gen) -> FilterConfig {
+    loop {
+        let variant = *g.choose(&[Variant::Cbf, Variant::Bbf, Variant::Rbbf, Variant::Sbf, Variant::Csbf]);
+        let word_bits = if g.bool() { 64 } else { 32 };
+        let block_bits = match variant {
+            Variant::Rbbf => word_bits,
+            Variant::Cbf => 256,
+            _ => (word_bits as u64 * g.pow2(0, 4) as u64).min(1024) as u32,
+        };
+        let s = (block_bits / word_bits).max(1);
+        let k = match variant {
+            Variant::Sbf | Variant::Rbbf => s * g.range(1, (48 / s).max(1) as u64) as u32,
+            Variant::Csbf => 16,
+            _ => g.range(1, 24) as u64 as u32,
+        };
+        let z = if variant == Variant::Csbf { (g.pow2(0, 3) as u32).min(s).min(16) } else { 1 };
+        let cfg = FilterConfig {
+            variant,
+            word_bits,
+            block_bits,
+            k: k.min(62),
+            z,
+            scheme: Scheme::Mult,
+            log2_m_words: g.range(8, 14) as u32,
+            ..Default::default()
+        };
+        if cfg.validate().is_ok() {
+            return cfg;
+        }
+    }
+}
+
+#[test]
+fn prop_no_false_negatives() {
+    check("no-false-negatives", 60, |g| {
+        let cfg = arb_config(g);
+        let filter = AnyBloom::new(cfg).unwrap();
+        let keys = g.keys(500);
+        filter.bulk_add(&keys, 1);
+        assert!(filter.bulk_contains(&keys, 1).iter().all(|&h| h), "{}", cfg.name());
+    });
+}
+
+#[test]
+fn prop_insert_order_and_duplication_invariant() {
+    check("order-invariant", 40, |g| {
+        let cfg = arb_config(g);
+        let keys = g.keys(300);
+        let a = AnyBloom::new(cfg).unwrap();
+        a.bulk_add(&keys, 1);
+        // reversed + duplicated insert produces the identical filter
+        let mut shuffled: Vec<u64> = keys.iter().rev().copied().collect();
+        shuffled.extend(&keys);
+        let b = AnyBloom::new(cfg).unwrap();
+        b.bulk_add(&shuffled, 1);
+        assert_eq!(a.snapshot(), b.snapshot(), "{}", cfg.name());
+    });
+}
+
+#[test]
+fn prop_probe_geometry() {
+    check("probe-geometry", 80, |g| {
+        let cfg = arb_config(g);
+        let plan = ProbePlan::new(&cfg);
+        let mut probes = ProbeSet::default();
+        for _ in 0..50 {
+            let key = g.u64();
+            plan.gen_probes(key, &mut probes);
+            assert_eq!(probes.len, cfg.words_per_key() as usize);
+            let mut bits = 0u32;
+            for (w, m) in probes.iter() {
+                assert!(w < cfg.m_words());
+                assert_ne!(m, 0);
+                if cfg.word_bits == 32 {
+                    assert_eq!(m >> 32, 0);
+                }
+                bits += m.count_ones();
+            }
+            assert!(bits >= 1 && bits <= cfg.k);
+            if cfg.is_blocked() {
+                let s = cfg.s() as u64;
+                let blk = probes.words[0] / s;
+                assert!(probes.iter().all(|(w, _)| w / s == blk), "stay in block");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_block_mask_equals_probe_set() {
+    check("block-mask-equiv", 60, |g| {
+        let cfg = arb_config(g);
+        if !cfg.is_blocked() {
+            return;
+        }
+        let plan = ProbePlan::new(&cfg);
+        let (mut probes, mut bm) = (ProbeSet::default(), BlockMask::default());
+        for _ in 0..30 {
+            let key = g.u64();
+            plan.gen_probes(key, &mut probes);
+            plan.gen_block_mask(key, &mut bm);
+            let mut dense = [0u64; 32];
+            for (w, m) in probes.iter() {
+                dense[(w - bm.block_word0) as usize] |= m;
+            }
+            assert_eq!(&dense[..bm.s], &bm.masks[..bm.s]);
+        }
+    });
+}
+
+#[test]
+fn prop_layouts_never_change_filter_semantics() {
+    // Θ/Φ are perf knobs only: the model may differ, the bits may not.
+    check("layout-semantics", 40, |g| {
+        let base = arb_config(g);
+        if !base.is_blocked() {
+            return;
+        }
+        let s = base.s();
+        let theta = (g.pow2(0, 5) as u32).min(s);
+        let phi = (g.pow2(0, 5) as u32).min(s / theta).max(1);
+        let cfg = FilterConfig { theta, phi, ..base };
+        if cfg.validate().is_err() {
+            return;
+        }
+        let keys = g.keys(200);
+        let a = AnyBloom::new(base).unwrap();
+        let b = AnyBloom::new(cfg).unwrap();
+        a.bulk_add(&keys, 1);
+        b.bulk_add(&keys, 1);
+        assert_eq!(a.snapshot(), b.snapshot());
+        let queries = g.keys(200);
+        assert_eq!(a.bulk_contains(&queries, 1), b.bulk_contains(&queries, 1));
+    });
+}
+
+#[test]
+fn prop_model_outputs_finite_and_positive() {
+    check("model-sane", 100, |g| {
+        let cfg = arb_config(g);
+        let theta = (g.pow2(0, 5) as u32).min(cfg.s().max(1));
+        let phi = model::max_phi(&cfg, theta);
+        let residency = if g.bool() { Residency::L2 } else { Residency::Dram };
+        let op = if g.bool() { Op::Contains } else { Op::Add };
+        let feats = Features {
+            mult_hash: g.bool(),
+            horizontal_vec: g.bool(),
+            adaptive_coop: g.bool(),
+        };
+        let cfg = if cfg.variant == Variant::Cbf { cfg } else { cfg };
+        let theta = if cfg.variant == Variant::Cbf { 1 } else { theta };
+        let p = model::predict(&cfg, op, theta, phi, residency, &B200, feats);
+        assert!(p.gelems_per_sec.is_finite() && p.gelems_per_sec > 0.0, "{}", cfg.name());
+        assert!(p.sector_transactions >= 0.9);
+        assert!(p.instructions > 5.0);
+        // never above the physically meaningful ceilings
+        assert!(p.gelems_per_sec < 500.0, "{}: {}", cfg.name(), p.gelems_per_sec);
+    });
+}
+
+#[test]
+fn prop_merge_union_semantics() {
+    check("merge-union", 30, |g| {
+        let cfg = arb_config(g);
+        if cfg.word_bits != 64 {
+            return;
+        }
+        let (ka, kb) = (g.keys(200), g.keys(200));
+        let a = AnyBloom::new(cfg).unwrap();
+        let b = AnyBloom::new(cfg).unwrap();
+        a.bulk_add(&ka, 1);
+        b.bulk_add(&kb, 1);
+        // union via word-level OR
+        let mut want: Vec<u64> = a.snapshot();
+        for (w, o) in want.iter_mut().zip(b.snapshot()) {
+            *w |= o;
+        }
+        let u = AnyBloom::new(cfg).unwrap();
+        u.bulk_add(&ka, 1);
+        u.bulk_add(&kb, 1);
+        assert_eq!(u.snapshot(), want);
+    });
+}

@@ -1,0 +1,132 @@
+//! PJRT round-trip integration: artifacts -> engine -> results must match
+//! the native Rust filter library bit-for-bit.
+//!
+//! Requires `make artifacts` (skips with a note otherwise).
+
+use gbf::filter::params::FilterConfig;
+use gbf::filter::Bloom;
+use gbf::runtime::actor::EngineActor;
+use gbf::runtime::manifest::{default_artifact_dir, Manifest};
+use gbf::workload::keygen::{disjoint_key_sets, unique_keys};
+
+fn engine() -> Option<(EngineActor, Manifest)> {
+    let dir = default_artifact_dir();
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping runtime integration: {e:#} (run `make artifacts`)");
+            return None;
+        }
+    };
+    let actor = EngineActor::spawn_with_manifest(manifest.clone()).expect("engine startup");
+    Some((actor, manifest))
+}
+
+#[test]
+fn pjrt_matches_native_for_every_artifact_config() {
+    let Some((actor, manifest)) = engine() else { return };
+    let client = actor.client();
+    for cfg in manifest.configs() {
+        let batches = manifest.batch_sizes(&cfg, "contains", "pallas");
+        let batch = *batches.first().expect("at least one batch");
+        let add_name = &manifest.find(&cfg, "add", batch, "pallas").unwrap().name;
+        let contains_name = &manifest.find(&cfg, "contains", batch, "pallas").unwrap().name;
+
+        // native oracle
+        let native = Bloom::<u64>::new(cfg).unwrap();
+        let keys = unique_keys(batch, 42);
+        native.bulk_add(&keys, 1);
+
+        // pjrt path
+        let state = client.create_state(cfg).unwrap();
+        client.add(add_name, state, keys.clone(), keys.len()).unwrap();
+
+        // filter words must be bit-identical
+        let pjrt_words = client.snapshot(state).unwrap();
+        assert_eq!(pjrt_words, native.snapshot(), "filter words differ for {}", cfg.name());
+
+        // lookups: hits for all inserted, mostly-miss for absent
+        let hits = client.contains(contains_name, state, keys.clone()).unwrap();
+        assert!(hits.iter().all(|&h| h == 1), "false negative via pjrt for {}", cfg.name());
+
+        let absent = unique_keys(batch, 4242);
+        let pjrt_hits = client.contains(contains_name, state, absent.clone()).unwrap();
+        let native_hits = native.bulk_contains(&absent, 1);
+        for (i, (&p, n)) in pjrt_hits.iter().zip(native_hits).enumerate() {
+            assert_eq!(p != 0, n, "mismatch at {} for {}", i, cfg.name());
+        }
+        println!("config {} OK (batch {batch})", cfg.name());
+    }
+}
+
+#[test]
+fn pjrt_n_valid_masks_padding() {
+    let Some((actor, manifest)) = engine() else { return };
+    let client = actor.client();
+    let cfg = FilterConfig::default();
+    let batch = 256usize;
+    let add_name = &manifest.find(&cfg, "add", batch, "pallas").unwrap().name;
+
+    let keys = unique_keys(batch, 7);
+    let n_valid = 100;
+    let state = client.create_state(cfg).unwrap();
+    client.add(add_name, state, keys.clone(), n_valid).unwrap();
+
+    let native = Bloom::<u64>::new(cfg).unwrap();
+    native.bulk_add(&keys[..n_valid], 1);
+    assert_eq!(client.snapshot(state).unwrap(), native.snapshot());
+}
+
+#[test]
+fn pjrt_jnp_ablation_matches_pallas() {
+    let Some((actor, manifest)) = engine() else { return };
+    let client = actor.client();
+    let cfg = FilterConfig::default();
+    let batch = 4096usize;
+    let Some(jnp_add) = manifest.find(&cfg, "add", batch, "jnp") else {
+        eprintln!("skipping: no jnp ablation artifacts");
+        return;
+    };
+    let jnp_contains = manifest.find(&cfg, "contains", batch, "jnp").unwrap();
+    let pallas_add = manifest.find(&cfg, "add", batch, "pallas").unwrap();
+    let pallas_contains = manifest.find(&cfg, "contains", batch, "pallas").unwrap();
+
+    let keys = unique_keys(batch, 9);
+    let zero = vec![0u64; cfg.m_words() as usize];
+    let w_jnp = client.add_words(&jnp_add.name, zero.clone(), keys.clone(), batch).unwrap();
+    let w_pallas = client.add_words(&pallas_add.name, zero, keys.clone(), batch).unwrap();
+    assert_eq!(w_jnp, w_pallas, "L2 jnp and L1 pallas add disagree");
+
+    let probe = unique_keys(batch, 10);
+    let h_jnp = client.contains_words(&jnp_contains.name, w_jnp.clone(), probe.clone()).unwrap();
+    let h_pallas = client.contains_words(&pallas_contains.name, w_jnp, probe).unwrap();
+    assert_eq!(h_jnp, h_pallas);
+}
+
+#[test]
+fn pjrt_fpr_sane_at_scale() {
+    let Some((actor, manifest)) = engine() else { return };
+    let client = actor.client();
+    let cfg = FilterConfig::default();
+    let batch = 4096usize;
+    let add_name = &manifest.find(&cfg, "add", batch, "pallas").unwrap().name;
+    let contains_name = &manifest.find(&cfg, "contains", batch, "pallas").unwrap().name;
+
+    // fill to the space-optimal load, then query absent keys
+    let n = gbf::filter::params::space_optimal_n(cfg.m_bits(), cfg.k) as usize;
+    let (ins, qry) = disjoint_key_sets(n, 4 * batch, 33);
+    let state = client.create_state(cfg).unwrap();
+    for chunk in ins.chunks(batch) {
+        let mut padded = chunk.to_vec();
+        padded.resize(batch, 0);
+        client.add(add_name, state, padded, chunk.len()).unwrap();
+    }
+    let mut fp = 0usize;
+    for chunk in qry.chunks(batch) {
+        let hits = client.contains(contains_name, state, chunk.to_vec()).unwrap();
+        fp += hits.iter().filter(|&&h| h != 0).count();
+    }
+    let fpr = fp as f64 / qry.len() as f64;
+    let theory = gbf::filter::params::fpr_blocked(cfg.m_bits(), n as u64, cfg.k, cfg.block_bits);
+    assert!(fpr < theory * 4.0 + 5e-3, "fpr {fpr} vs blocked theory {theory}");
+}

@@ -1,0 +1,119 @@
+//! GPU-model integration: the analytic transaction model vs the
+//! trace-driven coalescer, plus end-to-end experiment harness checks.
+
+use gbf::experiments;
+use gbf::filter::params::{FilterConfig, Variant};
+use gbf::gpu_sim::coalescer::{add_trace, Coalescer};
+use gbf::gpu_sim::{model, Features, Op, Residency, B200};
+use gbf::workload::keygen::unique_keys;
+
+fn sbf(block_bits: u32) -> FilterConfig {
+    let variant = if block_bits == 64 { Variant::Rbbf } else { Variant::Sbf };
+    FilterConfig { variant, block_bits, k: 16, log2_m_words: 22, ..Default::default() }
+}
+
+#[test]
+fn coalescer_confirms_horizontal_add_ordering() {
+    // The analytic model says add transactions shrink monotonically with Θ;
+    // the trace-driven coalescer must agree on the ordering.
+    let keys = unique_keys(32 * 64, 1);
+    for block_bits in [256u32, 512, 1024] {
+        let cfg = sbf(block_bits);
+        let mut last_trace = f64::MAX;
+        let mut last_model = f64::MAX;
+        for theta in model::theta_grid(&cfg) {
+            let stats = Coalescer::default().run(&add_trace(&cfg, theta, 1, &keys));
+            let per_op = stats.transactions as f64 / keys.len() as f64;
+            let p = model::predict(&cfg, Op::Add, theta, 1, Residency::Dram, &B200, Features::default());
+            assert!(per_op <= last_trace + 0.05, "B={block_bits} Θ={theta}: trace {per_op} vs {last_trace}");
+            assert!(
+                p.sector_transactions <= last_model + 0.05,
+                "B={block_bits} Θ={theta}: model"
+            );
+            last_trace = per_op;
+            last_model = p.sector_transactions;
+        }
+        // at Θ = s both agree the block collapses to ~1-4 transactions
+        assert!(last_trace <= (block_bits / 256).max(1) as f64 + 0.3, "B={block_bits}: {last_trace}");
+    }
+}
+
+#[test]
+fn coalescer_traffic_volume_is_layout_invariant() {
+    // merging changes transactions, never sectors touched
+    let keys = unique_keys(32 * 32, 2);
+    let cfg = sbf(512);
+    let sectors: Vec<u64> = model::theta_grid(&cfg)
+        .into_iter()
+        .map(|theta| Coalescer::default().run(&add_trace(&cfg, theta, 1, &keys)).sectors)
+        .collect();
+    assert!(sectors.windows(2).all(|w| w[0] == w[1]), "{sectors:?}");
+}
+
+#[test]
+fn experiment_harness_runs_every_figure() {
+    for exp in ["table1", "table2", "fig5", "fig6", "fig7", "fig8", "fig9", "calibration"] {
+        let text = experiments::run(exp, None).unwrap_or_else(|e| panic!("{exp}: {e:#}"));
+        assert!(text.len() > 100, "{exp} produced no output");
+    }
+}
+
+#[test]
+fn headline_speedup_claims_hold_in_model() {
+    // §5.3: "for B = 256, the speedup increases to 11.35x (15.4x)" vs
+    // WarpCore for add (contains) in the cache-resident regime. The model
+    // must land in the right decade (see EXPERIMENTS.md for exact values).
+    let ours = sbf(256);
+    let mut wc = FilterConfig {
+        variant: Variant::Bbf,
+        block_bits: 256,
+        k: 16,
+        scheme: gbf::filter::params::Scheme::Iter,
+        log2_m_words: 22,
+        ..Default::default()
+    };
+    wc.theta = wc.s();
+    let wc_feats = Features { mult_hash: false, adaptive_coop: false, horizontal_vec: true };
+    for (op, claimed) in [(Op::Add, 11.35), (Op::Contains, 15.4)] {
+        let us = model::best_layout(&ours, op, Residency::L2, &B200, Features::default()).2;
+        let them = model::predict(&wc, op, wc.s(), 1, Residency::L2, &B200, wc_feats);
+        let speedup = us.gelems_per_sec / them.gelems_per_sec;
+        assert!(
+            speedup > claimed / 2.0 && speedup < claimed * 2.0,
+            "{op:?}: modeled speedup {speedup:.1} vs paper {claimed}"
+        );
+    }
+}
+
+#[test]
+fn cbf_tradeoff_claims_hold() {
+    // §5.2: SBF B=256 is 15.3x (5.4x) faster than CBF for add (contains)
+    // at DRAM, while CBF has ~2 orders of magnitude lower FPR.
+    let ours = sbf(256);
+    let cbf = FilterConfig { variant: Variant::Cbf, k: 16, log2_m_words: 27, ..Default::default() };
+    let ours_dram = FilterConfig { log2_m_words: 27, ..ours };
+    for (op, claimed) in [(Op::Add, 15.3), (Op::Contains, 5.4)] {
+        let us = model::best_layout(&ours_dram, op, Residency::Dram, &B200, Features::default()).2;
+        let them = model::predict(&cbf, op, 1, 1, Residency::Dram, &B200, Features::default());
+        let speedup = us.gelems_per_sec / them.gelems_per_sec;
+        assert!(
+            speedup > claimed / 2.0 && speedup < claimed * 2.0,
+            "{op:?}: modeled speedup {speedup:.1} vs paper {claimed}"
+        );
+    }
+}
+
+#[test]
+fn stall_counters_expose_paper_profiling_story() {
+    // §5.2: B > 256 lookups stall on mmio_throttle at Θ=1 (register
+    // pressure kills occupancy), adds on drain
+    let cfg = sbf(1024);
+    let c = model::predict(&cfg, Op::Contains, 1, 16, Residency::Dram, &B200, Features::default());
+    assert_eq!(c.stall, gbf::gpu_sim::StallCause::MmioThrottle);
+    assert!(c.occupancy < 0.5);
+    let a = model::predict(&cfg, Op::Add, 1, 1, Residency::Dram, &B200, Features::default());
+    assert_eq!(a.stall, gbf::gpu_sim::StallCause::Drain);
+    // and the healthy configurations do not stall
+    let ok = model::predict(&sbf(256), Op::Contains, 1, 4, Residency::Dram, &B200, Features::default());
+    assert_eq!(ok.stall, gbf::gpu_sim::StallCause::MemoryThroughput);
+}
