@@ -94,10 +94,10 @@ fn main() -> anyhow::Result<()> {
     let cfg = FilterConfig::default(); // matches the AOT artifacts (1 MiB)
     let policy = BatchPolicy { max_batch: 4096, max_wait: Duration::from_micros(300) };
 
-    // --- native backend ---
+    // --- native backend: the sharded registry (4 shards in parallel) ---
     let native = Coordinator::new(
         CoordinatorConfig { num_shards: 4, policy: policy.clone() },
-        |_| Ok(Box::new(NativeBackend::new(cfg, 1)?) as Box<dyn FilterBackend>),
+        |num_shards| Ok(Box::new(NativeBackend::new(cfg, num_shards)?) as Box<dyn FilterBackend>),
     )?;
     drive(Arc::new(native))?;
 
@@ -106,7 +106,8 @@ fn main() -> anyhow::Result<()> {
         Ok(manifest) => {
             let actor = EngineActor::spawn_with_manifest(manifest.clone())?;
             let client = actor.client();
-            let pjrt = Coordinator::new(CoordinatorConfig { num_shards: 2, policy }, move |_| {
+            // one filter state: PJRT shard placement is a ROADMAP item
+            let pjrt = Coordinator::new(CoordinatorConfig { num_shards: 1, policy }, move |_| {
                 Ok(Box::new(PjrtBackend::new(client.clone(), &manifest, cfg, "pallas")?)
                     as Box<dyn FilterBackend>)
             })?;

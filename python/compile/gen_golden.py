@@ -1,0 +1,136 @@
+"""Generate artifacts/golden.json: the cross-language golden fixture.
+
+The fixture pins the Rust hash/pattern/filter pipeline bit-for-bit to this
+package's numpy oracle (ref.py / patterns.py / hashing.py). It is committed
+at rust/artifacts/golden.json so `rust/tests/golden_cross_language.rs` runs
+on every checkout without a build step; regenerate after any change to the
+fingerprint pipeline on either side:
+
+    cd python && python3 -m compile.gen_golden --out ../rust/artifacts/golden.json
+
+Fixture schema (all u64 values are zero-padded lowercase hex strings):
+    seed_base, salt_stream_seed  hash-pipeline constants
+    salts                        the full 96-entry salt schedule
+    keys                         the shared probe/insert key set
+    base_hashes                  xxh64(key, SEED_BASE) per key
+    cases[]                      per filter configuration:
+        config                   the FilterConfig fields
+        probes[]                 (key, word indices, word masks) samples
+        inserted                 how many of `keys` were bulk-inserted
+        filter_nonzero           [word index, word value] nonzero pairs
+        contains                 0/1 lookup decision for every key
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .kernels import hashing as H
+from .kernels import patterns, ref
+from .params import FilterConfig
+
+# Keys: a splitmix64 stream (a bijection over distinct states), so the set
+# is distinct by construction and reproducible on both sides of the fence.
+KEY_SEED = 0x601D_E2D5_EED0_0001
+NUM_KEYS = 64
+NUM_INSERTED = 40
+NUM_PROBE_SAMPLES = 6
+
+CASES = [
+    FilterConfig(variant="sbf", log2_m_words=10, word_bits=64, block_bits=256, k=16),
+    FilterConfig(variant="rbbf", log2_m_words=10, word_bits=64, block_bits=64, k=16),
+    FilterConfig(variant="bbf", log2_m_words=10, word_bits=64, block_bits=256, k=16),
+    FilterConfig(variant="bbf", log2_m_words=10, word_bits=64, block_bits=256, k=16, scheme="iter"),
+    FilterConfig(variant="csbf", log2_m_words=10, word_bits=64, block_bits=512, k=16, z=2),
+    FilterConfig(variant="cbf", log2_m_words=10, word_bits=64, block_bits=256, k=16),
+    # S = 32 twins exercise the u32 engine
+    FilterConfig(variant="sbf", log2_m_words=11, word_bits=32, block_bits=128, k=8),
+    FilterConfig(variant="bbf", log2_m_words=11, word_bits=32, block_bits=256, k=16),
+]
+
+
+def hex64(x) -> str:
+    return format(int(x) & H.MASK64, "016x")
+
+
+def config_json(cfg: FilterConfig) -> dict:
+    return {
+        "variant": cfg.variant,
+        "log2_m_words": cfg.log2_m_words,
+        "word_bits": cfg.word_bits,
+        "block_bits": cfg.block_bits,
+        "k": cfg.k,
+        "z": cfg.z,
+        "scheme": cfg.scheme,
+        "theta": cfg.theta,
+        "phi": cfg.phi,
+    }
+
+
+def case_json(cfg: FilterConfig, keys: np.ndarray) -> dict:
+    # probe samples: the raw (word index, mask) pattern per key
+    probes = []
+    for key in keys[:NUM_PROBE_SAMPLES]:
+        word_idx, masks = patterns.gen_probes(cfg, np.array([key], dtype=np.uint64))
+        probes.append(
+            {
+                "key": hex64(key),
+                "words": [int(w) for w in word_idx[0]],
+                "masks": [hex64(m) for m in masks[0]],
+            }
+        )
+
+    # filter contents + lookup decisions after a partial bulk insert
+    words = ref.new_filter(cfg)
+    ref.add_ref(cfg, words, keys[:NUM_INSERTED])
+    nonzero = [[int(i), hex64(w)] for i, w in enumerate(words) if int(w) != 0]
+    contains = [int(b) for b in ref.contains_ref(cfg, words, keys)]
+    # the oracle's own no-false-negative sanity check
+    assert all(contains[:NUM_INSERTED]), f"oracle false negative for {cfg.variant}"
+    return {
+        "config": config_json(cfg),
+        "probes": probes,
+        "inserted": NUM_INSERTED,
+        "filter_nonzero": nonzero,
+        "contains": contains,
+    }
+
+
+def build() -> dict:
+    raw = H._splitmix64_stream(KEY_SEED, NUM_KEYS)
+    assert len(set(raw)) == NUM_KEYS
+    keys = np.array(raw, dtype=np.uint64)
+    base = H.xxh64_u64(keys)
+    return {
+        "_generated_by": "python -m compile.gen_golden (numpy oracle)",
+        "seed_base": hex64(H.SEED_BASE),
+        "salt_stream_seed": hex64(H.SALT_STREAM_SEED),
+        "salts": [hex64(s) for s in H.SALTS],
+        "keys": [hex64(k) for k in keys],
+        "base_hashes": [hex64(h) for h in base],
+        "cases": [case_json(cfg, keys) for cfg in CASES],
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out",
+        type=Path,
+        default=Path(__file__).resolve().parents[2] / "rust" / "artifacts" / "golden.json",
+        help="output path (default: rust/artifacts/golden.json)",
+    )
+    args = parser.parse_args()
+    doc = build()
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps(doc, indent=1) + "\n")
+    n_cases = len(doc["cases"])
+    print(f"wrote {args.out} ({n_cases} cases, {len(doc['keys'])} keys)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,19 +1,23 @@
-//! Coordinator benchmarks: batcher formation, router, end-to-end service
-//! throughput under different batch policies (the L3 hot path).
+//! Coordinator benchmarks: the sharded registry's parallel bulk path,
+//! batcher formation, router, and end-to-end service throughput under
+//! different batch policies (the L3 hot path).
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use gbf::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, FilterBackend, NativeBackend, Router};
+use gbf::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, FilterBackend, NativeBackend, Router,
+    ShardedRegistry,
+};
 use gbf::filter::params::FilterConfig;
 use gbf::infra::bench::{black_box, BenchGroup};
 use gbf::workload::keygen::unique_keys;
 
 fn native(shards: usize, policy: BatchPolicy) -> Coordinator {
-    Coordinator::new(CoordinatorConfig { num_shards: shards, policy }, |_| {
+    Coordinator::new(CoordinatorConfig { num_shards: shards, policy }, |num_shards| {
         Ok(Box::new(NativeBackend::new(
             FilterConfig { log2_m_words: 18, ..Default::default() },
-            1,
+            num_shards,
         )?) as Box<dyn FilterBackend>)
     })
     .unwrap()
@@ -35,7 +39,24 @@ fn main() {
         black_box(r.partition(&keys));
     });
 
-    let mut e2e = BenchGroup::new("coordinator end-to-end (native backend)");
+    // the sharded registry itself: per-shard-count bulk throughput
+    // (split -> parallel threadpool execution -> request-order reassembly)
+    let mut registry = BenchGroup::new("sharded registry bulk ops (2 MiB/shard)");
+    for shards in [1usize, 2, 4, 8] {
+        let reg = ShardedRegistry::new(
+            FilterConfig { log2_m_words: 18, ..Default::default() },
+            shards,
+        )
+        .unwrap();
+        registry.bench(&format!("bulk_add {shards} shard(s)"), Some(keys.len() as u64), || {
+            reg.bulk_add(&keys).unwrap();
+        });
+        registry.bench(&format!("bulk_contains {shards} shard(s)"), Some(keys.len() as u64), || {
+            black_box(reg.bulk_contains(&keys).unwrap());
+        });
+    }
+
+    let mut e2e = BenchGroup::new("coordinator end-to-end (sharded native backend)");
     for (label, max_batch, wait_us) in [
         ("batch 256 / 100µs", 256usize, 100u64),
         ("batch 4096 / 200µs", 4096, 200),
@@ -61,7 +82,7 @@ fn main() {
         println!("    -> {}", c.metrics().report().replace('\n', "\n    -> "));
     }
 
-    let mut shards = BenchGroup::new("shard scaling (batch 4096)");
+    let mut shards = BenchGroup::new("end-to-end shard scaling (batch 4096)");
     for s in [1usize, 2, 4, 8] {
         let c = Arc::new(native(s, BatchPolicy { max_batch: 4096, max_wait: Duration::from_micros(200) }));
         let coordinator = Arc::clone(&c);

@@ -1,56 +1,79 @@
 //! Execution backends: native Rust filters or AOT PJRT artifacts.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
 use crate::filter::params::FilterConfig;
-use crate::filter::AnyBloom;
 use crate::runtime::actor::EngineClient;
 use crate::runtime::Manifest;
 
-/// What a shard executes its batches on.
+use super::registry::ShardedRegistry;
+
+/// What the coordinator executes formed batches on.
 pub trait FilterBackend: Send + Sync {
     fn config(&self) -> &FilterConfig;
     fn backend_name(&self) -> &'static str;
+    /// How many state shards back this filter (1 unless sharded).
+    fn num_shards(&self) -> usize {
+        1
+    }
     /// Insert a batch of keys.
     fn bulk_add(&self, keys: &[u64]) -> Result<()>;
     /// Look up a batch of keys.
     fn bulk_contains(&self, keys: &[u64]) -> Result<Vec<bool>>;
-    /// Current filter words (diagnostics / state hand-off).
+    /// Current filter words (diagnostics / state hand-off). Sharded
+    /// backends concatenate their shards in shard order.
     fn snapshot(&self) -> Vec<u64>;
 }
 
-/// Native backend: the multithreaded Rust filter library (S3).
+/// Native backend: the [`ShardedRegistry`] over the Rust filter library —
+/// bulk requests split per shard and executed in parallel on the infra
+/// thread pool, reassembled in request order.
 pub struct NativeBackend {
-    filter: AnyBloom,
-    threads: usize,
+    registry: Arc<ShardedRegistry>,
 }
 
 impl NativeBackend {
-    pub fn new(cfg: FilterConfig, threads: usize) -> Result<Self> {
-        Ok(NativeBackend { filter: AnyBloom::new(cfg)?, threads })
+    /// `num_shards` independent filter shards of `cfg` geometry
+    /// (power of two).
+    pub fn new(cfg: FilterConfig, num_shards: usize) -> Result<Self> {
+        Ok(NativeBackend { registry: Arc::new(ShardedRegistry::new(cfg, num_shards)?) })
+    }
+
+    /// Serve an existing registry (shared with other owners).
+    pub fn with_registry(registry: Arc<ShardedRegistry>) -> Self {
+        NativeBackend { registry }
+    }
+
+    pub fn registry(&self) -> &Arc<ShardedRegistry> {
+        &self.registry
     }
 }
 
 impl FilterBackend for NativeBackend {
     fn config(&self) -> &FilterConfig {
-        self.filter.config()
+        self.registry.config()
     }
 
     fn backend_name(&self) -> &'static str {
         "native"
     }
 
+    fn num_shards(&self) -> usize {
+        self.registry.num_shards()
+    }
+
     fn bulk_add(&self, keys: &[u64]) -> Result<()> {
-        self.filter.bulk_add(keys, self.threads);
-        Ok(())
+        self.registry.bulk_add(keys)
     }
 
     fn bulk_contains(&self, keys: &[u64]) -> Result<Vec<bool>> {
-        Ok(self.filter.bulk_contains(keys, self.threads))
+        self.registry.bulk_contains(keys)
     }
 
     fn snapshot(&self) -> Vec<u64> {
-        self.filter.snapshot()
+        self.registry.snapshot_concat()
     }
 }
 
@@ -152,12 +175,26 @@ mod tests {
     #[test]
     fn native_backend_round_trip() {
         let be = NativeBackend::new(FilterConfig { log2_m_words: 12, ..Default::default() }, 2).unwrap();
+        assert_eq!(be.num_shards(), 2);
         let keys = unique_keys(1000, 1);
         be.bulk_add(&keys).unwrap();
         assert!(be.bulk_contains(&keys).unwrap().iter().all(|&b| b));
         let absent = unique_keys(1000, 2);
         let fp = be.bulk_contains(&absent).unwrap().iter().filter(|&&b| b).count();
         assert!(fp < 50, "fp = {fp}");
-        assert_eq!(be.snapshot().len(), 1 << 12);
+        // snapshot concatenates the two shards
+        assert_eq!(be.snapshot().len(), 2 << 12);
+    }
+
+    #[test]
+    fn shared_registry_backend() {
+        let registry =
+            Arc::new(ShardedRegistry::new(FilterConfig { log2_m_words: 12, ..Default::default() }, 4).unwrap());
+        let be = NativeBackend::with_registry(Arc::clone(&registry));
+        let keys = unique_keys(500, 3);
+        be.bulk_add(&keys).unwrap();
+        // writes land in the shared registry, visible to direct readers
+        assert!(registry.bulk_contains(&keys).unwrap().iter().all(|&b| b));
+        assert_eq!(be.registry().num_shards(), 4);
     }
 }

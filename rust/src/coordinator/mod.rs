@@ -1,24 +1,32 @@
 //! Serving coordinator (S8): the L3 request path.
 //!
-//! A vLLM-router-style filter service: clients submit single-key `add` /
-//! `query` requests; the coordinator routes each key to a shard, a
-//! per-shard **dynamic batcher** packs requests into bulk operations
-//! (size- or deadline-triggered, the classic throughput/latency knob), and
-//! a backend executes the batch — either the native Rust filter library or
-//! a PJRT executable produced by the AOT pipeline. Metrics record queue
-//! wait, execution time, and batch-size distributions.
+//! A vLLM-router-style filter service in three pieces:
 //!
-//! Sharding serializes writes per shard (the state-management analogue of
-//! per-SM atomic ownership) while different shards proceed in parallel.
+//! * [`registry`] — the **sharded filter registry**: N independently
+//!   lock-free [`crate::filter::AnyBloom`] shards keyed by a
+//!   `tophash`-derived shard index; bulk requests are split per shard,
+//!   executed in parallel on the infra thread pool, and reassembled in
+//!   request order (the CPU analogue of the paper's thread-cooperation
+//!   axis, and the structural hook for every future scaling PR).
+//! * [`batcher`] — one dynamic batcher packs single-key and bulk requests
+//!   into bulk operations (size- or deadline-triggered, the classic
+//!   throughput/latency knob) and preserves add→query FIFO per key.
+//! * [`backend`] — what formed batches execute on: the native registry or
+//!   a PJRT executable produced by the AOT pipeline.
+//!
+//! [`metrics`] records queue wait, execution time, and batch-size
+//! distributions; [`router`] owns the key→shard hash.
 
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
+pub mod registry;
 pub mod router;
 pub mod server;
 
 pub use backend::{FilterBackend, NativeBackend, PjrtBackend};
 pub use batcher::{BatchPolicy, BulkSink, ReplySink};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use registry::ShardedRegistry;
 pub use router::Router;
 pub use server::{Coordinator, CoordinatorConfig, Op as RequestOp};

@@ -1,0 +1,361 @@
+//! The sharded filter registry: the coordinator's state layer.
+//!
+//! N independent [`AnyBloom`] shards (N a power of two), each a lock-free
+//! filter in its own right (relaxed `fetch_or` inserts, see
+//! [`crate::filter::bloom`]), keyed by a `tophash`-derived shard index from
+//! the [`Router`]. Bulk requests are split per shard, executed **in
+//! parallel on the [`infra/threadpool`](crate::infra::threadpool)**, and
+//! re-assembled in request order — the CPU analogue of the paper's
+//! thread-cooperation axis (§4.1/§4.3): independent lanes own disjoint
+//! partitions of the state and cooperate on one logical bulk operation.
+//!
+//! Sharding is a *state-partitioning* scheme, not a replication scheme:
+//! every key lives in exactly one shard, so the no-false-negative contract
+//! and the per-shard FPR math are those of a single filter at 1/N of the
+//! load. The registry is the structural hook for every future scaling
+//! axis (per-shard metrics, shard placement on PJRT devices, snapshot /
+//! restore, rebalancing).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{ensure, Result};
+
+use crate::filter::params::FilterConfig;
+use crate::filter::AnyBloom;
+use crate::infra::threadpool::ThreadPool;
+
+use super::router::Router;
+
+/// Best-effort extraction of a panic payload's message (the same idiom as
+/// `infra::prop`'s failure reporting).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".into())
+}
+
+/// Completion latch for one bulk call: the pool is shared, so `wait_idle`
+/// would also wait on unrelated callers' jobs — each call counts only its
+/// own shard jobs.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Arc<Latch> {
+        Arc::new(Latch { remaining: Mutex::new(n), done: Condvar::new() })
+    }
+
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.done.wait(r).unwrap();
+        }
+    }
+}
+
+/// Counts its latch down when dropped, so a panicking job can never leave
+/// the waiter blocked forever.
+struct LatchGuard {
+    latch: Arc<Latch>,
+}
+
+impl LatchGuard {
+    fn new(latch: &Arc<Latch>) -> LatchGuard {
+        LatchGuard { latch: Arc::clone(latch) }
+    }
+}
+
+impl Drop for LatchGuard {
+    fn drop(&mut self) {
+        self.latch.count_down();
+    }
+}
+
+/// A registry of independently-addressed filter shards (see module docs).
+pub struct ShardedRegistry {
+    shards: Vec<Arc<AnyBloom>>,
+    router: Router,
+    /// Execution substrate for the parallel bulk path; `None` for a
+    /// single-shard registry, which executes inline.
+    pool: Option<ThreadPool>,
+    cfg: FilterConfig,
+}
+
+impl ShardedRegistry {
+    /// `num_shards` identical shards of `cfg` geometry (total capacity is
+    /// `num_shards`× a single filter's). Power-of-two shard counts only —
+    /// the router takes the top bits of a salted multiplicative hash.
+    pub fn new(cfg: FilterConfig, num_shards: usize) -> Result<Self> {
+        ensure!(
+            num_shards > 0 && num_shards.is_power_of_two() && num_shards <= 1 << 16,
+            "num_shards must be a power of two in 1..=65536, got {num_shards}"
+        );
+        let cfg = cfg.validate()?;
+        let shards = (0..num_shards)
+            .map(|_| AnyBloom::new(cfg).map(Arc::new))
+            .collect::<Result<Vec<_>>>()?;
+        let pool = (num_shards > 1).then(|| ThreadPool::new(num_shards.min(64)));
+        Ok(ShardedRegistry { shards, router: Router::new(num_shards), pool, cfg })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn config(&self) -> &FilterConfig {
+        &self.cfg
+    }
+
+    /// The shard a key routes to.
+    pub fn shard_of(&self, key: u64) -> usize {
+        self.router.shard_of(key)
+    }
+
+    /// Direct access to one shard (diagnostics, tests, warm-starts).
+    pub fn shard(&self, idx: usize) -> &AnyBloom {
+        &self.shards[idx]
+    }
+
+    /// Shared fan-out: run `job(shard, filter, part_keys, part_idx)` for
+    /// every non-empty per-shard partition of `keys` on the pool, waiting
+    /// for all jobs. A job that panics surfaces as an `Err` naming the
+    /// shard and carrying the panic message (the batch is reported failed)
+    /// rather than wedging the caller or killing a pool worker.
+    fn run_sharded<F>(&self, keys: &[u64], op: &'static str, job: F) -> Result<()>
+    where
+        F: Fn(usize, &AnyBloom, Vec<u64>, Vec<usize>) + Send + Sync + 'static,
+    {
+        let pool = self.pool.as_ref().expect("multi-shard registry has a pool");
+        let parts = self.router.partition(keys);
+        let n_jobs = parts.iter().filter(|(p, _)| !p.is_empty()).count();
+        let latch = Latch::new(n_jobs);
+        let failure: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let job = Arc::new(job);
+        for (shard, (part, idx)) in parts.into_iter().enumerate() {
+            if part.is_empty() {
+                continue;
+            }
+            let filter = Arc::clone(&self.shards[shard]);
+            let guard = LatchGuard::new(&latch);
+            let failure = Arc::clone(&failure);
+            let job = Arc::clone(&job);
+            pool.execute(move || {
+                let _guard = guard; // counts down even if the job unwinds
+                if let Err(payload) =
+                    catch_unwind(AssertUnwindSafe(|| (*job)(shard, filter.as_ref(), part, idx)))
+                {
+                    let msg = panic_message(payload);
+                    failure
+                        .lock()
+                        .unwrap()
+                        .get_or_insert_with(|| format!("shard {shard} panicked during {op}: {msg}"));
+                }
+            });
+        }
+        latch.wait();
+        if let Some(msg) = failure.lock().unwrap().take() {
+            anyhow::bail!("{msg}");
+        }
+        Ok(())
+    }
+
+    /// Bulk insert: split per shard, run shard inserts in parallel on the
+    /// pool, return when every shard has published its bits.
+    pub fn bulk_add(&self, keys: &[u64]) -> Result<()> {
+        if keys.is_empty() {
+            return Ok(());
+        }
+        if self.shards.len() == 1 {
+            self.shards[0].bulk_add(keys, 1);
+            return Ok(());
+        }
+        self.run_sharded(keys, "bulk_add", |_, filter, part, _| filter.bulk_add(&part, 1))
+    }
+
+    /// Bulk lookup: split per shard, probe shards in parallel, scatter the
+    /// per-shard answers back into request order. The scatter itself runs
+    /// on the calling thread (jobs hand back whole per-shard vectors, so
+    /// the shared lock only covers O(num_shards) pushes, not O(n) writes).
+    pub fn bulk_contains(&self, keys: &[u64]) -> Result<Vec<bool>> {
+        if keys.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.shards.len() == 1 {
+            return Ok(self.shards[0].bulk_contains(keys, 1));
+        }
+        let collected: Arc<Mutex<Vec<(Vec<usize>, Vec<bool>)>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&collected);
+        self.run_sharded(keys, "bulk_contains", move |_, filter, part, idx| {
+            let hits = filter.bulk_contains(&part, 1);
+            sink.lock().unwrap().push((idx, hits));
+        })?;
+        let mut out = vec![false; keys.len()];
+        for (idx, hits) in collected.lock().unwrap().drain(..) {
+            for (&i, h) in idx.iter().zip(hits) {
+                out[i] = h;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Single-key insert (routes to the owning shard).
+    pub fn add(&self, key: u64) {
+        self.shards[self.router.shard_of(key)].add(key);
+    }
+
+    /// Single-key lookup (routes to the owning shard).
+    pub fn contains(&self, key: u64) -> bool {
+        self.shards[self.router.shard_of(key)].contains(key)
+    }
+
+    /// One shard's words (the PJRT / snapshot hand-off unit).
+    pub fn snapshot_shard(&self, idx: usize) -> Vec<u64> {
+        self.shards[idx].snapshot()
+    }
+
+    /// All shards' words, concatenated in shard order.
+    pub fn snapshot_concat(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.shards.len() * self.cfg.m_words() as usize);
+        for s in &self.shards {
+            out.extend(s.snapshot());
+        }
+        out
+    }
+
+    /// Reset every shard.
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.clear();
+        }
+    }
+
+    /// Mean fill ratio across shards.
+    pub fn fill_ratio(&self) -> f64 {
+        self.shards.iter().map(|s| s.fill_ratio()).sum::<f64>() / self.shards.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::keygen::{disjoint_key_sets, unique_keys};
+
+    fn registry(num_shards: usize) -> ShardedRegistry {
+        ShardedRegistry::new(
+            FilterConfig { log2_m_words: 12, ..Default::default() },
+            num_shards,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn no_false_negatives_across_shard_counts() {
+        for shards in [1usize, 2, 8] {
+            let r = registry(shards);
+            let keys = unique_keys(4000, 1);
+            r.bulk_add(&keys).unwrap();
+            assert!(r.bulk_contains(&keys).unwrap().iter().all(|&h| h), "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn absent_keys_mostly_rejected() {
+        let r = registry(4);
+        let (ins, qry) = disjoint_key_sets(20_000, 10_000, 2);
+        r.bulk_add(&ins).unwrap();
+        let fp = r.bulk_contains(&qry).unwrap().iter().filter(|&&h| h).count();
+        assert!(fp < 300, "fp = {fp}");
+    }
+
+    #[test]
+    fn bulk_equals_single_key_routing() {
+        // the parallel bulk path must land every key in the same shard and
+        // produce the same answers as the single-key path
+        let r = registry(8);
+        let keys = unique_keys(3000, 3);
+        r.bulk_add(&keys[..1500]).unwrap();
+        let bulk = r.bulk_contains(&keys).unwrap();
+        for (i, &key) in keys.iter().enumerate() {
+            assert_eq!(bulk[i], r.contains(key), "key {key:#x}");
+            assert_eq!(bulk[i], r.shard(r.shard_of(key)).contains(key));
+        }
+    }
+
+    #[test]
+    fn parallel_bulk_add_equals_serial_single_adds() {
+        let a = registry(4);
+        let b = registry(4);
+        let keys = unique_keys(5000, 4);
+        a.bulk_add(&keys).unwrap();
+        for &k in &keys {
+            b.add(k);
+        }
+        assert_eq!(a.snapshot_concat(), b.snapshot_concat());
+    }
+
+    #[test]
+    fn results_in_request_order() {
+        let r = registry(8);
+        let keys = unique_keys(2000, 5);
+        r.bulk_add(&keys).unwrap();
+        let mut probe: Vec<u64> = keys.clone();
+        probe.extend(unique_keys(2000, 6)); // absent tail
+        let hits = r.bulk_contains(&probe).unwrap();
+        assert_eq!(hits.len(), probe.len());
+        assert!(hits[..2000].iter().all(|&h| h), "inserted prefix must hit");
+        let tail_hits = hits[2000..].iter().filter(|&&h| h).count();
+        assert!(tail_hits < 200, "absent tail mostly misses: {tail_hits}");
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let r = registry(2);
+        r.bulk_add(&[]).unwrap();
+        assert!(r.bulk_contains(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_non_power_of_two() {
+        let cfg = FilterConfig { log2_m_words: 10, ..Default::default() };
+        assert!(ShardedRegistry::new(cfg, 3).is_err());
+        assert!(ShardedRegistry::new(cfg, 0).is_err());
+    }
+
+    #[test]
+    fn concurrent_bulk_callers_are_isolated() {
+        let r = Arc::new(registry(4));
+        std::thread::scope(|scope| {
+            for t in 0..8u64 {
+                let r = Arc::clone(&r);
+                scope.spawn(move || {
+                    let keys = unique_keys(1500, 100 + t);
+                    r.bulk_add(&keys).unwrap();
+                    assert!(r.bulk_contains(&keys).unwrap().iter().all(|&h| h));
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn clear_and_fill_ratio() {
+        let r = registry(2);
+        assert_eq!(r.fill_ratio(), 0.0);
+        r.bulk_add(&unique_keys(2000, 7)).unwrap();
+        assert!(r.fill_ratio() > 0.0);
+        r.clear();
+        assert_eq!(r.fill_ratio(), 0.0);
+    }
+}

@@ -1,4 +1,12 @@
-//! The coordinator: shards + routers + batchers wired together.
+//! The coordinator: one dynamic batcher in front of a sharded backend.
+//!
+//! Requests (single-key or bulk) enter one FIFO queue; the batcher worker
+//! drains same-operation runs (preserving add→query ordering for a key)
+//! and executes each formed batch on the backend. For the native backend
+//! that is the [`super::registry::ShardedRegistry`], which splits the batch
+//! per shard, runs the shards in parallel on the infra thread pool, and
+//! reassembles results in request order — so cross-shard parallelism lives
+//! in the state layer while the queue gives global FIFO semantics.
 
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
@@ -11,7 +19,6 @@ use crate::filter::params::FilterConfig;
 use super::backend::FilterBackend;
 use super::batcher::{BatchPolicy, Batcher, BatcherHandle, BulkSink, Pending, ReplySink};
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::router::Router;
 
 /// Request kind.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -23,7 +30,8 @@ pub enum Op {
 /// Coordinator construction parameters.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// Power-of-two shard count; each shard owns a filter partition.
+    /// Power-of-two shard count handed to the backend factory; the native
+    /// backend builds a registry with this many filter shards.
     pub num_shards: usize,
     pub policy: BatchPolicy,
 }
@@ -34,59 +42,50 @@ impl Default for CoordinatorConfig {
     }
 }
 
-struct Shard {
+/// The serving coordinator (see module docs of [`crate::coordinator`]).
+pub struct Coordinator {
     batcher: Arc<Batcher>,
     handle: BatcherHandle,
     worker: Option<std::thread::JoinHandle<()>>,
-}
-
-/// The serving coordinator (see module docs of [`crate::coordinator`]).
-pub struct Coordinator {
-    router: Router,
-    shards: Vec<Shard>,
     metrics: Arc<Metrics>,
+    backend: Arc<dyn FilterBackend>,
     filter_config: FilterConfig,
-    backend_name: &'static str,
 }
 
 impl Coordinator {
-    /// Build a coordinator; `make_backend(shard_idx)` constructs each
-    /// shard's backend (each shard owns an independent filter partition).
+    /// Build a coordinator; `make_backend(num_shards)` constructs the
+    /// backend (the native factory builds a `num_shards`-way registry; a
+    /// single-state backend like PJRT may ignore the hint).
     pub fn new(
         cfg: CoordinatorConfig,
-        mut make_backend: impl FnMut(usize) -> Result<Box<dyn FilterBackend>>,
+        make_backend: impl FnOnce(usize) -> Result<Box<dyn FilterBackend>>,
     ) -> Result<Coordinator> {
-        let router = Router::new(cfg.num_shards);
+        let backend: Arc<dyn FilterBackend> = Arc::from(make_backend(cfg.num_shards)?);
+        let filter_config = *backend.config();
         let metrics = Arc::new(Metrics::default());
-        let mut shards = Vec::with_capacity(cfg.num_shards);
-        let mut filter_config = None;
-        let mut backend_name = "unknown";
-        for idx in 0..cfg.num_shards {
-            let backend = make_backend(idx)?;
-            filter_config.get_or_insert(*backend.config());
-            backend_name = backend.backend_name();
-            let batcher = Arc::new(Batcher::new(cfg.policy.clone()));
-            let handle = batcher.handle();
-            let worker = {
-                let batcher = Arc::clone(&batcher);
-                let metrics = Arc::clone(&metrics);
-                std::thread::Builder::new()
-                    .name(format!("gbf-shard-{idx}"))
-                    .spawn(move || batcher.run(backend.as_ref(), &metrics))?
-            };
-            shards.push(Shard { batcher, handle, worker: Some(worker) });
-        }
+        let batcher = Arc::new(Batcher::new(cfg.policy.clone()));
+        let handle = batcher.handle();
+        let worker = {
+            let batcher = Arc::clone(&batcher);
+            let metrics = Arc::clone(&metrics);
+            let backend = Arc::clone(&backend);
+            std::thread::Builder::new()
+                .name("gbf-batch-worker".into())
+                .spawn(move || batcher.run(backend.as_ref(), &metrics))?
+        };
         Ok(Coordinator {
-            router,
-            shards,
+            batcher,
+            handle,
+            worker: Some(worker),
             metrics,
-            filter_config: filter_config.expect("at least one shard"),
-            backend_name,
+            backend,
+            filter_config,
         })
     }
 
+    /// Shard count of the backing state (1 for unsharded backends).
     pub fn num_shards(&self) -> usize {
-        self.shards.len()
+        self.backend.num_shards()
     }
 
     pub fn filter_config(&self) -> &FilterConfig {
@@ -94,14 +93,13 @@ impl Coordinator {
     }
 
     pub fn backend_name(&self) -> &'static str {
-        self.backend_name
+        self.backend.backend_name()
     }
 
     /// Submit one request; the receiver yields the result asynchronously.
     pub fn submit(&self, op: Op, key: u64) -> Receiver<Result<bool>> {
         let (tx, rx) = channel();
-        let shard = self.router.shard_of(key);
-        self.shards[shard].handle.submit(Pending {
+        self.handle.submit(Pending {
             is_add: op == Op::Add,
             key,
             enqueued: Instant::now(),
@@ -111,38 +109,27 @@ impl Coordinator {
     }
 
     /// Submit a whole batch through one shared sink (one allocation per
-    /// call, one lock per formed batch — the L3 hot path, see §Perf).
-    fn submit_bulk(&self, op: Op, keys: &[u64]) -> std::sync::Arc<BulkSink> {
+    /// call, one lock per formed batch — the L3 hot path). Keys keep their
+    /// submission order, so the backend's request-order reassembly is the
+    /// client's result order.
+    fn submit_bulk(&self, op: Op, keys: &[u64]) -> Arc<BulkSink> {
         let sink = BulkSink::new(keys.len());
         let now = Instant::now();
         let is_add = op == Op::Add;
-        if self.shards.len() == 1 {
-            self.shards[0].handle.submit_many(keys.iter().enumerate().map(|(idx, &key)| Pending {
-                is_add,
-                key,
-                enqueued: now,
-                reply: ReplySink::Bulk { sink: std::sync::Arc::clone(&sink), idx },
-            }));
-        } else {
-            for (shard, (part_keys, part_idx)) in self.router.partition(keys).into_iter().enumerate() {
-                if part_keys.is_empty() {
-                    continue;
-                }
-                self.shards[shard].handle.submit_many(
-                    part_keys.iter().zip(&part_idx).map(|(&key, &idx)| Pending {
-                        is_add,
-                        key,
-                        enqueued: now,
-                        reply: ReplySink::Bulk { sink: std::sync::Arc::clone(&sink), idx },
-                    }),
-                );
-            }
-        }
+        self.handle.submit_many(keys.iter().enumerate().map(|(idx, &key)| Pending {
+            is_add,
+            key,
+            enqueued: now,
+            reply: ReplySink::Bulk { sink: Arc::clone(&sink), idx },
+        }));
         sink
     }
 
-    /// Blocking bulk insert: routes, batches, waits for all replies.
+    /// Blocking bulk insert: batches, executes (sharded), waits.
     pub fn add_blocking(&self, keys: &[u64]) -> Result<()> {
+        if keys.is_empty() {
+            return Ok(());
+        }
         let t0 = Instant::now();
         let sink = self.submit_bulk(Op::Add, keys);
         sink.wait()?;
@@ -152,6 +139,9 @@ impl Coordinator {
 
     /// Blocking bulk query preserving input order.
     pub fn query_blocking(&self, keys: &[u64]) -> Result<Vec<bool>> {
+        if keys.is_empty() {
+            return Ok(Vec::new());
+        }
         let t0 = Instant::now();
         let sink = self.submit_bulk(Op::Query, keys);
         let out = sink.wait()?;
@@ -159,9 +149,9 @@ impl Coordinator {
         Ok(out)
     }
 
-    /// Queue depth across shards (backpressure signal).
+    /// Queue depth (backpressure signal).
     pub fn queue_depth(&self) -> usize {
-        self.shards.iter().map(|s| s.handle.depth()).sum()
+        self.handle.depth()
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -171,13 +161,9 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        for s in &self.shards {
-            s.batcher.stop();
-        }
-        for s in &mut self.shards {
-            if let Some(w) = s.worker.take() {
-                let _ = w.join();
-            }
+        self.batcher.stop();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
         }
     }
 }
@@ -194,10 +180,10 @@ mod tests {
             num_shards,
             policy: BatchPolicy { max_batch: 512, max_wait: Duration::from_micros(200) },
         };
-        Coordinator::new(cfg, |_| {
+        Coordinator::new(cfg, |shards| {
             Ok(Box::new(NativeBackend::new(
                 FilterConfig { log2_m_words: 14, ..Default::default() },
-                1,
+                shards,
             )?) as Box<dyn FilterBackend>)
         })
         .unwrap()
@@ -206,6 +192,7 @@ mod tests {
     #[test]
     fn end_to_end_no_false_negatives() {
         let c = native_coordinator(4);
+        assert_eq!(c.num_shards(), 4);
         let keys = unique_keys(5000, 1);
         c.add_blocking(&keys).unwrap();
         let hits = c.query_blocking(&keys).unwrap();
@@ -229,6 +216,7 @@ mod tests {
     #[test]
     fn single_shard_coordinator() {
         let c = native_coordinator(1);
+        assert_eq!(c.num_shards(), 1);
         let keys = unique_keys(100, 3);
         c.add_blocking(&keys).unwrap();
         assert!(c.query_blocking(&keys).unwrap().iter().all(|&h| h));
@@ -250,5 +238,13 @@ mod tests {
             j.join().unwrap();
         }
         assert_eq!(c.metrics().adds, 16_000);
+    }
+
+    #[test]
+    fn empty_bulk_calls_are_noops() {
+        let c = native_coordinator(2);
+        c.add_blocking(&[]).unwrap();
+        assert!(c.query_blocking(&[]).unwrap().is_empty());
+        assert_eq!(c.metrics().batches, 0);
     }
 }

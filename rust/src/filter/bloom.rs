@@ -153,12 +153,37 @@ impl<W: FilterWord> Bloom<W> {
     }
 
     /// Membership test for one key.
+    ///
+    /// Blocked variants take the same dense [`BlockMask`] fast path as
+    /// [`Self::add`]: one whole-word compare per touched block word, with
+    /// probes that share a word (BBF) merged into a single mask test.
     #[inline]
     pub fn contains(&self, key: u64) -> bool {
+        if self.cfg.is_blocked() {
+            let mut bm = BlockMask::default();
+            self.plan.gen_block_mask(key, &mut bm);
+            for w in 0..bm.s {
+                let mask = bm.masks[w];
+                if mask != 0 {
+                    let got = W::load(&self.words[bm.block_word0 as usize + w]).to_u64();
+                    if (got & mask) != mask {
+                        return false;
+                    }
+                }
+            }
+            true
+        } else {
+            self.contains_generic(key)
+        }
+    }
+
+    /// The generic probe-walk lookup (CBF path; equivalence oracle for the
+    /// block-mask fast path in tests).
+    #[inline]
+    fn contains_generic(&self, key: u64) -> bool {
         let mut probes = ProbeSet::default();
         self.plan.gen_probes(key, &mut probes);
-        let ok = self.check_probes(&probes);
-        ok
+        self.check_probes(&probes)
     }
 
     // ---- bulk operations ----
@@ -510,6 +535,70 @@ mod tests {
             let keys = unique_keys(2000, 1);
             f.bulk_add(&keys, 1);
             assert!(f.bulk_contains(&keys, 1).iter().all(|&b| b), "{}", cfg.name());
+        }
+    }
+
+    #[test]
+    fn contains_fast_path_equals_generic_path_every_variant() {
+        // the single-key block-mask lookup must agree with the generic
+        // probe walk on every variant, for hits, misses, and false
+        // positives alike — and both must agree with bulk_contains
+        for cfg in all_cfgs() {
+            let f = Bloom::<u64>::new(cfg).unwrap();
+            let ins = unique_keys(2000, 21);
+            f.bulk_add(&ins, 1);
+            let mut probe = ins.clone();
+            probe.extend(unique_keys(2000, 22)); // absent keys (incl. FPs)
+            let bulk = f.bulk_contains(&probe, 1);
+            for (i, &key) in probe.iter().enumerate() {
+                let fast = f.contains(key);
+                let generic = f.contains_generic(key);
+                assert_eq!(fast, generic, "{}: key {key:#x}", cfg.name());
+                assert_eq!(fast, bulk[i], "{}: key {key:#x} vs bulk", cfg.name());
+            }
+            // inserted keys must hit through both paths
+            assert!(ins.iter().all(|&k| f.contains(k)), "{}", cfg.name());
+        }
+    }
+
+    #[test]
+    fn contains_fast_path_equals_generic_path_u32_engine() {
+        // the same equivalence on the u32 engine, which the fast path's
+        // word-width handling must not truncate
+        let m = 12;
+        let u32_cfgs = vec![
+            FilterConfig { variant: Variant::Sbf, block_bits: 128, word_bits: 32, k: 8, log2_m_words: m, ..Default::default() },
+            FilterConfig { variant: Variant::Rbbf, block_bits: 32, word_bits: 32, k: 16, log2_m_words: m, ..Default::default() },
+            FilterConfig { variant: Variant::Csbf, block_bits: 512, word_bits: 32, k: 16, z: 2, log2_m_words: m, ..Default::default() },
+            FilterConfig { variant: Variant::Bbf, block_bits: 256, word_bits: 32, k: 16, log2_m_words: m, ..Default::default() },
+            FilterConfig { variant: Variant::Cbf, word_bits: 32, k: 16, log2_m_words: m, ..Default::default() },
+        ];
+        for cfg in u32_cfgs {
+            let f = Bloom::<u32>::new(cfg).unwrap();
+            let ins = unique_keys(2000, 24);
+            f.bulk_add(&ins, 1);
+            let mut probe = ins.clone();
+            probe.extend(unique_keys(2000, 25));
+            let bulk = f.bulk_contains(&probe, 1);
+            for (i, &key) in probe.iter().enumerate() {
+                let fast = f.contains(key);
+                assert_eq!(fast, f.contains_generic(key), "{}: key {key:#x}", cfg.name());
+                assert_eq!(fast, bulk[i], "{}: key {key:#x} vs bulk", cfg.name());
+            }
+            assert!(ins.iter().all(|&k| f.contains(k)), "{}", cfg.name());
+        }
+    }
+
+    #[test]
+    fn add_contains_round_trip_single_key_paths() {
+        // add() uses the block-mask write path; contains() the block-mask
+        // read path — a key inserted via one must be found via the other
+        for cfg in all_cfgs() {
+            let f = Bloom::<u64>::new(cfg).unwrap();
+            for key in unique_keys(500, 23) {
+                f.add(key);
+                assert!(f.contains(key), "{}: key {key:#x}", cfg.name());
+            }
         }
     }
 

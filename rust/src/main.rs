@@ -201,10 +201,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // keep the engine actor alive for the whole serve session
     let _engine_holder;
     let coordinator = match backend_kind {
-        "native" => Coordinator::new(cc, |_| {
-            Ok(Box::new(NativeBackend::new(cfg, 1)?) as Box<dyn gbf::coordinator::FilterBackend>)
+        // native: the sharded registry — N filter shards probed in parallel
+        "native" => Coordinator::new(cc, |num_shards| {
+            Ok(Box::new(NativeBackend::new(cfg, num_shards)?)
+                as Box<dyn gbf::coordinator::FilterBackend>)
         })?,
         "pjrt" => {
+            if shards > 1 {
+                eprintln!(
+                    "note: the pjrt backend serves one filter state; --shards {shards} is ignored \
+                     (PJRT shard placement is a ROADMAP item)"
+                );
+            }
             let manifest = Manifest::load(&default_artifact_dir())?;
             let actor = EngineActor::spawn_with_manifest(manifest.clone())?;
             let client = actor.client();

@@ -18,6 +18,10 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use super::manifest::{ArtifactSpec, Manifest};
+// PJRT bindings: the in-tree shim mirrors the `xla` crate's surface and
+// errors at client creation (offline build). Point this alias at the real
+// crate to execute artifacts — no other change needed.
+use super::xla_shim as xla;
 
 /// A compiled artifact.
 struct LoadedArtifact {

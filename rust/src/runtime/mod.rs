@@ -11,6 +11,7 @@
 pub mod actor;
 pub mod executor;
 pub mod manifest;
+pub mod xla_shim;
 
 pub use executor::PjrtEngine;
 pub use manifest::{ArtifactSpec, Manifest};

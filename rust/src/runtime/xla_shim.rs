@@ -1,0 +1,154 @@
+//! In-tree stand-in for the `xla` PJRT bindings.
+//!
+//! The offline build environment does not ship a PJRT runtime, so this
+//! module mirrors the exact API surface [`super::executor`] consumes from
+//! the `xla` crate (client, loaded executable, device buffer, literal, HLO
+//! proto). Every entry point that would touch the real runtime returns a
+//! descriptive error from `PjRtClient::cpu()` onward, so PJRT-dependent
+//! paths degrade to their "no artifacts" skip branches at *runtime* while
+//! the crate builds and tests everywhere.
+//!
+//! To enable real artifact execution, add the `xla` crate as a dependency
+//! and change the `use super::xla_shim as xla;` alias in `executor.rs` to
+//! `use xla;` — no other code changes are required.
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::rc::Rc;
+
+/// Error type matching the `StdError + Send + Sync` bound `anyhow::Context`
+/// requires at the call sites.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "PJRT runtime unavailable in this build: {what} is shimmed \
+         (see runtime::xla_shim; link the real `xla` crate to execute artifacts)"
+    )))
+}
+
+/// Element types the PJRT host/device transfer path understands.
+pub trait NativeType: Copy {}
+impl NativeType for u8 {}
+impl NativeType for i32 {}
+impl NativeType for u64 {}
+
+/// Thread-confined marker: the real client holds `Rc`s internally, making
+/// it `!Send`/`!Sync`; the shim preserves that property so the engine-actor
+/// threading model stays honest.
+type NotSend = PhantomData<Rc<()>>;
+
+/// PJRT client handle (CPU plugin in the real crate).
+pub struct PjRtClient {
+    _not_send: NotSend,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-shim".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+/// A compiled executable resident on the client.
+pub struct PjRtLoadedExecutable {
+    _not_send: NotSend,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed buffer arguments; returns per-device, per-output
+    /// buffer lists (the real crate's `execute_b` shape).
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// A device-resident buffer.
+pub struct PjRtBuffer {
+    _not_send: NotSend,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A host-side literal (typed array view).
+pub struct Literal {
+    _not_send: NotSend,
+}
+
+impl Literal {
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto {
+    _not_send: NotSend,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _not_send: NotSend,
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _not_send: PhantomData }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_fails_with_actionable_error() {
+        let err = PjRtClient::cpu().err().expect("shim must not hand out a client");
+        let msg = err.to_string();
+        assert!(msg.contains("xla_shim"), "{msg}");
+        assert!(msg.contains("PjRtClient::cpu"), "{msg}");
+    }
+
+    #[test]
+    fn computation_constructs_without_runtime() {
+        // proto parsing fails (shimmed), but the wrapper type is inert
+        assert!(HloModuleProto::from_text_file("artifacts/x.hlo.txt").is_err());
+    }
+}

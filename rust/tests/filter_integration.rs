@@ -75,6 +75,61 @@ fn fpr_falls_with_more_bits_per_key() {
 }
 
 #[test]
+fn cross_word_size_equivalence_s64_vs_s32() {
+    // CBF and BBF derive bit positions from the *bit-level* geometry only
+    // (log2_m_bits / log2_block_bits), never from the word size, so an
+    // S = 64 and an S = 32 filter of matching total geometry (same m_bits,
+    // B, k, scheme) hold bit-identical arrays: membership answers and FPR
+    // measurements must match exactly, not just statistically.
+    let cases = [
+        FilterConfig { variant: Variant::Cbf, k: 16, log2_m_words: 13, word_bits: 64, ..Default::default() },
+        FilterConfig { variant: Variant::Bbf, block_bits: 256, k: 16, log2_m_words: 13, word_bits: 64, ..Default::default() },
+        FilterConfig {
+            variant: Variant::Bbf,
+            block_bits: 256,
+            k: 16,
+            scheme: Scheme::Iter,
+            log2_m_words: 13,
+            word_bits: 64,
+            ..Default::default()
+        },
+    ];
+    for cfg64 in cases {
+        // same m_bits: one extra log2 word for half-width words
+        let cfg32 = FilterConfig { word_bits: 32, log2_m_words: cfg64.log2_m_words + 1, ..cfg64 };
+        assert_eq!(cfg64.m_bits(), cfg32.m_bits());
+        let f_w64 = AnyBloom::new(cfg64).unwrap();
+        let f_w32 = AnyBloom::new(cfg32).unwrap();
+        let (ins, qry) = disjoint_key_sets(10_000, 10_000, 17);
+        f_w64.bulk_add(&ins, 0);
+        f_w32.bulk_add(&ins, 0);
+
+        // identical membership answers, false positives included
+        assert_eq!(f_w64.bulk_contains(&ins, 0), f_w32.bulk_contains(&ins, 0), "{}", cfg64.name());
+        assert_eq!(f_w64.bulk_contains(&qry, 0), f_w32.bulk_contains(&qry, 0), "{}", cfg64.name());
+
+        // the underlying bit arrays are identical: u64 word j is the pair
+        // of u32 words (2j, 2j+1) in little-bit order
+        let w64 = f_w64.snapshot();
+        let w32 = f_w32.snapshot();
+        assert_eq!(w32.len(), 2 * w64.len());
+        for (j, &w) in w64.iter().enumerate() {
+            let (lo, hi) = (w32[2 * j], w32[2 * j + 1]);
+            assert_eq!(w, lo | (hi << 32), "{}: word {j}", cfg64.name());
+        }
+
+        // identical FPR measurement through analytics::fpr (same seed ->
+        // same key sets -> bit-identical decisions -> the exact same rate);
+        // overfill past the space-optimal load so the rate is reliably
+        // nonzero and the equality is meaningful
+        let fpr64 = measure_fpr(&cfg64, 60_000, 50_000, 29).unwrap();
+        let fpr32 = measure_fpr(&cfg32, 60_000, 50_000, 29).unwrap();
+        assert_eq!(fpr64, fpr32, "{}", cfg64.name());
+        assert!(fpr64 > 0.0, "{}: want a nonzero rate so the equality is meaningful", cfg64.name());
+    }
+}
+
+#[test]
 fn merge_distributes_over_partitioned_builds() {
     // building two shards and merging == building one filter with all keys
     let cfg = FilterConfig { log2_m_words: 13, ..Default::default() };
