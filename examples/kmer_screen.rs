@@ -1,89 +1,119 @@
-//! Genomics workload (paper §1: k-mer counting / read classification):
-//! build a filter over a reference genome's canonical 21-mers, then screen
-//! sequencing reads for contamination — reads whose k-mers mostly miss the
-//! reference are flagged as foreign.
+//! Genomics workload (paper §1, cuSBF-style): **one filter namespace per
+//! sequencing sample**. Each sample's read k-mers are indexed into its own
+//! filter on a shared `FilterService`; marker sequences are then screened
+//! against every sample *concurrently* (tickets in flight together) to
+//! build a presence/absence matrix — which samples carry the reference
+//! organism, which carry the contaminant.
 //!
 //!     cargo run --release --example kmer_screen
 
 use std::time::Instant;
 
+use gbf::coordinator::{FilterHandle, FilterService};
 use gbf::filter::params::{optimal_k, FilterConfig, Variant};
-use gbf::filter::AnyBloom;
 use gbf::workload::kmer::{extract_kmers, mutate_reads, random_sequence};
 
 const K: usize = 21;
+const READS_PER_SAMPLE: usize = 4_000;
+const READ_LEN: usize = 150;
+
+/// Size a filter for `n` k-mers at ~12 bits each, with the Eq.(2)-optimal
+/// k rounded to SBF's sectorization constraint (k % 4 == 0).
+fn sample_config(n_kmers: usize) -> anyhow::Result<FilterConfig> {
+    let m_bits_target = (n_kmers * 12).next_power_of_two() as u64;
+    let log2_m_words = (m_bits_target / 64).trailing_zeros();
+    let k = optimal_k(m_bits_target, n_kmers as u64).min(16);
+    FilterConfig { variant: Variant::Sbf, block_bits: 256, k: k.max(4) / 4 * 4, log2_m_words, ..Default::default() }
+        .validate()
+}
 
 fn main() -> anyhow::Result<()> {
-    // synthetic "reference genome" + read sets
-    let reference = random_sequence(2_000_000, 7);
-    let clean_reads = mutate_reads(&reference, 2_000, 150, 0.002, 8); // sequencing noise
-    let foreign = random_sequence(1_000_000, 99); // contaminant source
-    let contam_reads = mutate_reads(&foreign, 2_000, 150, 0.002, 9);
+    // two source organisms; four samples (two per organism)
+    let reference = random_sequence(200_000, 7);
+    let contaminant = random_sequence(200_000, 99);
+    let sources = [&reference, &reference, &contaminant, &contaminant];
 
-    // index the reference 21-mers
-    let mut ref_kmers = Vec::new();
-    extract_kmers(&reference, K, &mut ref_kmers);
-    println!("reference: {} bp, {} canonical {K}-mers", reference.len(), ref_kmers.len());
-
-    // pick a filter sized ~12 bits per k-mer with the Eq.(2)-optimal k
-    let m_bits_target = (ref_kmers.len() * 12).next_power_of_two() as u64;
-    let log2_m_words = (m_bits_target / 64).trailing_zeros();
-    let k = optimal_k(m_bits_target, ref_kmers.len() as u64).min(16);
-    let cfg = FilterConfig {
-        variant: Variant::Sbf,
-        block_bits: 256,
-        k: k.max(4) / 4 * 4, // SBF wants k % s == 0 (s = 4)
-        log2_m_words,
-        ..Default::default()
-    }
-    .validate()?;
-    let filter = AnyBloom::new(cfg)?;
+    // index each sample's read k-mers into its own namespace, building
+    // all four filters with tickets in flight together
+    let service = FilterService::new();
     let t0 = Instant::now();
-    filter.bulk_add(&ref_kmers, 0);
+    let mut handles: Vec<FilterHandle> = Vec::new();
+    let mut build_tickets = Vec::new();
+    let mut total_kmers = 0usize;
+    for (i, source) in sources.iter().enumerate() {
+        let reads = mutate_reads(source.as_slice(), READS_PER_SAMPLE, READ_LEN, 0.002, 8 + i as u64);
+        let mut kmers = Vec::new();
+        for read in &reads {
+            extract_kmers(read, K, &mut kmers);
+        }
+        total_kmers += kmers.len();
+        let name = format!("sample{i}");
+        let handle = service.create_filter(&name, sample_config(kmers.len())?, 2)?;
+        build_tickets.push(handle.add_bulk(&kmers));
+        handles.push(handle);
+    }
+    for t in build_tickets {
+        t.wait()?;
+    }
     println!(
-        "built {} in {:?} ({:.1} M kmers/s), fill {:.1}%",
-        cfg.name(),
+        "indexed {} samples ({total_kmers} k-mers total) in {:?}; catalog {:?}",
+        sources.len(),
         t0.elapsed(),
-        ref_kmers.len() as f64 / t0.elapsed().as_secs_f64() / 1e6,
-        filter.fill_ratio() * 100.0
+        service.list_filters()
     );
 
-    // screen both read sets: fraction of read k-mers present in reference
-    let screen = |reads: &[Vec<u8>]| -> (f64, usize) {
-        let mut total_ratio = 0.0;
-        let mut flagged = 0;
-        let mut kmers = Vec::new();
-        for read in reads {
-            kmers.clear();
-            extract_kmers(read, K, &mut kmers);
-            if kmers.is_empty() {
-                continue;
-            }
-            let hits = filter.bulk_contains(&kmers, 1).iter().filter(|&&h| h).count();
-            let ratio = hits as f64 / kmers.len() as f64;
-            total_ratio += ratio;
-            if ratio < 0.5 {
-                flagged += 1; // contamination call
-            }
-        }
-        (total_ratio / reads.len() as f64, flagged)
-    };
+    // markers: a slice of each organism's genome
+    let mut ref_marker = Vec::new();
+    extract_kmers(&reference[..5_000], K, &mut ref_marker);
+    let mut contam_marker = Vec::new();
+    extract_kmers(&contaminant[..5_000], K, &mut contam_marker);
 
+    // screen both markers against every sample namespace concurrently
     let t1 = Instant::now();
-    let (clean_ratio, clean_flagged) = screen(&clean_reads);
-    let (contam_ratio, contam_flagged) = screen(&contam_reads);
-    let n_kmers = (clean_reads.len() + contam_reads.len()) * (150 - K + 1);
+    let screen = |marker: &[u64]| -> anyhow::Result<Vec<f64>> {
+        let tickets: Vec<_> = handles.iter().map(|h| h.query_bulk(marker)).collect();
+        let mut ratios = Vec::new();
+        for t in tickets {
+            let hits = t.wait()?;
+            ratios.push(hits.iter().filter(|&&h| h).count() as f64 / marker.len() as f64);
+        }
+        Ok(ratios)
+    };
+    let ref_ratios = screen(&ref_marker)?;
+    let contam_ratios = screen(&contam_marker)?;
     println!(
-        "screened {} reads ({} k-mer lookups) in {:?}",
-        clean_reads.len() + contam_reads.len(),
-        n_kmers,
+        "screened 2 markers x {} samples ({} lookups) in {:?}",
+        handles.len(),
+        2 * handles.len() * ref_marker.len().max(contam_marker.len()),
         t1.elapsed()
     );
-    println!("clean reads  : mean hit-ratio {clean_ratio:.3}, flagged {clean_flagged}/2000");
-    println!("contam reads : mean hit-ratio {contam_ratio:.3}, flagged {contam_flagged}/2000");
 
-    anyhow::ensure!(clean_flagged < 20, "clean reads should pass");
-    anyhow::ensure!(contam_flagged > 1980, "contaminants should be flagged");
-    println!("classification OK: no false negatives on reference k-mers, contaminants separated");
+    // presence/absence matrix
+    println!("\nsample        ref-marker  contam-marker  call");
+    for (i, (r, c)) in ref_ratios.iter().zip(&contam_ratios).enumerate() {
+        let call = if r > c { "reference organism" } else { "contaminant organism" };
+        println!("sample{i}       {r:>9.3}  {c:>12.3}  {call}");
+    }
+    for name in service.list_filters() {
+        let stats = service.stats(&name)?;
+        println!(
+            "[{}] {} k-mers across {} shards, fill {:.1}%",
+            stats.name,
+            stats.metrics.adds,
+            stats.num_shards,
+            stats.shards.iter().map(|s| s.fill_ratio).sum::<f64>() / stats.shards.len().max(1) as f64 * 100.0
+        );
+    }
+
+    // samples 0/1 carry the reference; 2/3 carry the contaminant
+    for i in 0..2 {
+        anyhow::ensure!(ref_ratios[i] > 0.5, "sample{i} should carry the reference marker");
+        anyhow::ensure!(contam_ratios[i] < 0.1, "sample{i} should not carry the contaminant marker");
+    }
+    for i in 2..4 {
+        anyhow::ensure!(contam_ratios[i] > 0.5, "sample{i} should carry the contaminant marker");
+        anyhow::ensure!(ref_ratios[i] < 0.1, "sample{i} should not carry the reference marker");
+    }
+    println!("\nclassification OK: per-sample namespaces separate the organisms");
     Ok(())
 }

@@ -1,13 +1,24 @@
-//! Quickstart: the core filter API in 60 lines.
+//! Quickstart: the serving API in 10 lines, then the core filter library.
 //!
 //!     cargo run --release --example quickstart
 
 use gbf::analytics::fpr::measure_fpr_space_optimal;
+use gbf::coordinator::FilterService;
 use gbf::filter::params::{space_optimal_n, FilterConfig};
 use gbf::filter::sbf::Sbf;
 use gbf::workload::keygen::disjoint_key_sets;
 
 fn main() -> anyhow::Result<()> {
+    // ---- FilterService hello-world: named filters, ticket receipts ----
+    let service = FilterService::new();
+    let users = service.create_filter("users", FilterConfig::default(), 4)?;
+    users.add_bulk(&[101, 202, 303]).wait()?; // a Ticket: poll it, or .wait()
+    let seen = users.query_bulk(&[101, 202, 303, 999]).wait()?;
+    println!("service: namespaces {:?}, seen = {seen:?}", service.list_filters());
+    assert_eq!(&seen[..3], &[true, true, true]); // no false negatives
+    service.drop_filter("users")?; // admin plane: create / drop / list / stats
+
+    // ---- the filter library underneath ----
     // The paper's headline configuration: a Sectorized Bloom Filter with
     // 256-bit blocks of 64-bit words and k = 16 fingerprint bits.
     // 2^20 words = 8 MiB of filter.

@@ -1,121 +1,165 @@
-//! END-TO-END DRIVER: the full three-layer stack on a real workload.
+//! END-TO-END DRIVER: the multi-tenant filter service on a real workload.
 //!
-//! Proves all layers compose: Pallas kernels (L1) lowered by JAX (L2) to
-//! HLO artifacts, loaded by the PJRT runtime, driven by the Rust serving
-//! coordinator (L3) under batched concurrent traffic — with the native
-//! backend run side by side for comparison and cross-validation.
+//! Proves all layers compose: a `FilterService` hosts several named
+//! namespaces — different geometries, different shard counts — and serves
+//! batched concurrent traffic to all of them at once through ticket-based
+//! handles. When AOT artifacts are present, a PJRT-backed namespace joins
+//! the same catalog (Pallas kernels (L1) lowered by JAX (L2) to HLO,
+//! loaded by the PJRT runtime) and is cross-validated against a native
+//! namespace serving identical traffic.
 //!
-//! Requires `make artifacts`. Run:
+//! Run:
 //!     cargo run --release --example serve_demo
 
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use gbf::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, FilterBackend, NativeBackend, PjrtBackend};
-use gbf::filter::params::FilterConfig;
+use gbf::coordinator::{BatchPolicy, FilterBackend, FilterService, FilterSpec, PjrtBackend};
+use gbf::filter::params::{FilterConfig, Variant};
 use gbf::runtime::actor::EngineActor;
 use gbf::runtime::manifest::{default_artifact_dir, Manifest};
 use gbf::workload::keygen::{disjoint_key_sets, unique_keys};
 use gbf::workload::zipf::Zipf;
 
-const N_CLIENTS: usize = 8;
+const CLIENTS_PER_TENANT: usize = 4;
 const ADDS_PER_CLIENT: usize = 20_000;
 const QUERIES_PER_CLIENT: usize = 30_000;
 
-fn drive(coordinator: Arc<Coordinator>) -> anyhow::Result<()> {
-    println!(
-        "\n=== {} backend: {} shards, filter {} ===",
-        coordinator.backend_name(),
-        coordinator.num_shards(),
-        coordinator.filter_config().name()
-    );
+/// The tenant mix: one namespace per scenario, each with its own geometry.
+fn tenant_specs() -> Vec<(&'static str, FilterConfig, usize)> {
+    vec![
+        ("ads-clicks", FilterConfig::default(), 4),
+        ("search-cache", FilterConfig { variant: Variant::Bbf, log2_m_words: 16, ..Default::default() }, 2),
+        ("fraud-keys", FilterConfig { variant: Variant::Cbf, log2_m_words: 15, ..Default::default() }, 1),
+    ]
+}
 
-    // Phase 1: concurrent clients ingest disjoint key ranges.
-    let t0 = Instant::now();
+/// Drive one tenant with concurrent clients; returns (false_neg, false_pos,
+/// negatives probed) aggregated over its clients.
+fn drive_tenant(service: &FilterService, name: &str, seed: u64) -> anyhow::Result<(usize, usize, usize)> {
+    let handle = service.handle(name)?;
+
+    // ingest: concurrent clients, disjoint key ranges, pipelined tickets
     std::thread::scope(|scope| {
-        for c in 0..N_CLIENTS {
-            let coordinator = Arc::clone(&coordinator);
+        for c in 0..CLIENTS_PER_TENANT {
+            let handle = handle.clone();
             scope.spawn(move || {
-                let keys = unique_keys(ADDS_PER_CLIENT, 0xADD + c as u64);
-                coordinator.add_blocking(&keys).expect("add");
+                let keys = unique_keys(ADDS_PER_CLIENT, seed + c as u64);
+                handle.add_bulk(&keys).wait().expect("add");
             });
         }
     });
-    let ingest_dt = t0.elapsed();
-    let total_adds = N_CLIENTS * ADDS_PER_CLIENT;
-    println!(
-        "ingest : {total_adds} adds in {ingest_dt:?} ({:.2} M ops/s)",
-        total_adds as f64 / ingest_dt.as_secs_f64() / 1e6
-    );
 
-    // Phase 2: mixed lookup traffic — Zipf-skewed over the hot keys,
-    // plus absent keys to exercise the negative path.
-    let t1 = Instant::now();
-    let mut client_results = Vec::new();
+    // lookup: Zipf-skewed hot traffic + absent keys, per client
+    let mut totals = (0usize, 0usize, 0usize);
     std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for c in 0..N_CLIENTS {
-            let coordinator = Arc::clone(&coordinator);
-            handles.push(scope.spawn(move || {
-                let hot = unique_keys(ADDS_PER_CLIENT, 0xADD + c as u64);
+        let mut joins = Vec::new();
+        for c in 0..CLIENTS_PER_TENANT {
+            let handle = handle.clone();
+            joins.push(scope.spawn(move || {
+                let hot = unique_keys(ADDS_PER_CLIENT, seed + c as u64);
                 let mut zipf = Zipf::new(hot.len() as u64, 1.2, c as u64);
                 let trace = zipf.trace(&hot, QUERIES_PER_CLIENT / 2);
-                let (_, absent) = disjoint_key_sets(1, QUERIES_PER_CLIENT / 2, 0xBAD + c as u64);
-                let pos = coordinator.query_blocking(&trace).expect("query");
-                let neg = coordinator.query_blocking(&absent).expect("query");
+                let (_, absent) = disjoint_key_sets(1, QUERIES_PER_CLIENT / 2, seed + 0xBAD + c as u64);
+                // submit both tickets before waiting on either (async plane)
+                let pos_ticket = handle.query_bulk(&trace);
+                let neg_ticket = handle.query_bulk(&absent);
+                let pos = pos_ticket.wait().expect("query");
+                let neg = neg_ticket.wait().expect("query");
                 let false_neg = pos.iter().filter(|&&h| !h).count();
                 let false_pos = neg.iter().filter(|&&h| h).count();
                 (false_neg, false_pos, neg.len())
             }));
         }
-        for h in handles {
-            client_results.push(h.join().unwrap());
+        for j in joins {
+            let (fneg, fpos, n) = j.join().unwrap();
+            totals.0 += fneg;
+            totals.1 += fpos;
+            totals.2 += n;
         }
     });
-    let query_dt = t1.elapsed();
-    let total_queries = N_CLIENTS * QUERIES_PER_CLIENT;
-    let false_negs: usize = client_results.iter().map(|r| r.0).sum();
-    let false_pos: usize = client_results.iter().map(|r| r.1).sum();
-    let negatives: usize = client_results.iter().map(|r| r.2).sum();
-    println!(
-        "lookup : {total_queries} queries in {query_dt:?} ({:.2} M ops/s)",
-        total_queries as f64 / query_dt.as_secs_f64() / 1e6
-    );
-    println!(
-        "quality: false negatives {false_negs} (MUST be 0), FPR {:.3e} over {negatives} absent keys",
-        false_pos as f64 / negatives as f64
-    );
-    anyhow::ensure!(false_negs == 0, "false negatives through the serving stack!");
-    println!("{}", coordinator.metrics().report());
-    Ok(())
+    Ok(totals)
 }
 
 fn main() -> anyhow::Result<()> {
-    let cfg = FilterConfig::default(); // matches the AOT artifacts (1 MiB)
+    let service = FilterService::new();
     let policy = BatchPolicy { max_batch: 4096, max_wait: Duration::from_micros(300) };
 
-    // --- native backend: the sharded registry (4 shards in parallel) ---
-    let native = Coordinator::new(
-        CoordinatorConfig { num_shards: 4, policy: policy.clone() },
-        |num_shards| Ok(Box::new(NativeBackend::new(cfg, num_shards)?) as Box<dyn FilterBackend>),
-    )?;
-    drive(Arc::new(native))?;
+    for (name, cfg, shards) in tenant_specs() {
+        let spec = FilterSpec { config: cfg, shards, policy: policy.clone() };
+        service.create_filter_spec(name, spec)?;
+    }
+    println!("catalog: {:?}", service.list_filters());
 
-    // --- PJRT backend: the AOT Pallas artifacts on the request path ---
+    // all tenants served concurrently — each has its own batcher + state,
+    // so none serializes behind another
+    let t0 = Instant::now();
+    let mut outcomes = Vec::new();
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for (i, (name, _, _)) in tenant_specs().into_iter().enumerate() {
+            let service = &service;
+            joins.push(scope.spawn(move || (name, drive_tenant(service, name, 0xADD0 + i as u64 * 1000))));
+        }
+        for j in joins {
+            outcomes.push(j.join().unwrap());
+        }
+    });
+    let dt = t0.elapsed();
+
+    let total_ops =
+        tenant_specs().len() * CLIENTS_PER_TENANT * (ADDS_PER_CLIENT + QUERIES_PER_CLIENT);
+    println!(
+        "\ndrove {total_ops} ops across {} tenants in {dt:?} ({:.2} M ops/s aggregate)",
+        tenant_specs().len(),
+        total_ops as f64 / dt.as_secs_f64() / 1e6
+    );
+    for (name, outcome) in outcomes {
+        let (false_neg, false_pos, negatives) = outcome?;
+        println!(
+            "[{name}] false negatives {false_neg} (MUST be 0), FPR {:.3e} over {negatives} absent keys",
+            false_pos as f64 / negatives as f64
+        );
+        anyhow::ensure!(false_neg == 0, "false negatives in {name}!");
+        let stats = service.stats(name)?;
+        println!("{}", stats.report());
+        anyhow::ensure!(
+            stats.metrics.adds == (CLIENTS_PER_TENANT * ADDS_PER_CLIENT) as u64,
+            "per-namespace counters count only their own tenant's traffic"
+        );
+    }
+
+    // --- PJRT namespace: the AOT Pallas artifacts join the same catalog ---
     match Manifest::load(&default_artifact_dir()) {
         Ok(manifest) => {
+            let cfg = FilterConfig::default(); // matches the AOT artifacts (1 MiB)
             let actor = EngineActor::spawn_with_manifest(manifest.clone())?;
             let client = actor.client();
-            // one filter state: PJRT shard placement is a ROADMAP item
-            let pjrt = Coordinator::new(CoordinatorConfig { num_shards: 1, policy }, move |_| {
-                Ok(Box::new(PjrtBackend::new(client.clone(), &manifest, cfg, "pallas")?)
-                    as Box<dyn FilterBackend>)
+            let spec = FilterSpec { config: cfg, shards: 1, policy };
+            service.create_filter_with("pjrt-mirror", spec, move |_| {
+                Ok(Box::new(PjrtBackend::new(client, &manifest, cfg, "pallas")?) as Box<dyn FilterBackend>)
             })?;
-            drive(Arc::new(pjrt))?;
-            println!("\nend-to-end OK: L1 Pallas -> L2 JAX -> HLO -> PJRT -> L3 coordinator");
+            // a native namespace with identical geometry serves as oracle:
+            // same keys + same hash pipeline => bit-identical answers
+            service.create_filter("native-mirror", cfg, 1)?;
+            let pjrt = service.handle("pjrt-mirror")?;
+            let native = service.handle("native-mirror")?;
+            let keys = unique_keys(10_000, 0x90DD);
+            let (_, probe) = disjoint_key_sets(1, 20_000, 0x90DE);
+            let a = pjrt.add_bulk(&keys);
+            let b = native.add_bulk(&keys);
+            a.wait()?;
+            b.wait()?;
+            // same probe through both backends, tickets in flight together
+            let p_ticket = pjrt.query_bulk(&probe);
+            let n_ticket = native.query_bulk(&probe);
+            anyhow::ensure!(p_ticket.wait()? == n_ticket.wait()?, "PJRT and native namespaces disagree");
+            let inserted_hits = pjrt.query_bulk(&keys).wait()?;
+            anyhow::ensure!(inserted_hits.iter().all(|&h| h), "false negative through PJRT namespace");
+            println!("\n{}", service.stats("pjrt-mirror")?.report());
+            println!("end-to-end OK: L1 Pallas -> L2 JAX -> HLO -> PJRT -> L3 FilterService namespace");
         }
         Err(e) => {
-            println!("\nskipping PJRT leg: {e:#} (run `make artifacts`)");
+            println!("\nskipping PJRT namespace: {e:#} (run `make artifacts`)");
         }
     }
     Ok(())

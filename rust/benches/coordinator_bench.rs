@@ -1,26 +1,29 @@
 //! Coordinator benchmarks: the sharded registry's parallel bulk path,
-//! batcher formation, router, and end-to-end service throughput under
-//! different batch policies (the L3 hot path).
+//! router, and end-to-end **FilterService** throughput — single namespace
+//! vs. many namespaces under the same total load (tenant isolation is the
+//! L3 story: per-namespace batchers must not serialize cross-tenant
+//! traffic).
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use gbf::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, FilterBackend, NativeBackend, Router,
-    ShardedRegistry,
-};
+use gbf::coordinator::{BatchPolicy, FilterService, FilterSpec, Router, ShardedRegistry};
 use gbf::filter::params::FilterConfig;
 use gbf::infra::bench::{black_box, BenchGroup};
 use gbf::workload::keygen::unique_keys;
 
-fn native(shards: usize, policy: BatchPolicy) -> Coordinator {
-    Coordinator::new(CoordinatorConfig { num_shards: shards, policy }, |num_shards| {
-        Ok(Box::new(NativeBackend::new(
-            FilterConfig { log2_m_words: 18, ..Default::default() },
-            num_shards,
-        )?) as Box<dyn FilterBackend>)
-    })
-    .unwrap()
+fn service_with(namespaces: &[&str], shards: usize, policy: &BatchPolicy) -> FilterService {
+    let service = FilterService::new();
+    for name in namespaces {
+        let spec = FilterSpec {
+            config: FilterConfig { log2_m_words: 18, ..Default::default() },
+            shards,
+            policy: policy.clone(),
+        };
+        service.create_filter_spec(name, spec).unwrap();
+    }
+    service
 }
 
 fn main() {
@@ -56,46 +59,78 @@ fn main() {
         });
     }
 
-    let mut e2e = BenchGroup::new("coordinator end-to-end (sharded native backend)");
-    for (label, max_batch, wait_us) in [
-        ("batch 256 / 100µs", 256usize, 100u64),
-        ("batch 4096 / 200µs", 4096, 200),
-        ("batch 16384 / 500µs", 16384, 500),
-    ] {
-        let c = Arc::new(native(
-            4,
-            BatchPolicy { max_batch, max_wait: Duration::from_micros(wait_us) },
-        ));
-        let coordinator = Arc::clone(&c);
+    let policy = BatchPolicy { max_batch: 4096, max_wait: Duration::from_micros(200) };
+
+    // single namespace, 4 concurrent clients — the pre-redesign shape
+    let mut single = BenchGroup::new("service: 1 namespace x 4 clients (4 shards)");
+    {
+        let service = Arc::new(service_with(&["solo"], 4, &policy));
+        let handle = service.handle("solo").unwrap();
+        handle.add_bulk(&keys).wait().unwrap();
         let bench_keys = keys.clone();
-        e2e.bench(&format!("query {label}"), Some(keys.len() as u64), move || {
-            // 4 concurrent clients, keys split between them
+        single.bench("query 65k split across clients", Some(keys.len() as u64), move || {
             std::thread::scope(|scope| {
                 for chunk in bench_keys.chunks(bench_keys.len() / 4) {
-                    let coordinator = Arc::clone(&coordinator);
+                    let handle = handle.clone();
                     scope.spawn(move || {
-                        black_box(coordinator.query_blocking(chunk).unwrap());
+                        black_box(handle.query_bulk(chunk).wait().unwrap());
                     });
                 }
             });
         });
-        println!("    -> {}", c.metrics().report().replace('\n', "\n    -> "));
     }
 
-    let mut shards = BenchGroup::new("end-to-end shard scaling (batch 4096)");
-    for s in [1usize, 2, 4, 8] {
-        let c = Arc::new(native(s, BatchPolicy { max_batch: 4096, max_wait: Duration::from_micros(200) }));
-        let coordinator = Arc::clone(&c);
+    // same total load spread over 4 namespaces, one client each: isolated
+    // batchers + state should match or beat the single shared namespace
+    let mut multi = BenchGroup::new("service: 4 namespaces x 1 client (1 shard each)");
+    {
+        let names = ["t0", "t1", "t2", "t3"];
+        let service = Arc::new(service_with(&names, 1, &policy));
+        for name in names {
+            service.handle(name).unwrap().add_bulk(&keys).wait().unwrap();
+        }
+        let handles: Vec<_> = names.iter().map(|n| service.handle(n).unwrap()).collect();
         let bench_keys = keys.clone();
-        shards.bench(&format!("query {s} shards"), Some(keys.len() as u64), move || {
+        multi.bench("query 65k split across tenants", Some(keys.len() as u64), move || {
             std::thread::scope(|scope| {
-                for chunk in bench_keys.chunks(bench_keys.len() / 4) {
-                    let coordinator = Arc::clone(&coordinator);
+                for (handle, chunk) in handles.iter().zip(bench_keys.chunks(bench_keys.len() / 4)) {
+                    let handle = handle.clone();
                     scope.spawn(move || {
-                        black_box(coordinator.query_blocking(chunk).unwrap());
+                        black_box(handle.query_bulk(chunk).wait().unwrap());
                     });
                 }
             });
         });
+    }
+
+    // contention: a hot tenant continuously streaming bulk queries in the
+    // background while the timed region covers ONLY the latency tenant's
+    // single-key lookups — per-namespace isolation means the hot queue
+    // must not slow the latency tenant's path
+    let mut contention = BenchGroup::new("service: hot tenant + latency tenant");
+    {
+        let service = Arc::new(service_with(&["hot", "latency"], 2, &policy));
+        let hot = service.handle("hot").unwrap();
+        let lat = service.handle("latency").unwrap();
+        hot.add_bulk(&keys).wait().unwrap();
+        lat.add_bulk(&keys[..1024]).wait().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let hot_thread = {
+            let stop = Arc::clone(&stop);
+            let hot_keys = keys.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    black_box(hot.query_bulk(&hot_keys).wait().unwrap());
+                }
+            })
+        };
+        let bench_keys = keys.clone();
+        contention.bench("1k single-key lookups under hot bulk load", Some(1024), move || {
+            for &k in &bench_keys[..1024] {
+                black_box(lat.query(k).wait().unwrap());
+            }
+        });
+        stop.store(true, Ordering::Relaxed);
+        hot_thread.join().unwrap();
     }
 }

@@ -8,6 +8,7 @@ use crate::filter::params::FilterConfig;
 use crate::runtime::actor::EngineClient;
 use crate::runtime::Manifest;
 
+use super::metrics::ShardStats;
 use super::registry::ShardedRegistry;
 
 /// What the coordinator executes formed batches on.
@@ -17,6 +18,14 @@ pub trait FilterBackend: Send + Sync {
     /// How many state shards back this filter (1 unless sharded).
     fn num_shards(&self) -> usize {
         1
+    }
+    /// Per-shard counters, when the backend tracks them (the sharded
+    /// native registry does; single-state backends return an empty vec).
+    /// This is how clients introspect actual shard placement — e.g. a
+    /// PJRT namespace created with `shards: 8` reports `num_shards() == 1`
+    /// and no shard rows, instead of a stderr warning.
+    fn shard_stats(&self) -> Vec<ShardStats> {
+        Vec::new()
     }
     /// Insert a batch of keys.
     fn bulk_add(&self, keys: &[u64]) -> Result<()>;
@@ -62,6 +71,10 @@ impl FilterBackend for NativeBackend {
 
     fn num_shards(&self) -> usize {
         self.registry.num_shards()
+    }
+
+    fn shard_stats(&self) -> Vec<ShardStats> {
+        self.registry.shard_stats()
     }
 
     fn bulk_add(&self, keys: &[u64]) -> Result<()> {
@@ -184,6 +197,10 @@ mod tests {
         assert!(fp < 50, "fp = {fp}");
         // snapshot concatenates the two shards
         assert_eq!(be.snapshot().len(), 2 << 12);
+        // per-shard counters flow through the backend trait
+        let stats = be.shard_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats.iter().map(|s| s.keys).sum::<u64>(), 3000);
     }
 
     #[test]

@@ -1,19 +1,26 @@
-//! Per-shard dynamic batcher (the vLLM-style continuous-batching knob).
+//! Per-namespace dynamic batcher (the vLLM-style continuous-batching knob).
 //!
 //! Requests accumulate in a queue; a worker drains a run of same-operation
 //! requests when either (a) `max_batch` are waiting, or (b) the oldest has
 //! waited `max_wait`. Bigger batches amortize per-call overhead (crucial
 //! for the PJRT backend, whose artifacts are fixed-shape); the deadline
 //! bounds tail latency under light load.
+//!
+//! Every request completes into a slot of a shared [`BulkSink`] — the
+//! single completion primitive behind [`crate::coordinator::Ticket`]. A
+//! single-key operation is simply a sink of size one, so there is exactly
+//! one reply path to test and one allocation per *client call* instead of
+//! per key (the L3 hot-path optimization).
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::backend::FilterBackend;
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::registry::panic_message;
 
 /// Batch formation policy.
 #[derive(Debug, Clone)]
@@ -28,19 +35,15 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Where a request's result goes.
-pub enum ReplySink {
-    /// One-shot channel (single-request API).
-    Single(Sender<anyhow::Result<bool>>),
-    /// Slot `idx` of a shared bulk sink — one allocation per *client call*
-    /// instead of per key, the L3 hot-path optimization (§Perf).
-    Bulk { sink: std::sync::Arc<BulkSink>, idx: usize },
-}
-
-/// Shared result collector for blocking bulk calls.
+/// Shared result collector for one client call: `n` slots, each completed
+/// exactly once by the batch worker; waiters block (or poll) until every
+/// slot has landed.
 pub struct BulkSink {
     state: Mutex<BulkState>,
     done: Condvar,
+    /// When present, service e2e latency is recorded the moment the last
+    /// slot completes — completion time, not the caller's wait time.
+    e2e: Option<(Arc<Metrics>, Instant)>,
 }
 
 struct BulkState {
@@ -50,29 +53,25 @@ struct BulkState {
 }
 
 impl BulkSink {
-    pub fn new(n: usize) -> std::sync::Arc<Self> {
-        std::sync::Arc::new(BulkSink {
+    pub fn new(n: usize) -> Arc<Self> {
+        Self::build(n, None)
+    }
+
+    /// A sink that records e2e latency into `metrics` when it completes.
+    pub fn with_e2e(n: usize, metrics: Arc<Metrics>, submitted: Instant) -> Arc<Self> {
+        Self::build(n, Some((metrics, submitted)))
+    }
+
+    fn build(n: usize, e2e: Option<(Arc<Metrics>, Instant)>) -> Arc<Self> {
+        Arc::new(BulkSink {
             state: Mutex::new(BulkState { results: vec![false; n], remaining: n, error: None }),
             done: Condvar::new(),
+            e2e,
         })
     }
 
-    /// Complete one slot (used by tests and single-slot callers).
-    pub fn complete(&self, idx: usize, result: anyhow::Result<bool>) {
-        let mut st = self.state.lock().unwrap();
-        match result {
-            Ok(hit) => st.results[idx] = hit,
-            Err(e) => {
-                st.error.get_or_insert_with(|| format!("{e:#}"));
-            }
-        }
-        st.remaining -= 1;
-        if st.remaining == 0 {
-            self.done.notify_all();
-        }
-    }
-
-    /// Fill a run of consecutive completions under one lock (batch fan-out).
+    /// Fill a run of consecutive completions under one lock acquisition
+    /// (batch fan-out).
     fn complete_run(&self, items: &[(usize, bool)], error: Option<&str>) {
         let mut st = self.state.lock().unwrap();
         for &(idx, hit) in items {
@@ -83,29 +82,61 @@ impl BulkSink {
         }
         st.remaining -= items.len();
         if st.remaining == 0 {
+            if let Some((metrics, submitted)) = &self.e2e {
+                metrics.record_e2e(submitted.elapsed().as_nanos() as u64);
+            }
             self.done.notify_all();
         }
     }
 
-    /// Block until every slot completed; returns the results.
-    pub fn wait(&self) -> anyhow::Result<Vec<bool>> {
-        let mut st = self.state.lock().unwrap();
-        while st.remaining > 0 {
-            st = self.done.wait(st).unwrap();
-        }
+    /// True once every slot has completed (the poll path; does not consume
+    /// the results).
+    pub fn is_ready(&self) -> bool {
+        self.state.lock().unwrap().remaining == 0
+    }
+
+    fn take_result(st: &mut BulkState) -> anyhow::Result<Vec<bool>> {
         if let Some(e) = st.error.take() {
             anyhow::bail!("{e}");
         }
         Ok(std::mem::take(&mut st.results))
     }
+
+    /// Block until every slot completed; returns the results. Must be
+    /// called at most once per sink (results move out).
+    pub fn wait(&self) -> anyhow::Result<Vec<bool>> {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+        Self::take_result(&mut st)
+    }
+
+    /// Bounded wait: `Some(results)` if everything completed within
+    /// `timeout`, `None` otherwise (the sink stays valid to wait again).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<anyhow::Result<Vec<bool>>> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _timed_out) = self.done.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        Some(Self::take_result(&mut st))
+    }
 }
 
-/// One queued request.
+/// One queued request: a key, its operation, and the sink slot its result
+/// lands in.
 pub struct Pending {
     pub is_add: bool,
     pub key: u64,
     pub enqueued: Instant,
-    pub reply: ReplySink,
+    pub sink: Arc<BulkSink>,
+    pub idx: usize,
 }
 
 struct Queue {
@@ -114,7 +145,7 @@ struct Queue {
     stop: AtomicBool,
 }
 
-/// A shard's batcher: owns the queue; `run` is the worker body.
+/// A namespace's batcher: owns the queue; `run` is the worker body.
 pub struct Batcher {
     queue: Arc<Queue>,
     policy: BatchPolicy,
@@ -189,11 +220,6 @@ pub struct BatcherHandle {
 }
 
 impl BatcherHandle {
-    pub fn submit(&self, p: Pending) {
-        self.queue.inner.lock().unwrap().push_back(p);
-        self.queue.available.notify_one();
-    }
-
     /// Enqueue many requests under one lock acquisition.
     pub fn submit_many(&self, ps: impl Iterator<Item = Pending>) {
         let mut q = self.queue.inner.lock().unwrap();
@@ -207,9 +233,9 @@ impl BatcherHandle {
     }
 }
 
-/// Execute one formed batch and fan results back out. Consecutive bulk
-/// replies to the same sink are grouped so the whole group completes under
-/// one lock acquisition.
+/// Execute one formed batch and fan results back out. Consecutive replies
+/// to the same sink are grouped so the whole group completes under one
+/// lock acquisition.
 fn execute_batch(batch: Vec<Pending>, backend: &dyn FilterBackend, metrics: &Metrics) {
     debug_assert!(!batch.is_empty());
     let is_add = batch[0].is_add;
@@ -220,47 +246,41 @@ fn execute_batch(batch: Vec<Pending>, backend: &dyn FilterBackend, metrics: &Met
         .max()
         .unwrap_or(0);
     let t0 = Instant::now();
-    let (hits, error) = if is_add {
-        match backend.bulk_add(&keys) {
-            Ok(()) => (vec![true; keys.len()], None),
-            Err(e) => (vec![false; keys.len()], Some(format!("{e:#}"))),
+    // the worker thread must survive a panicking backend: a panic becomes
+    // a batch error delivered to the waiting sinks, never a dead worker
+    // with every outstanding ticket wedged
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        if is_add {
+            backend.bulk_add(&keys).map(|()| vec![true; keys.len()])
+        } else {
+            backend.bulk_contains(&keys)
         }
-    } else {
-        match backend.bulk_contains(&keys) {
-            Ok(h) => (h, None),
-            Err(e) => (vec![false; keys.len()], Some(format!("{e:#}"))),
-        }
+    }));
+    let (hits, error) = match outcome {
+        Ok(Ok(h)) => (h, None),
+        Ok(Err(e)) => (vec![false; keys.len()], Some(format!("{e:#}"))),
+        Err(payload) => (
+            vec![false; keys.len()],
+            Some(format!("backend panicked during batch: {}", panic_message(payload))),
+        ),
     };
     let exec_ns = t0.elapsed().as_nanos() as u64;
     metrics.record_batch(is_add, keys.len() as u64, queue_wait_ns, exec_ns);
 
     let mut iter = batch.into_iter().zip(hits).peekable();
     let mut run: Vec<(usize, bool)> = Vec::new();
-    while let Some((p, hit)) = iter.next() {
-        match p.reply {
-            ReplySink::Single(tx) => {
-                let _ = tx.send(match &error {
-                    None => Ok(hit),
-                    Some(e) => Err(anyhow::anyhow!("{e}")),
-                });
+    loop {
+        let Some((p, hit)) = iter.next() else { break };
+        run.clear();
+        run.push((p.idx, hit));
+        while let Some((next, _)) = iter.peek() {
+            if !Arc::ptr_eq(&p.sink, &next.sink) {
+                break;
             }
-            ReplySink::Bulk { sink, idx } => {
-                run.clear();
-                run.push((idx, hit));
-                while let Some((next, _)) = iter.peek() {
-                    let same = matches!(&next.reply,
-                        ReplySink::Bulk { sink: s2, .. } if std::sync::Arc::ptr_eq(&sink, s2));
-                    if !same {
-                        break;
-                    }
-                    let (p2, h2) = iter.next().unwrap();
-                    if let ReplySink::Bulk { idx: i2, .. } = p2.reply {
-                        run.push((i2, h2));
-                    }
-                }
-                sink.complete_run(&run, error.as_deref());
-            }
+            let (p2, h2) = iter.next().unwrap();
+            run.push((p2.idx, h2));
         }
+        p.sink.complete_run(&run, error.as_deref());
     }
 }
 
@@ -269,7 +289,6 @@ mod tests {
     use super::*;
     use crate::coordinator::backend::NativeBackend;
     use crate::filter::params::FilterConfig;
-    use std::sync::mpsc::channel;
 
     fn spawn_batcher(policy: BatchPolicy) -> (Arc<Batcher>, BatcherHandle, Arc<Metrics>, std::thread::JoinHandle<()>) {
         let batcher = Arc::new(Batcher::new(policy));
@@ -283,28 +302,33 @@ mod tests {
         (batcher, handle, metrics, join)
     }
 
+    fn submit_keys(handle: &BatcherHandle, is_add: bool, keys: &[u64]) -> Arc<BulkSink> {
+        let sink = BulkSink::new(keys.len());
+        let now = Instant::now();
+        handle.submit_many(keys.iter().enumerate().map(|(idx, &key)| Pending {
+            is_add,
+            key,
+            enqueued: now,
+            sink: Arc::clone(&sink),
+            idx,
+        }));
+        sink
+    }
+
     #[test]
     fn batches_form_and_reply() {
         let (batcher, handle, metrics, join) =
             spawn_batcher(BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(2) });
-        let mut rxs = Vec::new();
-        for key in 0..200u64 {
-            let (tx, rx) = channel();
-            handle.submit(Pending { is_add: true, key, enqueued: Instant::now(), reply: ReplySink::Single(tx) });
-            rxs.push(rx);
+        let keys: Vec<u64> = (0..200u64).collect();
+        // submit each key through its own single-slot sink (the single-key
+        // path is a bulk of one)
+        let add_sinks: Vec<Arc<BulkSink>> = keys.iter().map(|&k| submit_keys(&handle, true, &[k])).collect();
+        for sink in add_sinks {
+            assert!(sink.wait().unwrap()[0]);
         }
-        for rx in rxs {
-            assert!(rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap());
-        }
-        // now query the same keys
-        let mut rxs = Vec::new();
-        for key in 0..200u64 {
-            let (tx, rx) = channel();
-            handle.submit(Pending { is_add: false, key, enqueued: Instant::now(), reply: ReplySink::Single(tx) });
-            rxs.push(rx);
-        }
-        for rx in rxs {
-            assert!(rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap(), "no false negatives");
+        let query_sinks: Vec<Arc<BulkSink>> = keys.iter().map(|&k| submit_keys(&handle, false, &[k])).collect();
+        for sink in query_sinks {
+            assert!(sink.wait().unwrap()[0], "no false negatives");
         }
         let snap = metrics.snapshot();
         assert_eq!(snap.adds, 200);
@@ -318,10 +342,9 @@ mod tests {
     fn deadline_fires_for_single_request() {
         let (batcher, handle, _metrics, join) =
             spawn_batcher(BatchPolicy { max_batch: 1 << 20, max_wait: Duration::from_millis(5) });
-        let (tx, rx) = channel();
         let t0 = Instant::now();
-        handle.submit(Pending { is_add: true, key: 7, enqueued: Instant::now(), reply: ReplySink::Single(tx) });
-        assert!(rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap());
+        let sink = submit_keys(&handle, true, &[7]);
+        assert!(sink.wait().unwrap()[0]);
         // replied well before an unbounded batch would have formed
         assert!(t0.elapsed() < Duration::from_millis(500));
         batcher.stop();
@@ -333,17 +356,91 @@ mod tests {
         let (batcher, handle, _m, join) =
             spawn_batcher(BatchPolicy { max_batch: 512, max_wait: Duration::from_micros(100) });
         // interleave: add k, then query k — the query must see the add
-        let mut rxs = Vec::new();
+        let mut sinks = Vec::new();
         for key in 1000..1100u64 {
-            let (tx, _rx) = channel();
-            handle.submit(Pending { is_add: true, key, enqueued: Instant::now(), reply: ReplySink::Single(tx) });
-            let (tx2, rx2) = channel();
-            handle.submit(Pending { is_add: false, key, enqueued: Instant::now(), reply: ReplySink::Single(tx2) });
-            rxs.push(rx2);
+            submit_keys(&handle, true, &[key]);
+            sinks.push(submit_keys(&handle, false, &[key]));
         }
-        for rx in rxs {
-            assert!(rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap());
+        for sink in sinks {
+            assert!(sink.wait().unwrap()[0]);
         }
+        batcher.stop();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn one_sink_spans_many_batches() {
+        let (batcher, handle, _m, join) =
+            spawn_batcher(BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(100) });
+        let keys: Vec<u64> = (0..500u64).collect();
+        let sink = submit_keys(&handle, true, &keys);
+        let results = sink.wait().unwrap();
+        assert_eq!(results.len(), 500);
+        assert!(results.iter().all(|&r| r));
+        batcher.stop();
+        join.join().unwrap();
+    }
+
+    struct PanickyBackend {
+        cfg: FilterConfig,
+    }
+
+    impl FilterBackend for PanickyBackend {
+        fn config(&self) -> &FilterConfig {
+            &self.cfg
+        }
+
+        fn backend_name(&self) -> &'static str {
+            "panicky"
+        }
+
+        fn bulk_add(&self, _keys: &[u64]) -> anyhow::Result<()> {
+            panic!("injected backend panic")
+        }
+
+        fn bulk_contains(&self, keys: &[u64]) -> anyhow::Result<Vec<bool>> {
+            Ok(vec![false; keys.len()])
+        }
+
+        fn snapshot(&self) -> Vec<u64> {
+            Vec::new()
+        }
+    }
+
+    #[test]
+    fn backend_panic_fails_batch_without_killing_worker() {
+        let batcher = Arc::new(Batcher::new(BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(100) }));
+        let handle = batcher.handle();
+        let metrics = Arc::new(Metrics::default());
+        let (b, m) = (Arc::clone(&batcher), Arc::clone(&metrics));
+        let join = std::thread::spawn(move || {
+            let backend = PanickyBackend { cfg: FilterConfig::default() };
+            b.run(&backend, &m);
+        });
+        // the panicking add resolves to an error — nobody wedges
+        let sink = submit_keys(&handle, true, &[1, 2, 3]);
+        let err = sink.wait().unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+        // the worker survived and still serves the next batch
+        let sink = submit_keys(&handle, false, &[1]);
+        assert!(!sink.wait().unwrap()[0]);
+        batcher.stop();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn poll_and_timeout_paths() {
+        let (batcher, handle, _m, join) =
+            spawn_batcher(BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(100) });
+        let sink = submit_keys(&handle, true, &[1, 2, 3]);
+        // bounded wait long enough to always succeed
+        let results = sink.wait_timeout(Duration::from_secs(5)).expect("completes within 5s").unwrap();
+        assert_eq!(results.len(), 3);
+        assert!(sink.is_ready());
+        // an empty-but-never-submitted sink times out without wedging
+        let idle = BulkSink::new(1);
+        assert!(!idle.is_ready());
+        assert!(idle.wait_timeout(Duration::from_millis(10)).is_none());
         batcher.stop();
         join.join().unwrap();
     }

@@ -1,0 +1,69 @@
+//! Typed errors for the filter-service API boundary.
+//!
+//! Internals keep `anyhow` (rich context, cheap composition); everything
+//! that crosses the public [`crate::coordinator::service`] surface is
+//! folded into [`GbfError`] so clients can match on failure kinds instead
+//! of parsing strings.
+
+use std::fmt;
+
+/// Every way a filter-service call can fail.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GbfError {
+    /// The named namespace does not exist (never created, or dropped).
+    NoSuchFilter(String),
+    /// `create_filter` on a name that is already live.
+    FilterExists(String),
+    /// Rejected namespace name or filter geometry.
+    InvalidConfig(String),
+    /// The backend failed executing a batch (carries the flattened cause).
+    Backend(String),
+}
+
+impl GbfError {
+    /// The namespace the error is about, when there is one.
+    pub fn filter_name(&self) -> Option<&str> {
+        match self {
+            GbfError::NoSuchFilter(n) | GbfError::FilterExists(n) => Some(n),
+            GbfError::InvalidConfig(_) | GbfError::Backend(_) => None,
+        }
+    }
+}
+
+impl fmt::Display for GbfError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GbfError::NoSuchFilter(name) => write!(f, "no such filter: {name:?}"),
+            GbfError::FilterExists(name) => write!(f, "filter already exists: {name:?}"),
+            GbfError::InvalidConfig(msg) => write!(f, "invalid config: {msg}"),
+            GbfError::Backend(msg) => write!(f, "backend failure: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for GbfError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_namespace() {
+        let e = GbfError::NoSuchFilter("users".into());
+        assert!(e.to_string().contains("users"));
+        assert_eq!(e.filter_name(), Some("users"));
+        assert_eq!(GbfError::Backend("boom".into()).filter_name(), None);
+    }
+
+    #[test]
+    fn variants_are_matchable() {
+        let e = GbfError::FilterExists("dup".into());
+        assert!(matches!(e, GbfError::FilterExists(ref n) if n == "dup"));
+    }
+
+    #[test]
+    fn is_std_error() {
+        fn takes_err(_: &dyn std::error::Error) {}
+        takes_err(&GbfError::InvalidConfig("k = 0".into()));
+    }
+}

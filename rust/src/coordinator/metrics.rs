@@ -1,4 +1,5 @@
-//! Coordinator metrics: counters + latency histograms.
+//! Coordinator metrics: per-namespace counters + latency histograms, and
+//! the per-shard counters the registry records underneath them.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -95,6 +96,43 @@ impl MetricsSnapshot {
     }
 }
 
+/// Point-in-time view of one registry shard's counters (ROADMAP per-shard
+/// metrics): how many pool jobs it executed, how many keys they carried,
+/// and where that shard's time went (waiting for a pool worker vs.
+/// executing). `fill_ratio` is the balance signal — uniform routing keeps
+/// the shards' ratios together.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Pool jobs (per-shard slices of bulk calls) executed on this shard.
+    pub jobs: u64,
+    /// Keys those jobs carried (adds + queries).
+    pub keys: u64,
+    /// Total nanoseconds jobs spent queued before a pool worker ran them.
+    pub queue_ns: u64,
+    /// Total nanoseconds spent executing on the shard's filter.
+    pub exec_ns: u64,
+    /// The shard filter's fraction of set bits.
+    pub fill_ratio: f64,
+}
+
+impl ShardStats {
+    /// One human-readable line for shutdown reports / diagnostics.
+    pub fn report_line(&self) -> String {
+        let mean_exec_us = if self.jobs == 0 { 0.0 } else { self.exec_ns as f64 / self.jobs as f64 / 1e3 };
+        format!(
+            "shard {:>3}: {:>8} keys in {:>6} jobs | queue {:>8.1} µs, exec {:>8.1} µs (mean {:.1} µs/job) | fill {:.1}%",
+            self.shard,
+            self.keys,
+            self.jobs,
+            self.queue_ns as f64 / 1e3,
+            self.exec_ns as f64 / 1e3,
+            mean_exec_us,
+            self.fill_ratio * 100.0,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,5 +155,16 @@ mod tests {
         let m = Metrics::default();
         m.record_batch(false, 10, 100, 100);
         assert!(m.snapshot().report().contains("batches"));
+    }
+
+    #[test]
+    fn shard_stats_report_line() {
+        let s = ShardStats { shard: 2, jobs: 4, keys: 4096, queue_ns: 8_000, exec_ns: 40_000, fill_ratio: 0.25 };
+        let line = s.report_line();
+        assert!(line.contains("shard"), "{line}");
+        assert!(line.contains("4096"), "{line}");
+        assert!(line.contains("25.0%"), "{line}");
+        // zero-job shards render without dividing by zero
+        assert!(ShardStats::default().report_line().contains("shard"));
     }
 }

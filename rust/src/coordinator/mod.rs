@@ -1,32 +1,53 @@
-//! Serving coordinator (S8): the L3 request path.
+//! Serving coordinator (S8): the L3 request path as a **multi-tenant
+//! filter service**.
 //!
-//! A vLLM-router-style filter service in three pieces:
+//! The public surface is two planes on a [`service::FilterService`]:
+//!
+//! * **admin plane** — `create_filter(name, config, shards)` /
+//!   `drop_filter` / `list_filters` / `stats(name)`: a catalog of named
+//!   namespaces, each an independent filter instance (own geometry, own
+//!   sharded state, own batcher worker, own metrics). Errors are the
+//!   typed [`error::GbfError`].
+//! * **data plane** — a clonable [`service::FilterHandle`] whose
+//!   operations (`add`, `query`, `add_bulk`, `query_bulk`) return
+//!   [`ticket::Ticket`] receipts: poll with `is_ready`, bound with
+//!   `wait_timeout`, or block with `wait`.
+//!
+//! Underneath, each namespace is the same vLLM-router-style engine stack:
 //!
 //! * [`registry`] — the **sharded filter registry**: N independently
 //!   lock-free [`crate::filter::AnyBloom`] shards keyed by a
 //!   `tophash`-derived shard index; bulk requests are split per shard,
 //!   executed in parallel on the infra thread pool, and reassembled in
-//!   request order (the CPU analogue of the paper's thread-cooperation
-//!   axis, and the structural hook for every future scaling PR).
-//! * [`batcher`] — one dynamic batcher packs single-key and bulk requests
-//!   into bulk operations (size- or deadline-triggered, the classic
-//!   throughput/latency knob) and preserves add→query FIFO per key.
+//!   request order — now with per-shard queue/exec/key counters
+//!   ([`metrics::ShardStats`]) surfaced through `stats(name)`.
+//! * `batcher` (crate-private) — one dynamic batcher per namespace packs
+//!   requests into bulk operations (size- or deadline-triggered) and
+//!   preserves add→query FIFO per key; every reply lands in a `BulkSink`
+//!   slot, the completion primitive behind `Ticket`.
 //! * [`backend`] — what formed batches execute on: the native registry or
 //!   a PJRT executable produced by the AOT pipeline.
+//! * `server` (crate-private) — the per-namespace engine wiring batcher,
+//!   backend, and [`metrics`] together. It is not exported: the only
+//!   public route to a filter is a named handle from the service.
 //!
-//! [`metrics`] records queue wait, execution time, and batch-size
-//! distributions; [`router`] owns the key→shard hash.
+//! [`router`] owns the key→shard hash.
 
 pub mod backend;
-pub mod batcher;
+pub(crate) mod batcher;
+pub mod error;
 pub mod metrics;
 pub mod registry;
 pub mod router;
-pub mod server;
+pub(crate) mod server;
+pub mod service;
+pub mod ticket;
 
 pub use backend::{FilterBackend, NativeBackend, PjrtBackend};
-pub use batcher::{BatchPolicy, BulkSink, ReplySink};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use batcher::BatchPolicy;
+pub use error::GbfError;
+pub use metrics::{Metrics, MetricsSnapshot, ShardStats};
 pub use registry::ShardedRegistry;
 pub use router::Router;
-pub use server::{Coordinator, CoordinatorConfig, Op as RequestOp};
+pub use service::{FilterHandle, FilterService, FilterSpec, NamespaceStats};
+pub use ticket::Ticket;

@@ -17,7 +17,9 @@
 //! restore, rebalancing).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
@@ -25,11 +27,13 @@ use crate::filter::params::FilterConfig;
 use crate::filter::AnyBloom;
 use crate::infra::threadpool::ThreadPool;
 
+use super::metrics::ShardStats;
 use super::router::Router;
 
 /// Best-effort extraction of a panic payload's message (the same idiom as
-/// `infra::prop`'s failure reporting).
-fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+/// `infra::prop`'s failure reporting). Shared with the batcher's
+/// panic-containment net.
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     payload
         .downcast_ref::<String>()
         .cloned()
@@ -84,9 +88,32 @@ impl Drop for LatchGuard {
     }
 }
 
+/// Lock-free per-shard counters (ROADMAP per-shard metrics): every
+/// *completed* bulk job records how long it queued for a pool worker, how
+/// long it executed, and how many keys it carried (a panicked job surfaces
+/// as a batch error, never as served traffic). Snapshot via
+/// [`ShardedRegistry::shard_stats`].
+#[derive(Default)]
+struct ShardCounters {
+    jobs: AtomicU64,
+    keys: AtomicU64,
+    queue_ns: AtomicU64,
+    exec_ns: AtomicU64,
+}
+
+impl ShardCounters {
+    fn record(&self, keys: u64, queue_ns: u64, exec_ns: u64) {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        self.keys.fetch_add(keys, Ordering::Relaxed);
+        self.queue_ns.fetch_add(queue_ns, Ordering::Relaxed);
+        self.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
+    }
+}
+
 /// A registry of independently-addressed filter shards (see module docs).
 pub struct ShardedRegistry {
     shards: Vec<Arc<AnyBloom>>,
+    counters: Vec<Arc<ShardCounters>>,
     router: Router,
     /// Execution substrate for the parallel bulk path; `None` for a
     /// single-shard registry, which executes inline.
@@ -107,8 +134,9 @@ impl ShardedRegistry {
         let shards = (0..num_shards)
             .map(|_| AnyBloom::new(cfg).map(Arc::new))
             .collect::<Result<Vec<_>>>()?;
+        let counters = (0..num_shards).map(|_| Arc::new(ShardCounters::default())).collect();
         let pool = (num_shards > 1).then(|| ThreadPool::new(num_shards.min(64)));
-        Ok(ShardedRegistry { shards, router: Router::new(num_shards), pool, cfg })
+        Ok(ShardedRegistry { shards, counters, router: Router::new(num_shards), pool, cfg })
     }
 
     pub fn num_shards(&self) -> usize {
@@ -149,19 +177,30 @@ impl ShardedRegistry {
                 continue;
             }
             let filter = Arc::clone(&self.shards[shard]);
+            let counters = Arc::clone(&self.counters[shard]);
             let guard = LatchGuard::new(&latch);
             let failure = Arc::clone(&failure);
             let job = Arc::clone(&job);
+            let submitted = Instant::now();
             pool.execute(move || {
                 let _guard = guard; // counts down even if the job unwinds
-                if let Err(payload) =
-                    catch_unwind(AssertUnwindSafe(|| (*job)(shard, filter.as_ref(), part, idx)))
-                {
-                    let msg = panic_message(payload);
-                    failure
-                        .lock()
-                        .unwrap()
-                        .get_or_insert_with(|| format!("shard {shard} panicked during {op}: {msg}"));
+                let started = Instant::now();
+                let n_keys = part.len() as u64;
+                // counters record COMPLETED work only — a panicked job's
+                // keys must not show up as served traffic
+                match catch_unwind(AssertUnwindSafe(|| (*job)(shard, filter.as_ref(), part, idx))) {
+                    Ok(()) => counters.record(
+                        n_keys,
+                        started.duration_since(submitted).as_nanos() as u64,
+                        started.elapsed().as_nanos() as u64,
+                    ),
+                    Err(payload) => {
+                        let msg = panic_message(payload);
+                        failure
+                            .lock()
+                            .unwrap()
+                            .get_or_insert_with(|| format!("shard {shard} panicked during {op}: {msg}"));
+                    }
                 }
             });
         }
@@ -179,7 +218,9 @@ impl ShardedRegistry {
             return Ok(());
         }
         if self.shards.len() == 1 {
+            let t0 = Instant::now();
             self.shards[0].bulk_add(keys, 1);
+            self.counters[0].record(keys.len() as u64, 0, t0.elapsed().as_nanos() as u64);
             return Ok(());
         }
         self.run_sharded(keys, "bulk_add", |_, filter, part, _| filter.bulk_add(&part, 1))
@@ -194,7 +235,10 @@ impl ShardedRegistry {
             return Ok(Vec::new());
         }
         if self.shards.len() == 1 {
-            return Ok(self.shards[0].bulk_contains(keys, 1));
+            let t0 = Instant::now();
+            let hits = self.shards[0].bulk_contains(keys, 1);
+            self.counters[0].record(keys.len() as u64, 0, t0.elapsed().as_nanos() as u64);
+            return Ok(hits);
         }
         let collected: Arc<Mutex<Vec<(Vec<usize>, Vec<bool>)>>> = Arc::new(Mutex::new(Vec::new()));
         let sink = Arc::clone(&collected);
@@ -245,6 +289,25 @@ impl ShardedRegistry {
     /// Mean fill ratio across shards.
     pub fn fill_ratio(&self) -> f64 {
         self.shards.iter().map(|s| s.fill_ratio()).sum::<f64>() / self.shards.len() as f64
+    }
+
+    /// Point-in-time per-shard counters (jobs, keys, queue/exec time) plus
+    /// each shard filter's fill ratio — the ROADMAP per-shard metrics,
+    /// surfaced through the service's `stats(name)` admin call.
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.counters
+            .iter()
+            .zip(&self.shards)
+            .enumerate()
+            .map(|(shard, (c, filter))| ShardStats {
+                shard,
+                jobs: c.jobs.load(Ordering::Relaxed),
+                keys: c.keys.load(Ordering::Relaxed),
+                queue_ns: c.queue_ns.load(Ordering::Relaxed),
+                exec_ns: c.exec_ns.load(Ordering::Relaxed),
+                fill_ratio: filter.fill_ratio(),
+            })
+            .collect()
     }
 }
 
@@ -347,6 +410,38 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn per_shard_counters_cover_all_traffic() {
+        let r = registry(4);
+        let keys = unique_keys(8000, 9);
+        r.bulk_add(&keys).unwrap();
+        r.bulk_contains(&keys).unwrap();
+        let stats = r.shard_stats();
+        assert_eq!(stats.len(), 4);
+        let total_keys: u64 = stats.iter().map(|s| s.keys).sum();
+        assert_eq!(total_keys, 16_000, "every key counted exactly once per op");
+        for s in &stats {
+            assert!(s.jobs >= 2, "shard {} ran add+contains jobs: {}", s.shard, s.jobs);
+            assert!(s.keys > 0, "uniform routing reaches shard {}", s.shard);
+            assert!(s.fill_ratio > 0.0);
+        }
+        // exec time is recorded for work actually done
+        assert!(stats.iter().map(|s| s.exec_ns).sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn single_shard_counters_recorded_inline() {
+        let r = registry(1);
+        let keys = unique_keys(1000, 10);
+        r.bulk_add(&keys).unwrap();
+        r.bulk_contains(&keys).unwrap();
+        let stats = r.shard_stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].keys, 2000);
+        assert_eq!(stats[0].jobs, 2);
+        assert_eq!(stats[0].queue_ns, 0, "inline path never queues");
     }
 
     #[test]

@@ -1,14 +1,19 @@
-//! The coordinator: one dynamic batcher in front of a sharded backend.
+//! The per-namespace engine: one dynamic batcher in front of one backend.
 //!
-//! Requests (single-key or bulk) enter one FIFO queue; the batcher worker
-//! drains same-operation runs (preserving add→query ordering for a key)
-//! and executes each formed batch on the backend. For the native backend
-//! that is the [`super::registry::ShardedRegistry`], which splits the batch
+//! This is the machinery behind a single named filter in the
+//! [`super::service::FilterService`] catalog — it is *crate-private* on
+//! purpose: the only public route to a filter is through a
+//! [`super::service::FilterHandle`], so there is no API path to an
+//! unnamed/implicit filter.
+//!
+//! Requests enter one FIFO queue; the batcher worker drains
+//! same-operation runs (preserving add→query ordering for a key) and
+//! executes each formed batch on the backend. For the native backend that
+//! is the [`super::registry::ShardedRegistry`], which splits the batch
 //! per shard, runs the shards in parallel on the infra thread pool, and
-//! reassembles results in request order — so cross-shard parallelism lives
-//! in the state layer while the queue gives global FIFO semantics.
+//! reassembles results in request order — so cross-shard parallelism
+//! lives in the state layer while the queue gives global FIFO semantics.
 
-use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -17,8 +22,8 @@ use anyhow::Result;
 use crate::filter::params::FilterConfig;
 
 use super::backend::FilterBackend;
-use super::batcher::{BatchPolicy, Batcher, BatcherHandle, BulkSink, Pending, ReplySink};
-use super::metrics::{Metrics, MetricsSnapshot};
+use super::batcher::{BatchPolicy, Batcher, BatcherHandle, BulkSink, Pending};
+use super::metrics::{Metrics, ShardStats};
 
 /// Request kind.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -27,7 +32,7 @@ pub enum Op {
     Query,
 }
 
-/// Coordinator construction parameters.
+/// Engine construction parameters.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     /// Power-of-two shard count handed to the backend factory; the native
@@ -42,7 +47,7 @@ impl Default for CoordinatorConfig {
     }
 }
 
-/// The serving coordinator (see module docs of [`crate::coordinator`]).
+/// One namespace's serving engine (see module docs).
 pub struct Coordinator {
     batcher: Arc<Batcher>,
     handle: BatcherHandle,
@@ -53,8 +58,8 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Build a coordinator; `make_backend(num_shards)` constructs the
-    /// backend (the native factory builds a `num_shards`-way registry; a
+    /// Build an engine; `make_backend(num_shards)` constructs the backend
+    /// (the native factory builds a `num_shards`-way registry; a
     /// single-state backend like PJRT may ignore the hint).
     pub fn new(
         cfg: CoordinatorConfig,
@@ -96,57 +101,29 @@ impl Coordinator {
         self.backend.backend_name()
     }
 
-    /// Submit one request; the receiver yields the result asynchronously.
-    pub fn submit(&self, op: Op, key: u64) -> Receiver<Result<bool>> {
-        let (tx, rx) = channel();
-        self.handle.submit(Pending {
-            is_add: op == Op::Add,
-            key,
-            enqueued: Instant::now(),
-            reply: ReplySink::Single(tx),
-        });
-        rx
+    /// Per-shard counters from the backing state (empty for single-state
+    /// backends such as PJRT).
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.backend.shard_stats()
     }
 
     /// Submit a whole batch through one shared sink (one allocation per
     /// call, one lock per formed batch — the L3 hot path). Keys keep their
     /// submission order, so the backend's request-order reassembly is the
-    /// client's result order.
-    fn submit_bulk(&self, op: Op, keys: &[u64]) -> Arc<BulkSink> {
-        let sink = BulkSink::new(keys.len());
+    /// client's result order. The caller (a `Ticket`) waits on the sink;
+    /// the sink itself records e2e latency when its last slot completes.
+    pub fn submit_bulk(&self, op: Op, keys: &[u64]) -> Arc<BulkSink> {
         let now = Instant::now();
+        let sink = BulkSink::with_e2e(keys.len(), Arc::clone(&self.metrics), now);
         let is_add = op == Op::Add;
         self.handle.submit_many(keys.iter().enumerate().map(|(idx, &key)| Pending {
             is_add,
             key,
             enqueued: now,
-            reply: ReplySink::Bulk { sink: Arc::clone(&sink), idx },
+            sink: Arc::clone(&sink),
+            idx,
         }));
         sink
-    }
-
-    /// Blocking bulk insert: batches, executes (sharded), waits.
-    pub fn add_blocking(&self, keys: &[u64]) -> Result<()> {
-        if keys.is_empty() {
-            return Ok(());
-        }
-        let t0 = Instant::now();
-        let sink = self.submit_bulk(Op::Add, keys);
-        sink.wait()?;
-        self.metrics.record_e2e(t0.elapsed().as_nanos() as u64);
-        Ok(())
-    }
-
-    /// Blocking bulk query preserving input order.
-    pub fn query_blocking(&self, keys: &[u64]) -> Result<Vec<bool>> {
-        if keys.is_empty() {
-            return Ok(Vec::new());
-        }
-        let t0 = Instant::now();
-        let sink = self.submit_bulk(Op::Query, keys);
-        let out = sink.wait()?;
-        self.metrics.record_e2e(t0.elapsed().as_nanos() as u64);
-        Ok(out)
     }
 
     /// Queue depth (backpressure signal).
@@ -154,8 +131,8 @@ impl Coordinator {
         self.handle.depth()
     }
 
-    pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
     }
 }
 
@@ -175,7 +152,7 @@ mod tests {
     use crate::workload::keygen::{disjoint_key_sets, unique_keys};
     use std::time::Duration;
 
-    fn native_coordinator(num_shards: usize) -> Coordinator {
+    fn native_engine(num_shards: usize) -> Coordinator {
         let cfg = CoordinatorConfig {
             num_shards,
             policy: BatchPolicy { max_batch: 512, max_wait: Duration::from_micros(200) },
@@ -191,60 +168,64 @@ mod tests {
 
     #[test]
     fn end_to_end_no_false_negatives() {
-        let c = native_coordinator(4);
+        let c = native_engine(4);
         assert_eq!(c.num_shards(), 4);
         let keys = unique_keys(5000, 1);
-        c.add_blocking(&keys).unwrap();
-        let hits = c.query_blocking(&keys).unwrap();
+        c.submit_bulk(Op::Add, &keys).wait().unwrap();
+        let hits = c.submit_bulk(Op::Query, &keys).wait().unwrap();
         assert!(hits.iter().all(|&h| h));
-        let m = c.metrics();
+        let m = c.metrics().snapshot();
         assert_eq!(m.adds, 5000);
         assert_eq!(m.queries, 5000);
         assert!(m.mean_batch_size > 4.0, "batching effective: {}", m.mean_batch_size);
+        // the registry's per-shard counters surface through the engine
+        let stats = c.shard_stats();
+        assert_eq!(stats.len(), 4);
+        assert_eq!(stats.iter().map(|s| s.keys).sum::<u64>(), 10_000);
     }
 
     #[test]
     fn absent_keys_mostly_rejected() {
-        let c = native_coordinator(2);
+        let c = native_engine(2);
         let (ins, qry) = disjoint_key_sets(20_000, 5_000, 2);
-        c.add_blocking(&ins).unwrap();
-        let hits = c.query_blocking(&qry).unwrap();
+        c.submit_bulk(Op::Add, &ins).wait().unwrap();
+        let hits = c.submit_bulk(Op::Query, &qry).wait().unwrap();
         let fp = hits.iter().filter(|&&h| h).count();
         assert!(fp < 100, "fp = {fp}");
     }
 
     #[test]
-    fn single_shard_coordinator() {
-        let c = native_coordinator(1);
+    fn single_shard_engine() {
+        let c = native_engine(1);
         assert_eq!(c.num_shards(), 1);
         let keys = unique_keys(100, 3);
-        c.add_blocking(&keys).unwrap();
-        assert!(c.query_blocking(&keys).unwrap().iter().all(|&h| h));
+        c.submit_bulk(Op::Add, &keys).wait().unwrap();
+        assert!(c.submit_bulk(Op::Query, &keys).wait().unwrap().iter().all(|&h| h));
     }
 
     #[test]
     fn concurrent_clients() {
-        let c = Arc::new(native_coordinator(4));
+        let c = Arc::new(native_engine(4));
         let mut joins = Vec::new();
         for t in 0..8u64 {
             let c = Arc::clone(&c);
             joins.push(std::thread::spawn(move || {
                 let keys = unique_keys(2000, 100 + t);
-                c.add_blocking(&keys).unwrap();
-                assert!(c.query_blocking(&keys).unwrap().iter().all(|&h| h));
+                c.submit_bulk(Op::Add, &keys).wait().unwrap();
+                assert!(c.submit_bulk(Op::Query, &keys).wait().unwrap().iter().all(|&h| h));
             }));
         }
         for j in joins {
             j.join().unwrap();
         }
-        assert_eq!(c.metrics().adds, 16_000);
+        assert_eq!(c.metrics().snapshot().adds, 16_000);
     }
 
     #[test]
-    fn empty_bulk_calls_are_noops() {
-        let c = native_coordinator(2);
-        c.add_blocking(&[]).unwrap();
-        assert!(c.query_blocking(&[]).unwrap().is_empty());
-        assert_eq!(c.metrics().batches, 0);
+    fn queue_depth_drains() {
+        let c = native_engine(2);
+        let keys = unique_keys(10_000, 4);
+        c.submit_bulk(Op::Add, &keys).wait().unwrap();
+        assert_eq!(c.queue_depth(), 0);
     }
 }

@@ -1,0 +1,425 @@
+//! `FilterService` — the multi-tenant filter catalog (the public L3 API).
+//!
+//! A service owns any number of **named namespaces**, each a fully
+//! independent filter instance: its own geometry ([`FilterSpec`]), its own
+//! sharded state, its own batcher worker, its own metrics. Tenants never
+//! share a queue, so traffic to one namespace cannot serialize behind
+//! another's — the multi-filter deployments of the ROADMAP (semi-join
+//! pre-filters per query, per-sample k-mer screens) map one scenario unit
+//! to one namespace.
+//!
+//! Two planes:
+//!
+//! * **admin** — [`FilterService::create_filter`] /
+//!   [`FilterService::drop_filter`] / [`FilterService::list_filters`] /
+//!   [`FilterService::stats`], all returning typed [`GbfError`]s.
+//! * **data** — a cheap clonable [`FilterHandle`] whose operations
+//!   (`add`, `query`, `add_bulk`, `query_bulk`) return [`Ticket`]
+//!   receipts: submit everywhere first, wait later. Blocking is just
+//!   `handle.add_bulk(keys).wait()`.
+//!
+//! There is deliberately no anonymous filter: every filter is created by
+//! name and reached through a handle.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::Result;
+
+use crate::filter::params::FilterConfig;
+
+use super::backend::{FilterBackend, NativeBackend};
+use super::batcher::BatchPolicy;
+use super::error::GbfError;
+use super::metrics::{MetricsSnapshot, ShardStats};
+use super::server::{Coordinator, CoordinatorConfig, Op};
+use super::ticket::{finish_all, finish_one, finish_unit, Ticket};
+
+/// Everything a namespace needs at creation time.
+#[derive(Debug, Clone)]
+pub struct FilterSpec {
+    pub config: FilterConfig,
+    /// Power-of-two shard count for the backing state. Single-state
+    /// backends (PJRT) may place fewer shards than requested; the actual
+    /// placement is introspectable via [`NamespaceStats::num_shards`].
+    pub shards: usize,
+    pub policy: BatchPolicy,
+}
+
+impl Default for FilterSpec {
+    fn default() -> Self {
+        FilterSpec { config: FilterConfig::default(), shards: 4, policy: BatchPolicy::default() }
+    }
+}
+
+impl FilterSpec {
+    pub fn new(config: FilterConfig, shards: usize) -> Self {
+        FilterSpec { config, shards, ..Default::default() }
+    }
+}
+
+/// One live namespace: the engine plus its service-level identity. The
+/// `dropped` flag outlives catalog removal so handles cloned before a
+/// `drop_filter` fail fast instead of writing into a zombie filter.
+struct Namespace {
+    name: String,
+    engine: Coordinator,
+    requested_shards: usize,
+    dropped: AtomicBool,
+}
+
+impl Namespace {
+    fn stats(&self) -> NamespaceStats {
+        NamespaceStats {
+            name: self.name.clone(),
+            backend: self.engine.backend_name(),
+            config: *self.engine.filter_config(),
+            requested_shards: self.requested_shards,
+            num_shards: self.engine.num_shards(),
+            queue_depth: self.engine.queue_depth(),
+            metrics: self.engine.metrics().snapshot(),
+            shards: self.engine.shard_stats(),
+        }
+    }
+}
+
+/// Point-in-time admin view of one namespace: identity, placement
+/// (requested vs. actual shards), per-namespace op counters/latency, and
+/// the registry's per-shard counters.
+#[derive(Debug, Clone)]
+pub struct NamespaceStats {
+    pub name: String,
+    pub backend: &'static str,
+    pub config: FilterConfig,
+    /// Shards asked for at creation; a single-state backend reports
+    /// `num_shards == 1` here instead of warning on stderr.
+    pub requested_shards: usize,
+    pub num_shards: usize,
+    pub queue_depth: usize,
+    pub metrics: MetricsSnapshot,
+    /// Per-shard counters (empty for single-state backends).
+    pub shards: Vec<ShardStats>,
+}
+
+impl NamespaceStats {
+    /// Multi-line human-readable report (the `gbf serve` shutdown form).
+    pub fn report(&self) -> String {
+        let placement = if self.num_shards == self.requested_shards {
+            String::new()
+        } else {
+            format!(" (requested {})", self.requested_shards)
+        };
+        let mut out = format!(
+            "[{}] backend {} | filter {} | shards {}{} | queue depth {}\n{}",
+            self.name,
+            self.backend,
+            self.config.name(),
+            self.num_shards,
+            placement,
+            self.queue_depth,
+            self.metrics.report(),
+        );
+        for s in &self.shards {
+            out.push_str("\n  ");
+            out.push_str(&s.report_line());
+        }
+        out
+    }
+}
+
+fn validate_name(name: &str) -> Result<(), GbfError> {
+    let ok = !name.is_empty() && name.chars().all(|c| c.is_ascii_alphanumeric() || "._-".contains(c));
+    if ok {
+        Ok(())
+    } else {
+        Err(GbfError::InvalidConfig(format!(
+            "namespace name {name:?} must be non-empty and use only [A-Za-z0-9._-]"
+        )))
+    }
+}
+
+/// The multi-tenant filter catalog (see module docs).
+#[derive(Default)]
+pub struct FilterService {
+    namespaces: RwLock<HashMap<String, Arc<Namespace>>>,
+}
+
+impl FilterService {
+    pub fn new() -> FilterService {
+        FilterService::default()
+    }
+
+    /// Create a native (sharded-registry) namespace and return its handle.
+    pub fn create_filter(&self, name: &str, config: FilterConfig, shards: usize) -> Result<FilterHandle, GbfError> {
+        self.create_filter_spec(name, FilterSpec::new(config, shards))
+    }
+
+    /// Create a native namespace from a full [`FilterSpec`] (custom batch
+    /// policy); the common path for callers that tune batching per tenant.
+    pub fn create_filter_spec(&self, name: &str, spec: FilterSpec) -> Result<FilterHandle, GbfError> {
+        let config = spec.config;
+        self.create_filter_with(name, spec, move |s| {
+            Ok(Box::new(NativeBackend::new(config, s)?) as Box<dyn FilterBackend>)
+        })
+    }
+
+    /// Create a namespace over a custom backend (PJRT, test doubles):
+    /// `make_backend(shards)` builds the state; a backend that cannot
+    /// shard simply reports fewer shards in [`NamespaceStats`].
+    pub fn create_filter_with(
+        &self,
+        name: &str,
+        spec: FilterSpec,
+        make_backend: impl FnOnce(usize) -> Result<Box<dyn FilterBackend>>,
+    ) -> Result<FilterHandle, GbfError> {
+        validate_name(name)?;
+        spec.config.validate().map_err(|e| GbfError::InvalidConfig(format!("{e:#}")))?;
+        // Cheap pre-check so the deterministic duplicate-name error never
+        // pays for a throwaway engine (the Entry check below still decides
+        // the genuine create/create race).
+        if self.namespaces.read().unwrap().contains_key(name) {
+            return Err(GbfError::FilterExists(name.to_string()));
+        }
+        // Build the engine OUTSIDE the catalog lock: construction can be
+        // expensive (multi-GiB shard allocation, PJRT artifact loading)
+        // and must not stall other tenants' lookups. If two creates race
+        // on one name, the loser's engine is simply dropped.
+        let engine = Coordinator::new(
+            CoordinatorConfig { num_shards: spec.shards, policy: spec.policy },
+            make_backend,
+        )
+        .map_err(|e| GbfError::Backend(format!("{e:#}")))?;
+        let ns = Arc::new(Namespace {
+            name: name.to_string(),
+            engine,
+            requested_shards: spec.shards,
+            dropped: AtomicBool::new(false),
+        });
+        let mut map = self.namespaces.write().unwrap();
+        match map.entry(name.to_string()) {
+            Entry::Occupied(_) => Err(GbfError::FilterExists(name.to_string())),
+            Entry::Vacant(slot) => {
+                slot.insert(Arc::clone(&ns));
+                Ok(FilterHandle { ns })
+            }
+        }
+    }
+
+    /// Remove a namespace from the catalog. Outstanding handles observe
+    /// the drop: their next operation fails with
+    /// [`GbfError::NoSuchFilter`]; in-flight batches still complete.
+    pub fn drop_filter(&self, name: &str) -> Result<(), GbfError> {
+        let ns = self
+            .namespaces
+            .write()
+            .unwrap()
+            .remove(name)
+            .ok_or_else(|| GbfError::NoSuchFilter(name.to_string()))?;
+        ns.dropped.store(true, Ordering::Release);
+        Ok(())
+    }
+
+    /// Names of all live namespaces, sorted.
+    pub fn list_filters(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.namespaces.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// A fresh data-plane handle to a live namespace.
+    pub fn handle(&self, name: &str) -> Result<FilterHandle, GbfError> {
+        Ok(FilterHandle { ns: self.lookup(name)? })
+    }
+
+    /// Admin-plane introspection of one namespace.
+    pub fn stats(&self, name: &str) -> Result<NamespaceStats, GbfError> {
+        Ok(self.lookup(name)?.stats())
+    }
+
+    fn lookup(&self, name: &str) -> Result<Arc<Namespace>, GbfError> {
+        self.namespaces
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| GbfError::NoSuchFilter(name.to_string()))
+    }
+}
+
+/// Cheap clonable data-plane handle to one namespace (see module docs).
+/// Handles stay valid across `drop_filter`: the namespace's state lives
+/// until the last handle goes away, but operations after the drop fail
+/// with [`GbfError::NoSuchFilter`].
+#[derive(Clone)]
+pub struct FilterHandle {
+    ns: Arc<Namespace>,
+}
+
+impl fmt::Debug for FilterHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("FilterHandle")
+            .field("name", &self.ns.name)
+            .field("backend", &self.backend_name())
+            .field("live", &self.is_live())
+            .finish()
+    }
+}
+
+impl FilterHandle {
+    pub fn name(&self) -> &str {
+        &self.ns.name
+    }
+
+    pub fn filter_config(&self) -> &FilterConfig {
+        self.ns.engine.filter_config()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.ns.engine.backend_name()
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.ns.engine.num_shards()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.ns.engine.queue_depth()
+    }
+
+    /// False once the namespace has been dropped from its service.
+    pub fn is_live(&self) -> bool {
+        !self.ns.dropped.load(Ordering::Acquire)
+    }
+
+    /// Stats for this namespace (works even for a dropped one, for
+    /// post-mortem reads — admin-plane `stats(name)` is the live view).
+    pub fn stats(&self) -> NamespaceStats {
+        self.ns.stats()
+    }
+
+    fn submit<T>(&self, op: Op, keys: &[u64], finish: fn(Vec<bool>) -> T) -> Ticket<T> {
+        if !self.is_live() {
+            return Ticket::failed(GbfError::NoSuchFilter(self.ns.name.clone()), finish);
+        }
+        if keys.is_empty() {
+            return Ticket::ready(finish);
+        }
+        Ticket::pending(self.ns.engine.submit_bulk(op, keys), finish)
+    }
+
+    /// Insert one key.
+    pub fn add(&self, key: u64) -> Ticket<()> {
+        self.submit(Op::Add, &[key], finish_unit)
+    }
+
+    /// Look up one key.
+    pub fn query(&self, key: u64) -> Ticket<bool> {
+        self.submit(Op::Query, &[key], finish_one)
+    }
+
+    /// Insert a batch (results in submission order are implicit: adds
+    /// have no per-key answer).
+    pub fn add_bulk(&self, keys: &[u64]) -> Ticket<()> {
+        self.submit(Op::Add, keys, finish_unit)
+    }
+
+    /// Look up a batch; the resolved `Vec<bool>` is in submission order.
+    pub fn query_bulk(&self, keys: &[u64]) -> Ticket<Vec<bool>> {
+        self.submit(Op::Query, keys, finish_all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::keygen::unique_keys;
+
+    fn small_cfg(log2_m_words: u32) -> FilterConfig {
+        FilterConfig { log2_m_words, ..Default::default() }
+    }
+
+    #[test]
+    fn hello_world_lifecycle() {
+        let service = FilterService::new();
+        let users = service.create_filter("users", small_cfg(12), 2).unwrap();
+        users.add_bulk(&[1, 2, 3]).wait().unwrap();
+        let hits = users.query_bulk(&[1, 2, 3, 0xDEAD]).wait().unwrap();
+        assert_eq!(&hits[..3], &[true, true, true]);
+        assert_eq!(service.list_filters(), vec!["users".to_string()]);
+        service.drop_filter("users").unwrap();
+        assert!(service.list_filters().is_empty());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let service = FilterService::new();
+        service.create_filter("dup", small_cfg(12), 1).unwrap();
+        let err = service.create_filter("dup", small_cfg(13), 2).unwrap_err();
+        assert_eq!(err, GbfError::FilterExists("dup".into()));
+        // dropping frees the name for re-use
+        service.drop_filter("dup").unwrap();
+        service.create_filter("dup", small_cfg(13), 2).unwrap();
+    }
+
+    #[test]
+    fn invalid_names_and_configs_rejected() {
+        let service = FilterService::new();
+        assert!(matches!(service.create_filter("", small_cfg(12), 1), Err(GbfError::InvalidConfig(_))));
+        assert!(matches!(service.create_filter("a:b", small_cfg(12), 1), Err(GbfError::InvalidConfig(_))));
+        let bad = FilterConfig { k: 0, ..Default::default() };
+        assert!(matches!(service.create_filter("badk", bad, 1), Err(GbfError::InvalidConfig(_))));
+        // non-power-of-two shard counts surface the backend's refusal
+        assert!(service.create_filter("bad-shards", small_cfg(12), 3).is_err());
+        assert!(service.list_filters().is_empty(), "failed creates leave no residue");
+    }
+
+    #[test]
+    fn dropped_namespace_fails_fast_on_old_handles() {
+        let service = FilterService::new();
+        let h = service.create_filter("ephemeral", small_cfg(12), 2).unwrap();
+        h.add_bulk(&unique_keys(100, 1)).wait().unwrap();
+        service.drop_filter("ephemeral").unwrap();
+        assert!(!h.is_live());
+        let err = h.query_bulk(&[1]).wait().unwrap_err();
+        assert_eq!(err, GbfError::NoSuchFilter("ephemeral".into()));
+        assert_eq!(h.add(9).wait().unwrap_err(), GbfError::NoSuchFilter("ephemeral".into()));
+        assert_eq!(service.stats("ephemeral").unwrap_err(), GbfError::NoSuchFilter("ephemeral".into()));
+        assert_eq!(service.handle("ephemeral").unwrap_err(), GbfError::NoSuchFilter("ephemeral".into()));
+        assert_eq!(service.drop_filter("ephemeral").unwrap_err(), GbfError::NoSuchFilter("ephemeral".into()));
+    }
+
+    #[test]
+    fn empty_bulk_is_a_ready_ticket() {
+        let service = FilterService::new();
+        let h = service.create_filter("empty", small_cfg(12), 1).unwrap();
+        let t = h.query_bulk(&[]);
+        assert!(t.is_ready());
+        assert_eq!(t.wait().unwrap(), Vec::<bool>::new());
+        h.add_bulk(&[]).wait().unwrap();
+        assert_eq!(h.stats().metrics.batches, 0, "empty calls never form batches");
+    }
+
+    #[test]
+    fn single_key_ops_round_trip() {
+        let service = FilterService::new();
+        let h = service.create_filter("singles", small_cfg(12), 2).unwrap();
+        h.add(0xFEED).wait().unwrap();
+        assert!(h.query(0xFEED).wait().unwrap());
+        let stats = h.stats();
+        assert_eq!(stats.metrics.adds, 1);
+        assert_eq!(stats.metrics.queries, 1);
+    }
+
+    #[test]
+    fn stats_report_names_the_namespace() {
+        let service = FilterService::new();
+        let h = service.create_filter("reportme", small_cfg(12), 2).unwrap();
+        h.add_bulk(&unique_keys(500, 2)).wait().unwrap();
+        let report = service.stats("reportme").unwrap().report();
+        assert!(report.contains("[reportme]"), "{report}");
+        assert!(report.contains("shard"), "per-shard lines present: {report}");
+    }
+}

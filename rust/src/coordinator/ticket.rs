@@ -1,0 +1,131 @@
+//! `Ticket<T>` — the async request plane's receipt.
+//!
+//! Every data-plane operation on a [`super::service::FilterHandle`]
+//! returns a ticket instead of blocking: the caller can keep submitting
+//! (pipelining work across namespaces), poll with [`Ticket::is_ready`],
+//! bound the wait with [`Ticket::wait_timeout`], or block with
+//! [`Ticket::wait`]. The blocking path of the old API is exactly
+//! `handle.add_bulk(keys).wait()`.
+//!
+//! A ticket resolves once the batcher has executed every key of the call;
+//! results come back in submission order. Tickets for operations that
+//! could not be submitted (e.g. the namespace was dropped) are born
+//! resolved with the error.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::batcher::BulkSink;
+use super::error::GbfError;
+
+enum Inner {
+    /// Resolved at construction: empty submission or a service-level error.
+    Done(Result<Vec<bool>, GbfError>),
+    /// In flight: the batch worker completes the sink slot by slot (the
+    /// sink records e2e latency itself, at completion time).
+    Pending(Arc<BulkSink>),
+}
+
+/// A poll-or-block receipt for one submitted operation (see module docs).
+#[must_use = "a Ticket does nothing until waited on; drop it only to abandon the result"]
+pub struct Ticket<T> {
+    inner: Inner,
+    /// Shapes the raw per-key bits into the operation's result type
+    /// (`()` for adds, `bool` for single queries, `Vec<bool>` for bulk).
+    finish: fn(Vec<bool>) -> T,
+}
+
+impl<T> Ticket<T> {
+    pub(crate) fn pending(sink: Arc<BulkSink>, finish: fn(Vec<bool>) -> T) -> Self {
+        Ticket { inner: Inner::Pending(sink), finish }
+    }
+
+    pub(crate) fn failed(err: GbfError, finish: fn(Vec<bool>) -> T) -> Self {
+        Ticket { inner: Inner::Done(Err(err)), finish }
+    }
+
+    pub(crate) fn ready(finish: fn(Vec<bool>) -> T) -> Self {
+        Ticket { inner: Inner::Done(Ok(Vec::new())), finish }
+    }
+
+    /// True once the result is available; `wait` will then not block.
+    pub fn is_ready(&self) -> bool {
+        match &self.inner {
+            Inner::Done(_) => true,
+            Inner::Pending(sink) => sink.is_ready(),
+        }
+    }
+
+    /// Block until the operation completes and return its result.
+    pub fn wait(self) -> Result<T, GbfError> {
+        let finish = self.finish;
+        let result = match self.inner {
+            Inner::Done(r) => r,
+            Inner::Pending(sink) => sink.wait().map_err(|e| GbfError::Backend(format!("{e:#}"))),
+        };
+        result.map(finish)
+    }
+
+    /// Bounded block: `Ok(result)` if the operation completed within
+    /// `timeout`, otherwise `Err(self)` — the ticket is handed back so the
+    /// caller can keep polling or waiting.
+    #[allow(clippy::result_large_err)] // Err is the ticket itself, by design
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Result<T, GbfError>, Ticket<T>> {
+        let finish = self.finish;
+        match self.inner {
+            Inner::Done(r) => Ok(r.map(finish)),
+            Inner::Pending(sink) => match sink.wait_timeout(timeout) {
+                Some(r) => Ok(r.map_err(|e| GbfError::Backend(format!("{e:#}"))).map(finish)),
+                None => Err(Ticket { inner: Inner::Pending(sink), finish }),
+            },
+        }
+    }
+}
+
+/// `finish` shapers for the three result types.
+pub(crate) fn finish_unit(_: Vec<bool>) {}
+
+pub(crate) fn finish_one(hits: Vec<bool>) -> bool {
+    hits.first().copied().unwrap_or(false)
+}
+
+pub(crate) fn finish_all(hits: Vec<bool>) -> Vec<bool> {
+    hits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failed_ticket_resolves_immediately() {
+        let t: Ticket<Vec<bool>> = Ticket::failed(GbfError::NoSuchFilter("gone".into()), finish_all);
+        assert!(t.is_ready());
+        assert_eq!(t.wait(), Err(GbfError::NoSuchFilter("gone".into())));
+    }
+
+    #[test]
+    fn ready_ticket_yields_empty_result() {
+        let t: Ticket<Vec<bool>> = Ticket::ready(finish_all);
+        assert!(t.is_ready());
+        assert_eq!(t.wait(), Ok(Vec::new()));
+        let u: Ticket<()> = Ticket::ready(finish_unit);
+        assert_eq!(u.wait(), Ok(()));
+    }
+
+    #[test]
+    fn wait_timeout_on_done_ticket_never_times_out() {
+        let t: Ticket<bool> = Ticket::ready(finish_one);
+        match t.wait_timeout(Duration::from_nanos(1)) {
+            Ok(r) => assert_eq!(r, Ok(false), "empty result shapes to false"),
+            Err(_) => panic!("done ticket must not time out"),
+        }
+    }
+
+    #[test]
+    fn finish_shapers() {
+        assert!(!finish_one(Vec::new()));
+        assert!(finish_one(vec![true, false]));
+        assert_eq!(finish_all(vec![true]), vec![true]);
+    }
+}

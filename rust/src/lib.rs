@@ -18,7 +18,7 @@
 //! | [`filter`]    | filter geometry + the five variants (S2–S3) |
 //! | [`gpu_sim`]   | B200/H200/RTX PRO 6000 performance model (S9) |
 //! | [`runtime`]   | PJRT artifact loading & execution (S7) |
-//! | [`coordinator`] | router / dynamic batcher / filter state (S8) |
+//! | [`coordinator`] | multi-tenant filter service: namespaces, tickets, sharded state (S8) |
 //! | [`workload`]  | key generators, k-mer encoder, traces (S11) |
 //! | [`analytics`] | empirical FPR & statistics (S12) |
 //! | [`experiments`] | regenerates every paper table & figure (S10) |

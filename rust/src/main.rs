@@ -6,13 +6,13 @@
 //!   fpr --variant ... --block .. measure FPR for one configuration
 //!   sim --variant ... --arch ..  query the GPU performance model
 //!   gups                         speed-of-light micro-benchmark
-//!   serve --requests N           run the serving coordinator demo
+//!   serve --filters spec         run the multi-tenant filter service demo
 
 use std::path::PathBuf;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
-use gbf::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, NativeBackend, PjrtBackend};
+use anyhow::{bail, ensure, Context, Result};
+use gbf::coordinator::{BatchPolicy, FilterBackend, FilterService, FilterSpec, PjrtBackend};
 use gbf::experiments;
 use gbf::filter::params::{space_optimal_n, FilterConfig, Scheme, Variant};
 use gbf::gpu_sim::{model, Features, GpuArch, Op};
@@ -57,7 +57,10 @@ fn print_usage() {
            fpr  --variant v --block B --k K [--z Z] [--log2-m N]\n  \
            sim  --variant v --block B [--theta T] [--phi P] [--op o] [--arch a] [--size-mb M]\n  \
            gups                         random-access speed-of-light\n  \
-           serve --requests N [--backend native|pjrt] [--shards S] [--batch B]"
+           serve [--filters name:variant:<N>bits,...] [--requests N]\n  \
+                 [--backend native|pjrt] [--shards S] [--batch B] [--max-wait-us U]\n\n\
+         serve hosts one namespace per --filters entry on a FilterService,\n\
+         e.g. --filters hot:sbf:23bits,cold:bbf:20bits"
     );
 }
 
@@ -185,73 +188,141 @@ fn print_prediction(theta: u32, phi: u32, p: &model::Prediction) {
     );
 }
 
+/// One `--filters` entry: `name:variant:<log2-m-bits>bits`, e.g.
+/// `hot:sbf:23bits` = namespace "hot", SBF, 2^23 filter bits (1 MiB).
+fn parse_filter_entry(entry: &str) -> Result<(String, FilterConfig)> {
+    let mut it = entry.split(':');
+    let (Some(name), Some(variant), Some(size), None) = (it.next(), it.next(), it.next(), it.next()) else {
+        bail!("bad --filters entry {entry:?} (want name:variant:<N>bits, e.g. hot:sbf:23bits)");
+    };
+    let variant = Variant::parse(variant)?;
+    let digits = size.strip_suffix("bits").unwrap_or(size);
+    let log2_m_bits: u32 =
+        digits.parse().with_context(|| format!("bad size {size:?} in --filters entry {entry:?}"))?;
+    ensure!((10..=40).contains(&log2_m_bits), "filter size 2^{log2_m_bits} bits out of range (10..=40)");
+    let mut cfg = FilterConfig { variant, log2_m_words: log2_m_bits - 6, ..Default::default() };
+    // per-variant geometry defaults (the paper's Figure 1 shapes)
+    match variant {
+        Variant::Rbbf => cfg.block_bits = 64,
+        Variant::Csbf => {
+            cfg.block_bits = 512;
+            cfg.z = 2;
+        }
+        _ => {}
+    }
+    Ok((name.to_string(), cfg.validate()?))
+}
+
+fn parse_filters_flag(spec: &str) -> Result<Vec<(String, FilterConfig)>> {
+    let entries = spec
+        .split(',')
+        .filter(|e| !e.is_empty())
+        .map(parse_filter_entry)
+        .collect::<Result<Vec<_>>>()?;
+    ensure!(!entries.is_empty(), "--filters needs at least one entry");
+    Ok(entries)
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.check_known(&["requests", "backend", "shards", "batch", "max-wait-us", "log2-m"])?;
+    args.check_known(&["filters", "requests", "backend", "shards", "batch", "max-wait-us"])?;
     let requests = args.get_parse("requests", 100_000usize)?;
     let backend_kind = args.get_or("backend", "native");
     let shards = args.get_parse("shards", 4usize)?;
     let batch = args.get_parse("batch", 4096usize)?;
     let max_wait_us = args.get_parse("max-wait-us", 200u64)?;
-    let log2_m = args.get_parse("log2-m", 17u32)?;
+    let specs = parse_filters_flag(args.get_or("filters", "main:sbf:23bits"))?;
 
     let policy = BatchPolicy { max_batch: batch, max_wait: std::time::Duration::from_micros(max_wait_us) };
-    let cc = CoordinatorConfig { num_shards: shards, policy };
-    let cfg = FilterConfig { log2_m_words: log2_m, ..Default::default() };
+    let service = FilterService::new();
 
     // keep the engine actor alive for the whole serve session
     let _engine_holder;
-    let coordinator = match backend_kind {
-        // native: the sharded registry — N filter shards probed in parallel
-        "native" => Coordinator::new(cc, |num_shards| {
-            Ok(Box::new(NativeBackend::new(cfg, num_shards)?)
-                as Box<dyn gbf::coordinator::FilterBackend>)
-        })?,
-        "pjrt" => {
-            if shards > 1 {
-                eprintln!(
-                    "note: the pjrt backend serves one filter state; --shards {shards} is ignored \
-                     (PJRT shard placement is a ROADMAP item)"
-                );
+    match backend_kind {
+        // native: one sharded registry per namespace
+        "native" => {
+            for (name, cfg) in &specs {
+                let spec = FilterSpec { config: *cfg, shards, policy: policy.clone() };
+                service.create_filter_spec(name, spec)?;
             }
+        }
+        // pjrt: one AOT filter state per namespace behind a shared engine
+        // actor; single-state placement (num_shards = 1, whatever was
+        // requested) is visible in the per-namespace stats below.
+        "pjrt" => {
             let manifest = Manifest::load(&default_artifact_dir())?;
             let actor = EngineActor::spawn_with_manifest(manifest.clone())?;
             let client = actor.client();
             _engine_holder = actor;
-            Coordinator::new(cc, move |_| {
-                Ok(Box::new(PjrtBackend::new(client.clone(), &manifest, cfg, "pallas")?)
-                    as Box<dyn gbf::coordinator::FilterBackend>)
-            })?
+            for (name, cfg) in &specs {
+                let cfg = *cfg;
+                let client = client.clone();
+                let manifest = manifest.clone();
+                let spec = FilterSpec { config: cfg, shards, policy: policy.clone() };
+                service.create_filter_with(name, spec, move |_| {
+                    Ok(Box::new(PjrtBackend::new(client, &manifest, cfg, "pallas")?) as Box<dyn FilterBackend>)
+                })?;
+            }
         }
         other => bail!("unknown --backend {other}"),
-    };
+    }
 
     println!(
-        "serving with {} backend, {} shards, batch {} / {}µs, filter {}",
-        coordinator.backend_name(),
-        coordinator.num_shards(),
-        batch,
-        max_wait_us,
-        cfg.name()
+        "serving {} namespace(s) [{}] with {backend_kind} backend, batch {batch} / {max_wait_us}µs",
+        specs.len(),
+        service.list_filters().join(", ")
     );
-    let n_add = requests / 2;
-    let keys = unique_keys(n_add, 0x5e12e);
+    let per_ns = (requests / (2 * specs.len())).max(1);
+
+    // phase 1 — pipelined ingest: submit one add ticket per namespace,
+    // all in flight at once, then wait for all of them
+    let mut tenants = Vec::new();
+    for (i, (name, _)) in specs.iter().enumerate() {
+        let handle = service.handle(name)?;
+        let keys = unique_keys(per_ns, 0x5e12e + i as u64);
+        tenants.push((handle, keys));
+    }
     let t0 = Instant::now();
-    coordinator.add_blocking(&keys)?;
+    let tickets: Vec<_> = tenants.iter().map(|(h, keys)| h.add_bulk(keys)).collect();
+    for t in tickets {
+        t.wait()?;
+    }
     let add_dt = t0.elapsed();
+
+    // phase 2 — concurrent tenants: one blocking query client per namespace
     let t1 = Instant::now();
-    let hits = coordinator.query_blocking(&keys)?;
+    let mut results = Vec::new();
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for (handle, keys) in &tenants {
+            joins.push(scope.spawn(move || -> Result<()> {
+                let hits = handle.query_bulk(keys).wait()?;
+                ensure!(hits.iter().all(|&h| h), "false negative in namespace {}", handle.name());
+                Ok(())
+            }));
+        }
+        for j in joins {
+            results.push(j.join().unwrap());
+        }
+    });
+    for r in results {
+        r?;
+    }
     let query_dt = t1.elapsed();
-    anyhow::ensure!(hits.iter().all(|&h| h), "false negative during serve");
+
+    let total = per_ns * specs.len();
     println!(
-        "adds   : {n_add} in {add_dt:?} ({:.2} M ops/s)",
-        n_add as f64 / add_dt.as_secs_f64() / 1e6
+        "adds   : {total} across tenants in {add_dt:?} ({:.2} M ops/s)",
+        total as f64 / add_dt.as_secs_f64() / 1e6
     );
     println!(
-        "queries: {n_add} in {query_dt:?} ({:.2} M ops/s)",
-        n_add as f64 / query_dt.as_secs_f64() / 1e6
+        "queries: {total} across tenants in {query_dt:?} ({:.2} M ops/s)",
+        total as f64 / query_dt.as_secs_f64() / 1e6
     );
-    println!("{}", coordinator.metrics().report());
-    let n = space_optimal_n(cfg.m_bits(), cfg.k);
-    println!("(filter space-optimal capacity: {n} keys)");
+    println!("\n-- shutdown report (per namespace, incl. per-shard counters) --");
+    for (name, cfg) in &specs {
+        println!("{}", service.stats(name)?.report());
+        let n = space_optimal_n(cfg.m_bits(), cfg.k);
+        println!("  (space-optimal capacity: {n} keys)");
+    }
     Ok(())
 }

@@ -1,60 +1,249 @@
-//! Coordinator integration: batching policy effects, backpressure,
-//! mixed workloads, metrics sanity, and the PJRT backend when available.
+//! Filter-service integration: the multi-tenant admin plane
+//! (create/drop/list/stats), the ticket-based data plane, namespace
+//! isolation under concurrency, per-shard metrics, mixed workloads, and
+//! the PJRT backend when artifacts are available.
 
-use std::sync::Arc;
 use std::time::Duration;
 
-use gbf::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, FilterBackend, NativeBackend, PjrtBackend, RequestOp,
-};
-use gbf::filter::params::FilterConfig;
+use gbf::coordinator::{BatchPolicy, FilterBackend, FilterService, FilterSpec, GbfError, PjrtBackend};
+use gbf::filter::params::{FilterConfig, Variant};
 use gbf::runtime::actor::EngineActor;
 use gbf::runtime::manifest::{default_artifact_dir, Manifest};
 use gbf::workload::keygen::{disjoint_key_sets, unique_keys};
 use gbf::workload::zipf::Zipf;
 
-fn native(shards: usize, max_batch: usize, wait_us: u64) -> Coordinator {
-    Coordinator::new(
-        CoordinatorConfig {
-            num_shards: shards,
-            policy: BatchPolicy { max_batch, max_wait: Duration::from_micros(wait_us) },
-        },
-        |num_shards| {
-            Ok(Box::new(NativeBackend::new(
-                FilterConfig { log2_m_words: 15, ..Default::default() },
-                num_shards,
-            )?) as Box<dyn FilterBackend>)
-        },
-    )
-    .unwrap()
+fn cfg(log2_m_words: u32) -> FilterConfig {
+    FilterConfig { log2_m_words, ..Default::default() }
+}
+
+fn spec(log2_m_words: u32, shards: usize, max_batch: usize, wait_us: u64) -> FilterSpec {
+    FilterSpec {
+        config: cfg(log2_m_words),
+        shards,
+        policy: BatchPolicy { max_batch, max_wait: Duration::from_micros(wait_us) },
+    }
+}
+
+fn native_service(entries: &[(&str, FilterSpec)]) -> FilterService {
+    let service = FilterService::new();
+    for (name, s) in entries {
+        service.create_filter_spec(name, s.clone()).unwrap();
+    }
+    service
+}
+
+// ---- acceptance: >= 2 concurrently-live namespaces, independent configs,
+// ticket and blocking paths agreeing, no implicit filter anywhere ----
+
+#[test]
+fn two_live_namespaces_with_independent_configs() {
+    let service = native_service(&[("hot", spec(15, 4, 1024, 150)), ("cold", spec(13, 1, 256, 100))]);
+    let hot = service.handle("hot").unwrap();
+    let cold = service.handle("cold").unwrap();
+    assert_eq!(hot.num_shards(), 4);
+    assert_eq!(cold.num_shards(), 1);
+    assert_eq!(hot.filter_config().log2_m_words, 15);
+    assert_eq!(cold.filter_config().log2_m_words, 13);
+
+    let hot_keys = unique_keys(20_000, 1);
+    let cold_keys = unique_keys(2_000, 2);
+    // pipelined: both namespaces ingesting at once
+    let t1 = hot.add_bulk(&hot_keys);
+    let t2 = cold.add_bulk(&cold_keys);
+    t1.wait().unwrap();
+    t2.wait().unwrap();
+
+    // ticket-based and blocking paths must give identical answers
+    let probe: Vec<u64> = hot_keys.iter().chain(unique_keys(5_000, 3).iter()).copied().collect();
+    let ticket_first = hot.query_bulk(&probe); // submitted, waited later
+    let blocking = hot.query_bulk(&probe).wait().unwrap(); // "blocking" = wait immediately
+    let ticketed = ticket_first.wait().unwrap();
+    assert_eq!(ticketed, blocking);
+    assert!(ticketed[..20_000].iter().all(|&h| h), "no false negatives");
+
+    // per-namespace counters: each tenant saw exactly its own traffic
+    let hot_stats = service.stats("hot").unwrap();
+    let cold_stats = service.stats("cold").unwrap();
+    assert_eq!(hot_stats.metrics.adds, 20_000);
+    assert_eq!(hot_stats.metrics.queries, 2 * probe.len() as u64);
+    assert_eq!(cold_stats.metrics.adds, 2_000);
+    assert_eq!(cold_stats.metrics.queries, 0);
+}
+
+// ---- admin plane ----
+
+#[test]
+fn create_drop_lifecycle() {
+    let service = FilterService::new();
+    assert!(service.list_filters().is_empty());
+    service.create_filter("a", cfg(12), 2).unwrap();
+    service.create_filter("b", cfg(12), 1).unwrap();
+    assert_eq!(service.list_filters(), vec!["a".to_string(), "b".to_string()]);
+    service.drop_filter("a").unwrap();
+    assert_eq!(service.list_filters(), vec!["b".to_string()]);
+    // the name is reusable with a different geometry
+    let a2 = service.create_filter("a", cfg(14), 4).unwrap();
+    assert_eq!(a2.num_shards(), 4);
+    a2.add_bulk(&[1, 2, 3]).wait().unwrap();
+    assert!(a2.query_bulk(&[1, 2, 3]).wait().unwrap().iter().all(|&h| h));
 }
 
 #[test]
+fn duplicate_name_rejected() {
+    let service = FilterService::new();
+    service.create_filter("dup", cfg(12), 1).unwrap();
+    match service.create_filter("dup", cfg(12), 1) {
+        Err(GbfError::FilterExists(name)) => assert_eq!(name, "dup"),
+        other => panic!("expected FilterExists, got {other:?}"),
+    }
+    // the original namespace is untouched by the failed create
+    let h = service.handle("dup").unwrap();
+    h.add(7).wait().unwrap();
+    assert!(h.query(7).wait().unwrap());
+}
+
+#[test]
+fn dropped_namespace_yields_no_such_filter() {
+    let service = FilterService::new();
+    let h = service.create_filter("gone", cfg(12), 2).unwrap();
+    h.add_bulk(&unique_keys(1_000, 4)).wait().unwrap();
+    service.drop_filter("gone").unwrap();
+
+    // every plane answers NoSuchFilter for the dropped name
+    assert_eq!(service.handle("gone").unwrap_err(), GbfError::NoSuchFilter("gone".into()));
+    assert_eq!(service.stats("gone").unwrap_err(), GbfError::NoSuchFilter("gone".into()));
+    assert_eq!(service.drop_filter("gone").unwrap_err(), GbfError::NoSuchFilter("gone".into()));
+    // including operations on handles that predate the drop
+    assert!(!h.is_live());
+    assert_eq!(h.query_bulk(&[1]).wait().unwrap_err(), GbfError::NoSuchFilter("gone".into()));
+    assert_eq!(h.add_bulk(&[1]).wait().unwrap_err(), GbfError::NoSuchFilter("gone".into()));
+    assert_eq!(h.add(1).wait().unwrap_err(), GbfError::NoSuchFilter("gone".into()));
+    assert_eq!(h.query(1).wait().unwrap_err(), GbfError::NoSuchFilter("gone".into()));
+}
+
+// ---- namespace isolation under concurrency (timing-free: asserted via
+// per-namespace op counters, not wall clocks) ----
+
+#[test]
+fn concurrent_handles_to_distinct_namespaces_do_not_serialize() {
+    const TENANTS: usize = 6;
+    const KEYS_PER_TENANT: usize = 4_000;
+    let service = FilterService::new();
+    let mut names = Vec::new();
+    for t in 0..TENANTS {
+        let name = format!("tenant{t}");
+        service.create_filter(&name, cfg(14), 2).unwrap();
+        names.push(name);
+    }
+    std::thread::scope(|scope| {
+        for (t, name) in names.iter().enumerate() {
+            let handle = service.handle(name).unwrap();
+            scope.spawn(move || {
+                let keys = unique_keys(KEYS_PER_TENANT, 100 + t as u64);
+                handle.add_bulk(&keys).wait().unwrap();
+                let hits = handle.query_bulk(&keys).wait().unwrap();
+                assert!(hits.iter().all(|&h| h));
+            });
+        }
+    });
+    // every namespace processed exactly its own tenant's ops — nothing
+    // leaked into a shared queue, nothing was double-counted
+    for name in &names {
+        let stats = service.stats(name).unwrap();
+        assert_eq!(stats.metrics.adds, KEYS_PER_TENANT as u64, "{name}");
+        assert_eq!(stats.metrics.queries, KEYS_PER_TENANT as u64, "{name}");
+        assert_eq!(stats.queue_depth, 0, "{name} drained");
+    }
+}
+
+// ---- per-shard metrics through the stats admin call ----
+
+#[test]
+fn per_shard_stats_surface_through_stats() {
+    let service = native_service(&[("sharded", spec(15, 4, 4096, 200))]);
+    let h = service.handle("sharded").unwrap();
+    let keys = unique_keys(40_000, 5);
+    h.add_bulk(&keys).wait().unwrap();
+    h.query_bulk(&keys).wait().unwrap();
+    let stats = service.stats("sharded").unwrap();
+    assert_eq!(stats.num_shards, 4);
+    assert_eq!(stats.shards.len(), 4);
+    let total: u64 = stats.shards.iter().map(|s| s.keys).sum();
+    assert_eq!(total, 80_000, "per-shard key counters cover every op exactly once");
+    for s in &stats.shards {
+        assert!(s.keys > 0, "uniform routing reaches shard {}", s.shard);
+        assert!(s.jobs > 0);
+        assert!(s.fill_ratio > 0.0);
+    }
+    // the shutdown report renders one line per shard
+    let report = stats.report();
+    assert_eq!(report.matches("shard ").count(), 4, "{report}");
+}
+
+// ---- ticket mechanics ----
+
+#[test]
+fn ticket_poll_wait_timeout_and_ready() {
+    let service = native_service(&[("t", spec(14, 2, 512, 100))]);
+    let h = service.handle("t").unwrap();
+    let keys = unique_keys(10_000, 6);
+    // wait_timeout path agrees with plain wait
+    match h.add_bulk(&keys).wait_timeout(Duration::from_secs(10)) {
+        Ok(r) => r.unwrap(),
+        Err(_) => panic!("10s is plenty for 10k adds"),
+    }
+    let t = h.query_bulk(&keys);
+    let hits = t.wait().unwrap();
+    assert!(hits.iter().all(|&h| h));
+    // a timed-out wait hands the ticket back intact and it stays waitable
+    let t2 = h.query_bulk(&keys);
+    let hits2 = match t2.wait_timeout(Duration::from_nanos(1)) {
+        Ok(r) => r.unwrap(), // already done — also a valid outcome
+        Err(again) => again.wait().unwrap(),
+    };
+    assert_eq!(hits, hits2);
+    // polling observes completion without consuming the ticket
+    let t3 = h.query_bulk(&keys[..100]);
+    while !t3.is_ready() {
+        std::thread::yield_now();
+    }
+    assert!(t3.wait().unwrap().iter().all(|&b| b));
+    // empty submissions resolve instantly
+    let empty = h.query_bulk(&[]);
+    assert!(empty.is_ready());
+    assert!(empty.wait().unwrap().is_empty());
+}
+
+// ---- retained workload coverage from the old single-filter suite ----
+
+#[test]
 fn mixed_interleaved_workload_is_consistent() {
-    let c = native(4, 1024, 150);
+    let service = native_service(&[("waves", spec(15, 4, 1024, 150))]);
+    let c = service.handle("waves").unwrap();
     let keys = unique_keys(20_000, 1);
     // interleave adds and queries in waves; earlier waves must stay visible
     for wave in 0..4 {
         let slice = &keys[wave * 5_000..(wave + 1) * 5_000];
-        c.add_blocking(slice).unwrap();
+        c.add_bulk(slice).wait().unwrap();
         for prev in 0..=wave {
             let check = &keys[prev * 5_000..prev * 5_000 + 500];
-            assert!(c.query_blocking(check).unwrap().iter().all(|&h| h), "wave {wave} prev {prev}");
+            assert!(c.query_bulk(check).wait().unwrap().iter().all(|&h| h), "wave {wave} prev {prev}");
         }
     }
-    let m = c.metrics();
+    let m = service.stats("waves").unwrap().metrics;
     assert_eq!(m.adds, 20_000);
     assert!(m.batches > 0 && m.mean_batch_size >= 1.0);
 }
 
 #[test]
 fn zipf_hot_key_traffic() {
-    let c = native(2, 512, 100);
+    let service = native_service(&[("zipf", spec(15, 2, 512, 100))]);
+    let c = service.handle("zipf").unwrap();
     let universe = unique_keys(5_000, 2);
-    c.add_blocking(&universe).unwrap();
+    c.add_bulk(&universe).wait().unwrap();
     let mut z = Zipf::new(universe.len() as u64, 1.3, 7);
     let trace = z.trace(&universe, 30_000);
-    let hits = c.query_blocking(&trace).unwrap();
+    let hits = c.query_bulk(&trace).wait().unwrap();
     assert!(hits.iter().all(|&h| h), "hot keys must always hit");
 }
 
@@ -62,76 +251,93 @@ fn zipf_hot_key_traffic() {
 fn fpr_preserved_through_sharded_service() {
     // sharding must not inflate FPR beyond the single-filter rate by more
     // than noise (each shard is a smaller filter at the same load factor)
-    let c = native(4, 4096, 200);
+    let service = native_service(&[("fpr", spec(15, 4, 4096, 200))]);
+    let c = service.handle("fpr").unwrap();
     let (ins, qry) = disjoint_key_sets(80_000, 40_000, 3);
-    c.add_blocking(&ins).unwrap();
-    let fp = c.query_blocking(&qry).unwrap().iter().filter(|&&h| h).count();
+    c.add_bulk(&ins).wait().unwrap();
+    let fp = c.query_bulk(&qry).wait().unwrap().iter().filter(|&&h| h).count();
     let fpr = fp as f64 / qry.len() as f64;
     assert!(fpr < 0.05, "service fpr {fpr}");
 }
 
 #[test]
-fn single_request_latency_bounded_by_deadline() {
-    let c = native(1, 1 << 20, 2_000); // huge batch, 2ms deadline
-    let t0 = std::time::Instant::now();
-    let rx = c.submit(RequestOp::Add, 42);
-    rx.recv().unwrap().unwrap();
-    let dt = t0.elapsed();
-    assert!(dt < Duration::from_millis(500), "deadline flush too slow: {dt:?}");
-}
-
-#[test]
-fn queue_depth_drains() {
-    let c = native(2, 256, 100);
-    let keys = unique_keys(10_000, 4);
-    c.add_blocking(&keys).unwrap();
-    // after blocking calls return, queues must be empty
-    assert_eq!(c.queue_depth(), 0);
-}
-
-#[test]
-fn heavy_concurrency_stress() {
-    let c = Arc::new(native(4, 2048, 200));
+fn heavy_concurrency_stress_on_one_namespace() {
+    let service = native_service(&[("stress", spec(15, 4, 2048, 200))]);
     std::thread::scope(|scope| {
         for t in 0..16u64 {
-            let c = Arc::clone(&c);
+            let handle = service.handle("stress").unwrap();
             scope.spawn(move || {
                 let keys = unique_keys(4_000, 50 + t);
-                c.add_blocking(&keys).unwrap();
-                let hits = c.query_blocking(&keys).unwrap();
+                handle.add_bulk(&keys).wait().unwrap();
+                let hits = handle.query_bulk(&keys).wait().unwrap();
                 assert!(hits.iter().all(|&h| h));
             });
         }
     });
-    assert_eq!(c.metrics().adds, 64_000);
+    assert_eq!(service.stats("stress").unwrap().metrics.adds, 64_000);
 }
 
+// ---- PJRT namespaces (skip without artifacts) ----
+
 #[test]
-fn pjrt_backend_through_coordinator() {
+fn pjrt_namespace_reports_single_state_placement() {
     let Ok(manifest) = Manifest::load(&default_artifact_dir()) else {
         eprintln!("skipping: no artifacts (run `make artifacts`)");
         return;
     };
     let actor = EngineActor::spawn_with_manifest(manifest.clone()).unwrap();
     let client = actor.client();
-    let cfg = FilterConfig::default();
-    let c = Coordinator::new(
-        CoordinatorConfig {
-            // one filter state: PJRT shard placement is a ROADMAP item
-            num_shards: 1,
-            policy: BatchPolicy { max_batch: 4096, max_wait: Duration::from_micros(300) },
-        },
-        move |_| {
-            Ok(Box::new(PjrtBackend::new(client.clone(), &manifest, cfg, "pallas")?)
-                as Box<dyn FilterBackend>)
-        },
-    )
-    .unwrap();
-    assert_eq!(c.backend_name(), "pjrt");
+    let config = FilterConfig::default();
+    let service = FilterService::new();
+    // ask for 4 shards; the single-state PJRT backend places 1 — visible
+    // through stats instead of a stderr warning
+    let s = FilterSpec {
+        config,
+        shards: 4,
+        policy: BatchPolicy { max_batch: 4096, max_wait: Duration::from_micros(300) },
+    };
+    service
+        .create_filter_with("pjrt", s, move |_| {
+            Ok(Box::new(PjrtBackend::new(client, &manifest, config, "pallas")?) as Box<dyn FilterBackend>)
+        })
+        .unwrap();
+    let stats = service.stats("pjrt").unwrap();
+    assert_eq!(stats.backend, "pjrt");
+    assert_eq!(stats.requested_shards, 4);
+    assert_eq!(stats.num_shards, 1, "single-state placement is introspectable");
+    assert!(stats.shards.is_empty(), "no per-shard rows for a single-state backend");
+    assert!(stats.report().contains("requested 4"), "{}", stats.report());
+
+    let h = service.handle("pjrt").unwrap();
     let keys = unique_keys(6_000, 5);
-    c.add_blocking(&keys).unwrap();
-    assert!(c.query_blocking(&keys).unwrap().iter().all(|&h| h));
+    h.add_bulk(&keys).wait().unwrap();
+    assert!(h.query_bulk(&keys).wait().unwrap().iter().all(|&h| h));
     let (_, absent) = disjoint_key_sets(1, 6_000, 6);
-    let fp = c.query_blocking(&absent).unwrap().iter().filter(|&&h| h).count();
+    let fp = h.query_bulk(&absent).wait().unwrap().iter().filter(|&&h| h).count();
     assert!(fp < 600, "pjrt fpr too high: {fp}/6000");
+}
+
+#[test]
+fn variant_diversity_across_namespaces() {
+    // independent configs really are independent: different variants and
+    // geometries live side by side in one catalog
+    let service = FilterService::new();
+    let entries = [
+        ("sbf", FilterConfig { variant: Variant::Sbf, log2_m_words: 13, ..Default::default() }),
+        ("cbf", FilterConfig { variant: Variant::Cbf, log2_m_words: 12, ..Default::default() }),
+        ("bbf", FilterConfig { variant: Variant::Bbf, log2_m_words: 14, ..Default::default() }),
+    ];
+    for (name, config) in &entries {
+        service.create_filter(name, *config, 2).unwrap();
+    }
+    let keys = unique_keys(3_000, 9);
+    let handles: Vec<_> = entries.iter().map(|(n, _)| service.handle(n).unwrap()).collect();
+    let tickets: Vec<_> = handles.iter().map(|h| h.add_bulk(&keys)).collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    for h in &handles {
+        assert!(h.query_bulk(&keys).wait().unwrap().iter().all(|&hit| hit), "{}", h.name());
+    }
+    assert_eq!(service.list_filters().len(), 3);
 }
