@@ -3,10 +3,21 @@
 //!     cargo run --release --example quickstart
 
 use gbf::analytics::fpr::measure_fpr_space_optimal;
-use gbf::coordinator::FilterService;
+use gbf::coordinator::{FilterApi, FilterDataPlane, FilterService};
 use gbf::filter::params::{space_optimal_n, FilterConfig};
 use gbf::filter::sbf::Sbf;
 use gbf::workload::keygen::disjoint_key_sets;
+
+/// Written against `dyn FilterApi`, this runs unchanged on an in-process
+/// `FilterService` (below) or a `RemoteFilterService` connected to a
+/// `gbf serve --listen` wire server (see `serve_demo`).
+fn count_present(api: &dyn FilterApi, keys: &[u64]) -> anyhow::Result<usize> {
+    let scratch: Box<dyn FilterDataPlane> = api.create_filter("scratch", FilterConfig::default(), 2)?;
+    scratch.add_bulk(keys).wait()?;
+    let hits = scratch.query_bulk(keys).wait()?;
+    api.drop_filter("scratch")?;
+    Ok(hits.iter().filter(|&&h| h).count())
+}
 
 fn main() -> anyhow::Result<()> {
     // ---- FilterService hello-world: named filters, ticket receipts ----
@@ -18,11 +29,20 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(&seen[..3], &[true, true, true]); // no false negatives
     service.drop_filter("users")?; // admin plane: create / drop / list / stats
 
+    // ---- one API, two transports ----
+    // The same surface is a trait (`FilterApi` + `FilterDataPlane`), so
+    // code like this is transport-agnostic: hand it a remote client and
+    // it crosses the network instead.
+    let present = count_present(&service, &[7, 8, 9])?;
+    println!("FilterApi (transport-agnostic): {present}/3 inserted keys present");
+    assert_eq!(present, 3);
+
     // ---- the filter library underneath ----
     // The paper's headline configuration: a Sectorized Bloom Filter with
     // 256-bit blocks of 64-bit words and k = 16 fingerprint bits.
-    // 2^20 words = 8 MiB of filter.
-    let filter = Sbf::headline(20)?;
+    // 2^20 words = 8 MiB of filter (2^17 under GBF_BENCH_QUICK=1).
+    let log2_m_words: u32 = if std::env::var("GBF_BENCH_QUICK").is_ok() { 17 } else { 20 };
+    let filter = Sbf::headline(log2_m_words)?;
     let cfg = *filter.inner().config();
     println!("filter: {} ({} MiB)", cfg.name(), cfg.size_bytes() / (1024 * 1024));
 

@@ -1,19 +1,31 @@
-//! END-TO-END DRIVER: the multi-tenant filter service on a real workload.
+//! END-TO-END DRIVER: the multi-tenant filter service **over the wire**.
 //!
-//! Proves all layers compose: a `FilterService` hosts several named
-//! namespaces — different geometries, different shard counts — and serves
-//! batched concurrent traffic to all of them at once through ticket-based
-//! handles. When AOT artifacts are present, a PJRT-backed namespace joins
-//! the same catalog (Pallas kernels (L1) lowered by JAX (L2) to HLO,
-//! loaded by the PJRT runtime) and is cross-validated against a native
-//! namespace serving identical traffic.
+//! Proves all layers compose across a socket: a `FilterService` is hosted
+//! on a loopback `WireServer`, a `RemoteFilterService` connects to it,
+//! and every tenant below is created and driven **remotely** through the
+//! transport-agnostic `FilterApi` — the same trait an in-process caller
+//! uses, with the same `Ticket` receipts and typed errors. Per-tenant
+//! counters are then cross-checked against the server-side catalog to
+//! show the two views of one namespace agree. When AOT artifacts are
+//! present, a PJRT-backed namespace is created server-side (custom
+//! backends are an in-process privilege) and served to the remote client
+//! by name, cross-validated against a native twin on identical traffic.
 //!
 //! Run:
 //!     cargo run --release --example serve_demo
+//!     GBF_BENCH_QUICK=1 cargo run --release --example serve_demo   # CI smoke
+//!
+//! The catalog hosts several named namespaces — different geometries,
+//! different shard counts — and serves batched concurrent traffic to all
+//! of them at once through pipelined ticket-based handles.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use gbf::coordinator::{BatchPolicy, FilterBackend, FilterService, FilterSpec, PjrtBackend};
+use gbf::coordinator::{
+    BatchPolicy, FilterApi, FilterBackend, FilterDataPlane, FilterService, FilterSpec, PjrtBackend,
+    RemoteFilterService, WireServer,
+};
 use gbf::filter::params::{FilterConfig, Variant};
 use gbf::runtime::actor::EngineActor;
 use gbf::runtime::manifest::{default_artifact_dir, Manifest};
@@ -21,8 +33,27 @@ use gbf::workload::keygen::{disjoint_key_sets, unique_keys};
 use gbf::workload::zipf::Zipf;
 
 const CLIENTS_PER_TENANT: usize = 4;
-const ADDS_PER_CLIENT: usize = 20_000;
-const QUERIES_PER_CLIENT: usize = 30_000;
+
+/// `GBF_BENCH_QUICK=1` shrinks the workload for CI smoke runs.
+fn quick() -> bool {
+    std::env::var("GBF_BENCH_QUICK").is_ok()
+}
+
+fn adds_per_client() -> usize {
+    if quick() {
+        2_000
+    } else {
+        20_000
+    }
+}
+
+fn queries_per_client() -> usize {
+    if quick() {
+        3_000
+    } else {
+        30_000
+    }
+}
 
 /// The tenant mix: one namespace per scenario, each with its own geometry.
 fn tenant_specs() -> Vec<(&'static str, FilterConfig, usize)> {
@@ -33,17 +64,19 @@ fn tenant_specs() -> Vec<(&'static str, FilterConfig, usize)> {
     ]
 }
 
-/// Drive one tenant with concurrent clients; returns (false_neg, false_pos,
-/// negatives probed) aggregated over its clients.
-fn drive_tenant(service: &FilterService, name: &str, seed: u64) -> anyhow::Result<(usize, usize, usize)> {
-    let handle = service.handle(name)?;
+/// Drive one tenant with concurrent clients through any `FilterApi`
+/// transport; returns (false_neg, false_pos, negatives probed).
+fn drive_tenant(api: &dyn FilterApi, name: &str, seed: u64) -> anyhow::Result<(usize, usize, usize)> {
+    // one handle per tenant, cloned into each client thread (clone_box
+    // is cheap on both transports — no per-thread admin round-trips)
+    let tenant_handle: Box<dyn FilterDataPlane> = api.handle(name)?;
 
-    // ingest: concurrent clients, disjoint key ranges, pipelined tickets
+    // ingest: concurrent clients, disjoint key ranges
     std::thread::scope(|scope| {
         for c in 0..CLIENTS_PER_TENANT {
-            let handle = handle.clone();
+            let handle = tenant_handle.clone();
             scope.spawn(move || {
-                let keys = unique_keys(ADDS_PER_CLIENT, seed + c as u64);
+                let keys = unique_keys(adds_per_client(), seed + c as u64);
                 handle.add_bulk(&keys).wait().expect("add");
             });
         }
@@ -54,13 +87,14 @@ fn drive_tenant(service: &FilterService, name: &str, seed: u64) -> anyhow::Resul
     std::thread::scope(|scope| {
         let mut joins = Vec::new();
         for c in 0..CLIENTS_PER_TENANT {
-            let handle = handle.clone();
+            let handle = tenant_handle.clone();
             joins.push(scope.spawn(move || {
-                let hot = unique_keys(ADDS_PER_CLIENT, seed + c as u64);
+                let hot = unique_keys(adds_per_client(), seed + c as u64);
                 let mut zipf = Zipf::new(hot.len() as u64, 1.2, c as u64);
-                let trace = zipf.trace(&hot, QUERIES_PER_CLIENT / 2);
-                let (_, absent) = disjoint_key_sets(1, QUERIES_PER_CLIENT / 2, seed + 0xBAD + c as u64);
-                // submit both tickets before waiting on either (async plane)
+                let trace = zipf.trace(&hot, queries_per_client() / 2);
+                let (_, absent) = disjoint_key_sets(1, queries_per_client() / 2, seed + 0xBAD + c as u64);
+                // submit both tickets before waiting on either: pipelined
+                // request ids on the shared connection
                 let pos_ticket = handle.query_bulk(&trace);
                 let neg_ticket = handle.query_bulk(&absent);
                 let pos = pos_ticket.wait().expect("query");
@@ -81,24 +115,30 @@ fn drive_tenant(service: &FilterService, name: &str, seed: u64) -> anyhow::Resul
 }
 
 fn main() -> anyhow::Result<()> {
-    let service = FilterService::new();
+    // host the catalog on a loopback wire server; everything below goes
+    // through the socket
+    let service = Arc::new(FilterService::new());
+    let server = WireServer::bind(Arc::clone(&service), "127.0.0.1:0")?;
+    let client = RemoteFilterService::connect(server.local_addr())?;
+    println!("wire server on {}, driving it remotely", server.local_addr());
+
     let policy = BatchPolicy { max_batch: 4096, max_wait: Duration::from_micros(300) };
-
     for (name, cfg, shards) in tenant_specs() {
-        let spec = FilterSpec { config: cfg, shards, policy: policy.clone() };
-        service.create_filter_spec(name, spec)?;
+        let spec = FilterSpec { config: cfg, shards, policy: policy.clone(), ..FilterSpec::default() };
+        client.create_filter_spec(name, spec)?;
     }
-    println!("catalog: {:?}", service.list_filters());
+    println!("remote catalog: {:?}", client.list_filters()?);
 
-    // all tenants served concurrently — each has its own batcher + state,
-    // so none serializes behind another
+    // all tenants served concurrently — each has its own batcher + state
+    // server-side, so none serializes behind another; the wire multiplexes
+    // every client's requests over one pipelined connection
     let t0 = Instant::now();
     let mut outcomes = Vec::new();
     std::thread::scope(|scope| {
         let mut joins = Vec::new();
         for (i, (name, _, _)) in tenant_specs().into_iter().enumerate() {
-            let service = &service;
-            joins.push(scope.spawn(move || (name, drive_tenant(service, name, 0xADD0 + i as u64 * 1000))));
+            let client = &client;
+            joins.push(scope.spawn(move || (name, drive_tenant(client, name, 0xADD0 + i as u64 * 1000))));
         }
         for j in joins {
             outcomes.push(j.join().unwrap());
@@ -107,9 +147,9 @@ fn main() -> anyhow::Result<()> {
     let dt = t0.elapsed();
 
     let total_ops =
-        tenant_specs().len() * CLIENTS_PER_TENANT * (ADDS_PER_CLIENT + QUERIES_PER_CLIENT);
+        tenant_specs().len() * CLIENTS_PER_TENANT * (adds_per_client() + queries_per_client());
     println!(
-        "\ndrove {total_ops} ops across {} tenants in {dt:?} ({:.2} M ops/s aggregate)",
+        "\ndrove {total_ops} ops over the wire across {} tenants in {dt:?} ({:.2} M ops/s aggregate)",
         tenant_specs().len(),
         total_ops as f64 / dt.as_secs_f64() / 1e6
     );
@@ -120,29 +160,39 @@ fn main() -> anyhow::Result<()> {
             false_pos as f64 / negatives as f64
         );
         anyhow::ensure!(false_neg == 0, "false negatives in {name}!");
-        let stats = service.stats(name)?;
-        println!("{}", stats.report());
+        // the remote stats view and the server-side catalog must agree
+        let remote_stats = client.stats(name)?;
+        let local_stats = service.stats(name)?;
+        println!("{}", remote_stats.report());
         anyhow::ensure!(
-            stats.metrics.adds == (CLIENTS_PER_TENANT * ADDS_PER_CLIENT) as u64,
+            remote_stats.metrics.adds == (CLIENTS_PER_TENANT * adds_per_client()) as u64,
             "per-namespace counters count only their own tenant's traffic"
+        );
+        anyhow::ensure!(
+            remote_stats.metrics.adds == local_stats.metrics.adds
+                && remote_stats.metrics.queries == local_stats.metrics.queries
+                && remote_stats.num_shards == local_stats.num_shards,
+            "remote and in-process stats views of {name} disagree"
         );
     }
 
-    // --- PJRT namespace: the AOT Pallas artifacts join the same catalog ---
+    // --- PJRT namespace: created server-side (custom backend), served
+    // remotely by name ---
     match Manifest::load(&default_artifact_dir()) {
         Ok(manifest) => {
             let cfg = FilterConfig::default(); // matches the AOT artifacts (1 MiB)
             let actor = EngineActor::spawn_with_manifest(manifest.clone())?;
-            let client = actor.client();
-            let spec = FilterSpec { config: cfg, shards: 1, policy };
+            let engine_client = actor.client();
+            let spec = FilterSpec { config: cfg, shards: 1, policy, ..FilterSpec::default() };
             service.create_filter_with("pjrt-mirror", spec, move |_| {
-                Ok(Box::new(PjrtBackend::new(client, &manifest, cfg, "pallas")?) as Box<dyn FilterBackend>)
+                Ok(Box::new(PjrtBackend::new(engine_client, &manifest, cfg, "pallas")?)
+                    as Box<dyn FilterBackend>)
             })?;
             // a native namespace with identical geometry serves as oracle:
             // same keys + same hash pipeline => bit-identical answers
-            service.create_filter("native-mirror", cfg, 1)?;
-            let pjrt = service.handle("pjrt-mirror")?;
-            let native = service.handle("native-mirror")?;
+            client.create_filter("native-mirror", cfg, 1)?;
+            let pjrt = client.handle("pjrt-mirror")?;
+            let native = client.handle("native-mirror")?;
             let keys = unique_keys(10_000, 0x90DD);
             let (_, probe) = disjoint_key_sets(1, 20_000, 0x90DE);
             let a = pjrt.add_bulk(&keys);
@@ -155,8 +205,8 @@ fn main() -> anyhow::Result<()> {
             anyhow::ensure!(p_ticket.wait()? == n_ticket.wait()?, "PJRT and native namespaces disagree");
             let inserted_hits = pjrt.query_bulk(&keys).wait()?;
             anyhow::ensure!(inserted_hits.iter().all(|&h| h), "false negative through PJRT namespace");
-            println!("\n{}", service.stats("pjrt-mirror")?.report());
-            println!("end-to-end OK: L1 Pallas -> L2 JAX -> HLO -> PJRT -> L3 FilterService namespace");
+            println!("\n{}", client.stats("pjrt-mirror")?.report());
+            println!("end-to-end OK: L1 Pallas -> L2 JAX -> HLO -> PJRT -> L3 FilterService -> wire");
         }
         Err(e) => {
             println!("\nskipping PJRT namespace: {e:#} (run `make artifacts`)");

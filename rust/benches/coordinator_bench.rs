@@ -8,7 +8,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use gbf::coordinator::{BatchPolicy, FilterService, FilterSpec, Router, ShardedRegistry};
+use gbf::coordinator::{
+    BatchPolicy, FilterService, FilterSpec, RemoteFilterService, Router, ShardedRegistry, WireServer,
+};
 use gbf::filter::params::FilterConfig;
 use gbf::infra::bench::{black_box, BenchGroup};
 use gbf::workload::keygen::unique_keys;
@@ -20,6 +22,7 @@ fn service_with(namespaces: &[&str], shards: usize, policy: &BatchPolicy) -> Fil
             config: FilterConfig { log2_m_words: 18, ..Default::default() },
             shards,
             policy: policy.clone(),
+            ..FilterSpec::default()
         };
         service.create_filter_spec(name, spec).unwrap();
     }
@@ -132,5 +135,27 @@ fn main() {
         });
         stop.store(true, Ordering::Relaxed);
         hot_thread.join().unwrap();
+    }
+
+    // transport overhead: the identical bulk query served by the same
+    // namespace in-process vs across a loopback wire connection — the
+    // delta is the frame codec + TCP round-trip cost per 65k-key call
+    let mut transport = BenchGroup::new("service: in-process vs loopback wire (4 shards)");
+    {
+        let service = Arc::new(service_with(&["xport"], 4, &policy));
+        let handle = service.handle("xport").unwrap();
+        handle.add_bulk(&keys).wait().unwrap();
+        let local_handle = handle.clone();
+        let local_keys = keys.clone();
+        transport.bench("query 65k in-process", Some(keys.len() as u64), move || {
+            black_box(local_handle.query_bulk(&local_keys).wait().unwrap());
+        });
+        let server = WireServer::bind(Arc::clone(&service), "127.0.0.1:0").unwrap();
+        let client = RemoteFilterService::connect(server.local_addr()).unwrap();
+        let remote_handle = client.handle("xport").unwrap();
+        let remote_keys = keys.clone();
+        transport.bench("query 65k loopback wire", Some(keys.len() as u64), move || {
+            black_box(remote_handle.query_bulk(&remote_keys).wait().unwrap());
+        });
     }
 }

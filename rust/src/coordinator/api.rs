@@ -1,0 +1,180 @@
+//! `FilterApi` / `FilterDataPlane` — the transport-agnostic filter API.
+//!
+//! One API, two transports: everything a client can do to a filter
+//! catalog is captured by these two object-safe traits, implemented both
+//! by the in-process [`FilterService`]/[`FilterHandle`] pair and by the
+//! network [`super::wire::RemoteFilterService`]/
+//! [`super::wire::RemoteFilterHandle`] pair. Code written against
+//! `dyn FilterApi` runs unchanged against either — same typed
+//! [`GbfError`]s, same [`Ticket`] receipts, same
+//! [`NamespaceStats`] introspection — which is how the integration suite
+//! proves transport equivalence.
+//!
+//! * [`FilterApi`] is the **admin plane**: create/drop/list/stats plus
+//!   handle acquisition.
+//! * [`FilterDataPlane`] is the **data plane**: `add` / `query` /
+//!   `add_bulk` / `query_bulk`, every call returning a [`Ticket`] so
+//!   callers can pipeline submissions across namespaces (and, remotely,
+//!   across in-flight wire requests) before waiting on any of them.
+
+use crate::filter::params::FilterConfig;
+
+use super::error::GbfError;
+use super::service::{FilterHandle, FilterService, FilterSpec, NamespaceStats};
+use super::ticket::Ticket;
+
+/// The admin plane of a filter catalog, over any transport.
+pub trait FilterApi: Send + Sync {
+    /// Create a namespace from a full [`FilterSpec`] and return its
+    /// data-plane handle.
+    fn create_filter_spec(&self, name: &str, spec: FilterSpec) -> Result<Box<dyn FilterDataPlane>, GbfError>;
+
+    /// Create a namespace with default batch policy (the common case).
+    fn create_filter(
+        &self,
+        name: &str,
+        config: FilterConfig,
+        shards: usize,
+    ) -> Result<Box<dyn FilterDataPlane>, GbfError> {
+        self.create_filter_spec(name, FilterSpec::new(config, shards))
+    }
+
+    /// Remove a namespace; later operations answer
+    /// [`GbfError::NoSuchFilter`].
+    fn drop_filter(&self, name: &str) -> Result<(), GbfError>;
+
+    /// Names of all live namespaces, sorted. `Result` because a remote
+    /// catalog can be unreachable.
+    fn list_filters(&self) -> Result<Vec<String>, GbfError>;
+
+    /// Admin-plane introspection of one namespace (identity, placement,
+    /// queue depth, per-namespace metrics, per-shard counters).
+    fn stats(&self, name: &str) -> Result<NamespaceStats, GbfError>;
+
+    /// A fresh data-plane handle to a live namespace.
+    fn handle(&self, name: &str) -> Result<Box<dyn FilterDataPlane>, GbfError>;
+}
+
+/// The data plane of one namespace, over any transport. Every operation
+/// returns a [`Ticket`] receipt: submit everywhere first, wait later.
+pub trait FilterDataPlane: Send + Sync {
+    /// The namespace this handle is bound to.
+    fn name(&self) -> &str;
+
+    /// A new boxed handle to the same namespace *instance* — both
+    /// transports clone cheaply (no round trips), so fan a handle out to
+    /// worker threads by cloning instead of re-acquiring via
+    /// [`FilterApi::handle`].
+    fn clone_box(&self) -> Box<dyn FilterDataPlane>;
+
+    /// Insert one key.
+    fn add(&self, key: u64) -> Ticket<()>;
+
+    /// Look up one key.
+    fn query(&self, key: u64) -> Ticket<bool>;
+
+    /// Insert a batch.
+    fn add_bulk(&self, keys: &[u64]) -> Ticket<()>;
+
+    /// Look up a batch; the resolved `Vec<bool>` is in submission order.
+    fn query_bulk(&self, keys: &[u64]) -> Ticket<Vec<bool>>;
+}
+
+impl Clone for Box<dyn FilterDataPlane> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+// ---- the in-process transport ----
+
+impl FilterApi for FilterService {
+    fn create_filter_spec(&self, name: &str, spec: FilterSpec) -> Result<Box<dyn FilterDataPlane>, GbfError> {
+        FilterService::create_filter_spec(self, name, spec).map(|h| Box::new(h) as Box<dyn FilterDataPlane>)
+    }
+
+    fn drop_filter(&self, name: &str) -> Result<(), GbfError> {
+        FilterService::drop_filter(self, name)
+    }
+
+    fn list_filters(&self) -> Result<Vec<String>, GbfError> {
+        Ok(FilterService::list_filters(self))
+    }
+
+    fn stats(&self, name: &str) -> Result<NamespaceStats, GbfError> {
+        FilterService::stats(self, name)
+    }
+
+    fn handle(&self, name: &str) -> Result<Box<dyn FilterDataPlane>, GbfError> {
+        FilterService::handle(self, name).map(|h| Box::new(h) as Box<dyn FilterDataPlane>)
+    }
+}
+
+impl FilterDataPlane for FilterHandle {
+    fn name(&self) -> &str {
+        FilterHandle::name(self)
+    }
+
+    fn clone_box(&self) -> Box<dyn FilterDataPlane> {
+        Box::new(self.clone())
+    }
+
+    fn add(&self, key: u64) -> Ticket<()> {
+        FilterHandle::add(self, key)
+    }
+
+    fn query(&self, key: u64) -> Ticket<bool> {
+        FilterHandle::query(self, key)
+    }
+
+    fn add_bulk(&self, keys: &[u64]) -> Ticket<()> {
+        FilterHandle::add_bulk(self, keys)
+    }
+
+    fn query_bulk(&self, keys: &[u64]) -> Ticket<Vec<bool>> {
+        FilterHandle::query_bulk(self, keys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> FilterConfig {
+        FilterConfig { log2_m_words: 12, ..Default::default() }
+    }
+
+    /// The point of the trait pair: this body never names a transport.
+    fn exercise(api: &dyn FilterApi) {
+        let users = api.create_filter("users", small_cfg(), 2).unwrap();
+        users.add_bulk(&[1, 2, 3]).wait().unwrap();
+        let hits = users.query_bulk(&[1, 2, 3, 0xDEAD]).wait().unwrap();
+        assert_eq!(&hits[..3], &[true, true, true]);
+        assert_eq!(api.list_filters().unwrap(), vec!["users".to_string()]);
+        let stats = api.stats("users").unwrap();
+        assert_eq!(stats.metrics.adds, 3);
+        api.drop_filter("users").unwrap();
+        match api.handle("users") {
+            Err(e) => assert_eq!(e, GbfError::NoSuchFilter("users".into())),
+            Ok(_) => panic!("handle to a dropped namespace must fail"),
+        }
+    }
+
+    #[test]
+    fn in_process_service_implements_the_api() {
+        let service = FilterService::new();
+        exercise(&service);
+    }
+
+    #[test]
+    fn boxed_handles_are_usable_across_threads() {
+        let service = FilterService::new();
+        let api: &dyn FilterApi = &service;
+        let h = api.create_filter("t", small_cfg(), 1).unwrap();
+        std::thread::scope(|scope| {
+            let h = &h;
+            scope.spawn(move || h.add_bulk(&[7, 8]).wait().unwrap());
+        });
+        assert!(h.query(7).wait().unwrap());
+    }
+}

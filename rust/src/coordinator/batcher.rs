@@ -221,11 +221,31 @@ pub struct BatcherHandle {
 
 impl BatcherHandle {
     /// Enqueue many requests under one lock acquisition.
-    pub fn submit_many(&self, ps: impl Iterator<Item = Pending>) {
+    pub fn submit_many(&self, ps: impl ExactSizeIterator<Item = Pending>) {
+        let _ = self.submit_many_bounded(ps, None);
+    }
+
+    /// Enqueue many requests under one lock acquisition — unless doing so
+    /// would push the queue past `max` entries, in which case NOTHING is
+    /// enqueued and the would-be depth comes back as the error. The check
+    /// and the enqueue happen under the same queue lock, so concurrent
+    /// submitters cannot jointly overshoot the bound.
+    pub fn submit_many_bounded(
+        &self,
+        ps: impl ExactSizeIterator<Item = Pending>,
+        max: Option<usize>,
+    ) -> Result<(), usize> {
         let mut q = self.queue.inner.lock().unwrap();
+        let depth = q.len() + ps.len();
+        if let Some(max) = max {
+            if depth > max {
+                return Err(depth);
+            }
+        }
         q.extend(ps);
         drop(q);
         self.queue.available.notify_one();
+        Ok(())
     }
 
     pub fn depth(&self) -> usize {

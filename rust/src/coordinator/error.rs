@@ -18,6 +18,9 @@ pub enum GbfError {
     InvalidConfig(String),
     /// The backend failed executing a batch (carries the flattened cause).
     Backend(String),
+    /// Admission refused: accepting the call would push the namespace's
+    /// queue past its `max_queue_depth` (`depth` is the would-be depth).
+    Overloaded { name: String, depth: usize },
 }
 
 impl GbfError {
@@ -25,6 +28,7 @@ impl GbfError {
     pub fn filter_name(&self) -> Option<&str> {
         match self {
             GbfError::NoSuchFilter(n) | GbfError::FilterExists(n) => Some(n),
+            GbfError::Overloaded { name, .. } => Some(name),
             GbfError::InvalidConfig(_) | GbfError::Backend(_) => None,
         }
     }
@@ -37,6 +41,9 @@ impl fmt::Display for GbfError {
             GbfError::FilterExists(name) => write!(f, "filter already exists: {name:?}"),
             GbfError::InvalidConfig(msg) => write!(f, "invalid config: {msg}"),
             GbfError::Backend(msg) => write!(f, "backend failure: {msg}"),
+            GbfError::Overloaded { name, depth } => {
+                write!(f, "namespace {name:?} overloaded: queue depth would reach {depth}")
+            }
         }
     }
 }
@@ -53,6 +60,9 @@ mod tests {
         assert!(e.to_string().contains("users"));
         assert_eq!(e.filter_name(), Some("users"));
         assert_eq!(GbfError::Backend("boom".into()).filter_name(), None);
+        let o = GbfError::Overloaded { name: "hot".into(), depth: 9000 };
+        assert!(o.to_string().contains("hot") && o.to_string().contains("9000"));
+        assert_eq!(o.filter_name(), Some("hot"));
     }
 
     #[test]

@@ -13,6 +13,15 @@
 //!   [`ticket::Ticket`] receipts: poll with `is_ready`, bound with
 //!   `wait_timeout`, or block with `wait`.
 //!
+//! Both planes are captured by the transport-agnostic
+//! [`api::FilterApi`] / [`api::FilterDataPlane`] trait pair: the
+//! in-process service implements them directly, and [`wire`] carries the
+//! same surface across a socket ([`wire::WireServer`] hosting a service,
+//! [`wire::RemoteFilterService`] / [`wire::RemoteFilterHandle`] speaking
+//! the framed codec from the client side, with identical typed errors
+//! and the same `Ticket` receipts). Code written against `dyn FilterApi`
+//! runs unchanged on either transport.
+//!
 //! Underneath, each namespace is the same vLLM-router-style engine stack:
 //!
 //! * [`registry`] — the **sharded filter registry**: N independently
@@ -33,6 +42,7 @@
 //!
 //! [`router`] owns the key→shard hash.
 
+pub mod api;
 pub mod backend;
 pub(crate) mod batcher;
 pub mod error;
@@ -42,7 +52,9 @@ pub mod router;
 pub(crate) mod server;
 pub mod service;
 pub mod ticket;
+pub mod wire;
 
+pub use api::{FilterApi, FilterDataPlane};
 pub use backend::{FilterBackend, NativeBackend, PjrtBackend};
 pub use batcher::BatchPolicy;
 pub use error::GbfError;
@@ -51,3 +63,4 @@ pub use registry::ShardedRegistry;
 pub use router::Router;
 pub use service::{FilterHandle, FilterService, FilterSpec, NamespaceStats};
 pub use ticket::Ticket;
+pub use wire::{RemoteFilterHandle, RemoteFilterService, WireServer};

@@ -270,6 +270,15 @@ impl ShardedRegistry {
         self.shards[idx].snapshot()
     }
 
+    /// Warm-start one shard from previously snapshotted words — the
+    /// inverse of [`ShardedRegistry::snapshot_shard`], and the seam the
+    /// admin plane's future `restore(name)` hangs off. Word count must
+    /// match the shard geometry.
+    pub fn load_shard(&self, idx: usize, words: &[u64]) -> Result<()> {
+        ensure!(idx < self.shards.len(), "shard index {idx} out of range ({} shards)", self.shards.len());
+        self.shards[idx].load_words(words)
+    }
+
     /// All shards' words, concatenated in shard order.
     pub fn snapshot_concat(&self) -> Vec<u64> {
         let mut out = Vec::with_capacity(self.shards.len() * self.cfg.m_words() as usize);
@@ -442,6 +451,29 @@ mod tests {
         assert_eq!(stats[0].keys, 2000);
         assert_eq!(stats[0].jobs, 2);
         assert_eq!(stats[0].queue_ns, 0, "inline path never queues");
+    }
+
+    #[test]
+    fn snapshot_load_round_trip_per_shard() {
+        // snapshot_shard -> load_shard is the identity: a freshly loaded
+        // registry is word-for-word the original (snapshot_concat equal)
+        // and serves the same answers
+        let a = registry(4);
+        let keys = unique_keys(6000, 11);
+        a.bulk_add(&keys).unwrap();
+        let b = registry(4);
+        for idx in 0..a.num_shards() {
+            b.load_shard(idx, &a.snapshot_shard(idx)).unwrap();
+        }
+        assert_eq!(a.snapshot_concat(), b.snapshot_concat());
+        assert!(b.bulk_contains(&keys).unwrap().iter().all(|&h| h), "warm-started registry serves");
+        // loading overwrites, not merges: reloading the same words is
+        // idempotent
+        b.load_shard(0, &a.snapshot_shard(0)).unwrap();
+        assert_eq!(a.snapshot_concat(), b.snapshot_concat());
+        // geometry is enforced
+        assert!(b.load_shard(0, &[1, 2, 3]).is_err(), "word count mismatch rejected");
+        assert!(b.load_shard(99, &a.snapshot_shard(0)).is_err(), "shard index bounds checked");
     }
 
     #[test]

@@ -113,17 +113,32 @@ impl Coordinator {
     /// client's result order. The caller (a `Ticket`) waits on the sink;
     /// the sink itself records e2e latency when its last slot completes.
     pub fn submit_bulk(&self, op: Op, keys: &[u64]) -> Arc<BulkSink> {
+        match self.submit_bulk_bounded(op, keys, None) {
+            Ok(sink) => sink,
+            Err(_) => unreachable!("unbounded submit cannot be refused"),
+        }
+    }
+
+    /// [`Coordinator::submit_bulk`] with admission control: if enqueueing
+    /// `keys` would push the queue past `max` entries, nothing is
+    /// enqueued and the would-be depth comes back as the error. Atomic
+    /// with respect to concurrent submitters (checked under the queue
+    /// lock).
+    pub fn submit_bulk_bounded(&self, op: Op, keys: &[u64], max: Option<usize>) -> Result<Arc<BulkSink>, usize> {
         let now = Instant::now();
         let sink = BulkSink::with_e2e(keys.len(), Arc::clone(&self.metrics), now);
         let is_add = op == Op::Add;
-        self.handle.submit_many(keys.iter().enumerate().map(|(idx, &key)| Pending {
-            is_add,
-            key,
-            enqueued: now,
-            sink: Arc::clone(&sink),
-            idx,
-        }));
-        sink
+        self.handle.submit_many_bounded(
+            keys.iter().enumerate().map(|(idx, &key)| Pending {
+                is_add,
+                key,
+                enqueued: now,
+                sink: Arc::clone(&sink),
+                idx,
+            }),
+            max,
+        )?;
+        Ok(sink)
     }
 
     /// Queue depth (backpressure signal).

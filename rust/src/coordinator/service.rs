@@ -24,7 +24,7 @@
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use anyhow::Result;
@@ -47,11 +47,21 @@ pub struct FilterSpec {
     /// placement is introspectable via [`NamespaceStats::num_shards`].
     pub shards: usize,
     pub policy: BatchPolicy,
+    /// Per-namespace backpressure: when set, a data-plane call whose keys
+    /// would push the queue past this many entries is refused at admission
+    /// with [`GbfError::Overloaded`] instead of growing the queue without
+    /// bound. `None` (the default) admits everything.
+    pub max_queue_depth: Option<usize>,
 }
 
 impl Default for FilterSpec {
     fn default() -> Self {
-        FilterSpec { config: FilterConfig::default(), shards: 4, policy: BatchPolicy::default() }
+        FilterSpec {
+            config: FilterConfig::default(),
+            shards: 4,
+            policy: BatchPolicy::default(),
+            max_queue_depth: None,
+        }
     }
 }
 
@@ -61,13 +71,21 @@ impl FilterSpec {
     }
 }
 
+/// Process-unique namespace instance ids: a dropped-and-recreated name is
+/// a *different* namespace, and handles (local or remote) must be able to
+/// tell — an old handle fails with `NoSuchFilter` instead of silently
+/// reaching the new instance.
+static NEXT_INSTANCE: AtomicU64 = AtomicU64::new(1);
+
 /// One live namespace: the engine plus its service-level identity. The
 /// `dropped` flag outlives catalog removal so handles cloned before a
 /// `drop_filter` fail fast instead of writing into a zombie filter.
 struct Namespace {
     name: String,
+    instance: u64,
     engine: Coordinator,
     requested_shards: usize,
+    max_queue_depth: Option<usize>,
     dropped: AtomicBool,
 }
 
@@ -75,11 +93,13 @@ impl Namespace {
     fn stats(&self) -> NamespaceStats {
         NamespaceStats {
             name: self.name.clone(),
-            backend: self.engine.backend_name(),
+            instance: self.instance,
+            backend: self.engine.backend_name().to_string(),
             config: *self.engine.filter_config(),
             requested_shards: self.requested_shards,
             num_shards: self.engine.num_shards(),
             queue_depth: self.engine.queue_depth(),
+            max_queue_depth: self.max_queue_depth,
             metrics: self.engine.metrics().snapshot(),
             shards: self.engine.shard_stats(),
         }
@@ -92,13 +112,21 @@ impl Namespace {
 #[derive(Debug, Clone)]
 pub struct NamespaceStats {
     pub name: String,
-    pub backend: &'static str,
+    /// Process-unique id of this namespace *instance*: dropping and
+    /// recreating a name yields a new id. Remote handles bind to it so a
+    /// stale handle cannot silently reach the reborn namespace.
+    pub instance: u64,
+    /// Backend name as a `String` so the stats view round-trips the wire
+    /// codec (a decoded frame cannot mint `&'static str`s).
+    pub backend: String,
     pub config: FilterConfig,
     /// Shards asked for at creation; a single-state backend reports
     /// `num_shards == 1` here instead of warning on stderr.
     pub requested_shards: usize,
     pub num_shards: usize,
     pub queue_depth: usize,
+    /// The namespace's admission limit, when one was configured.
+    pub max_queue_depth: Option<usize>,
     pub metrics: MetricsSnapshot,
     /// Per-shard counters (empty for single-state backends).
     pub shards: Vec<ShardStats>,
@@ -194,8 +222,10 @@ impl FilterService {
         .map_err(|e| GbfError::Backend(format!("{e:#}")))?;
         let ns = Arc::new(Namespace {
             name: name.to_string(),
+            instance: NEXT_INSTANCE.fetch_add(1, Ordering::Relaxed),
             engine,
             requested_shards: spec.shards,
+            max_queue_depth: spec.max_queue_depth,
             dropped: AtomicBool::new(false),
         });
         let mut map = self.namespaces.write().unwrap();
@@ -273,6 +303,12 @@ impl FilterHandle {
         &self.ns.name
     }
 
+    /// Process-unique id of the namespace instance this handle pins (see
+    /// [`NamespaceStats::instance`]).
+    pub fn instance(&self) -> u64 {
+        self.ns.instance
+    }
+
     pub fn filter_config(&self) -> &FilterConfig {
         self.ns.engine.filter_config()
     }
@@ -307,7 +343,14 @@ impl FilterHandle {
         if keys.is_empty() {
             return Ticket::ready(finish);
         }
-        Ticket::pending(self.ns.engine.submit_bulk(op, keys), finish)
+        // Admission control (backpressure): refuse instead of enqueueing,
+        // so an overloaded namespace's queue cannot grow without bound.
+        // The check happens under the queue lock, so concurrent callers
+        // cannot jointly overshoot the bound.
+        match self.ns.engine.submit_bulk_bounded(op, keys, self.ns.max_queue_depth) {
+            Ok(sink) => Ticket::pending(sink, finish),
+            Err(depth) => Ticket::failed(GbfError::Overloaded { name: self.ns.name.clone(), depth }, finish),
+        }
     }
 
     /// Insert one key.
@@ -411,6 +454,30 @@ mod tests {
         let stats = h.stats();
         assert_eq!(stats.metrics.adds, 1);
         assert_eq!(stats.metrics.queries, 1);
+    }
+
+    #[test]
+    fn overloaded_namespace_fails_fast_at_admission() {
+        let service = FilterService::new();
+        let spec = FilterSpec { config: small_cfg(12), shards: 1, max_queue_depth: Some(8), ..Default::default() };
+        let h = service.create_filter_spec("bounded", spec).unwrap();
+        // a bulk bigger than the limit is refused before enqueueing: the
+        // ticket is born resolved with the typed error
+        let t = h.add_bulk(&unique_keys(100, 1));
+        assert!(t.is_ready(), "admission refusal resolves immediately");
+        match t.wait().unwrap_err() {
+            GbfError::Overloaded { name, depth } => {
+                assert_eq!(name, "bounded");
+                assert!(depth > 8, "would-be depth reported: {depth}");
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // calls within the limit still serve normally
+        h.add_bulk(&[1, 2, 3]).wait().unwrap();
+        assert!(h.query_bulk(&[1]).wait().unwrap()[0]);
+        // the limit is introspectable through the admin plane
+        assert_eq!(service.stats("bounded").unwrap().max_queue_depth, Some(8));
+        assert_eq!(service.stats("bounded").unwrap().metrics.adds, 3, "refused keys never counted");
     }
 
     #[test]

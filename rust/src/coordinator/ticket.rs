@@ -18,12 +18,39 @@ use std::time::Duration;
 use super::batcher::BulkSink;
 use super::error::GbfError;
 
+/// What a pending ticket resolves from. The in-process implementation is
+/// the batcher's [`BulkSink`]; the wire client implements it over a slot
+/// completed by its reader thread (keyed on request id), so remote calls
+/// hand back the *same* `Ticket<T>` receipts as local ones.
+pub(crate) trait Completion: Send + Sync {
+    fn is_ready(&self) -> bool;
+    /// Block until resolved; must be called at most once (results move out).
+    fn wait(&self) -> Result<Vec<bool>, GbfError>;
+    /// Bounded wait: `None` on timeout (the completion stays waitable).
+    fn wait_timeout(&self, timeout: Duration) -> Option<Result<Vec<bool>, GbfError>>;
+}
+
+impl Completion for BulkSink {
+    fn is_ready(&self) -> bool {
+        BulkSink::is_ready(self)
+    }
+
+    fn wait(&self) -> Result<Vec<bool>, GbfError> {
+        BulkSink::wait(self).map_err(|e| GbfError::Backend(format!("{e:#}")))
+    }
+
+    fn wait_timeout(&self, timeout: Duration) -> Option<Result<Vec<bool>, GbfError>> {
+        BulkSink::wait_timeout(self, timeout).map(|r| r.map_err(|e| GbfError::Backend(format!("{e:#}"))))
+    }
+}
+
 enum Inner {
     /// Resolved at construction: empty submission or a service-level error.
     Done(Result<Vec<bool>, GbfError>),
-    /// In flight: the batch worker completes the sink slot by slot (the
-    /// sink records e2e latency itself, at completion time).
-    Pending(Arc<BulkSink>),
+    /// In flight: resolved by a [`Completion`] source — the batch worker's
+    /// sink (which records e2e latency itself, at completion time) or a
+    /// wire client's response slot.
+    Pending(Arc<dyn Completion>),
 }
 
 /// A poll-or-block receipt for one submitted operation (see module docs).
@@ -38,6 +65,12 @@ pub struct Ticket<T> {
 impl<T> Ticket<T> {
     pub(crate) fn pending(sink: Arc<BulkSink>, finish: fn(Vec<bool>) -> T) -> Self {
         Ticket { inner: Inner::Pending(sink), finish }
+    }
+
+    /// A ticket resolved by an arbitrary [`Completion`] source (the wire
+    /// client's per-request slot).
+    pub(crate) fn from_completion(source: Arc<dyn Completion>, finish: fn(Vec<bool>) -> T) -> Self {
+        Ticket { inner: Inner::Pending(source), finish }
     }
 
     pub(crate) fn failed(err: GbfError, finish: fn(Vec<bool>) -> T) -> Self {
@@ -61,7 +94,7 @@ impl<T> Ticket<T> {
         let finish = self.finish;
         let result = match self.inner {
             Inner::Done(r) => r,
-            Inner::Pending(sink) => sink.wait().map_err(|e| GbfError::Backend(format!("{e:#}"))),
+            Inner::Pending(source) => source.wait(),
         };
         result.map(finish)
     }
@@ -74,9 +107,9 @@ impl<T> Ticket<T> {
         let finish = self.finish;
         match self.inner {
             Inner::Done(r) => Ok(r.map(finish)),
-            Inner::Pending(sink) => match sink.wait_timeout(timeout) {
-                Some(r) => Ok(r.map_err(|e| GbfError::Backend(format!("{e:#}"))).map(finish)),
-                None => Err(Ticket { inner: Inner::Pending(sink), finish }),
+            Inner::Pending(source) => match source.wait_timeout(timeout) {
+                Some(r) => Ok(r.map(finish)),
+                None => Err(Ticket { inner: Inner::Pending(source), finish }),
             },
         }
     }

@@ -1,0 +1,464 @@
+//! `RemoteFilterService` / `RemoteFilterHandle` — the network client.
+//!
+//! A clonable client over one TCP connection. Requests carry fresh ids;
+//! a dedicated **reader thread** decodes response frames and resolves the
+//! matching per-request slot, so any number of calls can be in flight at
+//! once (pipelining — the wire analogue of submitting tickets across
+//! namespaces before waiting on any).
+//!
+//! * **admin** calls (`create_filter` / `drop_filter` / `list_filters` /
+//!   `stats`) block on their slot and return the same typed results as
+//!   [`FilterService`](crate::coordinator::FilterService).
+//! * **data-plane** calls return real [`Ticket`]s: the ticket's pending
+//!   source is the request's slot, completed by the reader thread when
+//!   the server's reply lands. Poll, bound, or block — exactly like an
+//!   in-process ticket.
+//!
+//! If the connection dies, every outstanding slot resolves to
+//! [`GbfError::Backend`] naming the cause, and later calls fail fast.
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::error::GbfError;
+use crate::coordinator::service::{FilterSpec, NamespaceStats};
+use crate::coordinator::ticket::{finish_all, finish_one, finish_unit, Completion, Ticket};
+use crate::filter::params::FilterConfig;
+
+use super::codec::{
+    decode_response, encode_data_request, encode_request, read_frame, write_frame, Request, Response, MAX_FRAME,
+};
+
+/// One in-flight request's parking spot, completed by the reader thread.
+struct Slot {
+    state: Mutex<Option<Response>>,
+    done: Condvar,
+}
+
+impl Slot {
+    fn new() -> Arc<Slot> {
+        Arc::new(Slot { state: Mutex::new(None), done: Condvar::new() })
+    }
+
+    fn complete(&self, resp: Response) {
+        let mut st = self.state.lock().unwrap();
+        if st.is_none() {
+            *st = Some(resp);
+            self.done.notify_all();
+        }
+    }
+
+    fn is_ready(&self) -> bool {
+        self.state.lock().unwrap().is_some()
+    }
+
+    fn wait(&self) -> Response {
+        let mut st = self.state.lock().unwrap();
+        while st.is_none() {
+            st = self.done.wait(st).unwrap();
+        }
+        st.take().unwrap()
+    }
+
+    fn wait_timeout(&self, timeout: Duration) -> Option<Response> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        while st.is_none() {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.done.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        Some(st.take().unwrap())
+    }
+}
+
+/// Shape a data-plane response into the ticket's raw bit vector.
+fn interpret(resp: Response) -> Result<Vec<bool>, GbfError> {
+    match resp {
+        Response::Ok => Ok(Vec::new()),
+        Response::Hits(hits) => Ok(hits),
+        Response::Err(e) => Err(e),
+        other => Err(GbfError::Backend(format!("protocol error: unexpected data-plane response {other:?}"))),
+    }
+}
+
+/// Adapts a wire [`Slot`] to the ticket completion source.
+struct WireCompletion {
+    slot: Arc<Slot>,
+    /// Keeps the connection (and with it the reader thread) alive while
+    /// this ticket is outstanding, so a ticket still resolves — with its
+    /// answer or a typed connection error — even after the last client
+    /// clone is dropped.
+    _client: Arc<ClientInner>,
+}
+
+impl Completion for WireCompletion {
+    fn is_ready(&self) -> bool {
+        self.slot.is_ready()
+    }
+
+    fn wait(&self) -> Result<Vec<bool>, GbfError> {
+        interpret(self.slot.wait())
+    }
+
+    fn wait_timeout(&self, timeout: Duration) -> Option<Result<Vec<bool>, GbfError>> {
+        self.slot.wait_timeout(timeout).map(interpret)
+    }
+}
+
+struct ClientInner {
+    writer: Mutex<TcpStream>,
+    pending: Mutex<HashMap<u64, Arc<Slot>>>,
+    next_id: AtomicU64,
+    /// Set by the reader thread when the connection dies; later calls
+    /// fail fast with the recorded reason.
+    dead: Mutex<Option<String>>,
+}
+
+impl Drop for ClientInner {
+    fn drop(&mut self) {
+        // unblock the reader thread so it exits with the socket
+        if let Ok(w) = self.writer.lock() {
+            let _ = w.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// Clonable remote catalog client (see module docs). All clones share one
+/// connection and one reader thread; the connection closes when the last
+/// clone is dropped.
+#[derive(Clone)]
+pub struct RemoteFilterService {
+    inner: Arc<ClientInner>,
+}
+
+impl RemoteFilterService {
+    /// Connect to a [`super::WireServer`] at `addr` (e.g.
+    /// `"127.0.0.1:4070"` or a `SocketAddr`).
+    pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<RemoteFilterService> {
+        let stream = TcpStream::connect(&addr).with_context(|| format!("connecting wire client to {addr:?}"))?;
+        stream.set_nodelay(true).ok();
+        let reader_stream = stream.try_clone().context("cloning client stream")?;
+        let inner = Arc::new(ClientInner {
+            writer: Mutex::new(stream),
+            pending: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            dead: Mutex::new(None),
+        });
+        let weak = Arc::downgrade(&inner);
+        std::thread::Builder::new()
+            .name("gbf-wire-reader".into())
+            .spawn(move || reader_loop(reader_stream, weak))?;
+        Ok(RemoteFilterService { inner })
+    }
+
+    fn next_id(&self) -> u64 {
+        self.inner.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Send one request; the returned slot resolves when the reply lands.
+    fn request(&self, req: &Request) -> Result<Arc<Slot>, GbfError> {
+        let id = self.next_id();
+        self.send_payload(id, encode_request(id, req))
+    }
+
+    /// Ship an already-encoded payload (the data plane encodes straight
+    /// from borrowed key slices); the returned slot resolves when the
+    /// reply for `id` lands.
+    fn send_payload(&self, id: u64, payload: Vec<u8>) -> Result<Arc<Slot>, GbfError> {
+        if let Some(reason) = self.inner.dead.lock().unwrap().clone() {
+            return Err(GbfError::Backend(format!("wire client: {reason}")));
+        }
+        if payload.len() > MAX_FRAME {
+            // fail just this call, before poisoning the connection with a
+            // frame the server will reject
+            return Err(GbfError::Backend(format!(
+                "request of {} bytes exceeds the frame bound ({MAX_FRAME}); split the bulk",
+                payload.len()
+            )));
+        }
+        let slot = Slot::new();
+        self.inner.pending.lock().unwrap().insert(id, Arc::clone(&slot));
+        let write_result = {
+            let mut w = self.inner.writer.lock().unwrap();
+            write_frame(&mut *w, &payload)
+        };
+        if let Err(e) = write_result {
+            self.inner.pending.lock().unwrap().remove(&id);
+            return Err(GbfError::Backend(format!("wire send failed: {e}")));
+        }
+        // Close the race with a dying connection: if the reader declared
+        // the connection dead around our insert/write, it may already have
+        // drained `pending` — a slot still in the map now would never be
+        // completed, so take it back out and fail fast instead.
+        if let Some(reason) = self.inner.dead.lock().unwrap().clone() {
+            if self.inner.pending.lock().unwrap().remove(&id).is_some() {
+                return Err(GbfError::Backend(format!("wire client: {reason}")));
+            }
+        }
+        Ok(slot)
+    }
+
+    /// Blocking admin round-trip.
+    fn admin(&self, req: &Request) -> Result<Response, GbfError> {
+        let slot = self.request(req)?;
+        match slot.wait() {
+            Response::Err(e) => Err(e),
+            resp => Ok(resp),
+        }
+    }
+
+    /// Create a namespace on the remote catalog; returns a handle bound
+    /// to this client.
+    pub fn create_filter(
+        &self,
+        name: &str,
+        config: FilterConfig,
+        shards: usize,
+    ) -> Result<RemoteFilterHandle, GbfError> {
+        self.create_filter_spec(name, FilterSpec::new(config, shards))
+    }
+
+    /// Create from a full [`FilterSpec`] (batch policy, queue bound). The
+    /// `Created` reply carries the new namespace's instance id, so the
+    /// returned handle is bound to exactly the namespace this call
+    /// created — atomically, even if another client drops/recreates the
+    /// name concurrently.
+    pub fn create_filter_spec(&self, name: &str, spec: FilterSpec) -> Result<RemoteFilterHandle, GbfError> {
+        match self.admin(&Request::Create { name: name.to_string(), spec })? {
+            Response::Created { instance } => {
+                Ok(RemoteFilterHandle { client: self.clone(), name: name.to_string(), instance })
+            }
+            other => Err(protocol_error("create", &other)),
+        }
+    }
+
+    pub fn drop_filter(&self, name: &str) -> Result<(), GbfError> {
+        match self.admin(&Request::Drop { name: name.to_string() })? {
+            Response::Ok => Ok(()),
+            other => Err(protocol_error("drop", &other)),
+        }
+    }
+
+    pub fn list_filters(&self) -> Result<Vec<String>, GbfError> {
+        match self.admin(&Request::List)? {
+            Response::Names(names) => Ok(names),
+            other => Err(protocol_error("list", &other)),
+        }
+    }
+
+    pub fn stats(&self, name: &str) -> Result<NamespaceStats, GbfError> {
+        match self.admin(&Request::Stats { name: name.to_string() })? {
+            Response::Stats(stats) => Ok(*stats),
+            other => Err(protocol_error("stats", &other)),
+        }
+    }
+
+    /// A data-plane handle to a remote namespace. The stats round-trip
+    /// both validates liveness (mirroring
+    /// [`FilterService::handle`](crate::coordinator::FilterService::handle)'s
+    /// `NoSuchFilter` on missing names) and binds the handle to the live
+    /// namespace *instance*, so the handle keeps in-process stale-handle
+    /// semantics: after a drop (and any recreate under the same name) its
+    /// operations fail with `NoSuchFilter`. Handles are cheap to clone —
+    /// prefer cloning over re-acquiring.
+    pub fn handle(&self, name: &str) -> Result<RemoteFilterHandle, GbfError> {
+        let stats = self.stats(name)?;
+        Ok(RemoteFilterHandle { client: self.clone(), name: name.to_string(), instance: stats.instance })
+    }
+}
+
+fn protocol_error(what: &str, got: &Response) -> GbfError {
+    GbfError::Backend(format!("protocol error: unexpected {what} response {got:?}"))
+}
+
+fn reader_loop(stream: TcpStream, inner: Weak<ClientInner>) {
+    let mut reader = BufReader::new(stream);
+    let reason = loop {
+        match read_frame(&mut reader) {
+            Ok(Some(payload)) => match decode_response(&payload) {
+                Ok((id, resp)) => {
+                    let Some(inner) = inner.upgrade() else { return };
+                    let slot = inner.pending.lock().unwrap().remove(&id);
+                    if let Some(slot) = slot {
+                        slot.complete(resp);
+                    }
+                }
+                Err(e) => break format!("undecodable response: {e:#}"),
+            },
+            Ok(None) => break "connection closed by server".to_string(),
+            Err(e) => break format!("read failed: {e:#}"),
+        }
+    };
+    // connection over: fail everything in flight, poison future calls
+    let Some(inner) = inner.upgrade() else { return };
+    *inner.dead.lock().unwrap() = Some(reason.clone());
+    let drained: Vec<Arc<Slot>> = inner.pending.lock().unwrap().drain().map(|(_, s)| s).collect();
+    for slot in drained {
+        slot.complete(Response::Err(GbfError::Backend(format!("wire client: {reason}"))));
+    }
+}
+
+/// Clonable remote data-plane handle: the wire twin of
+/// [`FilterHandle`](crate::coordinator::FilterHandle). Operations return
+/// the same [`Ticket`] receipts, resolved by the client's reader thread.
+#[derive(Clone)]
+pub struct RemoteFilterHandle {
+    client: RemoteFilterService,
+    name: String,
+    /// The namespace instance this handle is bound to; data-plane
+    /// requests carry it so a dropped-and-recreated name fails with
+    /// `NoSuchFilter` instead of silently reaching the new namespace.
+    instance: u64,
+}
+
+impl RemoteFilterHandle {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Remote stats for this handle's bound namespace *instance*. Unlike
+    /// the in-process handle (which pins the state and can read
+    /// post-mortem stats of a dropped namespace), the server drops state
+    /// with the namespace — so after a drop, or a drop-and-recreate,
+    /// this returns `NoSuchFilter` rather than another instance's
+    /// numbers.
+    pub fn stats(&self) -> Result<NamespaceStats, GbfError> {
+        let stats = self.client.stats(&self.name)?;
+        if stats.instance != self.instance {
+            return Err(GbfError::NoSuchFilter(self.name.clone()));
+        }
+        Ok(stats)
+    }
+
+    /// Data-plane submit: encodes straight from the borrowed key slice
+    /// (no intermediate owned copy) and hands back a wire-backed ticket.
+    fn submit<T>(&self, is_add: bool, keys: &[u64], finish: fn(Vec<bool>) -> T) -> Ticket<T> {
+        let id = self.client.next_id();
+        let payload = encode_data_request(id, is_add, &self.name, self.instance, keys);
+        match self.client.send_payload(id, payload) {
+            Ok(slot) => {
+                let completion = WireCompletion { slot, _client: Arc::clone(&self.client.inner) };
+                Ticket::from_completion(Arc::new(completion), finish)
+            }
+            Err(e) => Ticket::failed(e, finish),
+        }
+    }
+
+    pub fn add(&self, key: u64) -> Ticket<()> {
+        self.submit(true, &[key], finish_unit)
+    }
+
+    pub fn query(&self, key: u64) -> Ticket<bool> {
+        self.submit(false, &[key], finish_one)
+    }
+
+    pub fn add_bulk(&self, keys: &[u64]) -> Ticket<()> {
+        if keys.is_empty() {
+            return Ticket::ready(finish_unit);
+        }
+        self.submit(true, keys, finish_unit)
+    }
+
+    pub fn query_bulk(&self, keys: &[u64]) -> Ticket<Vec<bool>> {
+        if keys.is_empty() {
+            return Ticket::ready(finish_all);
+        }
+        self.submit(false, keys, finish_all)
+    }
+}
+
+// ---- the remote transport speaks the same API ----
+
+use crate::coordinator::api::{FilterApi, FilterDataPlane};
+
+impl FilterApi for RemoteFilterService {
+    fn create_filter_spec(&self, name: &str, spec: FilterSpec) -> Result<Box<dyn FilterDataPlane>, GbfError> {
+        RemoteFilterService::create_filter_spec(self, name, spec)
+            .map(|h| Box::new(h) as Box<dyn FilterDataPlane>)
+    }
+
+    fn drop_filter(&self, name: &str) -> Result<(), GbfError> {
+        RemoteFilterService::drop_filter(self, name)
+    }
+
+    fn list_filters(&self) -> Result<Vec<String>, GbfError> {
+        RemoteFilterService::list_filters(self)
+    }
+
+    fn stats(&self, name: &str) -> Result<NamespaceStats, GbfError> {
+        RemoteFilterService::stats(self, name)
+    }
+
+    fn handle(&self, name: &str) -> Result<Box<dyn FilterDataPlane>, GbfError> {
+        RemoteFilterService::handle(self, name).map(|h| Box::new(h) as Box<dyn FilterDataPlane>)
+    }
+}
+
+impl FilterDataPlane for RemoteFilterHandle {
+    fn name(&self) -> &str {
+        RemoteFilterHandle::name(self)
+    }
+
+    fn clone_box(&self) -> Box<dyn FilterDataPlane> {
+        Box::new(self.clone())
+    }
+
+    fn add(&self, key: u64) -> Ticket<()> {
+        RemoteFilterHandle::add(self, key)
+    }
+
+    fn query(&self, key: u64) -> Ticket<bool> {
+        RemoteFilterHandle::query(self, key)
+    }
+
+    fn add_bulk(&self, keys: &[u64]) -> Ticket<()> {
+        RemoteFilterHandle::add_bulk(self, keys)
+    }
+
+    fn query_bulk(&self, keys: &[u64]) -> Ticket<Vec<bool>> {
+        RemoteFilterHandle::query_bulk(self, keys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connect_to_nothing_fails_cleanly() {
+        // a port that nothing listens on (0 is never listenable)
+        assert!(RemoteFilterService::connect("127.0.0.1:1").is_err());
+    }
+
+    #[test]
+    fn interpret_maps_the_data_plane() {
+        assert_eq!(interpret(Response::Ok), Ok(Vec::new()));
+        assert_eq!(interpret(Response::Hits(vec![true])), Ok(vec![true]));
+        assert_eq!(
+            interpret(Response::Err(GbfError::NoSuchFilter("x".into()))),
+            Err(GbfError::NoSuchFilter("x".into()))
+        );
+        assert!(matches!(interpret(Response::Names(vec![])), Err(GbfError::Backend(_))));
+    }
+
+    #[test]
+    fn slot_completes_once() {
+        let slot = Slot::new();
+        assert!(!slot.is_ready());
+        assert!(slot.wait_timeout(Duration::from_millis(5)).is_none());
+        slot.complete(Response::Ok);
+        slot.complete(Response::Hits(vec![true])); // second completion ignored
+        assert!(slot.is_ready());
+        assert!(matches!(slot.wait(), Response::Ok));
+    }
+}

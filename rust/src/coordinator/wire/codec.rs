@@ -1,0 +1,787 @@
+//! The wire frame codec: versioned, length-prefixed binary frames.
+//!
+//! Everything crossing the socket is one **frame**:
+//!
+//! ```text
+//! [u32 LE payload length][payload]
+//! payload = [u8 version = 1][u64 LE request id][u8 tag][body ...]
+//! ```
+//!
+//! Requests and responses share the envelope; the tag namespaces them
+//! (requests 0x0_, responses 0x8_). All integers are little-endian;
+//! strings are `u32` length + UTF-8 bytes; `f64`s travel as their IEEE
+//! bit patterns; `Vec<bool>` answers are bit-packed (8 answers per byte —
+//! this is a Bloom filter service, after all). Request ids are chosen by
+//! the client and echoed verbatim by the server, which is what makes
+//! pipelining work: responses may arrive in any order and are matched by
+//! id, so a slow bulk never forces an admin reply to queue behind it.
+//!
+//! The codec is hand-rolled (the offline environment has no serde), in
+//! the same spirit as [`crate::infra::json`]: a small writer, a bounds-
+//! checked cursor reader, and exhaustive round-trip tests. Every decoder
+//! rejects trailing bytes, truncated bodies, unknown tags, and frames
+//! above [`MAX_FRAME`], so a corrupt or hostile peer produces a clean
+//! error instead of an OOM or a wedge.
+
+use std::io::{ErrorKind, Read, Write};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::error::GbfError;
+use crate::coordinator::metrics::{MetricsSnapshot, ShardStats};
+use crate::coordinator::service::{FilterSpec, NamespaceStats};
+use crate::filter::params::{FilterConfig, Scheme, Variant};
+
+/// Protocol version byte; bump on any incompatible layout change.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Upper bound on one frame's payload (guards `Vec` allocation on decode).
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Everything a client can ask of the catalog over the wire.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Create { name: String, spec: FilterSpec },
+    Drop { name: String },
+    List,
+    Stats { name: String },
+    /// `instance` pins the namespace *instance* the handle was bound to
+    /// (see [`NamespaceStats::instance`]): if the name was dropped and
+    /// recreated since, the server answers `NoSuchFilter` instead of
+    /// silently writing into the new namespace — matching in-process
+    /// stale-handle semantics.
+    AddBulk { name: String, instance: u64, keys: Vec<u64> },
+    QueryBulk { name: String, instance: u64, keys: Vec<u64> },
+}
+
+/// Every way the server answers.
+#[derive(Debug, Clone)]
+pub enum Response {
+    /// Drop / AddBulk succeeded.
+    Ok,
+    /// Create succeeded; carries the new namespace's instance id so the
+    /// client binds its handle atomically (no follow-up stats race).
+    Created { instance: u64 },
+    /// List answer.
+    Names(Vec<String>),
+    /// Stats answer (boxed: the stats view dwarfs the other variants).
+    Stats(Box<NamespaceStats>),
+    /// QueryBulk answer, in submission order.
+    Hits(Vec<bool>),
+    /// Any call's typed failure — `GbfError` round-trips the codec.
+    Err(GbfError),
+}
+
+// ---- request/response tags ----
+
+const REQ_CREATE: u8 = 0x01;
+const REQ_DROP: u8 = 0x02;
+const REQ_LIST: u8 = 0x03;
+const REQ_STATS: u8 = 0x04;
+const REQ_ADD_BULK: u8 = 0x05;
+const REQ_QUERY_BULK: u8 = 0x06;
+
+const RESP_OK: u8 = 0x81;
+const RESP_NAMES: u8 = 0x82;
+const RESP_STATS: u8 = 0x83;
+const RESP_HITS: u8 = 0x84;
+const RESP_ERR: u8 = 0x85;
+const RESP_CREATED: u8 = 0x86;
+
+const ERR_NO_SUCH_FILTER: u8 = 0;
+const ERR_FILTER_EXISTS: u8 = 1;
+const ERR_INVALID_CONFIG: u8 = 2;
+const ERR_BACKEND: u8 = 3;
+const ERR_OVERLOADED: u8 = 4;
+
+// ---- frame I/O ----
+
+/// Write one frame (length prefix + payload) as a single `write_all`.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    let mut frame = Vec::with_capacity(4 + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(payload);
+    w.write_all(&frame)?;
+    w.flush()
+}
+
+/// Read one frame's payload. `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len_bytes = [0u8; 4];
+    match r.read_exact(&mut len_bytes) {
+        Ok(()) => {}
+        Err(e) if e.kind() == ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e).context("reading frame length"),
+    }
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    ensure!(len <= MAX_FRAME, "frame of {len} bytes exceeds MAX_FRAME ({MAX_FRAME})");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    Ok(Some(payload))
+}
+
+// ---- writer ----
+
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn envelope(request_id: u64, tag: u8) -> Enc {
+        let mut e = Enc::default();
+        e.u8(WIRE_VERSION);
+        e.u64(request_id);
+        e.u8(tag);
+        e
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn keys(&mut self, keys: &[u64]) {
+        self.u32(keys.len() as u32);
+        for &k in keys {
+            self.u64(k);
+        }
+    }
+
+    fn bools(&mut self, bits: &[bool]) {
+        self.u32(bits.len() as u32);
+        let mut byte = 0u8;
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                byte |= 1 << (i % 8);
+            }
+            if i % 8 == 7 {
+                self.buf.push(byte);
+                byte = 0;
+            }
+        }
+        if bits.len() % 8 != 0 {
+            self.buf.push(byte);
+        }
+    }
+
+    fn opt_usize(&mut self, v: Option<usize>) {
+        match v {
+            None => self.u8(0),
+            Some(n) => {
+                self.u8(1);
+                self.u64(n as u64);
+            }
+        }
+    }
+
+    fn config(&mut self, c: &FilterConfig) {
+        self.str(c.variant.as_str());
+        self.str(c.scheme.as_str());
+        for v in [c.log2_m_words, c.word_bits, c.block_bits, c.k, c.z, c.theta, c.phi] {
+            self.u32(v);
+        }
+    }
+
+    fn spec(&mut self, s: &FilterSpec) {
+        self.config(&s.config);
+        self.u64(s.shards as u64);
+        self.u64(s.policy.max_batch as u64);
+        self.u64(s.policy.max_wait.as_nanos() as u64);
+        self.opt_usize(s.max_queue_depth);
+    }
+
+    fn metrics(&mut self, m: &MetricsSnapshot) {
+        for v in [m.adds, m.queries, m.batches] {
+            self.u64(v);
+        }
+        self.f64(m.mean_batch_size);
+        for v in [
+            m.queue_wait_p50_ns,
+            m.queue_wait_p99_ns,
+            m.exec_p50_ns,
+            m.exec_p99_ns,
+            m.e2e_p50_ns,
+            m.e2e_p99_ns,
+        ] {
+            self.u64(v);
+        }
+    }
+
+    fn shard_stats(&mut self, s: &ShardStats) {
+        for v in [s.shard as u64, s.jobs, s.keys, s.queue_ns, s.exec_ns] {
+            self.u64(v);
+        }
+        self.f64(s.fill_ratio);
+    }
+
+    fn namespace_stats(&mut self, n: &NamespaceStats) {
+        self.str(&n.name);
+        self.u64(n.instance);
+        self.str(&n.backend);
+        self.config(&n.config);
+        self.u64(n.requested_shards as u64);
+        self.u64(n.num_shards as u64);
+        self.u64(n.queue_depth as u64);
+        self.opt_usize(n.max_queue_depth);
+        self.metrics(&n.metrics);
+        self.u32(n.shards.len() as u32);
+        for s in &n.shards {
+            self.shard_stats(s);
+        }
+    }
+
+    fn error(&mut self, e: &GbfError) {
+        match e {
+            GbfError::NoSuchFilter(name) => {
+                self.u8(ERR_NO_SUCH_FILTER);
+                self.str(name);
+            }
+            GbfError::FilterExists(name) => {
+                self.u8(ERR_FILTER_EXISTS);
+                self.str(name);
+            }
+            GbfError::InvalidConfig(msg) => {
+                self.u8(ERR_INVALID_CONFIG);
+                self.str(msg);
+            }
+            GbfError::Backend(msg) => {
+                self.u8(ERR_BACKEND);
+                self.str(msg);
+            }
+            GbfError::Overloaded { name, depth } => {
+                self.u8(ERR_OVERLOADED);
+                self.str(name);
+                self.u64(*depth as u64);
+            }
+        }
+    }
+}
+
+// ---- reader ----
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "frame truncated at byte {} (want {n} more)", self.pos);
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        ensure!(len <= MAX_FRAME, "string of {len} bytes exceeds frame bound");
+        Ok(std::str::from_utf8(self.take(len)?).context("non-UTF-8 wire string")?.to_string())
+    }
+
+    fn keys(&mut self) -> Result<Vec<u64>> {
+        let n = self.u32()? as usize;
+        ensure!(n * 8 <= MAX_FRAME, "key array of {n} exceeds frame bound");
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    fn bools(&mut self) -> Result<Vec<bool>> {
+        let n = self.u32()? as usize;
+        ensure!(n <= MAX_FRAME * 8, "bool array of {n} exceeds frame bound");
+        let bytes = self.take(n.div_ceil(8))?;
+        Ok((0..n).map(|i| bytes[i / 8] & (1 << (i % 8)) != 0).collect())
+    }
+
+    fn opt_usize(&mut self) -> Result<Option<usize>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.usize()?)),
+            t => bail!("bad option tag {t}"),
+        }
+    }
+
+    fn config(&mut self) -> Result<FilterConfig> {
+        let variant = Variant::parse(&self.str()?)?;
+        let scheme = Scheme::parse(&self.str()?)?;
+        Ok(FilterConfig {
+            variant,
+            scheme,
+            log2_m_words: self.u32()?,
+            word_bits: self.u32()?,
+            block_bits: self.u32()?,
+            k: self.u32()?,
+            z: self.u32()?,
+            theta: self.u32()?,
+            phi: self.u32()?,
+        })
+    }
+
+    fn spec(&mut self) -> Result<FilterSpec> {
+        let config = self.config()?;
+        let shards = self.usize()?;
+        let max_batch = self.usize()?;
+        let max_wait = Duration::from_nanos(self.u64()?);
+        let max_queue_depth = self.opt_usize()?;
+        Ok(FilterSpec { config, shards, policy: BatchPolicy { max_batch, max_wait }, max_queue_depth })
+    }
+
+    fn metrics(&mut self) -> Result<MetricsSnapshot> {
+        Ok(MetricsSnapshot {
+            adds: self.u64()?,
+            queries: self.u64()?,
+            batches: self.u64()?,
+            mean_batch_size: self.f64()?,
+            queue_wait_p50_ns: self.u64()?,
+            queue_wait_p99_ns: self.u64()?,
+            exec_p50_ns: self.u64()?,
+            exec_p99_ns: self.u64()?,
+            e2e_p50_ns: self.u64()?,
+            e2e_p99_ns: self.u64()?,
+        })
+    }
+
+    fn shard_stats(&mut self) -> Result<ShardStats> {
+        Ok(ShardStats {
+            shard: self.usize()?,
+            jobs: self.u64()?,
+            keys: self.u64()?,
+            queue_ns: self.u64()?,
+            exec_ns: self.u64()?,
+            fill_ratio: self.f64()?,
+        })
+    }
+
+    fn namespace_stats(&mut self) -> Result<NamespaceStats> {
+        let name = self.str()?;
+        let instance = self.u64()?;
+        let backend = self.str()?;
+        let config = self.config()?;
+        let requested_shards = self.usize()?;
+        let num_shards = self.usize()?;
+        let queue_depth = self.usize()?;
+        let max_queue_depth = self.opt_usize()?;
+        let metrics = self.metrics()?;
+        let n = self.u32()? as usize;
+        ensure!(n <= 1 << 16, "shard stats count {n} exceeds shard bound");
+        let mut shards = Vec::with_capacity(n);
+        for _ in 0..n {
+            shards.push(self.shard_stats()?);
+        }
+        Ok(NamespaceStats {
+            name,
+            instance,
+            backend,
+            config,
+            requested_shards,
+            num_shards,
+            queue_depth,
+            max_queue_depth,
+            metrics,
+            shards,
+        })
+    }
+
+    fn error(&mut self) -> Result<GbfError> {
+        Ok(match self.u8()? {
+            ERR_NO_SUCH_FILTER => GbfError::NoSuchFilter(self.str()?),
+            ERR_FILTER_EXISTS => GbfError::FilterExists(self.str()?),
+            ERR_INVALID_CONFIG => GbfError::InvalidConfig(self.str()?),
+            ERR_BACKEND => GbfError::Backend(self.str()?),
+            ERR_OVERLOADED => GbfError::Overloaded { name: self.str()?, depth: self.usize()? },
+            t => bail!("unknown error tag {t:#04x}"),
+        })
+    }
+
+    /// Decode done: reject trailing garbage.
+    fn finish(self) -> Result<()> {
+        ensure!(self.pos == self.buf.len(), "trailing garbage at byte {} of {}", self.pos, self.buf.len());
+        Ok(())
+    }
+
+    /// Check the envelope version and pull (request id, tag).
+    fn envelope(&mut self) -> Result<(u64, u8)> {
+        let version = self.u8()?;
+        ensure!(version == WIRE_VERSION, "unsupported wire version {version} (this side speaks {WIRE_VERSION})");
+        let id = self.u64()?;
+        let tag = self.u8()?;
+        Ok((id, tag))
+    }
+}
+
+// ---- public encode/decode ----
+
+/// Encode a request payload (frame it with [`write_frame`]).
+pub fn encode_request(request_id: u64, req: &Request) -> Vec<u8> {
+    let mut e = match req {
+        Request::Create { name, spec } => {
+            let mut e = Enc::envelope(request_id, REQ_CREATE);
+            e.str(name);
+            e.spec(spec);
+            e
+        }
+        Request::Drop { name } => {
+            let mut e = Enc::envelope(request_id, REQ_DROP);
+            e.str(name);
+            e
+        }
+        Request::List => Enc::envelope(request_id, REQ_LIST),
+        Request::Stats { name } => {
+            let mut e = Enc::envelope(request_id, REQ_STATS);
+            e.str(name);
+            e
+        }
+        Request::AddBulk { name, instance, keys } => {
+            let mut e = Enc::envelope(request_id, REQ_ADD_BULK);
+            e.str(name);
+            e.u64(*instance);
+            e.keys(keys);
+            e
+        }
+        Request::QueryBulk { name, instance, keys } => {
+            let mut e = Enc::envelope(request_id, REQ_QUERY_BULK);
+            e.str(name);
+            e.u64(*instance);
+            e.keys(keys);
+            e
+        }
+    };
+    std::mem::take(&mut e.buf)
+}
+
+/// Encode an AddBulk/QueryBulk payload straight from a borrowed key
+/// slice — the client hot path; byte-identical to `encode_request` with
+/// the equivalent [`Request`], without materializing an owned `Vec<u64>`
+/// first.
+pub fn encode_data_request(request_id: u64, is_add: bool, name: &str, instance: u64, keys: &[u64]) -> Vec<u8> {
+    let mut e = Enc::envelope(request_id, if is_add { REQ_ADD_BULK } else { REQ_QUERY_BULK });
+    e.str(name);
+    e.u64(instance);
+    e.keys(keys);
+    std::mem::take(&mut e.buf)
+}
+
+/// Decode a request payload into (request id, request).
+pub fn decode_request(payload: &[u8]) -> Result<(u64, Request)> {
+    let mut d = Dec::new(payload);
+    let (id, tag) = d.envelope()?;
+    let req = match tag {
+        REQ_CREATE => Request::Create { name: d.str()?, spec: d.spec()? },
+        REQ_DROP => Request::Drop { name: d.str()? },
+        REQ_LIST => Request::List,
+        REQ_STATS => Request::Stats { name: d.str()? },
+        REQ_ADD_BULK => Request::AddBulk { name: d.str()?, instance: d.u64()?, keys: d.keys()? },
+        REQ_QUERY_BULK => Request::QueryBulk { name: d.str()?, instance: d.u64()?, keys: d.keys()? },
+        t => bail!("unknown request tag {t:#04x}"),
+    };
+    d.finish()?;
+    Ok((id, req))
+}
+
+/// Encode a response payload (frame it with [`write_frame`]).
+pub fn encode_response(request_id: u64, resp: &Response) -> Vec<u8> {
+    let mut e = match resp {
+        Response::Ok => Enc::envelope(request_id, RESP_OK),
+        Response::Created { instance } => {
+            let mut e = Enc::envelope(request_id, RESP_CREATED);
+            e.u64(*instance);
+            e
+        }
+        Response::Names(names) => {
+            let mut e = Enc::envelope(request_id, RESP_NAMES);
+            e.u32(names.len() as u32);
+            for n in names {
+                e.str(n);
+            }
+            e
+        }
+        Response::Stats(stats) => {
+            let mut e = Enc::envelope(request_id, RESP_STATS);
+            e.namespace_stats(stats);
+            e
+        }
+        Response::Hits(hits) => {
+            let mut e = Enc::envelope(request_id, RESP_HITS);
+            e.bools(hits);
+            e
+        }
+        Response::Err(err) => {
+            let mut e = Enc::envelope(request_id, RESP_ERR);
+            e.error(err);
+            e
+        }
+    };
+    std::mem::take(&mut e.buf)
+}
+
+/// Decode a response payload into (request id, response).
+pub fn decode_response(payload: &[u8]) -> Result<(u64, Response)> {
+    let mut d = Dec::new(payload);
+    let (id, tag) = d.envelope()?;
+    let resp = match tag {
+        RESP_OK => Response::Ok,
+        RESP_CREATED => Response::Created { instance: d.u64()? },
+        RESP_NAMES => {
+            let n = d.u32()? as usize;
+            ensure!(n <= 1 << 20, "name count {n} exceeds bound");
+            let mut names = Vec::with_capacity(n);
+            for _ in 0..n {
+                names.push(d.str()?);
+            }
+            Response::Names(names)
+        }
+        RESP_STATS => Response::Stats(Box::new(d.namespace_stats()?)),
+        RESP_HITS => Response::Hits(d.bools()?),
+        RESP_ERR => Response::Err(d.error()?),
+        t => bail!("unknown response tag {t:#04x}"),
+    };
+    d.finish()?;
+    Ok((id, resp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt_req(req: Request) -> (u64, Request) {
+        decode_request(&encode_request(42, &req)).unwrap()
+    }
+
+    fn rt_resp(resp: Response) -> (u64, Response) {
+        decode_response(&encode_response(7, &resp)).unwrap()
+    }
+
+    #[test]
+    fn request_round_trips() {
+        let spec = FilterSpec {
+            config: FilterConfig { log2_m_words: 14, ..Default::default() },
+            shards: 8,
+            policy: BatchPolicy { max_batch: 1024, max_wait: Duration::from_micros(150) },
+            max_queue_depth: Some(4096),
+        };
+        let (id, req) = rt_req(Request::Create { name: "hot".into(), spec: spec.clone() });
+        assert_eq!(id, 42);
+        match req {
+            Request::Create { name, spec: s } => {
+                assert_eq!(name, "hot");
+                assert_eq!(s.config, spec.config);
+                assert_eq!(s.shards, 8);
+                assert_eq!(s.policy.max_batch, 1024);
+                assert_eq!(s.policy.max_wait, Duration::from_micros(150));
+                assert_eq!(s.max_queue_depth, Some(4096));
+            }
+            other => panic!("{other:?}"),
+        }
+        match rt_req(Request::Drop { name: "x".into() }).1 {
+            Request::Drop { name } => assert_eq!(name, "x"),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(rt_req(Request::List).1, Request::List));
+        match rt_req(Request::AddBulk { name: "n".into(), instance: 7, keys: vec![1, u64::MAX, 0] }).1 {
+            Request::AddBulk { name, instance, keys } => {
+                assert_eq!(name, "n");
+                assert_eq!(instance, 7);
+                assert_eq!(keys, vec![1, u64::MAX, 0]);
+            }
+            other => panic!("{other:?}"),
+        }
+        match rt_req(Request::QueryBulk { name: "n".into(), instance: u64::MAX, keys: vec![9] }).1 {
+            Request::QueryBulk { instance, keys, .. } => {
+                assert_eq!(instance, u64::MAX);
+                assert_eq!(keys, vec![9]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn spec_without_queue_bound_round_trips() {
+        match rt_req(Request::Create { name: "n".into(), spec: FilterSpec::default() }).1 {
+            Request::Create { spec, .. } => assert_eq!(spec.max_queue_depth, None),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn data_request_fast_path_is_byte_identical() {
+        let keys = vec![5u64, 6, u64::MAX];
+        assert_eq!(
+            encode_data_request(11, true, "ns", 3, &keys),
+            encode_request(11, &Request::AddBulk { name: "ns".into(), instance: 3, keys: keys.clone() })
+        );
+        assert_eq!(
+            encode_data_request(12, false, "ns", 4, &keys),
+            encode_request(12, &Request::QueryBulk { name: "ns".into(), instance: 4, keys })
+        );
+    }
+
+    #[test]
+    fn response_round_trips() {
+        assert!(matches!(rt_resp(Response::Ok).1, Response::Ok));
+        match rt_resp(Response::Created { instance: 41 }).1 {
+            Response::Created { instance } => assert_eq!(instance, 41),
+            other => panic!("{other:?}"),
+        }
+        let (id, r) = rt_resp(Response::Names(vec!["a".into(), "b".into()]));
+        assert_eq!(id, 7);
+        match r {
+            Response::Names(n) => assert_eq!(n, vec!["a".to_string(), "b".to_string()]),
+            other => panic!("{other:?}"),
+        }
+        // bit-packing: lengths straddling byte boundaries
+        for n in [0usize, 1, 7, 8, 9, 64, 65] {
+            let hits: Vec<bool> = (0..n).map(|i| i % 3 == 0).collect();
+            match rt_resp(Response::Hits(hits.clone())).1 {
+                Response::Hits(h) => assert_eq!(h, hits, "n = {n}"),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_error_variant_round_trips() {
+        let errors = vec![
+            GbfError::NoSuchFilter("gone".into()),
+            GbfError::FilterExists("dup".into()),
+            GbfError::InvalidConfig("k = 0".into()),
+            GbfError::Backend("shard 3 panicked".into()),
+            GbfError::Overloaded { name: "hot".into(), depth: 123_456 },
+        ];
+        for e in errors {
+            match rt_resp(Response::Err(e.clone())).1 {
+                Response::Err(got) => assert_eq!(got, e),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn stats_round_trip() {
+        let stats = NamespaceStats {
+            name: "ns".into(),
+            instance: 99,
+            backend: "native".into(),
+            config: FilterConfig { log2_m_words: 13, ..Default::default() },
+            requested_shards: 4,
+            num_shards: 4,
+            queue_depth: 17,
+            max_queue_depth: Some(1 << 20),
+            metrics: MetricsSnapshot {
+                adds: 10,
+                queries: 20,
+                batches: 3,
+                mean_batch_size: 10.5,
+                queue_wait_p50_ns: 1,
+                queue_wait_p99_ns: 2,
+                exec_p50_ns: 3,
+                exec_p99_ns: 4,
+                e2e_p50_ns: 5,
+                e2e_p99_ns: 6,
+            },
+            shards: vec![
+                ShardStats { shard: 0, jobs: 2, keys: 100, queue_ns: 5, exec_ns: 9, fill_ratio: 0.25 },
+                ShardStats { shard: 1, jobs: 1, keys: 50, queue_ns: 0, exec_ns: 4, fill_ratio: 0.125 },
+            ],
+        };
+        match rt_resp(Response::Stats(Box::new(stats.clone()))).1 {
+            Response::Stats(got) => {
+                assert_eq!(got.name, stats.name);
+                assert_eq!(got.instance, 99);
+                assert_eq!(got.backend, "native");
+                assert_eq!(got.config, stats.config);
+                assert_eq!(got.requested_shards, 4);
+                assert_eq!(got.num_shards, 4);
+                assert_eq!(got.queue_depth, 17);
+                assert_eq!(got.max_queue_depth, Some(1 << 20));
+                assert_eq!(got.metrics.adds, 10);
+                assert_eq!(got.metrics.mean_batch_size, 10.5);
+                assert_eq!(got.metrics.e2e_p99_ns, 6);
+                assert_eq!(got.shards, stats.shards);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_version_truncation_and_garbage() {
+        let mut payload = encode_request(1, &Request::List);
+        payload[0] = 99; // version byte
+        assert!(decode_request(&payload).unwrap_err().to_string().contains("version"));
+
+        let good = encode_request(1, &Request::Drop { name: "abc".into() });
+        assert!(decode_request(&good[..good.len() - 1]).is_err(), "truncated body");
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(decode_request(&trailing).is_err(), "trailing garbage");
+
+        let mut bad_tag = encode_request(1, &Request::List);
+        bad_tag[9] = 0x7F;
+        assert!(decode_request(&bad_tag).is_err());
+        assert!(decode_response(&encode_request(1, &Request::List)).is_err(), "request tag is not a response");
+    }
+
+    #[test]
+    fn frame_io_round_trips_and_bounds() {
+        let payload = encode_request(3, &Request::Stats { name: "s".into() });
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &payload).unwrap();
+        let mut cursor = &wire[..];
+        let got = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(got, payload);
+        // clean EOF at a boundary is None, not an error
+        assert!(read_frame(&mut cursor).unwrap().is_none());
+        // oversized length prefix is rejected before allocation
+        let huge = ((MAX_FRAME + 1) as u32).to_le_bytes();
+        assert!(read_frame(&mut &huge[..]).is_err());
+        // truncated payload is an error, not silent None
+        let mut cut = Vec::new();
+        write_frame(&mut cut, &payload).unwrap();
+        cut.truncate(cut.len() - 2);
+        assert!(read_frame(&mut &cut[..]).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! The network transport for the filter API (S8 over a socket).
+//!
+//! Three pieces, one contract:
+//!
+//! * [`codec`] — versioned, length-prefixed binary frames; request ids
+//!   make responses order-independent (pipelining), and the typed
+//!   [`GbfError`](crate::coordinator::GbfError) round-trips intact.
+//! * [`server`] — [`WireServer`]: a
+//!   [`FilterService`](crate::coordinator::FilterService) behind a
+//!   `TcpListener`; admin replies come straight off the connection's
+//!   reader thread while bulk results flow from a completer thread, so a
+//!   slow bulk never head-of-line-blocks an admin call.
+//! * [`client`] — [`RemoteFilterService`] / [`RemoteFilterHandle`]: the
+//!   same [`FilterApi`](crate::coordinator::FilterApi) /
+//!   [`FilterDataPlane`](crate::coordinator::FilterDataPlane) surface,
+//!   returning real [`Ticket`](crate::coordinator::Ticket)s resolved by
+//!   a reader thread keyed on request id.
+//!
+//! DESIGN.md's `coordinator::wire` section documents the frame layout
+//! and the error mapping table.
+
+pub mod client;
+pub mod codec;
+pub mod server;
+
+pub use client::{RemoteFilterHandle, RemoteFilterService};
+pub use codec::{Request, Response, MAX_FRAME, WIRE_VERSION};
+pub use server::WireServer;

@@ -1,0 +1,354 @@
+//! `WireServer` — a `FilterService` behind a `TcpListener`.
+//!
+//! One accept thread; per connection, one **reader** thread and one
+//! **completer** thread:
+//!
+//! * the reader decodes frames and executes **admin** requests
+//!   (create/drop/list/stats) inline — they only touch the catalog lock,
+//!   so their replies go out immediately;
+//! * **data-plane** requests (add_bulk/query_bulk) are submitted to the
+//!   namespace (yielding a [`Ticket`](crate::coordinator::Ticket)) and
+//!   handed to the completer, which polls the in-flight tickets and
+//!   writes each reply as soon as ITS ticket resolves — out of order if
+//!   need be.
+//!
+//! Both threads write to the socket under one mutex, tagging every reply
+//! with the client's request id — so a slow bulk never head-of-line-
+//! blocks an admin reply, and a stalled namespace never blocks another
+//! namespace's finished replies on the same connection.
+//!
+//! Data requests carry the namespace *instance* id their handle bound
+//! (see [`crate::coordinator::NamespaceStats::instance`]); if the name
+//! was dropped — and possibly recreated — since, the server answers
+//! `NoSuchFilter`, matching in-process stale-handle semantics.
+//!
+//! Typed errors ([`crate::coordinator::GbfError`]) round-trip the codec:
+//! a remote client sees the same `NoSuchFilter` / `FilterExists` /
+//! `Overloaded` values an in-process caller gets.
+
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::error::GbfError;
+use crate::coordinator::service::FilterService;
+use crate::coordinator::ticket::Ticket;
+
+use super::codec::{decode_request, encode_response, read_frame, write_frame, Request, Response};
+
+/// Upper bound on the total filter bytes (config size × shards) one
+/// remote `Create` may commit. The frame codec caps what a hostile peer
+/// can make the server *parse*; this caps what a well-formed frame can
+/// make it *allocate*. Oversized namespaces belong to in-process
+/// operators (per-tenant quotas/auth are a ROADMAP item).
+pub const MAX_REMOTE_FILTER_BYTES: u64 = 8 << 30;
+
+/// A data-plane ticket in flight on one connection, tagged with the
+/// request id its reply must carry.
+enum PendingOp {
+    Add(Ticket<()>),
+    Query(Ticket<Vec<bool>>),
+}
+
+impl PendingOp {
+    fn is_ready(&self) -> bool {
+        match self {
+            PendingOp::Add(t) => t.is_ready(),
+            PendingOp::Query(t) => t.is_ready(),
+        }
+    }
+
+    fn resolve(self) -> Response {
+        match self {
+            PendingOp::Add(t) => match t.wait() {
+                Ok(()) => Response::Ok,
+                Err(e) => Response::Err(e),
+            },
+            PendingOp::Query(t) => match t.wait() {
+                Ok(hits) => Response::Hits(hits),
+                Err(e) => Response::Err(e),
+            },
+        }
+    }
+}
+
+/// Live connections: a stream clone (to unblock the reader on shutdown)
+/// paired with its handler thread. Finished entries are reaped on every
+/// accept so a long-lived server does not accumulate dead fds/handles.
+struct ConnRegistry {
+    conns: Mutex<Vec<(TcpStream, JoinHandle<()>)>>,
+}
+
+impl ConnRegistry {
+    /// Join finished handlers and drop their stream clones.
+    fn reap(&self) {
+        let mut conns = self.conns.lock().unwrap();
+        let mut live = Vec::with_capacity(conns.len());
+        for (stream, handler) in conns.drain(..) {
+            if handler.is_finished() {
+                let _ = handler.join();
+            } else {
+                live.push((stream, handler));
+            }
+        }
+        *conns = live;
+    }
+}
+
+/// The network transport for a [`FilterService`] (see module docs).
+/// Dropping the server stops accepting, closes every connection, and
+/// joins all handler threads; the service itself (and its namespaces)
+/// lives on.
+pub struct WireServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    registry: Arc<ConnRegistry>,
+}
+
+impl WireServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and serve
+    /// `service` on it. Returns as soon as the listener is live.
+    pub fn bind(service: Arc<FilterService>, addr: &str) -> Result<WireServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding wire server to {addr}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let registry = Arc::new(ConnRegistry { conns: Mutex::new(Vec::new()) });
+        let accept_thread = {
+            let stop = Arc::clone(&stop);
+            let registry = Arc::clone(&registry);
+            std::thread::Builder::new()
+                .name("gbf-wire-accept".into())
+                .spawn(move || accept_loop(listener, service, stop, registry))?
+        };
+        Ok(WireServer { addr: local, stop, accept_thread: Some(accept_thread), registry })
+    }
+
+    /// The bound address (resolves ephemeral ports for clients).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock accept() with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        // unblock connection readers, then join their threads
+        let conns = match self.registry.conns.lock() {
+            Ok(mut c) => std::mem::take(&mut *c),
+            Err(_) => Vec::new(),
+        };
+        for (stream, _) in &conns {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        for (_, handler) in conns {
+            let _ = handler.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    service: Arc<FilterService>,
+    stop: Arc<AtomicBool>,
+    registry: Arc<ConnRegistry>,
+) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(stream) = conn else {
+            // transient accept failure (e.g. fd exhaustion): don't hot-spin
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            continue;
+        };
+        // a clone we keep lets Drop unblock the connection's reader; if
+        // cloning fails (fd exhaustion) the connection is refused
+        let Ok(clone) = stream.try_clone() else { continue };
+        let service = Arc::clone(&service);
+        let handler = std::thread::Builder::new()
+            .name("gbf-wire-conn".into())
+            .spawn(move || {
+                // protocol/io failures just end this connection
+                let _ = handle_conn(stream, service);
+            });
+        let Ok(handler) = handler else { continue };
+        registry.reap();
+        registry.conns.lock().unwrap().push((clone, handler));
+    }
+}
+
+/// Write one tagged reply under the shared writer lock.
+fn send(writer: &Arc<Mutex<TcpStream>>, id: u64, resp: &Response) -> std::io::Result<()> {
+    let payload = encode_response(id, resp);
+    let mut w = writer.lock().unwrap();
+    write_frame(&mut *w, &payload)
+}
+
+/// Completer: poll in-flight data-plane tickets and write each reply as
+/// soon as ITS ticket resolves — a stalled namespace's ticket must not
+/// head-of-line-block another namespace's finished reply on the same
+/// connection (request ids make out-of-order replies safe). Admin replies
+/// never pass through here. Blocks on the channel only when nothing is
+/// in flight; otherwise naps briefly between polls.
+fn completer_loop(rx: Receiver<(u64, PendingOp)>, writer: Arc<Mutex<TcpStream>>) {
+    let mut in_flight: Vec<(u64, PendingOp)> = Vec::new();
+    loop {
+        if in_flight.is_empty() {
+            // idle: block until new work arrives or the reader hangs up
+            match rx.recv() {
+                Ok(item) => in_flight.push(item),
+                Err(_) => return,
+            }
+        }
+        while let Ok(item) = rx.try_recv() {
+            in_flight.push(item);
+        }
+        let mut progressed = false;
+        let mut i = 0;
+        while i < in_flight.len() {
+            if in_flight[i].1.is_ready() {
+                let (id, op) = in_flight.remove(i);
+                // a failed send means the connection is gone: keep
+                // resolving the rest (namespaces stay consistent), the
+                // replies just have nowhere to go
+                let _ = send(&writer, id, &op.resolve());
+                progressed = true;
+            } else {
+                i += 1;
+            }
+        }
+        if !progressed && !in_flight.is_empty() {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, service: Arc<FilterService>) -> Result<()> {
+    let writer = Arc::new(Mutex::new(stream.try_clone().context("cloning connection stream")?));
+    let (tx, rx) = channel::<(u64, PendingOp)>();
+    let completer = {
+        let writer = Arc::clone(&writer);
+        std::thread::Builder::new()
+            .name("gbf-wire-completer".into())
+            .spawn(move || completer_loop(rx, writer))?
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let Some(payload) = read_frame(&mut reader)? else { break };
+        let (id, req) = match decode_request(&payload) {
+            Ok(x) => x,
+            Err(e) => {
+                // undecodable frame: we cannot even echo an id — fail the
+                // connection rather than guess
+                drop(tx);
+                let _ = completer.join();
+                return Err(e);
+            }
+        };
+        match req {
+            // ---- admin plane ----
+            // Create runs on its own short-lived thread: engine
+            // construction can be expensive (multi-GiB shard allocation,
+            // PJRT artifact loading) and must not stall this reader —
+            // every other pipelined request on the connection keeps
+            // flowing while the namespace builds. The reply (Created,
+            // with the new instance id) may therefore be reordered
+            // relative to later requests; ids make that safe.
+            Request::Create { name, spec } => {
+                let total_bytes = spec.config.size_bytes().saturating_mul(spec.shards.max(1) as u64);
+                if total_bytes > MAX_REMOTE_FILTER_BYTES {
+                    let e = GbfError::InvalidConfig(format!(
+                        "remote create of {total_bytes} filter bytes exceeds the server cap \
+                         ({MAX_REMOTE_FILTER_BYTES}); create oversized namespaces in-process"
+                    ));
+                    send(&writer, id, &Response::Err(e))?;
+                    continue;
+                }
+                let service = Arc::clone(&service);
+                let reply_writer = Arc::clone(&writer);
+                let spawned = std::thread::Builder::new().name("gbf-wire-create".into()).spawn(move || {
+                    let resp = match service.create_filter_spec(&name, spec) {
+                        Ok(h) => Response::Created { instance: h.instance() },
+                        Err(e) => Response::Err(e),
+                    };
+                    let _ = send(&reply_writer, id, &resp);
+                });
+                if let Err(e) = spawned {
+                    let e = GbfError::Backend(format!("create worker spawn failed: {e}"));
+                    send(&writer, id, &Response::Err(e))?;
+                }
+            }
+            Request::Drop { name } => {
+                let resp = match service.drop_filter(&name) {
+                    Ok(()) => Response::Ok,
+                    Err(e) => Response::Err(e),
+                };
+                send(&writer, id, &resp)?;
+            }
+            Request::List => {
+                send(&writer, id, &Response::Names(service.list_filters()))?;
+            }
+            Request::Stats { name } => {
+                let resp = match service.stats(&name) {
+                    Ok(s) => Response::Stats(Box::new(s)),
+                    Err(e) => Response::Err(e),
+                };
+                send(&writer, id, &resp)?;
+            }
+            // ---- data plane: submit now, reply from the completer. The
+            // handle's bound instance must still be the live one: a
+            // dropped-and-recreated name answers NoSuchFilter, exactly
+            // like an in-process stale handle ----
+            Request::AddBulk { name, instance, keys } => match service.handle(&name) {
+                Ok(h) if h.instance() == instance => {
+                    let _ = tx.send((id, PendingOp::Add(h.add_bulk(&keys))));
+                }
+                Ok(_) => send(&writer, id, &Response::Err(GbfError::NoSuchFilter(name)))?,
+                Err(e) => send(&writer, id, &Response::Err(e))?,
+            },
+            Request::QueryBulk { name, instance, keys } => match service.handle(&name) {
+                Ok(h) if h.instance() == instance => {
+                    let _ = tx.send((id, PendingOp::Query(h.query_bulk(&keys))));
+                }
+                Ok(_) => send(&writer, id, &Response::Err(GbfError::NoSuchFilter(name)))?,
+                Err(e) => send(&writer, id, &Response::Err(e))?,
+            },
+        }
+    }
+    drop(tx);
+    let _ = completer.join();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::params::FilterConfig;
+
+    #[test]
+    fn bind_on_ephemeral_port_and_shut_down() {
+        let service = Arc::new(FilterService::new());
+        service.create_filter("seed", FilterConfig { log2_m_words: 12, ..Default::default() }, 1).unwrap();
+        let server = WireServer::bind(Arc::clone(&service), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        assert_ne!(addr.port(), 0, "ephemeral port resolved");
+        drop(server);
+        // the service survives its transport
+        assert_eq!(service.list_filters(), vec!["seed".to_string()]);
+        // and the port is released: a new server can bind it again
+        let server2 = WireServer::bind(service, &addr.to_string()).unwrap();
+        assert_eq!(server2.local_addr(), addr);
+    }
+}

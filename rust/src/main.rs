@@ -7,12 +7,17 @@
 //!   sim --variant ... --arch ..  query the GPU performance model
 //!   gups                         speed-of-light micro-benchmark
 //!   serve --filters spec         run the multi-tenant filter service demo
+//!         --listen <addr>        ... or host it on a wire server instead
+//!   client <addr> <cmd>          drive a remote filter service
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
-use gbf::coordinator::{BatchPolicy, FilterBackend, FilterService, FilterSpec, PjrtBackend};
+use gbf::coordinator::{
+    BatchPolicy, FilterBackend, FilterService, FilterSpec, PjrtBackend, RemoteFilterService, WireServer,
+};
 use gbf::experiments;
 use gbf::filter::params::{space_optimal_n, FilterConfig, Scheme, Variant};
 use gbf::gpu_sim::{model, Features, GpuArch, Op};
@@ -36,6 +41,7 @@ fn main() {
         Some("sim") => cmd_sim(&args),
         Some("gups") => experiments::run("gups", None).map(|_| ()),
         Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         _ => {
             print_usage();
             Ok(())
@@ -58,9 +64,17 @@ fn print_usage() {
            sim  --variant v --block B [--theta T] [--phi P] [--op o] [--arch a] [--size-mb M]\n  \
            gups                         random-access speed-of-light\n  \
            serve [--filters name:variant:<N>bits,...] [--requests N]\n  \
-                 [--backend native|pjrt] [--shards S] [--batch B] [--max-wait-us U]\n\n\
+                 [--backend native|pjrt] [--shards S] [--batch B] [--max-wait-us U]\n  \
+                 [--max-queue-depth D] [--listen addr:port]\n  \
+           client <addr> list\n  \
+           client <addr> create name:variant:<N>bits [--shards S] [--max-queue-depth D]\n  \
+           client <addr> drop <name> | stats <name>\n  \
+           client <addr> add <name> (--keys 1,2,3 | --count N [--seed S])\n  \
+           client <addr> query <name> (--keys 1,2,3 | --count N [--seed S])\n\n\
          serve hosts one namespace per --filters entry on a FilterService,\n\
-         e.g. --filters hot:sbf:23bits,cold:bbf:20bits"
+         e.g. --filters hot:sbf:23bits,cold:bbf:20bits; with --listen it\n\
+         serves the same catalog over the wire protocol instead of running\n\
+         the local demo workload, and `gbf client` drives it remotely"
     );
 }
 
@@ -224,16 +238,22 @@ fn parse_filters_flag(spec: &str) -> Result<Vec<(String, FilterConfig)>> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.check_known(&["filters", "requests", "backend", "shards", "batch", "max-wait-us"])?;
+    args.check_known(&[
+        "filters", "requests", "backend", "shards", "batch", "max-wait-us", "max-queue-depth", "listen",
+    ])?;
     let requests = args.get_parse("requests", 100_000usize)?;
     let backend_kind = args.get_or("backend", "native");
     let shards = args.get_parse("shards", 4usize)?;
     let batch = args.get_parse("batch", 4096usize)?;
     let max_wait_us = args.get_parse("max-wait-us", 200u64)?;
+    let max_queue_depth: Option<usize> = match args.get("max-queue-depth") {
+        Some(v) => Some(v.parse().context("--max-queue-depth")?),
+        None => None,
+    };
     let specs = parse_filters_flag(args.get_or("filters", "main:sbf:23bits"))?;
 
     let policy = BatchPolicy { max_batch: batch, max_wait: std::time::Duration::from_micros(max_wait_us) };
-    let service = FilterService::new();
+    let service = Arc::new(FilterService::new());
 
     // keep the engine actor alive for the whole serve session
     let _engine_holder;
@@ -241,7 +261,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // native: one sharded registry per namespace
         "native" => {
             for (name, cfg) in &specs {
-                let spec = FilterSpec { config: *cfg, shards, policy: policy.clone() };
+                let spec = FilterSpec { config: *cfg, shards, policy: policy.clone(), max_queue_depth };
                 service.create_filter_spec(name, spec)?;
             }
         }
@@ -257,7 +277,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 let cfg = *cfg;
                 let client = client.clone();
                 let manifest = manifest.clone();
-                let spec = FilterSpec { config: cfg, shards, policy: policy.clone() };
+                let spec = FilterSpec { config: cfg, shards, policy: policy.clone(), max_queue_depth };
                 service.create_filter_with(name, spec, move |_| {
                     Ok(Box::new(PjrtBackend::new(client, &manifest, cfg, "pallas")?) as Box<dyn FilterBackend>)
                 })?;
@@ -271,6 +291,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         specs.len(),
         service.list_filters().join(", ")
     );
+
+    // --listen: host the catalog on the wire protocol instead of running
+    // the local demo workload; `gbf client <addr> <cmd>` drives it
+    if let Some(listen_addr) = args.get("listen") {
+        let server = WireServer::bind(Arc::clone(&service), listen_addr)?;
+        println!("wire server listening on {} (ctrl-c to stop)", server.local_addr());
+        loop {
+            std::thread::park();
+        }
+    }
+
     let per_ns = (requests / (2 * specs.len())).max(1);
 
     // phase 1 — pipelined ingest: submit one add ticket per namespace,
@@ -323,6 +354,83 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("{}", service.stats(name)?.report());
         let n = space_optimal_n(cfg.m_bits(), cfg.k);
         println!("  (space-optimal capacity: {n} keys)");
+    }
+    Ok(())
+}
+
+/// Keys for `client add`/`client query`: an explicit `--keys` list or a
+/// generated `--count`/`--seed` set (matching the serve demo's keygen).
+fn client_keys(args: &Args) -> Result<Vec<u64>> {
+    if let Some(csv) = args.get("keys") {
+        return csv
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse::<u64>().with_context(|| format!("bad key {s:?} in --keys")))
+            .collect();
+    }
+    let count = args.get_parse("count", 0usize)?;
+    ensure!(count > 0, "need --keys 1,2,3 or --count N");
+    Ok(unique_keys(count, args.get_parse("seed", 0u64)?))
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    args.check_known(&["shards", "max-queue-depth", "keys", "count", "seed"])?;
+    let usage = "usage: gbf client <addr> <list|create|drop|stats|add|query> ...";
+    let mut pos = args.positional.iter();
+    let addr = pos.next().with_context(|| usage.to_string())?;
+    let cmd = pos.next().with_context(|| usage.to_string())?;
+    let client = RemoteFilterService::connect(addr.as_str())?;
+    match cmd.as_str() {
+        "list" => {
+            let names = client.list_filters()?;
+            println!("{} namespace(s)", names.len());
+            for n in names {
+                println!("  {n}");
+            }
+        }
+        "create" => {
+            // same entry grammar as `serve --filters`: name:variant:<N>bits
+            let entry = pos.next().context("create needs name:variant:<N>bits")?;
+            let (name, config) = parse_filter_entry(entry)?;
+            let mut spec = FilterSpec::new(config, args.get_parse("shards", 4usize)?);
+            if let Some(v) = args.get("max-queue-depth") {
+                spec.max_queue_depth = Some(v.parse().context("--max-queue-depth")?);
+            }
+            client.create_filter_spec(&name, spec)?;
+            println!("created {name} ({})", config.name());
+        }
+        "drop" => {
+            let name = pos.next().context("drop needs <name>")?;
+            client.drop_filter(name)?;
+            println!("dropped {name}");
+        }
+        "stats" => {
+            let name = pos.next().context("stats needs <name>")?;
+            println!("{}", client.stats(name)?.report());
+        }
+        "add" => {
+            let name = pos.next().context("add needs <name>")?;
+            let keys = client_keys(args)?;
+            let handle = client.handle(name)?;
+            let t0 = Instant::now();
+            handle.add_bulk(&keys).wait()?;
+            println!("added {} keys to {name} in {:?}", keys.len(), t0.elapsed());
+        }
+        "query" => {
+            let name = pos.next().context("query needs <name>")?;
+            let keys = client_keys(args)?;
+            let handle = client.handle(name)?;
+            let t0 = Instant::now();
+            let hits = handle.query_bulk(&keys).wait()?;
+            let found = hits.iter().filter(|&&h| h).count();
+            println!("{found}/{} keys present in {name} ({:?})", keys.len(), t0.elapsed());
+            if args.get("keys").is_some() {
+                for (k, hit) in keys.iter().zip(&hits) {
+                    println!("  {k}: {}", if *hit { "maybe-present" } else { "absent" });
+                }
+            }
+        }
+        other => bail!("unknown client command {other:?}; {usage}"),
     }
     Ok(())
 }

@@ -1,11 +1,19 @@
 //! Filter-service integration: the multi-tenant admin plane
 //! (create/drop/list/stats), the ticket-based data plane, namespace
-//! isolation under concurrency, per-shard metrics, mixed workloads, and
-//! the PJRT backend when artifacts are available.
+//! isolation under concurrency, per-shard metrics, mixed workloads, the
+//! PJRT backend when artifacts are available — and **transport
+//! equivalence**: the same generic test body, written against
+//! `dyn FilterApi`, passes over the in-process `FilterService` and a
+//! loopback `RemoteFilterService` with identical answers and identical
+//! typed errors.
 
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use gbf::coordinator::{BatchPolicy, FilterBackend, FilterService, FilterSpec, GbfError, PjrtBackend};
+use gbf::coordinator::{
+    BatchPolicy, FilterApi, FilterBackend, FilterDataPlane, FilterService, FilterSpec, GbfError,
+    PjrtBackend, RemoteFilterService, WireServer,
+};
 use gbf::filter::params::{FilterConfig, Variant};
 use gbf::runtime::actor::EngineActor;
 use gbf::runtime::manifest::{default_artifact_dir, Manifest};
@@ -21,6 +29,7 @@ fn spec(log2_m_words: u32, shards: usize, max_batch: usize, wait_us: u64) -> Fil
         config: cfg(log2_m_words),
         shards,
         policy: BatchPolicy { max_batch, max_wait: Duration::from_micros(wait_us) },
+        ..FilterSpec::default()
     }
 }
 
@@ -295,6 +304,7 @@ fn pjrt_namespace_reports_single_state_placement() {
         config,
         shards: 4,
         policy: BatchPolicy { max_batch: 4096, max_wait: Duration::from_micros(300) },
+        ..FilterSpec::default()
     };
     service
         .create_filter_with("pjrt", s, move |_| {
@@ -315,6 +325,255 @@ fn pjrt_namespace_reports_single_state_placement() {
     let (_, absent) = disjoint_key_sets(1, 6_000, 6);
     let fp = h.query_bulk(&absent).wait().unwrap().iter().filter(|&&h| h).count();
     assert!(fp < 600, "pjrt fpr too high: {fp}/6000");
+}
+
+// ---- ticket timeout on a genuinely stalled operation ----
+
+/// A backend whose `bulk_add` blocks on a shared gate — the test double
+/// for "the backend is wedged / very slow", so `wait_timeout` is
+/// exercised against an operation that genuinely has not completed.
+struct GatedBackend {
+    cfg: FilterConfig,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl FilterBackend for GatedBackend {
+    fn config(&self) -> &FilterConfig {
+        &self.cfg
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "gated"
+    }
+
+    fn bulk_add(&self, _keys: &[u64]) -> anyhow::Result<()> {
+        let (lock, cv) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        Ok(())
+    }
+
+    fn bulk_contains(&self, keys: &[u64]) -> anyhow::Result<Vec<bool>> {
+        Ok(vec![false; keys.len()])
+    }
+
+    fn snapshot(&self) -> Vec<u64> {
+        Vec::new()
+    }
+}
+
+#[test]
+fn wait_timeout_on_stalled_op_hands_the_ticket_back() {
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let service = FilterService::new();
+    let config = cfg(12);
+    let backend_gate = Arc::clone(&gate);
+    service
+        .create_filter_with("stalled", spec(12, 1, 16, 50), move |_| {
+            Ok(Box::new(GatedBackend { cfg: config, gate: backend_gate }) as Box<dyn FilterBackend>)
+        })
+        .unwrap();
+    let h = service.handle("stalled").unwrap();
+    let t = h.add_bulk(&[1, 2, 3]);
+    // the batch worker is blocked inside the backend: a bounded wait must
+    // report the timeout variant and hand the ticket back un-consumed
+    let t = match t.wait_timeout(Duration::from_millis(50)) {
+        Err(ticket) => ticket,
+        Ok(r) => panic!("stalled op must time out, got {r:?}"),
+    };
+    assert!(!t.is_ready(), "still in flight after a timed-out wait");
+    // a second bounded wait times out the same way — nothing was consumed
+    let t = match t.wait_timeout(Duration::from_millis(10)) {
+        Err(ticket) => ticket,
+        Ok(r) => panic!("still stalled, got {r:?}"),
+    };
+    // open the gate: the SAME ticket now resolves through a plain wait
+    {
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    t.wait().unwrap();
+}
+
+// ---- transport equivalence: one test body, two transports ----
+
+/// The acceptance driver: written purely against `dyn FilterApi`, so it
+/// cannot tell whether the catalog is in-process or across a socket.
+/// Returns the query answers and a stats snapshot for cross-transport
+/// comparison.
+fn drive_api(api: &dyn FilterApi) -> (Vec<bool>, gbf::coordinator::NamespaceStats) {
+    // create (full spec), duplicate create -> typed FilterExists
+    let h: Box<dyn FilterDataPlane> = api.create_filter_spec("eq", spec(14, 4, 1024, 150)).unwrap();
+    match api.create_filter_spec("eq", FilterSpec::new(cfg(12), 1)) {
+        Err(GbfError::FilterExists(n)) => assert_eq!(n, "eq"),
+        Err(other) => panic!("expected FilterExists, got {other:?}"),
+        Ok(_) => panic!("duplicate create must fail"),
+    }
+
+    // bulk + single data plane, pipelined tickets before any wait
+    let keys = unique_keys(10_000, 0xE0);
+    h.add_bulk(&keys).wait().unwrap();
+    h.add(42).wait().unwrap();
+    let mut probe = keys.clone();
+    probe.extend(unique_keys(5_000, 0xE1));
+    let t_bulk = h.query_bulk(&probe);
+    let t_single = h.query(42);
+    let hits = t_bulk.wait().unwrap();
+    assert!(t_single.wait().unwrap());
+    assert!(hits[..10_000].iter().all(|&x| x), "no false negatives via {}", h.name());
+
+    // backpressure: a bounded namespace refuses oversized bulks with the
+    // typed Overloaded error — deterministically, on both transports
+    let bounded: Box<dyn FilterDataPlane> = api
+        .create_filter_spec("eq-bounded", FilterSpec { max_queue_depth: Some(4), ..FilterSpec::new(cfg(12), 1) })
+        .unwrap();
+    match bounded.add_bulk(&unique_keys(64, 0xE2)).wait() {
+        Err(GbfError::Overloaded { name, depth }) => {
+            assert_eq!(name, "eq-bounded");
+            assert!(depth > 4, "would-be depth reported: {depth}");
+        }
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    bounded.add_bulk(&[7, 8]).wait().unwrap(); // within the bound
+
+    // admin plane: list, stats (incl. per-shard counters), typed misses
+    assert_eq!(api.list_filters().unwrap(), vec!["eq".to_string(), "eq-bounded".to_string()]);
+    let stats = api.stats("eq").unwrap();
+    assert_eq!(stats.num_shards, 4);
+    assert_eq!(stats.shards.len(), 4, "per-shard counters travel with stats");
+    assert_eq!(stats.metrics.adds, 10_001);
+    match api.stats("nope") {
+        Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "nope"),
+        other => panic!("expected NoSuchFilter, got {other:?}"),
+    }
+    match api.handle("nope") {
+        Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "nope"),
+        Err(other) => panic!("expected NoSuchFilter, got {other:?}"),
+        Ok(_) => panic!("handle to a missing namespace must fail"),
+    }
+
+    // a fresh handle reaches the same state; drop, then typed miss
+    let h2 = api.handle("eq").unwrap();
+    assert!(h2.query(42).wait().unwrap());
+    api.drop_filter("eq-bounded").unwrap();
+    match api.drop_filter("eq-bounded") {
+        Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "eq-bounded"),
+        other => panic!("expected NoSuchFilter, got {other:?}"),
+    }
+
+    // drop-then-recreate: handles pin the namespace INSTANCE, not the
+    // name — on both transports a stale handle answers NoSuchFilter
+    // instead of silently reaching the reborn namespace
+    api.drop_filter("eq").unwrap();
+    let reborn: Box<dyn FilterDataPlane> = api.create_filter_spec("eq", spec(14, 4, 1024, 150)).unwrap();
+    match h2.query(42).wait() {
+        Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "eq"),
+        other => panic!("stale handle must fail typed, got {other:?}"),
+    }
+    assert!(!reborn.query(42).wait().unwrap(), "reborn namespace starts empty");
+    api.drop_filter("eq").unwrap();
+    assert!(api.list_filters().unwrap().is_empty());
+    (hits, stats)
+}
+
+#[test]
+fn transport_equivalence_in_process_vs_wire() {
+    // transport 1: the in-process catalog
+    let local = FilterService::new();
+    let (local_hits, local_stats) = drive_api(&local);
+
+    // transport 2: the same body across a loopback socket
+    let remote_service = Arc::new(FilterService::new());
+    let server = WireServer::bind(Arc::clone(&remote_service), "127.0.0.1:0").unwrap();
+    let client = RemoteFilterService::connect(server.local_addr()).unwrap();
+    let (remote_hits, remote_stats) = drive_api(&client);
+
+    // identical query answers — down to the false positives
+    assert_eq!(local_hits, remote_hits, "bit-identical answers across transports");
+    // identical accounting, including per-shard counters over the wire
+    assert_eq!(local_stats.metrics.adds, remote_stats.metrics.adds);
+    assert_eq!(local_stats.metrics.queries, remote_stats.metrics.queries);
+    assert_eq!(local_stats.num_shards, remote_stats.num_shards);
+    assert_eq!(
+        local_stats.shards.iter().map(|s| s.keys).sum::<u64>(),
+        remote_stats.shards.iter().map(|s| s.keys).sum::<u64>(),
+        "per-shard key totals agree over the wire"
+    );
+    assert_eq!(local_stats.backend, remote_stats.backend);
+}
+
+// ---- `gbf client`-shaped smoke: the full remote lifecycle on a socket ----
+
+#[test]
+fn remote_lifecycle_matches_in_process_oracle() {
+    // in-process oracle fed exactly the same keys
+    let oracle = FilterService::new();
+    let oh = oracle.create_filter("smoke", cfg(13), 2).unwrap();
+    let keys = unique_keys(4_000, 0x51);
+    let (_, absent) = disjoint_key_sets(1, 8_000, 0x52);
+    oh.add_bulk(&keys).wait().unwrap();
+    let oracle_present = oh.query_bulk(&keys).wait().unwrap();
+    let oracle_absent = oh.query_bulk(&absent).wait().unwrap();
+
+    // remote twin: create -> add_bulk -> query_bulk -> stats -> drop
+    let service = Arc::new(FilterService::new());
+    let server = WireServer::bind(Arc::clone(&service), "127.0.0.1:0").unwrap();
+    let client = RemoteFilterService::connect(server.local_addr()).unwrap();
+    let rh = client.create_filter("smoke", cfg(13), 2).unwrap();
+    rh.add_bulk(&keys).wait().unwrap();
+    // two queries pipelined on one connection (distinct request ids)
+    let t_present = rh.query_bulk(&keys);
+    let t_absent = rh.query_bulk(&absent);
+    let remote_present = t_present.wait().unwrap();
+    let remote_absent = t_absent.wait().unwrap();
+    assert!(remote_present.iter().all(|&h| h), "no false negatives over the wire");
+    assert_eq!(oracle_present, remote_present);
+    assert_eq!(oracle_absent, remote_absent, "identical answers, including false positives");
+
+    let stats = client.stats("smoke").unwrap();
+    assert_eq!(stats.backend, "native");
+    assert_eq!(stats.num_shards, 2);
+    assert_eq!(stats.metrics.adds, 4_000);
+    assert_eq!(stats.metrics.queries, 12_000);
+    assert_eq!(stats.shards.iter().map(|s| s.keys).sum::<u64>(), 16_000);
+
+    client.drop_filter("smoke").unwrap();
+    assert!(client.list_filters().unwrap().is_empty());
+    assert!(service.list_filters().is_empty(), "the server-side catalog agrees");
+    match client.stats("smoke") {
+        Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "smoke"),
+        other => panic!("expected NoSuchFilter, got {other:?}"),
+    }
+
+    // a clone of the client shares the connection and still works
+    let clone = client.clone();
+    clone.create_filter("smoke2", cfg(12), 1).unwrap();
+    assert_eq!(client.list_filters().unwrap(), vec!["smoke2".to_string()]);
+}
+
+#[test]
+fn remote_client_survives_server_shutdown_with_typed_errors() {
+    let service = Arc::new(FilterService::new());
+    let server = WireServer::bind(Arc::clone(&service), "127.0.0.1:0").unwrap();
+    let client = RemoteFilterService::connect(server.local_addr()).unwrap();
+    client.create_filter("doomed", cfg(12), 1).unwrap();
+    drop(server);
+    // the dead connection surfaces as a typed Backend error, not a hang
+    let mut saw_error = false;
+    for _ in 0..50 {
+        match client.list_filters() {
+            Err(GbfError::Backend(_)) => {
+                saw_error = true;
+                break;
+            }
+            Ok(_) => std::thread::sleep(Duration::from_millis(10)),
+            Err(other) => panic!("expected Backend error, got {other:?}"),
+        }
+    }
+    assert!(saw_error, "calls after server shutdown fail with GbfError::Backend");
 }
 
 #[test]
