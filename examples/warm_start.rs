@@ -1,0 +1,93 @@
+//! Warm start: snapshot a populated multi-tenant catalog, "restart" the
+//! process (a brand-new `FilterService`), restore, and verify — first
+//! in-process, then the same restore driven over the wire transport.
+//!
+//!     cargo run --release --example warm_start
+//!
+//! The point: bulk construction is the expensive part (the paper's 15.4×
+//! headline is exactly about making it fast), so a production catalog
+//! should pay it once and warm-start from disk on every later boot.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use gbf::coordinator::{FilterService, GbfError, RemoteFilterService, WireServer};
+use gbf::filter::params::{FilterConfig, Variant};
+use gbf::workload::keygen::unique_keys;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("GBF_BENCH_QUICK").is_ok();
+    let n_hot = if quick { 20_000 } else { 400_000 };
+    let n_cold = n_hot / 4;
+    let state_dir = std::env::temp_dir().join(format!("gbf-warm-start-{}", std::process::id()));
+
+    // ---- boot 1: build and populate two tenants, snapshot, "shut down" ----
+    let service = FilterService::new();
+    let hot = service.create_filter(
+        "hot",
+        FilterConfig { log2_m_words: if quick { 14 } else { 18 }, ..Default::default() },
+        4,
+    )?;
+    let cold = service.create_filter(
+        "cold",
+        FilterConfig { variant: Variant::Bbf, log2_m_words: 13, ..Default::default() },
+        2,
+    )?;
+    let hot_keys = unique_keys(n_hot, 0xA1);
+    let cold_keys = unique_keys(n_cold, 0xB2);
+    let t0 = Instant::now();
+    let t_hot = hot.add_bulk(&hot_keys);
+    let t_cold = cold.add_bulk(&cold_keys);
+    t_hot.wait()?;
+    t_cold.wait()?;
+    let build = t0.elapsed();
+
+    let t1 = Instant::now();
+    for name in ["hot", "cold"] {
+        service.snapshot(name, &state_dir.join(name))?;
+    }
+    println!("boot 1: built {} keys in {build:?}, snapshotted both tenants in {:?}", n_hot + n_cold, t1.elapsed());
+    let hot_words = hot.snapshot_words();
+    drop(service); // the "restart"
+
+    // ---- boot 2: a fresh catalog warm-starts from disk ----
+    let service = FilterService::new();
+    let t2 = Instant::now();
+    let hot2 = service.restore("hot", &state_dir.join("hot"))?;
+    let cold2 = service.restore("cold", &state_dir.join("cold"))?;
+    println!("boot 2: restored both tenants in {:?} (vs {build:?} to rebuild)", t2.elapsed());
+    assert_eq!(hot2.snapshot_words(), hot_words, "byte-identical state across the restart");
+    assert!(hot2.query_bulk(&hot_keys).wait()?.iter().all(|&h| h), "no false negatives after restore");
+    assert!(cold2.query_bulk(&cold_keys).wait()?.iter().all(|&h| h));
+    assert_eq!(service.stats("hot")?.metrics.adds, n_hot as u64, "key counters survive the restart");
+
+    // a corrupt snapshot is a typed refusal, never a panic
+    match service.restore("hot2", &state_dir.join("nope")) {
+        Err(GbfError::SnapshotCorrupt(_)) => println!("missing snapshot refused with a typed error"),
+        other => anyhow::bail!("expected SnapshotCorrupt, got {other:?}"),
+    }
+
+    // ---- the same restore, driven over the wire ----
+    // Paths resolve server-side: the client ships names and paths only,
+    // so restoring a multi-GiB tenant costs one small frame each way.
+    let remote_catalog = Arc::new(FilterService::new());
+    let server = WireServer::bind(Arc::clone(&remote_catalog), "127.0.0.1:0")?;
+    let client = RemoteFilterService::connect(server.local_addr())?;
+    let t3 = Instant::now();
+    let remote_hot = client.restore("hot", path_str(&state_dir.join("hot"))?)?;
+    println!("wire restore in {:?}", t3.elapsed());
+    assert!(remote_hot.query_bulk(&hot_keys[..1_000]).wait()?.iter().all(|&h| h));
+    let server_side = remote_catalog.handle("hot")?;
+    assert_eq!(server_side.snapshot_words(), hot_words, "wire-restored state is byte-identical too");
+    client.snapshot("hot", path_str(&state_dir.join("hot-remote"))?)?;
+    println!("wire snapshot written server-side; catalog now serves {:?}", client.list_filters()?);
+
+    std::fs::remove_dir_all(&state_dir).ok();
+    println!("warm start OK");
+    Ok(())
+}
+
+fn path_str(p: &Path) -> anyhow::Result<&str> {
+    p.to_str().ok_or_else(|| anyhow::anyhow!("non-UTF-8 temp path"))
+}

@@ -11,11 +11,15 @@
 //! proves transport equivalence.
 //!
 //! * [`FilterApi`] is the **admin plane**: create/drop/list/stats plus
-//!   handle acquisition.
+//!   handle acquisition, and the durable pair snapshot/restore
+//!   (manifest-described on-disk state, resolved server-side on the
+//!   remote transport — both transports grow the capability together).
 //! * [`FilterDataPlane`] is the **data plane**: `add` / `query` /
 //!   `add_bulk` / `query_bulk`, every call returning a [`Ticket`] so
 //!   callers can pipeline submissions across namespaces (and, remotely,
 //!   across in-flight wire requests) before waiting on any of them.
+
+use std::path::Path;
 
 use crate::filter::params::FilterConfig;
 
@@ -53,6 +57,23 @@ pub trait FilterApi: Send + Sync {
 
     /// A fresh data-plane handle to a live namespace.
     fn handle(&self, name: &str) -> Result<Box<dyn FilterDataPlane>, GbfError>;
+
+    /// Persist namespace `name` into the directory `dir` as a
+    /// manifest-described, crash-safe snapshot (temp dir + fsync +
+    /// atomic rename; see [`super::persist`]). On the remote transport
+    /// `dir` resolves **server-side**: the protocol ships names and
+    /// paths, never filter bytes.
+    fn snapshot(&self, name: &str, dir: &Path) -> Result<(), GbfError>;
+
+    /// Recreate namespace `name` from a snapshot directory written by
+    /// [`FilterApi::snapshot`] and return its data-plane handle. The
+    /// restored namespace is a **fresh instance**: handles from before
+    /// the restore fail with [`GbfError::NoSuchFilter`] on both
+    /// transports, exactly like after a drop-and-recreate. Every format
+    /// mismatch is typed — [`GbfError::SnapshotVersion`] /
+    /// [`GbfError::SnapshotGeometry`] / [`GbfError::SnapshotChecksum`] /
+    /// [`GbfError::SnapshotCorrupt`] — never a panic.
+    fn restore(&self, name: &str, dir: &Path) -> Result<Box<dyn FilterDataPlane>, GbfError>;
 }
 
 /// The data plane of one namespace, over any transport. Every operation
@@ -107,6 +128,14 @@ impl FilterApi for FilterService {
 
     fn handle(&self, name: &str) -> Result<Box<dyn FilterDataPlane>, GbfError> {
         FilterService::handle(self, name).map(|h| Box::new(h) as Box<dyn FilterDataPlane>)
+    }
+
+    fn snapshot(&self, name: &str, dir: &Path) -> Result<(), GbfError> {
+        FilterService::snapshot(self, name, dir)
+    }
+
+    fn restore(&self, name: &str, dir: &Path) -> Result<Box<dyn FilterDataPlane>, GbfError> {
+        FilterService::restore(self, name, dir).map(|h| Box::new(h) as Box<dyn FilterDataPlane>)
     }
 }
 

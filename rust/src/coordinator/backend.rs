@@ -34,6 +34,24 @@ pub trait FilterBackend: Send + Sync {
     /// Current filter words (diagnostics / state hand-off). Sharded
     /// backends concatenate their shards in shard order.
     fn snapshot(&self) -> Vec<u64>;
+    /// One shard's words — the streaming unit of the persistence layer
+    /// ([`crate::coordinator::persist`]): the service snapshots a
+    /// namespace shard-by-shard so a multi-GiB tenant never has to
+    /// materialize its whole state at once. Single-state backends have
+    /// exactly shard 0.
+    fn snapshot_shard(&self, idx: usize) -> Result<Vec<u64>> {
+        if idx != 0 {
+            bail!("single-state backend {} has only shard 0, asked for {idx}", self.backend_name());
+        }
+        Ok(self.snapshot())
+    }
+    /// Warm-start one shard from snapshotted words (the inverse of
+    /// [`FilterBackend::snapshot_shard`], driven by the admin plane's
+    /// `restore`). Backends without mutable word state refuse.
+    fn load_shard(&self, idx: usize, words: &[u64]) -> Result<()> {
+        let _ = (idx, words);
+        bail!("backend {} does not support warm-start", self.backend_name())
+    }
 }
 
 /// Native backend: the [`ShardedRegistry`] over the Rust filter library —
@@ -87,6 +105,17 @@ impl FilterBackend for NativeBackend {
 
     fn snapshot(&self) -> Vec<u64> {
         self.registry.snapshot_concat()
+    }
+
+    fn snapshot_shard(&self, idx: usize) -> Result<Vec<u64>> {
+        if idx >= self.registry.num_shards() {
+            bail!("shard index {idx} out of range ({} shards)", self.registry.num_shards());
+        }
+        Ok(self.registry.snapshot_shard(idx))
+    }
+
+    fn load_shard(&self, idx: usize, words: &[u64]) -> Result<()> {
+        self.registry.load_shard(idx, words)
     }
 }
 
@@ -178,6 +207,13 @@ impl FilterBackend for PjrtBackend {
     fn snapshot(&self) -> Vec<u64> {
         self.engine.snapshot(self.state).unwrap_or_default()
     }
+
+    fn load_shard(&self, idx: usize, words: &[u64]) -> Result<()> {
+        if idx != 0 {
+            bail!("pjrt backend is single-state: only shard 0 is loadable, asked for {idx}");
+        }
+        self.load_words(words.to_vec())
+    }
 }
 
 #[cfg(test)]
@@ -201,6 +237,20 @@ mod tests {
         let stats = be.shard_stats();
         assert_eq!(stats.len(), 2);
         assert_eq!(stats.iter().map(|s| s.keys).sum::<u64>(), 3000);
+    }
+
+    #[test]
+    fn per_shard_snapshot_load_through_the_trait() {
+        let cfg = FilterConfig { log2_m_words: 12, ..Default::default() };
+        let a = NativeBackend::new(cfg, 2).unwrap();
+        a.bulk_add(&unique_keys(2000, 7)).unwrap();
+        let b = NativeBackend::new(cfg, 2).unwrap();
+        for idx in 0..2 {
+            b.load_shard(idx, &a.snapshot_shard(idx).unwrap()).unwrap();
+        }
+        assert_eq!(a.snapshot(), b.snapshot(), "shard-by-shard hand-off is the identity");
+        assert!(a.snapshot_shard(2).is_err(), "shard bounds checked");
+        assert!(b.load_shard(0, &[1, 2, 3]).is_err(), "geometry enforced");
     }
 
     #[test]

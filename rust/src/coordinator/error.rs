@@ -21,6 +21,19 @@ pub enum GbfError {
     /// Admission refused: accepting the call would push the namespace's
     /// queue past its `max_queue_depth` (`depth` is the would-be depth).
     Overloaded { name: String, depth: usize },
+    /// Snapshot on disk was written by an incompatible format version
+    /// (checked before anything else in the manifest is trusted).
+    SnapshotVersion { found: u32, supported: u32 },
+    /// Snapshot manifest disagrees with itself or with the geometry it
+    /// describes (invalid config, bad shard count, per-shard word counts
+    /// that don't match the filter geometry).
+    SnapshotGeometry(String),
+    /// A shard file's content hashes differently than its manifest entry
+    /// promises (bit rot, tampering, or a partial overwrite).
+    SnapshotChecksum { shard: usize, expected: u64, found: u64 },
+    /// Snapshot unreadable: missing or truncated files, an unparseable
+    /// manifest, or an I/O failure while writing/reading snapshot state.
+    SnapshotCorrupt(String),
 }
 
 impl GbfError {
@@ -29,7 +42,12 @@ impl GbfError {
         match self {
             GbfError::NoSuchFilter(n) | GbfError::FilterExists(n) => Some(n),
             GbfError::Overloaded { name, .. } => Some(name),
-            GbfError::InvalidConfig(_) | GbfError::Backend(_) => None,
+            GbfError::InvalidConfig(_)
+            | GbfError::Backend(_)
+            | GbfError::SnapshotVersion { .. }
+            | GbfError::SnapshotGeometry(_)
+            | GbfError::SnapshotChecksum { .. }
+            | GbfError::SnapshotCorrupt(_) => None,
         }
     }
 }
@@ -44,6 +62,17 @@ impl fmt::Display for GbfError {
             GbfError::Overloaded { name, depth } => {
                 write!(f, "namespace {name:?} overloaded: queue depth would reach {depth}")
             }
+            GbfError::SnapshotVersion { found, supported } => {
+                write!(f, "snapshot format version {found} unsupported (this build reads version {supported})")
+            }
+            GbfError::SnapshotGeometry(msg) => write!(f, "snapshot geometry mismatch: {msg}"),
+            GbfError::SnapshotChecksum { shard, expected, found } => {
+                write!(
+                    f,
+                    "snapshot shard {shard} checksum mismatch: manifest promises {expected:#018x}, content is {found:#018x}"
+                )
+            }
+            GbfError::SnapshotCorrupt(msg) => write!(f, "snapshot unreadable: {msg}"),
         }
     }
 }
@@ -69,6 +98,18 @@ mod tests {
     fn variants_are_matchable() {
         let e = GbfError::FilterExists("dup".into());
         assert!(matches!(e, GbfError::FilterExists(ref n) if n == "dup"));
+    }
+
+    #[test]
+    fn snapshot_variants_display_their_evidence() {
+        let v = GbfError::SnapshotVersion { found: 9, supported: 1 };
+        assert!(v.to_string().contains('9') && v.to_string().contains('1'), "{v}");
+        assert_eq!(v.filter_name(), None);
+        let c = GbfError::SnapshotChecksum { shard: 3, expected: 0xAB, found: 0xCD };
+        assert!(c.to_string().contains("shard 3"), "{c}");
+        assert!(c.to_string().contains("0x"), "hex evidence: {c}");
+        assert!(GbfError::SnapshotGeometry("words".into()).to_string().contains("geometry"));
+        assert!(GbfError::SnapshotCorrupt("gone".into()).to_string().contains("gone"));
     }
 
     #[test]

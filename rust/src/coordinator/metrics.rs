@@ -44,6 +44,15 @@ impl Metrics {
         self.e2e_latency.0.record_ns(ns);
     }
 
+    /// Seed the op counters from a restored snapshot (warm-start): the
+    /// keys a namespace carried when it was snapshotted count as served
+    /// adds/queries again, so `stats(name)` reflects the namespace's true
+    /// content across restarts instead of resetting to zero.
+    pub fn seed_ops(&self, adds: u64, queries: u64) {
+        self.adds.fetch_add(adds, Ordering::Relaxed);
+        self.queries.fetch_add(queries, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let batches = self.batches.load(Ordering::Relaxed);
         let keys = self.batched_keys.load(Ordering::Relaxed);

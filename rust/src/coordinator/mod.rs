@@ -13,6 +13,13 @@
 //!   [`ticket::Ticket`] receipts: poll with `is_ready`, bound with
 //!   `wait_timeout`, or block with `wait`.
 //!
+//! Namespaces are **durable**: the admin plane's `snapshot(name, dir)` /
+//! `restore(name, dir)` pair persists a namespace as a
+//! manifest-described on-disk snapshot and warm-starts it after a
+//! restart or shard migration — [`persist`] owns the format (crash-safe
+//! directory-swap writes, checksum-verified reads, typed errors for
+//! every mismatch).
+//!
 //! Both planes are captured by the transport-agnostic
 //! [`api::FilterApi`] / [`api::FilterDataPlane`] trait pair: the
 //! in-process service implements them directly, and [`wire`] carries the
@@ -47,6 +54,7 @@ pub mod backend;
 pub(crate) mod batcher;
 pub mod error;
 pub mod metrics;
+pub mod persist;
 pub mod registry;
 pub mod router;
 pub(crate) mod server;
@@ -59,6 +67,7 @@ pub use backend::{FilterBackend, NativeBackend, PjrtBackend};
 pub use batcher::BatchPolicy;
 pub use error::GbfError;
 pub use metrics::{Metrics, MetricsSnapshot, ShardStats};
+pub use persist::{SnapshotManifest, SnapshotReader, SnapshotWriter};
 pub use registry::ShardedRegistry;
 pub use router::Router;
 pub use service::{FilterHandle, FilterService, FilterSpec, NamespaceStats};

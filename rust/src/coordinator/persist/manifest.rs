@@ -1,0 +1,291 @@
+//! The snapshot manifest: the JSON self-description of one on-disk
+//! namespace snapshot.
+//!
+//! A manifest pins everything a restore needs to rebuild the namespace
+//! *and* everything it needs to distrust the bytes next to it: the
+//! format version, the namespace name, the full [`FilterConfig`]
+//! geometry, the shard count, one entry per shard file (name, word
+//! count, FNV-1a 64 checksum), and the key-count counters so a restored
+//! namespace's `stats(name)` reflects its true content across restarts.
+//!
+//! Decoding is **typed all the way down** (the corruption-matrix tests
+//! pin this): an unreadable/um-parseable document is
+//! [`GbfError::SnapshotCorrupt`], a foreign `format_version` is
+//! [`GbfError::SnapshotVersion`] (checked *first*, so future formats get
+//! the right error even if their field layout drifted), and a manifest
+//! that disagrees with itself — invalid config, non-power-of-two shard
+//! count, per-shard word counts that don't match the geometry — is
+//! [`GbfError::SnapshotGeometry`]. Checksums are *declared* here and
+//! *verified* in [`super::SnapshotReader::read_shard`].
+
+use crate::coordinator::error::GbfError;
+use crate::filter::params::{FilterConfig, Scheme, Variant};
+use crate::infra::json::{self, Json};
+
+/// Snapshot format version; bump on any incompatible layout change.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// The manifest's file name inside a snapshot directory. Its presence is
+/// what marks a directory as a snapshot (the commit protocol guarantees
+/// it is only ever visible alongside a complete set of shard files).
+pub const MANIFEST_FILE: &str = "MANIFEST.json";
+
+/// Canonical shard file name (`shard-0007.words`).
+pub fn shard_file_name(idx: usize) -> String {
+    format!("shard-{idx:04}.words")
+}
+
+/// FNV-1a 64 over the little-endian bytes of each word — cheap, stable
+/// across platforms, and sensitive to single-bit flips (the
+/// corruption-matrix property that matters; this is an integrity check
+/// against rot and truncation, not an authenticity check).
+pub fn checksum_words(words: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// One shard file's manifest entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardFile {
+    /// File name relative to the snapshot directory (no path separators —
+    /// a doctored manifest cannot reach outside the snapshot).
+    pub file: String,
+    /// Word count (each word is serialized as 8 LE bytes regardless of
+    /// the filter's `word_bits`; `AnyBloom::snapshot` is lossless for
+    /// both word sizes).
+    pub words: u64,
+    /// FNV-1a 64 of the file content, as [`checksum_words`] computes it.
+    pub checksum: u64,
+}
+
+/// The decoded manifest (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotManifest {
+    pub format_version: u32,
+    /// The namespace name at snapshot time (informational: restore may
+    /// publish the state under any name).
+    pub name: String,
+    pub config: FilterConfig,
+    pub shard_files: Vec<ShardFile>,
+    /// Key-count counters at snapshot time; restore seeds them back so
+    /// `stats(name)` survives the restart.
+    pub adds: u64,
+    pub queries: u64,
+}
+
+/// Flatten an internal (anyhow) decode failure into the typed corruption
+/// error.
+fn corrupt<T>(r: anyhow::Result<T>, what: &str) -> Result<T, GbfError> {
+    r.map_err(|e| GbfError::SnapshotCorrupt(format!("{what}: {e:#}")))
+}
+
+impl SnapshotManifest {
+    /// Serialize to the canonical JSON document (key-sorted, compact).
+    pub fn to_json(&self) -> String {
+        let c = &self.config;
+        let config = Json::obj(vec![
+            ("variant", Json::str(c.variant.as_str())),
+            ("scheme", Json::str(c.scheme.as_str())),
+            ("log2_m_words", Json::Int(c.log2_m_words as i64)),
+            ("word_bits", Json::Int(c.word_bits as i64)),
+            ("block_bits", Json::Int(c.block_bits as i64)),
+            ("k", Json::Int(c.k as i64)),
+            ("z", Json::Int(c.z as i64)),
+            ("theta", Json::Int(c.theta as i64)),
+            ("phi", Json::Int(c.phi as i64)),
+        ]);
+        let shard_files = Json::Arr(
+            self.shard_files
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("file", Json::str(s.file.as_str())),
+                        ("words", Json::Int(s.words as i64)),
+                        // full-range u64: hex string, the golden.json convention
+                        ("checksum", Json::str(format!("{:016x}", s.checksum))),
+                    ])
+                })
+                .collect(),
+        );
+        let counters = Json::obj(vec![
+            ("adds", Json::Int(self.adds as i64)),
+            ("queries", Json::Int(self.queries as i64)),
+        ]);
+        Json::obj(vec![
+            ("format_version", Json::Int(self.format_version as i64)),
+            ("name", Json::str(self.name.as_str())),
+            ("config", config),
+            ("shards", Json::Int(self.shard_files.len() as i64)),
+            ("shard_files", shard_files),
+            ("counters", counters),
+        ])
+        .to_string()
+    }
+
+    /// Decode and cross-validate a manifest document (typed errors — see
+    /// module docs for the mapping).
+    pub fn from_json_str(text: &str) -> Result<SnapshotManifest, GbfError> {
+        let doc = corrupt(json::parse(text), "parsing snapshot manifest")?;
+
+        // Version FIRST: a future format's drifted layout must still
+        // answer SnapshotVersion, not a misleading Corrupt/Geometry.
+        let found = corrupt(doc.expect("format_version").and_then(Json::as_u64), "manifest format_version")? as u32;
+        if found != SNAPSHOT_VERSION {
+            return Err(GbfError::SnapshotVersion { found, supported: SNAPSHOT_VERSION });
+        }
+
+        let name = corrupt(doc.expect("name").and_then(|v| v.as_str().map(str::to_string)), "manifest name")?;
+        let cj = corrupt(doc.expect("config"), "manifest config")?;
+        let field =
+            |key: &str| corrupt(cj.expect(key).and_then(Json::as_u64), "manifest config field").map(|v| v as u32);
+        let config = FilterConfig {
+            variant: corrupt(
+                cj.expect("variant").and_then(Json::as_str).and_then(Variant::parse),
+                "manifest variant",
+            )?,
+            scheme: corrupt(cj.expect("scheme").and_then(Json::as_str).and_then(Scheme::parse), "manifest scheme")?,
+            log2_m_words: field("log2_m_words")?,
+            word_bits: field("word_bits")?,
+            block_bits: field("block_bits")?,
+            k: field("k")?,
+            z: field("z")?,
+            theta: field("theta")?,
+            phi: field("phi")?,
+        };
+        // Self-consistency — geometry errors from here on.
+        let config = config
+            .validate()
+            .map_err(|e| GbfError::SnapshotGeometry(format!("manifest config invalid: {e:#}")))?;
+
+        let declared = corrupt(doc.expect("shards").and_then(Json::as_u64), "manifest shard count")? as usize;
+        let files = corrupt(
+            doc.expect("shard_files").and_then(|v| v.as_arr().map(<[Json]>::to_vec)),
+            "manifest shard_files",
+        )?;
+        if declared == 0 || declared != files.len() {
+            return Err(GbfError::SnapshotGeometry(format!(
+                "manifest declares {declared} shard(s) but lists {} shard file(s)",
+                files.len()
+            )));
+        }
+        if !declared.is_power_of_two() || declared > 1 << 16 {
+            return Err(GbfError::SnapshotGeometry(format!(
+                "shard count {declared} is not a power of two in 1..=65536"
+            )));
+        }
+        let mut shard_files = Vec::with_capacity(files.len());
+        for (idx, entry) in files.iter().enumerate() {
+            let file =
+                corrupt(entry.expect("file").and_then(|v| v.as_str().map(str::to_string)), "shard file name")?;
+            if file.is_empty() || file.contains('/') || file.contains('\\') || file.contains("..") {
+                return Err(GbfError::SnapshotCorrupt(format!(
+                    "shard file name {file:?} escapes the snapshot directory"
+                )));
+            }
+            let words = corrupt(entry.expect("words").and_then(Json::as_u64), "shard word count")?;
+            if words != config.m_words() {
+                return Err(GbfError::SnapshotGeometry(format!(
+                    "shard {idx} declares {words} words, config geometry wants {} per shard",
+                    config.m_words()
+                )));
+            }
+            let checksum = corrupt(entry.expect("checksum").and_then(Json::as_hex_u64), "shard checksum")?;
+            shard_files.push(ShardFile { file, words, checksum });
+        }
+
+        let counters = corrupt(doc.expect("counters"), "manifest counters")?;
+        let adds = corrupt(counters.expect("adds").and_then(Json::as_u64), "adds counter")?;
+        let queries = corrupt(counters.expect("queries").and_then(Json::as_u64), "queries counter")?;
+
+        Ok(SnapshotManifest { format_version: found, name, config, shard_files, adds, queries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(shards: usize) -> SnapshotManifest {
+        let config = FilterConfig { log2_m_words: 12, ..Default::default() };
+        let shard_files = (0..shards)
+            .map(|i| ShardFile {
+                file: shard_file_name(i),
+                words: config.m_words(),
+                checksum: 0xDEAD_BEEF_0000_0000 | i as u64,
+            })
+            .collect();
+        SnapshotManifest {
+            format_version: SNAPSHOT_VERSION,
+            name: "ns".into(),
+            config,
+            shard_files,
+            adds: 7,
+            queries: 3,
+        }
+    }
+
+    #[test]
+    fn round_trips() {
+        let m = sample(4);
+        let got = SnapshotManifest::from_json_str(&m.to_json()).unwrap();
+        assert_eq!(got, m);
+    }
+
+    #[test]
+    fn version_is_checked_first() {
+        let mut m = sample(1);
+        m.format_version = 99;
+        // even with an otherwise-valid layout, a foreign version is typed
+        match SnapshotManifest::from_json_str(&m.to_json()) {
+            Err(GbfError::SnapshotVersion { found: 99, supported: SNAPSHOT_VERSION }) => {}
+            other => panic!("expected SnapshotVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn geometry_drift_is_typed() {
+        // word count that disagrees with the config
+        let mut m = sample(2);
+        m.shard_files[1].words = 17;
+        assert!(matches!(SnapshotManifest::from_json_str(&m.to_json()), Err(GbfError::SnapshotGeometry(_))));
+        // shard count vs shard_files length
+        let m = sample(2);
+        let doc = m.to_json().replace("\"shards\":2", "\"shards\":4");
+        assert!(matches!(SnapshotManifest::from_json_str(&doc), Err(GbfError::SnapshotGeometry(_))));
+        // non-power-of-two shard count
+        let mut m = sample(3);
+        m.shard_files.truncate(3);
+        assert!(matches!(SnapshotManifest::from_json_str(&m.to_json()), Err(GbfError::SnapshotGeometry(_))));
+        // invalid filter config (k = 0)
+        let mut m = sample(1);
+        m.config.k = 0;
+        assert!(matches!(SnapshotManifest::from_json_str(&m.to_json()), Err(GbfError::SnapshotGeometry(_))));
+    }
+
+    #[test]
+    fn corruption_is_typed() {
+        assert!(matches!(SnapshotManifest::from_json_str("{not json"), Err(GbfError::SnapshotCorrupt(_))));
+        assert!(matches!(SnapshotManifest::from_json_str("{}"), Err(GbfError::SnapshotCorrupt(_))));
+        // a shard file name trying to escape the directory
+        let m = sample(1);
+        let doc = m.to_json().replace("shard-0000.words", "../evil");
+        assert!(matches!(SnapshotManifest::from_json_str(&doc), Err(GbfError::SnapshotCorrupt(_))));
+    }
+
+    #[test]
+    fn checksum_is_stable_and_bit_sensitive() {
+        let words = vec![0u64, 1, u64::MAX, 0x0123_4567_89AB_CDEF];
+        let base = checksum_words(&words);
+        assert_eq!(base, checksum_words(&words), "deterministic");
+        let mut flipped = words.clone();
+        flipped[2] ^= 1 << 63;
+        assert_ne!(base, checksum_words(&flipped), "single-bit sensitivity");
+        assert_ne!(checksum_words(&[]), checksum_words(&[0]), "length sensitivity");
+    }
+}

@@ -1,0 +1,470 @@
+//! `persist` — durable namespaces: the manifest-described on-disk
+//! snapshot format and its crash-safe writer / distrustful reader.
+//!
+//! One snapshot is one **directory**:
+//!
+//! ```text
+//! <dir>/MANIFEST.json      # format version, name, geometry, shard table, counters
+//! <dir>/shard-0000.words   # raw LE u64 words, one file per registry shard
+//! <dir>/shard-0001.words
+//! ...
+//! ```
+//!
+//! **Crash safety** is the directory-swap protocol: everything is first
+//! written into a hidden sibling (`.<name>.tmp`) — shard files, then the
+//! manifest, each fsynced, then the temp directory itself — and only
+//! then *published* by an atomic `rename` onto `<dir>`. A crash at any
+//! point before the rename leaves `<dir>` untouched (fully old, or
+//! absent for a first snapshot); a crash after it leaves the new
+//! snapshot complete. There is no point at which a reader can observe a
+//! manifest without every shard file it describes. Overwrites park the
+//! previous snapshot as `.<name>.old` before swinging the new one in; a
+//! crash *between* those two renames is recovered (by the next writer
+//! **and** the next reader) by putting the parked snapshot back, so the
+//! last committed state is never lost. Stale `.tmp`/`.old` leftovers
+//! from a crashed writer are swept by the next
+//! [`SnapshotWriter::begin`] on the same destination, and at most one
+//! writer per destination is admitted at a time (a concurrent second
+//! `begin` fails fast with a typed error rather than racing on the
+//! shared temp directory).
+//!
+//! **Restore distrust**: [`SnapshotReader`] re-validates everything it
+//! touches and answers with typed [`GbfError`]s — an incompatible format
+//! version is [`GbfError::SnapshotVersion`], manifest self-disagreement
+//! is [`GbfError::SnapshotGeometry`], a short or missing file is
+//! [`GbfError::SnapshotCorrupt`], and content that hashes differently
+//! than the manifest promises is [`GbfError::SnapshotChecksum`]. Never a
+//! panic: the corruption-matrix suite in `rust/tests/persistence.rs`
+//! pins every mapping.
+//!
+//! The streaming shape (one shard at a time through
+//! [`SnapshotWriter::write_shard`] / [`SnapshotReader::read_shard`]) is
+//! deliberate: the service layer snapshots a namespace shard-by-shard
+//! off the catalog lock, so persisting a multi-GiB tenant never stalls
+//! the others — the same reason `create_filter` builds engines outside
+//! the lock.
+
+pub mod manifest;
+
+pub use manifest::{checksum_words, shard_file_name, ShardFile, SnapshotManifest, MANIFEST_FILE, SNAPSHOT_VERSION};
+
+use std::collections::HashSet;
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
+
+use crate::filter::params::FilterConfig;
+
+use super::error::GbfError;
+
+/// Destinations with a snapshot currently in flight (this process): two
+/// writers aimed at one directory would race on the shared temp dir and
+/// could publish a manifest whose checksums describe the other writer's
+/// bytes, so the second `begin` fails fast with a typed error instead.
+/// Keyed on the textual path (the service always passes the same form).
+static IN_FLIGHT: OnceLock<Mutex<HashSet<PathBuf>>> = OnceLock::new();
+
+/// Releases the destination's in-flight slot when the writer goes away
+/// (commit, error, or crash-simulation drop alike).
+struct DirLock {
+    key: PathBuf,
+}
+
+impl Drop for DirLock {
+    fn drop(&mut self) {
+        if let Some(set) = IN_FLIGHT.get() {
+            set.lock().unwrap().remove(&self.key);
+        }
+    }
+}
+
+fn lock_destination(dir: &Path) -> Result<DirLock, GbfError> {
+    let set = IN_FLIGHT.get_or_init(|| Mutex::new(HashSet::new()));
+    let key = dir.to_path_buf();
+    if !set.lock().unwrap().insert(key.clone()) {
+        return Err(GbfError::Backend(format!("snapshot already in progress for {key:?}")));
+    }
+    Ok(DirLock { key })
+}
+
+/// Recover from a crash inside the overwrite swap: the commit protocol
+/// parks the previous snapshot as `.<name>.old` before swinging the new
+/// one in, so a kill between those two renames leaves the destination
+/// absent while `.old` still holds the last *committed* snapshot. Both
+/// the writer (before sweeping wreckage) and the reader (so a restore
+/// right after such a crash still sees the last committed state) put it
+/// back first.
+fn recover_interrupted_swap(dir: &Path) {
+    let Some(name) = dir.file_name().and_then(|n| n.to_str()) else { return };
+    let parent = dir.parent().map(Path::to_path_buf).unwrap_or_default();
+    let old = parent.join(format!(".{name}.old"));
+    if !dir.exists() && old.join(MANIFEST_FILE).is_file() {
+        let _ = fs::rename(&old, dir);
+    }
+}
+
+/// Flatten an I/O failure into the typed corruption/unwritable error.
+fn io_err(what: &str, path: &Path, e: std::io::Error) -> GbfError {
+    GbfError::SnapshotCorrupt(format!("{what} {path:?}: {e}"))
+}
+
+/// Write + fsync one file (fsync is what makes the later rename a real
+/// commit point: data reaches the platter before the publish).
+fn write_fsync(path: &Path, bytes: &[u8]) -> Result<(), GbfError> {
+    let mut f = File::create(path).map_err(|e| io_err("creating", path, e))?;
+    f.write_all(bytes).map_err(|e| io_err("writing", path, e))?;
+    f.sync_all().map_err(|e| io_err("fsyncing", path, e))?;
+    Ok(())
+}
+
+/// Best-effort directory fsync (durability of the rename itself; not all
+/// platforms allow opening a directory, so failures are ignored).
+fn fsync_dir(dir: &Path) {
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// Streaming snapshot writer (see module docs): `begin` → one
+/// `write_shard` per shard, in order → `commit`. Dropping the writer
+/// without committing abandons the temp directory and leaves any
+/// previous snapshot at the destination untouched — exactly what a
+/// crash mid-write does.
+pub struct SnapshotWriter {
+    final_dir: PathBuf,
+    tmp_dir: PathBuf,
+    old_dir: PathBuf,
+    name: String,
+    config: FilterConfig,
+    num_shards: usize,
+    entries: Vec<ShardFile>,
+    /// Held for the writer's whole life: one snapshot per destination.
+    _lock: DirLock,
+}
+
+impl SnapshotWriter {
+    /// Start a snapshot of `num_shards` shards of `config` geometry,
+    /// destined for the directory `dir` (created/replaced atomically at
+    /// commit). Sweeps any stale temp directory a crashed writer left.
+    pub fn begin(dir: &Path, name: &str, config: &FilterConfig, num_shards: usize) -> Result<SnapshotWriter, GbfError> {
+        if num_shards == 0 {
+            return Err(GbfError::SnapshotGeometry("cannot snapshot zero shards".into()));
+        }
+        let dir_name = dir.file_name().and_then(|n| n.to_str()).ok_or_else(|| {
+            GbfError::InvalidConfig(format!("snapshot path {dir:?} needs a UTF-8 directory name"))
+        })?;
+        let lock = lock_destination(dir)?;
+        let parent = dir.parent().map(Path::to_path_buf).unwrap_or_default();
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(&parent).map_err(|e| io_err("creating snapshot parent", &parent, e))?;
+        }
+        // an interrupted swap's parked `.old` is the last committed
+        // snapshot while the destination is absent — put it back BEFORE
+        // sweeping wreckage, or the sweep would destroy the only copy
+        recover_interrupted_swap(dir);
+        let tmp_dir = parent.join(format!(".{dir_name}.tmp"));
+        let old_dir = parent.join(format!(".{dir_name}.old"));
+        for stale in [&tmp_dir, &old_dir] {
+            if stale.exists() {
+                fs::remove_dir_all(stale).map_err(|e| io_err("sweeping stale snapshot dir", stale, e))?;
+            }
+        }
+        fs::create_dir_all(&tmp_dir).map_err(|e| io_err("creating snapshot temp dir", &tmp_dir, e))?;
+        Ok(SnapshotWriter {
+            final_dir: dir.to_path_buf(),
+            tmp_dir,
+            old_dir,
+            name: name.to_string(),
+            config: *config,
+            num_shards,
+            entries: Vec::new(),
+            _lock: lock,
+        })
+    }
+
+    /// Write shard `idx`'s words (must be called in shard order,
+    /// `0..num_shards`); the checksum is computed here and lands in the
+    /// manifest at commit.
+    pub fn write_shard(&mut self, idx: usize, words: &[u64]) -> Result<(), GbfError> {
+        if idx != self.entries.len() || idx >= self.num_shards {
+            return Err(GbfError::SnapshotGeometry(format!(
+                "shard {idx} written out of order (expected shard {} of {})",
+                self.entries.len(),
+                self.num_shards
+            )));
+        }
+        if words.len() as u64 != self.config.m_words() {
+            return Err(GbfError::SnapshotGeometry(format!(
+                "shard {idx} has {} words, config geometry wants {} per shard",
+                words.len(),
+                self.config.m_words()
+            )));
+        }
+        let file = shard_file_name(idx);
+        let mut bytes = Vec::with_capacity(words.len() * 8);
+        for &w in words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        write_fsync(&self.tmp_dir.join(&file), &bytes)?;
+        self.entries.push(ShardFile { file, words: words.len() as u64, checksum: checksum_words(words) });
+        Ok(())
+    }
+
+    /// Seal the snapshot: write the manifest (with the key-count
+    /// counters), fsync, and atomically publish the directory. After
+    /// `commit` returns, a reader sees the complete new snapshot; before
+    /// it, the old one (or nothing).
+    pub fn commit(self, adds: u64, queries: u64) -> Result<(), GbfError> {
+        self.commit_inner(adds, queries, false)
+    }
+
+    /// Test instrumentation for the crash-safety suite: run the full
+    /// write protocol (every shard file, the manifest, all fsyncs) but
+    /// "crash" just before the publishing rename. The destination must
+    /// be observably untouched afterwards.
+    #[doc(hidden)]
+    pub fn commit_crash_before_publish(self, adds: u64, queries: u64) -> Result<(), GbfError> {
+        self.commit_inner(adds, queries, true)
+    }
+
+    fn commit_inner(self, adds: u64, queries: u64, crash_before_publish: bool) -> Result<(), GbfError> {
+        if self.entries.len() != self.num_shards {
+            return Err(GbfError::SnapshotGeometry(format!(
+                "commit after {} of {} shards",
+                self.entries.len(),
+                self.num_shards
+            )));
+        }
+        let manifest = SnapshotManifest {
+            format_version: SNAPSHOT_VERSION,
+            name: self.name.clone(),
+            config: self.config,
+            shard_files: self.entries.clone(),
+            adds,
+            queries,
+        };
+        write_fsync(&self.tmp_dir.join(MANIFEST_FILE), manifest.to_json().as_bytes())?;
+        fsync_dir(&self.tmp_dir);
+        if crash_before_publish {
+            return Ok(());
+        }
+        // Publish. First snapshot: one atomic rename. Overwrite: park the
+        // old snapshot aside, swing the new one in, then discard the old —
+        // if the second rename fails the old snapshot is swung back, so
+        // the destination is never left torn.
+        if self.final_dir.exists() {
+            fs::rename(&self.final_dir, &self.old_dir)
+                .map_err(|e| io_err("parking previous snapshot", &self.old_dir, e))?;
+            if let Err(e) = fs::rename(&self.tmp_dir, &self.final_dir) {
+                let _ = fs::rename(&self.old_dir, &self.final_dir);
+                return Err(io_err("publishing snapshot", &self.final_dir, e));
+            }
+            let _ = fs::remove_dir_all(&self.old_dir);
+        } else {
+            fs::rename(&self.tmp_dir, &self.final_dir)
+                .map_err(|e| io_err("publishing snapshot", &self.final_dir, e))?;
+        }
+        if let Some(parent) = self.final_dir.parent() {
+            fsync_dir(parent);
+        }
+        Ok(())
+    }
+}
+
+/// Verifying snapshot reader: `open` decodes and cross-validates the
+/// manifest; `read_shard` hands back one shard's words only after the
+/// byte count and checksum both match what the manifest promised.
+pub struct SnapshotReader {
+    dir: PathBuf,
+    manifest: SnapshotManifest,
+}
+
+impl SnapshotReader {
+    pub fn open(dir: &Path) -> Result<SnapshotReader, GbfError> {
+        // a crash between the commit protocol's two renames leaves the
+        // last committed snapshot parked as `.old` — recover it so the
+        // restore still sees it
+        recover_interrupted_swap(dir);
+        let path = dir.join(MANIFEST_FILE);
+        let text = fs::read_to_string(&path).map_err(|e| io_err("reading snapshot manifest", &path, e))?;
+        let manifest = SnapshotManifest::from_json_str(&text)?;
+        Ok(SnapshotReader { dir: dir.to_path_buf(), manifest })
+    }
+
+    pub fn manifest(&self) -> &SnapshotManifest {
+        &self.manifest
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.manifest.shard_files.len()
+    }
+
+    /// Read and verify one shard's words.
+    pub fn read_shard(&self, idx: usize) -> Result<Vec<u64>, GbfError> {
+        let entry = self.manifest.shard_files.get(idx).ok_or_else(|| {
+            GbfError::SnapshotGeometry(format!("shard {idx} out of range ({} shards)", self.num_shards()))
+        })?;
+        let path = self.dir.join(&entry.file);
+        let bytes = fs::read(&path).map_err(|e| io_err("reading shard file", &path, e))?;
+        if bytes.len() as u64 != entry.words * 8 {
+            return Err(GbfError::SnapshotCorrupt(format!(
+                "shard file {path:?} is {} bytes, manifest promises {} ({} words) — truncated or padded",
+                bytes.len(),
+                entry.words * 8,
+                entry.words
+            )));
+        }
+        let words: Vec<u64> =
+            bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect();
+        let found = checksum_words(&words);
+        if found != entry.checksum {
+            return Err(GbfError::SnapshotChecksum { shard: idx, expected: entry.checksum, found });
+        }
+        Ok(words)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn scratch(tag: &str) -> PathBuf {
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        std::env::temp_dir().join(format!(
+            "gbf-persist-unit-{tag}-{}-{}",
+            std::process::id(),
+            NEXT.fetch_add(1, Ordering::Relaxed)
+        ))
+    }
+
+    fn cfg() -> FilterConfig {
+        FilterConfig { log2_m_words: 10, ..Default::default() }
+    }
+
+    fn shard_words(seed: u64, cfg: &FilterConfig) -> Vec<u64> {
+        (0..cfg.m_words()).map(|i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ seed).collect()
+    }
+
+    fn write_all(dir: &Path, seeds: &[u64]) {
+        let c = cfg();
+        let mut w = SnapshotWriter::begin(dir, "unit", &c, seeds.len()).unwrap();
+        for (i, &s) in seeds.iter().enumerate() {
+            w.write_shard(i, &shard_words(s, &c)).unwrap();
+        }
+        w.commit(11, 22).unwrap();
+    }
+
+    #[test]
+    fn write_read_round_trip() {
+        let dir = scratch("roundtrip");
+        write_all(&dir, &[1, 2]);
+        let r = SnapshotReader::open(&dir).unwrap();
+        assert_eq!(r.num_shards(), 2);
+        assert_eq!(r.manifest().name, "unit");
+        assert_eq!(r.manifest().adds, 11);
+        assert_eq!(r.manifest().queries, 22);
+        assert_eq!(r.read_shard(0).unwrap(), shard_words(1, &cfg()));
+        assert_eq!(r.read_shard(1).unwrap(), shard_words(2, &cfg()));
+        assert!(matches!(r.read_shard(2), Err(GbfError::SnapshotGeometry(_))));
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn overwrite_replaces_atomically_and_sweeps_leftovers() {
+        let dir = scratch("overwrite");
+        write_all(&dir, &[1, 2]);
+        // an abandoned writer (crash) leaves a temp dir behind ...
+        let c = cfg();
+        let mut w = SnapshotWriter::begin(&dir, "unit", &c, 2).unwrap();
+        w.write_shard(0, &shard_words(9, &c)).unwrap();
+        drop(w);
+        // ... the destination still reads back the old snapshot ...
+        assert_eq!(SnapshotReader::open(&dir).unwrap().read_shard(0).unwrap(), shard_words(1, &c));
+        // ... and the next writer sweeps the leftover and succeeds
+        write_all(&dir, &[3, 4]);
+        let r = SnapshotReader::open(&dir).unwrap();
+        assert_eq!(r.read_shard(0).unwrap(), shard_words(3, &c));
+        assert_eq!(r.read_shard(1).unwrap(), shard_words(4, &c));
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn writer_enforces_shard_order_and_geometry() {
+        let dir = scratch("order");
+        let c = cfg();
+        let mut w = SnapshotWriter::begin(&dir, "unit", &c, 2).unwrap();
+        assert!(matches!(w.write_shard(1, &shard_words(1, &c)), Err(GbfError::SnapshotGeometry(_))));
+        assert!(matches!(w.write_shard(0, &[1, 2, 3]), Err(GbfError::SnapshotGeometry(_))));
+        w.write_shard(0, &shard_words(1, &c)).unwrap();
+        // committing with a missing shard is refused
+        assert!(matches!(w.commit(0, 0), Err(GbfError::SnapshotGeometry(_))));
+        assert!(!dir.exists(), "nothing was published");
+        let tmp = std::env::temp_dir().join(format!(".{}.tmp", dir.file_name().unwrap().to_str().unwrap()));
+        fs::remove_dir_all(tmp).ok();
+    }
+
+    #[test]
+    fn interrupted_swap_recovers_the_parked_snapshot() {
+        let dir = scratch("swap");
+        write_all(&dir, &[1, 2]);
+        let c = cfg();
+        // simulate a crash between the two overwrite renames: the
+        // destination was parked to `.old` and the publish never happened
+        let parent = dir.parent().unwrap();
+        let old = parent.join(format!(".{}.old", dir.file_name().unwrap().to_str().unwrap()));
+        fs::rename(&dir, &old).unwrap();
+        assert!(!dir.exists());
+        // the reader recovers the last committed snapshot
+        let r = SnapshotReader::open(&dir).unwrap();
+        assert_eq!(r.read_shard(0).unwrap(), shard_words(1, &c));
+        // and so does the next writer (park again, then begin → commit)
+        fs::rename(&dir, &old).unwrap();
+        write_all(&dir, &[3, 4]);
+        assert_eq!(SnapshotReader::open(&dir).unwrap().read_shard(0).unwrap(), shard_words(3, &c));
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn concurrent_writers_to_one_destination_are_refused() {
+        let dir = scratch("exclusive");
+        let c = cfg();
+        let first = SnapshotWriter::begin(&dir, "unit", &c, 1).unwrap();
+        match SnapshotWriter::begin(&dir, "unit", &c, 1) {
+            Err(GbfError::Backend(msg)) => assert!(msg.contains("in progress"), "{msg}"),
+            other => panic!("second writer must be refused, got {:?}", other.err()),
+        }
+        drop(first); // releases the destination ...
+        let mut w = SnapshotWriter::begin(&dir, "unit", &c, 1).unwrap();
+        w.write_shard(0, &shard_words(7, &c)).unwrap();
+        w.commit(0, 0).unwrap(); // ... and commit releases it too
+        SnapshotWriter::begin(&dir, "unit", &c, 1).unwrap();
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checksum_and_truncation_detected() {
+        let dir = scratch("corrupt");
+        write_all(&dir, &[5]);
+        let shard_path = dir.join(shard_file_name(0));
+        // bit-flip
+        let mut bytes = fs::read(&shard_path).unwrap();
+        bytes[17] ^= 0x40;
+        fs::write(&shard_path, &bytes).unwrap();
+        match SnapshotReader::open(&dir).unwrap().read_shard(0) {
+            Err(GbfError::SnapshotChecksum { shard: 0, expected, found }) => assert_ne!(expected, found),
+            other => panic!("expected SnapshotChecksum, got {other:?}"),
+        }
+        // truncation
+        bytes.truncate(bytes.len() - 8);
+        fs::write(&shard_path, &bytes).unwrap();
+        assert!(matches!(
+            SnapshotReader::open(&dir).unwrap().read_shard(0),
+            Err(GbfError::SnapshotCorrupt(_))
+        ));
+        // missing snapshot directory entirely
+        fs::remove_dir_all(&dir).unwrap();
+        assert!(matches!(SnapshotReader::open(&dir), Err(GbfError::SnapshotCorrupt(_))));
+    }
+}

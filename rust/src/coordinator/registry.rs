@@ -272,7 +272,8 @@ impl ShardedRegistry {
 
     /// Warm-start one shard from previously snapshotted words — the
     /// inverse of [`ShardedRegistry::snapshot_shard`], and the seam the
-    /// admin plane's future `restore(name)` hangs off. Word count must
+    /// admin plane's `restore(name, dir)` streams through (one shard at
+    /// a time, see [`crate::coordinator::persist`]). Word count must
     /// match the shard geometry.
     pub fn load_shard(&self, idx: usize, words: &[u64]) -> Result<()> {
         ensure!(idx < self.shards.len(), "shard index {idx} out of range ({} shards)", self.shards.len());

@@ -141,6 +141,22 @@ impl Coordinator {
         Ok(sink)
     }
 
+    /// One shard's words — the persistence layer's streaming unit.
+    pub fn snapshot_shard(&self, idx: usize) -> Result<Vec<u64>> {
+        self.backend.snapshot_shard(idx)
+    }
+
+    /// Warm-start one shard from snapshotted words (the restore path).
+    pub fn load_shard(&self, idx: usize, words: &[u64]) -> Result<()> {
+        self.backend.load_shard(idx, words)
+    }
+
+    /// All state words, shards concatenated in shard order (the
+    /// byte-identity probe the persistence tests compare on).
+    pub fn snapshot_words(&self) -> Vec<u64> {
+        self.backend.snapshot()
+    }
+
     /// Queue depth (backpressure signal).
     pub fn queue_depth(&self) -> usize {
         self.handle.depth()

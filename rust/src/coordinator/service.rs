@@ -12,7 +12,10 @@
 //!
 //! * **admin** — [`FilterService::create_filter`] /
 //!   [`FilterService::drop_filter`] / [`FilterService::list_filters`] /
-//!   [`FilterService::stats`], all returning typed [`GbfError`]s.
+//!   [`FilterService::stats`], plus the durable pair
+//!   [`FilterService::snapshot`] / [`FilterService::restore`]
+//!   (manifest-described on-disk snapshots, see [`super::persist`]) —
+//!   all returning typed [`GbfError`]s.
 //! * **data** — a cheap clonable [`FilterHandle`] whose operations
 //!   (`add`, `query`, `add_bulk`, `query_bulk`) return [`Ticket`]
 //!   receipts: submit everywhere first, wait later. Blocking is just
@@ -24,6 +27,7 @@
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::fmt;
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
@@ -35,6 +39,7 @@ use super::backend::{FilterBackend, NativeBackend};
 use super::batcher::BatchPolicy;
 use super::error::GbfError;
 use super::metrics::{MetricsSnapshot, ShardStats};
+use super::persist::{SnapshotReader, SnapshotWriter};
 use super::server::{Coordinator, CoordinatorConfig, Op};
 use super::ticket::{finish_all, finish_one, finish_unit, Ticket};
 
@@ -159,12 +164,18 @@ impl NamespaceStats {
 }
 
 fn validate_name(name: &str) -> Result<(), GbfError> {
-    let ok = !name.is_empty() && name.chars().all(|c| c.is_ascii_alphanumeric() || "._-".contains(c));
+    // No leading dot: a namespace's snapshot directory is named after it,
+    // and dot-prefixed siblings are the persist layer's temp/parked dirs
+    // (`.<name>.tmp` / `.<name>.old`) — hidden names would collide with
+    // that scheme and with `serve --state-dir`'s boot scan.
+    let ok = !name.is_empty()
+        && !name.starts_with('.')
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || "._-".contains(c));
     if ok {
         Ok(())
     } else {
         Err(GbfError::InvalidConfig(format!(
-            "namespace name {name:?} must be non-empty and use only [A-Za-z0-9._-]"
+            "namespace name {name:?} must be non-empty, not start with '.', and use only [A-Za-z0-9._-]"
         )))
     }
 }
@@ -220,12 +231,28 @@ impl FilterService {
             make_backend,
         )
         .map_err(|e| GbfError::Backend(format!("{e:#}")))?;
+        self.install(name, engine, spec.shards, spec.max_queue_depth)
+    }
+
+    /// Publish a built (and possibly warm-started) engine into the
+    /// catalog under `name` — the common tail of `create_filter_with`
+    /// and [`FilterService::restore`]. Always mints a fresh instance id,
+    /// so handles to any earlier bearer of the name fail with
+    /// [`GbfError::NoSuchFilter`]; if two publishers race on one name,
+    /// the loser's engine is simply dropped.
+    fn install(
+        &self,
+        name: &str,
+        engine: Coordinator,
+        requested_shards: usize,
+        max_queue_depth: Option<usize>,
+    ) -> Result<FilterHandle, GbfError> {
         let ns = Arc::new(Namespace {
             name: name.to_string(),
             instance: NEXT_INSTANCE.fetch_add(1, Ordering::Relaxed),
             engine,
-            requested_shards: spec.shards,
-            max_queue_depth: spec.max_queue_depth,
+            requested_shards,
+            max_queue_depth,
             dropped: AtomicBool::new(false),
         });
         let mut map = self.namespaces.write().unwrap();
@@ -236,6 +263,85 @@ impl FilterService {
                 Ok(FilterHandle { ns })
             }
         }
+    }
+
+    /// Persist namespace `name` into the directory `dir` as a
+    /// manifest-described snapshot (see [`super::persist`]). The state is
+    /// streamed **shard-by-shard off the catalog lock** (the lookup
+    /// clones the namespace `Arc` and releases the lock), so snapshotting
+    /// a multi-GiB tenant never stalls other tenants' traffic; writes
+    /// are crash-safe (temp dir + fsync + atomic rename), and an
+    /// existing snapshot at `dir` is replaced atomically. Inserts that
+    /// race with the snapshot land in it or in the next one — each
+    /// shard's words are read in one atomic-load pass.
+    pub fn snapshot(&self, name: &str, dir: &Path) -> Result<(), GbfError> {
+        let ns = self.lookup(name)?;
+        let shards = ns.engine.num_shards();
+        let mut writer = SnapshotWriter::begin(dir, name, ns.engine.filter_config(), shards)?;
+        for idx in 0..shards {
+            let words = ns.engine.snapshot_shard(idx).map_err(|e| GbfError::Backend(format!("{e:#}")))?;
+            writer.write_shard(idx, &words)?;
+        }
+        let m = ns.engine.metrics().snapshot();
+        writer.commit(m.adds, m.queries)
+    }
+
+    /// Recreate a namespace from a snapshot directory written by
+    /// [`FilterService::snapshot`]: the warm-start inverse, for restarts
+    /// and shard migration. Like `create_filter`, the engine is built —
+    /// and every shard loaded and checksum-verified — **off the catalog
+    /// lock**, then published under a fresh instance id, so handles from
+    /// before the restore fail with [`GbfError::NoSuchFilter`] exactly
+    /// like after a drop-and-recreate. Restores always rebuild on the
+    /// native backend with the default batch policy (the manifest
+    /// records geometry and content, not scheduling); warm-starting a
+    /// PJRT namespace goes through `create_filter_with` +
+    /// `load_shard`. Every format mismatch is a typed error: see the
+    /// [`super::persist`] error mapping.
+    pub fn restore(&self, name: &str, dir: &Path) -> Result<FilterHandle, GbfError> {
+        self.restore_with_cap(name, dir, None)
+    }
+
+    /// [`FilterService::restore`] with an upper bound on the total filter
+    /// bytes (config size × shard count) the snapshot may commit — the
+    /// wire server's OOM guard. The check rides the same manifest read
+    /// that drives the restore, so there is no gap between what was
+    /// checked and what is loaded.
+    pub fn restore_with_cap(
+        &self,
+        name: &str,
+        dir: &Path,
+        max_total_bytes: Option<u64>,
+    ) -> Result<FilterHandle, GbfError> {
+        validate_name(name)?;
+        if self.namespaces.read().unwrap().contains_key(name) {
+            return Err(GbfError::FilterExists(name.to_string()));
+        }
+        let reader = SnapshotReader::open(dir)?;
+        if let Some(cap) = max_total_bytes {
+            let m = reader.manifest();
+            let total_bytes = m.config.size_bytes().saturating_mul(m.shard_files.len().max(1) as u64);
+            if total_bytes > cap {
+                return Err(GbfError::InvalidConfig(format!(
+                    "restore of {total_bytes} filter bytes exceeds the cap ({cap}); \
+                     restore oversized namespaces in-process"
+                )));
+            }
+        }
+        let config = reader.manifest().config;
+        let shards = reader.num_shards();
+        let engine = Coordinator::new(
+            CoordinatorConfig { num_shards: shards, policy: BatchPolicy::default() },
+            move |s| Ok(Box::new(NativeBackend::new(config, s)?) as Box<dyn FilterBackend>),
+        )
+        .map_err(|e| GbfError::Backend(format!("{e:#}")))?;
+        for idx in 0..shards {
+            let words = reader.read_shard(idx)?;
+            engine.load_shard(idx, &words).map_err(|e| GbfError::Backend(format!("{e:#}")))?;
+        }
+        let m = reader.manifest();
+        engine.metrics().seed_ops(m.adds, m.queries);
+        self.install(name, engine, shards, None)
     }
 
     /// Remove a namespace from the catalog. Outstanding handles observe
@@ -336,6 +442,13 @@ impl FilterHandle {
         self.ns.stats()
     }
 
+    /// All state words, shards concatenated in shard order — the
+    /// byte-identity probe the persistence suite compares restored
+    /// namespaces on.
+    pub fn snapshot_words(&self) -> Vec<u64> {
+        self.ns.engine.snapshot_words()
+    }
+
     fn submit<T>(&self, op: Op, keys: &[u64], finish: fn(Vec<bool>) -> T) -> Ticket<T> {
         if !self.is_live() {
             return Ticket::failed(GbfError::NoSuchFilter(self.ns.name.clone()), finish);
@@ -412,6 +525,9 @@ mod tests {
         let service = FilterService::new();
         assert!(matches!(service.create_filter("", small_cfg(12), 1), Err(GbfError::InvalidConfig(_))));
         assert!(matches!(service.create_filter("a:b", small_cfg(12), 1), Err(GbfError::InvalidConfig(_))));
+        // hidden names would collide with the persist layer's `.tmp`/`.old`
+        // siblings and the --state-dir boot scan
+        assert!(matches!(service.create_filter(".hidden", small_cfg(12), 1), Err(GbfError::InvalidConfig(_))));
         let bad = FilterConfig { k: 0, ..Default::default() };
         assert!(matches!(service.create_filter("badk", bad, 1), Err(GbfError::InvalidConfig(_))));
         // non-power-of-two shard counts surface the backend's refusal
@@ -478,6 +594,29 @@ mod tests {
         // the limit is introspectable through the admin plane
         assert_eq!(service.stats("bounded").unwrap().max_queue_depth, Some(8));
         assert_eq!(service.stats("bounded").unwrap().metrics.adds, 3, "refused keys never counted");
+    }
+
+    #[test]
+    fn snapshot_restore_round_trip_in_service() {
+        let dir = std::env::temp_dir().join(format!("gbf-svc-snap-{}", std::process::id()));
+        let service = FilterService::new();
+        let h = service.create_filter("persisted", small_cfg(12), 2).unwrap();
+        let keys = unique_keys(2_000, 21);
+        h.add_bulk(&keys).wait().unwrap();
+        service.snapshot("persisted", &dir).unwrap();
+        // snapshot of a missing namespace is a typed miss
+        assert_eq!(service.snapshot("nope", &dir).unwrap_err(), GbfError::NoSuchFilter("nope".into()));
+        // restore onto a live name is refused like a duplicate create
+        assert_eq!(service.restore("persisted", &dir).unwrap_err(), GbfError::FilterExists("persisted".into()));
+        service.drop_filter("persisted").unwrap();
+        let r = service.restore("persisted", &dir).unwrap();
+        assert_eq!(r.snapshot_words(), h.snapshot_words(), "byte-identical state across the restart");
+        assert!(r.query_bulk(&keys).wait().unwrap().iter().all(|&x| x), "no false negatives after restore");
+        assert_eq!(service.stats("persisted").unwrap().metrics.adds, 2_000, "key counters survive the restart");
+        // the pre-restore handle is stale: restore minted a new instance
+        assert!(!h.is_live());
+        assert_eq!(h.query(1).wait().unwrap_err(), GbfError::NoSuchFilter("persisted".into()));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -20,6 +20,7 @@
 use std::collections::HashMap;
 use std::io::BufReader;
 use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::Duration;
@@ -263,6 +264,31 @@ impl RemoteFilterService {
         }
     }
 
+    /// Snapshot a remote namespace. `dir` names a directory **on the
+    /// server**: the protocol ships the path and the server writes the
+    /// bytes, so the call costs one small frame each way no matter how
+    /// big the filter is.
+    pub fn snapshot(&self, name: &str, dir: &str) -> Result<(), GbfError> {
+        match self.admin(&Request::Snapshot { name: name.to_string(), dir: dir.to_string() })? {
+            Response::Ok => Ok(()),
+            other => Err(protocol_error("snapshot", &other)),
+        }
+    }
+
+    /// Restore a namespace from a server-side snapshot directory. Like
+    /// create, the `Created` reply carries the fresh instance id, so the
+    /// returned handle binds atomically to exactly the namespace this
+    /// call restored — and handles from before the restore answer
+    /// `NoSuchFilter`, matching in-process stale-handle semantics.
+    pub fn restore(&self, name: &str, dir: &str) -> Result<RemoteFilterHandle, GbfError> {
+        match self.admin(&Request::Restore { name: name.to_string(), dir: dir.to_string() })? {
+            Response::Created { instance } => {
+                Ok(RemoteFilterHandle { client: self.clone(), name: name.to_string(), instance })
+            }
+            other => Err(protocol_error("restore", &other)),
+        }
+    }
+
     /// A data-plane handle to a remote namespace. The stats round-trip
     /// both validates liveness (mirroring
     /// [`FilterService::handle`](crate::coordinator::FilterService::handle)'s
@@ -402,6 +428,24 @@ impl FilterApi for RemoteFilterService {
     fn handle(&self, name: &str) -> Result<Box<dyn FilterDataPlane>, GbfError> {
         RemoteFilterService::handle(self, name).map(|h| Box::new(h) as Box<dyn FilterDataPlane>)
     }
+
+    fn snapshot(&self, name: &str, dir: &Path) -> Result<(), GbfError> {
+        RemoteFilterService::snapshot(self, name, wire_path(dir)?)
+    }
+
+    fn restore(&self, name: &str, dir: &Path) -> Result<Box<dyn FilterDataPlane>, GbfError> {
+        RemoteFilterService::restore(self, name, wire_path(dir)?).map(|h| Box::new(h) as Box<dyn FilterDataPlane>)
+    }
+}
+
+/// The wire codec ships snapshot paths as UTF-8 strings (they resolve
+/// server-side); a non-UTF-8 path cannot cross the transport.
+fn wire_path(dir: &Path) -> Result<&str, GbfError> {
+    dir.to_str().ok_or_else(|| {
+        GbfError::InvalidConfig(format!(
+            "snapshot path {dir:?} is not UTF-8 (the wire protocol ships paths as strings)"
+        ))
+    })
 }
 
 impl FilterDataPlane for RemoteFilterHandle {

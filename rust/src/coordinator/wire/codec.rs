@@ -54,6 +54,14 @@ pub enum Request {
     /// stale-handle semantics.
     AddBulk { name: String, instance: u64, keys: Vec<u64> },
     QueryBulk { name: String, instance: u64, keys: Vec<u64> },
+    /// Persist a namespace into a **server-side** directory: the
+    /// protocol ships the path, never the filter bytes (a snapshot can
+    /// be orders of magnitude bigger than `MAX_FRAME`).
+    Snapshot { name: String, dir: String },
+    /// Recreate a namespace from a server-side snapshot directory; the
+    /// reply is `Created` (with the fresh instance id) so restore binds
+    /// a handle as atomically as create does.
+    Restore { name: String, dir: String },
 }
 
 /// Every way the server answers.
@@ -82,6 +90,8 @@ const REQ_LIST: u8 = 0x03;
 const REQ_STATS: u8 = 0x04;
 const REQ_ADD_BULK: u8 = 0x05;
 const REQ_QUERY_BULK: u8 = 0x06;
+const REQ_SNAPSHOT: u8 = 0x07;
+const REQ_RESTORE: u8 = 0x08;
 
 const RESP_OK: u8 = 0x81;
 const RESP_NAMES: u8 = 0x82;
@@ -95,6 +105,10 @@ const ERR_FILTER_EXISTS: u8 = 1;
 const ERR_INVALID_CONFIG: u8 = 2;
 const ERR_BACKEND: u8 = 3;
 const ERR_OVERLOADED: u8 = 4;
+const ERR_SNAPSHOT_VERSION: u8 = 5;
+const ERR_SNAPSHOT_GEOMETRY: u8 = 6;
+const ERR_SNAPSHOT_CHECKSUM: u8 = 7;
+const ERR_SNAPSHOT_CORRUPT: u8 = 8;
 
 // ---- frame I/O ----
 
@@ -272,6 +286,25 @@ impl Enc {
                 self.str(name);
                 self.u64(*depth as u64);
             }
+            GbfError::SnapshotVersion { found, supported } => {
+                self.u8(ERR_SNAPSHOT_VERSION);
+                self.u32(*found);
+                self.u32(*supported);
+            }
+            GbfError::SnapshotGeometry(msg) => {
+                self.u8(ERR_SNAPSHOT_GEOMETRY);
+                self.str(msg);
+            }
+            GbfError::SnapshotChecksum { shard, expected, found } => {
+                self.u8(ERR_SNAPSHOT_CHECKSUM);
+                self.u64(*shard as u64);
+                self.u64(*expected);
+                self.u64(*found);
+            }
+            GbfError::SnapshotCorrupt(msg) => {
+                self.u8(ERR_SNAPSHOT_CORRUPT);
+                self.str(msg);
+            }
         }
     }
 }
@@ -434,6 +467,14 @@ impl<'a> Dec<'a> {
             ERR_INVALID_CONFIG => GbfError::InvalidConfig(self.str()?),
             ERR_BACKEND => GbfError::Backend(self.str()?),
             ERR_OVERLOADED => GbfError::Overloaded { name: self.str()?, depth: self.usize()? },
+            ERR_SNAPSHOT_VERSION => GbfError::SnapshotVersion { found: self.u32()?, supported: self.u32()? },
+            ERR_SNAPSHOT_GEOMETRY => GbfError::SnapshotGeometry(self.str()?),
+            ERR_SNAPSHOT_CHECKSUM => GbfError::SnapshotChecksum {
+                shard: self.usize()?,
+                expected: self.u64()?,
+                found: self.u64()?,
+            },
+            ERR_SNAPSHOT_CORRUPT => GbfError::SnapshotCorrupt(self.str()?),
             t => bail!("unknown error tag {t:#04x}"),
         })
     }
@@ -490,6 +531,18 @@ pub fn encode_request(request_id: u64, req: &Request) -> Vec<u8> {
             e.keys(keys);
             e
         }
+        Request::Snapshot { name, dir } => {
+            let mut e = Enc::envelope(request_id, REQ_SNAPSHOT);
+            e.str(name);
+            e.str(dir);
+            e
+        }
+        Request::Restore { name, dir } => {
+            let mut e = Enc::envelope(request_id, REQ_RESTORE);
+            e.str(name);
+            e.str(dir);
+            e
+        }
     };
     std::mem::take(&mut e.buf)
 }
@@ -517,6 +570,8 @@ pub fn decode_request(payload: &[u8]) -> Result<(u64, Request)> {
         REQ_STATS => Request::Stats { name: d.str()? },
         REQ_ADD_BULK => Request::AddBulk { name: d.str()?, instance: d.u64()?, keys: d.keys()? },
         REQ_QUERY_BULK => Request::QueryBulk { name: d.str()?, instance: d.u64()?, keys: d.keys()? },
+        REQ_SNAPSHOT => Request::Snapshot { name: d.str()?, dir: d.str()? },
+        REQ_RESTORE => Request::Restore { name: d.str()?, dir: d.str()? },
         t => bail!("unknown request tag {t:#04x}"),
     };
     d.finish()?;
@@ -640,6 +695,24 @@ mod tests {
     }
 
     #[test]
+    fn persistence_requests_round_trip() {
+        match rt_req(Request::Snapshot { name: "warm".into(), dir: "/var/lib/gbf/warm".into() }).1 {
+            Request::Snapshot { name, dir } => {
+                assert_eq!(name, "warm");
+                assert_eq!(dir, "/var/lib/gbf/warm");
+            }
+            other => panic!("{other:?}"),
+        }
+        match rt_req(Request::Restore { name: "warm".into(), dir: "rel/path".into() }).1 {
+            Request::Restore { name, dir } => {
+                assert_eq!(name, "warm");
+                assert_eq!(dir, "rel/path");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
     fn spec_without_queue_bound_round_trips() {
         match rt_req(Request::Create { name: "n".into(), spec: FilterSpec::default() }).1 {
             Request::Create { spec, .. } => assert_eq!(spec.max_queue_depth, None),
@@ -691,6 +764,10 @@ mod tests {
             GbfError::InvalidConfig("k = 0".into()),
             GbfError::Backend("shard 3 panicked".into()),
             GbfError::Overloaded { name: "hot".into(), depth: 123_456 },
+            GbfError::SnapshotVersion { found: 7, supported: 1 },
+            GbfError::SnapshotGeometry("shard 1 declares 17 words".into()),
+            GbfError::SnapshotChecksum { shard: 5, expected: u64::MAX, found: 0 },
+            GbfError::SnapshotCorrupt("MANIFEST.json truncated".into()),
         ];
         for e in errors {
             match rt_resp(Response::Err(e.clone())).1 {

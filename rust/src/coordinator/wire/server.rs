@@ -3,9 +3,12 @@
 //! One accept thread; per connection, one **reader** thread and one
 //! **completer** thread:
 //!
-//! * the reader decodes frames and executes **admin** requests
-//!   (create/drop/list/stats) inline — they only touch the catalog lock,
-//!   so their replies go out immediately;
+//! * the reader decodes frames and executes cheap **admin** requests
+//!   (drop/list/stats) inline — they only touch the catalog lock, so
+//!   their replies go out immediately; create/snapshot/restore run on
+//!   short-lived worker threads so engine construction and snapshot disk
+//!   I/O never stall the reader (snapshot/restore paths resolve
+//!   server-side — the protocol ships names, not filter bytes);
 //! * **data-plane** requests (add_bulk/query_bulk) are submitted to the
 //!   namespace (yielding a [`Ticket`](crate::coordinator::Ticket)) and
 //!   handed to the completer, which polls the in-flight tickets and
@@ -28,6 +31,7 @@
 
 use std::io::BufReader;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
@@ -196,6 +200,42 @@ fn send(writer: &Arc<Mutex<TcpStream>>, id: u64, resp: &Response) -> std::io::Re
     write_frame(&mut *w, &payload)
 }
 
+/// Run `work` on a short-lived worker thread and send its reply under
+/// the shared writer lock — the pattern for admin requests that can be
+/// expensive (create's engine construction, snapshot/restore disk I/O)
+/// and must not stall the connection reader: every other pipelined
+/// request keeps flowing while the work runs. The reply may therefore be
+/// reordered relative to later requests; request ids make that safe. If
+/// the thread cannot even be spawned, a typed error reply is sent
+/// inline.
+fn run_on_worker(
+    writer: &Arc<Mutex<TcpStream>>,
+    id: u64,
+    work: impl FnOnce() -> Response + Send + 'static,
+) -> std::io::Result<()> {
+    let reply_writer = Arc::clone(writer);
+    let spawned = std::thread::Builder::new().name("gbf-wire-worker".into()).spawn(move || {
+        let _ = send(&reply_writer, id, &work());
+    });
+    match spawned {
+        Ok(_) => Ok(()),
+        Err(e) => {
+            let err = GbfError::Backend(format!("admin worker spawn failed: {e}"));
+            send(writer, id, &Response::Err(err))
+        }
+    }
+}
+
+/// Restore under the same total-bytes budget as remote create
+/// ([`MAX_REMOTE_FILTER_BYTES`]): the cap rides the restore's own
+/// manifest read (`restore_with_cap`), so an oversized snapshot is
+/// refused before any shard allocation — a well-formed 100-byte frame
+/// still cannot make the server commit unbounded memory, and there is no
+/// check-then-reopen gap for the manifest to change in.
+fn restore_capped(service: &FilterService, name: &str, dir: &str) -> Result<u64, GbfError> {
+    service.restore_with_cap(name, Path::new(dir), Some(MAX_REMOTE_FILTER_BYTES)).map(|h| h.instance())
+}
+
 /// Completer: poll in-flight data-plane tickets and write each reply as
 /// soon as ITS ticket resolves — a stalled namespace's ticket must not
 /// head-of-line-block another namespace's finished reply on the same
@@ -259,13 +299,10 @@ fn handle_conn(stream: TcpStream, service: Arc<FilterService>) -> Result<()> {
         };
         match req {
             // ---- admin plane ----
-            // Create runs on its own short-lived thread: engine
-            // construction can be expensive (multi-GiB shard allocation,
-            // PJRT artifact loading) and must not stall this reader —
-            // every other pipelined request on the connection keeps
-            // flowing while the namespace builds. The reply (Created,
-            // with the new instance id) may therefore be reordered
-            // relative to later requests; ids make that safe.
+            // Create, Snapshot, and Restore run on short-lived worker
+            // threads (see `run_on_worker`): engine construction can be
+            // multi-GiB-expensive and snapshot/restore do real disk I/O,
+            // none of which may stall this reader.
             Request::Create { name, spec } => {
                 let total_bytes = spec.config.size_bytes().saturating_mul(spec.shards.max(1) as u64);
                 if total_bytes > MAX_REMOTE_FILTER_BYTES {
@@ -277,18 +314,27 @@ fn handle_conn(stream: TcpStream, service: Arc<FilterService>) -> Result<()> {
                     continue;
                 }
                 let service = Arc::clone(&service);
-                let reply_writer = Arc::clone(&writer);
-                let spawned = std::thread::Builder::new().name("gbf-wire-create".into()).spawn(move || {
-                    let resp = match service.create_filter_spec(&name, spec) {
-                        Ok(h) => Response::Created { instance: h.instance() },
-                        Err(e) => Response::Err(e),
-                    };
-                    let _ = send(&reply_writer, id, &resp);
-                });
-                if let Err(e) = spawned {
-                    let e = GbfError::Backend(format!("create worker spawn failed: {e}"));
-                    send(&writer, id, &Response::Err(e))?;
-                }
+                run_on_worker(&writer, id, move || match service.create_filter_spec(&name, spec) {
+                    Ok(h) => Response::Created { instance: h.instance() },
+                    Err(e) => Response::Err(e),
+                })?;
+            }
+            // Snapshot/Restore resolve their paths SERVER-side: the
+            // protocol ships names and paths, never filter bytes — a
+            // snapshot can dwarf MAX_FRAME.
+            Request::Snapshot { name, dir } => {
+                let service = Arc::clone(&service);
+                run_on_worker(&writer, id, move || match service.snapshot(&name, Path::new(&dir)) {
+                    Ok(()) => Response::Ok,
+                    Err(e) => Response::Err(e),
+                })?;
+            }
+            Request::Restore { name, dir } => {
+                let service = Arc::clone(&service);
+                run_on_worker(&writer, id, move || match restore_capped(&service, &name, &dir) {
+                    Ok(instance) => Response::Created { instance },
+                    Err(e) => Response::Err(e),
+                })?;
             }
             Request::Drop { name } => {
                 let resp = match service.drop_filter(&name) {

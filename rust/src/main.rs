@@ -65,16 +65,22 @@ fn print_usage() {
            gups                         random-access speed-of-light\n  \
            serve [--filters name:variant:<N>bits,...] [--requests N]\n  \
                  [--backend native|pjrt] [--shards S] [--batch B] [--max-wait-us U]\n  \
-                 [--max-queue-depth D] [--listen addr:port]\n  \
+                 [--max-queue-depth D] [--listen addr:port] [--state-dir dir]\n  \
            client <addr> list\n  \
            client <addr> create name:variant:<N>bits [--shards S] [--max-queue-depth D]\n  \
            client <addr> drop <name> | stats <name>\n  \
            client <addr> add <name> (--keys 1,2,3 | --count N [--seed S])\n  \
-           client <addr> query <name> (--keys 1,2,3 | --count N [--seed S])\n\n\
+           client <addr> query <name> (--keys 1,2,3 | --count N [--seed S])\n  \
+           client <addr> snapshot <name> <server-side-dir>\n  \
+           client <addr> restore <name> <server-side-dir>\n\n\
          serve hosts one namespace per --filters entry on a FilterService,\n\
          e.g. --filters hot:sbf:23bits,cold:bbf:20bits; with --listen it\n\
          serves the same catalog over the wire protocol instead of running\n\
-         the local demo workload, and `gbf client` drives it remotely"
+         the local demo workload, and `gbf client` drives it remotely.\n\
+         --state-dir makes namespaces durable: every snapshot under the\n\
+         directory is restored at boot (one subdirectory per namespace),\n\
+         and the demo path snapshots every namespace back on shutdown; a\n\
+         wire server snapshots on demand via `gbf client snapshot`"
     );
 }
 
@@ -240,6 +246,7 @@ fn parse_filters_flag(spec: &str) -> Result<Vec<(String, FilterConfig)>> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.check_known(&[
         "filters", "requests", "backend", "shards", "batch", "max-wait-us", "max-queue-depth", "listen",
+        "state-dir",
     ])?;
     let requests = args.get_parse("requests", 100_000usize)?;
     let backend_kind = args.get_or("backend", "native");
@@ -255,12 +262,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let policy = BatchPolicy { max_batch: batch, max_wait: std::time::Duration::from_micros(max_wait_us) };
     let service = Arc::new(FilterService::new());
 
+    // --state-dir: restore-all-on-boot — every manifest-bearing
+    // subdirectory is one namespace snapshot; restored names win over
+    // (are skipped by) the --filters creation loop below
+    let state_dir = args.get("state-dir").map(PathBuf::from);
+    let mut restored: Vec<String> = Vec::new();
+    if let Some(dir) = &state_dir {
+        if dir.is_dir() {
+            let mut entries = std::fs::read_dir(dir)
+                .with_context(|| format!("reading --state-dir {dir:?}"))?
+                .collect::<std::io::Result<Vec<_>>>()?;
+            entries.sort_by_key(|e| e.file_name());
+            for entry in entries {
+                let path = entry.path();
+                let Ok(name) = entry.file_name().into_string() else { continue };
+                // dot-prefixed siblings are the persist layer's temp /
+                // parked dirs (possibly manifest-bearing crash leftovers),
+                // never namespaces — the writer sweeps or recovers them
+                if name.starts_with('.') || !path.join(gbf::coordinator::persist::MANIFEST_FILE).is_file() {
+                    continue;
+                }
+                let handle = service.restore(&name, &path)?;
+                let keys = handle.stats().metrics.adds;
+                println!("restored namespace {name:?} ({keys} keys) from {}", path.display());
+                restored.push(name);
+            }
+        }
+    }
+
     // keep the engine actor alive for the whole serve session
     let _engine_holder;
     match backend_kind {
         // native: one sharded registry per namespace
         "native" => {
             for (name, cfg) in &specs {
+                if restored.contains(name) {
+                    continue;
+                }
                 let spec = FilterSpec { config: *cfg, shards, policy: policy.clone(), max_queue_depth };
                 service.create_filter_spec(name, spec)?;
             }
@@ -274,6 +312,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let client = actor.client();
             _engine_holder = actor;
             for (name, cfg) in &specs {
+                if restored.contains(name) {
+                    continue;
+                }
                 let cfg = *cfg;
                 let client = client.clone();
                 let manifest = manifest.clone();
@@ -355,6 +396,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let n = space_optimal_n(cfg.m_bits(), cfg.k);
         println!("  (space-optimal capacity: {n} keys)");
     }
+
+    // --state-dir: snapshot-all-on-shutdown — every live namespace
+    // (created or restored) lands as one crash-safe snapshot directory,
+    // so the next `serve --state-dir` boots warm
+    if let Some(dir) = &state_dir {
+        let names = service.list_filters();
+        for name in &names {
+            service.snapshot(name, &dir.join(name))?;
+        }
+        println!("snapshotted {} namespace(s) to {}", names.len(), dir.display());
+    }
     Ok(())
 }
 
@@ -415,6 +467,27 @@ fn cmd_client(args: &Args) -> Result<()> {
             let t0 = Instant::now();
             handle.add_bulk(&keys).wait()?;
             println!("added {} keys to {name} in {:?}", keys.len(), t0.elapsed());
+        }
+        "snapshot" => {
+            // the path is SERVER-side: the wire ships names, not bytes
+            let name = pos.next().context("snapshot needs <name> <server-side-dir>")?;
+            let dir = pos.next().context("snapshot needs <name> <server-side-dir>")?;
+            let t0 = Instant::now();
+            client.snapshot(name, dir)?;
+            println!("snapshotted {name} to server-side {dir} in {:?}", t0.elapsed());
+        }
+        "restore" => {
+            let name = pos.next().context("restore needs <name> <server-side-dir>")?;
+            let dir = pos.next().context("restore needs <name> <server-side-dir>")?;
+            let t0 = Instant::now();
+            let handle = client.restore(name, dir)?;
+            let stats = handle.stats()?;
+            println!(
+                "restored {name} from server-side {dir} in {:?} ({} keys, {} shard(s))",
+                t0.elapsed(),
+                stats.metrics.adds,
+                stats.num_shards
+            );
         }
         "query" => {
             let name = pos.next().context("query needs <name>")?;

@@ -5,7 +5,8 @@
 //! equivalence**: the same generic test body, written against
 //! `dyn FilterApi`, passes over the in-process `FilterService` and a
 //! loopback `RemoteFilterService` with identical answers and identical
-//! typed errors.
+//! typed errors — including the durable `snapshot`/`restore` pair
+//! (whose torture suite lives in `rust/tests/persistence.rs`).
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -475,8 +476,63 @@ fn drive_api(api: &dyn FilterApi) -> (Vec<bool>, gbf::coordinator::NamespaceStat
     }
     assert!(!reborn.query(42).wait().unwrap(), "reborn namespace starts empty");
     api.drop_filter("eq").unwrap();
+
+    // snapshot/restore: the SAME body persists a namespace, drops it,
+    // and warm-starts it — answers, counters, and stale-handle
+    // semantics must be identical on both transports (paths resolve
+    // server-side; loopback makes that this machine either way)
+    let snap_dir = scratch_dir("drive-api-snap");
+    let durable: Box<dyn FilterDataPlane> = api.create_filter_spec("eq-durable", spec(13, 2, 1024, 150)).unwrap();
+    let snap_keys = unique_keys(3_000, 0xE3);
+    durable.add_bulk(&snap_keys).wait().unwrap();
+    let mut snap_probe = snap_keys.clone();
+    snap_probe.extend(unique_keys(2_000, 0xE4));
+    let pre_restore = durable.query_bulk(&snap_probe).wait().unwrap();
+    api.snapshot("eq-durable", &snap_dir).unwrap();
+    // snapshot of a missing namespace is a typed miss
+    match api.snapshot("nope", &snap_dir) {
+        Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "nope"),
+        other => panic!("expected NoSuchFilter, got {other:?}"),
+    }
+    // restore onto a live name is refused like a duplicate create
+    match api.restore("eq-durable", &snap_dir) {
+        Err(GbfError::FilterExists(n)) => assert_eq!(n, "eq-durable"),
+        Err(other) => panic!("expected FilterExists, got {other:?}"),
+        Ok(_) => panic!("restore onto a live name must fail"),
+    }
+    api.drop_filter("eq-durable").unwrap();
+    let warm = api.restore("eq-durable", &snap_dir).unwrap();
+    // the pre-restore handle is stale on both transports
+    match durable.query(snap_keys[0]).wait() {
+        Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "eq-durable"),
+        other => panic!("pre-restore stale handle must fail typed, got {other:?}"),
+    }
+    let post_restore = warm.query_bulk(&snap_probe).wait().unwrap();
+    assert_eq!(pre_restore, post_restore, "restored namespace answers identically via {}", warm.name());
+    assert_eq!(api.stats("eq-durable").unwrap().metrics.adds, 3_000, "restored key counters");
+    // restoring garbage is a typed refusal on both transports
+    match api.restore("eq-fresh", &snap_dir.join("missing")) {
+        Err(GbfError::SnapshotCorrupt(_)) => {}
+        Err(other) => panic!("expected SnapshotCorrupt, got {other:?}"),
+        Ok(_) => panic!("restore from a missing snapshot must fail"),
+    }
+    api.drop_filter("eq-durable").unwrap();
+    std::fs::remove_dir_all(&snap_dir).ok();
+
     assert!(api.list_filters().unwrap().is_empty());
     (hits, stats)
+}
+
+/// Unique scratch directory (drive_api runs once per transport; the
+/// snapshot paths must not collide).
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "gbf-{tag}-{}-{}",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ))
 }
 
 #[test]

@@ -1,0 +1,375 @@
+//! Persistence torture tests: the durable-namespace subsystem
+//! (`coordinator::persist` + `snapshot`/`restore` on the admin plane)
+//! under friendly and hostile conditions.
+//!
+//! * **Round trip, property-tested**: random geometry across all five
+//!   filter variants × both word sizes × 1/2/4/8 shards, random fill —
+//!   snapshot → restore must be the identity (byte-identical words,
+//!   identical query answers down to the false positives).
+//! * **Corruption matrix**: truncation, bit flips, version bumps, and
+//!   geometry edits must each come back as the *right* typed
+//!   [`GbfError`] — never a panic, never catalog residue, never a
+//!   wedged service.
+//! * **Crash safety**: a writer killed between shard files and the
+//!   manifest publish leaves the destination fully old (or absent) —
+//!   a restore never observes a torn state.
+//! * **Restart acceptance**: a multi-namespace catalog snapshotted,
+//!   "restarted" (fresh `FilterService`), and restored over BOTH
+//!   transports with byte-identical state.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use gbf::coordinator::persist::{shard_file_name, SnapshotWriter, MANIFEST_FILE};
+use gbf::coordinator::{FilterService, GbfError, RemoteFilterService, ShardedRegistry, WireServer};
+use gbf::filter::params::{FilterConfig, Variant};
+use gbf::infra::prop::{check, Gen};
+use gbf::workload::keygen::unique_keys;
+
+/// Fresh scratch directory per call (parallel tests must not collide).
+fn scratch(tag: &str) -> PathBuf {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "gbf-persist-{tag}-{}-{}",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+// ---- property-based round trip across the whole config grid ----
+
+/// Valid geometry shapes covering all five variants × both word sizes
+/// (variant, word_bits, block_bits, k, z).
+const SHAPES: [(Variant, u32, u32, u32, u32); 10] = [
+    (Variant::Cbf, 64, 256, 8, 1),
+    (Variant::Cbf, 32, 256, 8, 1),
+    (Variant::Bbf, 64, 256, 8, 1),
+    (Variant::Bbf, 32, 128, 8, 1),
+    (Variant::Rbbf, 64, 64, 16, 1),
+    (Variant::Rbbf, 32, 32, 8, 1),
+    (Variant::Sbf, 64, 256, 16, 1),
+    (Variant::Sbf, 32, 128, 8, 1),
+    (Variant::Csbf, 64, 512, 16, 2),
+    (Variant::Csbf, 32, 256, 8, 2),
+];
+
+#[test]
+fn property_snapshot_restore_is_the_identity() {
+    check("snapshot-restore-identity", 12, |g: &mut Gen| {
+        let &(variant, word_bits, block_bits, k, z) = g.choose(&SHAPES);
+        let config = FilterConfig {
+            variant,
+            word_bits,
+            block_bits,
+            k,
+            z,
+            log2_m_words: g.range(10, 13) as u32,
+            ..Default::default()
+        }
+        .validate()
+        .expect("shape table only holds valid configs");
+        let shards = g.pow2(0, 3) as usize; // 1 / 2 / 4 / 8
+        let keys = g.keys(g.range(300, 2_000) as usize);
+        let misses = unique_keys(1_000, g.u64() | 1);
+
+        let dir = scratch("prop");
+        let original = FilterService::new();
+        let h = original.create_filter("prop", config, shards).unwrap();
+        h.add_bulk(&keys).wait().unwrap();
+        original.snapshot("prop", &dir).unwrap();
+
+        let restored = FilterService::new();
+        let r = restored.restore("prop", &dir).unwrap();
+        // byte-identical state, shard for shard
+        assert_eq!(r.snapshot_words(), h.snapshot_words(), "{}/{shards} shards", config.name());
+        assert_eq!(r.num_shards(), shards);
+        // identical answers: every inserted key hits, and the miss probes
+        // agree down to the false positives
+        assert!(r.query_bulk(&keys).wait().unwrap().iter().all(|&x| x), "{}", config.name());
+        assert_eq!(
+            h.query_bulk(&misses).wait().unwrap(),
+            r.query_bulk(&misses).wait().unwrap(),
+            "identical false-positive pattern for {}",
+            config.name()
+        );
+        // key counters survive
+        assert_eq!(restored.stats("prop").unwrap().metrics.adds, keys.len() as u64);
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+// ---- corruption matrix: every mutilation gets its typed refusal ----
+
+/// A populated two-shard snapshot to mutilate (pristine per test case).
+fn pristine_snapshot(dir: &Path) -> Vec<u64> {
+    let config = FilterConfig { log2_m_words: 12, ..Default::default() };
+    let service = FilterService::new();
+    let h = service.create_filter("victim", config, 2).unwrap();
+    h.add_bulk(&unique_keys(3_000, 0xC0)).wait().unwrap();
+    service.snapshot("victim", dir).unwrap();
+    h.snapshot_words()
+}
+
+fn copy_snapshot(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+    }
+}
+
+fn edit_manifest(dir: &Path, from: &str, to: &str) {
+    let path = dir.join(MANIFEST_FILE);
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains(from), "manifest must contain {from:?} to corrupt it: {text}");
+    std::fs::write(&path, text.replace(from, to)).unwrap();
+}
+
+#[test]
+fn corruption_matrix_returns_the_right_typed_error() {
+    let pristine = scratch("matrix-pristine");
+    let words = pristine_snapshot(&pristine);
+
+    // (tag, mutilation, check on the resulting error)
+    type Check = fn(&GbfError) -> bool;
+    let cases: Vec<(&str, Box<dyn Fn(&Path)>, Check)> = vec![
+        (
+            "truncated-shard",
+            Box::new(|d: &Path| {
+                let p = d.join(shard_file_name(0));
+                let mut bytes = std::fs::read(&p).unwrap();
+                bytes.truncate(bytes.len() / 2);
+                std::fs::write(&p, bytes).unwrap();
+            }),
+            |e| matches!(e, GbfError::SnapshotCorrupt(_)),
+        ),
+        (
+            "bit-flipped-shard",
+            Box::new(|d: &Path| {
+                let p = d.join(shard_file_name(1));
+                let mut bytes = std::fs::read(&p).unwrap();
+                let mid = bytes.len() / 2;
+                bytes[mid] ^= 0x10;
+                std::fs::write(&p, bytes).unwrap();
+            }),
+            |e| matches!(e, GbfError::SnapshotChecksum { shard: 1, .. }),
+        ),
+        (
+            "version-bumped-manifest",
+            Box::new(|d: &Path| edit_manifest(d, "\"format_version\":1", "\"format_version\":99")),
+            |e| matches!(e, GbfError::SnapshotVersion { found: 99, supported: 1 }),
+        ),
+        (
+            "geometry-mutated-manifest",
+            Box::new(|d: &Path| edit_manifest(d, "\"log2_m_words\":12", "\"log2_m_words\":11")),
+            |e| matches!(e, GbfError::SnapshotGeometry(_)),
+        ),
+        (
+            "missing-shard-file",
+            Box::new(|d: &Path| std::fs::remove_file(d.join(shard_file_name(1))).unwrap()),
+            |e| matches!(e, GbfError::SnapshotCorrupt(_)),
+        ),
+        (
+            "garbage-manifest",
+            Box::new(|d: &Path| std::fs::write(d.join(MANIFEST_FILE), b"}{ not json").unwrap()),
+            |e| matches!(e, GbfError::SnapshotCorrupt(_)),
+        ),
+    ];
+
+    for (tag, mutilate, is_right) in cases {
+        let dir = scratch(tag);
+        copy_snapshot(&pristine, &dir);
+        mutilate(&dir);
+        let service = FilterService::new();
+        let err = service.restore("victim", &dir).expect_err(tag);
+        assert!(is_right(&err), "{tag}: wrong error variant {err:?}");
+        // typed refusal, no residue: the catalog is empty and fully usable
+        assert!(service.list_filters().is_empty(), "{tag}: failed restore left residue");
+        let h = service.create_filter("alive", FilterConfig { log2_m_words: 10, ..Default::default() }, 1).unwrap();
+        h.add(7).wait().unwrap();
+        assert!(h.query(7).wait().unwrap(), "{tag}: service wedged after refusal");
+        // and the pristine snapshot still restores fine on the same service
+        let r = service.restore("victim", &pristine).unwrap();
+        assert_eq!(r.snapshot_words(), words, "{tag}: pristine copy unaffected");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    std::fs::remove_dir_all(&pristine).ok();
+}
+
+// ---- crash safety: fully old or fully new, never torn ----
+
+#[test]
+fn crash_mid_snapshot_leaves_old_or_nothing() {
+    let cfg = FilterConfig { log2_m_words: 11, ..Default::default() };
+    let reg = ShardedRegistry::new(cfg, 2).unwrap();
+    reg.bulk_add(&unique_keys(2_000, 0xD0)).unwrap();
+    let dir = scratch("crash");
+
+    // crash before the FIRST snapshot ever commits: destination absent
+    let mut w = SnapshotWriter::begin(&dir, "crash", &cfg, 2).unwrap();
+    w.write_shard(0, &reg.snapshot_shard(0)).unwrap();
+    drop(w); // the "kill" — between shard files and the manifest publish
+    assert!(!dir.exists(), "a never-committed snapshot must not materialize");
+    assert!(matches!(FilterService::new().restore("crash", &dir), Err(GbfError::SnapshotCorrupt(_))));
+
+    // publish v1 for real
+    let mut w = SnapshotWriter::begin(&dir, "crash", &cfg, 2).unwrap();
+    for i in 0..2 {
+        w.write_shard(i, &reg.snapshot_shard(i)).unwrap();
+    }
+    w.commit(2_000, 0).unwrap();
+    let v1 = reg.snapshot_concat();
+
+    // the state moves on; an overwriting snapshot crashes mid-write
+    reg.bulk_add(&unique_keys(2_000, 0xD1)).unwrap();
+    let mut w = SnapshotWriter::begin(&dir, "crash", &cfg, 2).unwrap();
+    w.write_shard(0, &reg.snapshot_shard(0)).unwrap();
+    drop(w); // kill between shard files and manifest
+    let svc = FilterService::new();
+    assert_eq!(svc.restore("crash", &dir).unwrap().snapshot_words(), v1, "fully old after mid-shard crash");
+
+    // crash AFTER the manifest is written but before the publish rename:
+    // still fully old
+    let mut w = SnapshotWriter::begin(&dir, "crash", &cfg, 2).unwrap();
+    for i in 0..2 {
+        w.write_shard(i, &reg.snapshot_shard(i)).unwrap();
+    }
+    w.commit_crash_before_publish(4_000, 0).unwrap();
+    let svc = FilterService::new();
+    assert_eq!(svc.restore("crash", &dir).unwrap().snapshot_words(), v1, "fully old after pre-publish crash");
+
+    // a later writer sweeps the wreckage and publishes v2 atomically
+    let mut w = SnapshotWriter::begin(&dir, "crash", &cfg, 2).unwrap();
+    for i in 0..2 {
+        w.write_shard(i, &reg.snapshot_shard(i)).unwrap();
+    }
+    w.commit(4_000, 0).unwrap();
+    let svc = FilterService::new();
+    assert_eq!(svc.restore("crash", &dir).unwrap().snapshot_words(), reg.snapshot_concat(), "fully new after commit");
+
+    // crash BETWEEN the overwrite's two renames: the destination was
+    // parked to `.old` and never replaced — the next restore recovers
+    // the last committed snapshot instead of finding nothing
+    let old = dir.parent().unwrap().join(format!(".{}.old", dir.file_name().unwrap().to_str().unwrap()));
+    std::fs::rename(&dir, &old).unwrap();
+    let svc = FilterService::new();
+    assert_eq!(
+        svc.restore("crash", &dir).unwrap().snapshot_words(),
+        reg.snapshot_concat(),
+        "parked snapshot recovered after an interrupted swap"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---- restart acceptance: ≥2 namespaces, both transports ----
+
+#[test]
+fn multi_namespace_restart_restores_over_both_transports() {
+    let alpha_cfg = FilterConfig { log2_m_words: 13, ..Default::default() };
+    let beta_cfg = FilterConfig { variant: Variant::Bbf, log2_m_words: 12, ..Default::default() };
+    let alpha_keys = unique_keys(8_000, 0xAA);
+    let beta_keys = unique_keys(2_000, 0xBB);
+    let probes = unique_keys(4_000, 0xCC);
+    let state = scratch("restart");
+
+    // boot 1: populate a two-tenant catalog and snapshot it
+    let boot1 = FilterService::new();
+    let alpha = boot1.create_filter("alpha", alpha_cfg, 4).unwrap();
+    let beta = boot1.create_filter("beta", beta_cfg, 2).unwrap();
+    alpha.add_bulk(&alpha_keys).wait().unwrap();
+    beta.add_bulk(&beta_keys).wait().unwrap();
+    boot1.snapshot("alpha", &state.join("alpha")).unwrap();
+    boot1.snapshot("beta", &state.join("beta")).unwrap();
+    let alpha_words = alpha.snapshot_words();
+    let beta_words = beta.snapshot_words();
+    let alpha_probe_answers = alpha.query_bulk(&probes).wait().unwrap();
+    let beta_probe_answers = beta.query_bulk(&probes).wait().unwrap();
+    drop(boot1); // the restart
+
+    // boot 2, in-process transport
+    let boot2 = FilterService::new();
+    let a2 = boot2.restore("alpha", &state.join("alpha")).unwrap();
+    let b2 = boot2.restore("beta", &state.join("beta")).unwrap();
+    assert_eq!(a2.snapshot_words(), alpha_words, "alpha byte-identical in-process");
+    assert_eq!(b2.snapshot_words(), beta_words, "beta byte-identical in-process");
+    assert!(a2.query_bulk(&alpha_keys).wait().unwrap().iter().all(|&x| x));
+    assert!(b2.query_bulk(&beta_keys).wait().unwrap().iter().all(|&x| x));
+    assert_eq!(a2.query_bulk(&probes).wait().unwrap(), alpha_probe_answers, "identical probe answers");
+    assert_eq!(b2.query_bulk(&probes).wait().unwrap(), beta_probe_answers);
+    assert_eq!(boot2.stats("alpha").unwrap().metrics.adds, 8_000);
+    assert_eq!(boot2.stats("beta").unwrap().metrics.adds, 2_000);
+
+    // boot 2', wire transport: restore by name, paths resolve server-side
+    let catalog = Arc::new(FilterService::new());
+    let server = WireServer::bind(Arc::clone(&catalog), "127.0.0.1:0").unwrap();
+    let client = RemoteFilterService::connect(server.local_addr()).unwrap();
+    let ra = client.restore("alpha", state.join("alpha").to_str().unwrap()).unwrap();
+    let rb = client.restore("beta", state.join("beta").to_str().unwrap()).unwrap();
+    assert_eq!(client.list_filters().unwrap(), vec!["alpha".to_string(), "beta".to_string()]);
+    assert!(ra.query_bulk(&alpha_keys).wait().unwrap().iter().all(|&x| x), "no false negatives over the wire");
+    assert_eq!(ra.query_bulk(&probes).wait().unwrap(), alpha_probe_answers, "identical answers over the wire");
+    assert_eq!(rb.query_bulk(&probes).wait().unwrap(), beta_probe_answers);
+    assert_eq!(ra.stats().unwrap().metrics.adds, 8_000, "seeded key counters travel the wire");
+    // byte identity checked against the server-side catalog
+    assert_eq!(catalog.handle("alpha").unwrap().snapshot_words(), alpha_words, "alpha byte-identical over wire");
+    assert_eq!(catalog.handle("beta").unwrap().snapshot_words(), beta_words, "beta byte-identical over wire");
+
+    // a remote snapshot of the restored namespace round-trips too
+    let resnap = scratch("resnap");
+    client.snapshot("alpha", resnap.to_str().unwrap()).unwrap();
+    let boot3 = FilterService::new();
+    assert_eq!(boot3.restore("alpha", &resnap).unwrap().snapshot_words(), alpha_words, "second generation identical");
+
+    std::fs::remove_dir_all(&state).ok();
+    std::fs::remove_dir_all(&resnap).ok();
+}
+
+// ---- typed admin errors around the lifecycle ----
+
+#[test]
+fn restore_lifecycle_errors_are_typed() {
+    let dir = scratch("lifecycle");
+    let service = FilterService::new();
+    let cfg = FilterConfig { log2_m_words: 10, ..Default::default() };
+    service.create_filter("live", cfg, 1).unwrap();
+    service.snapshot("live", &dir).unwrap();
+
+    // restore onto a live name: FilterExists, namespace untouched
+    assert_eq!(service.restore("live", &dir).unwrap_err(), GbfError::FilterExists("live".into()));
+    // snapshot of a missing namespace: NoSuchFilter
+    assert_eq!(service.snapshot("ghost", &dir).unwrap_err(), GbfError::NoSuchFilter("ghost".into()));
+    // restore from nowhere: SnapshotCorrupt
+    assert!(matches!(
+        service.restore("fresh", &scratch("nowhere")),
+        Err(GbfError::SnapshotCorrupt(_))
+    ));
+    // invalid namespace name is rejected before disk is touched
+    assert!(matches!(service.restore("bad:name", &dir), Err(GbfError::InvalidConfig(_))));
+
+    // a snapshot may be restored under a DIFFERENT name (migration)
+    let renamed = service.restore("live-copy", &dir).unwrap();
+    assert_eq!(renamed.name(), "live-copy");
+    assert_eq!(renamed.snapshot_words(), service.handle("live").unwrap().snapshot_words());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stale_handles_fail_after_restore_replaces_the_instance() {
+    let dir = scratch("stale");
+    let service = FilterService::new();
+    let cfg = FilterConfig { log2_m_words: 11, ..Default::default() };
+    let old = service.create_filter("ns", cfg, 2).unwrap();
+    old.add_bulk(&unique_keys(500, 5)).wait().unwrap();
+    service.snapshot("ns", &dir).unwrap();
+    service.drop_filter("ns").unwrap();
+    let fresh = service.restore("ns", &dir).unwrap();
+    // the pre-restore handle pins the dead instance
+    assert!(!old.is_live());
+    assert_eq!(old.query(1).wait().unwrap_err(), GbfError::NoSuchFilter("ns".into()));
+    assert_eq!(old.add(1).wait().unwrap_err(), GbfError::NoSuchFilter("ns".into()));
+    // while the restored instance serves (and is a different instance)
+    assert_ne!(old.instance(), fresh.instance(), "restore mints a fresh instance id");
+    assert!(fresh.query_bulk(&unique_keys(500, 5)).wait().unwrap().iter().all(|&x| x));
+    std::fs::remove_dir_all(&dir).ok();
+}
