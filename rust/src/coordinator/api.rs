@@ -22,6 +22,7 @@
 use std::path::Path;
 
 use crate::filter::params::FilterConfig;
+use crate::filter::AnswerBits;
 
 use super::error::GbfError;
 use super::service::{FilterHandle, FilterService, FilterSpec, NamespaceStats};
@@ -99,6 +100,11 @@ pub trait FilterDataPlane: Send + Sync {
 
     /// Look up a batch; the resolved `Vec<bool>` is in submission order.
     fn query_bulk(&self, keys: &[u64]) -> Ticket<Vec<bool>>;
+
+    /// Look up a batch in the kernels' native bit-packed form — the
+    /// zero-repack reply path (`query_bulk` is the convenience
+    /// unpacking). Identical answers on both transports.
+    fn query_bulk_bits(&self, keys: &[u64]) -> Ticket<AnswerBits>;
 }
 
 impl Clone for Box<dyn FilterDataPlane> {
@@ -162,6 +168,10 @@ impl FilterDataPlane for FilterHandle {
 
     fn query_bulk(&self, keys: &[u64]) -> Ticket<Vec<bool>> {
         FilterHandle::query_bulk(self, keys)
+    }
+
+    fn query_bulk_bits(&self, keys: &[u64]) -> Ticket<AnswerBits> {
+        FilterHandle::query_bulk_bits(self, keys)
     }
 }
 

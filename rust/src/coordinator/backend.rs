@@ -5,6 +5,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::filter::params::FilterConfig;
+use crate::filter::AnswerBits;
 use crate::runtime::actor::EngineClient;
 use crate::runtime::Manifest;
 
@@ -29,8 +30,10 @@ pub trait FilterBackend: Send + Sync {
     }
     /// Insert a batch of keys.
     fn bulk_add(&self, keys: &[u64]) -> Result<()>;
-    /// Look up a batch of keys.
-    fn bulk_contains(&self, keys: &[u64]) -> Result<Vec<bool>>;
+    /// Look up a batch of keys; answers come back **bit-packed** (bit `i`
+    /// answers `keys[i]`) — the form the kernels produce and the wire
+    /// codec ships, so the reply path never widens to `Vec<bool>`.
+    fn bulk_contains(&self, keys: &[u64]) -> Result<AnswerBits>;
     /// Current filter words (diagnostics / state hand-off). Sharded
     /// backends concatenate their shards in shard order.
     fn snapshot(&self) -> Vec<u64>;
@@ -99,8 +102,10 @@ impl FilterBackend for NativeBackend {
         self.registry.bulk_add(keys)
     }
 
-    fn bulk_contains(&self, keys: &[u64]) -> Result<Vec<bool>> {
-        self.registry.bulk_contains(keys)
+    fn bulk_contains(&self, keys: &[u64]) -> Result<AnswerBits> {
+        let mut out = AnswerBits::new();
+        self.registry.bulk_contains_bits(keys, &mut out)?;
+        Ok(out)
     }
 
     fn snapshot(&self) -> Vec<u64> {
@@ -189,8 +194,9 @@ impl FilterBackend for PjrtBackend {
         Ok(())
     }
 
-    fn bulk_contains(&self, keys: &[u64]) -> Result<Vec<bool>> {
-        let mut out = Vec::with_capacity(keys.len());
+    fn bulk_contains(&self, keys: &[u64]) -> Result<AnswerBits> {
+        let mut out = AnswerBits::with_len(keys.len());
+        let mut pos = 0;
         for chunk in keys.chunks(self.contains_arts.last().unwrap().0) {
             let (batch, name) = Self::pick(&self.contains_arts, chunk.len());
             let mut padded = chunk.to_vec();
@@ -199,7 +205,12 @@ impl FilterBackend for PjrtBackend {
                 .engine
                 .contains(name, self.state, padded)
                 .with_context(|| format!("pjrt contains via {name}"))?;
-            out.extend(hits[..chunk.len()].iter().map(|&b| b != 0));
+            for &b in &hits[..chunk.len()] {
+                if b != 0 {
+                    out.set_true(pos);
+                }
+                pos += 1;
+            }
         }
         Ok(out)
     }
@@ -227,9 +238,9 @@ mod tests {
         assert_eq!(be.num_shards(), 2);
         let keys = unique_keys(1000, 1);
         be.bulk_add(&keys).unwrap();
-        assert!(be.bulk_contains(&keys).unwrap().iter().all(|&b| b));
+        assert!(be.bulk_contains(&keys).unwrap().all());
         let absent = unique_keys(1000, 2);
-        let fp = be.bulk_contains(&absent).unwrap().iter().filter(|&&b| b).count();
+        let fp = be.bulk_contains(&absent).unwrap().count_ones();
         assert!(fp < 50, "fp = {fp}");
         // snapshot concatenates the two shards
         assert_eq!(be.snapshot().len(), 2 << 12);

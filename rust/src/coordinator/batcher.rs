@@ -21,6 +21,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::backend::FilterBackend;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::registry::panic_message;
+use crate::filter::AnswerBits;
 
 /// Batch formation policy.
 #[derive(Debug, Clone)]
@@ -47,7 +48,10 @@ pub struct BulkSink {
 }
 
 struct BulkState {
-    results: Vec<bool>,
+    /// Bit-packed per-key answers — the same form the kernels produce
+    /// and the wire codec ships, so a resolved sink hands the ticket an
+    /// [`AnswerBits`] it can forward without repacking.
+    results: AnswerBits,
     remaining: usize,
     error: Option<String>,
 }
@@ -64,7 +68,7 @@ impl BulkSink {
 
     fn build(n: usize, e2e: Option<(Arc<Metrics>, Instant)>) -> Arc<Self> {
         Arc::new(BulkSink {
-            state: Mutex::new(BulkState { results: vec![false; n], remaining: n, error: None }),
+            state: Mutex::new(BulkState { results: AnswerBits::with_len(n), remaining: n, error: None }),
             done: Condvar::new(),
             e2e,
         })
@@ -75,7 +79,7 @@ impl BulkSink {
     fn complete_run(&self, items: &[(usize, bool)], error: Option<&str>) {
         let mut st = self.state.lock().unwrap();
         for &(idx, hit) in items {
-            st.results[idx] = hit;
+            st.results.set(idx, hit);
         }
         if let Some(e) = error {
             st.error.get_or_insert_with(|| e.to_string());
@@ -95,16 +99,16 @@ impl BulkSink {
         self.state.lock().unwrap().remaining == 0
     }
 
-    fn take_result(st: &mut BulkState) -> anyhow::Result<Vec<bool>> {
+    fn take_result(st: &mut BulkState) -> anyhow::Result<AnswerBits> {
         if let Some(e) = st.error.take() {
             anyhow::bail!("{e}");
         }
         Ok(std::mem::take(&mut st.results))
     }
 
-    /// Block until every slot completed; returns the results. Must be
-    /// called at most once per sink (results move out).
-    pub fn wait(&self) -> anyhow::Result<Vec<bool>> {
+    /// Block until every slot completed; returns the bit-packed results.
+    /// Must be called at most once per sink (results move out).
+    pub fn wait(&self) -> anyhow::Result<AnswerBits> {
         let mut st = self.state.lock().unwrap();
         while st.remaining > 0 {
             st = self.done.wait(st).unwrap();
@@ -114,7 +118,7 @@ impl BulkSink {
 
     /// Bounded wait: `Some(results)` if everything completed within
     /// `timeout`, `None` otherwise (the sink stays valid to wait again).
-    pub fn wait_timeout(&self, timeout: Duration) -> Option<anyhow::Result<Vec<bool>>> {
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<anyhow::Result<AnswerBits>> {
         let deadline = Instant::now() + timeout;
         let mut st = self.state.lock().unwrap();
         while st.remaining > 0 {
@@ -271,23 +275,23 @@ fn execute_batch(batch: Vec<Pending>, backend: &dyn FilterBackend, metrics: &Met
     // with every outstanding ticket wedged
     let outcome = catch_unwind(AssertUnwindSafe(|| {
         if is_add {
-            backend.bulk_add(&keys).map(|()| vec![true; keys.len()])
+            backend.bulk_add(&keys).map(|()| AnswerBits::ones(keys.len()))
         } else {
             backend.bulk_contains(&keys)
         }
     }));
     let (hits, error) = match outcome {
         Ok(Ok(h)) => (h, None),
-        Ok(Err(e)) => (vec![false; keys.len()], Some(format!("{e:#}"))),
+        Ok(Err(e)) => (AnswerBits::with_len(keys.len()), Some(format!("{e:#}"))),
         Err(payload) => (
-            vec![false; keys.len()],
+            AnswerBits::with_len(keys.len()),
             Some(format!("backend panicked during batch: {}", panic_message(payload))),
         ),
     };
     let exec_ns = t0.elapsed().as_nanos() as u64;
     metrics.record_batch(is_add, keys.len() as u64, queue_wait_ns, exec_ns);
 
-    let mut iter = batch.into_iter().zip(hits).peekable();
+    let mut iter = batch.into_iter().zip(hits.iter()).peekable();
     let mut run: Vec<(usize, bool)> = Vec::new();
     loop {
         let Some((p, hit)) = iter.next() else { break };
@@ -344,11 +348,11 @@ mod tests {
         // path is a bulk of one)
         let add_sinks: Vec<Arc<BulkSink>> = keys.iter().map(|&k| submit_keys(&handle, true, &[k])).collect();
         for sink in add_sinks {
-            assert!(sink.wait().unwrap()[0]);
+            assert!(sink.wait().unwrap().get(0));
         }
         let query_sinks: Vec<Arc<BulkSink>> = keys.iter().map(|&k| submit_keys(&handle, false, &[k])).collect();
         for sink in query_sinks {
-            assert!(sink.wait().unwrap()[0], "no false negatives");
+            assert!(sink.wait().unwrap().get(0), "no false negatives");
         }
         let snap = metrics.snapshot();
         assert_eq!(snap.adds, 200);
@@ -364,7 +368,7 @@ mod tests {
             spawn_batcher(BatchPolicy { max_batch: 1 << 20, max_wait: Duration::from_millis(5) });
         let t0 = Instant::now();
         let sink = submit_keys(&handle, true, &[7]);
-        assert!(sink.wait().unwrap()[0]);
+        assert!(sink.wait().unwrap().get(0));
         // replied well before an unbounded batch would have formed
         assert!(t0.elapsed() < Duration::from_millis(500));
         batcher.stop();
@@ -382,7 +386,7 @@ mod tests {
             sinks.push(submit_keys(&handle, false, &[key]));
         }
         for sink in sinks {
-            assert!(sink.wait().unwrap()[0]);
+            assert!(sink.wait().unwrap().get(0));
         }
         batcher.stop();
         join.join().unwrap();
@@ -396,7 +400,7 @@ mod tests {
         let sink = submit_keys(&handle, true, &keys);
         let results = sink.wait().unwrap();
         assert_eq!(results.len(), 500);
-        assert!(results.iter().all(|&r| r));
+        assert!(results.all());
         batcher.stop();
         join.join().unwrap();
     }
@@ -418,8 +422,8 @@ mod tests {
             panic!("injected backend panic")
         }
 
-        fn bulk_contains(&self, keys: &[u64]) -> anyhow::Result<Vec<bool>> {
-            Ok(vec![false; keys.len()])
+        fn bulk_contains(&self, keys: &[u64]) -> anyhow::Result<AnswerBits> {
+            Ok(AnswerBits::with_len(keys.len()))
         }
 
         fn snapshot(&self) -> Vec<u64> {
@@ -443,7 +447,7 @@ mod tests {
         assert!(err.contains("panicked"), "{err}");
         // the worker survived and still serves the next batch
         let sink = submit_keys(&handle, false, &[1]);
-        assert!(!sink.wait().unwrap()[0]);
+        assert!(!sink.wait().unwrap().get(0));
         batcher.stop();
         join.join().unwrap();
     }

@@ -9,7 +9,9 @@
 //!   sharded state, own batcher worker, own metrics). Errors are the
 //!   typed [`error::GbfError`].
 //! * **data plane** — a clonable [`service::FilterHandle`] whose
-//!   operations (`add`, `query`, `add_bulk`, `query_bulk`) return
+//!   operations (`add`, `query`, `add_bulk`, `query_bulk`, and the
+//!   zero-repack `query_bulk_bits`, resolving to the bit-packed
+//!   [`crate::filter::AnswerBits`] the wire ships verbatim) return
 //!   [`ticket::Ticket`] receipts: poll with `is_ready`, bound with
 //!   `wait_timeout`, or block with `wait`.
 //!
@@ -33,10 +35,13 @@
 //!
 //! * [`registry`] — the **sharded filter registry**: N independently
 //!   lock-free [`crate::filter::AnyBloom`] shards keyed by a
-//!   `tophash`-derived shard index; bulk requests are split per shard,
-//!   executed in parallel on the infra thread pool, and reassembled in
-//!   request order — now with per-shard queue/exec/key counters
-//!   ([`metrics::ShardStats`]) surfaced through `stats(name)`.
+//!   `tophash`-derived shard index; bulk requests are partitioned into
+//!   reusable per-shard scratch lanes, executed as batch-native kernel
+//!   calls in parallel on the infra thread pool, and scattered back in
+//!   request order (answers stay bit-packed end to end; singles are
+//!   bulks of one through the same kernels) — with per-shard
+//!   queue/exec/key counters ([`metrics::ShardStats`]) surfaced through
+//!   `stats(name)`.
 //! * `batcher` (crate-private) — one dynamic batcher per namespace packs
 //!   requests into bulk operations (size- or deadline-triggered) and
 //!   preserves add→query FIFO per key; every reply lands in a `BulkSink`

@@ -3,11 +3,16 @@
 //! N independent [`AnyBloom`] shards (N a power of two), each a lock-free
 //! filter in its own right (relaxed `fetch_or` inserts, see
 //! [`crate::filter::bloom`]), keyed by a `tophash`-derived shard index from
-//! the [`Router`]. Bulk requests are split per shard, executed **in
-//! parallel on the [`infra/threadpool`](crate::infra::threadpool)**, and
-//! re-assembled in request order — the CPU analogue of the paper's
-//! thread-cooperation axis (§4.1/§4.3): independent lanes own disjoint
-//! partitions of the state and cooperate on one logical bulk operation.
+//! the [`Router`]. Bulk requests are partitioned into **reusable per-shard
+//! lanes** (checked out of a scratch pool, so steady-state bulks allocate
+//! nothing), executed as batch-native kernel calls **in parallel on the
+//! [`infra/threadpool`](crate::infra::threadpool)**, and scattered back in
+//! request order — the CPU analogue of the paper's thread-cooperation axis
+//! (§4.1/§4.3): independent lanes own disjoint partitions of the state and
+//! cooperate on one logical bulk operation. Lookup answers travel
+//! bit-packed ([`AnswerBits`]) from the kernels all the way to the wire.
+//! Single-key operations are bulks of one through the *same* kernels, so
+//! the scalar and bulk probe paths cannot drift.
 //!
 //! Sharding is a *state-partitioning* scheme, not a replication scheme:
 //! every key lives in exactly one shard, so the no-false-negative contract
@@ -24,7 +29,7 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::filter::params::FilterConfig;
-use crate::filter::AnyBloom;
+use crate::filter::{AnswerBits, AnyBloom};
 use crate::infra::threadpool::ThreadPool;
 
 use super::metrics::ShardStats;
@@ -110,6 +115,55 @@ impl ShardCounters {
     }
 }
 
+/// One shard's slice of a bulk call: the keys routed to the shard, their
+/// original positions (for the request-order scatter), and the shard's
+/// bit-packed answers. Lanes live inside a [`BulkScratch`] and are reused
+/// across batches — the no-allocation steady state of the hot path.
+#[derive(Default)]
+struct Lane {
+    keys: Vec<u64>,
+    idx: Vec<usize>,
+    answers: AnswerBits,
+}
+
+/// Reusable partition scratch for one in-flight bulk call: one [`Lane`]
+/// per shard. Each lane is `Arc<Mutex<..>>` so pool jobs can borrow it
+/// without the call moving ownership per batch; the mutexes are
+/// uncontended (a checked-out scratch belongs to exactly one call, and
+/// each lane to exactly one job).
+struct BulkScratch {
+    lanes: Vec<Arc<Mutex<Lane>>>,
+    /// Per-lane key counts of the current partition (reused like the
+    /// lanes themselves).
+    lens: Vec<usize>,
+}
+
+impl BulkScratch {
+    fn new(num_shards: usize) -> BulkScratch {
+        BulkScratch {
+            lanes: (0..num_shards).map(|_| Arc::new(Mutex::new(Lane::default()))).collect(),
+            lens: vec![0; num_shards],
+        }
+    }
+}
+
+/// Most parked scratches per registry: enough for a healthy level of
+/// concurrent bulk callers.
+const MAX_PARKED_SCRATCH: usize = 8;
+
+/// Per-lane capacity (in keys) above which a parked lane's buffers are
+/// released on check-in: steady-state batcher lanes (≤ `max_batch` keys)
+/// park untouched, while a burst of giant direct bulks cannot pin its
+/// peak footprint forever.
+const LANE_PARK_KEYS: usize = 1 << 15;
+
+/// Cap one kernel call's thread count for small inputs (the engine's
+/// [`crate::filter::bloom`] spawn-cost threshold): the latency-sensitive
+/// small batches the batcher forms stay on the calling thread.
+fn kernel_threads(threads: usize, n_keys: usize) -> usize {
+    threads.min((n_keys / crate::filter::bloom::MIN_KEYS_PER_THREAD).max(1))
+}
+
 /// A registry of independently-addressed filter shards (see module docs).
 pub struct ShardedRegistry {
     shards: Vec<Arc<AnyBloom>>,
@@ -118,6 +172,12 @@ pub struct ShardedRegistry {
     /// Execution substrate for the parallel bulk path; `None` for a
     /// single-shard registry, which executes inline.
     pool: Option<ThreadPool>,
+    /// Parked [`BulkScratch`]es, checked out per bulk call.
+    scratch: Mutex<Vec<BulkScratch>>,
+    /// OS threads each shard's kernel call may use: the machine's
+    /// parallelism divided across the shards, so a 1-shard registry still
+    /// saturates the cores while an N-shard one does not oversubscribe.
+    threads_per_shard: usize,
     cfg: FilterConfig,
 }
 
@@ -136,7 +196,65 @@ impl ShardedRegistry {
             .collect::<Result<Vec<_>>>()?;
         let counters = (0..num_shards).map(|_| Arc::new(ShardCounters::default())).collect();
         let pool = (num_shards > 1).then(|| ThreadPool::new(num_shards.min(64)));
-        Ok(ShardedRegistry { shards, counters, router: Router::new(num_shards), pool, cfg })
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Ok(ShardedRegistry {
+            shards,
+            counters,
+            router: Router::new(num_shards),
+            pool,
+            scratch: Mutex::new(Vec::new()),
+            threads_per_shard: (cores / num_shards).max(1),
+            cfg,
+        })
+    }
+
+    /// Check a scratch out of the pool (or build one on first use /
+    /// under burst concurrency).
+    fn checkout(&self) -> BulkScratch {
+        self.scratch
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| BulkScratch::new(self.shards.len()))
+    }
+
+    /// Return a healthy scratch to the pool, clearing its lanes and
+    /// releasing burst-sized buffers (see [`LANE_PARK_KEYS`]). A scratch
+    /// whose call failed is dropped instead (a panicked job may have
+    /// poisoned its lane).
+    fn check_in(&self, scratch: BulkScratch) {
+        for lane in &scratch.lanes {
+            let mut lane = lane.lock().unwrap();
+            lane.keys.clear();
+            lane.idx.clear();
+            lane.answers.reset(0);
+            lane.keys.shrink_to(LANE_PARK_KEYS);
+            lane.idx.shrink_to(LANE_PARK_KEYS);
+            lane.answers.shrink_to(LANE_PARK_KEYS);
+        }
+        let mut pool = self.scratch.lock().unwrap();
+        if pool.len() < MAX_PARKED_SCRATCH {
+            pool.push(scratch);
+        }
+    }
+
+    /// Partition `keys` into the scratch's per-shard lanes **in place**
+    /// (clearing, never reallocating once lanes have grown to steady
+    /// state), recording original positions for the answer scatter.
+    fn partition_into(&self, keys: &[u64], scratch: &mut BulkScratch) {
+        let mut guards: Vec<_> = scratch.lanes.iter().map(|l| l.lock().unwrap()).collect();
+        for g in guards.iter_mut() {
+            g.keys.clear();
+            g.idx.clear();
+        }
+        for (i, &k) in keys.iter().enumerate() {
+            let lane = &mut *guards[self.router.shard_of(k)];
+            lane.keys.push(k);
+            lane.idx.push(i);
+        }
+        for (len, g) in scratch.lens.iter_mut().zip(&guards) {
+            *len = g.keys.len();
+        }
     }
 
     pub fn num_shards(&self) -> usize {
@@ -157,27 +275,32 @@ impl ShardedRegistry {
         &self.shards[idx]
     }
 
-    /// Shared fan-out: run `job(shard, filter, part_keys, part_idx)` for
-    /// every non-empty per-shard partition of `keys` on the pool, waiting
-    /// for all jobs. A job that panics surfaces as an `Err` naming the
-    /// shard and carrying the panic message (the batch is reported failed)
-    /// rather than wedging the caller or killing a pool worker.
-    fn run_sharded<F>(&self, keys: &[u64], op: &'static str, job: F) -> Result<()>
+    /// Shared fan-out: run `job(filter, lane, threads)` for every
+    /// non-empty lane of the partitioned scratch on the pool, waiting for
+    /// all jobs. A job that panics surfaces as an `Err` naming the shard
+    /// and carrying the panic message (the batch is reported failed)
+    /// rather than wedging the caller or killing a pool worker; the
+    /// caller then discards the scratch instead of re-parking it.
+    fn run_lanes<F>(&self, scratch: &BulkScratch, op: &'static str, job: F) -> Result<()>
     where
-        F: Fn(usize, &AnyBloom, Vec<u64>, Vec<usize>) + Send + Sync + 'static,
+        F: Fn(&AnyBloom, &mut Lane, usize) + Send + Sync + 'static,
     {
         let pool = self.pool.as_ref().expect("multi-shard registry has a pool");
-        let parts = self.router.partition(keys);
-        let n_jobs = parts.iter().filter(|(p, _)| !p.is_empty()).count();
+        let n_jobs = scratch.lens.iter().filter(|&&n| n > 0).count();
+        if n_jobs == 0 {
+            return Ok(());
+        }
         let latch = Latch::new(n_jobs);
         let failure: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
         let job = Arc::new(job);
-        for (shard, (part, idx)) in parts.into_iter().enumerate() {
-            if part.is_empty() {
+        let threads = self.threads_per_shard;
+        for (shard, &n_keys) in scratch.lens.iter().enumerate() {
+            if n_keys == 0 {
                 continue;
             }
             let filter = Arc::clone(&self.shards[shard]);
             let counters = Arc::clone(&self.counters[shard]);
+            let lane = Arc::clone(&scratch.lanes[shard]);
             let guard = LatchGuard::new(&latch);
             let failure = Arc::clone(&failure);
             let job = Arc::clone(&job);
@@ -185,12 +308,15 @@ impl ShardedRegistry {
             pool.execute(move || {
                 let _guard = guard; // counts down even if the job unwinds
                 let started = Instant::now();
-                let n_keys = part.len() as u64;
                 // counters record COMPLETED work only — a panicked job's
                 // keys must not show up as served traffic
-                match catch_unwind(AssertUnwindSafe(|| (*job)(shard, filter.as_ref(), part, idx))) {
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    let mut lane = lane.lock().unwrap();
+                    (*job)(filter.as_ref(), &mut lane, threads)
+                }));
+                match outcome {
                     Ok(()) => counters.record(
-                        n_keys,
+                        n_keys as u64,
                         started.duration_since(submitted).as_nanos() as u64,
                         started.elapsed().as_nanos() as u64,
                     ),
@@ -211,58 +337,81 @@ impl ShardedRegistry {
         Ok(())
     }
 
-    /// Bulk insert: split per shard, run shard inserts in parallel on the
-    /// pool, return when every shard has published its bits.
+    /// Bulk insert: partition into the reusable lanes, run the insert
+    /// kernels in parallel on the pool, return when every shard has
+    /// published its bits.
     pub fn bulk_add(&self, keys: &[u64]) -> Result<()> {
         if keys.is_empty() {
             return Ok(());
         }
         if self.shards.len() == 1 {
             let t0 = Instant::now();
-            self.shards[0].bulk_add(keys, 1);
+            self.shards[0].bulk_add(keys, kernel_threads(self.threads_per_shard, keys.len()));
             self.counters[0].record(keys.len() as u64, 0, t0.elapsed().as_nanos() as u64);
             return Ok(());
         }
-        self.run_sharded(keys, "bulk_add", |_, filter, part, _| filter.bulk_add(&part, 1))
+        let mut scratch = self.checkout();
+        self.partition_into(keys, &mut scratch);
+        let result = self.run_lanes(&scratch, "bulk_add", |filter, lane, threads| {
+            filter.bulk_add(&lane.keys, kernel_threads(threads, lane.keys.len()))
+        });
+        result.map(|()| self.check_in(scratch))
     }
 
-    /// Bulk lookup: split per shard, probe shards in parallel, scatter the
-    /// per-shard answers back into request order. The scatter itself runs
-    /// on the calling thread (jobs hand back whole per-shard vectors, so
-    /// the shared lock only covers O(num_shards) pushes, not O(n) writes).
-    pub fn bulk_contains(&self, keys: &[u64]) -> Result<Vec<bool>> {
+    /// Bulk lookup in the kernels' native bit-packed form: partition into
+    /// the reusable lanes, probe shards in parallel (each lane's answers
+    /// land in its own [`AnswerBits`]), then scatter back into request
+    /// order on the calling thread. `out` is reused across calls.
+    pub fn bulk_contains_bits(&self, keys: &[u64], out: &mut AnswerBits) -> Result<()> {
         if keys.is_empty() {
-            return Ok(Vec::new());
+            out.reset(0);
+            return Ok(());
         }
         if self.shards.len() == 1 {
             let t0 = Instant::now();
-            let hits = self.shards[0].bulk_contains(keys, 1);
+            self.shards[0].bulk_contains_bits(keys, kernel_threads(self.threads_per_shard, keys.len()), out);
             self.counters[0].record(keys.len() as u64, 0, t0.elapsed().as_nanos() as u64);
-            return Ok(hits);
+            return Ok(());
         }
-        let collected: Arc<Mutex<Vec<(Vec<usize>, Vec<bool>)>>> = Arc::new(Mutex::new(Vec::new()));
-        let sink = Arc::clone(&collected);
-        self.run_sharded(keys, "bulk_contains", move |_, filter, part, idx| {
-            let hits = filter.bulk_contains(&part, 1);
-            sink.lock().unwrap().push((idx, hits));
+        let mut scratch = self.checkout();
+        self.partition_into(keys, &mut scratch);
+        self.run_lanes(&scratch, "bulk_contains", |filter, lane, threads| {
+            let Lane { keys, answers, .. } = lane;
+            filter.bulk_contains_bits(keys, kernel_threads(threads, keys.len()), answers);
         })?;
-        let mut out = vec![false; keys.len()];
-        for (idx, hits) in collected.lock().unwrap().drain(..) {
-            for (&i, h) in idx.iter().zip(hits) {
-                out[i] = h;
+        out.reset(keys.len());
+        for lane in &scratch.lanes {
+            let lane = lane.lock().unwrap();
+            for (j, &i) in lane.idx.iter().enumerate() {
+                if lane.answers.get(j) {
+                    out.set_true(i);
+                }
             }
         }
-        Ok(out)
+        self.check_in(scratch);
+        Ok(())
     }
 
-    /// Single-key insert (routes to the owning shard).
+    /// Bulk lookup returning one bool per key (the compatibility wrapper
+    /// over [`ShardedRegistry::bulk_contains_bits`]).
+    pub fn bulk_contains(&self, keys: &[u64]) -> Result<Vec<bool>> {
+        let mut out = AnswerBits::new();
+        self.bulk_contains_bits(keys, &mut out)?;
+        Ok(out.to_bools())
+    }
+
+    /// Single-key insert: a chunk of one through the same insert kernel
+    /// as [`ShardedRegistry::bulk_add`] (the batcher already treats
+    /// singles as bulks of one; the state layer now agrees) — without
+    /// the bulk publish fence, matching the old single-key semantics.
     pub fn add(&self, key: u64) {
-        self.shards[self.router.shard_of(key)].add(key);
+        self.shards[self.router.shard_of(key)].insert_kernel1(key);
     }
 
-    /// Single-key lookup (routes to the owning shard).
+    /// Single-key lookup: the bulk kernel's probe path applied to a chunk
+    /// of one, so the scalar and bulk answers cannot drift.
     pub fn contains(&self, key: u64) -> bool {
-        self.shards[self.router.shard_of(key)].contains(key)
+        self.shards[self.router.shard_of(key)].contains_kernel1(key)
     }
 
     /// One shard's words (the PJRT / snapshot hand-off unit).
@@ -398,6 +547,66 @@ mod tests {
         let r = registry(2);
         r.bulk_add(&[]).unwrap();
         assert!(r.bulk_contains(&[]).unwrap().is_empty());
+        let mut bits = AnswerBits::ones(5);
+        r.bulk_contains_bits(&[], &mut bits).unwrap();
+        assert!(bits.is_empty());
+    }
+
+    #[test]
+    fn single_key_paths_agree_with_bulk_kernels() {
+        // singles are bulks of one: add()/contains() must be
+        // bit-identical to the bulk kernels on the same traffic
+        let r = registry(4);
+        let keys = unique_keys(2000, 12);
+        for &k in &keys[..1000] {
+            r.add(k);
+        }
+        r.bulk_add(&keys[1000..]).unwrap();
+        let bulk = r.bulk_contains(&keys).unwrap();
+        let mut bits = AnswerBits::new();
+        r.bulk_contains_bits(&keys, &mut bits).unwrap();
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(r.contains(k), bulk[i], "key {k:#x}");
+            assert_eq!(bits.get(i), bulk[i], "key {k:#x} (bit-packed)");
+        }
+    }
+
+    #[test]
+    fn scratch_pool_reuses_across_batches() {
+        // repeated bulks on one registry must stay correct while lanes
+        // are checked out, cleared, refilled, and re-parked — and the
+        // parked pool stays bounded
+        let r = registry(8);
+        let mut out = AnswerBits::new();
+        for round in 0..10u64 {
+            let keys = unique_keys(1200, 200 + round);
+            r.bulk_add(&keys).unwrap();
+            r.bulk_contains_bits(&keys, &mut out).unwrap();
+            assert_eq!(out.len(), keys.len());
+            assert!(out.all(), "false negative in round {round}");
+        }
+        assert!(r.scratch.lock().unwrap().len() <= MAX_PARKED_SCRATCH);
+        assert!(!r.scratch.lock().unwrap().is_empty(), "scratch was parked for reuse");
+    }
+
+    #[test]
+    fn parked_scratch_releases_burst_buffers() {
+        let r = registry(2);
+        // a giant bulk grows the lanes far past the park cap...
+        let keys = unique_keys(2 * LANE_PARK_KEYS + 4096, 300);
+        r.bulk_add(&keys).unwrap();
+        // ...but check-in clears the lanes and releases the burst-sized
+        // buffers, so an idle registry does not pin its peak footprint
+        let pool = r.scratch.lock().unwrap();
+        assert!(!pool.is_empty());
+        for scratch in pool.iter() {
+            for lane in &scratch.lanes {
+                let lane = lane.lock().unwrap();
+                assert!(lane.keys.is_empty() && lane.idx.is_empty() && lane.answers.is_empty());
+                assert!(lane.keys.capacity() <= LANE_PARK_KEYS, "keys cap {}", lane.keys.capacity());
+                assert!(lane.idx.capacity() <= LANE_PARK_KEYS, "idx cap {}", lane.idx.capacity());
+            }
+        }
     }
 
     #[test]

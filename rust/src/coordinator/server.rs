@@ -204,7 +204,7 @@ mod tests {
         let keys = unique_keys(5000, 1);
         c.submit_bulk(Op::Add, &keys).wait().unwrap();
         let hits = c.submit_bulk(Op::Query, &keys).wait().unwrap();
-        assert!(hits.iter().all(|&h| h));
+        assert!(hits.all());
         let m = c.metrics().snapshot();
         assert_eq!(m.adds, 5000);
         assert_eq!(m.queries, 5000);
@@ -220,8 +220,7 @@ mod tests {
         let c = native_engine(2);
         let (ins, qry) = disjoint_key_sets(20_000, 5_000, 2);
         c.submit_bulk(Op::Add, &ins).wait().unwrap();
-        let hits = c.submit_bulk(Op::Query, &qry).wait().unwrap();
-        let fp = hits.iter().filter(|&&h| h).count();
+        let fp = c.submit_bulk(Op::Query, &qry).wait().unwrap().count_ones();
         assert!(fp < 100, "fp = {fp}");
     }
 
@@ -231,7 +230,7 @@ mod tests {
         assert_eq!(c.num_shards(), 1);
         let keys = unique_keys(100, 3);
         c.submit_bulk(Op::Add, &keys).wait().unwrap();
-        assert!(c.submit_bulk(Op::Query, &keys).wait().unwrap().iter().all(|&h| h));
+        assert!(c.submit_bulk(Op::Query, &keys).wait().unwrap().all());
     }
 
     #[test]
@@ -243,7 +242,7 @@ mod tests {
             joins.push(std::thread::spawn(move || {
                 let keys = unique_keys(2000, 100 + t);
                 c.submit_bulk(Op::Add, &keys).wait().unwrap();
-                assert!(c.submit_bulk(Op::Query, &keys).wait().unwrap().iter().all(|&h| h));
+                assert!(c.submit_bulk(Op::Query, &keys).wait().unwrap().all());
             }));
         }
         for j in joins {

@@ -34,6 +34,7 @@ use std::sync::{Arc, RwLock};
 use anyhow::Result;
 
 use crate::filter::params::FilterConfig;
+use crate::filter::AnswerBits;
 
 use super::backend::{FilterBackend, NativeBackend};
 use super::batcher::BatchPolicy;
@@ -41,7 +42,7 @@ use super::error::GbfError;
 use super::metrics::{MetricsSnapshot, ShardStats};
 use super::persist::{SnapshotReader, SnapshotWriter};
 use super::server::{Coordinator, CoordinatorConfig, Op};
-use super::ticket::{finish_all, finish_one, finish_unit, Ticket};
+use super::ticket::{finish_all, finish_bits, finish_one, finish_unit, Ticket};
 
 /// Everything a namespace needs at creation time.
 #[derive(Debug, Clone)]
@@ -449,7 +450,7 @@ impl FilterHandle {
         self.ns.engine.snapshot_words()
     }
 
-    fn submit<T>(&self, op: Op, keys: &[u64], finish: fn(Vec<bool>) -> T) -> Ticket<T> {
+    fn submit<T>(&self, op: Op, keys: &[u64], finish: fn(AnswerBits) -> T) -> Ticket<T> {
         if !self.is_live() {
             return Ticket::failed(GbfError::NoSuchFilter(self.ns.name.clone()), finish);
         }
@@ -485,6 +486,13 @@ impl FilterHandle {
     /// Look up a batch; the resolved `Vec<bool>` is in submission order.
     pub fn query_bulk(&self, keys: &[u64]) -> Ticket<Vec<bool>> {
         self.submit(Op::Query, keys, finish_all)
+    }
+
+    /// Look up a batch, resolving to the bit-packed [`AnswerBits`] form —
+    /// exactly what the kernels produce and the wire codec ships, so a
+    /// caller forwarding answers never widens them to `Vec<bool>`.
+    pub fn query_bulk_bits(&self, keys: &[u64]) -> Ticket<AnswerBits> {
+        self.submit(Op::Query, keys, finish_bits)
     }
 }
 

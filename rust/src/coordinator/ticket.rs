@@ -15,6 +15,8 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::filter::AnswerBits;
+
 use super::batcher::BulkSink;
 use super::error::GbfError;
 
@@ -24,10 +26,12 @@ use super::error::GbfError;
 /// hand back the *same* `Ticket<T>` receipts as local ones.
 pub(crate) trait Completion: Send + Sync {
     fn is_ready(&self) -> bool;
-    /// Block until resolved; must be called at most once (results move out).
-    fn wait(&self) -> Result<Vec<bool>, GbfError>;
+    /// Block until resolved; must be called at most once (results move
+    /// out). Results are the bit-packed [`AnswerBits`] every layer of the
+    /// reply path speaks.
+    fn wait(&self) -> Result<AnswerBits, GbfError>;
     /// Bounded wait: `None` on timeout (the completion stays waitable).
-    fn wait_timeout(&self, timeout: Duration) -> Option<Result<Vec<bool>, GbfError>>;
+    fn wait_timeout(&self, timeout: Duration) -> Option<Result<AnswerBits, GbfError>>;
 }
 
 impl Completion for BulkSink {
@@ -35,18 +39,18 @@ impl Completion for BulkSink {
         BulkSink::is_ready(self)
     }
 
-    fn wait(&self) -> Result<Vec<bool>, GbfError> {
+    fn wait(&self) -> Result<AnswerBits, GbfError> {
         BulkSink::wait(self).map_err(|e| GbfError::Backend(format!("{e:#}")))
     }
 
-    fn wait_timeout(&self, timeout: Duration) -> Option<Result<Vec<bool>, GbfError>> {
+    fn wait_timeout(&self, timeout: Duration) -> Option<Result<AnswerBits, GbfError>> {
         BulkSink::wait_timeout(self, timeout).map(|r| r.map_err(|e| GbfError::Backend(format!("{e:#}"))))
     }
 }
 
 enum Inner {
     /// Resolved at construction: empty submission or a service-level error.
-    Done(Result<Vec<bool>, GbfError>),
+    Done(Result<AnswerBits, GbfError>),
     /// In flight: resolved by a [`Completion`] source — the batch worker's
     /// sink (which records e2e latency itself, at completion time) or a
     /// wire client's response slot.
@@ -57,28 +61,29 @@ enum Inner {
 #[must_use = "a Ticket does nothing until waited on; drop it only to abandon the result"]
 pub struct Ticket<T> {
     inner: Inner,
-    /// Shapes the raw per-key bits into the operation's result type
-    /// (`()` for adds, `bool` for single queries, `Vec<bool>` for bulk).
-    finish: fn(Vec<bool>) -> T,
+    /// Shapes the raw bit-packed answers into the operation's result type
+    /// (`()` for adds, `bool` for single queries, `Vec<bool>` or
+    /// [`AnswerBits`] for bulk).
+    finish: fn(AnswerBits) -> T,
 }
 
 impl<T> Ticket<T> {
-    pub(crate) fn pending(sink: Arc<BulkSink>, finish: fn(Vec<bool>) -> T) -> Self {
+    pub(crate) fn pending(sink: Arc<BulkSink>, finish: fn(AnswerBits) -> T) -> Self {
         Ticket { inner: Inner::Pending(sink), finish }
     }
 
     /// A ticket resolved by an arbitrary [`Completion`] source (the wire
     /// client's per-request slot).
-    pub(crate) fn from_completion(source: Arc<dyn Completion>, finish: fn(Vec<bool>) -> T) -> Self {
+    pub(crate) fn from_completion(source: Arc<dyn Completion>, finish: fn(AnswerBits) -> T) -> Self {
         Ticket { inner: Inner::Pending(source), finish }
     }
 
-    pub(crate) fn failed(err: GbfError, finish: fn(Vec<bool>) -> T) -> Self {
+    pub(crate) fn failed(err: GbfError, finish: fn(AnswerBits) -> T) -> Self {
         Ticket { inner: Inner::Done(Err(err)), finish }
     }
 
-    pub(crate) fn ready(finish: fn(Vec<bool>) -> T) -> Self {
-        Ticket { inner: Inner::Done(Ok(Vec::new())), finish }
+    pub(crate) fn ready(finish: fn(AnswerBits) -> T) -> Self {
+        Ticket { inner: Inner::Done(Ok(AnswerBits::new())), finish }
     }
 
     /// True once the result is available; `wait` will then not block.
@@ -115,14 +120,20 @@ impl<T> Ticket<T> {
     }
 }
 
-/// `finish` shapers for the three result types.
-pub(crate) fn finish_unit(_: Vec<bool>) {}
+/// `finish` shapers for the four result types.
+pub(crate) fn finish_unit(_: AnswerBits) {}
 
-pub(crate) fn finish_one(hits: Vec<bool>) -> bool {
-    hits.first().copied().unwrap_or(false)
+pub(crate) fn finish_one(hits: AnswerBits) -> bool {
+    !hits.is_empty() && hits.get(0)
 }
 
-pub(crate) fn finish_all(hits: Vec<bool>) -> Vec<bool> {
+pub(crate) fn finish_all(hits: AnswerBits) -> Vec<bool> {
+    hits.to_bools()
+}
+
+/// Identity shaper: hand the bit-packed answers through untouched (the
+/// zero-repack bulk path).
+pub(crate) fn finish_bits(hits: AnswerBits) -> AnswerBits {
     hits
 }
 
@@ -157,8 +168,9 @@ mod tests {
 
     #[test]
     fn finish_shapers() {
-        assert!(!finish_one(Vec::new()));
-        assert!(finish_one(vec![true, false]));
-        assert_eq!(finish_all(vec![true]), vec![true]);
+        assert!(!finish_one(AnswerBits::new()));
+        assert!(finish_one(AnswerBits::from_bools(&[true, false])));
+        assert_eq!(finish_all(AnswerBits::from_bools(&[true])), vec![true]);
+        assert_eq!(finish_bits(AnswerBits::ones(3)), AnswerBits::ones(3));
     }
 }

@@ -29,8 +29,9 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::error::GbfError;
 use crate::coordinator::service::{FilterSpec, NamespaceStats};
-use crate::coordinator::ticket::{finish_all, finish_one, finish_unit, Completion, Ticket};
+use crate::coordinator::ticket::{finish_all, finish_bits, finish_one, finish_unit, Completion, Ticket};
 use crate::filter::params::FilterConfig;
+use crate::filter::AnswerBits;
 
 use super::codec::{
     decode_response, encode_data_request, encode_request, read_frame, write_frame, Request, Response, MAX_FRAME,
@@ -82,10 +83,10 @@ impl Slot {
     }
 }
 
-/// Shape a data-plane response into the ticket's raw bit vector.
-fn interpret(resp: Response) -> Result<Vec<bool>, GbfError> {
+/// Shape a data-plane response into the ticket's raw bit-packed answers.
+fn interpret(resp: Response) -> Result<AnswerBits, GbfError> {
     match resp {
-        Response::Ok => Ok(Vec::new()),
+        Response::Ok => Ok(AnswerBits::new()),
         Response::Hits(hits) => Ok(hits),
         Response::Err(e) => Err(e),
         other => Err(GbfError::Backend(format!("protocol error: unexpected data-plane response {other:?}"))),
@@ -107,11 +108,11 @@ impl Completion for WireCompletion {
         self.slot.is_ready()
     }
 
-    fn wait(&self) -> Result<Vec<bool>, GbfError> {
+    fn wait(&self) -> Result<AnswerBits, GbfError> {
         interpret(self.slot.wait())
     }
 
-    fn wait_timeout(&self, timeout: Duration) -> Option<Result<Vec<bool>, GbfError>> {
+    fn wait_timeout(&self, timeout: Duration) -> Option<Result<AnswerBits, GbfError>> {
         self.slot.wait_timeout(timeout).map(interpret)
     }
 }
@@ -368,7 +369,7 @@ impl RemoteFilterHandle {
 
     /// Data-plane submit: encodes straight from the borrowed key slice
     /// (no intermediate owned copy) and hands back a wire-backed ticket.
-    fn submit<T>(&self, is_add: bool, keys: &[u64], finish: fn(Vec<bool>) -> T) -> Ticket<T> {
+    fn submit<T>(&self, is_add: bool, keys: &[u64], finish: fn(AnswerBits) -> T) -> Ticket<T> {
         let id = self.client.next_id();
         let payload = encode_data_request(id, is_add, &self.name, self.instance, keys);
         match self.client.send_payload(id, payload) {
@@ -400,6 +401,15 @@ impl RemoteFilterHandle {
             return Ticket::ready(finish_all);
         }
         self.submit(false, keys, finish_all)
+    }
+
+    /// Bulk lookup resolving to bit-packed [`AnswerBits`] — the frame's
+    /// answer bytes handed through without a repack.
+    pub fn query_bulk_bits(&self, keys: &[u64]) -> Ticket<AnswerBits> {
+        if keys.is_empty() {
+            return Ticket::ready(finish_bits);
+        }
+        self.submit(false, keys, finish_bits)
     }
 }
 
@@ -472,6 +482,10 @@ impl FilterDataPlane for RemoteFilterHandle {
     fn query_bulk(&self, keys: &[u64]) -> Ticket<Vec<bool>> {
         RemoteFilterHandle::query_bulk(self, keys)
     }
+
+    fn query_bulk_bits(&self, keys: &[u64]) -> Ticket<AnswerBits> {
+        RemoteFilterHandle::query_bulk_bits(self, keys)
+    }
 }
 
 #[cfg(test)]
@@ -486,8 +500,11 @@ mod tests {
 
     #[test]
     fn interpret_maps_the_data_plane() {
-        assert_eq!(interpret(Response::Ok), Ok(Vec::new()));
-        assert_eq!(interpret(Response::Hits(vec![true])), Ok(vec![true]));
+        assert_eq!(interpret(Response::Ok), Ok(AnswerBits::new()));
+        assert_eq!(
+            interpret(Response::Hits(AnswerBits::from_bools(&[true]))),
+            Ok(AnswerBits::from_bools(&[true]))
+        );
         assert_eq!(
             interpret(Response::Err(GbfError::NoSuchFilter("x".into()))),
             Err(GbfError::NoSuchFilter("x".into()))
@@ -501,7 +518,7 @@ mod tests {
         assert!(!slot.is_ready());
         assert!(slot.wait_timeout(Duration::from_millis(5)).is_none());
         slot.complete(Response::Ok);
-        slot.complete(Response::Hits(vec![true])); // second completion ignored
+        slot.complete(Response::Hits(AnswerBits::from_bools(&[true]))); // second completion ignored
         assert!(slot.is_ready());
         assert!(matches!(slot.wait(), Response::Ok));
     }

@@ -33,6 +33,7 @@ use crate::coordinator::error::GbfError;
 use crate::coordinator::metrics::{MetricsSnapshot, ShardStats};
 use crate::coordinator::service::{FilterSpec, NamespaceStats};
 use crate::filter::params::{FilterConfig, Scheme, Variant};
+use crate::filter::AnswerBits;
 
 /// Protocol version byte; bump on any incompatible layout change.
 pub const WIRE_VERSION: u8 = 1;
@@ -76,8 +77,11 @@ pub enum Response {
     Names(Vec<String>),
     /// Stats answer (boxed: the stats view dwarfs the other variants).
     Stats(Box<NamespaceStats>),
-    /// QueryBulk answer, in submission order.
-    Hits(Vec<bool>),
+    /// QueryBulk answer, in submission order — carried bit-packed end to
+    /// end: the kernels produce [`AnswerBits`], the encoder ships its
+    /// backing bytes verbatim, and the decoder rebuilds it without ever
+    /// widening to `Vec<bool>`.
+    Hits(AnswerBits),
     /// Any call's typed failure — `GbfError` round-trips the codec.
     Err(GbfError),
 }
@@ -180,21 +184,13 @@ impl Enc {
         }
     }
 
-    fn bools(&mut self, bits: &[bool]) {
+    /// Bit-packed answers: `u32` count + the [`AnswerBits`] bytes
+    /// verbatim (LSB-first, tail bits zero — the buffer's invariant).
+    /// Byte-identical to the legacy per-bool packing loop, proven by
+    /// `answer_encoding_is_byte_identical_to_legacy_packing` below.
+    fn answers(&mut self, bits: &AnswerBits) {
         self.u32(bits.len() as u32);
-        let mut byte = 0u8;
-        for (i, &b) in bits.iter().enumerate() {
-            if b {
-                byte |= 1 << (i % 8);
-            }
-            if i % 8 == 7 {
-                self.buf.push(byte);
-                byte = 0;
-            }
-        }
-        if bits.len() % 8 != 0 {
-            self.buf.push(byte);
-        }
+        self.buf.extend_from_slice(bits.as_bytes());
     }
 
     fn opt_usize(&mut self, v: Option<usize>) {
@@ -364,11 +360,12 @@ impl<'a> Dec<'a> {
         Ok(out)
     }
 
-    fn bools(&mut self) -> Result<Vec<bool>> {
+    fn answers(&mut self) -> Result<AnswerBits> {
         let n = self.u32()? as usize;
-        ensure!(n <= MAX_FRAME * 8, "bool array of {n} exceeds frame bound");
+        ensure!(n <= MAX_FRAME * 8, "answer array of {n} exceeds frame bound");
         let bytes = self.take(n.div_ceil(8))?;
-        Ok((0..n).map(|i| bytes[i / 8] & (1 << (i % 8)) != 0).collect())
+        // from_raw clears any tail garbage a hostile frame smuggles in
+        Ok(AnswerBits::from_raw(n, bytes.to_vec()))
     }
 
     fn opt_usize(&mut self) -> Result<Option<usize>> {
@@ -602,7 +599,7 @@ pub fn encode_response(request_id: u64, resp: &Response) -> Vec<u8> {
         }
         Response::Hits(hits) => {
             let mut e = Enc::envelope(request_id, RESP_HITS);
-            e.bools(hits);
+            e.answers(hits);
             e
         }
         Response::Err(err) => {
@@ -631,7 +628,7 @@ pub fn decode_response(payload: &[u8]) -> Result<(u64, Response)> {
             Response::Names(names)
         }
         RESP_STATS => Response::Stats(Box::new(d.namespace_stats()?)),
-        RESP_HITS => Response::Hits(d.bools()?),
+        RESP_HITS => Response::Hits(d.answers()?),
         RESP_ERR => Response::Err(d.error()?),
         t => bail!("unknown response tag {t:#04x}"),
     };
@@ -748,11 +745,47 @@ mod tests {
         }
         // bit-packing: lengths straddling byte boundaries
         for n in [0usize, 1, 7, 8, 9, 64, 65] {
-            let hits: Vec<bool> = (0..n).map(|i| i % 3 == 0).collect();
+            let pattern: Vec<bool> = (0..n).map(|i| i % 3 == 0).collect();
+            let hits = AnswerBits::from_bools(&pattern);
             match rt_resp(Response::Hits(hits.clone())).1 {
                 Response::Hits(h) => assert_eq!(h, hits, "n = {n}"),
                 other => panic!("{other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn answer_encoding_is_byte_identical_to_legacy_packing() {
+        // the AnswerBits fast path (raw byte copy) must produce exactly
+        // the frames the original per-bool packing loop produced — the
+        // wire format did not change, only the repacking disappeared
+        fn legacy_pack(bits: &[bool]) -> Vec<u8> {
+            let mut out = Vec::new();
+            let mut byte = 0u8;
+            for (i, &b) in bits.iter().enumerate() {
+                if b {
+                    byte |= 1 << (i % 8);
+                }
+                if i % 8 == 7 {
+                    out.push(byte);
+                    byte = 0;
+                }
+            }
+            if bits.len() % 8 != 0 {
+                out.push(byte);
+            }
+            out
+        }
+        for n in [0usize, 1, 3, 8, 9, 31, 32, 33, 200] {
+            let pattern: Vec<bool> = (0..n).map(|i| (i * 7) % 5 < 2).collect();
+            let frame = encode_response(9, &Response::Hits(AnswerBits::from_bools(&pattern)));
+            let mut expected = Vec::new();
+            expected.push(WIRE_VERSION);
+            expected.extend_from_slice(&9u64.to_le_bytes());
+            expected.push(RESP_HITS);
+            expected.extend_from_slice(&(n as u32).to_le_bytes());
+            expected.extend_from_slice(&legacy_pack(&pattern));
+            assert_eq!(frame, expected, "n = {n}");
         }
     }
 

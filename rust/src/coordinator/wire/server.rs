@@ -43,6 +43,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::error::GbfError;
 use crate::coordinator::service::FilterService;
 use crate::coordinator::ticket::Ticket;
+use crate::filter::AnswerBits;
 
 use super::codec::{decode_request, encode_response, read_frame, write_frame, Request, Response};
 
@@ -57,7 +58,10 @@ pub const MAX_REMOTE_FILTER_BYTES: u64 = 8 << 30;
 /// request id its reply must carry.
 enum PendingOp {
     Add(Ticket<()>),
-    Query(Ticket<Vec<bool>>),
+    /// Bit-packed all the way: the ticket resolves to the [`AnswerBits`]
+    /// the kernels wrote, and the codec ships its bytes verbatim — the
+    /// server never repacks a reply.
+    Query(Ticket<AnswerBits>),
 }
 
 impl PendingOp {
@@ -366,7 +370,7 @@ fn handle_conn(stream: TcpStream, service: Arc<FilterService>) -> Result<()> {
             },
             Request::QueryBulk { name, instance, keys } => match service.handle(&name) {
                 Ok(h) if h.instance() == instance => {
-                    let _ = tx.send((id, PendingOp::Query(h.query_bulk(&keys))));
+                    let _ = tx.send((id, PendingOp::Query(h.query_bulk_bits(&keys))));
                 }
                 Ok(_) => send(&writer, id, &Response::Err(GbfError::NoSuchFilter(name)))?,
                 Err(e) => send(&writer, id, &Response::Err(e))?,

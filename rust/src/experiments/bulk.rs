@@ -1,0 +1,247 @@
+//! `gbf bench bulk` — the recorded bulk-vs-scalar kernel baseline.
+//!
+//! Measures Mops/s for bulk **query** and bulk **construction** across all
+//! five variants × 1/2/4/8 shards × the scalar path (per-key
+//! `ShardedRegistry::add` / `contains` calls — full dispatch and hashing
+//! once per key, no batching, no prefetch pipeline, single caller thread)
+//! vs the bulk path (the batch-native kernels behind
+//! `bulk_add` / `bulk_contains_bits`). Results land in a machine-readable
+//! JSON file (`BENCH_5.json` by default) so every future PR has a
+//! recorded trajectory to beat; `--check` turns the report into a
+//! regression gate: at 1 shard (where the kernel claim lives) the bulk
+//! path must not lose to the scalar path beyond measurement noise
+//! ([`CHECK_MIN_RATIO`]).
+//!
+//! Honors `GBF_BENCH_QUICK=1` (CI smoke sizing). Construction closures
+//! include a `clear()` of the registry each iteration — identical on both
+//! paths, so the ratio is fair; the flag is recorded in the JSON.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::ShardedRegistry;
+use crate::filter::params::{FilterConfig, Variant};
+use crate::filter::AnswerBits;
+use crate::infra::bench::{black_box, run_bench, BenchConfig};
+use crate::infra::json::Json;
+use crate::workload::keygen::unique_keys;
+
+/// Shard counts of the sweep (the serve path's supported grid).
+pub const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// `--check` floor on the 1-shard bulk/scalar ratio: the kernels must
+/// win, but quick-mode runs on shared CI hardware are noisy, so a 10%
+/// margin keeps the gate meaningful without making it flaky.
+pub const CHECK_MIN_RATIO: f64 = 0.9;
+
+/// One measurement row of the sweep.
+struct Row {
+    variant: &'static str,
+    shards: usize,
+    op: &'static str,   // "query" | "construct"
+    path: &'static str, // "scalar" | "bulk"
+    mops: f64,
+    ns_per_key: f64,
+    iters: u32,
+}
+
+/// The five variants at their Figure-1 geometries, `2^log2_m_words`
+/// words **per shard**.
+fn variant_cfgs(log2_m_words: u32) -> Vec<(&'static str, FilterConfig)> {
+    vec![
+        ("cbf", FilterConfig { variant: Variant::Cbf, k: 16, log2_m_words, ..Default::default() }),
+        ("bbf", FilterConfig { variant: Variant::Bbf, block_bits: 256, k: 16, log2_m_words, ..Default::default() }),
+        ("rbbf", FilterConfig { variant: Variant::Rbbf, block_bits: 64, k: 16, log2_m_words, ..Default::default() }),
+        ("sbf", FilterConfig { variant: Variant::Sbf, block_bits: 256, k: 16, log2_m_words, ..Default::default() }),
+        (
+            "csbf",
+            FilterConfig { variant: Variant::Csbf, block_bits: 512, k: 16, z: 2, log2_m_words, ..Default::default() },
+        ),
+    ]
+}
+
+/// (variant, shards, op, path) — one cell of the sweep grid.
+type Cell = (&'static str, usize, &'static str, &'static str);
+
+fn push_row(rows: &mut Vec<Row>, bench: &BenchConfig, cell: Cell, n_keys: usize, f: impl FnMut()) {
+    let (variant, shards, op, path) = cell;
+    let name = format!("{variant}/{shards}sh/{op}/{path}");
+    let r = run_bench(&name, bench, Some(n_keys as u64), f);
+    let secs = r.mean.as_secs_f64();
+    let row = Row {
+        variant,
+        shards,
+        op,
+        path,
+        mops: n_keys as f64 / secs / 1e6,
+        ns_per_key: secs * 1e9 / n_keys as f64,
+        iters: r.iters,
+    };
+    println!(
+        "  {:<22} {:>10.2} Mops/s  ({:>7.1} ns/key, n={})",
+        name, row.mops, row.ns_per_key, row.iters
+    );
+    rows.push(row);
+}
+
+/// Run the sweep and write the JSON report to `out_path`. With `check`,
+/// fail (non-zero exit through main's error path) if the bulk path loses
+/// to the scalar path beyond [`CHECK_MIN_RATIO`] for any variant × op at
+/// 1 shard.
+pub fn run_and_write(out_path: &Path, check: bool) -> Result<()> {
+    let quick = std::env::var("GBF_BENCH_QUICK").is_ok();
+    let bench = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    // per-shard filter size: big enough that probes regularly miss the
+    // fast caches (the regime the kernels' prefetch pipeline targets)
+    let log2_m_words: u32 = if quick { 20 } else { 21 };
+    let n_keys: usize = if quick { 150_000 } else { 1_000_000 };
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "=== bulk kernel baseline ({} keys/op, 2^{log2_m_words} words/shard, {threads} threads{}) ===",
+        n_keys,
+        if quick { ", quick" } else { "" }
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    for (variant, cfg) in variant_cfgs(log2_m_words) {
+        for shards in SHARD_COUNTS {
+            let reg = ShardedRegistry::new(cfg, shards)?;
+            let keys = unique_keys(n_keys, 0xB17C0DE ^ shards as u64);
+
+            // -- construction: clear + insert every key, both paths --
+            push_row(&mut rows, &bench, (variant, shards, "construct", "scalar"), n_keys, || {
+                reg.clear();
+                for &k in &keys {
+                    reg.add(k);
+                }
+            });
+            push_row(&mut rows, &bench, (variant, shards, "construct", "bulk"), n_keys, || {
+                reg.clear();
+                reg.bulk_add(&keys).unwrap();
+            });
+
+            // -- query: filter populated once, then probed repeatedly --
+            reg.clear();
+            reg.bulk_add(&keys)?;
+            push_row(&mut rows, &bench, (variant, shards, "query", "scalar"), n_keys, || {
+                let mut hits = 0usize;
+                for &k in &keys {
+                    hits += reg.contains(k) as usize;
+                }
+                black_box(hits);
+            });
+            let mut out = AnswerBits::new();
+            // correctness guard before timing: no false negatives
+            reg.bulk_contains_bits(&keys, &mut out)?;
+            anyhow::ensure!(out.all(), "false negative in {variant}/{shards}sh bench setup");
+            push_row(&mut rows, &bench, (variant, shards, "query", "bulk"), n_keys, || {
+                reg.bulk_contains_bits(&keys, &mut out).unwrap();
+                black_box(out.len());
+            });
+        }
+    }
+
+    // ratios: bulk over scalar per (variant, shards, op)
+    let ratio_of = |variant: &str, shards: usize, op: &str| -> f64 {
+        let find = |path: &str| {
+            rows.iter()
+                .find(|r| r.variant == variant && r.shards == shards && r.op == op && r.path == path)
+                .map(|r| r.mops)
+                .unwrap_or(f64::NAN)
+        };
+        find("bulk") / find("scalar")
+    };
+
+    let mut results = Vec::new();
+    for r in &rows {
+        results.push(Json::obj(vec![
+            ("variant", Json::str(r.variant)),
+            ("shards", Json::Int(r.shards as i64)),
+            ("op", Json::str(r.op)),
+            ("path", Json::str(r.path)),
+            ("mops", Json::Num(r.mops)),
+            ("ns_per_key", Json::Num(r.ns_per_key)),
+            ("iters", Json::Int(r.iters as i64)),
+        ]));
+    }
+    let mut ratios = Vec::new();
+    let mut failures = Vec::new();
+    println!("--- bulk/scalar speedups ---");
+    for (variant, _) in variant_cfgs(log2_m_words) {
+        for shards in SHARD_COUNTS {
+            for op in ["construct", "query"] {
+                let ratio = ratio_of(variant, shards, op);
+                println!("  {variant:<5} {shards} shard(s) {op:<9} {ratio:>6.2}x");
+                ratios.push(Json::obj(vec![
+                    ("variant", Json::str(variant)),
+                    ("shards", Json::Int(shards as i64)),
+                    ("op", Json::str(op)),
+                    ("bulk_over_scalar", Json::Num(ratio)),
+                ]));
+                if shards == 1 && (ratio.is_nan() || ratio < CHECK_MIN_RATIO) {
+                    failures.push(format!("{variant}/{op} at 1 shard: {ratio:.2}x"));
+                }
+            }
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("bulk_kernels")),
+        ("schema_version", Json::Int(1)),
+        ("quick", Json::Bool(quick)),
+        ("keys_per_op", Json::Int(n_keys as i64)),
+        ("log2_m_words_per_shard", Json::Int(log2_m_words as i64)),
+        ("threads", Json::Int(threads as i64)),
+        ("construct_includes_clear", Json::Bool(true)),
+        ("timestamp_unix", Json::Int(unix_now() as i64)),
+        ("results", Json::Arr(results)),
+        ("ratios", Json::Arr(ratios)),
+    ]);
+    std::fs::write(out_path, doc.to_string() + "\n")
+        .with_context(|| format!("writing bench report to {out_path:?}"))?;
+    println!("wrote {}", out_path.display());
+
+    if check && !failures.is_empty() {
+        bail!("bulk path lost to scalar path (floor {CHECK_MIN_RATIO}x): {}", failures.join(", "));
+    }
+    Ok(())
+}
+
+fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_grid_covers_all_five_variants() {
+        // the full sweep is a bench, not a unit test — here we pin the
+        // grid (all five variants, valid geometries) and the row plumbing
+        let cfgs = variant_cfgs(12);
+        let names: Vec<_> = cfgs.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, ["cbf", "bbf", "rbbf", "sbf", "csbf"]);
+        for (_, cfg) in &cfgs {
+            cfg.validate().unwrap();
+        }
+        let mut rows = Vec::new();
+        let bench = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 1,
+            target_cv: 1.0,
+            max_time: std::time::Duration::from_secs(1),
+        };
+        push_row(&mut rows, &bench, ("sbf", 1, "query", "scalar"), 1000, || {
+            black_box(0u64);
+        });
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].mops > 0.0);
+        assert_eq!((rows[0].variant, rows[0].shards, rows[0].op, rows[0].path), ("sbf", 1, "query", "scalar"));
+    }
+}

@@ -12,12 +12,14 @@
 //! | fpr | §5.1 FPR methodology (real measurement) | [`fig4`] |
 //! | cpu | CPU baseline rows (real measurement) | [`cpu_baseline`] |
 //! | calibration | model residuals vs the paper's B200 tables | [`paper_data`] |
+//! | bulk | bulk-vs-scalar kernel baseline → `BENCH_5.json` (CLI-dispatched, not in `all`) | [`bulk`] |
 //!
 //! Throughput numbers for GPU rows come from the calibrated performance
 //! model (`gpu_sim`); FPR numbers are *real measurements* on the native
 //! filter library; CPU rows are real measurements on this testbed.
 
 pub mod arch_figs;
+pub mod bulk;
 pub mod cpu_baseline;
 pub mod fig4;
 pub mod fig9;
@@ -54,6 +56,13 @@ pub fn run(exp: &str, out_dir: Option<&std::path::Path>) -> Result<String> {
             }
             all
         }
+        // the bulk baseline writes a JSON report file, not a CSV
+        // directory, so it takes the CLI route (with --out/--check)
+        // instead of this dispatcher — point callers there
+        "bulk" => bail!(
+            "the bulk baseline is a CLI subcommand: `gbf bench --exp bulk [--out f] [--check]` \
+             (it writes BENCH_5.json, not CSVs, and is not part of `all`)"
+        ),
         _ => bail!("unknown experiment {exp:?} (try table1|table2|fig4..fig9|gups|fpr|cpu|calibration|all)"),
     };
     Ok(text)

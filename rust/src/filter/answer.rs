@@ -1,0 +1,263 @@
+//! `AnswerBits` — the bit-packed membership-answer buffer.
+//!
+//! One bit per queried key, packed LSB-first within each byte (answer `i`
+//! lives at `bytes[i / 8] & (1 << (i % 8))`). This is **exactly** the wire
+//! codec's answer encoding, chosen on purpose: the bulk lookup kernels
+//! ([`crate::filter::bloom`]) write answers straight into this form, the
+//! batcher's sink stores it, and the codec ships the backing bytes
+//! verbatim — answers flow filter → sink → frame → client without ever
+//! being widened to a `Vec<bool>` (an 8× size cut on the hot reply path).
+//!
+//! Invariant: `bytes.len() == len.div_ceil(8)` and every bit at position
+//! `>= len` is zero, so byte-level equality and the wire encoding are
+//! well-defined.
+
+/// Bit-packed answers for one bulk lookup (see module docs).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AnswerBits {
+    len: usize,
+    bytes: Vec<u8>,
+}
+
+impl AnswerBits {
+    /// An empty buffer (grow with [`AnswerBits::push`] or
+    /// [`AnswerBits::reset`]).
+    pub fn new() -> AnswerBits {
+        AnswerBits::default()
+    }
+
+    /// `n` answers, all false.
+    pub fn with_len(n: usize) -> AnswerBits {
+        AnswerBits { len: n, bytes: vec![0; n.div_ceil(8)] }
+    }
+
+    /// `n` answers, all true (the add path's "every key landed" reply).
+    pub fn ones(n: usize) -> AnswerBits {
+        let mut out = AnswerBits { len: n, bytes: vec![0xFF; n.div_ceil(8)] };
+        out.mask_tail();
+        out
+    }
+
+    /// Pack a bool slice (the compatibility seam for callers still holding
+    /// `Vec<bool>` answers).
+    pub fn from_bools(bits: &[bool]) -> AnswerBits {
+        let mut out = AnswerBits::with_len(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                out.bytes[i / 8] |= 1 << (i % 8);
+            }
+        }
+        out
+    }
+
+    /// Rebuild from the wire's raw form: `len` answers packed LSB-first.
+    /// `bytes` is resized to the invariant length and tail bits beyond
+    /// `len` are cleared, so a hostile frame cannot smuggle garbage into
+    /// equality comparisons.
+    pub fn from_raw(len: usize, mut bytes: Vec<u8>) -> AnswerBits {
+        bytes.resize(len.div_ceil(8), 0);
+        let mut out = AnswerBits { len, bytes };
+        out.mask_tail();
+        out
+    }
+
+    /// Number of answers.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Reset to `n` all-false answers, reusing the allocation — the
+    /// scratch-reuse primitive for per-shard answer lanes.
+    pub fn reset(&mut self, n: usize) {
+        self.len = n;
+        self.bytes.clear();
+        self.bytes.resize(n.div_ceil(8), 0);
+    }
+
+    /// Drop excess capacity above `cap_bits` answers (used when parking
+    /// scratch buffers so a burst's peak footprint is not pinned).
+    pub fn shrink_to(&mut self, cap_bits: usize) {
+        self.bytes.shrink_to(cap_bits.div_ceil(8));
+    }
+
+    /// Answer `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.bytes[i / 8] & (1 << (i % 8)) != 0
+    }
+
+    /// Overwrite answer `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let mask = 1u8 << (i % 8);
+        if v {
+            self.bytes[i / 8] |= mask;
+        } else {
+            self.bytes[i / 8] &= !mask;
+        }
+    }
+
+    /// Set answer `i` to true (the scatter fast path over a reset buffer).
+    #[inline]
+    pub fn set_true(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.bytes[i / 8] |= 1 << (i % 8);
+    }
+
+    /// Append one answer.
+    pub fn push(&mut self, v: bool) {
+        if self.len % 8 == 0 {
+            self.bytes.push(0);
+        }
+        if v {
+            self.bytes[self.len / 8] |= 1 << (self.len % 8);
+        }
+        self.len += 1;
+    }
+
+    /// Number of true answers.
+    pub fn count_ones(&self) -> usize {
+        self.bytes.iter().map(|b| b.count_ones() as usize).sum()
+    }
+
+    /// True iff every answer is true.
+    pub fn all(&self) -> bool {
+        self.count_ones() == self.len
+    }
+
+    /// True iff any answer is true.
+    pub fn any(&self) -> bool {
+        self.bytes.iter().any(|&b| b != 0)
+    }
+
+    /// Iterate the answers as bools.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+
+    /// Widen to a bool vector (the compatibility edge; the hot path never
+    /// calls this).
+    pub fn to_bools(&self) -> Vec<bool> {
+        self.iter().collect()
+    }
+
+    /// The packed bytes — tail bits beyond `len` are guaranteed zero, so
+    /// this is byte-for-byte the wire codec's answer body.
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Mutable view of the packed bytes for the lookup kernels, which
+    /// write whole chunks at a time (see [`store_chunk32`]). Callers must
+    /// keep the tail-bits-zero invariant.
+    pub(crate) fn as_mut_bytes(&mut self) -> &mut [u8] {
+        &mut self.bytes
+    }
+
+    fn mask_tail(&mut self) {
+        if self.len % 8 != 0 {
+            if let Some(last) = self.bytes.last_mut() {
+                *last &= (1u8 << (self.len % 8)) - 1;
+            }
+        }
+    }
+}
+
+/// Store `nbits` (≤ 32) answers, packed LSB-first in `bits`, into the
+/// byte region at chunk `chunk_idx` (bit offset `chunk_idx * 32`). The
+/// kernels accumulate one 32-key chunk's answers in a register and flush
+/// them with a single 1–4-byte store; bits of `bits` at positions
+/// `>= nbits` must be zero (the tail-invariant carrier).
+#[inline]
+pub(crate) fn store_chunk32(region: &mut [u8], chunk_idx: usize, bits: u32, nbits: usize) {
+    debug_assert!(nbits > 0 && nbits <= 32);
+    debug_assert!(nbits == 32 || bits >> nbits == 0);
+    let le = bits.to_le_bytes();
+    let start = chunk_idx * 4;
+    let nbytes = nbits.div_ceil(8);
+    region[start..start + nbytes].copy_from_slice(&le[..nbytes]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_set_push_round_trip() {
+        let pattern: Vec<bool> = (0..67).map(|i| i % 3 == 0).collect();
+        let mut bits = AnswerBits::new();
+        for &b in &pattern {
+            bits.push(b);
+        }
+        assert_eq!(bits.len(), 67);
+        assert_eq!(bits.to_bools(), pattern);
+        assert_eq!(AnswerBits::from_bools(&pattern), bits);
+        bits.set(1, true);
+        assert!(bits.get(1));
+        bits.set(0, false);
+        assert!(!bits.get(0));
+        bits.set_true(0);
+        assert!(bits.get(0));
+    }
+
+    #[test]
+    fn packing_is_lsb_first() {
+        // answer i lives at bytes[i/8] bit (i%8) — the wire convention
+        let bits = AnswerBits::from_bools(&[true, false, false, true, false, false, false, false, true]);
+        assert_eq!(bits.as_bytes(), &[0b0000_1001, 0b0000_0001]);
+    }
+
+    #[test]
+    fn ones_and_counts_mask_the_tail() {
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65] {
+            let ones = AnswerBits::ones(n);
+            assert_eq!(ones.len(), n);
+            assert_eq!(ones.count_ones(), n, "n = {n}");
+            assert!(ones.all());
+            assert_eq!(ones.any(), n > 0);
+            assert_eq!(ones, AnswerBits::from_bools(&vec![true; n]));
+            let zeros = AnswerBits::with_len(n);
+            assert_eq!(zeros.count_ones(), 0);
+            assert!(!zeros.any());
+        }
+    }
+
+    #[test]
+    fn from_raw_clears_tail_garbage() {
+        // a frame carrying set bits beyond len must not break equality
+        let bits = AnswerBits::from_raw(3, vec![0b1111_1111]);
+        assert_eq!(bits, AnswerBits::from_bools(&[true, true, true]));
+        assert_eq!(bits.as_bytes(), &[0b0000_0111]);
+        // short byte vectors are padded out to the invariant length
+        assert_eq!(AnswerBits::from_raw(10, vec![0xFF]), AnswerBits::from_raw(10, vec![0xFF, 0]));
+    }
+
+    #[test]
+    fn reset_reuses_and_clears() {
+        let mut bits = AnswerBits::ones(100);
+        bits.reset(9);
+        assert_eq!(bits.len(), 9);
+        assert_eq!(bits.count_ones(), 0);
+        assert_eq!(bits.as_bytes().len(), 2);
+    }
+
+    #[test]
+    fn store_chunk32_writes_chunks() {
+        let mut region = vec![0u8; 9]; // 65 bits worth
+        store_chunk32(&mut region, 0, 0xDEAD_BEEF, 32);
+        store_chunk32(&mut region, 1, 0x0000_0155, 9);
+        let bits = AnswerBits::from_raw(41, region);
+        for i in 0..32 {
+            assert_eq!(bits.get(i), 0xDEAD_BEEFu32 & (1 << i) != 0, "bit {i}");
+        }
+        for i in 0..9 {
+            assert_eq!(bits.get(32 + i), 0x155u32 & (1 << i) != 0, "tail bit {i}");
+        }
+    }
+}

@@ -11,6 +11,7 @@
 
 use anyhow::Result;
 
+use super::answer::AnswerBits;
 use super::bloom::Bloom;
 use super::params::{FilterConfig, Scheme, Variant};
 
@@ -66,6 +67,16 @@ impl Bbf {
 
     pub fn bulk_contains(&self, keys: &[u64], threads: usize) -> Vec<bool> {
         self.inner.bulk_contains(keys, threads)
+    }
+
+    /// Batch-native insert through the bulk kernel.
+    pub fn insert_bulk(&self, keys: &[u64]) {
+        self.inner.insert_bulk(keys)
+    }
+
+    /// Batch-native lookup into bit-packed answers.
+    pub fn contains_bulk(&self, keys: &[u64], out: &mut AnswerBits) {
+        self.inner.contains_bulk(keys, out)
     }
 }
 

@@ -1,12 +1,20 @@
-//! The shared filter engine: atomic word storage + bulk operations.
+//! The shared filter engine: atomic word storage + batch-native kernels.
 //!
 //! Insertions use `fetch_or` with relaxed ordering — the CPU analogue of the
 //! GPU's relaxed `atomicOr` (§2.2): OR is commutative and idempotent, so no
 //! ordering between concurrent inserts is required, and a `SeqCst` fence at
 //! the end of each bulk call publishes the bits to subsequent readers.
 //!
-//! Bulk operations shard the key range over `std::thread::scope` threads
-//! (the paper's CPU baseline is "a multithreaded CPU SBF implementation").
+//! Bulk traffic runs through the **bulk kernels** ([`Bloom::insert_bulk`] /
+//! [`Bloom::contains_bulk`]): variant dispatch is hoisted out of the key
+//! loop, every 32-key chunk is staged — base-hash the chunk (the §4.2
+//! vectorization dimension), compute and prefetch all its block addresses
+//! before any word is touched (the §4.1 latency dimension), then probe —
+//! and lookup answers are accumulated in a register and flushed bit-packed
+//! into an [`AnswerBits`] buffer, the exact form the wire codec ships.
+//! Multi-threaded wrappers split the key range over `std::thread::scope`
+//! threads (the paper's CPU baseline is "a multithreaded CPU SBF
+//! implementation").
 
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
@@ -14,7 +22,18 @@ use anyhow::{ensure, Result};
 
 use crate::hash::pattern::{BlockMask, ProbePlan, ProbeSet};
 
+use super::answer::{store_chunk32, AnswerBits};
 use super::params::FilterConfig;
+
+/// Keys per kernel chunk: small enough that one chunk's block prefetches
+/// fit the machine's outstanding-miss capacity, large enough to amortize
+/// the staged loops; a chunk's 32 answers flush as one aligned store.
+const KERNEL_CHUNK: usize = 32;
+
+/// Below this many keys per thread the scoped-spawn cost eats the
+/// parallel win — the one source of truth for the auto-threading
+/// heuristic here and the registry's per-lane cap.
+pub(crate) const MIN_KEYS_PER_THREAD: usize = 256;
 
 /// Word abstraction so one engine serves S = 64 and S = 32 filters.
 pub trait FilterWord: Copy + Eq + Send + Sync + std::fmt::Debug + 'static {
@@ -131,25 +150,12 @@ impl<W: FilterWord> Bloom<W> {
 
     // ---- single-key operations ----
 
-    /// Insert one key (lock-free; callable concurrently).
+    /// Insert one key (lock-free; callable concurrently). One
+    /// implementation for singles: the insert kernel's chunk of one
+    /// ([`Self::insert_kernel1`]).
     #[inline]
     pub fn add(&self, key: u64) {
-        if self.cfg.is_blocked() {
-            let mut bm = BlockMask::default();
-            self.plan.gen_block_mask(key, &mut bm);
-            for w in 0..bm.s {
-                let mask = bm.masks[w];
-                if mask != 0 {
-                    W::fetch_or(&self.words[bm.block_word0 as usize + w], W::from_u64(mask));
-                }
-            }
-        } else {
-            let mut probes = ProbeSet::default();
-            self.plan.gen_probes(key, &mut probes);
-            for (w, m) in probes.iter() {
-                W::fetch_or(&self.words[w as usize], W::from_u64(m));
-            }
-        }
+        self.insert_kernel1(key);
     }
 
     /// Membership test for one key.
@@ -177,55 +183,92 @@ impl<W: FilterWord> Bloom<W> {
         }
     }
 
-    /// The generic probe-walk lookup (CBF path; equivalence oracle for the
-    /// block-mask fast path in tests).
+    /// The generic probe-walk lookup (equivalence oracle for the
+    /// block-mask fast path in tests) — one name for the bulk kernel's
+    /// probe path applied to a single key.
     #[inline]
     fn contains_generic(&self, key: u64) -> bool {
+        self.contains_kernel1(key)
+    }
+
+    /// The bulk kernel applied to a chunk of one: identical pattern
+    /// generation and probe check as [`Self::contains_bulk`], without the
+    /// answer buffer. The registry's single-key path routes here so the
+    /// scalar and bulk probe paths cannot drift.
+    #[inline]
+    pub fn contains_kernel1(&self, key: u64) -> bool {
         let mut probes = ProbeSet::default();
-        self.plan.gen_probes(key, &mut probes);
+        self.plan.gen_probes_from_base(crate::hash::base_hash(key), &mut probes);
         self.check_probes(&probes)
     }
 
-    // ---- bulk operations ----
+    // ---- bulk operations: the batch-native kernels ----
 
-    /// Bulk insert across `threads` OS threads (0 = available parallelism).
-    pub fn bulk_add(&self, keys: &[u64], threads: usize) {
-        let threads = effective_threads(threads, keys.len());
-        if threads <= 1 {
-            self.add_run(keys);
-        } else {
-            let chunk = keys.len().div_ceil(threads);
-            std::thread::scope(|scope| {
-                for part in keys.chunks(chunk) {
-                    scope.spawn(move || self.add_run(part));
-                }
-            });
-        }
+    /// Batch-native insert (one thread): variant dispatch hoisted out of
+    /// the key loop, then per 32-key chunk — (1) base-hash the whole
+    /// chunk ([`crate::hash::base_hash_batch`], auto-vectorizable);
+    /// (2) compute every block's first word and prefetch it, so all the
+    /// chunk's cache misses are in flight before any word is written;
+    /// (3) generate patterns and issue the atomic ORs. A `SeqCst` fence
+    /// publishes the bits to subsequent readers.
+    pub fn insert_bulk(&self, keys: &[u64]) {
+        self.insert_kernel(keys);
         std::sync::atomic::fence(Ordering::SeqCst);
     }
 
-    /// One thread's insert loop, pipelined like [`Self::contains_run`]:
-    /// hash + prefetch a window ahead, then issue the atomic ORs. Probe
-    /// words are distinct for SBF/RBBF/CSBF so the ProbeSet feeds atomics
-    /// directly; BBF merges duplicate words through the dense block mask
-    /// first (fewer atomics, the §5.2 coalescing story in miniature).
-    fn add_run(&self, keys: &[u64]) {
+    /// The insert kernel applied to a chunk of one: same per-key write
+    /// path as [`Self::insert_bulk`] — the dense [`BlockMask`] merge for
+    /// blocked variants (one OR per touched word, the BBF coalescing),
+    /// the [`ProbeSet`] scatter for CBF — with none of the kernel's
+    /// chunk buffers and without the bulk publish fence. `add` and the
+    /// registry's single-key path route here, so the scalar and bulk
+    /// write paths cannot drift — and pay neither a per-key fence nor a
+    /// per-key allocation.
+    #[inline]
+    pub fn insert_kernel1(&self, key: u64) {
+        let base = crate::hash::base_hash(key);
+        if self.cfg.is_blocked() {
+            let mut bm = BlockMask::default();
+            self.plan.gen_block_mask_from_base(base, &mut bm);
+            for w in 0..bm.s {
+                let mask = bm.masks[w];
+                if mask != 0 {
+                    W::fetch_or(&self.words[bm.block_word0 as usize + w], W::from_u64(mask));
+                }
+            }
+        } else {
+            let mut probes = ProbeSet::default();
+            self.plan.gen_probes_from_base(base, &mut probes);
+            for (w, m) in probes.iter() {
+                W::fetch_or(&self.words[w as usize], W::from_u64(m));
+            }
+        }
+    }
+
+    /// The insert kernel body (no fence — the bulk wrappers fence once).
+    /// Probe words are distinct for SBF/RBBF/CSBF, so the ProbeSet feeds
+    /// the atomics directly; BBF merges probes that share a word through
+    /// the dense block mask first (fewer atomics — the §5.2 coalescing
+    /// story in miniature); CBF scatters across the whole array, so its
+    /// probes are generated and prefetched a chunk ahead of the ORs.
+    fn insert_kernel(&self, keys: &[u64]) {
         use crate::filter::params::Variant;
-        use crate::hash::base_hash;
-        const LOOKAHEAD: usize = 8;
+        use crate::hash::base_hash_batch;
         let plan = &self.plan;
+        let mut bases = [0u64; KERNEL_CHUNK];
         match self.cfg.variant {
             Variant::Sbf | Variant::Rbbf | Variant::Csbf => {
-                let s = self.cfg.s() as u64;
-                let mut bases = [0u64; LOOKAHEAD];
+                let s = self.cfg.s() as usize;
+                let mut bw0s = [0u64; KERNEL_CHUNK];
                 let mut probes = ProbeSet::default();
-                for chunk_keys in keys.chunks(LOOKAHEAD) {
-                    for (i, &key) in chunk_keys.iter().enumerate() {
-                        let base = base_hash(key);
-                        bases[i] = base;
-                        self.prefetch((plan.block_index(base) * s) as usize, s as usize);
+                for chunk in keys.chunks(KERNEL_CHUNK) {
+                    let n = chunk.len();
+                    base_hash_batch(chunk, &mut bases[..n]);
+                    plan.block_word0_batch(&bases[..n], &mut bw0s[..n]);
+                    for &bw0 in &bw0s[..n] {
+                        self.prefetch(bw0 as usize, s);
                     }
-                    for &base in bases.iter().take(chunk_keys.len()) {
+                    for &base in &bases[..n] {
                         plan.gen_probes_from_base(base, &mut probes);
                         for i in 0..probes.len {
                             let m = probes.masks[i];
@@ -236,100 +279,161 @@ impl<W: FilterWord> Bloom<W> {
                     }
                 }
             }
-            Variant::Bbf | Variant::Cbf => {
-                let mut probes = ProbeSet::default();
+            Variant::Bbf => {
+                let s = self.cfg.s() as usize;
+                let mut bw0s = [0u64; KERNEL_CHUNK];
                 let mut bm = BlockMask::default();
-                for &k in keys {
-                    self.add_with_buffers(k, &mut probes, &mut bm);
-                }
-            }
-        }
-    }
-
-    #[inline]
-    fn add_with_buffers(&self, key: u64, probes: &mut ProbeSet, bm: &mut BlockMask) {
-        if self.cfg.is_blocked() {
-            self.plan.gen_block_mask(key, bm);
-            for w in 0..bm.s {
-                let mask = bm.masks[w];
-                if mask != 0 {
-                    W::fetch_or(&self.words[bm.block_word0 as usize + w], W::from_u64(mask));
-                }
-            }
-        } else {
-            self.plan.gen_probes(key, probes);
-            for (w, m) in probes.iter() {
-                W::fetch_or(&self.words[w as usize], W::from_u64(m));
-            }
-        }
-    }
-
-    /// Bulk membership test; returns one bool per key.
-    pub fn bulk_contains(&self, keys: &[u64], threads: usize) -> Vec<bool> {
-        let threads = effective_threads(threads, keys.len());
-        let mut out = vec![false; keys.len()];
-        if threads <= 1 {
-            self.contains_run(keys, &mut out);
-        } else {
-            let chunk = keys.len().div_ceil(threads);
-            std::thread::scope(|scope| {
-                for (part_keys, part_out) in keys.chunks(chunk).zip(out.chunks_mut(chunk)) {
-                    scope.spawn(move || self.contains_run(part_keys, part_out));
-                }
-            });
-        }
-        out
-    }
-
-    /// One thread's lookup loop: variant-monomorphic hot paths with a
-    /// software-prefetch pipeline (hash a window ahead, prefetch the block
-    /// cache lines, then probe) — the CPU analogue of §4.1's decoupled
-    /// fetch/compute schedule. Falls back to the generic probe walk for
-    /// CBF (whole-array scatter; prefetching k lines per key still helps).
-    fn contains_run(&self, keys: &[u64], out: &mut [bool]) {
-        use crate::hash::base_hash;
-        const LOOKAHEAD: usize = 8;
-        let plan = &self.plan;
-        match self.cfg.variant {
-            crate::filter::params::Variant::Sbf
-            | crate::filter::params::Variant::Rbbf
-            | crate::filter::params::Variant::Csbf
-            | crate::filter::params::Variant::Bbf => {
-                let s = self.cfg.s() as u64;
-                // pipeline stage 1: base hashes + block starts (+ prefetch)
-                let mut bases = [0u64; LOOKAHEAD];
-                let mut bw0s = [0usize; LOOKAHEAD];
-                let mut probes = ProbeSet::default();
-                for (chunk_keys, chunk_out) in keys.chunks(LOOKAHEAD).zip(out.chunks_mut(LOOKAHEAD)) {
-                    for (i, &key) in chunk_keys.iter().enumerate() {
-                        let base = base_hash(key);
-                        let bw0 = (plan.block_index(base) * s) as usize;
-                        bases[i] = base;
-                        bw0s[i] = bw0;
-                        self.prefetch(bw0, s as usize);
+                for chunk in keys.chunks(KERNEL_CHUNK) {
+                    let n = chunk.len();
+                    base_hash_batch(chunk, &mut bases[..n]);
+                    plan.block_word0_batch(&bases[..n], &mut bw0s[..n]);
+                    for &bw0 in &bw0s[..n] {
+                        self.prefetch(bw0 as usize, s);
                     }
-                    // pipeline stage 2: pattern + probe with early exit
-                    for (i, slot) in chunk_out.iter_mut().enumerate() {
-                        plan.gen_probes_from_base(bases[i], &mut probes);
-                        *slot = self.check_probes(&probes);
+                    for &base in &bases[..n] {
+                        plan.gen_block_mask_from_base(base, &mut bm);
+                        for w in 0..bm.s {
+                            let mask = bm.masks[w];
+                            if mask != 0 {
+                                W::fetch_or(&self.words[bm.block_word0 as usize + w], W::from_u64(mask));
+                            }
+                        }
                     }
                 }
             }
-            crate::filter::params::Variant::Cbf => {
-                let mut probe_buf: Vec<ProbeSet> = (0..LOOKAHEAD).map(|_| ProbeSet::default()).collect();
-                for (chunk_keys, chunk_out) in keys.chunks(LOOKAHEAD).zip(out.chunks_mut(LOOKAHEAD)) {
-                    for (i, &key) in chunk_keys.iter().enumerate() {
-                        plan.gen_probes(key, &mut probe_buf[i]);
-                        for (w, _) in probe_buf[i].iter() {
+            Variant::Cbf => {
+                // sized to the call: a bulk of one initializes one
+                // ProbeSet (like the scalar path), not a whole chunk's
+                let lanes = keys.len().min(KERNEL_CHUNK);
+                let mut probe_buf: Vec<ProbeSet> = (0..lanes).map(|_| ProbeSet::default()).collect();
+                for chunk in keys.chunks(KERNEL_CHUNK) {
+                    let n = chunk.len();
+                    base_hash_batch(chunk, &mut bases[..n]);
+                    for (i, buf) in probe_buf[..n].iter_mut().enumerate() {
+                        plan.gen_probes_from_base(bases[i], buf);
+                        for (w, _) in buf.iter() {
                             self.prefetch(w as usize, 1);
                         }
                     }
-                    for (i, slot) in chunk_out.iter_mut().enumerate() {
-                        *slot = self.check_probes(&probe_buf[i]);
+                    for buf in &probe_buf[..n] {
+                        for (w, m) in buf.iter() {
+                            W::fetch_or(&self.words[w as usize], W::from_u64(m));
+                        }
                     }
                 }
             }
         }
+    }
+
+    /// Batch-native lookup: answers land **bit-packed** in `out`
+    /// (`out.get(i)` answers `keys[i]`) — the exact form the wire codec
+    /// ships, so a reply never repacks. Same staged chunks as
+    /// [`Self::insert_bulk`], with each chunk's answers accumulated in a
+    /// register and flushed as one aligned store.
+    pub fn contains_bulk(&self, keys: &[u64], out: &mut AnswerBits) {
+        out.reset(keys.len());
+        if !keys.is_empty() {
+            self.contains_kernel(keys, out.as_mut_bytes());
+        }
+    }
+
+    /// The lookup kernel body: writes `keys.len()` answer bits into
+    /// `region` starting at bit 0 (LSB-first). `region` must hold
+    /// `keys.len().div_ceil(8)` bytes; threaded callers hand each thread
+    /// a 64-key-aligned sub-region.
+    fn contains_kernel(&self, keys: &[u64], region: &mut [u8]) {
+        use crate::filter::params::Variant;
+        use crate::hash::base_hash_batch;
+        let plan = &self.plan;
+        let mut bases = [0u64; KERNEL_CHUNK];
+        match self.cfg.variant {
+            Variant::Sbf | Variant::Rbbf | Variant::Csbf | Variant::Bbf => {
+                let s = self.cfg.s() as usize;
+                let mut bw0s = [0u64; KERNEL_CHUNK];
+                let mut probes = ProbeSet::default();
+                for (c, chunk) in keys.chunks(KERNEL_CHUNK).enumerate() {
+                    let n = chunk.len();
+                    base_hash_batch(chunk, &mut bases[..n]);
+                    plan.block_word0_batch(&bases[..n], &mut bw0s[..n]);
+                    for &bw0 in &bw0s[..n] {
+                        self.prefetch(bw0 as usize, s);
+                    }
+                    let mut acc = 0u32;
+                    for (i, &base) in bases[..n].iter().enumerate() {
+                        plan.gen_probes_from_base(base, &mut probes);
+                        acc |= (self.check_probes(&probes) as u32) << i;
+                    }
+                    store_chunk32(region, c, acc, n);
+                }
+            }
+            Variant::Cbf => {
+                // sized to the call (see the insert kernel's CBF arm)
+                let lanes = keys.len().min(KERNEL_CHUNK);
+                let mut probe_buf: Vec<ProbeSet> = (0..lanes).map(|_| ProbeSet::default()).collect();
+                for (c, chunk) in keys.chunks(KERNEL_CHUNK).enumerate() {
+                    let n = chunk.len();
+                    base_hash_batch(chunk, &mut bases[..n]);
+                    for (i, buf) in probe_buf[..n].iter_mut().enumerate() {
+                        plan.gen_probes_from_base(bases[i], buf);
+                        for (w, _) in buf.iter() {
+                            self.prefetch(w as usize, 1);
+                        }
+                    }
+                    let mut acc = 0u32;
+                    for (i, buf) in probe_buf[..n].iter().enumerate() {
+                        acc |= (self.check_probes(buf) as u32) << i;
+                    }
+                    store_chunk32(region, c, acc, n);
+                }
+            }
+        }
+    }
+
+    /// Bulk insert across `threads` OS threads (0 = available
+    /// parallelism); each thread runs the insert kernel on its key range.
+    pub fn bulk_add(&self, keys: &[u64], threads: usize) {
+        let threads = effective_threads(threads, keys.len());
+        if threads <= 1 {
+            self.insert_kernel(keys);
+        } else {
+            let chunk = keys.len().div_ceil(threads);
+            std::thread::scope(|scope| {
+                for part in keys.chunks(chunk) {
+                    scope.spawn(move || self.insert_kernel(part));
+                }
+            });
+        }
+        std::sync::atomic::fence(Ordering::SeqCst);
+    }
+
+    /// Bulk membership test; returns one bool per key (the compatibility
+    /// wrapper over [`Self::bulk_contains_bits`]).
+    pub fn bulk_contains(&self, keys: &[u64], threads: usize) -> Vec<bool> {
+        let mut out = AnswerBits::new();
+        self.bulk_contains_bits(keys, threads, &mut out);
+        out.to_bools()
+    }
+
+    /// [`Self::contains_bulk`] across `threads` OS threads (0 = available
+    /// parallelism): the key range is split on 64-key boundaries so each
+    /// thread owns a disjoint byte region of the answer buffer.
+    pub fn bulk_contains_bits(&self, keys: &[u64], threads: usize, out: &mut AnswerBits) {
+        out.reset(keys.len());
+        if keys.is_empty() {
+            return;
+        }
+        let threads = effective_threads(threads, keys.len());
+        let bytes = out.as_mut_bytes();
+        if threads <= 1 {
+            self.contains_kernel(keys, bytes);
+            return;
+        }
+        let chunk = keys.len().div_ceil(threads).next_multiple_of(64);
+        std::thread::scope(|scope| {
+            for (part, region) in keys.chunks(chunk).zip(bytes.chunks_mut(chunk / 8)) {
+                scope.spawn(move || self.contains_kernel(part, region));
+            }
+        });
     }
 
     /// Prefetch the cache lines backing words [w0, w0+len).
@@ -424,12 +528,14 @@ impl<W: FilterWord> Bloom<W> {
 }
 
 fn effective_threads(threads: usize, work: usize) -> usize {
-    let t = if threads == 0 {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    if threads == 0 {
+        // auto: one thread per MIN_KEYS_PER_THREAD keys, up to the machine
+        let t = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        t.min((work / MIN_KEYS_PER_THREAD).max(1)).min(64)
     } else {
-        threads
-    };
-    t.min(work.max(1)).min(64)
+        // an explicit request is honored (capped at the work itself)
+        threads.min(work.max(1)).min(64)
+    }
 }
 
 /// Word-size-erased filter for runtime-configured pipelines.
@@ -468,6 +574,41 @@ impl AnyBloom {
         }
     }
 
+    /// Batch-native insert through the word-size-matched kernel — the
+    /// enum dispatch happens once per bulk, not once per key.
+    pub fn insert_bulk(&self, keys: &[u64]) {
+        match self {
+            AnyBloom::W64(b) => b.insert_bulk(keys),
+            AnyBloom::W32(b) => b.insert_bulk(keys),
+        }
+    }
+
+    /// Batch-native lookup into bit-packed answers (single dispatch).
+    pub fn contains_bulk(&self, keys: &[u64], out: &mut AnswerBits) {
+        match self {
+            AnyBloom::W64(b) => b.contains_bulk(keys, out),
+            AnyBloom::W32(b) => b.contains_bulk(keys, out),
+        }
+    }
+
+    /// The bulk lookup kernel applied to a chunk of one (the registry's
+    /// single-key path — same probe path as [`AnyBloom::contains_bulk`]).
+    pub fn contains_kernel1(&self, key: u64) -> bool {
+        match self {
+            AnyBloom::W64(b) => b.contains_kernel1(key),
+            AnyBloom::W32(b) => b.contains_kernel1(key),
+        }
+    }
+
+    /// The insert kernel applied to a chunk of one (fence-free single-key
+    /// write path — see [`Bloom::insert_kernel1`]).
+    pub fn insert_kernel1(&self, key: u64) {
+        match self {
+            AnyBloom::W64(b) => b.insert_kernel1(key),
+            AnyBloom::W32(b) => b.insert_kernel1(key),
+        }
+    }
+
     pub fn bulk_add(&self, keys: &[u64], threads: usize) {
         match self {
             AnyBloom::W64(b) => b.bulk_add(keys, threads),
@@ -479,6 +620,14 @@ impl AnyBloom {
         match self {
             AnyBloom::W64(b) => b.bulk_contains(keys, threads),
             AnyBloom::W32(b) => b.bulk_contains(keys, threads),
+        }
+    }
+
+    /// Threaded bit-packed lookup (see [`Bloom::bulk_contains_bits`]).
+    pub fn bulk_contains_bits(&self, keys: &[u64], threads: usize, out: &mut AnswerBits) {
+        match self {
+            AnyBloom::W64(b) => b.bulk_contains_bits(keys, threads, out),
+            AnyBloom::W32(b) => b.bulk_contains_bits(keys, threads, out),
         }
     }
 
@@ -586,6 +735,38 @@ mod tests {
                 assert_eq!(fast, bulk[i], "{}: key {key:#x} vs bulk", cfg.name());
             }
             assert!(ins.iter().all(|&k| f.contains(k)), "{}", cfg.name());
+        }
+    }
+
+    #[test]
+    fn bulk_kernels_match_scalar_paths() {
+        for cfg in all_cfgs() {
+            let scalar = Bloom::<u64>::new(cfg).unwrap();
+            let bulk = Bloom::<u64>::new(cfg).unwrap();
+            let keys = unique_keys(3000, 31);
+            for &k in &keys {
+                scalar.add(k);
+            }
+            bulk.insert_bulk(&keys);
+            assert_eq!(scalar.snapshot(), bulk.snapshot(), "{}: byte-identical words", cfg.name());
+            let singles = Bloom::<u64>::new(cfg).unwrap();
+            for &k in &keys {
+                singles.insert_kernel1(k);
+            }
+            assert_eq!(singles.snapshot(), bulk.snapshot(), "{}: kernel chunk-of-one writes", cfg.name());
+            let mut probe = keys.clone();
+            probe.extend(unique_keys(3000, 32)); // absent tail (incl. FPs)
+            let mut bits = AnswerBits::new();
+            bulk.contains_bulk(&probe, &mut bits);
+            assert_eq!(bits.len(), probe.len());
+            for (i, &key) in probe.iter().enumerate() {
+                assert_eq!(bits.get(i), scalar.contains(key), "{}: key {key:#x}", cfg.name());
+                assert_eq!(bits.get(i), bulk.contains_kernel1(key), "{}: kernel1", cfg.name());
+            }
+            // the threaded splitter must land every answer on the same bit
+            let mut threaded = AnswerBits::new();
+            bulk.bulk_contains_bits(&probe, 4, &mut threaded);
+            assert_eq!(threaded, bits, "{}", cfg.name());
         }
     }
 

@@ -8,6 +8,7 @@
 
 use anyhow::Result;
 
+use super::answer::AnswerBits;
 use super::bloom::Bloom;
 use super::params::{FilterConfig, Variant};
 
@@ -47,6 +48,16 @@ impl Csbf {
 
     pub fn bulk_contains(&self, keys: &[u64], threads: usize) -> Vec<bool> {
         self.inner.bulk_contains(keys, threads)
+    }
+
+    /// Batch-native insert through the bulk kernel.
+    pub fn insert_bulk(&self, keys: &[u64]) {
+        self.inner.insert_bulk(keys)
+    }
+
+    /// Batch-native lookup into bit-packed answers.
+    pub fn contains_bulk(&self, keys: &[u64], out: &mut AnswerBits) {
+        self.inner.contains_bulk(keys, out)
     }
 }
 

@@ -11,7 +11,16 @@
 //! This is simultaneously: the paper's *CPU baseline* (multithreaded SBF),
 //! the native request-path backend of the coordinator, and the oracle the
 //! PJRT artifacts are validated against.
+//!
+//! Bulk traffic goes through the **batch-native kernels**
+//! (`insert_bulk` / `contains_bulk` on every variant and on [`AnyBloom`]):
+//! variant dispatch hoisted out of the key loop, chunked base hashing,
+//! block addresses prefetched a whole chunk ahead of the probes, and
+//! answers written bit-packed into an [`answer::AnswerBits`] buffer —
+//! the software transcription of the paper's vectorization / cooperation /
+//! latency dimensions (§4).
 
+pub mod answer;
 pub mod bbf;
 pub mod bloom;
 pub mod cbf;
@@ -20,5 +29,6 @@ pub mod params;
 pub mod rbbf;
 pub mod sbf;
 
+pub use answer::AnswerBits;
 pub use bloom::{AnyBloom, Bloom, FilterWord};
 pub use params::{FilterConfig, Scheme, Variant};

@@ -10,6 +10,7 @@ use anyhow::Result;
 
 use crate::hash::{base_hash, salt_bit, salt_block, tophash};
 
+use super::answer::AnswerBits;
 use super::bloom::Bloom;
 use super::params::{FilterConfig, Variant};
 
@@ -55,6 +56,16 @@ impl Sbf {
 
     pub fn bulk_contains(&self, keys: &[u64], threads: usize) -> Vec<bool> {
         self.inner.bulk_contains(keys, threads)
+    }
+
+    /// Batch-native insert through the bulk kernel.
+    pub fn insert_bulk(&self, keys: &[u64]) {
+        self.inner.insert_bulk(keys)
+    }
+
+    /// Batch-native lookup into bit-packed answers.
+    pub fn contains_bulk(&self, keys: &[u64], out: &mut AnswerBits) {
+        self.inner.contains_bulk(keys, out)
     }
 }
 

@@ -107,6 +107,19 @@ pub fn base_hash(key: u64) -> u64 {
     xxh64_u64(key, SEED_BASE)
 }
 
+/// Base-hash a whole chunk of keys (the bulk kernels' stage 1 — the
+/// vectorization dimension of §4.2): a branchless mul/rotate/xor loop
+/// over contiguous slices with no memory dependencies, so the compiler
+/// is free to unroll and auto-vectorize it. Bit-identical to calling
+/// [`base_hash`] per key.
+#[inline]
+pub fn base_hash_batch(keys: &[u64], out: &mut [u64]) {
+    debug_assert_eq!(keys.len(), out.len());
+    for (o, &k) in out.iter_mut().zip(keys) {
+        *o = base_hash(k);
+    }
+}
+
 /// Universal multiplicative hash: top `nbits` of `base * salt` (mod 2^64).
 ///
 /// `nbits == 0` yields 0 (e.g. block index when the filter is one block).

@@ -191,11 +191,31 @@ impl ProbePlan {
         }
     }
 
+    /// Batched stage 2 of the bulk kernels: first word of every base's
+    /// block, over a whole chunk — pure multiply/shift arithmetic with no
+    /// loads, computed (and prefetched) before any filter word is touched
+    /// (the latency dimension of §4.1's decoupled fetch/compute schedule).
+    #[inline]
+    pub fn block_word0_batch(&self, bases: &[u64], out: &mut [u64]) {
+        debug_assert!(self.cfg.is_blocked());
+        debug_assert_eq!(bases.len(), out.len());
+        let s = self.s as u64;
+        for (o, &base) in out.iter_mut().zip(bases) {
+            *o = self.block_index(base) * s;
+        }
+    }
+
     /// Dense block-mask form for insertion (blocked variants only).
     pub fn gen_block_mask(&self, key: u64, out: &mut BlockMask) {
+        self.gen_block_mask_from_base(base_hash(key), out);
+    }
+
+    /// Same, starting from a precomputed base hash — the bulk insert
+    /// kernel's stage 3, fed by [`crate::hash::base_hash_batch`].
+    pub fn gen_block_mask_from_base(&self, base: u64, out: &mut BlockMask) {
         debug_assert!(self.cfg.is_blocked());
         let mut probes = ProbeSet::default();
-        self.gen_probes(key, &mut probes);
+        self.gen_probes_from_base(base, &mut probes);
         let s = self.s as usize;
         let bw0 = (probes.words[0] / self.s as u64) * self.s as u64;
         out.block_word0 = bw0;

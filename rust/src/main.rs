@@ -60,6 +60,7 @@ fn print_usage() {
          commands:\n  \
            info                         platform + artifact inventory\n  \
            bench --exp <id> [--out d]   table1|table2|fig4..fig9|gups|fpr|cpu|calibration|all\n  \
+           bench --exp bulk [--out f] [--check]   bulk-vs-scalar Mops/s baseline -> BENCH_5.json\n  \
            fpr  --variant v --block B --k K [--z Z] [--log2-m N]\n  \
            sim  --variant v --block B [--theta T] [--phi P] [--op o] [--arch a] [--size-mb M]\n  \
            gups                         random-access speed-of-light\n  \
@@ -115,8 +116,19 @@ fn cmd_info(_args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
-    args.check_known(&["exp", "out"])?;
+    args.check_known(&["exp", "out", "check"])?;
     let exp = args.get_or("exp", "all");
+    ensure!(
+        !args.has_switch("check") || exp == "bulk",
+        "--check only applies to --exp bulk (the bulk-vs-scalar regression gate)"
+    );
+    if exp == "bulk" {
+        // the bulk-vs-scalar kernel baseline writes a machine-readable
+        // JSON report (BENCH_5.json), not a CSV directory; --check turns
+        // it into a regression gate (bulk must not lose to scalar)
+        let out = PathBuf::from(args.get_or("out", "BENCH_5.json"));
+        return experiments::bulk::run_and_write(&out, args.has_switch("check"));
+    }
     let out = args.get("out").map(PathBuf::from).or_else(|| Some(PathBuf::from("results")));
     experiments::run(exp, out.as_deref())?;
     if let Some(dir) = out {

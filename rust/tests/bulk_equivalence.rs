@@ -1,0 +1,152 @@
+//! Bulk ≡ scalar equivalence — the bulk kernels' correctness contract.
+//!
+//! For every variant × word size (S ∈ {32, 64}) × shard count
+//! (1/2/4/8), property-checked via `infra/prop`:
+//!
+//! * `bulk_add` (the insert kernels) produces **byte-identical filter
+//!   words** to the per-key scalar `add` loop;
+//! * `bulk_contains_bits` / `bulk_contains` produce **identical answer
+//!   bits** to the per-key scalar `contains` loop, hits, misses, and
+//!   false positives alike.
+//!
+//! Plus the `AnswerBits` reply-path round-trips: a `Ticket<AnswerBits>`
+//! resolves to the same answers as the `Vec<bool>` path, in-process and
+//! across a loopback wire connection (where the frame's answer bytes are
+//! handed through without a repack).
+
+use std::sync::Arc;
+
+use gbf::coordinator::{FilterService, RemoteFilterService, ShardedRegistry, WireServer};
+use gbf::filter::params::{FilterConfig, Variant};
+use gbf::filter::AnswerBits;
+use gbf::infra::prop::check;
+use gbf::workload::keygen::unique_keys;
+
+/// The five variants at both word sizes (geometries mirror the engine's
+/// own unit-test grids).
+fn cfgs_for_word(word_bits: u32) -> Vec<FilterConfig> {
+    let m = 10u32;
+    if word_bits == 64 {
+        vec![
+            FilterConfig { variant: Variant::Sbf, block_bits: 256, k: 16, log2_m_words: m, ..Default::default() },
+            FilterConfig { variant: Variant::Bbf, block_bits: 256, k: 16, log2_m_words: m, ..Default::default() },
+            FilterConfig { variant: Variant::Rbbf, block_bits: 64, k: 16, log2_m_words: m, ..Default::default() },
+            FilterConfig {
+                variant: Variant::Csbf,
+                block_bits: 512,
+                k: 16,
+                z: 2,
+                log2_m_words: m,
+                ..Default::default()
+            },
+            FilterConfig { variant: Variant::Cbf, k: 16, log2_m_words: m, ..Default::default() },
+        ]
+    } else {
+        vec![
+            FilterConfig {
+                variant: Variant::Sbf,
+                block_bits: 128,
+                word_bits: 32,
+                k: 8,
+                log2_m_words: m,
+                ..Default::default()
+            },
+            FilterConfig {
+                variant: Variant::Bbf,
+                block_bits: 256,
+                word_bits: 32,
+                k: 16,
+                log2_m_words: m,
+                ..Default::default()
+            },
+            FilterConfig {
+                variant: Variant::Rbbf,
+                block_bits: 32,
+                word_bits: 32,
+                k: 16,
+                log2_m_words: m,
+                ..Default::default()
+            },
+            FilterConfig {
+                variant: Variant::Csbf,
+                block_bits: 512,
+                word_bits: 32,
+                k: 16,
+                z: 2,
+                log2_m_words: m,
+                ..Default::default()
+            },
+            FilterConfig { variant: Variant::Cbf, word_bits: 32, k: 16, log2_m_words: m, ..Default::default() },
+        ]
+    }
+}
+
+#[test]
+fn bulk_equals_scalar_for_every_variant_word_size_and_shard_count() {
+    for word_bits in [64u32, 32] {
+        for cfg in cfgs_for_word(word_bits) {
+            for shards in [1usize, 2, 4, 8] {
+                let label = format!("bulk-eq/{}/{}sh", cfg.name(), shards);
+                check(&label, 2, |g| {
+                    let scalar = ShardedRegistry::new(cfg, shards).unwrap();
+                    let bulk = ShardedRegistry::new(cfg, shards).unwrap();
+                    let keys = g.keys(1200);
+                    for &k in &keys {
+                        scalar.add(k);
+                    }
+                    bulk.bulk_add(&keys).unwrap();
+                    assert_eq!(
+                        scalar.snapshot_concat(),
+                        bulk.snapshot_concat(),
+                        "insert kernels must write byte-identical filter words"
+                    );
+                    let mut probe = keys.clone();
+                    probe.extend(g.keys(1200)); // absent tail (incl. FPs)
+                    let mut bits = AnswerBits::new();
+                    bulk.bulk_contains_bits(&probe, &mut bits).unwrap();
+                    let vec_path = bulk.bulk_contains(&probe).unwrap();
+                    assert_eq!(bits.len(), probe.len());
+                    for (i, &key) in probe.iter().enumerate() {
+                        let want = scalar.contains(key);
+                        assert_eq!(bits.get(i), want, "key {key:#x} (bit-packed path)");
+                        assert_eq!(vec_path[i], want, "key {key:#x} (vec path)");
+                    }
+                    // inserted keys must hit through every path
+                    assert!(bits.iter().take(keys.len()).all(|b| b), "no false negatives");
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn answer_bits_flow_through_tickets_and_the_wire_without_repack() {
+    let service = Arc::new(FilterService::new());
+    let cfg = FilterConfig { log2_m_words: 12, ..Default::default() };
+    service.create_filter("bits", cfg, 2).unwrap();
+    let h = service.handle("bits").unwrap();
+    let keys = unique_keys(3_000, 77);
+    h.add_bulk(&keys).wait().unwrap();
+    let mut probe = keys.clone();
+    probe.extend(unique_keys(3_000, 78));
+
+    // in-process: a Ticket<AnswerBits> resolves to the same answers as
+    // the Vec<bool> convenience path
+    let bits = h.query_bulk_bits(&probe).wait().unwrap();
+    let bools = h.query_bulk(&probe).wait().unwrap();
+    assert_eq!(bits.len(), probe.len());
+    assert_eq!(bits.to_bools(), bools);
+    assert!(bits.iter().take(keys.len()).all(|b| b), "no false negatives");
+
+    // across the wire: the loopback remote's ticket resolves the SAME
+    // AnswerBits — the frame's answer bytes handed through unrepacked
+    let server = WireServer::bind(Arc::clone(&service), "127.0.0.1:0").unwrap();
+    let client = RemoteFilterService::connect(server.local_addr()).unwrap();
+    let rh = client.handle("bits").unwrap();
+    let remote_bits = rh.query_bulk_bits(&probe).wait().unwrap();
+    assert_eq!(remote_bits, bits, "identical bit-packed answers across transports");
+
+    // empty bulks resolve ready on both transports
+    assert!(h.query_bulk_bits(&[]).wait().unwrap().is_empty());
+    assert!(rh.query_bulk_bits(&[]).wait().unwrap().is_empty());
+}

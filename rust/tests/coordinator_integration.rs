@@ -356,8 +356,8 @@ impl FilterBackend for GatedBackend {
         Ok(())
     }
 
-    fn bulk_contains(&self, keys: &[u64]) -> anyhow::Result<Vec<bool>> {
-        Ok(vec![false; keys.len()])
+    fn bulk_contains(&self, keys: &[u64]) -> anyhow::Result<gbf::filter::AnswerBits> {
+        Ok(gbf::filter::AnswerBits::with_len(keys.len()))
     }
 
     fn snapshot(&self) -> Vec<u64> {
@@ -425,6 +425,13 @@ fn drive_api(api: &dyn FilterApi) -> (Vec<bool>, gbf::coordinator::NamespaceStat
     let hits = t_bulk.wait().unwrap();
     assert!(t_single.wait().unwrap());
     assert!(hits[..10_000].iter().all(|&x| x), "no false negatives via {}", h.name());
+
+    // the bit-packed bulk path must answer identically on both
+    // transports (in-process: straight off the sink; wire: the frame's
+    // answer bytes handed through without a repack)
+    let bits = h.query_bulk_bits(&probe).wait().unwrap();
+    assert_eq!(bits.len(), probe.len());
+    assert_eq!(bits.to_bools(), hits, "query_bulk_bits agrees with query_bulk via {}", h.name());
 
     // backpressure: a bounded namespace refuses oversized bulks with the
     // typed Overloaded error — deterministically, on both transports
