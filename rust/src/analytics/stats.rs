@@ -96,10 +96,13 @@ impl LatencyHistogram {
 
     pub fn record_ns(&self, ns: u64) {
         let idx = (64 - ns.max(1).leading_zeros() as usize - 1).min(63);
+        // Ordering::Relaxed — monotonic histogram bucket increments;
+        // readers only ever take advisory percentile snapshots.
         self.buckets[idx].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
+        // Ordering::Relaxed — advisory totals; pairs with record_ns above
         self.buckets.iter().map(|b| b.load(std::sync::atomic::Ordering::Relaxed)).sum()
     }
 
@@ -112,6 +115,7 @@ impl LatencyHistogram {
         let target = (p / 100.0 * total as f64).ceil() as u64;
         let mut seen = 0;
         for (i, b) in self.buckets.iter().enumerate() {
+            // Ordering::Relaxed — advisory percentile scan; see record_ns
             seen += b.load(std::sync::atomic::Ordering::Relaxed);
             if seen >= target {
                 return 1u64 << (i + 1);

@@ -14,9 +14,10 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::infra::sync::atomic::{AtomicBool, Ordering};
+use crate::infra::sync::{Arc, Condvar, Mutex};
 
 use crate::coordinator::backend::FilterBackend;
 use crate::coordinator::metrics::Metrics;
@@ -156,7 +157,12 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    pub fn new(policy: BatchPolicy) -> Self {
+    pub fn new(mut policy: BatchPolicy) -> Self {
+        // A zero max_batch would make next_batch() form empty batches and
+        // panic the worker (found by the wire fuzzing work: a hostile Create
+        // frame could previously reach this). The service layer rejects it
+        // with InvalidConfig; this clamp keeps the invariant local too.
+        policy.max_batch = policy.max_batch.max(1);
         Batcher {
             queue: Arc::new(Queue {
                 inner: Mutex::new(VecDeque::new()),
@@ -191,6 +197,9 @@ impl Batcher {
                 let is_add = front.is_add;
                 let run_len = q.iter().take(self.policy.max_batch).take_while(|p| p.is_add == is_add).count();
                 let now = Instant::now();
+                // Ordering::SeqCst — the stop flag must be seen after the
+                // notify_all in stop(); a stale read here would strand the
+                // final partial batch until its deadline.
                 if run_len >= self.policy.max_batch
                     || now >= deadline
                     || run_len == q.len() && self.queue.stop.load(Ordering::SeqCst)
@@ -203,6 +212,9 @@ impl Batcher {
                 let (guard, _timeout) = self.queue.available.wait_timeout(q, wait).unwrap();
                 q = guard;
             } else {
+                // Ordering::SeqCst — checked under the queue lock after each
+                // wakeup, pairing with the store in stop(); SeqCst so the
+                // flag and the broadcast cannot reorder around each other.
                 if self.queue.stop.load(Ordering::SeqCst) {
                     return None;
                 }
@@ -212,6 +224,8 @@ impl Batcher {
     }
 
     pub fn stop(&self) {
+        // Ordering::SeqCst — the store must be globally visible before the
+        // broadcast below so a woken worker cannot re-park on a stale flag.
         self.queue.stop.store(true, Ordering::SeqCst);
         self.queue.available.notify_all();
     }
@@ -262,6 +276,11 @@ impl BatcherHandle {
 /// lock acquisition.
 fn execute_batch(batch: Vec<Pending>, backend: &dyn FilterBackend, metrics: &Metrics) {
     debug_assert!(!batch.is_empty());
+    // Release-mode guard: an empty batch must never kill the worker thread
+    // (every outstanding ticket on the namespace would wedge).
+    if batch.is_empty() {
+        return;
+    }
     let is_add = batch[0].is_add;
     let keys: Vec<u64> = batch.iter().map(|p| p.key).collect();
     let queue_wait_ns = batch
@@ -467,5 +486,84 @@ mod tests {
         assert!(idle.wait_timeout(Duration::from_millis(10)).is_none());
         batcher.stop();
         join.join().unwrap();
+    }
+}
+
+/// Bounded-exhaustive interleaving models (ISSUE 6): run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_`.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use crate::coordinator::ticket::{finish_bits, Ticket};
+    use crate::infra::check;
+    use crate::infra::sync::thread;
+
+    fn submit_one(h: &BatcherHandle, max: Option<usize>) -> Result<(), usize> {
+        let sink = BulkSink::new(1);
+        h.submit_many_bounded(
+            std::iter::once(Pending { is_add: true, key: 1, enqueued: Instant::now(), sink, idx: 0 }),
+            max,
+        )
+    }
+
+    /// Completer vs. waiter: every interleaving of complete_run against
+    /// wait() must resolve with the right bits — no lost notify, no wedge.
+    #[test]
+    fn loom_bulksink_complete_vs_wait() {
+        check::model(|| {
+            let sink = BulkSink::new(2);
+            let s = Arc::clone(&sink);
+            let completer = thread::spawn(move || {
+                s.complete_run(&[(0, true)], None);
+                s.complete_run(&[(1, false)], None);
+            });
+            let bits = sink.wait().expect("no batch error");
+            assert_eq!(bits.len(), 2);
+            assert!(bits.get(0) && !bits.get(1));
+            completer.join().expect("join completer");
+        });
+    }
+
+    /// Ticket::wait_timeout racing completion: a near-zero deadline either
+    /// observes the completed result or times out and hands the ticket
+    /// back — and the handed-back ticket must still resolve.
+    #[test]
+    fn loom_ticket_wait_timeout_vs_complete() {
+        check::model(|| {
+            let sink = BulkSink::new(1);
+            let s = Arc::clone(&sink);
+            let ticket: Ticket<AnswerBits> = Ticket::pending(Arc::clone(&sink), finish_bits);
+            let completer = thread::spawn(move || s.complete_run(&[(0, true)], None));
+            match ticket.wait_timeout(Duration::from_nanos(1)) {
+                Ok(r) => assert!(r.expect("no backend error").get(0)),
+                Err(ticket) => {
+                    let bits = ticket.wait().expect("resolves once completed");
+                    assert!(bits.get(0));
+                }
+            }
+            completer.join().expect("join completer");
+        });
+    }
+
+    /// Admission under max_queue_depth is atomic: with capacity 1 and two
+    /// concurrent single-key submitters, exactly one is admitted and the
+    /// loser reports the would-be depth — under every interleaving.
+    #[test]
+    fn loom_bounded_admission_is_atomic() {
+        check::model(|| {
+            let batcher = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(3600) });
+            let (h1, h2) = (batcher.handle(), batcher.handle());
+            let t1 = thread::spawn(move || submit_one(&h1, Some(1)));
+            let t2 = thread::spawn(move || submit_one(&h2, Some(1)));
+            let (r1, r2) = (t1.join().expect("join"), t2.join().expect("join"));
+            let wins = [r1, r2].iter().filter(|r| r.is_ok()).count();
+            assert_eq!(wins, 1, "exactly one submitter fits a depth-1 bound: {r1:?} / {r2:?}");
+            assert_eq!(batcher.handle().depth(), 1);
+            for r in [r1, r2] {
+                if let Err(depth) = r {
+                    assert_eq!(depth, 2, "rejection reports the would-be depth");
+                }
+            }
+        });
     }
 }

@@ -29,6 +29,9 @@ impl Default for LatencyHistogramField {
 
 impl Metrics {
     pub fn record_batch(&self, op_is_add: bool, keys: u64, queue_wait_ns: u64, exec_ns: u64) {
+        // Ordering::Relaxed throughout — monotonic statistics counters on
+        // the batch hot path; readers take an advisory point-in-time
+        // snapshot and nothing synchronizes-with these values.
         if op_is_add {
             self.adds.fetch_add(keys, Ordering::Relaxed);
         } else {
@@ -49,11 +52,15 @@ impl Metrics {
     /// adds/queries again, so `stats(name)` reflects the namespace's true
     /// content across restarts instead of resetting to zero.
     pub fn seed_ops(&self, adds: u64, queries: u64) {
+        // Ordering::Relaxed — restore-time counter seeding; see record_batch
         self.adds.fetch_add(adds, Ordering::Relaxed);
         self.queries.fetch_add(queries, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
+        // Ordering::Relaxed — advisory snapshot of independently-updated
+        // counters; the loads need not be mutually consistent (a batch may
+        // land between them), which the stats contract accepts.
         let batches = self.batches.load(Ordering::Relaxed);
         let keys = self.batched_keys.load(Ordering::Relaxed);
         MetricsSnapshot {

@@ -135,10 +135,15 @@ impl SnapshotManifest {
 
         // Version FIRST: a future format's drifted layout must still
         // answer SnapshotVersion, not a misleading Corrupt/Geometry.
-        let found = corrupt(doc.expect("format_version").and_then(Json::as_u64), "manifest format_version")? as u32;
-        if found != SNAPSHOT_VERSION {
+        // Compared in u64 before narrowing: a doctored version like
+        // 2^32 + 1 must not truncate into "supported" (fuzzer finding;
+        // pinned by the version-lie corpus entry).
+        let declared_version = corrupt(doc.expect("format_version").and_then(Json::as_u64), "manifest format_version")?;
+        if declared_version != u64::from(SNAPSHOT_VERSION) {
+            let found = u32::try_from(declared_version).unwrap_or(u32::MAX);
             return Err(GbfError::SnapshotVersion { found, supported: SNAPSHOT_VERSION });
         }
+        let found = SNAPSHOT_VERSION;
 
         let name = corrupt(doc.expect("name").and_then(|v| v.as_str().map(str::to_string)), "manifest name")?;
         let cj = corrupt(doc.expect("config"), "manifest config")?;
@@ -244,6 +249,21 @@ mod tests {
         // even with an otherwise-valid layout, a foreign version is typed
         match SnapshotManifest::from_json_str(&m.to_json()) {
             Err(GbfError::SnapshotVersion { found: 99, supported: SNAPSHOT_VERSION }) => {}
+            other => panic!("expected SnapshotVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn version_lie_does_not_truncate() {
+        // 2^32 + 1 used to truncate to 1 through `as u32` and pass the
+        // version gate; it must be refused as a foreign version
+        let m = sample(1);
+        let doc = m.to_json().replace("\"format_version\":1", "\"format_version\":4294967297");
+        assert_ne!(doc, m.to_json(), "replacement target present");
+        match SnapshotManifest::from_json_str(&doc) {
+            Err(GbfError::SnapshotVersion { found, supported: SNAPSHOT_VERSION }) => {
+                assert_eq!(found, u32::MAX, "out-of-range version saturates in the error report");
+            }
             other => panic!("expected SnapshotVersion, got {other:?}"),
         }
     }

@@ -22,14 +22,14 @@
 //! restore, rebalancing).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
 use crate::filter::params::FilterConfig;
 use crate::filter::{AnswerBits, AnyBloom};
+use crate::infra::sync::atomic::{AtomicU64, Ordering};
+use crate::infra::sync::{thread, Arc, Condvar, Mutex};
 use crate::infra::threadpool::ThreadPool;
 
 use super::metrics::ShardStats;
@@ -108,6 +108,9 @@ struct ShardCounters {
 
 impl ShardCounters {
     fn record(&self, keys: u64, queue_ns: u64, exec_ns: u64) {
+        // Ordering::Relaxed — monotonic statistics counters; readers take a
+        // point-in-time snapshot and no other memory depends on these, so
+        // no ordering stronger than atomicity is needed on the hot path.
         self.jobs.fetch_add(1, Ordering::Relaxed);
         self.keys.fetch_add(keys, Ordering::Relaxed);
         self.queue_ns.fetch_add(queue_ns, Ordering::Relaxed);
@@ -196,7 +199,7 @@ impl ShardedRegistry {
             .collect::<Result<Vec<_>>>()?;
         let counters = (0..num_shards).map(|_| Arc::new(ShardCounters::default())).collect();
         let pool = (num_shards > 1).then(|| ThreadPool::new(num_shards.min(64)));
-        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let cores = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         Ok(ShardedRegistry {
             shards,
             counters,
@@ -458,6 +461,10 @@ impl ShardedRegistry {
             .iter()
             .zip(&self.shards)
             .enumerate()
+            // Ordering::Relaxed — statistics snapshot; pairs with the
+            // Relaxed increments in `ShardCounters::record`. The four loads
+            // need not be mutually consistent (jobs/keys may be mid-update),
+            // which the admin `stats` contract accepts.
             .map(|(shard, (c, filter))| ShardStats {
                 shard,
                 jobs: c.jobs.load(Ordering::Relaxed),
@@ -694,5 +701,108 @@ mod tests {
         assert!(r.fill_ratio() > 0.0);
         r.clear();
         assert_eq!(r.fill_ratio(), 0.0);
+    }
+}
+
+/// Bounded-exhaustive interleaving models (ISSUE 6): run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_`. A 1-shard
+/// registry keeps the state space small (no thread pool) while exercising
+/// the same `checkout`/`check_in` code the multi-shard bulk path uses.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use crate::infra::check;
+    use crate::infra::sync::thread;
+
+    fn tiny_registry() -> Arc<ShardedRegistry> {
+        let cfg = FilterConfig { log2_m_words: 12, ..Default::default() };
+        Arc::new(ShardedRegistry::new(cfg, 1).unwrap())
+    }
+
+    /// Concurrent checkouts from an empty pool must each build a fresh
+    /// scratch (never block, never hand the same scratch out twice), and
+    /// racing check-ins must keep the parked pool within its cap.
+    #[test]
+    fn loom_scratch_pool_exhaustion_builds_fresh() {
+        check::model(|| {
+            let r = tiny_registry();
+            let a = {
+                let r = Arc::clone(&r);
+                thread::spawn(move || {
+                    let s = r.checkout();
+                    s.lanes[0].lock().unwrap().keys.push(1);
+                    r.check_in(s);
+                })
+            };
+            // races a's checkout: the pool starts empty, so whichever
+            // thread arrives first builds fresh and neither can block
+            let s = r.checkout();
+            assert_eq!(s.lanes.len(), 1);
+            r.check_in(s);
+            a.join().unwrap();
+            let parked = r.scratch.lock().unwrap();
+            assert!(parked.len() <= MAX_PARKED_SCRATCH && parked.len() <= 2);
+            // every parked scratch was cleared on check-in
+            for scratch in parked.iter() {
+                let lane = scratch.lanes[0].lock().unwrap();
+                assert!(lane.keys.is_empty() && lane.idx.is_empty());
+            }
+        });
+    }
+
+    /// A panicking lane job (the `run_lanes` failure path) drops its
+    /// scratch instead of re-parking it: a concurrent caller's
+    /// checkout/check-in cycle never observes a poisoned lane.
+    #[test]
+    fn loom_scratch_checkin_skipped_on_panic() {
+        check::model(|| {
+            let r = tiny_registry();
+            let a = {
+                let r = Arc::clone(&r);
+                thread::spawn(move || {
+                    let scratch = r.checkout();
+                    let outcome = catch_unwind(AssertUnwindSafe(|| {
+                        let _lane = scratch.lanes[0].lock().unwrap();
+                        panic!("lane job panicked");
+                    }));
+                    assert!(outcome.is_err());
+                    // failed call: drop, never check_in (lane is poisoned)
+                    drop(scratch);
+                })
+            };
+            let s = r.checkout();
+            r.check_in(s);
+            a.join().unwrap();
+            // only healthy scratches are parked
+            for scratch in r.scratch.lock().unwrap().iter() {
+                assert!(scratch.lanes[0].lock().is_ok(), "poisoned lane was re-parked");
+            }
+        });
+    }
+
+    /// LatchGuard counts down on unwind: a panicking job can never leave
+    /// `Latch::wait` blocked forever.
+    #[test]
+    fn loom_latch_counts_down_on_panic() {
+        check::model(|| {
+            let latch = Latch::new(2);
+            let worker = {
+                let latch = Arc::clone(&latch);
+                thread::spawn(move || {
+                    let guard = LatchGuard::new(&latch);
+                    let outcome = catch_unwind(AssertUnwindSafe(move || {
+                        let _guard = guard; // dropped during unwind
+                        panic!("job panicked mid-batch");
+                    }));
+                    assert!(outcome.is_err());
+                })
+            };
+            {
+                let _guard = LatchGuard::new(&latch); // the healthy job
+            }
+            latch.wait(); // must not deadlock whatever the interleaving
+            worker.join().unwrap();
+            assert_eq!(*latch.remaining.lock().unwrap(), 0);
+        });
     }
 }

@@ -217,6 +217,14 @@ impl FilterService {
     ) -> Result<FilterHandle, GbfError> {
         validate_name(name)?;
         spec.config.validate().map_err(|e| GbfError::InvalidConfig(format!("{e:#}")))?;
+        // A zero-sized batch could never drain the queue: the worker would
+        // form empty batches forever. Reachable from the wire (a hostile
+        // Create frame chooses the policy), so it must be a typed refusal
+        // here, not a debug assert downstream (fuzzer finding; the batcher
+        // additionally clamps as defense in depth).
+        if spec.policy.max_batch == 0 {
+            return Err(GbfError::InvalidConfig("policy.max_batch must be at least 1".into()));
+        }
         // Cheap pre-check so the deterministic duplicate-name error never
         // pays for a throwaway engine (the Entry check below still decides
         // the genuine create/create race).
@@ -250,6 +258,8 @@ impl FilterService {
     ) -> Result<FilterHandle, GbfError> {
         let ns = Arc::new(Namespace {
             name: name.to_string(),
+            // Ordering::Relaxed — the id only needs to be unique; the
+            // catalog write lock below publishes the namespace itself.
             instance: NEXT_INSTANCE.fetch_add(1, Ordering::Relaxed),
             engine,
             requested_shards,
@@ -355,6 +365,9 @@ impl FilterService {
             .unwrap()
             .remove(name)
             .ok_or_else(|| GbfError::NoSuchFilter(name.to_string()))?;
+        // Ordering::Release — pairs with the Acquire in `is_live`: a handle
+        // that observes the flag also observes every catalog write that
+        // preceded the drop.
         ns.dropped.store(true, Ordering::Release);
         Ok(())
     }
@@ -434,6 +447,7 @@ impl FilterHandle {
 
     /// False once the namespace has been dropped from its service.
     pub fn is_live(&self) -> bool {
+        // Ordering::Acquire — pairs with the Release store in drop_filter
         !self.ns.dropped.load(Ordering::Acquire)
     }
 
@@ -540,6 +554,15 @@ mod tests {
         assert!(matches!(service.create_filter("badk", bad, 1), Err(GbfError::InvalidConfig(_))));
         // non-power-of-two shard counts surface the backend's refusal
         assert!(service.create_filter("bad-shards", small_cfg(12), 3).is_err());
+        // max_batch = 0 could never drain the queue; it is reachable from
+        // a hostile wire Create frame and must be a typed refusal
+        let spec = FilterSpec {
+            config: small_cfg(12),
+            shards: 1,
+            policy: BatchPolicy { max_batch: 0, ..Default::default() },
+            max_queue_depth: None,
+        };
+        assert!(matches!(service.create_filter_spec("zero-batch", spec), Err(GbfError::InvalidConfig(_))));
         assert!(service.list_filters().is_empty(), "failed creates leave no residue");
     }
 

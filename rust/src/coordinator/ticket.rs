@@ -12,10 +12,10 @@
 //! could not be submitted (e.g. the namespace was dropped) are born
 //! resolved with the error.
 
-use std::sync::Arc;
 use std::time::Duration;
 
 use crate::filter::AnswerBits;
+use crate::infra::sync::Arc;
 
 use super::batcher::BulkSink;
 use super::error::GbfError;

@@ -21,8 +21,7 @@ use std::collections::HashMap;
 use std::io::BufReader;
 use std::net::{Shutdown, TcpStream, ToSocketAddrs};
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::sync::{PoisonError, Weak};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
@@ -32,6 +31,8 @@ use crate::coordinator::service::{FilterSpec, NamespaceStats};
 use crate::coordinator::ticket::{finish_all, finish_bits, finish_one, finish_unit, Completion, Ticket};
 use crate::filter::params::FilterConfig;
 use crate::filter::AnswerBits;
+use crate::infra::sync::atomic::{AtomicU64, Ordering};
+use crate::infra::sync::{lock_unpoisoned, thread, Arc, Condvar, Mutex};
 
 use super::codec::{
     decode_response, encode_data_request, encode_request, read_frame, write_frame, Request, Response, MAX_FRAME,
@@ -49,7 +50,7 @@ impl Slot {
     }
 
     fn complete(&self, resp: Response) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         if st.is_none() {
             *st = Some(resp);
             self.done.notify_all();
@@ -57,29 +58,34 @@ impl Slot {
     }
 
     fn is_ready(&self) -> bool {
-        self.state.lock().unwrap().is_some()
+        lock_unpoisoned(&self.state).is_some()
     }
 
     fn wait(&self) -> Response {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         while st.is_none() {
-            st = self.done.wait(st).unwrap();
+            st = self.done.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
-        st.take().unwrap()
+        match st.take() {
+            Some(resp) => resp,
+            // unreachable (the loop exits on Some), but the wire path is
+            // panic-free by contract: surface a typed error instead
+            None => Response::Err(GbfError::Backend("wire slot resolved empty".into())),
+        }
     }
 
     fn wait_timeout(&self, timeout: Duration) -> Option<Response> {
         let deadline = std::time::Instant::now() + timeout;
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         while st.is_none() {
             let now = std::time::Instant::now();
             if now >= deadline {
                 return None;
             }
-            let (guard, _) = self.done.wait_timeout(st, deadline - now).unwrap();
+            let (guard, _) = self.done.wait_timeout(st, deadline - now).unwrap_or_else(PoisonError::into_inner);
             st = guard;
         }
-        Some(st.take().unwrap())
+        st.take()
     }
 }
 
@@ -157,13 +163,15 @@ impl RemoteFilterService {
             dead: Mutex::new(None),
         });
         let weak = Arc::downgrade(&inner);
-        std::thread::Builder::new()
+        thread::Builder::new()
             .name("gbf-wire-reader".into())
             .spawn(move || reader_loop(reader_stream, weak))?;
         Ok(RemoteFilterService { inner })
     }
 
     fn next_id(&self) -> u64 {
+        // Ordering::Relaxed — request ids only need to be unique; the
+        // writer mutex (and ultimately the TCP stream) orders the frames.
         self.inner.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
@@ -177,7 +185,7 @@ impl RemoteFilterService {
     /// from borrowed key slices); the returned slot resolves when the
     /// reply for `id` lands.
     fn send_payload(&self, id: u64, payload: Vec<u8>) -> Result<Arc<Slot>, GbfError> {
-        if let Some(reason) = self.inner.dead.lock().unwrap().clone() {
+        if let Some(reason) = lock_unpoisoned(&self.inner.dead).clone() {
             return Err(GbfError::Backend(format!("wire client: {reason}")));
         }
         if payload.len() > MAX_FRAME {
@@ -189,21 +197,21 @@ impl RemoteFilterService {
             )));
         }
         let slot = Slot::new();
-        self.inner.pending.lock().unwrap().insert(id, Arc::clone(&slot));
+        lock_unpoisoned(&self.inner.pending).insert(id, Arc::clone(&slot));
         let write_result = {
-            let mut w = self.inner.writer.lock().unwrap();
+            let mut w = lock_unpoisoned(&self.inner.writer);
             write_frame(&mut *w, &payload)
         };
         if let Err(e) = write_result {
-            self.inner.pending.lock().unwrap().remove(&id);
+            lock_unpoisoned(&self.inner.pending).remove(&id);
             return Err(GbfError::Backend(format!("wire send failed: {e}")));
         }
         // Close the race with a dying connection: if the reader declared
         // the connection dead around our insert/write, it may already have
         // drained `pending` — a slot still in the map now would never be
         // completed, so take it back out and fail fast instead.
-        if let Some(reason) = self.inner.dead.lock().unwrap().clone() {
-            if self.inner.pending.lock().unwrap().remove(&id).is_some() {
+        if let Some(reason) = lock_unpoisoned(&self.inner.dead).clone() {
+            if lock_unpoisoned(&self.inner.pending).remove(&id).is_some() {
                 return Err(GbfError::Backend(format!("wire client: {reason}")));
             }
         }
@@ -315,7 +323,7 @@ fn reader_loop(stream: TcpStream, inner: Weak<ClientInner>) {
             Ok(Some(payload)) => match decode_response(&payload) {
                 Ok((id, resp)) => {
                     let Some(inner) = inner.upgrade() else { return };
-                    let slot = inner.pending.lock().unwrap().remove(&id);
+                    let slot = lock_unpoisoned(&inner.pending).remove(&id);
                     if let Some(slot) = slot {
                         slot.complete(resp);
                     }
@@ -328,8 +336,8 @@ fn reader_loop(stream: TcpStream, inner: Weak<ClientInner>) {
     };
     // connection over: fail everything in flight, poison future calls
     let Some(inner) = inner.upgrade() else { return };
-    *inner.dead.lock().unwrap() = Some(reason.clone());
-    let drained: Vec<Arc<Slot>> = inner.pending.lock().unwrap().drain().map(|(_, s)| s).collect();
+    *lock_unpoisoned(&inner.dead) = Some(reason.clone());
+    let drained: Vec<Arc<Slot>> = lock_unpoisoned(&inner.pending).drain().map(|(_, s)| s).collect();
     for slot in drained {
         slot.complete(Response::Err(GbfError::Backend(format!("wire client: {reason}"))));
     }

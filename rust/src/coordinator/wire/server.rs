@@ -32,9 +32,7 @@
 use std::io::BufReader;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -44,6 +42,8 @@ use crate::coordinator::error::GbfError;
 use crate::coordinator::service::FilterService;
 use crate::coordinator::ticket::Ticket;
 use crate::filter::AnswerBits;
+use crate::infra::sync::atomic::{AtomicBool, Ordering};
+use crate::infra::sync::{lock_unpoisoned, Arc, Mutex};
 
 use super::codec::{decode_request, encode_response, read_frame, write_frame, Request, Response};
 
@@ -96,7 +96,7 @@ struct ConnRegistry {
 impl ConnRegistry {
     /// Join finished handlers and drop their stream clones.
     fn reap(&self) {
-        let mut conns = self.conns.lock().unwrap();
+        let mut conns = lock_unpoisoned(&self.conns);
         let mut live = Vec::with_capacity(conns.len());
         for (stream, handler) in conns.drain(..) {
             if handler.is_finished() {
@@ -146,6 +146,9 @@ impl WireServer {
 
 impl Drop for WireServer {
     fn drop(&mut self) {
+        // Ordering::SeqCst — must be visible to the accept loop before the
+        // throwaway connection below unblocks its accept(), or the loop
+        // could serve one more connection after shutdown began.
         self.stop.store(true, Ordering::SeqCst);
         // unblock accept() with a throwaway connection
         let _ = TcpStream::connect(self.addr);
@@ -173,6 +176,8 @@ fn accept_loop(
     registry: Arc<ConnRegistry>,
 ) {
     for conn in listener.incoming() {
+        // Ordering::SeqCst — pairs with the store in Drop: the accept
+        // unblocked by Drop's throwaway connection must observe the flag.
         if stop.load(Ordering::SeqCst) {
             return;
         }
@@ -193,14 +198,14 @@ fn accept_loop(
             });
         let Ok(handler) = handler else { continue };
         registry.reap();
-        registry.conns.lock().unwrap().push((clone, handler));
+        lock_unpoisoned(&registry.conns).push((clone, handler));
     }
 }
 
 /// Write one tagged reply under the shared writer lock.
 fn send(writer: &Arc<Mutex<TcpStream>>, id: u64, resp: &Response) -> std::io::Result<()> {
     let payload = encode_response(id, resp);
-    let mut w = writer.lock().unwrap();
+    let mut w = lock_unpoisoned(writer);
     write_frame(&mut *w, &payload)
 }
 

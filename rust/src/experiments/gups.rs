@@ -56,6 +56,9 @@ pub fn cpu_gups_write(table_words: usize, ops: usize, threads: usize) -> f64 {
                 let mut state = 0x9876_5432u64 ^ (t as u64) << 32;
                 for _ in 0..per_thread {
                     let h = splitmix64(&mut state);
+                    // Ordering::Relaxed — the benchmark measures raw
+                    // atomic-OR throughput; no cross-thread ordering is
+                    // observed (the scope join is the only publication)
                     table[(h & mask) as usize].fetch_or(1u64 << (h >> 58), Ordering::Relaxed);
                 }
             });

@@ -58,14 +58,21 @@ impl FilterWord for u64 {
     }
     #[inline]
     fn load(a: &AtomicU64) -> u64 {
+        // Ordering::Relaxed — probe reads need only word-atomicity; the
+        // no-false-negative contract orders insert→query at the operation
+        // level (the bulk insert's SeqCst fence), not per word.
         a.load(Ordering::Relaxed)
     }
     #[inline]
     fn fetch_or(a: &AtomicU64, mask: u64) {
+        // Ordering::Relaxed — bit-set writes commute; publication to other
+        // threads is the bulk path's SeqCst fence, not the per-word OR.
         a.fetch_or(mask, Ordering::Relaxed);
     }
     #[inline]
     fn store(a: &AtomicU64, v: u64) {
+        // Ordering::Relaxed — whole-word overwrite used by clear/load
+        // paths that own the filter exclusively (&mut or setup phase).
         a.store(v, Ordering::Relaxed);
     }
     #[inline]
@@ -91,14 +98,17 @@ impl FilterWord for u32 {
     }
     #[inline]
     fn load(a: &AtomicU32) -> u32 {
+        // Ordering::Relaxed — same reasoning as the u64 impl above
         a.load(Ordering::Relaxed)
     }
     #[inline]
     fn fetch_or(a: &AtomicU32, mask: u32) {
+        // Ordering::Relaxed — same reasoning as the u64 impl above
         a.fetch_or(mask, Ordering::Relaxed);
     }
     #[inline]
     fn store(a: &AtomicU32, v: u32) {
+        // Ordering::Relaxed — same reasoning as the u64 impl above
         a.store(v, Ordering::Relaxed);
     }
     #[inline]
@@ -213,6 +223,9 @@ impl<W: FilterWord> Bloom<W> {
     /// publishes the bits to subsequent readers.
     pub fn insert_bulk(&self, keys: &[u64]) {
         self.insert_kernel(keys);
+        // Ordering::SeqCst fence — publishes the Relaxed bit-ORs above to
+        // any thread that subsequently probes: the operation-level
+        // insert→query ordering the no-false-negative contract needs.
         std::sync::atomic::fence(Ordering::SeqCst);
     }
 
@@ -403,6 +416,9 @@ impl<W: FilterWord> Bloom<W> {
                 }
             });
         }
+        // Ordering::SeqCst fence — same publish contract as insert_bulk
+        // (the scope join orders the worker writes; the fence orders this
+        // call against the caller's subsequent probes)
         std::sync::atomic::fence(Ordering::SeqCst);
     }
 
@@ -437,9 +453,20 @@ impl<W: FilterWord> Bloom<W> {
     }
 
     /// Prefetch the cache lines backing words [w0, w0+len).
+    ///
+    /// A pure performance hint: compiled out under Miri (which has no
+    /// model for prefetch intrinsics and would flag the raw-pointer
+    /// arithmetic) and on non-x86_64 targets — the kernels are
+    /// bit-identical without it, just slower on cold caches.
     #[inline]
     fn prefetch(&self, w0: usize, len: usize) {
-        #[cfg(target_arch = "x86_64")]
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
+        // SAFETY: callers pass an in-bounds word range (w0 + len <=
+        // self.words.len(), checked by the probe/mask generation), so
+        // every prefetched offset lies within the `words` allocation;
+        // `base.add(off)` therefore never leaves the object. _mm_prefetch
+        // itself is a hint with no memory effects — even a stray address
+        // would not be UB at the hardware level, but we never form one.
         unsafe {
             let base = self.words.as_ptr() as *const u8;
             let stride = std::mem::size_of::<W::Atomic>();
@@ -452,7 +479,7 @@ impl<W: FilterWord> Bloom<W> {
                 off += 64;
             }
         }
-        #[cfg(not(target_arch = "x86_64"))]
+        #[cfg(not(all(target_arch = "x86_64", not(miri))))]
         {
             let _ = (w0, len);
         }

@@ -1,0 +1,1008 @@
+//! In-tree model checker for the coordinator's concurrency core (S13).
+//!
+//! The offline build carries no `loom` crate, so the loom role — explore
+//! every interleaving of a small concurrent program and fail on the first
+//! assertion violation or deadlock — is reproduced from scratch here.
+//! [`model`] runs a closure repeatedly, serializing its threads onto a
+//! scheduler token and driving an iterative depth-first search over every
+//! scheduling decision (which runnable thread proceeds, which waiter a
+//! `notify_one` wakes, which timed wait fires its timeout), subject to a
+//! CHESS-style preemption bound that keeps the search space tractable.
+//!
+//! The sync types in this module ([`Mutex`], [`Condvar`], [`atomic`],
+//! [`thread`]) mirror the std API and are **dual-mode**: outside a model
+//! run they delegate straight to std (so a `--cfg loom` build behaves
+//! normally everywhere except inside `model`), while inside a run every
+//! operation is a scheduling point. `infra::sync` re-exports them under
+//! `cfg(loom)` so the coordinator's hot structures compile against either.
+//!
+//! Honest limitations, so findings are read correctly:
+//!
+//! * **Sequential consistency only.** Threads are serialized, so the
+//!   checker explores thread interleavings, not weak-memory reorderings;
+//!   it cannot catch bugs that need `Relaxed` loads to observe stale
+//!   values. (That is what the TSan CI job is for.)
+//! * **Timeouts are modeled, not timed.** A timed wait's timeout fires
+//!   only when no other thread can run (exactly when a real timeout is
+//!   load-bearing). Code that loops on a real-clock deadline must keep
+//!   that loop convergent inside a model: use a tiny (1 ns) deadline when
+//!   the timeout path is under test, or a huge one when it must not fire.
+//! * **Determinism is required.** Replay assumes the closure makes the
+//!   same sync calls given the same schedule; keep model bodies free of
+//!   `HashMap` iteration and wall-clock branching beyond the above.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as StdCondvar, LockResult, Mutex as StdMutex, MutexGuard as StdMutexGuard, PoisonError};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Scheduler
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static CTX: RefCell<Option<(Arc<Sched>, usize)>> = RefCell::new(None);
+}
+
+fn cur() -> Option<(Arc<Sched>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// Yield point used by the atomic wrappers: a scheduling decision before
+/// every atomic access, nothing outside a model run.
+pub(crate) fn interleave() {
+    if let Some((s, tid)) = cur() {
+        s.yield_point(tid);
+    }
+}
+
+/// Exploration bounds. `from_env` reads `GBF_CHECK_PREEMPTIONS` (default 2),
+/// `GBF_CHECK_MAX_ITERS` (default 100 000) and `GBF_CHECK_MAX_STEPS`
+/// (default 50 000 scheduling points per iteration).
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub preemption_bound: usize,
+    pub max_iters: u64,
+    pub max_steps: usize,
+}
+
+impl Config {
+    pub fn from_env() -> Self {
+        fn var<T: std::str::FromStr>(name: &str, default: T) -> T {
+            std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+        }
+        Config {
+            preemption_bound: var("GBF_CHECK_PREEMPTIONS", 2),
+            max_iters: var("GBF_CHECK_MAX_ITERS", 100_000),
+            max_steps: var("GBF_CHECK_MAX_STEPS", 50_000),
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Block {
+    Mutex(usize),
+    Cond { cv: usize, timeout: bool },
+    Join(usize),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Run {
+    Runnable,
+    Blocked(Block),
+    Finished,
+}
+
+struct ThreadState {
+    run: Run,
+    timed_out: bool,
+}
+
+/// One recorded nondeterministic choice (only points with >1 alternative).
+#[derive(Clone, Copy, Debug)]
+struct Decision {
+    choice: usize,
+    n_alts: usize,
+}
+
+struct State {
+    threads: Vec<ThreadState>,
+    active: usize,
+    path: Vec<usize>,
+    decisions: Vec<Decision>,
+    preemptions: usize,
+    bound: usize,
+    steps: usize,
+    max_steps: usize,
+    /// Currently-held model mutexes: (mutex identity, owner tid).
+    held: Vec<(usize, usize)>,
+    failure: Option<String>,
+    aborting: bool,
+}
+
+impl State {
+    /// Pick among `alts`, replaying the committed path prefix and defaulting
+    /// to the first alternative past it. Single-alternative points are not
+    /// recorded (they can never be explored differently).
+    fn decide(&mut self, alts: &[usize]) -> usize {
+        if alts.len() == 1 {
+            return alts[0];
+        }
+        let i = self.decisions.len();
+        // A divergent replay (time-dependent branch) clamps instead of
+        // panicking: exploration continues on the schedule actually taken.
+        let choice = if i < self.path.len() { self.path[i].min(alts.len() - 1) } else { 0 };
+        self.decisions.push(Decision { choice, n_alts: alts.len() });
+        alts[choice]
+    }
+
+    fn fail(&mut self, msg: impl Into<String>) {
+        if self.failure.is_none() {
+            self.failure = Some(msg.into());
+        }
+        self.aborting = true;
+    }
+}
+
+struct Sched {
+    state: StdMutex<State>,
+    turn: StdCondvar,
+    handles: StdMutex<Vec<(usize, std::thread::JoinHandle<()>)>>,
+}
+
+impl Sched {
+    fn new(path: Vec<usize>, cfg: &Config) -> Arc<Self> {
+        Arc::new(Sched {
+            state: StdMutex::new(State {
+                threads: Vec::new(),
+                active: 0,
+                path,
+                decisions: Vec::new(),
+                preemptions: 0,
+                bound: cfg.preemption_bound,
+                steps: 0,
+                max_steps: cfg.max_steps,
+                held: Vec::new(),
+                failure: None,
+                aborting: false,
+            }),
+            turn: StdCondvar::new(),
+            handles: StdMutex::new(Vec::new()),
+        })
+    }
+
+    fn lock_state(&self) -> StdMutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Choose the next active thread. `from == Some(me)` means `me` is still
+    /// runnable and continuing it is the default; switching away costs one
+    /// preemption and is only offered under the bound. With no runnable
+    /// thread, a timed condvar waiter may fire its timeout; failing that the
+    /// model is deadlocked (or, if everyone finished, the iteration is done).
+    fn pick(&self, st: &mut State, from: Option<usize>) {
+        if st.aborting {
+            self.turn.notify_all();
+            return;
+        }
+        st.steps += 1;
+        if st.steps > st.max_steps {
+            st.fail(format!(
+                "model: exceeded {} scheduling points in one iteration (non-converging schedule; \
+                 check real-clock loops inside the model)",
+                st.max_steps
+            ));
+            self.turn.notify_all();
+            return;
+        }
+        let runnable: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.run == Run::Runnable)
+            .map(|(i, _)| i)
+            .collect();
+        let chosen = if let Some(me) = from {
+            let mut alts = vec![me];
+            if st.preemptions < st.bound {
+                alts.extend(runnable.iter().copied().filter(|&t| t != me));
+            }
+            let c = st.decide(&alts);
+            if c != me {
+                st.preemptions += 1;
+            }
+            c
+        } else if !runnable.is_empty() {
+            st.decide(&runnable)
+        } else {
+            let timers: Vec<usize> = st
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| matches!(t.run, Run::Blocked(Block::Cond { timeout: true, .. })))
+                .map(|(i, _)| i)
+                .collect();
+            if timers.is_empty() {
+                if st.threads.iter().all(|t| t.run == Run::Finished) {
+                    self.turn.notify_all();
+                    return;
+                }
+                let blocked: Vec<(usize, Run)> = st
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| t.run != Run::Finished)
+                    .map(|(i, t)| (i, t.run))
+                    .collect();
+                st.fail(format!("model: deadlock — no runnable thread and no timeout to fire; blocked: {blocked:?}"));
+                self.turn.notify_all();
+                return;
+            }
+            let c = st.decide(&timers);
+            st.threads[c].run = Run::Runnable;
+            st.threads[c].timed_out = true;
+            c
+        };
+        st.active = chosen;
+        self.turn.notify_all();
+    }
+
+    /// Park until it is `tid`'s turn. On abort the calling thread is leaked
+    /// here (parked forever): a failing iteration never resumes user code, so
+    /// panicking `model` from the main thread stays the only failure channel.
+    fn park<'a>(&'a self, mut st: StdMutexGuard<'a, State>, tid: usize) -> StdMutexGuard<'a, State> {
+        loop {
+            if st.aborting {
+                loop {
+                    st = self.turn.wait(st).unwrap_or_else(PoisonError::into_inner);
+                }
+            }
+            if st.active == tid && st.threads[tid].run == Run::Runnable {
+                return st;
+            }
+            st = self.turn.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    fn yield_point(&self, tid: usize) {
+        let mut st = self.lock_state();
+        self.pick(&mut st, Some(tid));
+        drop(self.park(st, tid));
+    }
+
+    fn mutex_lock(&self, tid: usize, m: usize) {
+        self.yield_point(tid);
+        self.mutex_relock(tid, m);
+    }
+
+    /// Acquire without the leading yield (used on wakeup paths where the
+    /// scheduler already granted this thread the turn).
+    fn mutex_relock(&self, tid: usize, m: usize) {
+        loop {
+            let mut st = self.lock_state();
+            if st.held.iter().any(|&(id, _)| id == m) {
+                st.threads[tid].run = Run::Blocked(Block::Mutex(m));
+                self.pick(&mut st, None);
+                drop(self.park(st, tid));
+                // Woken because the owner released; retry — another woken
+                // waiter may have barged in first, exactly like std.
+            } else {
+                st.held.push((m, tid));
+                return;
+            }
+        }
+    }
+
+    fn mutex_unlock(&self, tid: usize, m: usize) {
+        let mut st = self.lock_state();
+        st.held.retain(|&(id, _)| id != m);
+        for t in st.threads.iter_mut() {
+            if t.run == Run::Blocked(Block::Mutex(m)) {
+                t.run = Run::Runnable;
+            }
+        }
+        self.pick(&mut st, Some(tid));
+        drop(self.park(st, tid));
+    }
+
+    /// Atomically release `m`, block on `cv`, and schedule someone else —
+    /// the no-lost-wakeup contract of a condition variable. Returns whether
+    /// the wakeup was a (modeled) timeout. The model mutex is re-held on
+    /// return; the caller re-takes the real lock.
+    fn cond_wait(&self, tid: usize, cv: usize, m: usize, timed: bool) -> bool {
+        let mut st = self.lock_state();
+        st.held.retain(|&(id, _)| id != m);
+        for t in st.threads.iter_mut() {
+            if t.run == Run::Blocked(Block::Mutex(m)) {
+                t.run = Run::Runnable;
+            }
+        }
+        st.threads[tid].run = Run::Blocked(Block::Cond { cv, timeout: timed });
+        st.threads[tid].timed_out = false;
+        self.pick(&mut st, None);
+        let mut st = self.park(st, tid);
+        let timed_out = std::mem::take(&mut st.threads[tid].timed_out);
+        drop(st);
+        self.mutex_relock(tid, m);
+        timed_out
+    }
+
+    fn notify(&self, tid: usize, cv: usize, all: bool) {
+        let mut st = self.lock_state();
+        let waiters: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t.run, Run::Blocked(Block::Cond { cv: c, .. }) if c == cv))
+            .map(|(i, _)| i)
+            .collect();
+        if all {
+            for &w in &waiters {
+                st.threads[w].run = Run::Runnable;
+            }
+        } else if !waiters.is_empty() {
+            // Which waiter wakes is itself a nondeterministic choice.
+            let w = st.decide(&waiters);
+            st.threads[w].run = Run::Runnable;
+        }
+        self.pick(&mut st, Some(tid));
+        drop(self.park(st, tid));
+    }
+
+    fn spawn_os<F: FnOnce() + Send + 'static>(self: &Arc<Self>, tid: usize, body: F) {
+        let sched = Arc::clone(self);
+        let os = std::thread::Builder::new()
+            .name(format!("gbf-model-{tid}"))
+            .spawn(move || {
+                CTX.with(|c| *c.borrow_mut() = Some((Arc::clone(&sched), tid)));
+                drop(sched.park(sched.lock_state(), tid));
+                body();
+            })
+            .expect("spawn model thread");
+        self.handles.lock().unwrap_or_else(PoisonError::into_inner).push((tid, os));
+    }
+
+    fn model_spawn<F, T>(self: &Arc<Self>, parent: usize, f: F) -> ModelJoin<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let tid = {
+            let mut st = self.lock_state();
+            st.threads.push(ThreadState { run: Run::Runnable, timed_out: false });
+            st.threads.len() - 1
+        };
+        let slot: Arc<StdMutex<Option<T>>> = Arc::new(StdMutex::new(None));
+        let sched = Arc::clone(self);
+        let out = Arc::clone(&slot);
+        self.spawn_os(tid, move || {
+            let r = catch_unwind(AssertUnwindSafe(f));
+            let err = match r {
+                Ok(v) => {
+                    *out.lock().unwrap_or_else(PoisonError::into_inner) = Some(v);
+                    None
+                }
+                Err(p) => Some(panic_message(&p)),
+            };
+            sched.finish(tid, err);
+        });
+        // Spawn is a scheduling point: the child may run before the parent
+        // continues.
+        let mut st = self.lock_state();
+        self.pick(&mut st, Some(parent));
+        drop(self.park(st, parent));
+        ModelJoin { sched: Arc::clone(self), tid, slot }
+    }
+
+    fn spawn_root<F: FnOnce() + Send + 'static>(self: &Arc<Self>, f: F) {
+        {
+            let mut st = self.lock_state();
+            st.threads.push(ThreadState { run: Run::Runnable, timed_out: false });
+            st.active = 0;
+        }
+        let sched = Arc::clone(self);
+        self.spawn_os(0, move || {
+            let r = catch_unwind(AssertUnwindSafe(f));
+            sched.finish(0, r.err().map(|p| panic_message(&p)));
+        });
+    }
+
+    fn finish(&self, tid: usize, panicked: Option<String>) {
+        let mut st = self.lock_state();
+        st.threads[tid].run = Run::Finished;
+        if let Some(msg) = panicked {
+            st.fail(format!("thread {tid} panicked: {msg}"));
+            self.turn.notify_all();
+            return;
+        }
+        for t in st.threads.iter_mut() {
+            if t.run == Run::Blocked(Block::Join(tid)) {
+                t.run = Run::Runnable;
+            }
+        }
+        self.pick(&mut st, None);
+        // The OS thread exits here; pick already handed the turn onward (or
+        // signalled completion / deadlock).
+    }
+
+    /// Main-thread side: block until the iteration completes or aborts.
+    fn wait_done(&self) -> (Option<String>, Vec<Decision>) {
+        let mut st = self.lock_state();
+        loop {
+            if st.aborting || st.threads.iter().all(|t| t.run == Run::Finished) {
+                return (st.failure.clone(), st.decisions.clone());
+            }
+            st = self.turn.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    fn take_handle(&self, tid: usize) -> Option<std::thread::JoinHandle<()>> {
+        let mut hs = self.handles.lock().unwrap_or_else(PoisonError::into_inner);
+        hs.iter().position(|&(t, _)| t == tid).map(|i| hs.swap_remove(i).1)
+    }
+
+    fn join_all(&self) {
+        let hs = std::mem::take(&mut *self.handles.lock().unwrap_or_else(PoisonError::into_inner));
+        for (_, h) in hs {
+            let _ = h.join();
+        }
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".into())
+}
+
+/// Backtrack: deepest decision with an unexplored alternative becomes the
+/// new frontier; `None` means the bounded schedule space is exhausted.
+fn next_path(decisions: &[Decision]) -> Option<Vec<usize>> {
+    for i in (0..decisions.len()).rev() {
+        if decisions[i].choice + 1 < decisions[i].n_alts {
+            let mut path: Vec<usize> = decisions[..i].iter().map(|d| d.choice).collect();
+            path.push(decisions[i].choice + 1);
+            return Some(path);
+        }
+    }
+    None
+}
+
+/// Explore every bounded interleaving of `f`. Panics (from the calling test
+/// thread) on the first assertion failure, unexpected thread panic, or
+/// deadlock, reporting the iteration and the decision path that reached it.
+pub fn model<F: Fn() + Send + Sync + 'static>(f: F) {
+    model_with(Config::from_env(), f);
+}
+
+/// [`model`] with explicit bounds.
+pub fn model_with<F: Fn() + Send + Sync + 'static>(cfg: Config, f: F) {
+    assert!(cur().is_none(), "check::model may not be nested inside a model run");
+    let f = Arc::new(f);
+    let mut path: Vec<usize> = Vec::new();
+    let mut iters: u64 = 0;
+    loop {
+        iters += 1;
+        assert!(
+            iters <= cfg.max_iters,
+            "check::model: schedule space not exhausted after {} iterations; \
+             raise GBF_CHECK_MAX_ITERS or shrink the model",
+            cfg.max_iters
+        );
+        let sched = Sched::new(path.clone(), &cfg);
+        let body = Arc::clone(&f);
+        sched.spawn_root(move || body());
+        let (failure, decisions) = sched.wait_done();
+        if let Some(msg) = failure {
+            let trace: Vec<usize> = decisions.iter().map(|d| d.choice).collect();
+            panic!("model failed at iteration {iters} (schedule {trace:?}): {msg}");
+        }
+        sched.join_all();
+        match next_path(&decisions) {
+            Some(p) => path = p,
+            None => return,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dual-mode sync types (std outside a model, scheduled inside one)
+// ---------------------------------------------------------------------------
+
+/// Mutex with the std API whose acquire/release are scheduling points
+/// inside a model run. Data always lives in a real `std::sync::Mutex`, so
+/// poisoning semantics match std exactly in both modes.
+#[derive(Debug, Default)]
+pub struct Mutex<T> {
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Self {
+        Mutex { inner: StdMutex::new(t) }
+    }
+
+    fn id(&self) -> usize {
+        &self.inner as *const StdMutex<T> as *const () as usize
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        let model = cur();
+        if let Some((s, tid)) = &model {
+            s.mutex_lock(*tid, self.id());
+        }
+        // Inside a model the scheduler already granted exclusive ownership,
+        // so the real lock below is uncontended (it only fails on poison).
+        match self.inner.lock() {
+            Ok(g) => Ok(MutexGuard { inner: Some(g), lock: self, model }),
+            Err(p) => Err(PoisonError::new(MutexGuard { inner: Some(p.into_inner()), lock: self, model })),
+        }
+    }
+}
+
+pub struct MutexGuard<'a, T> {
+    inner: Option<StdMutexGuard<'a, T>>,
+    lock: &'a Mutex<T>,
+    model: Option<(Arc<Sched>, usize)>,
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard released")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard released")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Release the real lock before handing the turn onward, or the next
+        // model thread would block on it for real.
+        self.inner.take();
+        if let Some((s, tid)) = self.model.take() {
+            s.mutex_unlock(tid, self.lock.id());
+        }
+    }
+}
+
+/// Result of [`Condvar::wait_timeout`]; mirrors std's (which has no public
+/// constructor and so cannot be produced by the model path).
+#[derive(Debug, Clone, Copy)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+/// Condition variable with the std API. Inside a model, waiters park in the
+/// scheduler (wakeable by notify, or by a modeled timeout once nothing else
+/// can run); outside one it is a plain `std::sync::Condvar`.
+#[derive(Debug, Default)]
+pub struct Condvar {
+    inner: StdCondvar,
+}
+
+impl Condvar {
+    pub const fn new() -> Self {
+        Condvar { inner: StdCondvar::new() }
+    }
+
+    fn id(&self) -> usize {
+        &self.inner as *const StdCondvar as *const () as usize
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        match self.wait_inner(guard, None) {
+            Ok((g, _)) => Ok(g),
+            Err(p) => {
+                let (g, _) = p.into_inner();
+                Err(PoisonError::new(g))
+            }
+        }
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        self.wait_inner(guard, Some(dur))
+    }
+
+    pub fn wait_while<'a, T, F>(&self, mut guard: MutexGuard<'a, T>, mut condition: F) -> LockResult<MutexGuard<'a, T>>
+    where
+        F: FnMut(&mut T) -> bool,
+    {
+        while condition(&mut guard) {
+            guard = self.wait(guard)?;
+        }
+        Ok(guard)
+    }
+
+    fn wait_inner<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        dur: Option<Duration>,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        let lock = guard.lock;
+        match guard.model.take() {
+            None => {
+                let std_guard = guard.inner.take().expect("guard released");
+                drop(guard); // now inert
+                match dur {
+                    None => match self.inner.wait(std_guard) {
+                        Ok(g) => Ok((rewrap(lock, g, None), WaitTimeoutResult(false))),
+                        Err(p) => Err(PoisonError::new((rewrap(lock, p.into_inner(), None), WaitTimeoutResult(false)))),
+                    },
+                    Some(d) => match self.inner.wait_timeout(std_guard, d) {
+                        Ok((g, r)) => Ok((rewrap(lock, g, None), WaitTimeoutResult(r.timed_out()))),
+                        Err(p) => {
+                            let (g, r) = p.into_inner();
+                            Err(PoisonError::new((rewrap(lock, g, None), WaitTimeoutResult(r.timed_out()))))
+                        }
+                    },
+                }
+            }
+            Some((s, tid)) => {
+                // Drop the real guard while still holding the turn; the
+                // scheduler releases model ownership atomically with
+                // blocking on the condvar (no lost wakeups).
+                guard.inner.take();
+                drop(guard);
+                let timed_out = s.cond_wait(tid, self.id(), lock.id(), dur.is_some());
+                let model = Some((s, tid));
+                match lock.inner.lock() {
+                    Ok(g) => Ok((rewrap(lock, g, model), WaitTimeoutResult(timed_out))),
+                    Err(p) => {
+                        Err(PoisonError::new((rewrap(lock, p.into_inner(), model), WaitTimeoutResult(timed_out))))
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        match cur() {
+            Some((s, tid)) => s.notify(tid, self.id(), false),
+            None => self.inner.notify_one(),
+        }
+    }
+
+    pub fn notify_all(&self) {
+        match cur() {
+            Some((s, tid)) => s.notify(tid, self.id(), true),
+            None => self.inner.notify_all(),
+        }
+    }
+}
+
+fn rewrap<'a, T>(
+    lock: &'a Mutex<T>,
+    g: StdMutexGuard<'a, T>,
+    model: Option<(Arc<Sched>, usize)>,
+) -> MutexGuard<'a, T> {
+    MutexGuard { inner: Some(g), lock, model }
+}
+
+pub mod atomic {
+    //! Atomic wrappers: every access is a scheduling point inside a model.
+    //! Values live in real std atomics, so orderings keep their production
+    //! meaning outside a model (inside one, execution is serialized and
+    //! therefore sequentially consistent regardless of the ordering asked).
+
+    pub use std::sync::atomic::Ordering;
+
+    macro_rules! model_atomic_common {
+        ($Name:ident, $Std:ty, $T:ty) => {
+            #[derive(Debug, Default)]
+            pub struct $Name(pub(crate) $Std);
+
+            impl $Name {
+                pub const fn new(v: $T) -> Self {
+                    Self(<$Std>::new(v))
+                }
+
+                pub fn load(&self, o: Ordering) -> $T {
+                    super::interleave();
+                    self.0.load(o)
+                }
+
+                pub fn store(&self, v: $T, o: Ordering) {
+                    super::interleave();
+                    self.0.store(v, o)
+                }
+
+                pub fn swap(&self, v: $T, o: Ordering) -> $T {
+                    super::interleave();
+                    self.0.swap(v, o)
+                }
+
+                pub fn fetch_or(&self, v: $T, o: Ordering) -> $T {
+                    super::interleave();
+                    self.0.fetch_or(v, o)
+                }
+
+                pub fn compare_exchange(&self, cur: $T, new: $T, ok: Ordering, err: Ordering) -> Result<$T, $T> {
+                    super::interleave();
+                    self.0.compare_exchange(cur, new, ok, err)
+                }
+            }
+        };
+    }
+
+    macro_rules! model_atomic_int {
+        ($Name:ident, $Std:ty, $T:ty) => {
+            model_atomic_common!($Name, $Std, $T);
+
+            impl $Name {
+                pub fn fetch_add(&self, v: $T, o: Ordering) -> $T {
+                    super::interleave();
+                    self.0.fetch_add(v, o)
+                }
+
+                pub fn fetch_sub(&self, v: $T, o: Ordering) -> $T {
+                    super::interleave();
+                    self.0.fetch_sub(v, o)
+                }
+            }
+        };
+    }
+
+    model_atomic_common!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+    model_atomic_int!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+    model_atomic_int!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+}
+
+pub mod thread {
+    //! Thread shim: model threads inside a run, std threads outside.
+
+    use std::num::NonZeroUsize;
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        match super::cur() {
+            None => JoinHandle(Imp::Std(std::thread::spawn(f))),
+            Some((s, tid)) => JoinHandle(Imp::Model(s.model_spawn(tid, f))),
+        }
+    }
+
+    #[derive(Debug, Default)]
+    pub struct Builder {
+        name: Option<String>,
+    }
+
+    impl Builder {
+        pub fn new() -> Self {
+            Builder { name: None }
+        }
+
+        pub fn name(mut self, name: String) -> Self {
+            self.name = Some(name);
+            self
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            match super::cur() {
+                None => {
+                    let mut b = std::thread::Builder::new();
+                    if let Some(n) = self.name {
+                        b = b.name(n);
+                    }
+                    Ok(JoinHandle(Imp::Std(b.spawn(f)?)))
+                }
+                // Model threads get scheduler-assigned names; the requested
+                // one is advisory only.
+                Some((s, tid)) => Ok(JoinHandle(Imp::Model(s.model_spawn(tid, f)))),
+            }
+        }
+    }
+
+    pub struct JoinHandle<T>(Imp<T>);
+
+    enum Imp<T> {
+        Std(std::thread::JoinHandle<T>),
+        Model(super::ModelJoin<T>),
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            match self.0 {
+                Imp::Std(h) => h.join(),
+                Imp::Model(m) => m.join(),
+            }
+        }
+    }
+
+    /// Fixed small parallelism inside a model (pool sizes stay explorable);
+    /// the real machine value outside one.
+    pub fn available_parallelism() -> std::io::Result<NonZeroUsize> {
+        match super::cur() {
+            Some(_) => Ok(NonZeroUsize::new(2).expect("nonzero")),
+            None => std::thread::available_parallelism(),
+        }
+    }
+}
+
+/// Join half of a model-spawned thread.
+pub struct ModelJoin<T> {
+    sched: Arc<Sched>,
+    tid: usize,
+    slot: Arc<StdMutex<Option<T>>>,
+}
+
+impl<T> ModelJoin<T> {
+    fn join(self) -> std::thread::Result<T> {
+        let (sched, me) = cur().expect("model thread joined from outside its model");
+        loop {
+            let mut st = sched.lock_state();
+            if st.threads[self.tid].run == Run::Finished {
+                break;
+            }
+            st.threads[me].run = Run::Blocked(Block::Join(self.tid));
+            sched.pick(&mut st, None);
+            drop(sched.park(st, me));
+        }
+        if let Some(h) = self.sched.take_handle(self.tid) {
+            let _ = h.join();
+        }
+        let v = self.slot.lock().unwrap_or_else(PoisonError::into_inner).take();
+        Ok(v.expect("model thread finished without a result"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::atomic::{AtomicUsize, Ordering};
+    use super::*;
+
+    fn small() -> Config {
+        Config { preemption_bound: 2, max_iters: 100_000, max_steps: 50_000 }
+    }
+
+    fn expect_model_failure<F: Fn() + Send + Sync + 'static>(f: F) -> String {
+        let r = catch_unwind(AssertUnwindSafe(|| model_with(small(), f)));
+        match r {
+            Ok(()) => panic!("model unexpectedly passed"),
+            Err(p) => panic_message(&p),
+        }
+    }
+
+    #[test]
+    fn finds_lost_update_between_racing_threads() {
+        // Non-atomic read-modify-write: some interleaving loses an update,
+        // and the checker must find it.
+        let msg = expect_model_failure(|| {
+            let x = Arc::new(AtomicUsize::new(0));
+            let hs: Vec<_> = (0..2)
+                .map(|_| {
+                    let x = Arc::clone(&x);
+                    thread::spawn(move || {
+                        let v = x.load(Ordering::SeqCst);
+                        x.store(v + 1, Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().expect("join");
+            }
+            assert_eq!(x.load(Ordering::SeqCst), 2, "lost update");
+        });
+        assert!(msg.contains("model failed"), "{msg}");
+    }
+
+    #[test]
+    fn mutex_protected_counter_passes_exhaustively() {
+        model_with(small(), || {
+            let x = Arc::new(Mutex::new(0usize));
+            let hs: Vec<_> = (0..2)
+                .map(|_| {
+                    let x = Arc::clone(&x);
+                    thread::spawn(move || {
+                        let mut g = x.lock().expect("lock");
+                        *g += 1;
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().expect("join");
+            }
+            assert_eq!(*x.lock().expect("lock"), 2);
+        });
+    }
+
+    #[test]
+    fn detects_lock_order_deadlock() {
+        let msg = expect_model_failure(|| {
+            let a = Arc::new(Mutex::new(()));
+            let b = Arc::new(Mutex::new(()));
+            let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+            let h = thread::spawn(move || {
+                let _g1 = b2.lock().expect("lock b");
+                let _g2 = a2.lock().expect("lock a");
+            });
+            let _g1 = a.lock().expect("lock a");
+            let _g2 = b.lock().expect("lock b");
+            drop((_g1, _g2));
+            h.join().expect("join");
+        });
+        assert!(msg.contains("deadlock"), "{msg}");
+    }
+
+    #[test]
+    fn condvar_handoff_has_no_lost_wakeup() {
+        model_with(small(), || {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = Arc::clone(&pair);
+            let h = thread::spawn(move || {
+                let (m, cv) = &*p2;
+                *m.lock().expect("lock") = true;
+                cv.notify_one();
+            });
+            let (m, cv) = &*pair;
+            let mut ready = m.lock().expect("lock");
+            while !*ready {
+                ready = cv.wait(ready).expect("wait");
+            }
+            drop(ready);
+            h.join().expect("join");
+        });
+    }
+
+    #[test]
+    fn modeled_timeout_rescues_an_unnotified_wait() {
+        // Nobody ever notifies: the timed wait must fire its timeout rather
+        // than deadlock, and the deadline loop must then exit.
+        model_with(small(), || {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let (m, cv) = &*pair;
+            let mut ready = m.lock().expect("lock");
+            let mut fired = false;
+            while !*ready {
+                let (g, r) = cv.wait_timeout(ready, Duration::from_millis(1)).expect("wait");
+                ready = g;
+                if r.timed_out() {
+                    fired = true;
+                    break;
+                }
+            }
+            assert!(fired, "timeout must fire when nothing else can run");
+            assert!(!*ready, "nobody set the flag");
+        });
+    }
+
+    #[test]
+    fn exploration_is_bounded_and_terminates() {
+        // 3 threads × a couple of atomic ops under preemption bound 2 —
+        // must exhaust its schedule space quickly.
+        model_with(small(), || {
+            let x = Arc::new(AtomicUsize::new(0));
+            let hs: Vec<_> = (0..3)
+                .map(|_| {
+                    let x = Arc::clone(&x);
+                    thread::spawn(move || {
+                        x.fetch_add(1, Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().expect("join");
+            }
+            assert_eq!(x.load(Ordering::SeqCst), 3);
+        });
+    }
+}

@@ -1,0 +1,212 @@
+//! Deterministic structure-aware fuzzing harness (ISSUE 6 tentpole leg 3).
+//!
+//! cargo-fuzz / libFuzzer are unavailable offline, so the decoder fuzzers
+//! are plain tests built on two pieces:
+//!
+//! * [`Mutator`] — a seeded (splitmix64, via [`crate::infra::prop::Gen`])
+//!   mutation engine that perturbs *valid* encodings: truncation, bit
+//!   flips, byte splats, splices of two valid inputs, and "length lies"
+//!   that rewrite little-endian length prefixes to huge or tiny values.
+//!   Same seed → same mutants, so every CI run covers the same space and
+//!   any failure replays locally from the reported seed.
+//! * [`load_corpus`] — the committed regression corpus under
+//!   `rust/corpus/`: one file per pinned input, either raw bytes or (for
+//!   binary frames, so they stay reviewable in diffs) `.hex` files of
+//!   whitespace-separated hex bytes with `#` comment lines.
+//!
+//! The property under fuzz is always the same: the decoder returns
+//! `Ok(valid)` or a *typed* error — it never panics, never aborts, never
+//! overallocates on a hostile length. `cargo xtask analyze` replays the
+//! corpus through the same entry points the tests use.
+
+use std::path::{Path, PathBuf};
+
+use crate::infra::prop::Gen;
+
+/// Seeded structure-aware mutator over valid encodings.
+pub struct Mutator {
+    gen: Gen,
+}
+
+impl Mutator {
+    pub fn new(seed: u64) -> Self {
+        Mutator { gen: Gen::new(seed) }
+    }
+
+    /// Produce one mutant of `valid` (possibly spliced with `other`).
+    /// The result is usually invalid — that is the point — but stays close
+    /// enough to the real structure to reach deep decoder paths.
+    pub fn mutate(&mut self, valid: &[u8], other: &[u8]) -> Vec<u8> {
+        let mut out = valid.to_vec();
+        match self.gen.below(6) {
+            // Truncate to a strict prefix (length-0 allowed).
+            0 => {
+                let keep = self.gen.below(valid.len().max(1) as u64) as usize;
+                out.truncate(keep);
+            }
+            // Flip 1-8 bits anywhere.
+            1 => {
+                if !out.is_empty() {
+                    for _ in 0..=self.gen.below(8) {
+                        let i = self.gen.below(out.len() as u64) as usize;
+                        out[i] ^= 1 << self.gen.below(8);
+                    }
+                }
+            }
+            // Splat a run of one byte value (0x00, 0xFF, or random).
+            2 => {
+                if !out.is_empty() {
+                    let start = self.gen.below(out.len() as u64) as usize;
+                    let len = (self.gen.below(16) + 1) as usize;
+                    let random = self.gen_byte();
+                    let val = *self.gen.choose(&[0x00, 0xFF, random]);
+                    for b in out.iter_mut().skip(start).take(len) {
+                        *b = val;
+                    }
+                }
+            }
+            // Splice: prefix of one valid input + suffix of another.
+            3 => {
+                let cut_a = self.gen.below(valid.len().max(1) as u64) as usize;
+                let cut_b = self.gen.below(other.len().max(1) as u64) as usize;
+                out.truncate(cut_a);
+                out.extend_from_slice(&other[cut_b.min(other.len())..]);
+            }
+            // Length lie: rewrite a 4-byte aligned-ish window as a hostile
+            // little-endian u32 (huge, near-max, or off-by-one sizes).
+            4 => {
+                if out.len() >= 4 {
+                    let at = self.gen.below((out.len() - 3) as u64) as usize;
+                    let lie: u32 = *self.gen.choose(&[
+                        u32::MAX,
+                        u32::MAX - 1,
+                        1 << 31,
+                        (64 << 20) + 1, // just past MAX_FRAME
+                        0,
+                        1,
+                    ]);
+                    out[at..at + 4].copy_from_slice(&lie.to_le_bytes());
+                }
+            }
+            // Extend with random tail bytes (trailing-garbage handling).
+            _ => {
+                for _ in 0..=self.gen.below(12) {
+                    let b = self.gen_byte();
+                    out.push(b);
+                }
+            }
+        }
+        out
+    }
+
+    fn gen_byte(&mut self) -> u8 {
+        self.gen.below(256) as u8
+    }
+}
+
+/// Decode whitespace-separated hex bytes; `#` starts a to-end-of-line
+/// comment. Errors carry the offending token (corpus files are hand-edited).
+pub fn parse_hex(text: &str) -> Result<Vec<u8>, String> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.split('#').next().unwrap_or("");
+        for tok in line.split_whitespace() {
+            if tok.len() != 2 {
+                return Err(format!("hex token {tok:?} is not two digits"));
+            }
+            let b = u8::from_str_radix(tok, 16).map_err(|e| format!("hex token {tok:?}: {e}"))?;
+            out.push(b);
+        }
+    }
+    Ok(out)
+}
+
+/// Load every corpus file in `dir`, sorted by name for determinism.
+/// `.hex` files are decoded via [`parse_hex`]; anything else is raw bytes.
+pub fn load_corpus(dir: &Path) -> Result<Vec<(PathBuf, Vec<u8>)>, String> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| format!("read corpus dir {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.is_file())
+        .collect();
+    entries.sort();
+    let mut out = Vec::with_capacity(entries.len());
+    for path in entries {
+        let bytes = if path.extension().is_some_and(|x| x == "hex") {
+            let text =
+                std::fs::read_to_string(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
+            parse_hex(&text).map_err(|e| format!("{}: {e}", path.display()))?
+        } else {
+            std::fs::read(&path).map_err(|e| format!("read {}: {e}", path.display()))?
+        };
+        out.push((path, bytes));
+    }
+    Ok(out)
+}
+
+/// Repo-relative corpus directory for a decoder, resolved from either the
+/// workspace root (xtask) or `rust/` (integration tests).
+pub fn corpus_dir(which: &str) -> PathBuf {
+    let local = Path::new("corpus").join(which);
+    if local.is_dir() {
+        return local;
+    }
+    Path::new("rust").join("corpus").join(which)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_round_trips_with_comments() {
+        let text = "# frame header\n01 02 ff\n0a # trailing comment\n";
+        assert_eq!(parse_hex(text).expect("parse"), vec![0x01, 0x02, 0xff, 0x0a]);
+        assert!(parse_hex("xyz").is_err());
+        assert!(parse_hex("123").is_err());
+    }
+
+    #[test]
+    fn mutator_is_deterministic_per_seed() {
+        let valid = b"\x0c\x00\x00\x00\x01hello-world".to_vec();
+        let other = b"\x02\x00\x00\x00zz".to_vec();
+        let a: Vec<Vec<u8>> = {
+            let mut m = Mutator::new(42);
+            (0..64).map(|_| m.mutate(&valid, &other)).collect()
+        };
+        let b: Vec<Vec<u8>> = {
+            let mut m = Mutator::new(42);
+            (0..64).map(|_| m.mutate(&valid, &other)).collect()
+        };
+        assert_eq!(a, b, "same seed must replay the same mutants");
+        let c: Vec<Vec<u8>> = {
+            let mut m = Mutator::new(43);
+            (0..64).map(|_| m.mutate(&valid, &other)).collect()
+        };
+        assert_ne!(a, c, "different seeds should diverge");
+    }
+
+    #[test]
+    fn mutants_are_byte_bounded() {
+        // No mutation may balloon the input: bounded tail growth only.
+        let valid = vec![0u8; 64];
+        let mut m = Mutator::new(7);
+        for _ in 0..512 {
+            let mutant = m.mutate(&valid, &valid);
+            assert!(mutant.len() <= valid.len() * 2 + 16);
+        }
+    }
+
+    #[test]
+    fn corpus_loader_reads_hex_and_raw() {
+        let dir = std::env::temp_dir().join(format!("gbf-corpus-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        std::fs::write(dir.join("a.hex"), "01 02 # two bytes\n").expect("write");
+        std::fs::write(dir.join("b.json"), b"{\"k\":1}").expect("write");
+        let loaded = load_corpus(&dir).expect("load");
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].1, vec![0x01, 0x02]);
+        assert_eq!(loaded[1].1, b"{\"k\":1}".to_vec());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -171,9 +171,17 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Deepest container nesting [`parse`] accepts. The parser is recursive-
+/// descent, so without a bound a hostile document of `[[[[...` recurses
+/// once per byte and overflows the stack (fuzzer finding; pinned by the
+/// deep-nesting corpus entry). 128 is far beyond any document this crate
+/// writes (the manifest nests 3 deep) yet well inside the smallest thread
+/// stack the parser runs on.
+pub const MAX_DEPTH: usize = 128;
+
 /// Parse a JSON document.
 pub fn parse(input: &str) -> Result<Json> {
-    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+    let mut p = Parser { bytes: input.as_bytes(), pos: 0, depth: 0 };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
@@ -192,6 +200,8 @@ pub fn parse_file(path: &std::path::Path) -> Result<Json> {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting (bounded by [`MAX_DEPTH`]).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -221,7 +231,11 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json> {
         self.skip_ws();
-        match self.peek().context("unexpected end of input")? {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH} levels at byte {}", self.pos);
+        }
+        let v = match self.peek().context("unexpected end of input")? {
             b'{' => self.object(),
             b'[' => self.array(),
             b'"' => Ok(Json::Str(self.string()?)),
@@ -229,7 +243,9 @@ impl<'a> Parser<'a> {
             b'f' => self.literal("false", Json::Bool(false)),
             b'n' => self.literal("null", Json::Null),
             _ => self.number(),
-        }
+        };
+        self.depth -= 1;
+        v
     }
 
     fn literal(&mut self, word: &str, value: Json) -> Result<Json> {
@@ -429,6 +445,22 @@ mod tests {
             doc.push(']');
         }
         assert!(parse(&doc).is_ok());
+    }
+
+    #[test]
+    fn hostile_nesting_is_an_error_not_a_stack_overflow() {
+        // one unclosed bracket per byte: without the depth bound this
+        // recursed ~1M frames deep and crashed the process
+        for open in ["[", "{\"k\":"] {
+            let doc = open.repeat(1 << 20);
+            let err = parse(&doc).unwrap_err().to_string();
+            assert!(err.contains("nesting"), "typed depth error, got: {err}");
+        }
+        // exactly at the bound still parses
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH - 1), "]".repeat(MAX_DEPTH - 1));
+        assert!(parse(&ok).is_ok());
+        let over = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(parse(&over).is_err());
     }
 
     #[test]

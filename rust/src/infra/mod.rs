@@ -10,9 +10,15 @@
 //! * [`bench`]     — criterion-style measurement harness (warmup, CV-convergence, percentiles)
 //! * [`threadpool`]— fixed worker pool with a shared injector queue
 //! * [`prop`]      — property-test driver (seeded generators + failure reporting)
+//! * [`check`]     — loom-style model checker (bounded-exhaustive interleaving search)
+//! * [`sync`]      — sync shim: std types normally, [`check`] types under `--cfg loom`
+//! * [`fuzz`]      — deterministic structure-aware fuzzing harness + corpus loader
 
 pub mod bench;
+pub mod check;
 pub mod cli;
+pub mod fuzz;
 pub mod json;
 pub mod prop;
+pub mod sync;
 pub mod threadpool;

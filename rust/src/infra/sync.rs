@@ -1,0 +1,50 @@
+//! Sync shim for the concurrency core (ISSUE 6 tentpole leg 1).
+//!
+//! The coordinator's hot structures (`ticket`, `batcher`, `registry`,
+//! `threadpool`, the wire endpoints) import their sync primitives from here
+//! instead of `std::sync`. A normal build re-exports std unchanged — zero
+//! cost, zero behavior change. A `--cfg loom` build swaps in the dual-mode
+//! types from [`crate::infra::check`], whose every lock/unlock, condvar
+//! wait/notify and atomic access is a scheduling point inside a
+//! `check::model` run (and plain std behavior outside one), so the model
+//! checker can exhaustively interleave the real production types:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release --lib loom_
+//! ```
+//!
+//! `Arc` is never modeled (its refcounts cannot deadlock and the checker
+//! does not explore weak-memory effects), so it is std in both modes.
+
+pub use std::sync::Arc;
+
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+#[cfg(not(loom))]
+pub mod thread {
+    pub use std::thread::{available_parallelism, spawn, Builder, JoinHandle};
+}
+
+#[cfg(loom)]
+pub use crate::infra::check::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+#[cfg(loom)]
+pub use crate::infra::check::atomic;
+
+#[cfg(loom)]
+pub use crate::infra::check::thread;
+
+/// Lock recovering from poisoning: the protected state in this codebase is
+/// either repaired by the caller (a panicked batch run writes its error into
+/// the sink before unwinding) or plain data whose invariants hold at every
+/// await point, so continuing past a poisoned lock is safe and keeps the
+/// wire path free of `unwrap()` (enforced by `xtask lint`).
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}

@@ -3,11 +3,14 @@
 //! The coordinator's execution substrate (tokio is unavailable offline):
 //! N workers pull boxed jobs from a Mutex<VecDeque> + Condvar queue.
 //! `scope`-free fire-and-forget jobs; graceful shutdown on drop.
+//!
+//! Sync primitives come from [`crate::infra::sync`] so a `--cfg loom`
+//! build can model-check the shutdown/submit races (see `loom_tests`).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+
+use crate::infra::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::infra::sync::{thread, Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -22,14 +25,14 @@ struct Shared {
 /// A fixed-size thread pool.
 pub struct ThreadPool {
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
 }
 
 impl ThreadPool {
     /// `threads == 0` uses available parallelism.
     pub fn new(threads: usize) -> Self {
         let threads = if threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2)
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(2)
         } else {
             threads
         };
@@ -43,7 +46,7 @@ impl ThreadPool {
         let workers = (0..threads)
             .map(|i| {
                 let shared = Arc::clone(&shared);
-                std::thread::Builder::new()
+                thread::Builder::new()
                     .name(format!("gbf-worker-{i}"))
                     .spawn(move || worker_loop(&shared))
                     .expect("spawn worker")
@@ -58,6 +61,9 @@ impl ThreadPool {
 
     /// Enqueue a job.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        // Ordering::SeqCst — the increment must be visible before the job is
+        // observable in the queue, so wait_idle() can never see an empty
+        // queue *and* a zero count while a job is in transit between them.
         self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
         self.shared.queue.lock().unwrap().push_back(Box::new(job));
         self.shared.available.notify_one();
@@ -69,18 +75,24 @@ impl ThreadPool {
         let _unused = self
             .shared
             .idle
+            // Ordering::SeqCst — pairs with the fetch_sub in worker_loop;
+            // the count is re-read under the queue lock after each notify.
             .wait_while(guard, |_| self.shared.in_flight.load(Ordering::SeqCst) != 0)
             .unwrap();
     }
 
     /// Number of jobs queued or running.
     pub fn in_flight(&self) -> usize {
+        // Ordering::SeqCst — advisory read, kept SeqCst for symmetry with
+        // the writers (this is not a hot path).
         self.shared.in_flight.load(Ordering::SeqCst)
     }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
+        // Ordering::SeqCst — the store must be visible to a worker woken by
+        // the broadcast below before it decides whether to park again.
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.available.notify_all();
         for w in self.workers.drain(..) {
@@ -97,6 +109,8 @@ fn worker_loop(shared: &Shared) {
                 if let Some(job) = queue.pop_front() {
                     break job;
                 }
+                // Ordering::SeqCst — must observe the Drop store above after
+                // the notify_all wakes us, or shutdown would wait forever.
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
@@ -104,6 +118,8 @@ fn worker_loop(shared: &Shared) {
             }
         };
         job();
+        // Ordering::SeqCst — the decrement orders before the idle broadcast;
+        // the ==1 check makes the last finisher (and only it) wake waiters.
         if shared.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
             // last job out: wake any wait_idle() callers
             let _guard = shared.queue.lock().unwrap();
@@ -164,5 +180,46 @@ mod tests {
         pool.wait_idle();
         drop(pool);
         assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}
+
+/// Bounded-exhaustive interleaving models (ISSUE 6): run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_`.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use crate::infra::check;
+    use std::sync::atomic::AtomicU64;
+
+    /// Shutdown-vs-submit: a job enqueued before Drop must run, Drop must
+    /// join cleanly whatever order the worker observes queue vs. shutdown.
+    #[test]
+    fn loom_threadpool_shutdown_vs_submit() {
+        check::model(|| {
+            let pool = ThreadPool::new(1);
+            let ran = Arc::new(AtomicU64::new(0));
+            let r = Arc::clone(&ran);
+            pool.execute(move || {
+                r.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            });
+            drop(pool); // shutdown broadcast races the worker's dequeue
+            assert_eq!(ran.load(std::sync::atomic::Ordering::SeqCst), 1, "submitted job lost at shutdown");
+        });
+    }
+
+    /// wait_idle must not hang or return early around the last decrement.
+    #[test]
+    fn loom_threadpool_wait_idle_sees_last_job() {
+        check::model(|| {
+            let pool = ThreadPool::new(1);
+            let ran = Arc::new(AtomicU64::new(0));
+            let r = Arc::clone(&ran);
+            pool.execute(move || {
+                r.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            });
+            pool.wait_idle();
+            assert_eq!(ran.load(std::sync::atomic::Ordering::SeqCst), 1);
+            assert_eq!(pool.in_flight(), 0);
+        });
     }
 }

@@ -1,0 +1,243 @@
+//! Wire-codec fuzzing (ISSUE 6 tentpole leg 3): the frame reader and the
+//! request/response decoders against the committed regression corpus and
+//! a deterministic seeded mutation sweep.
+//!
+//! The property is uniform: every decode entry point returns `Ok` or a
+//! *typed* error on arbitrary bytes — it never panics and never honours a
+//! hostile length prefix with a giant allocation. Accepted mutants must
+//! additionally re-encode stably (decode → encode → decode is a fixed
+//! point), so the fuzzer also guards codec canonicalization.
+//!
+//! Corpus layout (`rust/corpus/wire/*.hex`, see `infra::fuzz::parse_hex`):
+//! * `frame-*` — whole frames (length prefix + payload) for `read_frame`
+//! * `resp-*`  — response payloads for `decode_response`
+//! * others    — request payloads for `decode_request`
+//!
+//! Seeded sweeps replay identically per seed; override with
+//! `GBF_FUZZ_SEED` / `GBF_FUZZ_ITERS` to widen a local hunt.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use gbf::coordinator::wire::codec::{
+    decode_request, decode_response, encode_request, encode_response, read_frame, write_frame, Request, Response,
+};
+use gbf::coordinator::{BatchPolicy, FilterService, FilterSpec, GbfError};
+use gbf::filter::params::FilterConfig;
+use gbf::infra::fuzz::{corpus_dir, load_corpus, Mutator};
+
+fn wire_corpus() -> Vec<(String, Vec<u8>)> {
+    load_corpus(&corpus_dir("wire"))
+        .expect("wire corpus present")
+        .into_iter()
+        .map(|(path, bytes)| {
+            let name = path.file_name().expect("file name").to_string_lossy().into_owned();
+            (name, bytes)
+        })
+        .collect()
+}
+
+fn entry(corpus: &[(String, Vec<u8>)], name: &str) -> Vec<u8> {
+    corpus
+        .iter()
+        .find(|(n, _)| n == name)
+        .unwrap_or_else(|| panic!("corpus entry {name} missing"))
+        .1
+        .clone()
+}
+
+/// Run one corpus entry through the decoder its filename selects.
+fn replay(name: &str, bytes: &[u8]) -> Result<(), String> {
+    if name.starts_with("frame-") {
+        read_frame(&mut &bytes[..]).map(|_| ()).map_err(|e| format!("{e:#}"))
+    } else if name.starts_with("resp-") {
+        decode_response(bytes).map(|_| ()).map_err(|e| format!("{e:#}"))
+    } else {
+        decode_request(bytes).map(|_| ()).map_err(|e| format!("{e:#}"))
+    }
+}
+
+fn small_spec(max_batch: usize) -> FilterSpec {
+    FilterSpec {
+        config: FilterConfig { log2_m_words: 12, ..Default::default() },
+        shards: 1,
+        policy: BatchPolicy { max_batch, max_wait: Duration::from_micros(200) },
+        max_queue_depth: None,
+    }
+}
+
+fn valid_requests() -> Vec<Vec<u8>> {
+    let reqs = [
+        Request::List,
+        Request::Create { name: "ns".into(), spec: small_spec(1024) },
+        Request::Drop { name: "ns".into() },
+        Request::Stats { name: "ns".into() },
+        Request::AddBulk { name: "ns".into(), instance: 7, keys: vec![1, 2, 3, u64::MAX] },
+        Request::QueryBulk { name: "ns".into(), instance: 7, keys: vec![9, 10] },
+        Request::Snapshot { name: "ns".into(), dir: "snapshots/a".into() },
+        Request::Restore { name: "ns".into(), dir: "snapshots/a".into() },
+    ];
+    reqs.iter().enumerate().map(|(i, r)| encode_request(i as u64, r)).collect()
+}
+
+fn valid_responses() -> Vec<Vec<u8>> {
+    let resps = [
+        Response::Ok,
+        Response::Created { instance: 3 },
+        Response::Names(vec!["a".into(), "b".into()]),
+        Response::Err(GbfError::Overloaded { name: "ns".into(), depth: 12 }),
+        Response::Err(GbfError::SnapshotVersion { found: 9, supported: 1 }),
+    ];
+    resps.iter().enumerate().map(|(i, r)| encode_response(i as u64, r)).collect()
+}
+
+fn fuzz_seed() -> u64 {
+    std::env::var("GBF_FUZZ_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x00C0_FFEE)
+}
+
+fn fuzz_iters() -> u64 {
+    std::env::var("GBF_FUZZ_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(2_000)
+}
+
+#[test]
+fn corpus_replay_never_panics() {
+    let corpus = wire_corpus();
+    assert!(corpus.len() >= 10, "wire corpus unexpectedly small: {}", corpus.len());
+    for (name, bytes) in &corpus {
+        let outcome = catch_unwind(AssertUnwindSafe(|| replay(name, bytes)));
+        assert!(outcome.is_ok(), "corpus entry {name} panicked the decoder");
+    }
+}
+
+#[test]
+fn valid_corpus_entries_decode() {
+    let corpus = wire_corpus();
+    let (_, req) = decode_request(&entry(&corpus, "valid-list.hex")).expect("valid-list decodes");
+    assert!(matches!(req, Request::List));
+    let (_, req) = decode_request(&entry(&corpus, "valid-create.hex")).expect("valid-create decodes");
+    match req {
+        Request::Create { name, spec } => {
+            assert_eq!(name, "ns");
+            assert_eq!(spec.policy.max_batch, 1024);
+        }
+        other => panic!("valid-create decoded as {other:?}"),
+    }
+    let (_, req) = decode_request(&entry(&corpus, "valid-query.hex")).expect("valid-query decodes");
+    match req {
+        Request::QueryBulk { instance, keys, .. } => {
+            assert_eq!(instance, 7);
+            assert_eq!(keys, vec![1, 2, 3]);
+        }
+        other => panic!("valid-query decoded as {other:?}"),
+    }
+    let (_, resp) = decode_response(&entry(&corpus, "resp-valid-ok.hex")).expect("resp-valid-ok decodes");
+    assert!(matches!(resp, Response::Ok));
+}
+
+#[test]
+fn hostile_corpus_entries_fail_typed() {
+    let corpus = wire_corpus();
+    for name in [
+        "truncated-query.hex",
+        "trailing-garbage.hex",
+        "unknown-tag.hex",
+        "bad-version.hex",
+        "keys-length-lie.hex",
+    ] {
+        assert!(decode_request(&entry(&corpus, name)).is_err(), "{name} must be a typed decode error");
+    }
+    for name in ["resp-names-count-lie.hex", "resp-err-truncated.hex"] {
+        assert!(decode_response(&entry(&corpus, name)).is_err(), "{name} must be a typed decode error");
+    }
+    for name in ["frame-oversize-lie.hex", "frame-truncated.hex"] {
+        let bytes = entry(&corpus, name);
+        assert!(read_frame(&mut &bytes[..]).is_err(), "{name} must be a typed frame error");
+    }
+}
+
+/// Regression (fuzzer finding): a hostile Create carrying
+/// `policy.max_batch = 0` decodes cleanly — the codec is transparent — but
+/// the service must refuse it with a typed `InvalidConfig` instead of
+/// handing the batch worker a policy that can never drain the queue.
+#[test]
+fn max_batch_zero_create_is_refused_at_service() {
+    let corpus = wire_corpus();
+    let (_, req) = decode_request(&entry(&corpus, "create-max-batch-zero.hex")).expect("hostile create decodes");
+    let spec = match req {
+        Request::Create { spec, .. } => spec,
+        other => panic!("expected Create, decoded {other:?}"),
+    };
+    assert_eq!(spec.policy.max_batch, 0, "corpus entry must carry the hostile policy");
+    let svc = FilterService::new();
+    match svc.create_filter_spec("hostile", spec) {
+        Err(GbfError::InvalidConfig(msg)) => assert!(msg.contains("max_batch"), "{msg}"),
+        Err(other) => panic!("hostile spec must be InvalidConfig, got {other:?}"),
+        Ok(_) => panic!("hostile spec must be refused, but a namespace was created"),
+    }
+}
+
+#[test]
+fn mutation_sweep_requests_and_responses() {
+    let seed = fuzz_seed();
+    let iters = fuzz_iters();
+    let reqs = valid_requests();
+    let resps = valid_responses();
+    let mut m = Mutator::new(seed);
+    for i in 0..iters {
+        let a = &reqs[(i % reqs.len() as u64) as usize];
+        let b = &reqs[((i / 3) % reqs.len() as u64) as usize];
+        let mutant = m.mutate(a, b);
+        let outcome = catch_unwind(AssertUnwindSafe(|| decode_request(&mutant)));
+        let decoded = outcome.unwrap_or_else(|_| {
+            panic!("decode_request panicked (seed {seed}, iter {i}): {}", hex(&mutant));
+        });
+        if let Ok((id, req)) = decoded {
+            let reencoded = encode_request(id, &req);
+            let (id2, req2) = decode_request(&reencoded).unwrap_or_else(|e| {
+                panic!("accepted mutant failed to re-decode (seed {seed}, iter {i}): {e:#}");
+            });
+            assert_eq!(id, id2);
+            assert_eq!(format!("{req:?}"), format!("{req2:?}"), "seed {seed}, iter {i}");
+        }
+
+        let a = &resps[(i % resps.len() as u64) as usize];
+        let b = &resps[((i / 5) % resps.len() as u64) as usize];
+        let mutant = m.mutate(a, b);
+        let outcome = catch_unwind(AssertUnwindSafe(|| decode_response(&mutant)));
+        let decoded = outcome.unwrap_or_else(|_| {
+            panic!("decode_response panicked (seed {seed}, iter {i}): {}", hex(&mutant));
+        });
+        if let Ok((id, resp)) = decoded {
+            let reencoded = encode_response(id, &resp);
+            let (id2, resp2) = decode_response(&reencoded).unwrap_or_else(|e| {
+                panic!("accepted mutant failed to re-decode (seed {seed}, iter {i}): {e:#}");
+            });
+            assert_eq!(id, id2);
+            assert_eq!(format!("{resp:?}"), format!("{resp2:?}"), "seed {seed}, iter {i}");
+        }
+    }
+}
+
+#[test]
+fn frame_mutation_sweep() {
+    let seed = fuzz_seed() ^ 0xF4A3;
+    let iters = fuzz_iters();
+    let mut framed = Vec::new();
+    for payload in valid_requests() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).expect("vec write");
+        framed.push(buf);
+    }
+    let mut m = Mutator::new(seed);
+    for i in 0..iters {
+        let a = &framed[(i % framed.len() as u64) as usize];
+        let b = &framed[((i / 7) % framed.len() as u64) as usize];
+        let mutant = m.mutate(a, b);
+        let outcome = catch_unwind(AssertUnwindSafe(|| read_frame(&mut &mutant[..]).map(|_| ())));
+        assert!(outcome.is_ok(), "read_frame panicked (seed {seed}, iter {i}): {}", hex(&mutant));
+    }
+}
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect::<Vec<_>>().join(" ")
+}

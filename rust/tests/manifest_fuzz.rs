@@ -1,0 +1,139 @@
+//! Snapshot-manifest fuzzing (ISSUE 6 tentpole leg 3): the JSON manifest
+//! parser (`SnapshotManifest::from_json_str`) against the committed
+//! regression corpus (`rust/corpus/manifest/*.json`) and a deterministic
+//! seeded mutation sweep over valid documents.
+//!
+//! Property: arbitrary bytes produce `Ok(manifest)` or a *typed*
+//! [`GbfError`] — never a panic, never a stack overflow (the corpus pins
+//! the deep-nesting finding), never an integer-truncation acceptance (the
+//! version-lie entry). Accepted documents must round-trip through
+//! `to_json` as a fixed point.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use gbf::coordinator::persist::{SnapshotManifest, SNAPSHOT_VERSION};
+use gbf::coordinator::GbfError;
+use gbf::infra::fuzz::{corpus_dir, load_corpus, Mutator};
+
+fn manifest_corpus() -> Vec<(String, Vec<u8>)> {
+    load_corpus(&corpus_dir("manifest"))
+        .expect("manifest corpus present")
+        .into_iter()
+        .map(|(path, bytes)| {
+            let name = path.file_name().expect("file name").to_string_lossy().into_owned();
+            (name, bytes)
+        })
+        .collect()
+}
+
+fn entry(corpus: &[(String, Vec<u8>)], name: &str) -> String {
+    let bytes = &corpus
+        .iter()
+        .find(|(n, _)| n == name)
+        .unwrap_or_else(|| panic!("corpus entry {name} missing"))
+        .1;
+    String::from_utf8_lossy(bytes).into_owned()
+}
+
+#[test]
+fn corpus_replay_never_panics() {
+    let corpus = manifest_corpus();
+    assert!(corpus.len() >= 7, "manifest corpus unexpectedly small: {}", corpus.len());
+    for (name, bytes) in &corpus {
+        let text = String::from_utf8_lossy(bytes).into_owned();
+        let outcome = catch_unwind(AssertUnwindSafe(|| SnapshotManifest::from_json_str(&text).map(|_| ())));
+        assert!(outcome.is_ok(), "corpus entry {name} panicked the manifest parser");
+    }
+}
+
+#[test]
+fn valid_corpus_entry_round_trips() {
+    let corpus = manifest_corpus();
+    let manifest = SnapshotManifest::from_json_str(&entry(&corpus, "valid.json")).expect("valid.json parses");
+    assert_eq!(manifest.name, "ns");
+    assert_eq!(manifest.format_version, SNAPSHOT_VERSION);
+    assert_eq!(manifest.shard_files.len(), 1);
+    assert_eq!(manifest.shard_files[0].checksum, 0xDEAD_BEEF_0000_0000);
+    let reparsed = SnapshotManifest::from_json_str(&manifest.to_json()).expect("round trip parses");
+    assert_eq!(manifest, reparsed, "to_json must be a parse fixed point");
+}
+
+/// Regression (fuzzer finding): a doctored `format_version` of 2^32 + 1
+/// must not truncate into "version 1, supported" — the comparison happens
+/// in u64 and the error saturates the reported value.
+#[test]
+fn version_lie_corpus_entry_does_not_truncate() {
+    let corpus = manifest_corpus();
+    match SnapshotManifest::from_json_str(&entry(&corpus, "version-lie.json")) {
+        Err(GbfError::SnapshotVersion { found, supported }) => {
+            assert_eq!(found, u32::MAX, "out-of-range version saturates, never truncates");
+            assert_eq!(supported, SNAPSHOT_VERSION);
+        }
+        other => panic!("version lie must be SnapshotVersion, got {other:?}"),
+    }
+    match SnapshotManifest::from_json_str(&entry(&corpus, "version-future.json")) {
+        Err(GbfError::SnapshotVersion { found: 2, .. }) => {}
+        other => panic!("future version must be SnapshotVersion, got {other:?}"),
+    }
+}
+
+/// Regression (fuzzer finding): deeply-nested input must come back as a
+/// typed corruption error from the parser's depth bound — before the fix,
+/// `[` * 2000 recursed the JSON parser toward a stack overflow.
+#[test]
+fn deep_nesting_corpus_entry_is_typed_error() {
+    let corpus = manifest_corpus();
+    match SnapshotManifest::from_json_str(&entry(&corpus, "deep-nesting.json")) {
+        Err(GbfError::SnapshotCorrupt(msg)) => assert!(msg.contains("nesting"), "{msg}"),
+        other => panic!("deep nesting must be SnapshotCorrupt, got {other:?}"),
+    }
+}
+
+#[test]
+fn hostile_corpus_entries_fail_typed() {
+    let corpus = manifest_corpus();
+    match SnapshotManifest::from_json_str(&entry(&corpus, "path-escape.json")) {
+        Err(GbfError::SnapshotCorrupt(msg)) => assert!(msg.contains("escapes"), "{msg}"),
+        other => panic!("path escape must be SnapshotCorrupt, got {other:?}"),
+    }
+    match SnapshotManifest::from_json_str(&entry(&corpus, "words-mismatch.json")) {
+        Err(GbfError::SnapshotGeometry(_)) => {}
+        other => panic!("word-count mismatch must be SnapshotGeometry, got {other:?}"),
+    }
+    match SnapshotManifest::from_json_str(&entry(&corpus, "checksum-not-hex.json")) {
+        Err(GbfError::SnapshotCorrupt(_)) => {}
+        other => panic!("non-hex checksum must be SnapshotCorrupt, got {other:?}"),
+    }
+    match SnapshotManifest::from_json_str(&entry(&corpus, "shards-zero.json")) {
+        Err(GbfError::SnapshotGeometry(_)) => {}
+        other => panic!("zero shards must be SnapshotGeometry, got {other:?}"),
+    }
+}
+
+#[test]
+fn mutation_sweep_manifests() {
+    let seed = std::env::var("GBF_FUZZ_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x00C0_FFEEu64);
+    let iters: u64 = std::env::var("GBF_FUZZ_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(2_000);
+    let corpus = manifest_corpus();
+    let valid = entry(&corpus, "valid.json").into_bytes();
+    // A second valid document (different geometry) gives splices structure.
+    let other = {
+        let mut m = SnapshotManifest::from_json_str(&entry(&corpus, "valid.json")).expect("valid");
+        m.name = "other".into();
+        m.adds = 99;
+        m.to_json().into_bytes()
+    };
+    let mut m = Mutator::new(seed);
+    for i in 0..iters {
+        let mutant = m.mutate(&valid, &other);
+        let text = String::from_utf8_lossy(&mutant).into_owned();
+        let outcome = catch_unwind(AssertUnwindSafe(|| SnapshotManifest::from_json_str(&text)));
+        let parsed = outcome
+            .unwrap_or_else(|_| panic!("manifest parser panicked (seed {seed}, iter {i}): {text:?}"));
+        if let Ok(manifest) = parsed {
+            let reparsed = SnapshotManifest::from_json_str(&manifest.to_json())
+                .unwrap_or_else(|e| panic!("accepted mutant failed round trip (seed {seed}, iter {i}): {e:?}"));
+            assert_eq!(manifest, reparsed, "seed {seed}, iter {i}");
+        }
+    }
+}

@@ -1,0 +1,450 @@
+//! `cargo xtask` — repo automation for the correctness-tooling subsystem
+//! (ISSUE 6 tentpole leg 4).
+//!
+//! Commands:
+//!
+//! * `cargo xtask lint`    — the custom static-analysis pass over the gbf
+//!   hot paths (see [`lint`] for the rule table). Exits non-zero on any
+//!   violation; CI runs it alongside clippy.
+//! * `cargo xtask fuzz`    — replays the committed regression corpora
+//!   (`rust/corpus/{wire,manifest}`) through the real decoders, then runs
+//!   a bounded seeded mutation sweep. Exits non-zero on a panic, an
+//!   unexpected decode failure of a `valid-*` entry, or a missing corpus.
+//! * `cargo xtask analyze` — both, in order. The CI analysis job.
+//!
+//! The lint is a deliberately simple line scanner, not a rustc driver: the
+//! offline toolchain has no rustc plugin API available, and the rules are
+//! all lexical. Known limits (acceptable for the rule set): brace counting
+//! inside `#[cfg(test)]` regions assumes string literals keep braces
+//! balanced, which holds for format strings and everything in-tree.
+
+use std::fmt::Write as _;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+use gbf::coordinator::persist::SnapshotManifest;
+use gbf::coordinator::wire::codec::{decode_request, decode_response, read_frame};
+use gbf::infra::fuzz::{load_corpus, Mutator};
+
+fn main() -> ExitCode {
+    let command = std::env::args().nth(1).unwrap_or_default();
+    let outcome = match command.as_str() {
+        "lint" => lint(),
+        "fuzz" => fuzz(),
+        "analyze" => lint().and_then(|()| fuzz()),
+        other => {
+            eprintln!("unknown command {other:?}\n\nusage: cargo xtask <lint|fuzz|analyze>");
+            return ExitCode::FAILURE;
+        }
+    };
+    match outcome {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("{e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Workspace root, resolved from this crate's manifest so the commands
+/// work from any working directory.
+fn repo_root() -> PathBuf {
+    let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest_dir.parent().expect("xtask lives one level under the workspace root").to_path_buf()
+}
+
+// ---- lint ----
+
+/// One rule violation, formatted `path:line: message`.
+#[derive(Debug)]
+struct Violation {
+    file: PathBuf,
+    line: usize,
+    message: String,
+}
+
+/// The static-analysis pass. Rule table (all rules skip `#[cfg(test)]`
+/// regions and comment lines):
+///
+/// | scope                                      | rule                                             |
+/// |--------------------------------------------|--------------------------------------------------|
+/// | `coordinator/wire/`, `coordinator/server.rs` | no `.unwrap()` / `.expect(` — the wire path must surface typed errors |
+/// | `filter/`                                  | no `get_unchecked` — kernel loops stay bounds-checked (the optimizer hoists the checks) |
+/// | everywhere                                 | every `unsafe` needs an adjacent `// SAFETY:` comment |
+/// | everywhere                                 | every `Ordering::` choice needs a justifying comment within 10 lines |
+fn lint() -> Result<()> {
+    let src = repo_root().join("rust").join("src");
+    let violations = lint_tree(&src)?;
+    if violations.is_empty() {
+        println!("xtask lint: clean");
+        return Ok(());
+    }
+    let mut report = String::new();
+    for v in &violations {
+        let _ = writeln!(report, "{}:{}: {}", v.file.display(), v.line, v.message);
+    }
+    bail!("xtask lint: {} violation(s)\n{report}", violations.len());
+}
+
+fn lint_tree(src: &Path) -> Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs_files(src, &mut files)?;
+    files.sort();
+    let mut violations = Vec::new();
+    for file in files {
+        let text = std::fs::read_to_string(&file).with_context(|| format!("reading {}", file.display()))?;
+        let rel = file.strip_prefix(src).unwrap_or(&file).to_string_lossy().replace('\\', "/");
+        lint_file(&file, &rel, &text, &mut violations);
+    }
+    Ok(violations)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Mark every line belonging to a `#[cfg(test)]`-gated item (including
+/// `#[cfg(all(test, loom))]` and friends) by brace counting from the
+/// attribute to the close of the item it gates.
+fn test_region_mask(lines: &[&str]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        let t = lines[i].trim_start();
+        let gates_test = t.starts_with("#[cfg(") && t.contains("test") && !t.contains("not(test)");
+        if !gates_test {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut opened = false;
+        let mut j = i;
+        while j < lines.len() {
+            mask[j] = true;
+            for ch in lines[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth = depth.saturating_sub(1),
+                    _ => {}
+                }
+            }
+            if opened && depth == 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+fn is_comment(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+fn is_attr_or_blank(line: &str) -> bool {
+    let t = line.trim();
+    t.is_empty() || t.starts_with("#[") || t.starts_with("#![")
+}
+
+/// True when `line` contains `word` as a standalone token (not a prefix of
+/// a longer identifier like `unsafe_code`).
+fn has_word(line: &str, word: &str) -> bool {
+    let mut rest = line;
+    while let Some(at) = rest.find(word) {
+        let before_ok = at == 0 || !is_ident_char(rest.as_bytes()[at - 1]);
+        let after = at + word.len();
+        let after_ok = after >= rest.len() || !is_ident_char(rest.as_bytes()[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+        rest = &rest[after..];
+    }
+    false
+}
+
+fn is_ident_char(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn lint_file(file: &Path, rel: &str, text: &str, violations: &mut Vec<Violation>) {
+    let lines: Vec<&str> = text.lines().collect();
+    let in_test = test_region_mask(&lines);
+
+    let wire_scope = rel.starts_with("coordinator/wire/") || rel == "coordinator/server.rs";
+    let filter_scope = rel.starts_with("filter/");
+
+    for (idx, &line) in lines.iter().enumerate() {
+        if in_test[idx] || is_comment(line) {
+            continue;
+        }
+        let lineno = idx + 1;
+        // Strip a trailing line comment so justifications don't trigger
+        // code rules; crude (ignores `//` inside strings) but the tree
+        // has no such strings on rule-relevant lines.
+        let code = line.split("//").next().unwrap_or(line);
+
+        if wire_scope && (code.contains(".unwrap()") || code.contains(".expect(")) {
+            violations.push(Violation {
+                file: file.to_path_buf(),
+                line: lineno,
+                message: "unwrap/expect on the wire path — return a typed GbfError instead".into(),
+            });
+        }
+
+        if filter_scope && code.contains("get_unchecked") {
+            violations.push(Violation {
+                file: file.to_path_buf(),
+                line: lineno,
+                message: "unchecked indexing in a filter kernel — keep bounds checks (the optimizer hoists them)"
+                    .into(),
+            });
+        }
+
+        if has_word(code, "unsafe") && !safety_comment_above(&lines, idx) {
+            violations.push(Violation {
+                file: file.to_path_buf(),
+                line: lineno,
+                message: "unsafe without an adjacent `// SAFETY:` comment".into(),
+            });
+        }
+
+        if code.contains("Ordering::") && !ordering_justified(&lines, idx) {
+            violations.push(Violation {
+                file: file.to_path_buf(),
+                line: lineno,
+                message: "memory-ordering choice without a justifying comment within 10 lines".into(),
+            });
+        }
+    }
+}
+
+/// Walk upward over comments, attributes, and blank lines looking for a
+/// `SAFETY:` comment attached to the `unsafe` at `idx`.
+fn safety_comment_above(lines: &[&str], idx: usize) -> bool {
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let line = lines[k];
+        if is_comment(line) {
+            if line.contains("SAFETY:") {
+                return true;
+            }
+        } else if !is_attr_or_blank(line) {
+            return false;
+        }
+    }
+    false
+}
+
+/// A justifying comment for an `Ordering::` choice: a comment line within
+/// the previous 10 lines (or trailing on the same line) naming the
+/// ordering or its pairing.
+fn ordering_justified(lines: &[&str], idx: usize) -> bool {
+    const KEYWORDS: [&str; 7] = ["Ordering", "Relaxed", "Acquire", "Release", "SeqCst", "AcqRel", "pairs with"];
+    let trailing = lines[idx].split_once("//").map(|(_, c)| c).unwrap_or("");
+    if KEYWORDS.iter().any(|k| trailing.contains(k)) {
+        return true;
+    }
+    for back in 1..=10 {
+        let Some(k) = idx.checked_sub(back) else { break };
+        let line = lines[k];
+        if is_comment(line) && KEYWORDS.iter().any(|kw| line.contains(kw)) {
+            return true;
+        }
+    }
+    false
+}
+
+// ---- fuzz ----
+
+/// Replay the committed corpora through the real decoders, then run a
+/// bounded seeded mutation sweep. Mirrors the `codec_fuzz` /
+/// `manifest_fuzz` integration tests so a violation fails CI from either
+/// entry point.
+fn fuzz() -> Result<()> {
+    let root = repo_root();
+    let mut failures = Vec::new();
+
+    let wire = load_corpus(&root.join("rust").join("corpus").join("wire")).map_err(anyhow::Error::msg)?;
+    if wire.is_empty() {
+        bail!("wire corpus is empty");
+    }
+    for (path, bytes) in &wire {
+        let name = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if name.starts_with("frame-") {
+                read_frame(&mut &bytes[..]).is_ok()
+            } else if name.starts_with("resp-") {
+                decode_response(bytes).is_ok()
+            } else {
+                decode_request(bytes).is_ok()
+            }
+        }));
+        match outcome {
+            Err(_) => failures.push(format!("{name}: decoder panicked")),
+            Ok(accepted) => {
+                let must_accept = name.starts_with("valid-") || name.starts_with("resp-valid-");
+                if must_accept && !accepted {
+                    failures.push(format!("{name}: pinned valid encoding no longer decodes"));
+                }
+                if !must_accept && accepted && name.contains('-') && is_hostile(&name) {
+                    failures.push(format!("{name}: pinned hostile encoding decoded successfully"));
+                }
+            }
+        }
+    }
+
+    let manifest = load_corpus(&root.join("rust").join("corpus").join("manifest")).map_err(anyhow::Error::msg)?;
+    if manifest.is_empty() {
+        bail!("manifest corpus is empty");
+    }
+    for (path, bytes) in &manifest {
+        let name = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+        let text = String::from_utf8_lossy(bytes).into_owned();
+        match catch_unwind(AssertUnwindSafe(|| SnapshotManifest::from_json_str(&text).is_ok())) {
+            Err(_) => failures.push(format!("{name}: manifest parser panicked")),
+            Ok(accepted) => {
+                if name.starts_with("valid") && !accepted {
+                    failures.push(format!("{name}: pinned valid manifest no longer parses"));
+                }
+                if !name.starts_with("valid") && accepted {
+                    failures.push(format!("{name}: pinned hostile manifest parsed successfully"));
+                }
+            }
+        }
+    }
+
+    // Bounded fresh sweep: deterministic seed so CI failures replay
+    // locally byte for byte (`GBF_FUZZ_SEED` widens the hunt).
+    let seed = std::env::var("GBF_FUZZ_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x00C0_FFEEu64);
+    let iters: u64 = std::env::var("GBF_FUZZ_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(500);
+    let wire_valid: Vec<&Vec<u8>> = wire
+        .iter()
+        .filter(|(p, _)| p.file_name().is_some_and(|n| n.to_string_lossy().starts_with("valid-")))
+        .map(|(_, b)| b)
+        .collect();
+    let mut mutator = Mutator::new(seed);
+    for i in 0..iters {
+        let a = wire_valid[(i % wire_valid.len() as u64) as usize];
+        let b = wire_valid[((i / 3) % wire_valid.len() as u64) as usize];
+        let mutant = mutator.mutate(a, b);
+        if catch_unwind(AssertUnwindSafe(|| decode_request(&mutant).map(|_| ()))).is_err() {
+            failures.push(format!("mutation sweep: decode_request panicked (seed {seed}, iter {i})"));
+        }
+    }
+    let manifest_valid = &manifest
+        .iter()
+        .find(|(p, _)| p.file_name().is_some_and(|n| n == "valid.json"))
+        .expect("valid.json in corpus")
+        .1;
+    for i in 0..iters {
+        let mutant = mutator.mutate(manifest_valid, manifest_valid);
+        let text = String::from_utf8_lossy(&mutant).into_owned();
+        if catch_unwind(AssertUnwindSafe(|| SnapshotManifest::from_json_str(&text).map(|_| ()))).is_err() {
+            failures.push(format!("mutation sweep: manifest parser panicked (seed {seed}, iter {i})"));
+        }
+    }
+
+    if failures.is_empty() {
+        println!(
+            "xtask fuzz: {} wire + {} manifest corpus entries replayed, {iters}+{iters} mutants swept (seed {seed})",
+            wire.len(),
+            manifest.len()
+        );
+        return Ok(());
+    }
+    bail!("xtask fuzz: {} failure(s)\n{}", failures.len(), failures.join("\n"));
+}
+
+/// Hostile wire-corpus entries that must NOT decode. `create-max-batch-zero`
+/// deliberately decodes (the codec is transparent; the service refuses it),
+/// so it is replay-only.
+fn is_hostile(name: &str) -> bool {
+    [
+        "truncated-",
+        "trailing-",
+        "unknown-",
+        "bad-",
+        "keys-length-lie",
+        "resp-names-count-lie",
+        "resp-err-truncated",
+    ]
+    .iter()
+    .any(|p| name.starts_with(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The committed tree must satisfy its own lint — this is the unit-test
+    /// mirror of the CI `cargo xtask analyze` gate.
+    #[test]
+    fn repo_is_lint_clean() {
+        let src = repo_root().join("rust").join("src");
+        let violations = lint_tree(&src).expect("lint pass runs");
+        let report: Vec<String> =
+            violations.iter().map(|v| format!("{}:{}: {}", v.file.display(), v.line, v.message)).collect();
+        assert!(violations.is_empty(), "lint violations:\n{}", report.join("\n"));
+    }
+
+    #[test]
+    fn lint_catches_each_rule() {
+        let dir = std::env::temp_dir().join(format!("gbf-xtask-lint-{}", std::process::id()));
+        let wire = dir.join("coordinator").join("wire");
+        let filter = dir.join("filter");
+        std::fs::create_dir_all(&wire).expect("mkdir");
+        std::fs::create_dir_all(&filter).expect("mkdir");
+        std::fs::write(
+            wire.join("bad.rs"),
+            "fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n",
+        )
+        .expect("write");
+        std::fs::write(
+            filter.join("bad.rs"),
+            "fn g(v: &[u8]) -> u8 {\n    unsafe { *v.get_unchecked(0) }\n}\n\
+             fn h(a: &std::sync::atomic::AtomicU64) -> u64 {\n    a.load(std::sync::atomic::Ordering::Relaxed)\n}\n",
+        )
+        .expect("write");
+        // Test regions are exempt from every rule — even inside the
+        // unwrap-banned wire scope.
+        std::fs::write(
+            wire.join("tested.rs"),
+            "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        Some(1).unwrap();\n    }\n}\n",
+        )
+        .expect("write");
+        let violations = lint_tree(&dir).expect("lint runs");
+        let messages: Vec<&str> = violations.iter().map(|v| v.message.as_str()).collect();
+        assert!(messages.iter().any(|m| m.contains("unwrap/expect")), "{messages:?}");
+        assert!(messages.iter().any(|m| m.contains("unchecked indexing")), "{messages:?}");
+        assert!(messages.iter().any(|m| m.contains("SAFETY")), "{messages:?}");
+        assert!(messages.iter().any(|m| m.contains("memory-ordering")), "{messages:?}");
+        assert!(
+            violations.iter().all(|v| !v.file.ends_with("tested.rs")),
+            "test regions must be exempt: {violations:?}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn word_boundaries_respected() {
+        assert!(has_word("unsafe {", "unsafe"));
+        assert!(has_word("pub unsafe fn x()", "unsafe"));
+        assert!(!has_word("#![forbid(unsafe_code)]", "unsafe"));
+        assert!(!has_word("let unsafely = 1;", "unsafe"));
+    }
+}
