@@ -77,7 +77,7 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
 /// Latency histogram with exponential buckets (ns scale), lock-free record.
 #[derive(Debug)]
 pub struct LatencyHistogram {
-    buckets: Vec<std::sync::atomic::AtomicU64>,
+    buckets: Vec<crate::infra::sync::atomic::AtomicU64>,
 }
 
 impl Default for LatencyHistogram {
@@ -90,7 +90,7 @@ impl LatencyHistogram {
     /// 64 buckets: bucket i counts latencies in [2^i, 2^{i+1}) ns.
     pub fn new() -> Self {
         LatencyHistogram {
-            buckets: (0..64).map(|_| std::sync::atomic::AtomicU64::new(0)).collect(),
+            buckets: (0..64).map(|_| crate::infra::sync::atomic::AtomicU64::new(0)).collect(),
         }
     }
 
@@ -98,12 +98,12 @@ impl LatencyHistogram {
         let idx = (64 - ns.max(1).leading_zeros() as usize - 1).min(63);
         // Ordering::Relaxed — monotonic histogram bucket increments;
         // readers only ever take advisory percentile snapshots.
-        self.buckets[idx].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.buckets[idx].fetch_add(1, crate::infra::sync::atomic::Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
         // Ordering::Relaxed — advisory totals; pairs with record_ns above
-        self.buckets.iter().map(|b| b.load(std::sync::atomic::Ordering::Relaxed)).sum()
+        self.buckets.iter().map(|b| b.load(crate::infra::sync::atomic::Ordering::Relaxed)).sum()
     }
 
     /// Approximate percentile (upper bucket bound), ns.
@@ -116,7 +116,7 @@ impl LatencyHistogram {
         let mut seen = 0;
         for (i, b) in self.buckets.iter().enumerate() {
             // Ordering::Relaxed — advisory percentile scan; see record_ns
-            seen += b.load(std::sync::atomic::Ordering::Relaxed);
+            seen += b.load(crate::infra::sync::atomic::Ordering::Relaxed);
             if seen >= target {
                 return 1u64 << (i + 1);
             }

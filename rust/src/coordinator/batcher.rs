@@ -69,8 +69,8 @@ impl BulkSink {
 
     fn build(n: usize, e2e: Option<(Arc<Metrics>, Instant)>) -> Arc<Self> {
         Arc::new(BulkSink {
-            state: Mutex::new(BulkState { results: AnswerBits::with_len(n), remaining: n, error: None }),
-            done: Condvar::new(),
+            state: Mutex::new_class("ticket.sink", BulkState { results: AnswerBits::with_len(n), remaining: n, error: None }),
+            done: Condvar::new_class("ticket.done"),
             e2e,
         })
     }
@@ -165,8 +165,8 @@ impl Batcher {
         policy.max_batch = policy.max_batch.max(1);
         Batcher {
             queue: Arc::new(Queue {
-                inner: Mutex::new(VecDeque::new()),
-                available: Condvar::new(),
+                inner: Mutex::new_class("batcher.queue", VecDeque::new()),
+                available: Condvar::new_class("batcher.available"),
                 stop: AtomicBool::new(false),
             }),
             policy,

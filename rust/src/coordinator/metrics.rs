@@ -1,7 +1,7 @@
 //! Coordinator metrics: per-namespace counters + latency histograms, and
 //! the per-shard counters the registry records underneath them.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::infra::sync::atomic::{AtomicU64, Ordering};
 
 use crate::analytics::stats::LatencyHistogram;
 

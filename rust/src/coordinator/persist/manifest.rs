@@ -77,6 +77,15 @@ pub struct SnapshotManifest {
     /// `stats(name)` survives the restart.
     pub adds: u64,
     pub queries: u64,
+    /// Batching policy at snapshot time (`policy.max_batch`), recorded so
+    /// a restore rebuilds the namespace with its real scheduling instead
+    /// of silently reverting to defaults. `None` when absent — version-1
+    /// manifests written before the field existed stay restorable.
+    pub max_batch: Option<u64>,
+    /// Admission bound at snapshot time (`policy.max_queue_depth`);
+    /// `None` means the namespace admitted everything (or the manifest
+    /// predates the field).
+    pub max_queue_depth: Option<u64>,
 }
 
 /// Flatten an internal (anyhow) decode failure into the typed corruption
@@ -117,15 +126,27 @@ impl SnapshotManifest {
             ("adds", Json::Int(self.adds as i64)),
             ("queries", Json::Int(self.queries as i64)),
         ]);
-        Json::obj(vec![
+        let mut top = vec![
             ("format_version", Json::Int(self.format_version as i64)),
             ("name", Json::str(self.name.as_str())),
             ("config", config),
             ("shards", Json::Int(self.shard_files.len() as i64)),
             ("shard_files", shard_files),
             ("counters", counters),
-        ])
-        .to_string()
+        ];
+        // Policy is an optional block: a manifest without one stays
+        // byte-identical to what pre-policy writers produced.
+        if self.max_batch.is_some() || self.max_queue_depth.is_some() {
+            let mut policy = Vec::new();
+            if let Some(mb) = self.max_batch {
+                policy.push(("max_batch", Json::Int(mb as i64)));
+            }
+            if let Some(mq) = self.max_queue_depth {
+                policy.push(("max_queue_depth", Json::Int(mq as i64)));
+            }
+            top.push(("policy", Json::obj(policy)));
+        }
+        Json::obj(top).to_string()
     }
 
     /// Decode and cross-validate a manifest document (typed errors — see
@@ -208,7 +229,42 @@ impl SnapshotManifest {
         let adds = corrupt(counters.expect("adds").and_then(Json::as_u64), "adds counter")?;
         let queries = corrupt(counters.expect("queries").and_then(Json::as_u64), "queries counter")?;
 
-        Ok(SnapshotManifest { format_version: found, name, config, shard_files, adds, queries })
+        // Policy is OPTIONAL (`get`, not `expect`): version-1 manifests
+        // written before the block existed must keep decoding — absence
+        // means "defaults", never corruption. A *present* block is held
+        // to the same standards as a create: a zero max_batch could never
+        // drain the queue, so a doctored manifest cannot smuggle one past
+        // the typed refusal the wire create path gives it.
+        let (max_batch, max_queue_depth) = match doc.get("policy") {
+            None => (None, None),
+            Some(policy) => {
+                let max_batch = match policy.get("max_batch") {
+                    None => None,
+                    Some(v) => Some(corrupt(v.as_u64(), "policy max_batch")?),
+                };
+                if max_batch == Some(0) {
+                    return Err(GbfError::SnapshotGeometry(
+                        "manifest policy.max_batch must be at least 1".into(),
+                    ));
+                }
+                let max_queue_depth = match policy.get("max_queue_depth") {
+                    None => None,
+                    Some(v) => Some(corrupt(v.as_u64(), "policy max_queue_depth")?),
+                };
+                (max_batch, max_queue_depth)
+            }
+        };
+
+        Ok(SnapshotManifest {
+            format_version: found,
+            name,
+            config,
+            shard_files,
+            adds,
+            queries,
+            max_batch,
+            max_queue_depth,
+        })
     }
 }
 
@@ -232,6 +288,8 @@ mod tests {
             shard_files,
             adds: 7,
             queries: 3,
+            max_batch: None,
+            max_queue_depth: None,
         }
     }
 
@@ -240,6 +298,47 @@ mod tests {
         let m = sample(4);
         let got = SnapshotManifest::from_json_str(&m.to_json()).unwrap();
         assert_eq!(got, m);
+    }
+
+    #[test]
+    fn policy_round_trips() {
+        let mut m = sample(2);
+        m.max_batch = Some(512);
+        m.max_queue_depth = Some(4096);
+        let got = SnapshotManifest::from_json_str(&m.to_json()).unwrap();
+        assert_eq!(got, m);
+        assert_eq!(got.max_batch, Some(512));
+        assert_eq!(got.max_queue_depth, Some(4096));
+        // a partial block round-trips too (an unbounded queue records
+        // only the batch size)
+        let mut m = sample(1);
+        m.max_batch = Some(64);
+        let got = SnapshotManifest::from_json_str(&m.to_json()).unwrap();
+        assert_eq!(got.max_batch, Some(64));
+        assert_eq!(got.max_queue_depth, None);
+    }
+
+    #[test]
+    fn absent_policy_decodes_as_defaults() {
+        // a version-1 manifest written before the policy block existed:
+        // same version, no "policy" key — must decode, not error
+        let m = sample(2);
+        let doc = m.to_json();
+        assert!(!doc.contains("policy"), "policy-less manifests stay policy-less on disk");
+        let got = SnapshotManifest::from_json_str(&doc).unwrap();
+        assert_eq!(got.max_batch, None);
+        assert_eq!(got.max_queue_depth, None);
+    }
+
+    #[test]
+    fn zero_max_batch_in_policy_is_refused() {
+        // a doctored manifest must not smuggle a queue-stalling policy
+        // past the typed refusal the create path gives it
+        let mut m = sample(1);
+        m.max_batch = Some(1);
+        let doc = m.to_json().replace("\"max_batch\":1", "\"max_batch\":0");
+        assert_ne!(doc, m.to_json(), "replacement target present");
+        assert!(matches!(SnapshotManifest::from_json_str(&doc), Err(GbfError::SnapshotGeometry(_))));
     }
 
     #[test]

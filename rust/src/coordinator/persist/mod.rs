@@ -52,9 +52,10 @@ use std::collections::HashSet;
 use std::fs::{self, File};
 use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::{Mutex, OnceLock};
+use std::sync::OnceLock;
 
 use crate::filter::params::FilterConfig;
+use crate::infra::sync::Mutex;
 
 use super::error::GbfError;
 
@@ -80,7 +81,7 @@ impl Drop for DirLock {
 }
 
 fn lock_destination(dir: &Path) -> Result<DirLock, GbfError> {
-    let set = IN_FLIGHT.get_or_init(|| Mutex::new(HashSet::new()));
+    let set = IN_FLIGHT.get_or_init(|| Mutex::new_class("persist.inflight", HashSet::new()));
     let key = dir.to_path_buf();
     if !set.lock().unwrap().insert(key.clone()) {
         return Err(GbfError::Backend(format!("snapshot already in progress for {key:?}")));
@@ -139,6 +140,8 @@ pub struct SnapshotWriter {
     config: FilterConfig,
     num_shards: usize,
     entries: Vec<ShardFile>,
+    max_batch: Option<u64>,
+    max_queue_depth: Option<u64>,
     /// Held for the writer's whole life: one snapshot per destination.
     _lock: DirLock,
 }
@@ -179,8 +182,20 @@ impl SnapshotWriter {
             config: *config,
             num_shards,
             entries: Vec::new(),
+            max_batch: None,
+            max_queue_depth: None,
             _lock: lock,
         })
+    }
+
+    /// Record the namespace's scheduling policy in the manifest, so a
+    /// restore rebuilds it with its real batching/backpressure instead of
+    /// reverting to defaults. Optional: a writer that never calls this
+    /// produces a policy-less manifest (byte-identical to the pre-policy
+    /// format), which restores with defaults.
+    pub fn record_policy(&mut self, max_batch: u64, max_queue_depth: Option<u64>) {
+        self.max_batch = Some(max_batch);
+        self.max_queue_depth = max_queue_depth;
     }
 
     /// Write shard `idx`'s words (must be called in shard order,
@@ -243,6 +258,8 @@ impl SnapshotWriter {
             shard_files: self.entries.clone(),
             adds,
             queries,
+            max_batch: self.max_batch,
+            max_queue_depth: self.max_queue_depth,
         };
         write_fsync(&self.tmp_dir.join(MANIFEST_FILE), manifest.to_json().as_bytes())?;
         fsync_dir(&self.tmp_dir);

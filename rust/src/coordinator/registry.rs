@@ -56,7 +56,7 @@ struct Latch {
 
 impl Latch {
     fn new(n: usize) -> Arc<Latch> {
-        Arc::new(Latch { remaining: Mutex::new(n), done: Condvar::new() })
+        Arc::new(Latch { remaining: Mutex::new_class("registry.latch", n), done: Condvar::new_class("registry.latch-done") })
     }
 
     fn count_down(&self) {
@@ -144,7 +144,9 @@ struct BulkScratch {
 impl BulkScratch {
     fn new(num_shards: usize) -> BulkScratch {
         BulkScratch {
-            lanes: (0..num_shards).map(|_| Arc::new(Mutex::new(Lane::default()))).collect(),
+            // all lanes share one lock class; `partition_into` acquires them
+            // in index order, which same-class witness semantics rely on
+            lanes: (0..num_shards).map(|_| Arc::new(Mutex::new_class("registry.lane", Lane::default()))).collect(),
             lens: vec![0; num_shards],
         }
     }
@@ -205,7 +207,7 @@ impl ShardedRegistry {
             counters,
             router: Router::new(num_shards),
             pool,
-            scratch: Mutex::new(Vec::new()),
+            scratch: Mutex::new_class("registry.scratch-pool", Vec::new()),
             threads_per_shard: (cores / num_shards).max(1),
             cfg,
         })
@@ -245,7 +247,7 @@ impl ShardedRegistry {
     /// (clearing, never reallocating once lanes have grown to steady
     /// state), recording original positions for the answer scatter.
     fn partition_into(&self, keys: &[u64], scratch: &mut BulkScratch) {
-        let mut guards: Vec<_> = scratch.lanes.iter().map(|l| l.lock().unwrap()).collect();
+        let mut guards: Vec<_> = scratch.lanes.iter().map(|lane| lane.lock().unwrap()).collect();
         for g in guards.iter_mut() {
             g.keys.clear();
             g.idx.clear();
@@ -294,7 +296,7 @@ impl ShardedRegistry {
             return Ok(());
         }
         let latch = Latch::new(n_jobs);
-        let failure: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let failure: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new_class("registry.failure", None));
         let job = Arc::new(job);
         let threads = self.threads_per_shard;
         for (shard, &n_keys) in scratch.lens.iter().enumerate() {

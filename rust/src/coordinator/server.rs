@@ -55,6 +55,7 @@ pub struct Coordinator {
     metrics: Arc<Metrics>,
     backend: Arc<dyn FilterBackend>,
     filter_config: FilterConfig,
+    policy: BatchPolicy,
 }
 
 impl Coordinator {
@@ -68,6 +69,7 @@ impl Coordinator {
         let backend: Arc<dyn FilterBackend> = Arc::from(make_backend(cfg.num_shards)?);
         let filter_config = *backend.config();
         let metrics = Arc::new(Metrics::default());
+        let policy = cfg.policy.clone();
         let batcher = Arc::new(Batcher::new(cfg.policy.clone()));
         let handle = batcher.handle();
         let worker = {
@@ -85,7 +87,15 @@ impl Coordinator {
             metrics,
             backend,
             filter_config,
+            policy,
         })
+    }
+
+    /// The batch policy this engine was built with — what a snapshot
+    /// records so a restore can rebuild the namespace with its real
+    /// scheduling instead of reverting to defaults.
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
     }
 
     /// Shard count of the backing state (1 for unsharded backends).

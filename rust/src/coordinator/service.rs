@@ -28,10 +28,10 @@ use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::fmt;
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
-
 use anyhow::Result;
+
+use crate::infra::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::infra::sync::{Arc, RwLock};
 
 use crate::filter::params::FilterConfig;
 use crate::filter::AnswerBits;
@@ -182,9 +182,14 @@ fn validate_name(name: &str) -> Result<(), GbfError> {
 }
 
 /// The multi-tenant filter catalog (see module docs).
-#[derive(Default)]
 pub struct FilterService {
     namespaces: RwLock<HashMap<String, Arc<Namespace>>>,
+}
+
+impl Default for FilterService {
+    fn default() -> FilterService {
+        FilterService { namespaces: RwLock::new_class("service.catalog", HashMap::new()) }
+    }
 }
 
 impl FilterService {
@@ -289,6 +294,7 @@ impl FilterService {
         let ns = self.lookup(name)?;
         let shards = ns.engine.num_shards();
         let mut writer = SnapshotWriter::begin(dir, name, ns.engine.filter_config(), shards)?;
+        writer.record_policy(ns.engine.policy().max_batch as u64, ns.max_queue_depth.map(|d| d as u64));
         for idx in 0..shards {
             let words = ns.engine.snapshot_shard(idx).map_err(|e| GbfError::Backend(format!("{e:#}")))?;
             writer.write_shard(idx, &words)?;
@@ -303,10 +309,11 @@ impl FilterService {
     /// and every shard loaded and checksum-verified — **off the catalog
     /// lock**, then published under a fresh instance id, so handles from
     /// before the restore fail with [`GbfError::NoSuchFilter`] exactly
-    /// like after a drop-and-recreate. Restores always rebuild on the
-    /// native backend with the default batch policy (the manifest
-    /// records geometry and content, not scheduling); warm-starting a
-    /// PJRT namespace goes through `create_filter_with` +
+    /// like after a drop-and-recreate. Restores rebuild on the native
+    /// backend with the policy the manifest recorded (`max_batch`, the
+    /// admission bound) — a policy-less pre-policy manifest falls back
+    /// to defaults; warm-starting a PJRT namespace goes through
+    /// `create_filter_with` +
     /// `load_shard`. Every format mismatch is a typed error: see the
     /// [`super::persist`] error mapping.
     pub fn restore(&self, name: &str, dir: &Path) -> Result<FilterHandle, GbfError> {
@@ -341,8 +348,18 @@ impl FilterService {
         }
         let config = reader.manifest().config;
         let shards = reader.num_shards();
+        // Rebuild with the namespace's *recorded* policy: a manifest with
+        // a policy block restores its real batching and admission bound; a
+        // policy-less (pre-policy version-1) manifest falls back to
+        // defaults. `max_wait` is deliberately not persisted — it is
+        // sub-millisecond latency tuning, not namespace identity.
+        let policy = match reader.manifest().max_batch {
+            Some(mb) => BatchPolicy { max_batch: mb as usize, ..BatchPolicy::default() },
+            None => BatchPolicy::default(),
+        };
+        let max_queue_depth = reader.manifest().max_queue_depth.map(|d| d as usize);
         let engine = Coordinator::new(
-            CoordinatorConfig { num_shards: shards, policy: BatchPolicy::default() },
+            CoordinatorConfig { num_shards: shards, policy },
             move |s| Ok(Box::new(NativeBackend::new(config, s)?) as Box<dyn FilterBackend>),
         )
         .map_err(|e| GbfError::Backend(format!("{e:#}")))?;
@@ -352,7 +369,7 @@ impl FilterService {
         }
         let m = reader.manifest();
         engine.metrics().seed_ops(m.adds, m.queries);
-        self.install(name, engine, shards, None)
+        self.install(name, engine, shards, max_queue_depth)
     }
 
     /// Remove a namespace from the catalog. Outstanding handles observe
@@ -648,6 +665,39 @@ mod tests {
         assert!(!h.is_live());
         assert_eq!(h.query(1).wait().unwrap_err(), GbfError::NoSuchFilter("persisted".into()));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restore_rebuilds_with_recorded_policy() {
+        let dir = std::env::temp_dir().join(format!("gbf-svc-policy-{}", std::process::id()));
+        let service = FilterService::new();
+        let spec = FilterSpec {
+            config: small_cfg(12),
+            shards: 2,
+            policy: BatchPolicy { max_batch: 128, ..Default::default() },
+            max_queue_depth: Some(64),
+        };
+        let h = service.create_filter_spec("tuned", spec).unwrap();
+        // stay under the 64-entry admission bound
+        h.add_bulk(&unique_keys(50, 5)).wait().unwrap();
+        service.snapshot("tuned", &dir).unwrap();
+        service.drop_filter("tuned").unwrap();
+        let r = service.restore("tuned", &dir).unwrap();
+        // the admission bound came back with the namespace...
+        assert_eq!(service.stats("tuned").unwrap().max_queue_depth, Some(64));
+        let t = r.add_bulk(&unique_keys(100, 9));
+        assert!(
+            matches!(t.wait().unwrap_err(), GbfError::Overloaded { .. }),
+            "restored admission bound is enforced, not just reported"
+        );
+        // ...and so did the batch policy: a re-snapshot records the same one
+        let dir2 = std::env::temp_dir().join(format!("gbf-svc-policy2-{}", std::process::id()));
+        service.snapshot("tuned", &dir2).unwrap();
+        let m = SnapshotReader::open(&dir2).unwrap().manifest().clone();
+        assert_eq!(m.max_batch, Some(128));
+        assert_eq!(m.max_queue_depth, Some(64));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir2).ok();
     }
 
     #[test]

@@ -46,7 +46,10 @@ struct Slot {
 
 impl Slot {
     fn new() -> Arc<Slot> {
-        Arc::new(Slot { state: Mutex::new(None), done: Condvar::new() })
+        Arc::new(Slot {
+            state: Mutex::new_class("wire.client.slot", None),
+            done: Condvar::new_class("wire.client.slot-done"),
+        })
     }
 
     fn complete(&self, resp: Response) {
@@ -157,10 +160,10 @@ impl RemoteFilterService {
         stream.set_nodelay(true).ok();
         let reader_stream = stream.try_clone().context("cloning client stream")?;
         let inner = Arc::new(ClientInner {
-            writer: Mutex::new(stream),
-            pending: Mutex::new(HashMap::new()),
+            writer: Mutex::new_class("wire.client.writer", stream),
+            pending: Mutex::new_class("wire.client.pending", HashMap::new()),
             next_id: AtomicU64::new(1),
-            dead: Mutex::new(None),
+            dead: Mutex::new_class("wire.client.dead", None),
         });
         let weak = Arc::downgrade(&inner);
         thread::Builder::new()

@@ -127,7 +127,7 @@ impl WireServer {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding wire server to {addr}"))?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
-        let registry = Arc::new(ConnRegistry { conns: Mutex::new(Vec::new()) });
+        let registry = Arc::new(ConnRegistry { conns: Mutex::new_class("wire.server.conns", Vec::new()) });
         let accept_thread = {
             let stop = Arc::clone(&stop);
             let registry = Arc::clone(&registry);
@@ -285,7 +285,8 @@ fn completer_loop(rx: Receiver<(u64, PendingOp)>, writer: Arc<Mutex<TcpStream>>)
 }
 
 fn handle_conn(stream: TcpStream, service: Arc<FilterService>) -> Result<()> {
-    let writer = Arc::new(Mutex::new(stream.try_clone().context("cloning connection stream")?));
+    let writer =
+        Arc::new(Mutex::new_class("wire.server.writer", stream.try_clone().context("cloning connection stream")?));
     let (tx, rx) = channel::<(u64, PendingOp)>();
     let completer = {
         let writer = Arc::clone(&writer);

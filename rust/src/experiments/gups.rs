@@ -8,8 +8,9 @@
 //!   which anchors the CPU baseline rows.
 
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+use crate::infra::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
 

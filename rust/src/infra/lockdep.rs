@@ -1,0 +1,340 @@
+//! Runtime lockdep witness: a lock-order recorder behind [`crate::infra::sync`].
+//!
+//! Every classed lock the sync shim hands out (`Mutex::new_class`,
+//! `Condvar::new_class`, `RwLock::new_class`) reports its acquisitions
+//! here. The witness keeps
+//!
+//! * a **per-thread held set** — which lock classes this thread holds
+//!   right now, each with the `#[track_caller]` site that acquired it, and
+//! * a **global class-order graph** — one directed edge `A → B` the first
+//!   time any thread acquires class `B` while holding class `A`, stamped
+//!   with both acquisition sites.
+//!
+//! Two disciplines are enforced, each panicking at the *first* violation
+//! so every existing test, loom model, and fuzz run doubles as a deadlock
+//! detector:
+//!
+//! 1. **No cycles.** Before an edge `A → B` is folded in, the witness
+//!    checks whether `B` already reaches `A`; if it does, two threads can
+//!    interleave into a deadlock even if this process never did. The
+//!    panic names both classes and both acquisition sites.
+//! 2. **No waiting while holding.** Entering a condvar wait (and thereby
+//!    any `Ticket`/`BulkSink` wait, which are condvar waits underneath)
+//!    while holding any lock class *other than the mutex being waited on*
+//!    stalls every peer of that class for an unbounded time. The panic
+//!    names the condvar's class, the offending held class, and its site.
+//!
+//! Everything is gated on `cfg(debug_assertions)`: release builds compile
+//! the shim down to bare std types with no witness fields, no thread
+//! locals, and no graph — zero cost. Locks built with the bare
+//! constructors (`Mutex::new`) carry no class and are invisible to the
+//! witness (tests use them freely); same-class nesting (`A` under `A`,
+//! e.g. the registry's per-shard lanes, which are always taken in index
+//! order) is deliberately not an edge — ordering *within* a class is the
+//! owning module's documented responsibility.
+//!
+//! The witness's own internals use raw `std::sync` on purpose (it cannot
+//! witness itself); `infra/` is exempt from the `sync-shim-only` xtask
+//! rule for exactly this reason.
+
+#[cfg(debug_assertions)]
+use std::cell::RefCell;
+#[cfg(debug_assertions)]
+use std::collections::{BTreeMap, BTreeSet};
+#[cfg(debug_assertions)]
+use std::panic::Location;
+#[cfg(debug_assertions)]
+use std::sync::{Mutex as StdMutex, OnceLock, PoisonError};
+
+/// One recorded class-order edge, for `cargo xtask lockgraph`.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ObservedEdge {
+    pub from: &'static str,
+    pub to: &'static str,
+    /// `file:line` that was holding `from` when `to` was acquired.
+    pub from_site: String,
+    /// `file:line` that acquired `to`.
+    pub to_site: String,
+}
+
+/// Whether the witness is compiled in (true exactly in debug builds).
+pub fn is_active() -> bool {
+    cfg!(debug_assertions)
+}
+
+#[cfg(debug_assertions)]
+mod imp {
+    use super::*;
+
+    struct Graph {
+        /// `(from, to) → (from_site, to_site)`, first sighting wins.
+        edges: BTreeMap<(&'static str, &'static str), (&'static Location<'static>, &'static Location<'static>)>,
+        /// Forward adjacency for the cycle DFS.
+        succ: BTreeMap<&'static str, BTreeSet<&'static str>>,
+    }
+
+    fn graph() -> &'static StdMutex<Graph> {
+        static GRAPH: OnceLock<StdMutex<Graph>> = OnceLock::new();
+        GRAPH.get_or_init(|| StdMutex::new(Graph { edges: BTreeMap::new(), succ: BTreeMap::new() }))
+    }
+
+    struct HeldEntry {
+        class: &'static str,
+        site: &'static Location<'static>,
+        token: u64,
+    }
+
+    thread_local! {
+        static HELD: RefCell<Vec<HeldEntry>> = const { RefCell::new(Vec::new()) };
+        static NEXT_TOKEN: RefCell<u64> = const { RefCell::new(0) };
+    }
+
+    /// RAII receipt for one classed acquisition; dropping it pops the
+    /// thread's held set. Anonymous locks get no token at all.
+    pub struct Held {
+        token: u64,
+        class: &'static str,
+    }
+
+    impl Held {
+        pub fn class(&self) -> &'static str {
+            self.class
+        }
+    }
+
+    impl Drop for Held {
+        fn drop(&mut self) {
+            HELD.with(|h| {
+                let mut h = h.borrow_mut();
+                if let Some(pos) = h.iter().rposition(|e| e.token == self.token) {
+                    h.remove(pos);
+                }
+            });
+        }
+    }
+
+    /// Is `to` reachable from `from` following recorded edges? (The graph
+    /// is acyclic by construction — the first would-be cycle panics before
+    /// its edge is inserted — so plain DFS terminates.)
+    fn reaches(g: &Graph, from: &'static str, to: &'static str) -> Option<Vec<&'static str>> {
+        let mut stack = vec![(from, vec![from])];
+        let mut seen = BTreeSet::new();
+        while let Some((node, path)) = stack.pop() {
+            if node == to {
+                return Some(path);
+            }
+            if !seen.insert(node) {
+                continue;
+            }
+            if let Some(nexts) = g.succ.get(node) {
+                for &n in nexts {
+                    let mut p = path.clone();
+                    p.push(n);
+                    stack.push((n, p));
+                }
+            }
+        }
+        None
+    }
+
+    /// Record an acquisition of `class` at `site`. Must run *before* the
+    /// underlying lock call blocks, so a real inversion panics instead of
+    /// deadlocking. Returns the held-set receipt.
+    pub fn acquire(class: Option<&'static str>, site: &'static Location<'static>) -> Option<Held> {
+        let class = class?;
+        let held: Vec<(&'static str, &'static Location<'static>)> =
+            HELD.with(|h| h.borrow().iter().map(|e| (e.class, e.site)).collect());
+        for (held_class, held_site) in held {
+            if held_class == class {
+                // same-class nesting: intra-class order is the owning
+                // module's responsibility (see module docs)
+                continue;
+            }
+            let mut g = graph().lock().unwrap_or_else(PoisonError::into_inner);
+            if g.edges.contains_key(&(held_class, class)) {
+                continue;
+            }
+            if let Some(path) = reaches(&g, class, held_class) {
+                let established = g
+                    .edges
+                    .get(&(path[0], path[1]))
+                    .map(|(fs, ts)| format!("\"{}\" at {fs} then \"{}\" at {ts}", path[0], path[1]))
+                    .unwrap_or_default();
+                let mut cycle: Vec<&str> = path.clone();
+                cycle.push(class);
+                panic!(
+                    "lockdep: lock-order cycle: acquiring class \"{class}\" at {site} \
+                     while holding \"{held_class}\" (acquired at {held_site}) inverts the \
+                     established order [{established}]; cycle: {}",
+                    cycle.join(" -> "),
+                );
+            }
+            g.edges.insert((held_class, class), (held_site, site));
+            g.succ.entry(held_class).or_default().insert(class);
+        }
+        let token = NEXT_TOKEN.with(|t| {
+            let mut t = t.borrow_mut();
+            *t += 1;
+            *t
+        });
+        HELD.with(|h| h.borrow_mut().push(HeldEntry { class, site, token }));
+        Some(Held { token, class })
+    }
+
+    /// Entering a wait on the condvar `cond_class` with the guard whose
+    /// receipt is `waiting_on`: panic if this thread holds any *other*
+    /// class — the wait would park the thread with that lock held.
+    pub fn wait_check(cond_class: Option<&'static str>, waiting_on: Option<&Held>) {
+        let waived = waiting_on.map(|h| h.token);
+        HELD.with(|h| {
+            for e in h.borrow().iter() {
+                if Some(e.token) == waived {
+                    continue;
+                }
+                let cond = cond_class.unwrap_or("<unnamed condvar>");
+                panic!(
+                    "lockdep: blocking wait on condvar class \"{cond}\" while holding lock \
+                     class \"{}\" (acquired at {}) — the held lock stalls every peer for \
+                     as long as the wait lasts",
+                    e.class, e.site,
+                );
+            }
+        });
+    }
+
+    /// All edges recorded so far, sorted (for `cargo xtask lockgraph`).
+    pub fn observed_edges() -> Vec<ObservedEdge> {
+        let g = graph().lock().unwrap_or_else(PoisonError::into_inner);
+        g.edges
+            .iter()
+            .map(|(&(from, to), &(fs, ts))| ObservedEdge {
+                from,
+                to,
+                from_site: format!("{}:{}", fs.file(), fs.line()),
+                to_site: format!("{}:{}", ts.file(), ts.line()),
+            })
+            .collect()
+    }
+}
+
+#[cfg(debug_assertions)]
+pub use imp::{acquire, observed_edges, wait_check, Held};
+
+/// Release builds: the witness does not exist; the graph is empty.
+#[cfg(not(debug_assertions))]
+pub fn observed_edges() -> Vec<ObservedEdge> {
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn active_in_debug_builds() {
+        assert_eq!(is_active(), cfg!(debug_assertions));
+    }
+
+    #[cfg(debug_assertions)]
+    mod debug {
+        use super::super::*;
+        use std::panic::Location;
+
+        #[track_caller]
+        fn here() -> &'static Location<'static> {
+            Location::caller()
+        }
+
+        #[test]
+        fn edges_fold_and_report_sites() {
+            let a = acquire(Some("unit.fold.a"), here());
+            let _b = acquire(Some("unit.fold.b"), here());
+            drop(a);
+            let edges = observed_edges();
+            let e = edges
+                .iter()
+                .find(|e| e.from == "unit.fold.a" && e.to == "unit.fold.b")
+                .expect("edge recorded");
+            assert!(e.from_site.contains("lockdep.rs"), "{}", e.from_site);
+            assert!(e.to_site.contains("lockdep.rs"), "{}", e.to_site);
+        }
+
+        #[test]
+        fn inversion_panics_naming_both_classes() {
+            {
+                let a = acquire(Some("unit.inv.a"), here());
+                let b = acquire(Some("unit.inv.b"), here());
+                drop(b);
+                drop(a);
+            }
+            let b = acquire(Some("unit.inv.b"), here());
+            let err = std::panic::catch_unwind(|| {
+                let _ = acquire(Some("unit.inv.a"), here());
+            })
+            .expect_err("inverted order must panic");
+            drop(b);
+            let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+            assert!(msg.contains("unit.inv.a"), "{msg}");
+            assert!(msg.contains("unit.inv.b"), "{msg}");
+            assert!(msg.contains("lockdep.rs"), "panic names sites: {msg}");
+        }
+
+        #[test]
+        fn transitive_cycles_are_caught() {
+            {
+                let a = acquire(Some("unit.tri.a"), here());
+                let _b = acquire(Some("unit.tri.b"), here());
+            }
+            {
+                let b = acquire(Some("unit.tri.b"), here());
+                let _c = acquire(Some("unit.tri.c"), here());
+                drop(b);
+            }
+            let c = acquire(Some("unit.tri.c"), here());
+            let err = std::panic::catch_unwind(|| {
+                let _ = acquire(Some("unit.tri.a"), here());
+            })
+            .expect_err("c -> a closes a 3-cycle");
+            drop(c);
+            let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+            assert!(msg.contains("unit.tri.a") && msg.contains("unit.tri.c"), "{msg}");
+        }
+
+        #[test]
+        fn same_class_nesting_is_not_an_edge() {
+            let a1 = acquire(Some("unit.lane"), here());
+            let a2 = acquire(Some("unit.lane"), here());
+            drop(a2);
+            drop(a1);
+            assert!(!observed_edges().iter().any(|e| e.from == "unit.lane" || e.to == "unit.lane"));
+        }
+
+        #[test]
+        fn anonymous_locks_are_invisible() {
+            let anon = acquire(None, here());
+            assert!(anon.is_none());
+            let _a = acquire(Some("unit.anon.peer"), here());
+            assert!(!observed_edges().iter().any(|e| e.to == "unit.anon.peer"));
+        }
+
+        #[test]
+        fn wait_with_only_own_guard_is_fine() {
+            let g = acquire(Some("unit.wait.own"), here());
+            wait_check(Some("unit.wait.cv"), g.as_ref());
+        }
+
+        #[test]
+        fn wait_while_holding_another_class_panics() {
+            let outer = acquire(Some("unit.waitheld.outer"), here());
+            let g = acquire(Some("unit.waitheld.own"), here());
+            let err = std::panic::catch_unwind(|| {
+                wait_check(Some("unit.waitheld.cv"), g.as_ref());
+            })
+            .expect_err("waiting while holding another class must panic");
+            drop(outer);
+            let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+            assert!(msg.contains("unit.waitheld.cv"), "{msg}");
+            assert!(msg.contains("unit.waitheld.outer"), "{msg}");
+        }
+    }
+}

@@ -11,7 +11,8 @@
 //! * [`threadpool`]— fixed worker pool with a shared injector queue
 //! * [`prop`]      — property-test driver (seeded generators + failure reporting)
 //! * [`check`]     — loom-style model checker (bounded-exhaustive interleaving search)
-//! * [`sync`]      — sync shim: std types normally, [`check`] types under `--cfg loom`
+//! * [`sync`]      — sync shim: classed std types normally, [`check`] types under `--cfg loom`
+//! * [`lockdep`]   — runtime lock-order witness behind [`sync`] (debug builds only)
 //! * [`fuzz`]      — deterministic structure-aware fuzzing harness + corpus loader
 
 pub mod bench;
@@ -19,6 +20,7 @@ pub mod check;
 pub mod cli;
 pub mod fuzz;
 pub mod json;
+pub mod lockdep;
 pub mod prop;
 pub mod sync;
 pub mod threadpool;

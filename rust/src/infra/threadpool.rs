@@ -37,11 +37,11 @@ impl ThreadPool {
             threads
         };
         let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
-            available: Condvar::new(),
+            queue: Mutex::new_class("threadpool.queue", VecDeque::new()),
+            available: Condvar::new_class("threadpool.available"),
             shutdown: AtomicBool::new(false),
             in_flight: AtomicUsize::new(0),
-            idle: Condvar::new(),
+            idle: Condvar::new_class("threadpool.idle"),
         });
         let workers = (0..threads)
             .map(|i| {

@@ -9,7 +9,8 @@
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex;
+
+use crate::infra::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -51,7 +52,7 @@ pub struct EngineClient {
 
 impl Clone for EngineClient {
     fn clone(&self) -> Self {
-        EngineClient { tx: Mutex::new(self.tx.lock().unwrap().clone()) }
+        EngineClient { tx: Mutex::new_class("runtime.actor.tx", self.tx.lock().unwrap().clone()) }
     }
 }
 
@@ -81,9 +82,9 @@ impl EngineActor {
             .context("engine actor died during startup")?
             .context("engine startup failed")?;
         Ok(EngineActor {
-            client: EngineClient { tx: Mutex::new(tx.clone()) },
+            client: EngineClient { tx: Mutex::new_class("runtime.actor.tx", tx.clone()) },
             join: Some(join),
-            shutdown_tx: Mutex::new(Some(tx)),
+            shutdown_tx: Mutex::new_class("runtime.actor.shutdown", Some(tx)),
         })
     }
 

@@ -135,6 +135,38 @@ fn valid_corpus_entries_decode() {
 }
 
 #[test]
+fn snapshot_restore_corpus_entries_decode() {
+    let corpus = wire_corpus();
+    let (id, req) = decode_request(&entry(&corpus, "valid-snapshot.hex")).expect("valid-snapshot decodes");
+    assert_eq!(id, 10);
+    match req {
+        Request::Snapshot { name, dir } => {
+            assert_eq!(name, "ns");
+            assert_eq!(dir, "snaps/ns");
+        }
+        other => panic!("valid-snapshot decoded as {other:?}"),
+    }
+    let (id, req) = decode_request(&entry(&corpus, "valid-restore.hex")).expect("valid-restore decodes");
+    assert_eq!(id, 11);
+    match req {
+        Request::Restore { name, dir } => {
+            assert_eq!(name, "ns");
+            assert_eq!(dir, "snaps/ns");
+        }
+        other => panic!("valid-restore decoded as {other:?}"),
+    }
+    // The codec treats snapshot paths as opaque strings (they resolve
+    // server-side): a traversal-looking dir DECODES — refusing it is the
+    // server's call, and this pin keeps the codec from silently
+    // rewriting or rejecting paths behind the server's back.
+    let (_, req) = decode_request(&entry(&corpus, "snapshot-path-escape.hex")).expect("path-escape decodes");
+    match req {
+        Request::Snapshot { dir, .. } => assert_eq!(dir, "../../etc", "path carried verbatim"),
+        other => panic!("snapshot-path-escape decoded as {other:?}"),
+    }
+}
+
+#[test]
 fn hostile_corpus_entries_fail_typed() {
     let corpus = wire_corpus();
     for name in [
@@ -143,6 +175,8 @@ fn hostile_corpus_entries_fail_typed() {
         "unknown-tag.hex",
         "bad-version.hex",
         "keys-length-lie.hex",
+        "truncated-restore-path.hex",
+        "snapshot-name-oversize.hex",
     ] {
         assert!(decode_request(&entry(&corpus, name)).is_err(), "{name} must be a typed decode error");
     }

@@ -1,0 +1,128 @@
+//! Runtime lockdep witness (ISSUE 7 tentpole, runtime half): deliberate
+//! lock-order inversions and condvar misuse through the real
+//! `infra::sync` classed primitives must panic the witness in debug
+//! builds — naming both classes and both acquisition sites — and must
+//! cost nothing in release builds, where the witness is compiled out.
+//!
+//! These are the runtime twins of the static-pass fixture tests in
+//! `xtask` (`static_pass_catches_seeded_inversion`): the same seeded
+//! inversion, caught by both halves of the analyzer. Class names here
+//! are `w7.*`, which keeps them out of the product hierarchy in
+//! `LOCKS.md` (the lockgraph workload never runs this file).
+
+#[cfg(debug_assertions)]
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use gbf::infra::lockdep;
+#[cfg(debug_assertions)]
+use gbf::infra::sync::Condvar;
+use gbf::infra::sync::Mutex;
+
+/// Panic payloads from the witness are formatted `String`s.
+#[cfg(debug_assertions)]
+fn payload(err: Box<dyn std::any::Any + Send>) -> String {
+    err.downcast_ref::<String>().expect("witness panics carry a String payload").clone()
+}
+
+#[test]
+#[cfg(debug_assertions)]
+fn witness_is_active_in_debug_builds() {
+    assert!(lockdep::is_active(), "debug_assertions build must carry the witness");
+}
+
+#[test]
+#[cfg(debug_assertions)]
+fn witness_records_edges_with_call_sites() {
+    let x = Mutex::new_class("w7.edge.x", ());
+    let y = Mutex::new_class("w7.edge.y", ());
+    let gx = x.lock().unwrap();
+    let gy = y.lock().unwrap();
+    drop(gy);
+    drop(gx);
+    let edges = lockdep::observed_edges();
+    let edge = edges
+        .iter()
+        .find(|e| e.from == "w7.edge.x" && e.to == "w7.edge.y")
+        .expect("nested acquisition must fold an observed edge");
+    assert!(
+        edge.from_site.contains("lockdep_witness.rs") && edge.to_site.contains("lockdep_witness.rs"),
+        "track_caller sites must point at this file: {} -> {}",
+        edge.from_site,
+        edge.to_site
+    );
+}
+
+/// The seeded inversion: establish `a -> b`, then acquire in the other
+/// order. The witness must panic on the second acquisition — before any
+/// thread can block — naming both classes and both sites.
+#[test]
+#[cfg(debug_assertions)]
+fn inversion_panics_naming_both_classes_and_sites() {
+    let a = Mutex::new_class("w7.inv.a", ());
+    let b = Mutex::new_class("w7.inv.b", ());
+    {
+        let _ga = a.lock().unwrap();
+        let _gb = b.lock().unwrap();
+    }
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        let _gb = b.lock().unwrap();
+        let _ga = a.lock().unwrap();
+    }))
+    .expect_err("lock-order inversion must panic the witness");
+    let msg = payload(err);
+    assert!(msg.contains("lockdep: lock-order cycle"), "{msg}");
+    assert!(msg.contains("\"w7.inv.a\"") && msg.contains("\"w7.inv.b\""), "both classes named: {msg}");
+    assert!(msg.contains("lockdep_witness.rs"), "acquisition sites name this file: {msg}");
+}
+
+/// Waiting on a condvar while holding a lock of a *different* class is a
+/// latent deadlock (nothing can wake the waiter if the signaller needs
+/// that lock); the witness panics before parking.
+#[test]
+#[cfg(debug_assertions)]
+fn wait_while_holding_foreign_lock_panics() {
+    let outer = Mutex::new_class("w7.wait.outer", ());
+    let m = Mutex::new_class("w7.wait.m", false);
+    let cv = Condvar::new_class("w7.wait.cv");
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        let _held = outer.lock().unwrap();
+        let guard = m.lock().unwrap();
+        let _guard = cv.wait(guard).unwrap();
+    }))
+    .expect_err("condvar wait while holding another lock class must panic");
+    let msg = payload(err);
+    assert!(msg.contains("blocking wait on condvar class \"w7.wait.cv\""), "{msg}");
+    assert!(msg.contains("\"w7.wait.outer\""), "the held class is named: {msg}");
+}
+
+/// Waiting with only the condvar's own guard held is the legitimate
+/// pattern and must stay silent.
+#[test]
+#[cfg(debug_assertions)]
+fn wait_with_only_own_guard_is_silent() {
+    use std::time::Duration;
+    let m = Mutex::new_class("w7.ok.m", false);
+    let cv = Condvar::new_class("w7.ok.cv");
+    let guard = m.lock().unwrap();
+    let (_guard, timeout) = cv.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+    assert!(timeout.timed_out(), "nothing signals: the wait must simply time out");
+}
+
+/// Release builds compile the witness out entirely: the same inversion
+/// runs silently and the observation API answers empty.
+#[test]
+#[cfg(not(debug_assertions))]
+fn release_build_witness_is_silent() {
+    assert!(!lockdep::is_active(), "release build must not carry the witness");
+    let a = Mutex::new_class("w7.rel.a", ());
+    let b = Mutex::new_class("w7.rel.b", ());
+    {
+        let _ga = a.lock().unwrap();
+        let _gb = b.lock().unwrap();
+    }
+    {
+        let _gb = b.lock().unwrap();
+        let _ga = a.lock().unwrap();
+    }
+    assert!(lockdep::observed_edges().is_empty(), "release witness observes nothing");
+}

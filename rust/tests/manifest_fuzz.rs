@@ -58,6 +58,24 @@ fn valid_corpus_entry_round_trips() {
     assert_eq!(manifest, reparsed, "to_json must be a parse fixed point");
 }
 
+/// The policy block is optional-but-validated: a manifest carrying one
+/// round-trips it exactly, and a doctored zero `max_batch` (a policy that
+/// could never drain the queue) is a typed geometry refusal — the same
+/// standard the wire create path holds hostile specs to.
+#[test]
+fn policy_corpus_entries() {
+    let corpus = manifest_corpus();
+    let m = SnapshotManifest::from_json_str(&entry(&corpus, "policy.json")).expect("policy.json parses");
+    assert_eq!(m.max_batch, Some(512));
+    assert_eq!(m.max_queue_depth, Some(4096));
+    let reparsed = SnapshotManifest::from_json_str(&m.to_json()).expect("round trip parses");
+    assert_eq!(m, reparsed, "policy block survives the to_json fixed point");
+    match SnapshotManifest::from_json_str(&entry(&corpus, "policy-zero-batch.json")) {
+        Err(GbfError::SnapshotGeometry(msg)) => assert!(msg.contains("max_batch"), "{msg}"),
+        other => panic!("zero max_batch must be SnapshotGeometry, got {other:?}"),
+    }
+}
+
 /// Regression (fuzzer finding): a doctored `format_version` of 2^32 + 1
 /// must not truncate into "version 1, supported" — the comparison happens
 /// in u64 and the error saturates the reported value.

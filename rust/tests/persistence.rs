@@ -22,7 +22,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use gbf::coordinator::persist::{shard_file_name, SnapshotWriter, MANIFEST_FILE};
-use gbf::coordinator::{FilterService, GbfError, RemoteFilterService, ShardedRegistry, WireServer};
+use gbf::coordinator::{
+    BatchPolicy, FilterService, FilterSpec, GbfError, RemoteFilterService, ShardedRegistry, WireServer,
+};
 use gbf::filter::params::{FilterConfig, Variant};
 use gbf::infra::prop::{check, Gen};
 use gbf::workload::keygen::unique_keys;
@@ -97,6 +99,44 @@ fn property_snapshot_restore_is_the_identity() {
         assert_eq!(restored.stats("prop").unwrap().metrics.adds, keys.len() as u64);
         std::fs::remove_dir_all(&dir).ok();
     });
+}
+
+/// The batching/backpressure policy is part of what a snapshot preserves:
+/// a restart must rebuild the namespace with its real scheduling — and a
+/// pre-policy manifest (no `policy` block) must keep restoring with
+/// defaults rather than failing.
+#[test]
+fn policy_survives_the_restart_and_old_manifests_still_restore() {
+    let dir = scratch("policy");
+    let config = FilterConfig { log2_m_words: 12, ..Default::default() };
+    let service = FilterService::new();
+    let spec = FilterSpec {
+        config,
+        shards: 2,
+        policy: BatchPolicy { max_batch: 256, ..Default::default() },
+        max_queue_depth: Some(512),
+    };
+    let h = service.create_filter_spec("tuned", spec).unwrap();
+    h.add_bulk(&unique_keys(400, 0xA5)).wait().unwrap();
+    service.snapshot("tuned", &dir).unwrap();
+    // the manifest records the policy (key-sorted compact JSON)...
+    let text = std::fs::read_to_string(dir.join(MANIFEST_FILE)).unwrap();
+    assert!(text.contains("\"policy\":{\"max_batch\":256,\"max_queue_depth\":512}"), "{text}");
+    // ...and a restart rebuilds the namespace with it
+    let restarted = FilterService::new();
+    let r = restarted.restore("tuned", &dir).unwrap();
+    assert_eq!(restarted.stats("tuned").unwrap().max_queue_depth, Some(512));
+    assert_eq!(r.snapshot_words(), h.snapshot_words());
+    // a pre-policy manifest — the same document without the block —
+    // restores with defaults instead of failing
+    let old_dir = scratch("policy-old");
+    copy_snapshot(&dir, &old_dir);
+    edit_manifest(&old_dir, ",\"policy\":{\"max_batch\":256,\"max_queue_depth\":512}", "");
+    let legacy = FilterService::new();
+    legacy.restore("tuned", &old_dir).unwrap();
+    assert_eq!(legacy.stats("tuned").unwrap().max_queue_depth, None, "policy-less manifest means defaults");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&old_dir).ok();
 }
 
 // ---- corruption matrix: every mutilation gets its typed refusal ----

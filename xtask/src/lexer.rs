@@ -1,0 +1,284 @@
+//! A minimal Rust lexer for the lock-discipline passes (`locks.rs`).
+//!
+//! This is deliberately *not* a full Rust lexer: the analyzer only needs
+//! identifiers, string literals, and punctuation, each tagged with a line
+//! number. Everything else — comments (line and nested block), char
+//! literals, lifetimes, numeric literals, raw/byte strings — is consumed
+//! and dropped so it can never masquerade as code. The token patterns the
+//! analyzer matches (`Mutex::new_class("...")`, `.lock()`,
+//! `lock_unpoisoned(&x)`, `drop(guard)`, `std :: sync :: Mutex`) are all
+//! expressible over this trio.
+
+/// One lexed token. Multi-char operators arrive as consecutive
+/// single-char `Punct`s (`::` is `Punct(':') Punct(':')`); the analyzer
+/// matches the pairs it cares about.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    Ident(String),
+    /// The raw contents between the quotes (escapes left as-is; lock
+    /// class names never contain any).
+    Str(String),
+    Punct(char),
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    /// 1-based source line of the token's first character.
+    pub line: usize,
+}
+
+impl Token {
+    pub fn ident(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Ident(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn str_lit(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.tok == Tok::Punct(c)
+    }
+
+    pub fn is_ident(&self, name: &str) -> bool {
+        self.ident() == Some(name)
+    }
+}
+
+pub fn lex(text: &str) -> Vec<Token> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    let mut line = 1;
+    while i < chars.len() {
+        let c = chars[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if chars.get(i + 1) == Some(&'/') => {
+                while i < chars.len() && chars[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '/' if chars.get(i + 1) == Some(&'*') => {
+                // block comments nest in Rust
+                let mut depth = 1;
+                i += 2;
+                while i < chars.len() && depth > 0 {
+                    if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if chars[i] == '\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            '"' => {
+                let (tok, ni, nl) = scan_string(&chars, i, line);
+                out.push(Token { tok, line });
+                i = ni;
+                line = nl;
+            }
+            '\'' => {
+                // Lifetime (`'a`) vs char literal (`'a'`, `'\n'`, `'"'`).
+                let next = chars.get(i + 1).copied();
+                let after = chars.get(i + 2).copied();
+                let is_lifetime = matches!(next, Some(n) if n.is_alphabetic() || n == '_') && after != Some('\'');
+                if is_lifetime {
+                    i += 1;
+                    while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                        i += 1;
+                    }
+                } else {
+                    // char literal: consume to the closing quote, honoring
+                    // one escape
+                    i += 1;
+                    if chars.get(i) == Some(&'\\') {
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                    if chars.get(i) == Some(&'\'') {
+                        i += 1;
+                    }
+                }
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+                let word: String = chars[start..i].iter().collect();
+                // raw / byte string prefixes: r"..", r#".."#, b"..", br".."
+                if matches!(word.as_str(), "r" | "br" | "rb") {
+                    let mut j = i;
+                    let mut hashes = 0;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        let (tok, ni, nl) = scan_raw_string(&chars, j + 1, line, hashes);
+                        out.push(Token { tok, line });
+                        i = ni;
+                        line = nl;
+                        continue;
+                    }
+                    // not a raw string (e.g. raw identifier `r#match`):
+                    // fall through and emit the word
+                }
+                if word == "b" && chars.get(i) == Some(&'"') {
+                    let (tok, ni, nl) = scan_string(&chars, i, line);
+                    out.push(Token { tok, line });
+                    i = ni;
+                    line = nl;
+                    continue;
+                }
+                out.push(Token { tok: Tok::Ident(word), line });
+            }
+            c if c.is_ascii_digit() => {
+                // numeric literal (incl. hex, suffixes, floats): drop it
+                while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+                if chars.get(i) == Some(&'.') && chars.get(i + 1).is_some_and(|d| d.is_ascii_digit()) {
+                    i += 1;
+                    while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                        i += 1;
+                    }
+                }
+            }
+            c => {
+                out.push(Token { tok: Tok::Punct(c), line });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Scan a normal (escape-honoring) string starting at the opening quote.
+/// Returns the token, the index past the closing quote, and the new line.
+fn scan_string(chars: &[char], open: usize, mut line: usize) -> (Tok, usize, usize) {
+    let mut i = open + 1;
+    let mut s = String::new();
+    while i < chars.len() {
+        match chars[i] {
+            '\\' => {
+                s.push(chars[i]);
+                if let Some(&e) = chars.get(i + 1) {
+                    if e == '\n' {
+                        line += 1;
+                    }
+                    s.push(e);
+                }
+                i += 2;
+            }
+            '"' => {
+                i += 1;
+                break;
+            }
+            c => {
+                if c == '\n' {
+                    line += 1;
+                }
+                s.push(c);
+                i += 1;
+            }
+        }
+    }
+    (Tok::Str(s), i, line)
+}
+
+/// Scan a raw string body starting just past the opening quote; ends at
+/// `"` followed by `hashes` `#`s. No escapes.
+fn scan_raw_string(chars: &[char], start: usize, mut line: usize, hashes: usize) -> (Tok, usize, usize) {
+    let mut i = start;
+    let mut s = String::new();
+    while i < chars.len() {
+        if chars[i] == '"' && (1..=hashes).all(|k| chars.get(i + k) == Some(&'#')) {
+            i += 1 + hashes;
+            break;
+        }
+        if chars[i] == '\n' {
+            line += 1;
+        }
+        s.push(chars[i]);
+        i += 1;
+    }
+    (Tok::Str(s), i, line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src).into_iter().filter_map(|t| t.ident().map(|s| s.to_string())).collect()
+    }
+
+    #[test]
+    fn lexes_the_patterns_the_analyzer_matches() {
+        let toks = lex(r#"let g = self.queue.lock().unwrap(); Mutex::new_class("a.b", 0)"#);
+        let strs: Vec<_> = toks.iter().filter_map(|t| t.str_lit()).collect();
+        assert_eq!(strs, ["a.b"]);
+        let ids = idents(r#"let g = self.queue.lock().unwrap();"#);
+        assert_eq!(ids, ["let", "g", "self", "queue", "lock", "unwrap"]);
+    }
+
+    #[test]
+    fn comments_strings_chars_and_lifetimes_never_leak_tokens() {
+        assert_eq!(idents("// lock() in a comment\nx"), ["x"]);
+        assert_eq!(idents("/* outer /* nested lock() */ still comment */ y"), ["y"]);
+        // the lifetime `'static` is consumed silently, like the char literal
+        assert_eq!(idents("let c = '\\''; let l: &'static str = \"lock()\"; z"), [
+            "let", "c", "let", "l", "str", "z"
+        ]);
+        // a string containing an escaped quote must not swallow the rest
+        assert_eq!(idents(r#"let s = "he said \"hi\""; after"#), ["let", "s", "after"]);
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_single_tokens() {
+        let toks = lex(r##"let s = r#"lock() "inner" quotes"#; tail"##);
+        let strs: Vec<_> = toks.iter().filter_map(|t| t.str_lit()).collect();
+        assert_eq!(strs, [r#"lock() "inner" quotes"#]);
+        assert!(toks.iter().any(|t| t.is_ident("tail")));
+        let toks = lex(r#"let b = b"bytes lock()"; tail"#);
+        assert!(toks.iter().any(|t| t.str_lit() == Some("bytes lock()")));
+        assert!(toks.iter().any(|t| t.is_ident("tail")));
+    }
+
+    #[test]
+    fn line_numbers_track_newlines_everywhere() {
+        let src = "a\n\"two\nline\"\nb /* c\nd */ e";
+        let toks = lex(src);
+        let find = |name: &str| toks.iter().find(|t| t.is_ident(name)).unwrap().line;
+        assert_eq!(find("a"), 1);
+        assert_eq!(find("b"), 4);
+        assert_eq!(find("e"), 5);
+    }
+
+    #[test]
+    fn numbers_are_dropped_not_merged() {
+        let toks = lex("foo(0xDEAD_BEEFu64, 1.5, 2)");
+        let ids = toks.iter().filter_map(|t| t.ident()).collect::<Vec<_>>();
+        assert_eq!(ids, ["foo"]);
+    }
+}

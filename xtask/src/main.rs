@@ -10,7 +10,14 @@
 //!   (`rust/corpus/{wire,manifest}`) through the real decoders, then runs
 //!   a bounded seeded mutation sweep. Exits non-zero on a panic, an
 //!   unexpected decode failure of a `valid-*` entry, or a missing corpus.
-//! * `cargo xtask analyze` — both, in order. The CI analysis job.
+//! * `cargo xtask locks`   — the lock-discipline passes (see [`locks`]):
+//!   static lock-order over the classed-lock nesting graph,
+//!   no-blocking-under-lock, and sync-shim-only.
+//! * `cargo xtask lockgraph [--check]` — regenerate (or, with `--check`,
+//!   verify) `LOCKS.md` and `rust/artifacts/lockgraph.dot` from the
+//!   static graph merged with the runtime lockdep witness's observations.
+//! * `cargo xtask analyze` — all of the above, in order. The CI analysis
+//!   job.
 //!
 //! The lint is a deliberately simple line scanner, not a rustc driver: the
 //! offline toolchain has no rustc plugin API available, and the rules are
@@ -28,14 +35,22 @@ use gbf::coordinator::persist::SnapshotManifest;
 use gbf::coordinator::wire::codec::{decode_request, decode_response, read_frame};
 use gbf::infra::fuzz::{load_corpus, Mutator};
 
+mod lexer;
+mod locks;
+
 fn main() -> ExitCode {
     let command = std::env::args().nth(1).unwrap_or_default();
     let outcome = match command.as_str() {
         "lint" => lint(),
+        "locks" => locks::locks(),
         "fuzz" => fuzz(),
-        "analyze" => lint().and_then(|()| fuzz()),
+        "lockgraph" => locks::lockgraph(std::env::args().nth(2).as_deref() == Some("--check")),
+        "analyze" => lint()
+            .and_then(|()| locks::locks())
+            .and_then(|()| locks::lockgraph(true))
+            .and_then(|()| fuzz()),
         other => {
-            eprintln!("unknown command {other:?}\n\nusage: cargo xtask <lint|fuzz|analyze>");
+            eprintln!("unknown command {other:?}\n\nusage: cargo xtask <lint|locks|fuzz|lockgraph [--check]|analyze>");
             return ExitCode::FAILURE;
         }
     };
@@ -50,7 +65,7 @@ fn main() -> ExitCode {
 
 /// Workspace root, resolved from this crate's manifest so the commands
 /// work from any working directory.
-fn repo_root() -> PathBuf {
+pub(crate) fn repo_root() -> PathBuf {
     let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
     manifest_dir.parent().expect("xtask lives one level under the workspace root").to_path_buf()
 }
@@ -59,10 +74,10 @@ fn repo_root() -> PathBuf {
 
 /// One rule violation, formatted `path:line: message`.
 #[derive(Debug)]
-struct Violation {
-    file: PathBuf,
-    line: usize,
-    message: String,
+pub(crate) struct Violation {
+    pub(crate) file: PathBuf,
+    pub(crate) line: usize,
+    pub(crate) message: String,
 }
 
 /// The static-analysis pass. Rule table (all rules skip `#[cfg(test)]`
@@ -101,7 +116,7 @@ fn lint_tree(src: &Path) -> Result<Vec<Violation>> {
     Ok(violations)
 }
 
-fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+pub(crate) fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
     for entry in std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
         let path = entry?.path();
         if path.is_dir() {
@@ -116,7 +131,7 @@ fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
 /// Mark every line belonging to a `#[cfg(test)]`-gated item (including
 /// `#[cfg(all(test, loom))]` and friends) by brace counting from the
 /// attribute to the close of the item it gates.
-fn test_region_mask(lines: &[&str]) -> Vec<bool> {
+pub(crate) fn test_region_mask(lines: &[&str]) -> Vec<bool> {
     let mut mask = vec![false; lines.len()];
     let mut i = 0;
     while i < lines.len() {
@@ -382,6 +397,7 @@ fn is_hostile(name: &str) -> bool {
         "keys-length-lie",
         "resp-names-count-lie",
         "resp-err-truncated",
+        "snapshot-name-oversize",
     ]
     .iter()
     .any(|p| name.starts_with(p))
