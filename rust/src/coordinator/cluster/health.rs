@@ -1,0 +1,224 @@
+//! Per-server health tracking for the cluster front end.
+//!
+//! Every wire leg a cluster call runs reports its outcome here: a
+//! successful round-trip — *including* one that carried an application
+//! error like `NoSuchFilter`, which proves the connection works —
+//! records OK; a connection error records a failure. A server is marked
+//! **down** after [`DOWN_THRESHOLD`] consecutive connection errors, and
+//! the first OK brings it back. Down-ness steers *preference* only:
+//! reads start at the first live replica instead of burning a dial
+//! timeout on a known-dead one, and the janitor probes down servers for
+//! recovery. It never *forbids* traffic — a down server that answers is
+//! a recovery, so callers may still reach it as a last resort.
+//!
+//! The tracker is a single classed mutex (`cluster.health`) around plain
+//! counters; every method is one tiny lock scope with no I/O, so any
+//! thread (data-plane completions, the janitor, admin calls) can report
+//! outcomes without lock-ordering concerns. The transition logic is
+//! loom-modeled below: transition events balance (`downs - ups` equals
+//! the final state) across all interleavings.
+
+use crate::infra::sync::{lock_unpoisoned, Mutex};
+
+/// Consecutive connection errors before a server is considered down.
+/// One flaky round-trip (a timeout under load, a mid-restart connect)
+/// should not trigger re-replication; three in a row means nobody is
+/// answering that socket.
+pub const DOWN_THRESHOLD: u32 = 3;
+
+#[derive(Debug, Clone, Copy)]
+struct ServerState {
+    /// Connection errors since the last successful round-trip.
+    consecutive_errors: u32,
+    down: bool,
+}
+
+/// Health state for every server in the fleet, indexed like
+/// `ClusterConfig::servers`.
+#[derive(Debug)]
+pub struct HealthTracker {
+    servers: Mutex<Vec<ServerState>>,
+}
+
+impl HealthTracker {
+    pub fn new(fleet_size: usize) -> HealthTracker {
+        HealthTracker {
+            servers: Mutex::new_class(
+                "cluster.health",
+                vec![ServerState { consecutive_errors: 0, down: false }; fleet_size],
+            ),
+        }
+    }
+
+    /// A round-trip to `server` completed (even if it carried an
+    /// application error). Returns `true` when this *recovered* the
+    /// server — the caller owes the fleet a re-replication pass.
+    pub fn record_ok(&self, server: usize) -> bool {
+        let mut g = lock_unpoisoned(&self.servers);
+        let s = &mut g[server];
+        let recovered = s.down;
+        s.consecutive_errors = 0;
+        s.down = false;
+        recovered
+    }
+
+    /// A round-trip to `server` failed at the connection level. Returns
+    /// `true` when this error crossed the threshold and marked the
+    /// server down.
+    pub fn record_error(&self, server: usize) -> bool {
+        let mut g = lock_unpoisoned(&self.servers);
+        let s = &mut g[server];
+        s.consecutive_errors = s.consecutive_errors.saturating_add(1);
+        let went_down = !s.down && s.consecutive_errors >= DOWN_THRESHOLD;
+        if went_down {
+            s.down = true;
+        }
+        went_down
+    }
+
+    pub fn is_down(&self, server: usize) -> bool {
+        lock_unpoisoned(&self.servers)[server].down
+    }
+
+    /// Servers currently marked down, in index order (janitor probe list).
+    pub fn down_servers(&self) -> Vec<usize> {
+        let g = lock_unpoisoned(&self.servers);
+        g.iter().enumerate().filter(|(_, s)| s.down).map(|(i, _)| i).collect()
+    }
+
+    /// The preferred replica to *start* a read at: the first server in
+    /// `replicas` not marked down, else `replicas[0]` (when the whole
+    /// set looks down, trying the preferred one costs nothing extra and
+    /// doubles as a recovery probe). Total for non-empty input — always
+    /// returns a member of `replicas`.
+    pub fn pick_live(&self, replicas: &[usize]) -> usize {
+        let g = lock_unpoisoned(&self.servers);
+        replicas.iter().copied().find(|&r| !g[r].down).unwrap_or(replicas[0])
+    }
+
+    /// `replicas` reordered to try live servers first (placement order
+    /// within each class). Down servers stay in the list — last — so an
+    /// all-down replica set still gets attempted before the caller
+    /// reports `NoQuorum`.
+    pub fn attempt_order(&self, replicas: &[usize]) -> Vec<usize> {
+        let g = lock_unpoisoned(&self.servers);
+        let (live, down): (Vec<usize>, Vec<usize>) = replicas.iter().copied().partition(|&r| !g[r].down);
+        let mut order = live;
+        order.extend(down);
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_marks_down_and_one_ok_recovers() {
+        let h = HealthTracker::new(2);
+        assert!(!h.record_error(0));
+        assert!(!h.record_error(0));
+        assert!(h.record_error(0), "third consecutive error crosses the threshold");
+        assert!(h.is_down(0));
+        assert!(!h.record_error(0), "already down: no re-transition");
+        assert_eq!(h.down_servers(), vec![0]);
+        assert!(h.record_ok(0), "first OK after down is a recovery");
+        assert!(!h.is_down(0));
+        assert!(!h.record_ok(0), "OK while up is not a recovery");
+        assert!(h.down_servers().is_empty());
+    }
+
+    #[test]
+    fn an_ok_resets_the_error_streak() {
+        let h = HealthTracker::new(1);
+        h.record_error(0);
+        h.record_error(0);
+        h.record_ok(0); // streak broken before the threshold
+        assert!(!h.record_error(0));
+        assert!(!h.record_error(0));
+        assert!(!h.is_down(0));
+        assert!(h.record_error(0));
+    }
+
+    #[test]
+    fn pick_live_prefers_placement_order_among_the_living() {
+        let h = HealthTracker::new(3);
+        assert_eq!(h.pick_live(&[2, 0, 1]), 2, "all live: placement order wins");
+        for _ in 0..DOWN_THRESHOLD {
+            h.record_error(2);
+        }
+        assert_eq!(h.pick_live(&[2, 0, 1]), 0, "skip the down preferred replica");
+        assert_eq!(h.attempt_order(&[2, 0, 1]), vec![0, 1, 2], "down replica demoted to last");
+        for s in [0, 1] {
+            for _ in 0..DOWN_THRESHOLD {
+                h.record_error(s);
+            }
+        }
+        assert_eq!(h.pick_live(&[2, 0, 1]), 2, "all down: fall back to the preferred replica");
+        assert_eq!(h.attempt_order(&[2, 0, 1]), vec![2, 0, 1]);
+    }
+}
+
+/// Bounded-exhaustive interleaving models: run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_`.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use crate::infra::check;
+    use crate::infra::sync::{thread, Arc};
+
+    /// Down/up transition events must balance under any interleaving of
+    /// reporters: `downs - ups` equals the final down flag (0 or 1), so
+    /// re-replication (triggered per recovery) can never double-fire or
+    /// get lost.
+    #[test]
+    fn loom_health_transition_counts_balance() {
+        check::model(|| {
+            let h = Arc::new(HealthTracker::new(1));
+            let errors = {
+                let h = Arc::clone(&h);
+                thread::spawn(move || {
+                    let mut downs = 0u32;
+                    for _ in 0..DOWN_THRESHOLD {
+                        downs += u32::from(h.record_error(0));
+                    }
+                    downs
+                })
+            };
+            let mut ups = u32::from(h.record_ok(0));
+            let downs = errors.join().unwrap();
+            ups += u32::from(h.record_ok(0)); // settle after the reporter
+            let final_down = u32::from(h.is_down(0));
+            assert_eq!(
+                downs, ups + final_down,
+                "transitions drifted: {downs} downs vs {ups} ups, final={final_down}"
+            );
+        });
+    }
+
+    /// `pick_live` is total while health flips concurrently: it always
+    /// returns a member of the replica set, never panics, never blocks.
+    #[test]
+    fn loom_pick_live_always_returns_a_replica() {
+        check::model(|| {
+            let h = Arc::new(HealthTracker::new(2));
+            let flipper = {
+                let h = Arc::clone(&h);
+                thread::spawn(move || {
+                    for _ in 0..DOWN_THRESHOLD {
+                        h.record_error(0);
+                    }
+                    h.record_ok(0);
+                })
+            };
+            for _ in 0..2 {
+                let picked = h.pick_live(&[0, 1]);
+                assert!(picked == 0 || picked == 1);
+                let order = h.attempt_order(&[0, 1]);
+                assert_eq!(order.len(), 2);
+            }
+            flipper.join().unwrap();
+            assert!(!h.is_down(0), "final OK must have recovered server 0");
+        });
+    }
+}

@@ -1,0 +1,1083 @@
+//! Cluster mode: routed, replicated namespaces over a fleet of wire
+//! servers.
+//!
+//! [`ClusterFilterService`] implements the same [`FilterApi`] /
+//! [`FilterDataPlane`] trait pair as the in-process service and the wire
+//! client, so code written against `dyn FilterApi` — including the
+//! integration suite's shared `drive_api` body — runs unchanged against
+//! a whole fleet. Under the hood:
+//!
+//! * **Placement** ([`placement`]): each namespace deterministically
+//!   lives on R servers, chosen by rendezvous hashing (or a pinned
+//!   override). There is no placement catalog to keep consistent —
+//!   every front end with the same [`ClusterConfig`] computes the same
+//!   replica sets.
+//! * **Replication**: catalog mutations (`create`/`drop`/`restore`) and
+//!   data-plane writes (`add`/`add_bulk`) fan out to all R replicas.
+//!   Reads (`query*`/`stats`/`snapshot`) go to the first live replica
+//!   and fail over down the replica set.
+//! * **Failover**: per-server health ([`health`]) marks a server down
+//!   after [`health::DOWN_THRESHOLD`] consecutive connection errors; a
+//!   background janitor probes down servers and, on recovery, re-seeds
+//!   their namespaces by shipping a snapshot from a live replica through
+//!   the shared `sync_dir` (the persist manifest+shards unit, routed
+//!   over the existing wire snapshot/restore calls).
+//!
+//! ## Error mapping
+//!
+//! | situation                                   | result                  |
+//! |---------------------------------------------|-------------------------|
+//! | write: ≥1 replica acked                     | `Ok` (health notes rest)|
+//! | write: 0 acks, some replica answered an app error | that app error    |
+//! | write/read: every replica unreachable       | [`GbfError::NoQuorum`]  |
+//! | read: some replica answered `Ok`            | that answer             |
+//! | read: every reachable replica app-errored   | first app error (e.g. `NoSuchFilter`) |
+//! | create/drop/restore: any replica app-errored| that error (create/restore roll back their own successes) |
+//!
+//! An *app error* is any typed [`GbfError`] carried in a wire reply — it
+//! proves the connection works, so it records a health OK even as the
+//! call fails.
+//!
+//! ## Limits (documented, by design)
+//!
+//! Re-replication ships snapshots **by path**: fleet servers must share
+//! a filesystem view of `sync_dir` (true for the loopback fleets the CLI
+//! and tests run; rsync-style shipping is a follow-on). A namespace
+//! dropped cluster-wide while a replica was down is not garbage-
+//! collected on rejoin (no tombstones yet); re-create it or restart the
+//! replica clean.
+//!
+//! ## Locking
+//!
+//! Four new classes, all leaf-tier: `cluster.health` (health counters),
+//! `cluster.janitor`/`cluster.janitor-wake` (janitor parking), and the
+//! per-call completion states `cluster.write`/`cluster.read`. Completion
+//! waits always *take* work out of the state mutex and block with no
+//! guard held, so the witness sees only acyclic, short-lived nesting.
+
+pub mod health;
+pub mod placement;
+
+use std::collections::BTreeSet;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::api::{FilterApi, FilterDataPlane};
+use crate::coordinator::error::GbfError;
+use crate::coordinator::service::{FilterSpec, NamespaceStats};
+use crate::coordinator::ticket::{finish_all, finish_bits, finish_one, finish_unit, Completion, Ticket};
+use crate::coordinator::wire::client::{is_connection_error, RemoteFilterHandle, RemoteFilterService};
+use crate::coordinator::wire::server::WireCatalog;
+use crate::filter::AnswerBits;
+use crate::infra::sync::atomic::{AtomicU64, Ordering};
+use crate::infra::sync::{lock_unpoisoned, thread, Arc, Condvar, Mutex};
+
+pub use health::HealthTracker;
+pub use placement::ClusterConfig;
+
+/// Shared state behind every handle, completion and the janitor.
+struct ClusterInner {
+    config: ClusterConfig,
+    /// One lazy wire client per server, indexed like `config.servers`.
+    clients: Vec<RemoteFilterService>,
+    health: HealthTracker,
+    /// Janitor parking: flag says "shut down", condvar wakes it early
+    /// (shutdown, or a recovery that deserves a prompt re-replication).
+    stop: Mutex<bool>,
+    wake: Condvar,
+    /// Uniquifies re-replication snapshot directories.
+    sync_seq: AtomicU64,
+}
+
+/// A fleet of wire servers presented as one filter catalog (see module
+/// docs). Dropping the service stops the janitor thread.
+pub struct ClusterFilterService {
+    inner: Arc<ClusterInner>,
+    janitor: Option<thread::JoinHandle<()>>,
+}
+
+impl ClusterFilterService {
+    /// Connect to the fleet described by `config`. Connections are
+    /// lazy — a fully down fleet constructs fine and answers every call
+    /// with typed errors, exactly like a lazy wire client.
+    pub fn connect(config: ClusterConfig) -> Result<ClusterFilterService, GbfError> {
+        config.validate()?;
+        let mut clients = Vec::with_capacity(config.servers.len());
+        for addr in &config.servers {
+            let client = RemoteFilterService::connect_lazy(addr.as_str())
+                .map_err(|e| GbfError::InvalidConfig(format!("cluster server {addr:?}: {e:#}")))?;
+            clients.push(client);
+        }
+        let fleet = config.servers.len();
+        let heal_interval_ms = config.heal_interval_ms;
+        let inner = Arc::new(ClusterInner {
+            config,
+            clients,
+            health: HealthTracker::new(fleet),
+            stop: Mutex::new_class("cluster.janitor", false),
+            wake: Condvar::new_class("cluster.janitor-wake"),
+            sync_seq: AtomicU64::new(0),
+        });
+        let janitor = if heal_interval_ms > 0 {
+            let inner = Arc::clone(&inner);
+            let handle = thread::Builder::new()
+                .name("gbf-cluster-janitor".into())
+                .spawn(move || janitor_loop(&inner))
+                .map_err(|e| GbfError::Backend(format!("spawning cluster janitor: {e}")))?;
+            Some(handle)
+        } else {
+            None
+        };
+        Ok(ClusterFilterService { inner, janitor })
+    }
+
+    /// The cluster topology this service routes over.
+    pub fn config(&self) -> &ClusterConfig {
+        &self.inner.config
+    }
+
+    /// Probe every server and reconcile every live one, synchronously.
+    /// This is the janitor's heal pass made callable — tests and the CLI
+    /// use it to make recovery deterministic instead of sleeping for a
+    /// janitor tick.
+    pub fn reconcile_now(&self) {
+        for (server, client) in self.inner.clients.iter().enumerate() {
+            let result = client.ping_now();
+            self.inner.note(server, result.err().as_ref());
+        }
+        self.inner.reconcile_live_servers();
+    }
+
+    pub fn create_filter_spec(&self, name: &str, spec: FilterSpec) -> Result<ClusterHandle, GbfError> {
+        let placed = self.inner.config.placement(name);
+        let mut legs = Vec::new();
+        let mut first_app_error = None;
+        for &server in &placed {
+            match self.inner.clients[server].create_filter_spec(name, spec.clone()) {
+                Ok(handle) => {
+                    self.inner.note(server, None);
+                    legs.push(Leg { server, handle });
+                }
+                Err(e) => {
+                    self.inner.note(server, Some(&e));
+                    if !is_connection_error(&e) && first_app_error.is_none() {
+                        first_app_error = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_app_error {
+            // catalog mutations are strict: undo this call's successes so
+            // a half-created namespace doesn't linger on some replicas
+            for leg in &legs {
+                let _ = self.inner.clients[leg.server].drop_filter(name);
+            }
+            return Err(e);
+        }
+        if legs.is_empty() {
+            return Err(GbfError::NoQuorum { name: name.to_string(), replicas: placed.len() });
+        }
+        Ok(ClusterHandle { inner: Arc::clone(&self.inner), name: name.to_string(), legs })
+    }
+
+    pub fn drop_filter(&self, name: &str) -> Result<(), GbfError> {
+        let placed = self.inner.config.placement(name);
+        let mut dropped_somewhere = false;
+        let mut first_app_error = None;
+        for &server in &placed {
+            match self.inner.clients[server].drop_filter(name) {
+                Ok(()) => {
+                    self.inner.note(server, None);
+                    dropped_somewhere = true;
+                }
+                Err(e) => {
+                    self.inner.note(server, Some(&e));
+                    if !is_connection_error(&e) && first_app_error.is_none() {
+                        first_app_error = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_app_error {
+            return Err(e);
+        }
+        if dropped_somewhere {
+            Ok(())
+        } else {
+            Err(GbfError::NoQuorum { name: name.to_string(), replicas: placed.len() })
+        }
+    }
+
+    /// Union of namespaces across every reachable server, sorted (a
+    /// replica that is down must not hide namespaces it merely hosts a
+    /// copy of).
+    pub fn list_filters(&self) -> Result<Vec<String>, GbfError> {
+        let mut union = BTreeSet::new();
+        let mut reached_any = false;
+        let mut first_err = None;
+        for (server, client) in self.inner.clients.iter().enumerate() {
+            match client.list_filters() {
+                Ok(names) => {
+                    self.inner.note(server, None);
+                    reached_any = true;
+                    union.extend(names);
+                }
+                Err(e) => {
+                    self.inner.note(server, Some(&e));
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if reached_any {
+            Ok(union.into_iter().collect())
+        } else {
+            Err(first_err.unwrap_or_else(|| GbfError::Backend("cluster has no servers".into())))
+        }
+    }
+
+    /// Stats from the same replica reads prefer (first live, placement
+    /// order), failing over like a read — so `stats().metrics.queries`
+    /// agrees with where the queries actually went.
+    pub fn stats(&self, name: &str) -> Result<NamespaceStats, GbfError> {
+        let placed = self.inner.config.placement(name);
+        let order = self.inner.health.attempt_order(&placed);
+        let mut first_app_error = None;
+        for &server in &order {
+            match self.inner.clients[server].stats(name) {
+                Ok(stats) => {
+                    self.inner.note(server, None);
+                    return Ok(stats);
+                }
+                Err(e) => {
+                    self.inner.note(server, Some(&e));
+                    if !is_connection_error(&e) && first_app_error.is_none() {
+                        first_app_error = Some(e);
+                    }
+                }
+            }
+        }
+        Err(first_app_error
+            .unwrap_or_else(|| GbfError::NoQuorum { name: name.to_string(), replicas: order.len() }))
+    }
+
+    /// Snapshot from any one live replica (writes fan out, so every
+    /// replica holds the full namespace). `dir` resolves on the server
+    /// that takes the snapshot, like the wire transport underneath.
+    pub fn snapshot(&self, name: &str, dir: &str) -> Result<(), GbfError> {
+        let placed = self.inner.config.placement(name);
+        let order = self.inner.health.attempt_order(&placed);
+        let mut first_app_error = None;
+        for &server in &order {
+            match self.inner.clients[server].snapshot(name, dir) {
+                Ok(()) => {
+                    self.inner.note(server, None);
+                    return Ok(());
+                }
+                Err(e) => {
+                    self.inner.note(server, Some(&e));
+                    if !is_connection_error(&e) && first_app_error.is_none() {
+                        first_app_error = Some(e);
+                    }
+                }
+            }
+        }
+        Err(first_app_error
+            .unwrap_or_else(|| GbfError::NoQuorum { name: name.to_string(), replicas: order.len() }))
+    }
+
+    /// Restore fans out to the whole replica set, strict like create.
+    pub fn restore(&self, name: &str, dir: &str) -> Result<ClusterHandle, GbfError> {
+        let placed = self.inner.config.placement(name);
+        let mut legs = Vec::new();
+        let mut first_app_error = None;
+        for &server in &placed {
+            match self.inner.clients[server].restore(name, dir) {
+                Ok(handle) => {
+                    self.inner.note(server, None);
+                    legs.push(Leg { server, handle });
+                }
+                Err(e) => {
+                    self.inner.note(server, Some(&e));
+                    if !is_connection_error(&e) && first_app_error.is_none() {
+                        first_app_error = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_app_error {
+            for leg in &legs {
+                let _ = self.inner.clients[leg.server].drop_filter(name);
+            }
+            return Err(e);
+        }
+        if legs.is_empty() {
+            return Err(GbfError::NoQuorum { name: name.to_string(), replicas: placed.len() });
+        }
+        Ok(ClusterHandle { inner: Arc::clone(&self.inner), name: name.to_string(), legs })
+    }
+
+    /// A data-plane handle over every replica that currently answers for
+    /// `name`. Any one live leg is enough — missing replicas are healed
+    /// by the janitor, not by failing the caller.
+    pub fn handle(&self, name: &str) -> Result<ClusterHandle, GbfError> {
+        let placed = self.inner.config.placement(name);
+        let mut legs = Vec::new();
+        let mut first_app_error = None;
+        for &server in &placed {
+            match self.inner.clients[server].handle(name) {
+                Ok(handle) => {
+                    self.inner.note(server, None);
+                    legs.push(Leg { server, handle });
+                }
+                Err(e) => {
+                    self.inner.note(server, Some(&e));
+                    if !is_connection_error(&e) && first_app_error.is_none() {
+                        first_app_error = Some(e);
+                    }
+                }
+            }
+        }
+        if !legs.is_empty() {
+            return Ok(ClusterHandle { inner: Arc::clone(&self.inner), name: name.to_string(), legs });
+        }
+        Err(first_app_error
+            .unwrap_or_else(|| GbfError::NoQuorum { name: name.to_string(), replicas: placed.len() }))
+    }
+}
+
+impl Drop for ClusterFilterService {
+    fn drop(&mut self) {
+        {
+            let mut stop = lock_unpoisoned(&self.inner.stop);
+            *stop = true;
+        }
+        self.inner.wake.notify_all();
+        if let Some(janitor) = self.janitor.take() {
+            let _ = janitor.join();
+        }
+    }
+}
+
+fn janitor_loop(inner: &Arc<ClusterInner>) {
+    let interval = Duration::from_millis(inner.config.heal_interval_ms.max(1));
+    loop {
+        {
+            let stop = lock_unpoisoned(&inner.stop);
+            if *stop {
+                return;
+            }
+            // park for one interval (or an early wake); the wait names
+            // its own guard, so no other class is held across it
+            let (stop, _timed_out) = match inner.wake.wait_timeout(stop, interval) {
+                Ok(pair) => pair,
+                Err(_) => return,
+            };
+            if *stop {
+                return;
+            }
+        }
+        inner.heal_pass();
+    }
+}
+
+impl ClusterInner {
+    /// Fold one wire-leg outcome into the health tracker. Any reply —
+    /// even a typed application error — proves the connection, so only
+    /// connection errors count against a server. A recovery pokes the
+    /// janitor so re-replication starts within one wake, not one tick.
+    fn note(&self, server: usize, err: Option<&GbfError>) {
+        match err {
+            Some(e) if is_connection_error(e) => {
+                self.health.record_error(server);
+            }
+            _ => {
+                if self.health.record_ok(server) {
+                    self.wake.notify_all();
+                }
+            }
+        }
+    }
+
+    /// One janitor pass: probe every down server, then reconcile the
+    /// live ones. Idempotent — reconciliation re-ships a namespace only
+    /// when a replica is missing it or provably behind.
+    fn heal_pass(&self) {
+        for server in self.health.down_servers() {
+            // ping_now clears the client's dial cooldown: the janitor is
+            // the pacer for recovery probes
+            let result = self.clients[server].ping_now();
+            self.note(server, result.err().as_ref());
+        }
+        self.reconcile_live_servers();
+    }
+
+    fn reconcile_live_servers(&self) {
+        for server in 0..self.clients.len() {
+            if !self.health.is_down(server) {
+                self.reconcile_server(server);
+            }
+        }
+    }
+
+    /// Bring one live server up to date with the placement function:
+    /// re-seed namespaces it should hold but is missing (or behind on),
+    /// drop copies it no longer owns.
+    fn reconcile_server(&self, target: usize) {
+        let Ok(held) = self.clients[target].list_filters() else { return };
+        let held: BTreeSet<String> = held.into_iter().collect();
+        let mut all = held.clone();
+        for (i, client) in self.clients.iter().enumerate() {
+            if i == target || self.health.is_down(i) {
+                continue;
+            }
+            if let Ok(names) = client.list_filters() {
+                all.extend(names);
+            }
+        }
+        for ns in all {
+            let placed = self.config.placement(&ns);
+            if placed.contains(&target) {
+                self.reseed_if_behind(&ns, &placed, target, held.contains(&ns));
+            } else if held.contains(&ns) {
+                // placement/override change moved this namespace away
+                let _ = self.clients[target].drop_filter(&ns);
+            }
+        }
+    }
+
+    fn reseed_if_behind(&self, ns: &str, placed: &[usize], target: usize, target_has_it: bool) {
+        // pick the first live co-replica that actually holds the namespace
+        let mut source = None;
+        for &server in placed {
+            if server == target || self.health.is_down(server) {
+                continue;
+            }
+            if let Ok(stats) = self.clients[server].stats(ns) {
+                source = Some((server, stats));
+                break;
+            }
+        }
+        let Some((source, source_stats)) = source else { return };
+        if target_has_it {
+            match self.clients[target].stats(ns) {
+                Ok(t) if t.metrics.adds >= source_stats.metrics.adds => return, // caught up
+                Ok(_) => {}
+                Err(_) => return, // target stopped answering; next pass retries
+            }
+        }
+        // ship: snapshot on the source, restore on the target, through
+        // the shared sync_dir (drop first — restore wants a fresh name)
+        let dir = self.sync_path(ns);
+        if self.clients[source].snapshot(ns, &dir).is_err() {
+            return;
+        }
+        let _ = self.clients[target].drop_filter(ns);
+        let _ = self.clients[target].restore(ns, &dir);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn sync_path(&self, ns: &str) -> String {
+        let root = if self.config.sync_dir.is_empty() {
+            std::env::temp_dir().join("gbf-cluster-sync").to_string_lossy().into_owned()
+        } else {
+            self.config.sync_dir.clone()
+        };
+        // Relaxed: the counter only needs uniqueness, not ordering
+        let seq = self.sync_seq.fetch_add(1, Ordering::Relaxed);
+        format!("{root}/resync-{ns}-{}-{seq}", std::process::id())
+    }
+}
+
+// ---- the data plane ----
+
+/// One replica's share of a cluster handle.
+#[derive(Clone)]
+struct Leg {
+    server: usize,
+    handle: RemoteFilterHandle,
+}
+
+/// Data-plane handle to a replicated namespace: writes fan out to every
+/// leg, reads fail over across them (see module docs).
+#[derive(Clone)]
+pub struct ClusterHandle {
+    inner: Arc<ClusterInner>,
+    name: String,
+    legs: Vec<Leg>,
+}
+
+impl ClusterHandle {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Representative instance id (the first leg's). Gateway mode uses
+    /// it for `Created` replies; [`WireCatalog::bind`] accepts a match
+    /// on *any* leg, so the representative only needs to exist.
+    pub fn instance(&self) -> u64 {
+        self.legs[0].handle.instance()
+    }
+
+    fn submit_write<T>(&self, keys: &[u64], finish: fn(AnswerBits) -> T) -> Ticket<T> {
+        let mut pending = Vec::with_capacity(self.legs.len());
+        for leg in &self.legs {
+            pending.push(WriteLeg { server: leg.server, ticket: leg.handle.add_bulk(keys) });
+        }
+        let write = FanoutWrite {
+            inner: Arc::clone(&self.inner),
+            name: self.name.clone(),
+            replicas: self.legs.len(),
+            state: Mutex::new_class("cluster.write", WriteState { pending, outcomes: Vec::new() }),
+        };
+        Ticket::from_completion(Arc::new(write), finish)
+    }
+
+    fn submit_read<T>(&self, keys: &[u64], finish: fn(AnswerBits) -> T) -> Ticket<T> {
+        if self.legs.is_empty() {
+            return Ticket::failed(GbfError::NoQuorum { name: self.name.clone(), replicas: 0 }, finish);
+        }
+        // live legs first (placement order within each class): a known-
+        // down preferred replica doesn't cost every read a dial timeout
+        let servers: Vec<usize> = self.legs.iter().map(|l| l.server).collect();
+        let order = self.inner.health.attempt_order(&servers);
+        let mut legs = Vec::with_capacity(self.legs.len());
+        for server in order {
+            if let Some(leg) = self.legs.iter().find(|l| l.server == server) {
+                legs.push(leg.clone());
+            }
+        }
+        let first = legs[0].handle.query_bulk_bits(keys);
+        let read = FailoverRead {
+            inner: Arc::clone(&self.inner),
+            name: self.name.clone(),
+            keys: keys.to_vec(),
+            legs,
+            state: Mutex::new_class(
+                "cluster.read",
+                ReadState { in_flight: Some((0, first)), next_leg: 1, first_app_error: None },
+            ),
+        };
+        Ticket::from_completion(Arc::new(read), finish)
+    }
+}
+
+impl FilterDataPlane for ClusterHandle {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn clone_box(&self) -> Box<dyn FilterDataPlane> {
+        Box::new(self.clone())
+    }
+
+    fn add(&self, key: u64) -> Ticket<()> {
+        self.submit_write(&[key], finish_unit)
+    }
+
+    fn query(&self, key: u64) -> Ticket<bool> {
+        self.submit_read(&[key], finish_one)
+    }
+
+    fn add_bulk(&self, keys: &[u64]) -> Ticket<()> {
+        self.submit_write(keys, finish_unit)
+    }
+
+    fn query_bulk(&self, keys: &[u64]) -> Ticket<Vec<bool>> {
+        self.submit_read(keys, finish_all)
+    }
+
+    fn query_bulk_bits(&self, keys: &[u64]) -> Ticket<AnswerBits> {
+        self.submit_read(keys, finish_bits)
+    }
+}
+
+// ---- write fan-out completion ----
+
+struct WriteLeg {
+    server: usize,
+    ticket: Ticket<()>,
+}
+
+struct WriteState {
+    /// Legs not yet waited on, in placement order.
+    pending: Vec<WriteLeg>,
+    /// `(server, error)` per finished leg; `None` = acked.
+    outcomes: Vec<(usize, Option<GbfError>)>,
+}
+
+/// Completion that resolves once every replica leg resolves. The state
+/// mutex is only ever held to *move* work in or out — each leg's
+/// blocking wait happens with no guard held.
+struct FanoutWrite {
+    inner: Arc<ClusterInner>,
+    name: String,
+    replicas: usize,
+    state: Mutex<WriteState>,
+}
+
+/// Write resolution (module docs table): one ack suffices — replication
+/// is best-effort-now, janitor-guaranteed-later; with zero acks the
+/// first application error (placement order) beats the unreachability
+/// verdict.
+fn resolve_write(
+    name: &str,
+    replicas: usize,
+    outcomes: &[(usize, Option<GbfError>)],
+) -> Result<AnswerBits, GbfError> {
+    if outcomes.iter().any(|(_, e)| e.is_none()) {
+        return Ok(AnswerBits::new());
+    }
+    for (_, outcome) in outcomes {
+        if let Some(e) = outcome {
+            if !is_connection_error(e) {
+                return Err(e.clone());
+            }
+        }
+    }
+    Err(GbfError::NoQuorum { name: name.to_string(), replicas })
+}
+
+impl FanoutWrite {
+    fn next_pending(&self) -> Option<WriteLeg> {
+        let mut g = lock_unpoisoned(&self.state);
+        if g.pending.is_empty() {
+            None
+        } else {
+            Some(g.pending.remove(0))
+        }
+    }
+
+    fn finish_leg(&self, server: usize, outcome: Option<GbfError>) {
+        self.inner.note(server, outcome.as_ref());
+        let mut g = lock_unpoisoned(&self.state);
+        g.outcomes.push((server, outcome));
+    }
+
+    fn resolve(&self) -> Result<AnswerBits, GbfError> {
+        let g = lock_unpoisoned(&self.state);
+        resolve_write(&self.name, self.replicas, &g.outcomes)
+    }
+}
+
+impl Completion for FanoutWrite {
+    fn is_ready(&self) -> bool {
+        let g = lock_unpoisoned(&self.state);
+        g.pending.iter().all(|leg| leg.ticket.is_ready())
+    }
+
+    fn wait(&self) -> Result<AnswerBits, GbfError> {
+        while let Some(leg) = self.next_pending() {
+            let outcome = leg.ticket.wait().err();
+            self.finish_leg(leg.server, outcome);
+        }
+        self.resolve()
+    }
+
+    fn wait_timeout(&self, timeout: Duration) -> Option<Result<AnswerBits, GbfError>> {
+        let deadline = Instant::now() + timeout;
+        while let Some(leg) = self.next_pending() {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match leg.ticket.wait_timeout(remaining) {
+                Ok(resolved) => self.finish_leg(leg.server, resolved.err()),
+                Err(ticket) => {
+                    // out of time: hand the leg back for the next wait
+                    let mut g = lock_unpoisoned(&self.state);
+                    g.pending.insert(0, WriteLeg { server: leg.server, ticket });
+                    return None;
+                }
+            }
+        }
+        Some(self.resolve())
+    }
+}
+
+// ---- read failover completion ----
+
+struct ReadState {
+    /// The leg currently being waited on: `(index into legs, ticket)`.
+    in_flight: Option<(usize, Ticket<AnswerBits>)>,
+    /// Next leg to submit once the in-flight one fails over.
+    next_leg: usize,
+    first_app_error: Option<GbfError>,
+}
+
+/// Completion that walks the replica set until one leg answers. Leg
+/// submissions and blocking waits happen with no guard held; the state
+/// mutex only shuttles the in-flight ticket in and out.
+struct FailoverRead {
+    inner: Arc<ClusterInner>,
+    name: String,
+    keys: Vec<u64>,
+    /// Attempt order (live first), fixed at submission.
+    legs: Vec<Leg>,
+    state: Mutex<ReadState>,
+}
+
+enum ReadStep {
+    Wait(usize, Ticket<AnswerBits>),
+    Submit(usize),
+    Exhausted(Result<AnswerBits, GbfError>),
+}
+
+impl FailoverRead {
+    fn next_step(&self) -> ReadStep {
+        let mut g = lock_unpoisoned(&self.state);
+        if let Some((leg, ticket)) = g.in_flight.take() {
+            return ReadStep::Wait(leg, ticket);
+        }
+        if g.next_leg < self.legs.len() {
+            let leg = g.next_leg;
+            g.next_leg += 1;
+            return ReadStep::Submit(leg);
+        }
+        ReadStep::Exhausted(Err(g.first_app_error.clone().unwrap_or_else(|| GbfError::NoQuorum {
+            name: self.name.clone(),
+            replicas: self.legs.len(),
+        })))
+    }
+
+    /// Fold one resolved leg: `Some` = final answer, `None` = fail over.
+    fn settle(&self, leg: usize, resolved: Result<AnswerBits, GbfError>) -> Option<Result<AnswerBits, GbfError>> {
+        let server = self.legs[leg].server;
+        match resolved {
+            Ok(bits) => {
+                self.inner.note(server, None);
+                Some(Ok(bits))
+            }
+            Err(e) => {
+                self.inner.note(server, Some(&e));
+                if !is_connection_error(&e) {
+                    let mut g = lock_unpoisoned(&self.state);
+                    if g.first_app_error.is_none() {
+                        g.first_app_error = Some(e);
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    fn park(&self, leg: usize, ticket: Ticket<AnswerBits>) {
+        let mut g = lock_unpoisoned(&self.state);
+        g.in_flight = Some((leg, ticket));
+    }
+}
+
+impl Completion for FailoverRead {
+    fn is_ready(&self) -> bool {
+        let g = lock_unpoisoned(&self.state);
+        match &g.in_flight {
+            Some((_, ticket)) => ticket.is_ready(),
+            // no in-flight leg outside a wait() step means exhaustion
+            None => g.next_leg >= self.legs.len(),
+        }
+    }
+
+    fn wait(&self) -> Result<AnswerBits, GbfError> {
+        loop {
+            match self.next_step() {
+                ReadStep::Wait(leg, ticket) => {
+                    if let Some(final_answer) = self.settle(leg, ticket.wait()) {
+                        return final_answer;
+                    }
+                }
+                ReadStep::Submit(leg) => {
+                    let ticket = self.legs[leg].handle.query_bulk_bits(&self.keys);
+                    self.park(leg, ticket);
+                }
+                ReadStep::Exhausted(result) => return result,
+            }
+        }
+    }
+
+    fn wait_timeout(&self, timeout: Duration) -> Option<Result<AnswerBits, GbfError>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.next_step() {
+                ReadStep::Wait(leg, ticket) => {
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    match ticket.wait_timeout(remaining) {
+                        Ok(resolved) => {
+                            if let Some(final_answer) = self.settle(leg, resolved) {
+                                return Some(final_answer);
+                            }
+                        }
+                        Err(ticket) => {
+                            self.park(leg, ticket);
+                            return None;
+                        }
+                    }
+                }
+                ReadStep::Submit(leg) => {
+                    let ticket = self.legs[leg].handle.query_bulk_bits(&self.keys);
+                    self.park(leg, ticket);
+                }
+                ReadStep::Exhausted(result) => return Some(result),
+            }
+        }
+    }
+}
+
+// ---- the FilterApi transport ----
+
+impl FilterApi for ClusterFilterService {
+    fn create_filter_spec(&self, name: &str, spec: FilterSpec) -> Result<Box<dyn FilterDataPlane>, GbfError> {
+        ClusterFilterService::create_filter_spec(self, name, spec)
+            .map(|h| Box::new(h) as Box<dyn FilterDataPlane>)
+    }
+
+    fn drop_filter(&self, name: &str) -> Result<(), GbfError> {
+        ClusterFilterService::drop_filter(self, name)
+    }
+
+    fn list_filters(&self) -> Result<Vec<String>, GbfError> {
+        ClusterFilterService::list_filters(self)
+    }
+
+    fn stats(&self, name: &str) -> Result<NamespaceStats, GbfError> {
+        ClusterFilterService::stats(self, name)
+    }
+
+    fn handle(&self, name: &str) -> Result<Box<dyn FilterDataPlane>, GbfError> {
+        ClusterFilterService::handle(self, name).map(|h| Box::new(h) as Box<dyn FilterDataPlane>)
+    }
+
+    fn snapshot(&self, name: &str, dir: &Path) -> Result<(), GbfError> {
+        ClusterFilterService::snapshot(self, name, utf8_path(dir)?)
+    }
+
+    fn restore(&self, name: &str, dir: &Path) -> Result<Box<dyn FilterDataPlane>, GbfError> {
+        ClusterFilterService::restore(self, name, utf8_path(dir)?)
+            .map(|h| Box::new(h) as Box<dyn FilterDataPlane>)
+    }
+}
+
+fn utf8_path(dir: &Path) -> Result<&str, GbfError> {
+    dir.to_str().ok_or_else(|| {
+        GbfError::InvalidConfig(format!(
+            "path {dir:?} is not valid UTF-8 (the wire protocol ships paths as UTF-8 strings)"
+        ))
+    })
+}
+
+// ---- gateway mode: the cluster behind a wire listener ----
+
+/// `gbf cluster --listen` serves the cluster through the ordinary wire
+/// protocol, so unmodified `gbf client`s (and `RemoteFilterService`s)
+/// talk to the fleet without knowing it is one.
+impl WireCatalog for ClusterFilterService {
+    fn create_instance(&self, name: &str, spec: FilterSpec) -> Result<u64, GbfError> {
+        ClusterFilterService::create_filter_spec(self, name, spec).map(|h| h.instance())
+    }
+
+    fn drop_filter(&self, name: &str) -> Result<(), GbfError> {
+        ClusterFilterService::drop_filter(self, name)
+    }
+
+    fn list_filters(&self) -> Result<Vec<String>, GbfError> {
+        ClusterFilterService::list_filters(self)
+    }
+
+    fn stats(&self, name: &str) -> Result<NamespaceStats, GbfError> {
+        ClusterFilterService::stats(self, name)
+    }
+
+    fn snapshot(&self, name: &str, dir: &str) -> Result<(), GbfError> {
+        ClusterFilterService::snapshot(self, name, dir)
+    }
+
+    fn restore_instance(&self, name: &str, dir: &str) -> Result<u64, GbfError> {
+        ClusterFilterService::restore(self, name, dir).map(|h| h.instance())
+    }
+
+    fn bind(&self, name: &str, instance: u64) -> Result<Box<dyn FilterDataPlane>, GbfError> {
+        let handle = ClusterFilterService::handle(self, name)?;
+        // instance ids are per-server: a client-held id is valid if any
+        // current leg carries it (stats/create replies hand out leg ids)
+        if handle.legs.iter().any(|leg| leg.handle.instance() == instance) {
+            Ok(Box::new(handle))
+        } else {
+            Err(GbfError::NoSuchFilter(name.to_string()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conn_err() -> Option<GbfError> {
+        Some(GbfError::Backend("wire client: connection closed by server".into()))
+    }
+
+    #[test]
+    fn write_resolution_any_ack_wins() {
+        assert!(resolve_write("ns", 2, &[(0, conn_err()), (1, None)]).is_ok());
+        assert!(resolve_write("ns", 2, &[(0, None), (1, None)]).is_ok());
+        // zero acks: first application error beats unreachability
+        let app = Some(GbfError::NoSuchFilter("ns".into()));
+        match resolve_write("ns", 2, &[(0, conn_err()), (1, app)]) {
+            Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "ns"),
+            other => panic!("expected the app error, got {other:?}"),
+        }
+        // all replicas unreachable: typed NoQuorum naming the namespace
+        match resolve_write("ns", 2, &[(0, conn_err()), (1, conn_err())]) {
+            Err(GbfError::NoQuorum { name, replicas }) => {
+                assert_eq!((name.as_str(), replicas), ("ns", 2));
+            }
+            other => panic!("expected NoQuorum, got {other:?}"),
+        }
+    }
+
+    /// A fully dead fleet constructs fine (lazy), then answers every
+    /// call with typed errors — `NoQuorum` where a namespace is named,
+    /// a connection error for fleet-wide admin — and never hangs.
+    #[test]
+    fn dead_fleet_yields_typed_errors() {
+        let config = ClusterConfig::new(vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()], 2).unwrap();
+        let cluster = ClusterFilterService::connect(config).unwrap();
+        match cluster.create_filter_spec("ns", FilterSpec::default()) {
+            Err(GbfError::NoQuorum { name, replicas }) => {
+                assert_eq!((name.as_str(), replicas), ("ns", 2));
+            }
+            other => panic!("expected NoQuorum, got {:?}", other.map(|h| h.name().to_string())),
+        }
+        assert!(matches!(cluster.handle("ns"), Err(GbfError::NoQuorum { .. })));
+        assert!(matches!(cluster.stats("ns"), Err(GbfError::NoQuorum { .. })));
+        assert!(matches!(cluster.drop_filter("ns"), Err(GbfError::NoQuorum { .. })));
+        let list = cluster.list_filters().unwrap_err();
+        assert!(is_connection_error(&list), "{list}");
+    }
+
+    /// Repeated failures against a dead fleet cross the health threshold
+    /// and mark every server down.
+    #[test]
+    fn dead_fleet_eventually_marks_servers_down() {
+        let config = ClusterConfig::new(vec!["127.0.0.1:1".into()], 1).unwrap();
+        let cluster = ClusterFilterService::connect(config).unwrap();
+        for _ in 0..health::DOWN_THRESHOLD {
+            let _ = cluster.stats("ns");
+        }
+        assert!(cluster.inner.health.is_down(0));
+    }
+
+    #[test]
+    fn utf8_path_round_trips_and_rejects() {
+        assert_eq!(utf8_path(Path::new("/tmp/snap")).unwrap(), "/tmp/snap");
+        #[cfg(unix)]
+        {
+            use std::ffi::OsStr;
+            use std::os::unix::ffi::OsStrExt;
+            let bad = Path::new(OsStr::from_bytes(&[0x66, 0xFF]));
+            assert!(matches!(utf8_path(bad), Err(GbfError::InvalidConfig(_))));
+        }
+    }
+
+    #[test]
+    fn sync_paths_are_unique() {
+        let config = ClusterConfig::new(vec!["127.0.0.1:1".into()], 1).unwrap();
+        let cluster = ClusterFilterService::connect(config).unwrap();
+        let a = cluster.inner.sync_path("ns");
+        let b = cluster.inner.sync_path("ns");
+        assert_ne!(a, b);
+        assert!(a.contains("resync-ns-"), "{a}");
+    }
+}
+
+/// Bounded-exhaustive interleaving models for the replica-set write
+/// state machine: run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_`.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use crate::coordinator::ticket::finish_unit;
+    use crate::infra::check;
+    use crate::infra::sync::thread;
+
+    fn tiny_inner() -> Arc<ClusterInner> {
+        let config = ClusterConfig::new(vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()], 2).unwrap();
+        let clients = config
+            .servers
+            .iter()
+            .map(|a| RemoteFilterService::connect_lazy(a.as_str()).unwrap())
+            .collect();
+        Arc::new(ClusterInner {
+            health: HealthTracker::new(config.servers.len()),
+            config,
+            clients,
+            stop: Mutex::new_class("cluster.janitor", false),
+            wake: Condvar::new_class("cluster.janitor-wake"),
+            sync_seq: AtomicU64::new(0),
+        })
+    }
+
+    fn fanout(inner: &Arc<ClusterInner>, legs: Vec<WriteLeg>) -> Arc<FanoutWrite> {
+        let replicas = legs.len();
+        Arc::new(FanoutWrite {
+            inner: Arc::clone(inner),
+            name: "ns".into(),
+            replicas,
+            state: Mutex::new_class("cluster.write", WriteState { pending: legs, outcomes: Vec::new() }),
+        })
+    }
+
+    /// One acked leg and one dead leg, with `is_ready` polling racing
+    /// the wait: the write resolves `Ok` in every interleaving and the
+    /// dead server's error lands in the health tracker.
+    #[test]
+    fn loom_fanout_write_any_ack_wins_under_races() {
+        check::model(|| {
+            let inner = tiny_inner();
+            let legs = vec![
+                WriteLeg { server: 0, ticket: Ticket::ready(finish_unit) },
+                WriteLeg {
+                    server: 1,
+                    ticket: Ticket::failed(
+                        GbfError::Backend("wire client: connection closed by server".into()),
+                        finish_unit,
+                    ),
+                },
+            ];
+            let write = fanout(&inner, legs);
+            let waiter = {
+                let write = Arc::clone(&write);
+                thread::spawn(move || write.wait())
+            };
+            let _ = write.is_ready(); // races the waiter's take-resolve cycle
+            let result = waiter.join().unwrap();
+            assert!(result.is_ok(), "one ack must win: {result:?}");
+            assert!(!inner.health.is_down(0));
+        });
+    }
+
+    /// Every leg unreachable: the write resolves `NoQuorum` (never
+    /// hangs, never panics) and both failures reach the health tracker,
+    /// in every interleaving of a concurrent `is_ready` poll.
+    #[test]
+    fn loom_fanout_write_all_dead_is_no_quorum() {
+        check::model(|| {
+            let inner = tiny_inner();
+            let dead = || {
+                Ticket::failed(
+                    GbfError::Backend("wire client: connection closed by server".into()),
+                    finish_unit,
+                )
+            };
+            let write = fanout(&inner, vec![
+                WriteLeg { server: 0, ticket: dead() },
+                WriteLeg { server: 1, ticket: dead() },
+            ]);
+            let waiter = {
+                let write = Arc::clone(&write);
+                thread::spawn(move || write.wait())
+            };
+            let _ = write.is_ready();
+            match waiter.join().unwrap() {
+                Err(GbfError::NoQuorum { replicas, .. }) => assert_eq!(replicas, 2),
+                other => panic!("expected NoQuorum, got {other:?}"),
+            }
+        });
+    }
+}

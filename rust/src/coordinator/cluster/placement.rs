@@ -1,0 +1,305 @@
+//! Deterministic namespace → server placement.
+//!
+//! Cluster mode keeps **no placement catalog**: every front end computes
+//! the same replica set for a namespace from the cluster config alone,
+//! using rendezvous (highest-random-weight) hashing. Rendezvous hashing
+//! gives the property that matters for operability: removing one server
+//! only moves the namespaces that were placed *on that server* — every
+//! other namespace keeps its exact replica set, so a resize re-replicates
+//! the minimum amount of data.
+//!
+//! The hash is an in-file FNV-1a over `server ⊕ 0xFF ⊕ namespace`. It
+//! must be a *fixed* function: `std::collections`' default hasher is
+//! randomly seeded per process, so two front ends would disagree on
+//! placement. (The wire client *does* use the random hasher — for
+//! backoff jitter, where disagreement is the point.)
+//!
+//! Operators can pin a namespace to an explicit replica set with an
+//! override entry; overrides win over the hash and are validated against
+//! the server list at config-build time, so a placement call can never
+//! fail.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::error::GbfError;
+use crate::infra::json::{self, Json};
+
+/// Typed, serializable cluster topology: the full input to placement.
+///
+/// Two front ends with equal configs compute equal placements — that is
+/// the cluster's consistency story, so the config round-trips through
+/// JSON ([`ClusterConfig::to_json`] / [`ClusterConfig::from_json`]) for
+/// audit and for handing to other tooling. Construct via
+/// [`ClusterConfig::new`] + builder methods; every constructor path ends
+/// in [`ClusterConfig::validate`], so a held config is always coherent.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterConfig {
+    /// Server addresses, in index order. Indices — not addresses — are
+    /// the currency of placement, so order matters and is preserved.
+    pub servers: Vec<String>,
+    /// Replication factor R: every namespace lives on R servers.
+    pub replicas: usize,
+    /// Explicit placement overrides: namespace → server indices. The
+    /// override list *is* that namespace's replica set (its length may
+    /// differ from `replicas`; it must be non-empty, unique, in range).
+    pub overrides: BTreeMap<String, Vec<usize>>,
+    /// Scratch directory for re-replication snapshots. Must be reachable
+    /// by every server in the fleet (cluster mode ships snapshots by
+    /// path, exactly like the wire protocol underneath it).
+    pub sync_dir: String,
+    /// Janitor cadence for health probes and re-replication, in
+    /// milliseconds. `0` disables the background janitor (tests drive
+    /// recovery explicitly via `reconcile_now`).
+    pub heal_interval_ms: u64,
+}
+
+impl ClusterConfig {
+    /// Build and validate a config with no overrides and no janitor.
+    pub fn new(servers: Vec<String>, replicas: usize) -> Result<ClusterConfig, GbfError> {
+        let config = ClusterConfig {
+            servers,
+            replicas,
+            overrides: BTreeMap::new(),
+            sync_dir: String::new(),
+            heal_interval_ms: 0,
+        };
+        config.validate()?;
+        Ok(config)
+    }
+
+    /// Pin `name` to an explicit replica set (validated immediately).
+    pub fn with_override(mut self, name: &str, indices: Vec<usize>) -> Result<ClusterConfig, GbfError> {
+        self.overrides.insert(name.to_string(), indices);
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Every invariant the rest of the cluster code leans on.
+    pub fn validate(&self) -> Result<(), GbfError> {
+        if self.servers.is_empty() {
+            return Err(GbfError::InvalidConfig("cluster needs at least one server".into()));
+        }
+        for (i, s) in self.servers.iter().enumerate() {
+            if s.is_empty() {
+                return Err(GbfError::InvalidConfig(format!("server {i} has an empty address")));
+            }
+            if self.servers[..i].contains(s) {
+                return Err(GbfError::InvalidConfig(format!("duplicate server address {s:?}")));
+            }
+        }
+        if self.replicas == 0 || self.replicas > self.servers.len() {
+            return Err(GbfError::InvalidConfig(format!(
+                "replicas must be in 1..={} (fleet size), got {}",
+                self.servers.len(),
+                self.replicas
+            )));
+        }
+        for (name, indices) in &self.overrides {
+            if indices.is_empty() {
+                return Err(GbfError::InvalidConfig(format!("override for {name:?} is empty")));
+            }
+            for (pos, &idx) in indices.iter().enumerate() {
+                if idx >= self.servers.len() {
+                    return Err(GbfError::InvalidConfig(format!(
+                        "override for {name:?} names server {idx}, fleet has {}",
+                        self.servers.len()
+                    )));
+                }
+                if indices[..pos].contains(&idx) {
+                    return Err(GbfError::InvalidConfig(format!(
+                        "override for {name:?} lists server {idx} twice"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The replica set for `name`, as server indices in preference
+    /// order (reads try index 0 first). Pure and total: same config +
+    /// same name → same answer on every front end, no I/O, no failure.
+    pub fn placement(&self, name: &str) -> Vec<usize> {
+        if let Some(pinned) = self.overrides.get(name) {
+            return pinned.clone();
+        }
+        let mut scored: Vec<(u64, usize)> = self
+            .servers
+            .iter()
+            .enumerate()
+            .map(|(idx, server)| (rendezvous_score(server, name), idx))
+            .collect();
+        // highest score wins; index breaks ties so the order is total
+        scored.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        scored.truncate(self.replicas);
+        scored.into_iter().map(|(_, idx)| idx).collect()
+    }
+
+    // ---- JSON round-trip ----
+
+    pub fn to_json(&self) -> String {
+        let overrides = Json::Obj(
+            self.overrides
+                .iter()
+                .map(|(name, indices)| {
+                    (name.clone(), Json::Arr(indices.iter().map(|&i| Json::Int(i as i64)).collect()))
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("servers", Json::Arr(self.servers.iter().map(|s| Json::str(s.clone())).collect())),
+            ("replicas", Json::Int(self.replicas as i64)),
+            ("overrides", overrides),
+            ("sync_dir", Json::str(self.sync_dir.clone())),
+            ("heal_interval_ms", Json::Int(self.heal_interval_ms as i64)),
+        ])
+        .to_string()
+    }
+
+    pub fn from_json(text: &str) -> Result<ClusterConfig, GbfError> {
+        let bad = |e: anyhow::Error| GbfError::InvalidConfig(format!("cluster config: {e:#}"));
+        let doc = json::parse(text).map_err(bad)?;
+        let mut servers = Vec::new();
+        for s in doc.expect("servers").map_err(bad)?.as_arr().map_err(bad)? {
+            servers.push(s.as_str().map_err(bad)?.to_string());
+        }
+        let replicas = doc.expect("replicas").map_err(bad)?.as_u64().map_err(bad)? as usize;
+        let mut overrides = BTreeMap::new();
+        for (name, indices) in doc.expect("overrides").map_err(bad)?.as_obj().map_err(bad)? {
+            let mut v = Vec::new();
+            for idx in indices.as_arr().map_err(bad)? {
+                v.push(idx.as_u64().map_err(bad)? as usize);
+            }
+            overrides.insert(name.clone(), v);
+        }
+        let sync_dir = doc.expect("sync_dir").map_err(bad)?.as_str().map_err(bad)?.to_string();
+        let heal_interval_ms = doc.expect("heal_interval_ms").map_err(bad)?.as_u64().map_err(bad)?;
+        let config = ClusterConfig { servers, replicas, overrides, sync_dir, heal_interval_ms };
+        config.validate()?;
+        Ok(config)
+    }
+}
+
+/// FNV-1a over `server ‖ 0xFF ‖ name`. The 0xFF separator (never a UTF-8
+/// byte) makes the concatenation unambiguous: ("ab","c") and ("a","bc")
+/// score differently.
+fn rendezvous_score(server: &str, name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for chunk in [server.as_bytes(), &[0xFF], name.as_bytes()] {
+        for &b in chunk {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("10.0.0.{i}:7070")).collect()
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_sized() {
+        let config = ClusterConfig::new(fleet(5), 3).unwrap();
+        for ns in ["users", "sessions", "a", ""] {
+            let p1 = config.placement(ns);
+            let p2 = config.placement(ns);
+            assert_eq!(p1, p2, "same config + name must agree");
+            assert_eq!(p1.len(), 3);
+            let mut sorted = p1.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3, "replica set has no duplicates: {p1:?}");
+            assert!(p1.iter().all(|&i| i < 5));
+        }
+    }
+
+    #[test]
+    fn overrides_win_and_are_validated() {
+        let config = ClusterConfig::new(fleet(4), 2).unwrap().with_override("pinned", vec![3, 0]).unwrap();
+        assert_eq!(config.placement("pinned"), vec![3, 0]);
+        assert_eq!(config.placement("pinned-other").len(), 2);
+        // out of range / duplicate / empty overrides are rejected
+        assert!(ClusterConfig::new(fleet(2), 1).unwrap().with_override("x", vec![2]).is_err());
+        assert!(ClusterConfig::new(fleet(2), 1).unwrap().with_override("x", vec![0, 0]).is_err());
+        assert!(ClusterConfig::new(fleet(2), 1).unwrap().with_override("x", vec![]).is_err());
+    }
+
+    #[test]
+    fn bad_topologies_are_rejected() {
+        assert!(matches!(ClusterConfig::new(vec![], 1), Err(GbfError::InvalidConfig(_))));
+        assert!(ClusterConfig::new(fleet(2), 0).is_err());
+        assert!(ClusterConfig::new(fleet(2), 3).is_err());
+        assert!(ClusterConfig::new(vec!["a:1".into(), "a:1".into()], 1).is_err());
+        assert!(ClusterConfig::new(vec!["".into()], 1).is_err());
+    }
+
+    #[test]
+    fn removing_a_server_only_moves_its_own_namespaces() {
+        // the rendezvous property: shrink the fleet by one server and
+        // every namespace that was NOT placed on it keeps its exact
+        // replica set (compared by address, since indices shift)
+        let big = ClusterConfig::new(fleet(5), 2).unwrap();
+        let small = ClusterConfig::new(fleet(4), 2).unwrap(); // drops 10.0.0.4
+        let by_addr = |config: &ClusterConfig, ns: &str| -> Vec<String> {
+            config.placement(ns).into_iter().map(|i| config.servers[i].clone()).collect()
+        };
+        let mut untouched = 0;
+        for i in 0..200 {
+            let ns = format!("ns-{i}");
+            let before = by_addr(&big, &ns);
+            if before.iter().any(|addr| addr == "10.0.0.4:7070") {
+                continue; // this namespace legitimately moves
+            }
+            assert_eq!(before, by_addr(&small, &ns), "{ns} moved without losing a replica");
+            untouched += 1;
+        }
+        assert!(untouched > 50, "rendezvous should leave most namespaces alone ({untouched}/200)");
+    }
+
+    #[test]
+    fn load_spreads_across_the_fleet() {
+        let config = ClusterConfig::new(fleet(3), 1).unwrap();
+        let mut counts = [0usize; 3];
+        for i in 0..300 {
+            counts[config.placement(&format!("ns-{i}"))[0]] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c >= 40, "server {i} got {c}/300 namespaces — hash is badly skewed: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn json_round_trip_preserves_everything() {
+        let config = ClusterConfig {
+            servers: fleet(3),
+            replicas: 2,
+            overrides: BTreeMap::from([("pinned".to_string(), vec![2, 1])]),
+            sync_dir: "/tmp/gbf-sync".to_string(),
+            heal_interval_ms: 500,
+        };
+        config.validate().unwrap();
+        let text = config.to_json();
+        let back = ClusterConfig::from_json(&text).unwrap();
+        assert_eq!(config, back);
+        // and the re-serialization is stable (BTreeMap ordering)
+        assert_eq!(text, back.to_json());
+    }
+
+    #[test]
+    fn from_json_rejects_invalid_topologies_and_garbage() {
+        assert!(matches!(ClusterConfig::from_json("not json"), Err(GbfError::InvalidConfig(_))));
+        assert!(ClusterConfig::from_json("{}").is_err());
+        // well-formed JSON, incoherent topology: replicas > fleet
+        let text = r#"{"servers":["a:1"],"replicas":2,"overrides":{},"sync_dir":"","heal_interval_ms":0}"#;
+        assert!(ClusterConfig::from_json(text).is_err());
+    }
+
+    #[test]
+    fn separator_disambiguates_concatenation() {
+        assert_ne!(rendezvous_score("ab", "c"), rendezvous_score("a", "bc"));
+    }
+}

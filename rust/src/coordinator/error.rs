@@ -34,6 +34,11 @@ pub enum GbfError {
     /// Snapshot unreadable: missing or truncated files, an unparseable
     /// manifest, or an I/O failure while writing/reading snapshot state.
     SnapshotCorrupt(String),
+    /// Cluster mode: every replica that hosts the namespace is unreachable
+    /// (`replicas` is the replication factor that was tried). Individual
+    /// replica failures degrade to the next replica; this fires only when
+    /// the whole replica set is down.
+    NoQuorum { name: String, replicas: usize },
 }
 
 impl GbfError {
@@ -41,7 +46,7 @@ impl GbfError {
     pub fn filter_name(&self) -> Option<&str> {
         match self {
             GbfError::NoSuchFilter(n) | GbfError::FilterExists(n) => Some(n),
-            GbfError::Overloaded { name, .. } => Some(name),
+            GbfError::Overloaded { name, .. } | GbfError::NoQuorum { name, .. } => Some(name),
             GbfError::InvalidConfig(_)
             | GbfError::Backend(_)
             | GbfError::SnapshotVersion { .. }
@@ -73,6 +78,9 @@ impl fmt::Display for GbfError {
                 )
             }
             GbfError::SnapshotCorrupt(msg) => write!(f, "snapshot unreadable: {msg}"),
+            GbfError::NoQuorum { name, replicas } => {
+                write!(f, "namespace {name:?} has no live replica (all {replicas} replica(s) unreachable)")
+            }
         }
     }
 }
@@ -110,6 +118,13 @@ mod tests {
         assert!(c.to_string().contains("0x"), "hex evidence: {c}");
         assert!(GbfError::SnapshotGeometry("words".into()).to_string().contains("geometry"));
         assert!(GbfError::SnapshotCorrupt("gone".into()).to_string().contains("gone"));
+    }
+
+    #[test]
+    fn no_quorum_names_the_namespace_and_factor() {
+        let e = GbfError::NoQuorum { name: "ha".into(), replicas: 2 };
+        assert!(e.to_string().contains("ha") && e.to_string().contains('2'), "{e}");
+        assert_eq!(e.filter_name(), Some("ha"));
     }
 
     #[test]

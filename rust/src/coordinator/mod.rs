@@ -29,7 +29,10 @@
 //! [`wire::RemoteFilterService`] / [`wire::RemoteFilterHandle`] speaking
 //! the framed codec from the client side, with identical typed errors
 //! and the same `Ticket` receipts). Code written against `dyn FilterApi`
-//! runs unchanged on either transport.
+//! runs unchanged on either transport — or on a whole fleet: [`cluster`]
+//! implements the same pair over N wire servers with deterministic
+//! placement, R-way replication and read failover, and can itself sit
+//! behind a wire listener (gateway mode) for unmodified clients.
 //!
 //! Underneath, each namespace is the same vLLM-router-style engine stack:
 //!
@@ -57,6 +60,7 @@
 pub mod api;
 pub mod backend;
 pub(crate) mod batcher;
+pub mod cluster;
 pub mod error;
 pub mod metrics;
 pub mod persist;
@@ -69,6 +73,7 @@ pub mod wire;
 
 pub use api::{FilterApi, FilterDataPlane};
 pub use backend::{FilterBackend, NativeBackend, PjrtBackend};
+pub use cluster::{ClusterConfig, ClusterFilterService};
 pub use batcher::BatchPolicy;
 pub use error::GbfError;
 pub use metrics::{Metrics, MetricsSnapshot, ShardStats};
@@ -77,4 +82,4 @@ pub use registry::ShardedRegistry;
 pub use router::Router;
 pub use service::{FilterHandle, FilterService, FilterSpec, NamespaceStats};
 pub use ticket::Ticket;
-pub use wire::{RemoteFilterHandle, RemoteFilterService, WireServer};
+pub use wire::{RemoteFilterHandle, RemoteFilterService, RetryPolicy, WireCatalog, WireServer};

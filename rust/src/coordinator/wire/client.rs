@@ -15,23 +15,32 @@
 //!   in-process ticket.
 //!
 //! If the connection dies, every outstanding slot resolves to
-//! [`GbfError::Backend`] naming the cause, and later calls fail fast.
+//! [`GbfError::Backend`] naming the cause — and the *next* call re-dials:
+//! the client owns a reconnect state machine (capped exponential backoff
+//! with jitter, see [`RetryPolicy`]) instead of staying poisoned forever.
+//! Idempotent operations (query / stats / list / ping) additionally carry
+//! a bounded retry budget across reconnects; non-idempotent ones
+//! (create / drop / add / snapshot / restore) are attempted exactly once
+//! per call, though each call starts by re-dialing a dead connection.
+//! Every failure path is a typed error, never a hang: while the backoff
+//! window is open, calls fail fast with the recorded reason.
 
 use std::collections::HashMap;
+use std::hash::BuildHasher;
 use std::io::BufReader;
-use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::net::{Shutdown, SocketAddr, TcpStream, ToSocketAddrs};
 use std::path::Path;
 use std::sync::{PoisonError, Weak};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::coordinator::error::GbfError;
 use crate::coordinator::service::{FilterSpec, NamespaceStats};
 use crate::coordinator::ticket::{finish_all, finish_bits, finish_one, finish_unit, Completion, Ticket};
 use crate::filter::params::FilterConfig;
 use crate::filter::AnswerBits;
-use crate::infra::sync::atomic::{AtomicU64, Ordering};
+use crate::infra::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::infra::sync::{lock_unpoisoned, thread, Arc, Condvar, Mutex};
 
 use super::codec::{
@@ -126,6 +135,191 @@ impl Completion for WireCompletion {
     }
 }
 
+/// The in-flight attempt a [`RetryRead`] is currently waiting on,
+/// guarded by `wire.client.retry`. Holding the `conn` Arc keeps that
+/// connection's reader thread alive while the attempt is outstanding
+/// (mirroring [`WireCompletion::_client`]).
+struct ReadAttempt {
+    conn: Arc<ClientInner>,
+    slot: Arc<Slot>,
+    budget: u32,
+}
+
+/// Completion for idempotent reads (query): if the slot resolves to a
+/// connection error and budget remains, the read is re-encoded and
+/// resubmitted on a freshly acquired connection — transparently to the
+/// ticket holder. Writes never pass through here: replaying an add after
+/// an ambiguous failure could double-apply it (harmless for plain Bloom
+/// bits, wrong for counting variants), so adds surface the typed error.
+struct RetryRead {
+    client: RemoteFilterService,
+    name: String,
+    instance: u64,
+    keys: Vec<u64>,
+    attempt: Mutex<ReadAttempt>,
+}
+
+impl RetryRead {
+    /// Snapshot the current slot (tiny guard scope: clone, release —
+    /// never wait while holding `wire.client.retry`).
+    fn current_slot(&self) -> Arc<Slot> {
+        let g = lock_unpoisoned(&self.attempt);
+        Arc::clone(&g.slot)
+    }
+
+    /// Consume one retry from the budget; false when exhausted.
+    fn consume_budget(&self) -> bool {
+        let mut g = lock_unpoisoned(&self.attempt);
+        if g.budget == 0 {
+            return false;
+        }
+        g.budget -= 1;
+        true
+    }
+
+    fn install(&self, conn: Arc<ClientInner>, slot: Arc<Slot>) {
+        let mut g = lock_unpoisoned(&self.attempt);
+        g.conn = conn;
+        g.slot = slot;
+    }
+
+    /// Re-encode and resubmit the read on a fresh connection (no guard
+    /// held: acquire may dial, send does socket I/O).
+    fn resubmit(&self) -> Result<(Arc<ClientInner>, Arc<Slot>), GbfError> {
+        let conn = self.client.acquire()?;
+        let id = fresh_id(&conn);
+        let payload = encode_data_request(id, false, &self.name, self.instance, &self.keys);
+        match send_payload(&conn, id, payload) {
+            Ok(slot) => Ok((conn, slot)),
+            Err(e) => {
+                if is_connection_error(&e) {
+                    self.client.evict(&conn);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Shared post-wait step: retry a connection error if budget remains.
+    /// `Ok(answer_or_app_result)` ends the wait; `Err(())` means a fresh
+    /// attempt was installed and the caller should wait again.
+    fn settle(&self, resolved: Result<AnswerBits, GbfError>) -> Result<Result<AnswerBits, GbfError>, ()> {
+        match resolved {
+            Err(e) if is_connection_error(&e) && self.consume_budget() => match self.resubmit() {
+                Ok((conn, slot)) => {
+                    self.install(conn, slot);
+                    Err(())
+                }
+                Err(e2) => Ok(Err(e2)),
+            },
+            other => Ok(other),
+        }
+    }
+}
+
+impl Completion for RetryRead {
+    fn is_ready(&self) -> bool {
+        let slot = self.current_slot();
+        slot.is_ready()
+    }
+
+    fn wait(&self) -> Result<AnswerBits, GbfError> {
+        loop {
+            let slot = self.current_slot();
+            let resolved = interpret(slot.wait());
+            match self.settle(resolved) {
+                Ok(result) => return result,
+                Err(()) => {}
+            }
+        }
+    }
+
+    fn wait_timeout(&self, timeout: Duration) -> Option<Result<AnswerBits, GbfError>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let slot = self.current_slot();
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let resp = slot.wait_timeout(remaining)?;
+            let resolved = interpret(resp);
+            match self.settle(resolved) {
+                Ok(result) => return Some(result),
+                Err(()) => {}
+            }
+        }
+    }
+}
+
+/// Reconnect / retry tuning for one [`RemoteFilterService`].
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Extra attempts (beyond the first) for idempotent operations —
+    /// query / stats / list / ping — when the failure is a connection
+    /// error. Non-idempotent operations never consume this budget.
+    pub retries: u32,
+    /// First re-dial cooldown after a dial failure; doubles per
+    /// consecutive failure.
+    pub base_backoff: Duration,
+    /// Cooldown ceiling.
+    pub max_backoff: Duration,
+    /// Per-address TCP connect timeout on every dial.
+    pub dial_timeout: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            retries: 2,
+            base_backoff: Duration::from_millis(25),
+            max_backoff: Duration::from_secs(1),
+            dial_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Is `e` a transport failure (dead connection, failed dial, open backoff
+/// window) — as opposed to an application answer like `NoSuchFilter` that
+/// happened to arrive over the wire? Retry/failover logic keys on this:
+/// only transport failures are worth another attempt or another replica.
+pub(crate) fn is_connection_error(e: &GbfError) -> bool {
+    match e {
+        GbfError::Backend(msg) => msg.starts_with("wire client:") || msg.starts_with("wire send failed"),
+        _ => false,
+    }
+}
+
+/// Cooldown before the next dial attempt after `streak` consecutive dial
+/// failures: capped exponential growth with ±25% jitter so a herd of
+/// clients (or cluster legs) doesn't re-dial a recovering server in
+/// lockstep. Jitter comes from `RandomState` (per-instance random keys) —
+/// enough entropy for desynchronization without a rand dependency.
+fn backoff_delay(policy: &RetryPolicy, streak: u32) -> Duration {
+    let exp = streak.saturating_sub(1).min(16);
+    let capped = policy.base_backoff.saturating_mul(1u32 << exp).min(policy.max_backoff);
+    let jitter = std::collections::hash_map::RandomState::new().hash_one(streak) % 51; // 0..=50
+    let scaled = (capped.as_nanos() as u64 / 100).saturating_mul(75 + jitter); // 75%..125%
+    Duration::from_nanos(scaled).min(policy.max_backoff)
+}
+
+/// Reconnect bookkeeping, guarded by `wire.client.backoff`.
+struct RedialState {
+    fail_streak: u32,
+    cooldown_until: Option<Instant>,
+}
+
+/// State shared by every clone of one [`RemoteFilterService`]: the
+/// resolved server address(es), the retry policy, and the *current*
+/// connection (if any). Connections are disposable — when one dies the
+/// next call evicts it and dials a fresh one — so everything per-
+/// connection lives in [`ClientInner`] behind `conn`.
+struct ClientShared {
+    addrs: Vec<SocketAddr>,
+    /// The pre-resolution address text, for error messages.
+    label: String,
+    policy: RetryPolicy,
+    conn: Mutex<Option<Arc<ClientInner>>>,
+    redial: Mutex<RedialState>,
+}
+
 struct ClientInner {
     writer: Mutex<TcpStream>,
     pending: Mutex<HashMap<u64, Arc<Slot>>>,
@@ -133,6 +327,10 @@ struct ClientInner {
     /// Set by the reader thread when the connection dies; later calls
     /// fail fast with the recorded reason.
     dead: Mutex<Option<String>>,
+    /// Mirror of `dead.is_some()` readable without the mutex, so the
+    /// acquire fast path (and the install-race check in `redial`) never
+    /// nests a `dead` acquisition under the `conn` guard.
+    dead_flag: AtomicBool,
 }
 
 impl Drop for ClientInner {
@@ -144,90 +342,261 @@ impl Drop for ClientInner {
     }
 }
 
-/// Clonable remote catalog client (see module docs). All clones share one
-/// connection and one reader thread; the connection closes when the last
-/// clone is dropped.
+/// Clonable remote catalog client (see module docs). All clones share the
+/// current connection and its reader thread; a dead connection is evicted
+/// and re-dialed (under backoff) by whichever clone calls next. The
+/// connection closes when the last clone — and the last outstanding
+/// ticket — is dropped.
 #[derive(Clone)]
 pub struct RemoteFilterService {
-    inner: Arc<ClientInner>,
+    shared: Arc<ClientShared>,
 }
 
-impl RemoteFilterService {
-    /// Connect to a [`super::WireServer`] at `addr` (e.g.
-    /// `"127.0.0.1:4070"` or a `SocketAddr`).
-    pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<RemoteFilterService> {
-        let stream = TcpStream::connect(&addr).with_context(|| format!("connecting wire client to {addr:?}"))?;
+/// Fresh request id on `conn`.
+fn fresh_id(conn: &ClientInner) -> u64 {
+    // Ordering::Relaxed — request ids only need to be unique; the
+    // writer mutex (and ultimately the TCP stream) orders the frames.
+    conn.next_id.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Dial the first reachable address and start its reader thread.
+fn dial(shared: &ClientShared) -> Result<Arc<ClientInner>, GbfError> {
+    let mut last_err = String::from("no addresses resolved");
+    for addr in &shared.addrs {
+        let stream = match TcpStream::connect_timeout(addr, shared.policy.dial_timeout) {
+            Ok(s) => s,
+            Err(e) => {
+                last_err = format!("{addr}: {e}");
+                continue;
+            }
+        };
         stream.set_nodelay(true).ok();
-        let reader_stream = stream.try_clone().context("cloning client stream")?;
+        let reader_stream = match stream.try_clone() {
+            Ok(s) => s,
+            Err(e) => {
+                last_err = format!("{addr}: cloning stream: {e}");
+                continue;
+            }
+        };
         let inner = Arc::new(ClientInner {
             writer: Mutex::new_class("wire.client.writer", stream),
             pending: Mutex::new_class("wire.client.pending", HashMap::new()),
             next_id: AtomicU64::new(1),
             dead: Mutex::new_class("wire.client.dead", None),
+            dead_flag: AtomicBool::new(false),
         });
         let weak = Arc::downgrade(&inner);
-        thread::Builder::new()
+        let spawned = thread::Builder::new()
             .name("gbf-wire-reader".into())
-            .spawn(move || reader_loop(reader_stream, weak))?;
-        Ok(RemoteFilterService { inner })
+            .spawn(move || reader_loop(reader_stream, weak));
+        match spawned {
+            Ok(_) => return Ok(inner),
+            Err(e) => last_err = format!("{addr}: spawning reader: {e}"),
+        }
     }
+    Err(GbfError::Backend(format!("wire client: dial {} failed: {last_err}", shared.label)))
+}
 
-    fn next_id(&self) -> u64 {
-        // Ordering::Relaxed — request ids only need to be unique; the
-        // writer mutex (and ultimately the TCP stream) orders the frames.
-        self.inner.next_id.fetch_add(1, Ordering::Relaxed)
+/// Ship an already-encoded payload on `conn` (the data plane encodes
+/// straight from borrowed key slices); the returned slot resolves when
+/// the reply for `id` lands.
+fn send_payload(conn: &Arc<ClientInner>, id: u64, payload: Vec<u8>) -> Result<Arc<Slot>, GbfError> {
+    if let Some(reason) = lock_unpoisoned(&conn.dead).clone() {
+        return Err(GbfError::Backend(format!("wire client: {reason}")));
     }
-
-    /// Send one request; the returned slot resolves when the reply lands.
-    fn request(&self, req: &Request) -> Result<Arc<Slot>, GbfError> {
-        let id = self.next_id();
-        self.send_payload(id, encode_request(id, req))
+    if payload.len() > MAX_FRAME {
+        // fail just this call, before poisoning the connection with a
+        // frame the server will reject
+        return Err(GbfError::Backend(format!(
+            "request of {} bytes exceeds the frame bound ({MAX_FRAME}); split the bulk",
+            payload.len()
+        )));
     }
-
-    /// Ship an already-encoded payload (the data plane encodes straight
-    /// from borrowed key slices); the returned slot resolves when the
-    /// reply for `id` lands.
-    fn send_payload(&self, id: u64, payload: Vec<u8>) -> Result<Arc<Slot>, GbfError> {
-        if let Some(reason) = lock_unpoisoned(&self.inner.dead).clone() {
+    let slot = Slot::new();
+    lock_unpoisoned(&conn.pending).insert(id, Arc::clone(&slot));
+    let write_result = {
+        let mut w = lock_unpoisoned(&conn.writer);
+        write_frame(&mut *w, &payload)
+    };
+    if let Err(e) = write_result {
+        lock_unpoisoned(&conn.pending).remove(&id);
+        return Err(GbfError::Backend(format!("wire send failed: {e}")));
+    }
+    // Close the race with a dying connection: if the reader declared
+    // the connection dead around our insert/write, it may already have
+    // drained `pending` — a slot still in the map now would never be
+    // completed, so take it back out and fail fast instead.
+    if let Some(reason) = lock_unpoisoned(&conn.dead).clone() {
+        if lock_unpoisoned(&conn.pending).remove(&id).is_some() {
             return Err(GbfError::Backend(format!("wire client: {reason}")));
         }
-        if payload.len() > MAX_FRAME {
-            // fail just this call, before poisoning the connection with a
-            // frame the server will reject
-            return Err(GbfError::Backend(format!(
-                "request of {} bytes exceeds the frame bound ({MAX_FRAME}); split the bulk",
-                payload.len()
-            )));
-        }
-        let slot = Slot::new();
-        lock_unpoisoned(&self.inner.pending).insert(id, Arc::clone(&slot));
-        let write_result = {
-            let mut w = lock_unpoisoned(&self.inner.writer);
-            write_frame(&mut *w, &payload)
-        };
-        if let Err(e) = write_result {
-            lock_unpoisoned(&self.inner.pending).remove(&id);
-            return Err(GbfError::Backend(format!("wire send failed: {e}")));
-        }
-        // Close the race with a dying connection: if the reader declared
-        // the connection dead around our insert/write, it may already have
-        // drained `pending` — a slot still in the map now would never be
-        // completed, so take it back out and fail fast instead.
-        if let Some(reason) = lock_unpoisoned(&self.inner.dead).clone() {
-            if lock_unpoisoned(&self.inner.pending).remove(&id).is_some() {
-                return Err(GbfError::Backend(format!("wire client: {reason}")));
-            }
-        }
-        Ok(slot)
+    }
+    Ok(slot)
+}
+
+impl RemoteFilterService {
+    /// Connect to a [`super::WireServer`] at `addr` (e.g.
+    /// `"127.0.0.1:4070"` or a `SocketAddr`). Dials eagerly: an
+    /// unreachable server is an error here, not on first use.
+    pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<RemoteFilterService> {
+        let svc = RemoteFilterService::connect_lazy(addr)?;
+        svc.acquire().map_err(anyhow::Error::new)?;
+        Ok(svc)
     }
 
-    /// Blocking admin round-trip.
-    fn admin(&self, req: &Request) -> Result<Response, GbfError> {
-        let slot = self.request(req)?;
-        match slot.wait() {
-            Response::Err(e) => Err(e),
-            resp => Ok(resp),
+    /// Like [`connect`](RemoteFilterService::connect), but without the
+    /// eager dial: the first operation dials (and a down server surfaces
+    /// there, as a typed error). The cluster layer uses this so one dead
+    /// fleet member doesn't fail front-end construction.
+    pub fn connect_lazy(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<RemoteFilterService> {
+        RemoteFilterService::connect_lazy_with(addr, RetryPolicy::default())
+    }
+
+    /// [`connect_lazy`](RemoteFilterService::connect_lazy) with an
+    /// explicit [`RetryPolicy`].
+    pub fn connect_lazy_with(
+        addr: impl ToSocketAddrs + std::fmt::Debug,
+        policy: RetryPolicy,
+    ) -> Result<RemoteFilterService> {
+        let label = format!("{addr:?}");
+        let addrs: Vec<SocketAddr> = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving wire server address {label}"))?
+            .collect();
+        ensure!(!addrs.is_empty(), "wire server address {label} resolved to no addresses");
+        Ok(RemoteFilterService {
+            shared: Arc::new(ClientShared {
+                addrs,
+                label,
+                policy,
+                conn: Mutex::new_class("wire.client.conn", None),
+                redial: Mutex::new_class("wire.client.backoff", RedialState { fail_streak: 0, cooldown_until: None }),
+            }),
+        })
+    }
+
+    /// The live connection, re-dialing a dead (or not-yet-dialed) one.
+    /// Lock discipline: the `conn` guard scope only clones the `Arc`; the
+    /// dead check reads the atomic mirror and the dial itself runs with
+    /// no guard held.
+    fn acquire(&self) -> Result<Arc<ClientInner>, GbfError> {
+        let cached = { lock_unpoisoned(&self.shared.conn).clone() };
+        if let Some(conn) = cached {
+            // Ordering::Relaxed — the flag is advisory: the reader thread's
+            // `dead` mutex write is the synchronization point, and a stale
+            // read only costs one send that fails with the typed reason.
+            if !conn.dead_flag.load(Ordering::Relaxed) {
+                return Ok(conn);
+            }
+            self.evict(&conn);
         }
+        self.redial()
+    }
+
+    /// Uninstall `dead` if it is still the current connection (a
+    /// concurrent caller may already have replaced it).
+    fn evict(&self, dead: &Arc<ClientInner>) {
+        let mut cur = lock_unpoisoned(&self.shared.conn);
+        let is_current = match cur.as_ref() {
+            Some(c) => Arc::ptr_eq(c, dead),
+            None => false,
+        };
+        if is_current {
+            *cur = None;
+        }
+    }
+
+    /// Dial a fresh connection under the backoff window: inside the
+    /// cooldown this fails fast with a typed error (never a hang); a
+    /// successful dial resets the streak and installs the connection —
+    /// unless a concurrent redial already installed a live one, which
+    /// wins (ours is dropped, closing its socket).
+    fn redial(&self) -> Result<Arc<ClientInner>, GbfError> {
+        let now = Instant::now();
+        {
+            let g = lock_unpoisoned(&self.shared.redial);
+            if let Some(until) = g.cooldown_until {
+                if now < until {
+                    return Err(GbfError::Backend(format!(
+                        "wire client: reconnect to {} backing off after {} consecutive dial failure(s); retry in {}ms",
+                        self.shared.label,
+                        g.fail_streak,
+                        until.saturating_duration_since(now).as_millis()
+                    )));
+                }
+            }
+        }
+        match dial(&self.shared) {
+            Ok(fresh) => {
+                {
+                    let mut g = lock_unpoisoned(&self.shared.redial);
+                    g.fail_streak = 0;
+                    g.cooldown_until = None;
+                }
+                let mut cur = lock_unpoisoned(&self.shared.conn);
+                if let Some(existing) = cur.as_ref() {
+                    // Ordering::Relaxed — advisory, see `acquire`.
+                    if !existing.dead_flag.load(Ordering::Relaxed) {
+                        return Ok(Arc::clone(existing));
+                    }
+                }
+                *cur = Some(Arc::clone(&fresh));
+                Ok(fresh)
+            }
+            Err(e) => {
+                let streak = {
+                    let mut g = lock_unpoisoned(&self.shared.redial);
+                    g.fail_streak = g.fail_streak.saturating_add(1);
+                    g.fail_streak
+                };
+                let delay = backoff_delay(&self.shared.policy, streak);
+                {
+                    let mut g = lock_unpoisoned(&self.shared.redial);
+                    g.cooldown_until = Some(now + delay);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Blocking admin round-trip on the current connection, exactly once.
+    fn admin(&self, req: &Request) -> Result<Response, GbfError> {
+        self.admin_with_budget(req, 0)
+    }
+
+    /// Blocking admin round-trip for idempotent requests: connection
+    /// errors are retried (with a fresh `acquire`, hence a re-dial) up to
+    /// the policy's budget; application errors return immediately.
+    fn admin_idempotent(&self, req: &Request) -> Result<Response, GbfError> {
+        self.admin_with_budget(req, self.shared.policy.retries)
+    }
+
+    fn admin_with_budget(&self, req: &Request, budget: u32) -> Result<Response, GbfError> {
+        let mut attempt = 0u32;
+        loop {
+            match self.admin_once(req) {
+                Err(e) if attempt < budget && is_connection_error(&e) => attempt += 1,
+                other => return other,
+            }
+        }
+    }
+
+    fn admin_once(&self, req: &Request) -> Result<Response, GbfError> {
+        let conn = self.acquire()?;
+        let id = fresh_id(&conn);
+        let result = match send_payload(&conn, id, encode_request(id, req)) {
+            Ok(slot) => match slot.wait() {
+                Response::Err(e) => Err(e),
+                resp => Ok(resp),
+            },
+            Err(e) => Err(e),
+        };
+        if let Err(e) = &result {
+            if is_connection_error(e) {
+                self.evict(&conn);
+            }
+        }
+        result
     }
 
     /// Create a namespace on the remote catalog; returns a handle bound
@@ -263,16 +632,39 @@ impl RemoteFilterService {
     }
 
     pub fn list_filters(&self) -> Result<Vec<String>, GbfError> {
-        match self.admin(&Request::List)? {
+        match self.admin_idempotent(&Request::List)? {
             Response::Names(names) => Ok(names),
             other => Err(protocol_error("list", &other)),
         }
     }
 
     pub fn stats(&self, name: &str) -> Result<NamespaceStats, GbfError> {
-        match self.admin(&Request::Stats { name: name.to_string() })? {
+        match self.admin_idempotent(&Request::Stats { name: name.to_string() })? {
             Response::Stats(stats) => Ok(*stats),
             other => Err(protocol_error("stats", &other)),
+        }
+    }
+
+    /// Liveness probe: one `Ping` round-trip (idempotent, retried under
+    /// the policy budget like the other reads).
+    pub fn ping(&self) -> Result<(), GbfError> {
+        match self.admin_idempotent(&Request::Ping)? {
+            Response::Ok => Ok(()),
+            other => Err(protocol_error("ping", &other)),
+        }
+    }
+
+    /// Recovery probe: clears any open reconnect cooldown, then pings
+    /// exactly once. The cluster janitor paces recovery probes itself, so
+    /// the client's backoff window must not veto a scheduled probe.
+    pub fn ping_now(&self) -> Result<(), GbfError> {
+        {
+            let mut g = lock_unpoisoned(&self.shared.redial);
+            g.cooldown_until = None;
+        }
+        match self.admin(&Request::Ping)? {
+            Response::Ok => Ok(()),
+            other => Err(protocol_error("ping", &other)),
         }
     }
 
@@ -337,9 +729,14 @@ fn reader_loop(stream: TcpStream, inner: Weak<ClientInner>) {
             Err(e) => break format!("read failed: {e:#}"),
         }
     };
-    // connection over: fail everything in flight, poison future calls
+    // connection over: fail everything in flight, poison future calls on
+    // THIS connection (the service re-dials a fresh one)
     let Some(inner) = inner.upgrade() else { return };
     *lock_unpoisoned(&inner.dead) = Some(reason.clone());
+    // Ordering::Relaxed — advisory mirror of the mutex write above (the
+    // mutex is the synchronization point); readers that see it early just
+    // evict/re-dial a moment sooner.
+    inner.dead_flag.store(true, Ordering::Relaxed);
     let drained: Vec<Arc<Slot>> = lock_unpoisoned(&inner.pending).drain().map(|(_, s)| s).collect();
     for slot in drained {
         slot.complete(Response::Err(GbfError::Backend(format!("wire client: {reason}"))));
@@ -364,6 +761,13 @@ impl RemoteFilterHandle {
         &self.name
     }
 
+    /// The namespace instance this handle is bound to. Instance ids are
+    /// per-server counters: the same namespace on two replicas has two
+    /// unrelated ids, which is why the cluster layer tracks them per leg.
+    pub fn instance(&self) -> u64 {
+        self.instance
+    }
+
     /// Remote stats for this handle's bound namespace *instance*. Unlike
     /// the in-process handle (which pins the state and can read
     /// post-mortem stats of a dropped namespace), the server drops state
@@ -378,14 +782,55 @@ impl RemoteFilterHandle {
         Ok(stats)
     }
 
-    /// Data-plane submit: encodes straight from the borrowed key slice
-    /// (no intermediate owned copy) and hands back a wire-backed ticket.
-    fn submit<T>(&self, is_add: bool, keys: &[u64], finish: fn(AnswerBits) -> T) -> Ticket<T> {
-        let id = self.client.next_id();
+    /// First shipment of a data-plane request: acquire (re-dialing a dead
+    /// connection), encode straight from the borrowed key slice, send.
+    fn start(&self, is_add: bool, keys: &[u64]) -> Result<(Arc<ClientInner>, Arc<Slot>), GbfError> {
+        let conn = self.client.acquire()?;
+        let id = fresh_id(&conn);
         let payload = encode_data_request(id, is_add, &self.name, self.instance, keys);
-        match self.client.send_payload(id, payload) {
-            Ok(slot) => {
-                let completion = WireCompletion { slot, _client: Arc::clone(&self.client.inner) };
+        match send_payload(&conn, id, payload) {
+            Ok(slot) => Ok((conn, slot)),
+            Err(e) => {
+                if is_connection_error(&e) {
+                    self.client.evict(&conn);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Data-plane submit (no intermediate owned key copy on the send
+    /// path) handing back a wire-backed ticket. Queries ride the
+    /// [`RetryRead`] completion — idempotent, so a connection error is
+    /// retried across a reconnect within the policy budget (at send time
+    /// here, at resolution time in the completion). Adds get exactly one
+    /// shipment and a plain [`WireCompletion`].
+    fn submit<T>(&self, is_add: bool, keys: &[u64], finish: fn(AnswerBits) -> T) -> Ticket<T> {
+        if is_add {
+            return match self.start(true, keys) {
+                Ok((conn, slot)) => {
+                    Ticket::from_completion(Arc::new(WireCompletion { slot, _client: conn }), finish)
+                }
+                Err(e) => Ticket::failed(e, finish),
+            };
+        }
+        let budget = self.client.shared.policy.retries;
+        let mut attempt = 0u32;
+        let started = loop {
+            match self.start(false, keys) {
+                Err(e) if attempt < budget && is_connection_error(&e) => attempt += 1,
+                other => break other,
+            }
+        };
+        match started {
+            Ok((conn, slot)) => {
+                let completion = RetryRead {
+                    client: self.client.clone(),
+                    name: self.name.clone(),
+                    instance: self.instance,
+                    keys: keys.to_vec(),
+                    attempt: Mutex::new_class("wire.client.retry", ReadAttempt { conn, slot, budget }),
+                };
                 Ticket::from_completion(Arc::new(completion), finish)
             }
             Err(e) => Ticket::failed(e, finish),
@@ -532,5 +977,47 @@ mod tests {
         slot.complete(Response::Hits(AnswerBits::from_bools(&[true]))); // second completion ignored
         assert!(slot.is_ready());
         assert!(matches!(slot.wait(), Response::Ok));
+    }
+
+    #[test]
+    fn connection_errors_are_classified() {
+        assert!(is_connection_error(&GbfError::Backend("wire client: connection closed by server".into())));
+        assert!(is_connection_error(&GbfError::Backend("wire send failed: broken pipe".into())));
+        assert!(is_connection_error(&GbfError::Backend("wire client: dial \"x\" failed: refused".into())));
+        // application answers that happened to cross the wire are NOT
+        // retryable: another attempt would get the same answer
+        assert!(!is_connection_error(&GbfError::NoSuchFilter("x".into())));
+        assert!(!is_connection_error(&GbfError::Overloaded { name: "x".into(), depth: 9 }));
+        assert!(!is_connection_error(&GbfError::Backend("request of 999 bytes exceeds the frame bound".into())));
+        assert!(!is_connection_error(&GbfError::NoQuorum { name: "x".into(), replicas: 2 }));
+    }
+
+    #[test]
+    fn backoff_grows_and_stays_bounded() {
+        let policy = RetryPolicy::default();
+        for streak in 1..20u32 {
+            let d = backoff_delay(&policy, streak);
+            let raw = policy.base_backoff.saturating_mul(1u32 << streak.saturating_sub(1).min(16));
+            let nominal = raw.min(policy.max_backoff);
+            // jitter keeps the delay in [75%, 125%] of nominal, capped
+            assert!(d <= policy.max_backoff, "streak {streak}: {d:?} over cap");
+            assert!(d >= nominal.mul_f64(0.74), "streak {streak}: {d:?} under jitter floor of {nominal:?}");
+        }
+    }
+
+    #[test]
+    fn lazy_client_fails_fast_with_typed_errors_and_backoff() {
+        // nothing listens on port 1; the first call dials and fails, the
+        // second lands inside the cooldown window — both are typed
+        // connection errors, neither hangs
+        let svc = RemoteFilterService::connect_lazy("127.0.0.1:1").unwrap();
+        let first = svc.list_filters().unwrap_err();
+        assert!(is_connection_error(&first), "{first}");
+        let second = svc.list_filters().unwrap_err();
+        assert!(is_connection_error(&second), "{second}");
+        // the retry budget must not turn a down server into a hang: the
+        // data plane fails its ticket with the same typed error
+        let handle_err = svc.handle("ns").unwrap_err();
+        assert!(is_connection_error(&handle_err), "{handle_err}");
     }
 }

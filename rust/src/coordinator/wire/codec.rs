@@ -63,6 +63,10 @@ pub enum Request {
     /// reply is `Created` (with the fresh instance id) so restore binds
     /// a handle as atomically as create does.
     Restore { name: String, dir: String },
+    /// Liveness probe: the server answers `Ok` without touching the
+    /// catalog. The cluster health tracker uses it to detect recovery of
+    /// a down server without side effects.
+    Ping,
 }
 
 /// Every way the server answers.
@@ -96,6 +100,7 @@ const REQ_ADD_BULK: u8 = 0x05;
 const REQ_QUERY_BULK: u8 = 0x06;
 const REQ_SNAPSHOT: u8 = 0x07;
 const REQ_RESTORE: u8 = 0x08;
+const REQ_PING: u8 = 0x09;
 
 const RESP_OK: u8 = 0x81;
 const RESP_NAMES: u8 = 0x82;
@@ -113,6 +118,7 @@ const ERR_SNAPSHOT_VERSION: u8 = 5;
 const ERR_SNAPSHOT_GEOMETRY: u8 = 6;
 const ERR_SNAPSHOT_CHECKSUM: u8 = 7;
 const ERR_SNAPSHOT_CORRUPT: u8 = 8;
+const ERR_NO_QUORUM: u8 = 9;
 
 // ---- frame I/O ----
 
@@ -301,6 +307,11 @@ impl Enc {
                 self.u8(ERR_SNAPSHOT_CORRUPT);
                 self.str(msg);
             }
+            GbfError::NoQuorum { name, replicas } => {
+                self.u8(ERR_NO_QUORUM);
+                self.str(name);
+                self.u64(*replicas as u64);
+            }
         }
     }
 }
@@ -476,6 +487,7 @@ impl<'a> Dec<'a> {
                 found: self.u64()?,
             },
             ERR_SNAPSHOT_CORRUPT => GbfError::SnapshotCorrupt(self.str()?),
+            ERR_NO_QUORUM => GbfError::NoQuorum { name: self.str()?, replicas: self.usize()? },
             t => bail!("unknown error tag {t:#04x}"),
         })
     }
@@ -544,6 +556,7 @@ pub fn encode_request(request_id: u64, req: &Request) -> Vec<u8> {
             e.str(dir);
             e
         }
+        Request::Ping => Enc::envelope(request_id, REQ_PING),
     };
     std::mem::take(&mut e.buf)
 }
@@ -573,6 +586,7 @@ pub fn decode_request(payload: &[u8]) -> Result<(u64, Request)> {
         REQ_QUERY_BULK => Request::QueryBulk { name: d.str()?, instance: d.u64()?, keys: d.keys()? },
         REQ_SNAPSHOT => Request::Snapshot { name: d.str()?, dir: d.str()? },
         REQ_RESTORE => Request::Restore { name: d.str()?, dir: d.str()? },
+        REQ_PING => Request::Ping,
         t => bail!("unknown request tag {t:#04x}"),
     };
     d.finish()?;
@@ -678,6 +692,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         assert!(matches!(rt_req(Request::List).1, Request::List));
+        assert!(matches!(rt_req(Request::Ping).1, Request::Ping));
         match rt_req(Request::AddBulk { name: "n".into(), instance: 7, keys: vec![1, u64::MAX, 0] }).1 {
             Request::AddBulk { name, instance, keys } => {
                 assert_eq!(name, "n");
@@ -805,6 +820,7 @@ mod tests {
             GbfError::SnapshotGeometry("shard 1 declares 17 words".into()),
             GbfError::SnapshotChecksum { shard: 5, expected: u64::MAX, found: 0 },
             GbfError::SnapshotCorrupt("MANIFEST.json truncated".into()),
+            GbfError::NoQuorum { name: "ha".into(), replicas: 2 },
         ];
         for e in errors {
             match rt_resp(Response::Err(e.clone())).1 {
@@ -877,6 +893,16 @@ mod tests {
         bad_tag[9] = 0x7F;
         assert!(decode_request(&bad_tag).is_err());
         assert!(decode_response(&encode_request(1, &Request::List)).is_err(), "request tag is not a response");
+    }
+
+    #[test]
+    fn ping_is_body_free_and_rejects_trailing_bytes() {
+        let payload = encode_request(5, &Request::Ping);
+        // envelope only: version + id + tag
+        assert_eq!(payload.len(), 1 + 8 + 1);
+        let mut trailing = payload.clone();
+        trailing.push(0);
+        assert!(decode_request(&trailing).is_err(), "ping with a body is garbage");
     }
 
     #[test]

@@ -23,6 +23,6 @@ pub mod client;
 pub mod codec;
 pub mod server;
 
-pub use client::{RemoteFilterHandle, RemoteFilterService};
+pub use client::{RemoteFilterHandle, RemoteFilterService, RetryPolicy};
 pub use codec::{Request, Response, MAX_FRAME, WIRE_VERSION};
-pub use server::WireServer;
+pub use server::{WireCatalog, WireServer};

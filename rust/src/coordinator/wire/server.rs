@@ -1,4 +1,9 @@
-//! `WireServer` — a `FilterService` behind a `TcpListener`.
+//! `WireServer` — a filter catalog behind a `TcpListener`.
+//!
+//! The gateway serves any [`WireCatalog`]: the in-process
+//! [`FilterService`] (the single-server deployment) or the cluster front
+//! end (`ClusterFilterService`), which makes a whole replicated fleet
+//! look like one server to `gbf client`.
 //!
 //! One accept thread; per connection, one **reader** thread and one
 //! **completer** thread:
@@ -38,8 +43,9 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::api::FilterDataPlane;
 use crate::coordinator::error::GbfError;
-use crate::coordinator::service::FilterService;
+use crate::coordinator::service::{FilterService, FilterSpec, NamespaceStats};
 use crate::coordinator::ticket::Ticket;
 use crate::filter::AnswerBits;
 use crate::infra::sync::atomic::{AtomicBool, Ordering};
@@ -53,6 +59,73 @@ use super::codec::{decode_request, encode_response, read_frame, write_frame, Req
 /// make it *allocate*. Oversized namespaces belong to in-process
 /// operators (per-tenant quotas/auth are a ROADMAP item).
 pub const MAX_REMOTE_FILTER_BYTES: u64 = 8 << 30;
+
+/// What the wire gateway needs from whatever it fronts. The in-process
+/// [`FilterService`] is the original implementation; the cluster front
+/// end ([`crate::coordinator::cluster::ClusterFilterService`]) is the
+/// second — `gbf client` speaks to either without knowing which.
+///
+/// The shape mirrors the wire protocol rather than [`crate::coordinator::FilterApi`]:
+/// instance ids travel explicitly (create/restore return them, `bind`
+/// checks them) because the gateway's stale-handle contract lives in the
+/// frames, and snapshot directories are the `&str` paths the frames
+/// carry (they resolve on the serving side).
+pub trait WireCatalog: Send + Sync + 'static {
+    /// Create a namespace; returns the instance id the reply binds.
+    fn create_instance(&self, name: &str, spec: FilterSpec) -> Result<u64, GbfError>;
+    fn drop_filter(&self, name: &str) -> Result<(), GbfError>;
+    fn list_filters(&self) -> Result<Vec<String>, GbfError>;
+    fn stats(&self, name: &str) -> Result<NamespaceStats, GbfError>;
+    fn snapshot(&self, name: &str, dir: &str) -> Result<(), GbfError>;
+    /// Restore a namespace from a serving-side snapshot directory;
+    /// returns the fresh instance id.
+    fn restore_instance(&self, name: &str, dir: &str) -> Result<u64, GbfError>;
+    /// Bind a data plane for `name` iff `instance` is still the live
+    /// instance; a dropped-and-recreated name answers `NoSuchFilter`,
+    /// matching in-process stale-handle semantics.
+    fn bind(&self, name: &str, instance: u64) -> Result<Box<dyn FilterDataPlane>, GbfError>;
+}
+
+impl WireCatalog for FilterService {
+    fn create_instance(&self, name: &str, spec: FilterSpec) -> Result<u64, GbfError> {
+        self.create_filter_spec(name, spec).map(|h| h.instance())
+    }
+
+    fn drop_filter(&self, name: &str) -> Result<(), GbfError> {
+        FilterService::drop_filter(self, name)
+    }
+
+    fn list_filters(&self) -> Result<Vec<String>, GbfError> {
+        Ok(FilterService::list_filters(self))
+    }
+
+    fn stats(&self, name: &str) -> Result<NamespaceStats, GbfError> {
+        FilterService::stats(self, name)
+    }
+
+    fn snapshot(&self, name: &str, dir: &str) -> Result<(), GbfError> {
+        FilterService::snapshot(self, name, Path::new(dir))
+    }
+
+    /// Restore under the same total-bytes budget as remote create
+    /// ([`MAX_REMOTE_FILTER_BYTES`]): the cap rides the restore's own
+    /// manifest read (`restore_with_cap`), so an oversized snapshot is
+    /// refused before any shard allocation — a well-formed 100-byte frame
+    /// still cannot make the server commit unbounded memory, and there is
+    /// no check-then-reopen gap for the manifest to change in.
+    fn restore_instance(&self, name: &str, dir: &str) -> Result<u64, GbfError> {
+        self.restore_with_cap(name, Path::new(dir), Some(MAX_REMOTE_FILTER_BYTES)).map(|h| h.instance())
+    }
+
+    fn bind(&self, name: &str, instance: u64) -> Result<Box<dyn FilterDataPlane>, GbfError> {
+        let h = self.handle(name)?;
+        if h.instance() == instance {
+            Ok(Box::new(h))
+        } else {
+            Err(GbfError::NoSuchFilter(name.to_string()))
+        }
+    }
+}
 
 /// A data-plane ticket in flight on one connection, tagged with the
 /// request id its reply must carry.
@@ -124,7 +197,15 @@ impl WireServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and serve
     /// `service` on it. Returns as soon as the listener is live.
     pub fn bind(service: Arc<FilterService>, addr: &str) -> Result<WireServer> {
-        let listener = TcpListener::bind(addr).with_context(|| format!("binding wire server to {addr}"))?;
+        WireServer::bind_catalog(service, addr)
+    }
+
+    /// Bind `addr` and serve any [`WireCatalog`] on it — the entry point
+    /// the cluster front end uses to expose itself over the same wire
+    /// protocol a single server speaks.
+    pub fn bind_catalog(catalog: Arc<impl WireCatalog>, addr: &str) -> Result<WireServer> {
+        let catalog: Arc<dyn WireCatalog> = catalog;
+        let listener = bind_listener(addr).with_context(|| format!("binding wire server to {addr}"))?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let registry = Arc::new(ConnRegistry { conns: Mutex::new_class("wire.server.conns", Vec::new()) });
@@ -133,7 +214,7 @@ impl WireServer {
             let registry = Arc::clone(&registry);
             std::thread::Builder::new()
                 .name("gbf-wire-accept".into())
-                .spawn(move || accept_loop(listener, service, stop, registry))?
+                .spawn(move || accept_loop(listener, catalog, stop, registry))?
         };
         Ok(WireServer { addr: local, stop, accept_thread: Some(accept_thread), registry })
     }
@@ -142,6 +223,86 @@ impl WireServer {
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
     }
+}
+
+/// Bind the listening socket with `SO_REUSEADDR` set. `TcpListener::bind`
+/// never sets it, so a port whose previous server instance closed
+/// connections (leaving server-side TIME_WAIT entries) answers
+/// `EADDRINUSE` for up to a minute — but restarting on the advertised
+/// address is a core cluster operation: a rejoining replica must come
+/// back exactly where the placement table expects it. IPv4 literals take
+/// the raw-socket path; anything else (hostnames, IPv6) falls back to
+/// the std bind unchanged.
+#[cfg(unix)]
+fn bind_listener(addr: &str) -> std::io::Result<TcpListener> {
+    use std::os::unix::io::FromRawFd;
+
+    let Ok(SocketAddr::V4(v4)) = addr.parse::<SocketAddr>() else {
+        return TcpListener::bind(addr);
+    };
+
+    /// `struct sockaddr_in` (Linux/POSIX layout); port and address are
+    /// network byte order.
+    #[repr(C)]
+    struct RawSockaddrIn {
+        sin_family: u16,
+        sin_port: u16,
+        sin_addr: u32,
+        sin_zero: [u8; 8],
+    }
+    extern "C" {
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        fn setsockopt(fd: i32, level: i32, optname: i32, optval: *const u8, optlen: u32) -> i32;
+        fn bind(fd: i32, addr: *const RawSockaddrIn, len: u32) -> i32;
+        fn listen(fd: i32, backlog: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+    const AF_INET: i32 = 2;
+    const SOCK_STREAM: i32 = 1;
+    const SOL_SOCKET: i32 = 1;
+    const SO_REUSEADDR: i32 = 2;
+
+    // SAFETY: plain socket(2) call; the returned fd (if valid) is owned
+    // by this function until handed to TcpListener below.
+    let fd = unsafe { socket(AF_INET, SOCK_STREAM, 0) };
+    if fd < 0 {
+        return Err(std::io::Error::last_os_error());
+    }
+    let one: i32 = 1;
+    let sa = RawSockaddrIn {
+        sin_family: AF_INET as u16,
+        sin_port: v4.port().to_be(),
+        sin_addr: u32::from(*v4.ip()).to_be(),
+        sin_zero: [0; 8],
+    };
+    // SAFETY: fd is the socket created above; both pointers reference
+    // live stack values whose repr(C) layouts and byte sizes match what
+    // setsockopt(2)/bind(2) read.
+    let rc = unsafe {
+        let mut rc = setsockopt(fd, SOL_SOCKET, SO_REUSEADDR, (&one as *const i32).cast(), 4);
+        if rc == 0 {
+            rc = bind(fd, &sa, std::mem::size_of::<RawSockaddrIn>() as u32);
+        }
+        if rc == 0 {
+            rc = listen(fd, 128);
+        }
+        rc
+    };
+    if rc != 0 {
+        let err = std::io::Error::last_os_error();
+        // SAFETY: fd was created above and never wrapped; this error path
+        // is its only owner, so closing here cannot double-close.
+        unsafe { close(fd) };
+        return Err(err);
+    }
+    // SAFETY: fd is a freshly bound, listening socket; ownership moves
+    // into the TcpListener exactly once and nothing else retains it.
+    Ok(unsafe { TcpListener::from_raw_fd(fd) })
+}
+
+#[cfg(not(unix))]
+fn bind_listener(addr: &str) -> std::io::Result<TcpListener> {
+    TcpListener::bind(addr)
 }
 
 impl Drop for WireServer {
@@ -171,7 +332,7 @@ impl Drop for WireServer {
 
 fn accept_loop(
     listener: TcpListener,
-    service: Arc<FilterService>,
+    service: Arc<dyn WireCatalog>,
     stop: Arc<AtomicBool>,
     registry: Arc<ConnRegistry>,
 ) {
@@ -235,16 +396,6 @@ fn run_on_worker(
     }
 }
 
-/// Restore under the same total-bytes budget as remote create
-/// ([`MAX_REMOTE_FILTER_BYTES`]): the cap rides the restore's own
-/// manifest read (`restore_with_cap`), so an oversized snapshot is
-/// refused before any shard allocation — a well-formed 100-byte frame
-/// still cannot make the server commit unbounded memory, and there is no
-/// check-then-reopen gap for the manifest to change in.
-fn restore_capped(service: &FilterService, name: &str, dir: &str) -> Result<u64, GbfError> {
-    service.restore_with_cap(name, Path::new(dir), Some(MAX_REMOTE_FILTER_BYTES)).map(|h| h.instance())
-}
-
 /// Completer: poll in-flight data-plane tickets and write each reply as
 /// soon as ITS ticket resolves — a stalled namespace's ticket must not
 /// head-of-line-block another namespace's finished reply on the same
@@ -284,7 +435,7 @@ fn completer_loop(rx: Receiver<(u64, PendingOp)>, writer: Arc<Mutex<TcpStream>>)
     }
 }
 
-fn handle_conn(stream: TcpStream, service: Arc<FilterService>) -> Result<()> {
+fn handle_conn(stream: TcpStream, service: Arc<dyn WireCatalog>) -> Result<()> {
     let writer =
         Arc::new(Mutex::new_class("wire.server.writer", stream.try_clone().context("cloning connection stream")?));
     let (tx, rx) = channel::<(u64, PendingOp)>();
@@ -324,8 +475,8 @@ fn handle_conn(stream: TcpStream, service: Arc<FilterService>) -> Result<()> {
                     continue;
                 }
                 let service = Arc::clone(&service);
-                run_on_worker(&writer, id, move || match service.create_filter_spec(&name, spec) {
-                    Ok(h) => Response::Created { instance: h.instance() },
+                run_on_worker(&writer, id, move || match service.create_instance(&name, spec) {
+                    Ok(instance) => Response::Created { instance },
                     Err(e) => Response::Err(e),
                 })?;
             }
@@ -334,14 +485,14 @@ fn handle_conn(stream: TcpStream, service: Arc<FilterService>) -> Result<()> {
             // snapshot can dwarf MAX_FRAME.
             Request::Snapshot { name, dir } => {
                 let service = Arc::clone(&service);
-                run_on_worker(&writer, id, move || match service.snapshot(&name, Path::new(&dir)) {
+                run_on_worker(&writer, id, move || match service.snapshot(&name, &dir) {
                     Ok(()) => Response::Ok,
                     Err(e) => Response::Err(e),
                 })?;
             }
             Request::Restore { name, dir } => {
                 let service = Arc::clone(&service);
-                run_on_worker(&writer, id, move || match restore_capped(&service, &name, &dir) {
+                run_on_worker(&writer, id, move || match service.restore_instance(&name, &dir) {
                     Ok(instance) => Response::Created { instance },
                     Err(e) => Response::Err(e),
                 })?;
@@ -354,7 +505,15 @@ fn handle_conn(stream: TcpStream, service: Arc<FilterService>) -> Result<()> {
                 send(&writer, id, &resp)?;
             }
             Request::List => {
-                send(&writer, id, &Response::Names(service.list_filters()))?;
+                let resp = match service.list_filters() {
+                    Ok(names) => Response::Names(names),
+                    Err(e) => Response::Err(e),
+                };
+                send(&writer, id, &resp)?;
+            }
+            // liveness probe: reply inline, touch nothing
+            Request::Ping => {
+                send(&writer, id, &Response::Ok)?;
             }
             Request::Stats { name } => {
                 let resp = match service.stats(&name) {
@@ -367,18 +526,16 @@ fn handle_conn(stream: TcpStream, service: Arc<FilterService>) -> Result<()> {
             // handle's bound instance must still be the live one: a
             // dropped-and-recreated name answers NoSuchFilter, exactly
             // like an in-process stale handle ----
-            Request::AddBulk { name, instance, keys } => match service.handle(&name) {
-                Ok(h) if h.instance() == instance => {
+            Request::AddBulk { name, instance, keys } => match service.bind(&name, instance) {
+                Ok(h) => {
                     let _ = tx.send((id, PendingOp::Add(h.add_bulk(&keys))));
                 }
-                Ok(_) => send(&writer, id, &Response::Err(GbfError::NoSuchFilter(name)))?,
                 Err(e) => send(&writer, id, &Response::Err(e))?,
             },
-            Request::QueryBulk { name, instance, keys } => match service.handle(&name) {
-                Ok(h) if h.instance() == instance => {
+            Request::QueryBulk { name, instance, keys } => match service.bind(&name, instance) {
+                Ok(h) => {
                     let _ = tx.send((id, PendingOp::Query(h.query_bulk_bits(&keys))));
                 }
-                Ok(_) => send(&writer, id, &Response::Err(GbfError::NoSuchFilter(name)))?,
                 Err(e) => send(&writer, id, &Response::Err(e))?,
             },
         }

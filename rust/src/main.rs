@@ -8,6 +8,7 @@
 //!   gups                         speed-of-light micro-benchmark
 //!   serve --filters spec         run the multi-tenant filter service demo
 //!         --listen <addr>        ... or host it on a wire server instead
+//!   cluster --servers a,b,c      replicated front end over a wire fleet
 //!   client <addr> <cmd>          drive a remote filter service
 
 use std::path::PathBuf;
@@ -16,8 +17,10 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 use gbf::coordinator::{
-    BatchPolicy, FilterBackend, FilterService, FilterSpec, PjrtBackend, RemoteFilterService, WireServer,
+    BatchPolicy, ClusterConfig, ClusterFilterService, FilterBackend, FilterService, FilterSpec,
+    PjrtBackend, RemoteFilterService, WireServer,
 };
+use gbf::infra::sync::atomic::{AtomicBool, Ordering};
 use gbf::experiments;
 use gbf::filter::params::{space_optimal_n, FilterConfig, Scheme, Variant};
 use gbf::gpu_sim::{model, Features, GpuArch, Op};
@@ -25,6 +28,44 @@ use gbf::infra::cli::Args;
 use gbf::runtime::actor::EngineActor;
 use gbf::runtime::manifest::{default_artifact_dir, Manifest};
 use gbf::workload::keygen::unique_keys;
+
+/// Set by the SIGINT/SIGTERM handler; the serve/cluster listen loops
+/// poll it so a wire server exits cleanly (snapshotting first when a
+/// `--state-dir` is configured) instead of dying mid-write.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+// POSIX signal numbers, stable on every platform this builds for.
+const SIGINT: i32 = 2;
+const SIGTERM: i32 = 15;
+
+extern "C" fn on_shutdown_signal(_signum: i32) {
+    // SeqCst: a handler runs on an arbitrary thread and the poll loop
+    // reads from another; the strongest ordering keeps the handshake
+    // obviously correct and costs nothing at once-per-shutdown rates
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+fn install_shutdown_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    // SAFETY: `signal` just swaps the process's handler pointer for two
+    // standard signals, and the handler does nothing but a lock-free
+    // atomic store — async-signal-safe by construction.
+    unsafe {
+        signal(SIGINT, on_shutdown_signal);
+        signal(SIGTERM, on_shutdown_signal);
+    }
+}
+
+/// Park the main thread until SIGINT/SIGTERM. 50ms polling is prompt
+/// for an operator and invisible next to any real workload.
+fn wait_for_shutdown() {
+    // SeqCst: pairs with the handler's store (see on_shutdown_signal)
+    while !SHUTDOWN.load(Ordering::SeqCst) {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+}
 
 fn main() {
     let args = match Args::from_env() {
@@ -41,6 +82,7 @@ fn main() {
         Some("sim") => cmd_sim(&args),
         Some("gups") => experiments::run("gups", None).map(|_| ()),
         Some("serve") => cmd_serve(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("client") => cmd_client(&args),
         _ => {
             print_usage();
@@ -67,6 +109,8 @@ fn print_usage() {
            serve [--filters name:variant:<N>bits,...] [--requests N]\n  \
                  [--backend native|pjrt] [--shards S] [--batch B] [--max-wait-us U]\n  \
                  [--max-queue-depth D] [--listen addr:port] [--state-dir dir]\n  \
+           cluster --servers a:p1,b:p2,... [--replicas R] [--listen addr:port]\n  \
+                 [--place ns=0:1,...] [--sync-dir dir] [--heal-interval-ms MS]\n  \
            client <addr> list\n  \
            client <addr> create name:variant:<N>bits [--shards S] [--max-queue-depth D]\n  \
            client <addr> drop <name> | stats <name>\n  \
@@ -80,8 +124,14 @@ fn print_usage() {
          the local demo workload, and `gbf client` drives it remotely.\n\
          --state-dir makes namespaces durable: every snapshot under the\n\
          directory is restored at boot (one subdirectory per namespace),\n\
-         and the demo path snapshots every namespace back on shutdown; a\n\
-         wire server snapshots on demand via `gbf client snapshot`"
+         and both the demo path and a SIGINT/SIGTERM'd wire server\n\
+         snapshot every namespace back on shutdown.\n\
+         cluster fronts a fleet of `serve --listen` servers: namespaces\n\
+         are placed on R servers by rendezvous hashing (--place pins\n\
+         them), writes replicate to all replicas, reads fail over, and a\n\
+         janitor re-replicates namespaces onto recovered servers; with\n\
+         --listen the cluster itself serves the wire protocol, so plain\n\
+         `gbf client` works against the whole fleet"
     );
 }
 
@@ -346,13 +396,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
 
     // --listen: host the catalog on the wire protocol instead of running
-    // the local demo workload; `gbf client <addr> <cmd>` drives it
+    // the local demo workload; `gbf client <addr> <cmd>` drives it.
+    // SIGINT/SIGTERM shuts the listener down cleanly and — with a
+    // --state-dir — snapshots every live namespace on the way out, so
+    // kill + restart round-trips the whole catalog.
     if let Some(listen_addr) = args.get("listen") {
         let server = WireServer::bind(Arc::clone(&service), listen_addr)?;
-        println!("wire server listening on {} (ctrl-c to stop)", server.local_addr());
-        loop {
-            std::thread::park();
+        install_shutdown_handler();
+        println!("wire server listening on {} (SIGINT/SIGTERM to stop)", server.local_addr());
+        wait_for_shutdown();
+        drop(server); // stop accepting before the final snapshot pass
+        if let Some(dir) = &state_dir {
+            let names = service.list_filters();
+            for name in &names {
+                service.snapshot(name, &dir.join(name))?;
+            }
+            println!("snapshotted {} namespace(s) to {}", names.len(), dir.display());
         }
+        println!("wire server stopped");
+        return Ok(());
     }
 
     let per_ns = (requests / (2 * specs.len())).max(1);
@@ -418,6 +480,66 @@ fn cmd_serve(args: &Args) -> Result<()> {
             service.snapshot(name, &dir.join(name))?;
         }
         println!("snapshotted {} namespace(s) to {}", names.len(), dir.display());
+    }
+    Ok(())
+}
+
+/// `--place` grammar: `ns=0:1,other=2` pins namespaces to explicit
+/// server indices (override wins over rendezvous placement).
+fn parse_place_flag(mut config: ClusterConfig, place: &str) -> Result<ClusterConfig> {
+    for entry in place.split(',').filter(|e| !e.is_empty()) {
+        let (ns, indices) = entry
+            .split_once('=')
+            .with_context(|| format!("bad --place entry {entry:?} (want ns=idx[:idx...])"))?;
+        let indices = indices
+            .split(':')
+            .map(|i| i.parse::<usize>().with_context(|| format!("bad server index in --place entry {entry:?}")))
+            .collect::<Result<Vec<_>>>()?;
+        config = config.with_override(ns, indices)?;
+    }
+    Ok(config)
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    args.check_known(&["servers", "replicas", "listen", "sync-dir", "heal-interval-ms", "place"])?;
+    let servers: Vec<String> = args
+        .required("servers")?
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    let replicas = args.get_parse("replicas", 2usize.min(servers.len().max(1)))?;
+    let mut config = ClusterConfig::new(servers, replicas)?;
+    if let Some(place) = args.get("place") {
+        config = parse_place_flag(config, place)?;
+    }
+    config.sync_dir = args.get_or("sync-dir", "").to_string();
+    config.heal_interval_ms = args.get_parse("heal-interval-ms", 500u64)?;
+    config.validate()?;
+    println!("cluster config: {}", config.to_json());
+    let cluster = ClusterFilterService::connect(config)?;
+
+    // --listen: gateway mode — serve the whole fleet through the
+    // ordinary wire protocol, so unmodified `gbf client`s drive it
+    if let Some(listen_addr) = args.get("listen") {
+        let server = WireServer::bind_catalog(Arc::new(cluster), listen_addr)?;
+        install_shutdown_handler();
+        println!("cluster gateway listening on {} (SIGINT/SIGTERM to stop)", server.local_addr());
+        wait_for_shutdown();
+        drop(server);
+        println!("cluster gateway stopped");
+        return Ok(());
+    }
+
+    // status mode: probe the fleet once, reconcile, and report
+    cluster.reconcile_now();
+    let names = cluster.list_filters()?;
+    println!("{} namespace(s) across the fleet", names.len());
+    for name in &names {
+        match cluster.stats(name) {
+            Ok(stats) => println!("  {name}: {} adds, {} queries", stats.metrics.adds, stats.metrics.queries),
+            Err(e) => println!("  {name}: {e}"),
+        }
     }
     Ok(())
 }

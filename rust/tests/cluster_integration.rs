@@ -1,0 +1,195 @@
+//! Cluster-mode integration: the replicated front end is just another
+//! `FilterApi` transport. The UNMODIFIED acceptance driver from
+//! `tests/common/` runs over a three-server fleet with R=2 and must
+//! produce bit-identical answers and identical typed errors to the
+//! in-process service; on top of that, replica failure is transparent
+//! (reads fail over, writes keep acking), a rejoining replica is
+//! re-seeded by snapshot shipping, and a fully dead replica set answers
+//! with the typed `NoQuorum` — never a hang.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+
+use gbf::coordinator::{
+    ClusterConfig, ClusterFilterService, FilterService, GbfError, RemoteFilterService, WireServer,
+};
+use gbf::workload::keygen::unique_keys;
+
+mod common;
+use common::{cfg, drive_api, scratch_dir, spec};
+
+/// Boot `n` loopback wire servers, each with its own empty catalog.
+fn fleet(n: usize) -> (Vec<WireServer>, Vec<String>) {
+    let mut servers = Vec::with_capacity(n);
+    let mut addrs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let service = Arc::new(FilterService::new());
+        let server = WireServer::bind(service, "127.0.0.1:0").unwrap();
+        addrs.push(server.local_addr().to_string());
+        servers.push(server);
+    }
+    (servers, addrs)
+}
+
+#[test]
+fn cluster_runs_the_unmodified_acceptance_driver() {
+    // oracle: the same body over the in-process catalog
+    let local = FilterService::new();
+    let (local_hits, local_stats) = drive_api(&local);
+
+    // the cluster front end: three servers, every namespace on two
+    let (_servers, addrs) = fleet(3);
+    let cluster = ClusterFilterService::connect(ClusterConfig::new(addrs, 2).unwrap()).unwrap();
+    let (cluster_hits, cluster_stats) = drive_api(&cluster);
+
+    // identical query answers — down to the false positives
+    assert_eq!(local_hits, cluster_hits, "bit-identical answers through the cluster");
+    // identical accounting on the preferred replica: every write fans
+    // out and every read (and the stats call) lands on the same first
+    // live replica, so the counters match the single-service run
+    assert_eq!(local_stats.metrics.adds, cluster_stats.metrics.adds);
+    assert_eq!(local_stats.metrics.queries, cluster_stats.metrics.queries);
+    assert_eq!(local_stats.num_shards, cluster_stats.num_shards);
+    assert_eq!(
+        local_stats.shards.iter().map(|s| s.keys).sum::<u64>(),
+        cluster_stats.shards.iter().map(|s| s.keys).sum::<u64>(),
+        "per-shard key totals agree through the cluster"
+    );
+    assert_eq!(local_stats.backend, cluster_stats.backend);
+}
+
+#[test]
+fn replication_fans_out_to_every_replica() {
+    let (_servers, addrs) = fleet(3);
+    let cluster =
+        ClusterFilterService::connect(ClusterConfig::new(addrs.clone(), 2).unwrap()).unwrap();
+
+    let h = cluster.create_filter_spec("fan", spec(13, 2, 1024, 150)).unwrap();
+    let keys = unique_keys(4_000, 0xC0);
+    h.add_bulk(&keys).wait().unwrap();
+
+    // exactly R=2 servers hold the namespace, and each holds ALL keys
+    let placed = cluster.config().placement("fan");
+    assert_eq!(placed.len(), 2);
+    let mut holders = 0;
+    for (i, addr) in addrs.iter().enumerate() {
+        let direct = RemoteFilterService::connect(addr.as_str()).unwrap();
+        match direct.stats("fan") {
+            Ok(stats) => {
+                assert!(placed.contains(&i), "namespace on an unplaced server {i}");
+                assert_eq!(stats.metrics.adds, 4_000, "replica {i} holds every write");
+                holders += 1;
+            }
+            Err(GbfError::NoSuchFilter(_)) => {
+                assert!(!placed.contains(&i), "placed replica {i} is missing the namespace");
+            }
+            Err(other) => panic!("direct stats on server {i}: {other:?}"),
+        }
+    }
+    assert_eq!(holders, 2, "replication factor is respected");
+}
+
+#[test]
+fn replica_failure_is_transparent_and_rejoin_reseeds() {
+    // reserve an address for the replica that starts dark: bind an
+    // ephemeral listener, note the port, release it unconnected (no
+    // TIME_WAIT socket holds the port)
+    let reserved = TcpListener::bind("127.0.0.1:0").unwrap();
+    let dark_addr = reserved.local_addr().unwrap().to_string();
+    drop(reserved);
+
+    let live0 = Arc::new(FilterService::new());
+    let server0 = WireServer::bind(Arc::clone(&live0), "127.0.0.1:0").unwrap();
+    let (extra, extra_addrs) = fleet(1);
+    let addrs =
+        vec![server0.local_addr().to_string(), dark_addr.clone(), extra_addrs[0].clone()];
+
+    let sync_dir = scratch_dir("cluster-sync");
+    let mut config = ClusterConfig::new(addrs, 2)
+        .unwrap()
+        // preferred replica (index 1) starts dark; index 0 carries the load
+        .with_override("ha", vec![1, 0])
+        .unwrap();
+    config.sync_dir = sync_dir.to_str().unwrap().to_string();
+    let cluster = ClusterFilterService::connect(config).unwrap();
+
+    // create + populate with the preferred replica down: create yields a
+    // working handle from any live replica, writes ack there, reads fail
+    // over — the caller never notices
+    let h = cluster.create_filter_spec("ha", spec(13, 2, 1024, 150)).unwrap();
+    let keys = unique_keys(5_000, 0xC1);
+    h.add_bulk(&keys).wait().unwrap();
+    let mut probe = keys.clone();
+    probe.extend(unique_keys(2_500, 0xC2));
+    let before = h.query_bulk(&probe).wait().unwrap();
+    assert!(before[..5_000].iter().all(|&x| x), "no false negatives with a replica down");
+
+    // the dark replica rejoins with an EMPTY catalog; reconcile ships a
+    // snapshot from the surviving co-replica and warm-starts it
+    let rejoined = Arc::new(FilterService::new());
+    let server1 = WireServer::bind(Arc::clone(&rejoined), dark_addr.as_str()).unwrap();
+    cluster.reconcile_now();
+    assert_eq!(
+        rejoined.stats("ha").unwrap().metrics.adds,
+        5_000,
+        "rejoined replica was re-seeded with every key"
+    );
+
+    // kill the OTHER replica mid-workload: the freshly re-seeded one
+    // answers identically, and writes still ack
+    let h2 = cluster.handle("ha").unwrap();
+    drop(server0);
+    let after = h2.query_bulk(&probe).wait().unwrap();
+    assert_eq!(before, after, "failover preserves every answer, including false positives");
+    h2.add(0xDEAD_BEEF).wait().unwrap();
+    assert_eq!(cluster.stats("ha").unwrap().metrics.adds, 5_001);
+
+    // kill the last replica: typed NoQuorum, not a hang
+    drop(server1);
+    match h2.query(keys[0]).wait() {
+        Err(GbfError::NoQuorum { name, .. }) => assert_eq!(name, "ha"),
+        other => panic!("expected NoQuorum with the whole replica set dead, got {other:?}"),
+    }
+    match cluster.stats("ha") {
+        Err(GbfError::NoQuorum { name, replicas }) => {
+            assert_eq!(name, "ha");
+            assert_eq!(replicas, 2);
+        }
+        other => panic!("expected NoQuorum from stats, got {other:?}"),
+    }
+    std::fs::remove_dir_all(&sync_dir).ok();
+}
+
+#[test]
+fn gateway_serves_unmodified_wire_clients() {
+    // in-process oracle fed the same keys
+    let oracle = FilterService::new();
+    let oh = oracle.create_filter("gw", cfg(13), 2).unwrap();
+    let keys = unique_keys(3_000, 0xC3);
+    let mut probe = keys.clone();
+    probe.extend(unique_keys(1_500, 0xC4));
+    oh.add_bulk(&keys).wait().unwrap();
+    let oracle_hits = oh.query_bulk(&probe).wait().unwrap();
+
+    // the cluster itself sits behind a wire listener; a stock wire
+    // client speaks to the fleet without knowing it is one
+    let (_servers, addrs) = fleet(2);
+    let cluster = ClusterFilterService::connect(ClusterConfig::new(addrs, 2).unwrap()).unwrap();
+    let gateway = WireServer::bind_catalog(Arc::new(cluster), "127.0.0.1:0").unwrap();
+    let client = RemoteFilterService::connect(gateway.local_addr()).unwrap();
+
+    let rh = client.create_filter("gw", cfg(13), 2).unwrap();
+    rh.add_bulk(&keys).wait().unwrap();
+    let via_gateway = rh.query_bulk(&probe).wait().unwrap();
+    assert_eq!(oracle_hits, via_gateway, "identical answers through gateway + fleet");
+
+    let stats = client.stats("gw").unwrap();
+    assert_eq!(stats.metrics.adds, 3_000);
+    assert_eq!(client.list_filters().unwrap(), vec!["gw".to_string()]);
+    match client.stats("nope") {
+        Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "nope"),
+        other => panic!("expected NoSuchFilter through the gateway, got {other:?}"),
+    }
+    client.drop_filter("gw").unwrap();
+    assert!(client.list_filters().unwrap().is_empty());
+}

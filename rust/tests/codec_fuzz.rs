@@ -69,6 +69,7 @@ fn small_spec(max_batch: usize) -> FilterSpec {
 fn valid_requests() -> Vec<Vec<u8>> {
     let reqs = [
         Request::List,
+        Request::Ping,
         Request::Create { name: "ns".into(), spec: small_spec(1024) },
         Request::Drop { name: "ns".into() },
         Request::Stats { name: "ns".into() },
@@ -87,6 +88,7 @@ fn valid_responses() -> Vec<Vec<u8>> {
         Response::Names(vec!["a".into(), "b".into()]),
         Response::Err(GbfError::Overloaded { name: "ns".into(), depth: 12 }),
         Response::Err(GbfError::SnapshotVersion { found: 9, supported: 1 }),
+        Response::Err(GbfError::NoQuorum { name: "ns".into(), replicas: 2 }),
     ];
     resps.iter().enumerate().map(|(i, r)| encode_response(i as u64, r)).collect()
 }
@@ -114,6 +116,9 @@ fn valid_corpus_entries_decode() {
     let corpus = wire_corpus();
     let (_, req) = decode_request(&entry(&corpus, "valid-list.hex")).expect("valid-list decodes");
     assert!(matches!(req, Request::List));
+    let (id, req) = decode_request(&entry(&corpus, "valid-ping.hex")).expect("valid-ping decodes");
+    assert_eq!(id, 12);
+    assert!(matches!(req, Request::Ping));
     let (_, req) = decode_request(&entry(&corpus, "valid-create.hex")).expect("valid-create decodes");
     match req {
         Request::Create { name, spec } => {
@@ -177,6 +182,7 @@ fn hostile_corpus_entries_fail_typed() {
         "keys-length-lie.hex",
         "truncated-restore-path.hex",
         "snapshot-name-oversize.hex",
+        "ping-trailing-garbage.hex",
     ] {
         assert!(decode_request(&entry(&corpus, name)).is_err(), "{name} must be a typed decode error");
     }

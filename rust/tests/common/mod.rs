@@ -1,0 +1,166 @@
+//! Shared integration-test helpers: the transport-agnostic acceptance
+//! driver and its spec builders. `drive_api` is written purely against
+//! `dyn FilterApi`, so the SAME body exercises the in-process
+//! `FilterService`, a loopback `RemoteFilterService`, and the cluster
+//! front end — identical answers, identical typed errors.
+#![allow(dead_code)]
+
+use std::time::Duration;
+
+use gbf::coordinator::{BatchPolicy, FilterApi, FilterDataPlane, FilterSpec, GbfError};
+use gbf::filter::params::FilterConfig;
+use gbf::workload::keygen::unique_keys;
+
+pub fn cfg(log2_m_words: u32) -> FilterConfig {
+    FilterConfig { log2_m_words, ..Default::default() }
+}
+
+pub fn spec(log2_m_words: u32, shards: usize, max_batch: usize, wait_us: u64) -> FilterSpec {
+    FilterSpec {
+        config: cfg(log2_m_words),
+        shards,
+        policy: BatchPolicy { max_batch, max_wait: Duration::from_micros(wait_us) },
+        ..FilterSpec::default()
+    }
+}
+
+/// The acceptance driver: written purely against `dyn FilterApi`, so it
+/// cannot tell whether the catalog is in-process or across a socket.
+/// Returns the query answers and a stats snapshot for cross-transport
+/// comparison.
+pub fn drive_api(api: &dyn FilterApi) -> (Vec<bool>, gbf::coordinator::NamespaceStats) {
+    // create (full spec), duplicate create -> typed FilterExists
+    let h: Box<dyn FilterDataPlane> = api.create_filter_spec("eq", spec(14, 4, 1024, 150)).unwrap();
+    match api.create_filter_spec("eq", FilterSpec::new(cfg(12), 1)) {
+        Err(GbfError::FilterExists(n)) => assert_eq!(n, "eq"),
+        Err(other) => panic!("expected FilterExists, got {other:?}"),
+        Ok(_) => panic!("duplicate create must fail"),
+    }
+
+    // bulk + single data plane, pipelined tickets before any wait
+    let keys = unique_keys(10_000, 0xE0);
+    h.add_bulk(&keys).wait().unwrap();
+    h.add(42).wait().unwrap();
+    let mut probe = keys.clone();
+    probe.extend(unique_keys(5_000, 0xE1));
+    let t_bulk = h.query_bulk(&probe);
+    let t_single = h.query(42);
+    let hits = t_bulk.wait().unwrap();
+    assert!(t_single.wait().unwrap());
+    assert!(hits[..10_000].iter().all(|&x| x), "no false negatives via {}", h.name());
+
+    // the bit-packed bulk path must answer identically on both
+    // transports (in-process: straight off the sink; wire: the frame's
+    // answer bytes handed through without a repack)
+    let bits = h.query_bulk_bits(&probe).wait().unwrap();
+    assert_eq!(bits.len(), probe.len());
+    assert_eq!(bits.to_bools(), hits, "query_bulk_bits agrees with query_bulk via {}", h.name());
+
+    // backpressure: a bounded namespace refuses oversized bulks with the
+    // typed Overloaded error — deterministically, on both transports
+    let bounded: Box<dyn FilterDataPlane> = api
+        .create_filter_spec("eq-bounded", FilterSpec { max_queue_depth: Some(4), ..FilterSpec::new(cfg(12), 1) })
+        .unwrap();
+    match bounded.add_bulk(&unique_keys(64, 0xE2)).wait() {
+        Err(GbfError::Overloaded { name, depth }) => {
+            assert_eq!(name, "eq-bounded");
+            assert!(depth > 4, "would-be depth reported: {depth}");
+        }
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    bounded.add_bulk(&[7, 8]).wait().unwrap(); // within the bound
+
+    // admin plane: list, stats (incl. per-shard counters), typed misses
+    assert_eq!(api.list_filters().unwrap(), vec!["eq".to_string(), "eq-bounded".to_string()]);
+    let stats = api.stats("eq").unwrap();
+    assert_eq!(stats.num_shards, 4);
+    assert_eq!(stats.shards.len(), 4, "per-shard counters travel with stats");
+    assert_eq!(stats.metrics.adds, 10_001);
+    match api.stats("nope") {
+        Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "nope"),
+        other => panic!("expected NoSuchFilter, got {other:?}"),
+    }
+    match api.handle("nope") {
+        Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "nope"),
+        Err(other) => panic!("expected NoSuchFilter, got {other:?}"),
+        Ok(_) => panic!("handle to a missing namespace must fail"),
+    }
+
+    // a fresh handle reaches the same state; drop, then typed miss
+    let h2 = api.handle("eq").unwrap();
+    assert!(h2.query(42).wait().unwrap());
+    api.drop_filter("eq-bounded").unwrap();
+    match api.drop_filter("eq-bounded") {
+        Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "eq-bounded"),
+        other => panic!("expected NoSuchFilter, got {other:?}"),
+    }
+
+    // drop-then-recreate: handles pin the namespace INSTANCE, not the
+    // name — on both transports a stale handle answers NoSuchFilter
+    // instead of silently reaching the reborn namespace
+    api.drop_filter("eq").unwrap();
+    let reborn: Box<dyn FilterDataPlane> = api.create_filter_spec("eq", spec(14, 4, 1024, 150)).unwrap();
+    match h2.query(42).wait() {
+        Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "eq"),
+        other => panic!("stale handle must fail typed, got {other:?}"),
+    }
+    assert!(!reborn.query(42).wait().unwrap(), "reborn namespace starts empty");
+    api.drop_filter("eq").unwrap();
+
+    // snapshot/restore: the SAME body persists a namespace, drops it,
+    // and warm-starts it — answers, counters, and stale-handle
+    // semantics must be identical on both transports (paths resolve
+    // server-side; loopback makes that this machine either way)
+    let snap_dir = scratch_dir("drive-api-snap");
+    let durable: Box<dyn FilterDataPlane> = api.create_filter_spec("eq-durable", spec(13, 2, 1024, 150)).unwrap();
+    let snap_keys = unique_keys(3_000, 0xE3);
+    durable.add_bulk(&snap_keys).wait().unwrap();
+    let mut snap_probe = snap_keys.clone();
+    snap_probe.extend(unique_keys(2_000, 0xE4));
+    let pre_restore = durable.query_bulk(&snap_probe).wait().unwrap();
+    api.snapshot("eq-durable", &snap_dir).unwrap();
+    // snapshot of a missing namespace is a typed miss
+    match api.snapshot("nope", &snap_dir) {
+        Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "nope"),
+        other => panic!("expected NoSuchFilter, got {other:?}"),
+    }
+    // restore onto a live name is refused like a duplicate create
+    match api.restore("eq-durable", &snap_dir) {
+        Err(GbfError::FilterExists(n)) => assert_eq!(n, "eq-durable"),
+        Err(other) => panic!("expected FilterExists, got {other:?}"),
+        Ok(_) => panic!("restore onto a live name must fail"),
+    }
+    api.drop_filter("eq-durable").unwrap();
+    let warm = api.restore("eq-durable", &snap_dir).unwrap();
+    // the pre-restore handle is stale on both transports
+    match durable.query(snap_keys[0]).wait() {
+        Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "eq-durable"),
+        other => panic!("pre-restore stale handle must fail typed, got {other:?}"),
+    }
+    let post_restore = warm.query_bulk(&snap_probe).wait().unwrap();
+    assert_eq!(pre_restore, post_restore, "restored namespace answers identically via {}", warm.name());
+    assert_eq!(api.stats("eq-durable").unwrap().metrics.adds, 3_000, "restored key counters");
+    // restoring garbage is a typed refusal on both transports
+    match api.restore("eq-fresh", &snap_dir.join("missing")) {
+        Err(GbfError::SnapshotCorrupt(_)) => {}
+        Err(other) => panic!("expected SnapshotCorrupt, got {other:?}"),
+        Ok(_) => panic!("restore from a missing snapshot must fail"),
+    }
+    api.drop_filter("eq-durable").unwrap();
+    std::fs::remove_dir_all(&snap_dir).ok();
+
+    assert!(api.list_filters().unwrap().is_empty());
+    (hits, stats)
+}
+
+/// Unique scratch directory (drive_api runs once per transport; the
+/// snapshot paths must not collide).
+pub fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "gbf-{tag}-{}-{}",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ))
+}

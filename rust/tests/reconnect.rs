@@ -1,0 +1,96 @@
+//! Wire-client reconnect: a `RemoteFilterService` outlives its server.
+//! While the server is away every call fails *fast* with a typed
+//! connection error (dial refusals and the reconnect-backoff cooldown
+//! both surface as `GbfError::Backend`, never a hang); once a server
+//! appears at the address, `ping_now` clears the cooldown and the same
+//! client object carries a full lifecycle without being rebuilt.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gbf::coordinator::{FilterService, GbfError, RemoteFilterService, WireServer};
+use gbf::workload::keygen::unique_keys;
+
+mod common;
+use common::cfg;
+
+#[test]
+fn lazy_client_rides_out_a_late_server_start() {
+    // reserve an address nobody is listening on yet
+    let reserved = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = reserved.local_addr().unwrap().to_string();
+    drop(reserved);
+
+    let client = RemoteFilterService::connect_lazy(addr.as_str()).unwrap();
+
+    // server away: every call is a typed, bounded-time failure — the
+    // first burns real dial attempts, later ones may hit the backoff
+    // cooldown, and all of them are GbfError::Backend
+    let started = Instant::now();
+    for _ in 0..4 {
+        match client.list_filters() {
+            Err(GbfError::Backend(msg)) => {
+                assert!(msg.starts_with("wire client"), "typed connection error, got {msg:?}");
+            }
+            other => panic!("expected Backend while the server is away, got {other:?}"),
+        }
+    }
+    assert!(
+        started.elapsed() < Duration::from_secs(30),
+        "failures while down must be bounded, took {:?}",
+        started.elapsed()
+    );
+
+    // the server arrives at the reserved address; ping_now clears the
+    // reconnect cooldown so recovery is deterministic, not a sleep
+    let service = Arc::new(FilterService::new());
+    let server = WireServer::bind(Arc::clone(&service), addr.as_str()).unwrap();
+    client.ping_now().unwrap();
+
+    // the SAME client object now carries a full lifecycle
+    let h = client.create_filter("late", cfg(13), 2).unwrap();
+    let keys = unique_keys(2_000, 0x77);
+    h.add_bulk(&keys).wait().unwrap();
+    assert!(h.query_bulk(&keys).wait().unwrap().iter().all(|&hit| hit));
+    assert_eq!(client.stats("late").unwrap().metrics.adds, 2_000);
+    client.drop_filter("late").unwrap();
+
+    // and when the server goes away again, errors are typed again
+    drop(server);
+    let mut saw_error = false;
+    for _ in 0..50 {
+        match client.list_filters() {
+            Err(GbfError::Backend(_)) => {
+                saw_error = true;
+                break;
+            }
+            Ok(_) => std::thread::sleep(Duration::from_millis(10)),
+            Err(other) => panic!("expected Backend after shutdown, got {other:?}"),
+        }
+    }
+    assert!(saw_error, "calls after shutdown fail with GbfError::Backend");
+}
+
+#[test]
+fn idempotent_retries_are_invisible_to_the_caller() {
+    // a live server: ping (the idempotent probe) and the admin plane
+    // agree; ping is also safe to hammer
+    let service = Arc::new(FilterService::new());
+    let server = WireServer::bind(Arc::clone(&service), "127.0.0.1:0").unwrap();
+    let client = RemoteFilterService::connect(server.local_addr()).unwrap();
+    for _ in 0..10 {
+        client.ping().unwrap();
+    }
+    client.create_filter("idem", cfg(12), 1).unwrap();
+    assert_eq!(client.list_filters().unwrap(), vec!["idem".to_string()]);
+
+    // ping against a dead server is a typed failure, not a hang
+    drop(server);
+    let started = Instant::now();
+    match client.ping_now() {
+        Err(GbfError::Backend(_)) => {}
+        other => panic!("expected Backend from ping on a dead server, got {other:?}"),
+    }
+    assert!(started.elapsed() < Duration::from_secs(30));
+}

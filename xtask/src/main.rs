@@ -398,6 +398,7 @@ fn is_hostile(name: &str) -> bool {
         "resp-names-count-lie",
         "resp-err-truncated",
         "snapshot-name-oversize",
+        "ping-trailing-garbage",
     ]
     .iter()
     .any(|p| name.starts_with(p))
