@@ -50,12 +50,35 @@ impl HealthTracker {
         }
     }
 
+    /// Grow the tracker to `fleet_size` slots (`add_server`): existing
+    /// state is kept, new slots start live. Shrinking is not this
+    /// method's job — see [`HealthTracker::reset`].
+    pub fn grow_to(&self, fleet_size: usize) {
+        let mut g = lock_unpoisoned(&self.servers);
+        if fleet_size > g.len() {
+            g.resize(fleet_size, ServerState { consecutive_errors: 0, down: false });
+        }
+    }
+
+    /// Replace all state with `fleet_size` fresh live slots
+    /// (`remove_server` shifts indices, so per-slot history would be
+    /// attributed to the wrong machines; the next probes re-learn it).
+    pub fn reset(&self, fleet_size: usize) {
+        let mut g = lock_unpoisoned(&self.servers);
+        *g = vec![ServerState { consecutive_errors: 0, down: false }; fleet_size];
+    }
+
     /// A round-trip to `server` completed (even if it carried an
     /// application error). Returns `true` when this *recovered* the
     /// server — the caller owes the fleet a re-replication pass.
+    ///
+    /// All report/query methods tolerate out-of-range indices: a leg
+    /// started before a membership change may report against a slot
+    /// that no longer exists, and a departed server simply reads as
+    /// down.
     pub fn record_ok(&self, server: usize) -> bool {
         let mut g = lock_unpoisoned(&self.servers);
-        let s = &mut g[server];
+        let Some(s) = g.get_mut(server) else { return false };
         let recovered = s.down;
         s.consecutive_errors = 0;
         s.down = false;
@@ -67,7 +90,7 @@ impl HealthTracker {
     /// server down.
     pub fn record_error(&self, server: usize) -> bool {
         let mut g = lock_unpoisoned(&self.servers);
-        let s = &mut g[server];
+        let Some(s) = g.get_mut(server) else { return false };
         s.consecutive_errors = s.consecutive_errors.saturating_add(1);
         let went_down = !s.down && s.consecutive_errors >= DOWN_THRESHOLD;
         if went_down {
@@ -77,7 +100,10 @@ impl HealthTracker {
     }
 
     pub fn is_down(&self, server: usize) -> bool {
-        lock_unpoisoned(&self.servers)[server].down
+        match lock_unpoisoned(&self.servers).get(server) {
+            Some(s) => s.down,
+            None => true, // departed server: reads as down
+        }
     }
 
     /// Servers currently marked down, in index order (janitor probe list).
@@ -93,7 +119,11 @@ impl HealthTracker {
     /// returns a member of `replicas`.
     pub fn pick_live(&self, replicas: &[usize]) -> usize {
         let g = lock_unpoisoned(&self.servers);
-        replicas.iter().copied().find(|&r| !g[r].down).unwrap_or(replicas[0])
+        replicas
+            .iter()
+            .copied()
+            .find(|&r| g.get(r).is_some_and(|s| !s.down))
+            .unwrap_or(replicas[0])
     }
 
     /// `replicas` reordered to try live servers first (placement order
@@ -102,7 +132,8 @@ impl HealthTracker {
     /// reports `NoQuorum`.
     pub fn attempt_order(&self, replicas: &[usize]) -> Vec<usize> {
         let g = lock_unpoisoned(&self.servers);
-        let (live, down): (Vec<usize>, Vec<usize>) = replicas.iter().copied().partition(|&r| !g[r].down);
+        let (live, down): (Vec<usize>, Vec<usize>) =
+            replicas.iter().copied().partition(|&r| g.get(r).is_some_and(|s| !s.down));
         let mut order = live;
         order.extend(down);
         order
@@ -138,6 +169,28 @@ mod tests {
         assert!(!h.record_error(0));
         assert!(!h.is_down(0));
         assert!(h.record_error(0));
+    }
+
+    #[test]
+    fn membership_resizes_and_tolerates_stale_indices() {
+        let h = HealthTracker::new(2);
+        for _ in 0..DOWN_THRESHOLD {
+            h.record_error(1);
+        }
+        assert!(h.is_down(1));
+        // growing keeps existing state and adds live slots
+        h.grow_to(3);
+        assert!(h.is_down(1) && !h.is_down(2));
+        h.grow_to(2);
+        assert!(!h.is_down(2), "grow_to never shrinks");
+        // a leg started before a shrink reports against a gone slot: no-op
+        h.reset(1);
+        assert!(!h.record_ok(5));
+        assert!(!h.record_error(5));
+        assert!(h.is_down(5), "a departed server reads as down");
+        assert_eq!(h.pick_live(&[5, 0]), 0, "stale index skipped, live survivor wins");
+        assert_eq!(h.attempt_order(&[5, 0]), vec![0, 5]);
+        assert!(h.down_servers().is_empty(), "reset starts everyone live");
     }
 
     #[test]

@@ -1,0 +1,374 @@
+//! Epoched namespace lifecycle ledger (ISSUE 9 tentpole).
+//!
+//! Every namespace lifecycle event — create, drop, restore-as-create —
+//! mints a **monotonically increasing epoch** and records it here. A drop
+//! records a **tombstone** entry instead of erasing the name, so the fact
+//! of the drop survives any single replica being down when it happened: a
+//! rejoining replica that still advertises the namespace is reconciled
+//! against the ledger and the resurrected copy is deleted, never
+//! re-advertised.
+//!
+//! The ledger is tiny (one entry per namespace ever seen) and replicated
+//! by **push-pull gossip**: the cluster front end sends its ledger with
+//! every janitor ping ([`crate::coordinator::wire::codec::Request::LedgerSync`]),
+//! each server merges it into its own copy and answers with the merged
+//! view, and the front end merges that answer back. Merge is per-name
+//! max-epoch-wins, so gossip is commutative, associative, and idempotent —
+//! any gossip order converges to the same ledger.
+//!
+//! Epochs also gate reseeding: each server records, per namespace, the
+//! epoch of the data generation it holds (its *binding*, stamped by the
+//! front end after every create/restore). A restore is refused for a
+//! same-or-newer binding, so snapshot shipping can never overwrite fresher
+//! data with an older generation.
+//!
+//! Persistence sits next to the snapshots it protects: the front end
+//! writes `LEDGER.json` under `sync_dir`, a `serve --state-dir` server
+//! writes it under its state dir, both via write-temp-then-rename.
+//!
+//! Locking: the shared form is [`SharedLedger`], class `cluster.ledger` —
+//! a leaf lock. All file I/O happens on clones taken *outside* the guard
+//! (`no-blocking-under-lock` pass), and the `with`/`snapshot` API makes
+//! holding the guard across anything else impossible by construction.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::coordinator::error::GbfError;
+use crate::infra::json::{self, Json};
+use crate::infra::sync::{lock_unpoisoned, Mutex};
+
+/// The recorded state of one namespace name: the epoch of its latest
+/// lifecycle event and whether that event was a drop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LedgerEntry {
+    pub epoch: u64,
+    pub tombstone: bool,
+}
+
+/// The replicated lifecycle ledger: name → latest entry, plus the next
+/// epoch to mint (always strictly greater than every recorded epoch).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Ledger {
+    entries: BTreeMap<String, LedgerEntry>,
+    next_epoch: u64,
+}
+
+impl Default for Ledger {
+    fn default() -> Ledger {
+        Ledger::new()
+    }
+}
+
+impl Ledger {
+    pub fn new() -> Ledger {
+        Ledger { entries: BTreeMap::new(), next_epoch: 1 }
+    }
+
+    /// Rebuild from decoded parts (wire codec, JSON). The mint counter is
+    /// clamped above every entry epoch so a hostile or stale encoding can
+    /// never make the ledger mint a non-monotonic epoch.
+    pub fn from_parts(next_epoch: u64, entries: Vec<(String, LedgerEntry)>) -> Ledger {
+        let mut ledger = Ledger { entries: entries.into_iter().collect(), next_epoch: next_epoch.max(1) };
+        let floor = ledger.entries.values().map(|e| e.epoch).max().unwrap_or(0);
+        ledger.next_epoch = ledger.next_epoch.max(floor + 1);
+        ledger
+    }
+
+    /// The next epoch this ledger would mint (wire codec + persistence).
+    pub fn next_epoch(&self) -> u64 {
+        self.next_epoch
+    }
+
+    pub fn entry(&self, name: &str) -> Option<LedgerEntry> {
+        self.entries.get(name).copied()
+    }
+
+    pub fn is_tombstoned(&self, name: &str) -> bool {
+        self.entries.get(name).is_some_and(|e| e.tombstone)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, LedgerEntry)> {
+        self.entries.iter().map(|(name, entry)| (name.as_str(), *entry))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn mint(&mut self) -> u64 {
+        let epoch = self.next_epoch;
+        self.next_epoch += 1;
+        epoch
+    }
+
+    /// Record that `name` is (re)created live; returns the minted epoch.
+    pub fn record_live(&mut self, name: &str) -> u64 {
+        let epoch = self.mint();
+        self.entries.insert(name.to_string(), LedgerEntry { epoch, tombstone: false });
+        epoch
+    }
+
+    /// Record that `name` is dropped; the tombstone outlives the data.
+    pub fn record_drop(&mut self, name: &str) -> u64 {
+        let epoch = self.mint();
+        self.entries.insert(name.to_string(), LedgerEntry { epoch, tombstone: true });
+        epoch
+    }
+
+    /// Merge another ledger in: per name the higher epoch wins (ties keep
+    /// the local entry — same epoch means same event, entries are only
+    /// ever minted once). Returns whether anything local changed.
+    pub fn merge(&mut self, other: &Ledger) -> bool {
+        let mut changed = false;
+        for (name, entry) in &other.entries {
+            let known = self.entries.get(name).map(|e| e.epoch).unwrap_or(0);
+            if entry.epoch > known {
+                self.entries.insert(name.clone(), *entry);
+                changed = true;
+            }
+        }
+        if other.next_epoch > self.next_epoch {
+            self.next_epoch = other.next_epoch;
+            changed = true;
+        }
+        changed
+    }
+
+    // ---- persistence (JSON, next to the snapshots it protects) ----
+
+    pub fn to_json(&self) -> String {
+        let entries = self
+            .entries
+            .iter()
+            .map(|(name, e)| {
+                Json::obj(vec![
+                    ("name", Json::str(name.as_str())),
+                    ("epoch", Json::Int(e.epoch as i64)),
+                    ("tombstone", Json::Bool(e.tombstone)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("next_epoch", Json::Int(self.next_epoch as i64)), ("entries", Json::Arr(entries))])
+            .to_string()
+    }
+
+    pub fn from_json(text: &str) -> Result<Ledger, GbfError> {
+        let bad = |e: anyhow::Error| GbfError::Backend(format!("ledger decode: {e:#}"));
+        let root = json::parse(text).map_err(bad)?;
+        let next_epoch = root.expect("next_epoch").and_then(Json::as_u64).map_err(bad)?;
+        let mut entries = Vec::new();
+        for item in root.expect("entries").and_then(Json::as_arr).map_err(bad)? {
+            let name = item.expect("name").and_then(Json::as_str).map_err(bad)?.to_string();
+            let epoch = item.expect("epoch").and_then(Json::as_u64).map_err(bad)?;
+            let tombstone = item.expect("tombstone").and_then(Json::as_bool).map_err(bad)?;
+            entries.push((name, LedgerEntry { epoch, tombstone }));
+        }
+        Ok(Ledger::from_parts(next_epoch, entries))
+    }
+
+    /// Durable write: temp file + rename, so a crash mid-write leaves
+    /// either the old ledger or the new one, never a torn file.
+    pub fn save(&self, path: &Path) -> Result<(), GbfError> {
+        let io = |e: std::io::Error| GbfError::Backend(format!("ledger save {}: {e}", path.display()));
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).map_err(io)?;
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json()).map_err(io)?;
+        std::fs::rename(&tmp, path).map_err(io)?;
+        Ok(())
+    }
+
+    /// Load a previously saved ledger; a missing file is an empty ledger
+    /// (first boot), a present-but-corrupt file is a typed error.
+    pub fn load(path: &Path) -> Result<Ledger, GbfError> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Ledger::from_json(&text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Ledger::new()),
+            Err(e) => Err(GbfError::Backend(format!("ledger load {}: {e}", path.display()))),
+        }
+    }
+}
+
+/// The shared form of the ledger: one classed mutex (`cluster.ledger`,
+/// a leaf class) whose guard cannot escape — callers pass closures, so
+/// no I/O or second lock acquisition can happen under it.
+pub struct SharedLedger {
+    inner: Mutex<Ledger>,
+}
+
+impl SharedLedger {
+    pub fn new(ledger: Ledger) -> SharedLedger {
+        SharedLedger { inner: Mutex::new_class("cluster.ledger", ledger) }
+    }
+
+    /// Run `f` under the guard; the short closure scope is the whole
+    /// critical section.
+    pub fn with<R>(&self, f: impl FnOnce(&mut Ledger) -> R) -> R {
+        f(&mut lock_unpoisoned(&self.inner))
+    }
+
+    /// Clone the current ledger out (for gossip or persistence — both
+    /// happen outside the guard).
+    pub fn snapshot(&self) -> Ledger {
+        lock_unpoisoned(&self.inner).clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epochs_are_monotonic_across_event_kinds() {
+        let mut l = Ledger::new();
+        let e1 = l.record_live("a");
+        let e2 = l.record_drop("a");
+        let e3 = l.record_live("b");
+        assert!(e1 < e2 && e2 < e3);
+        assert_eq!(l.entry("a"), Some(LedgerEntry { epoch: e2, tombstone: true }));
+        assert!(l.is_tombstoned("a"));
+        assert!(!l.is_tombstoned("b"));
+        assert!(!l.is_tombstoned("never-seen"));
+    }
+
+    #[test]
+    fn merge_is_max_epoch_wins_and_idempotent() {
+        let mut a = Ledger::new();
+        a.record_live("ns");
+        let mut b = a.clone();
+        b.record_drop("ns"); // b is ahead: the drop happened while "a's replica" was down
+        b.record_live("other");
+
+        assert!(a.merge(&b), "first merge pulls in the drop");
+        assert!(a.is_tombstoned("ns"));
+        assert_eq!(a.entry("other"), b.entry("other"));
+        assert!(!a.merge(&b), "second merge is a no-op");
+
+        // the stale side can no longer push the resurrected entry back
+        let mut stale = Ledger::new();
+        stale.record_live("ns"); // epoch 1, far behind the tombstone
+        assert!(!b.merge(&stale) || b.is_tombstoned("ns"));
+        assert!(b.is_tombstoned("ns"));
+    }
+
+    #[test]
+    fn merge_advances_the_mint_counter_past_remote_epochs() {
+        let mut a = Ledger::new();
+        let mut b = Ledger::new();
+        for i in 0..5 {
+            b.record_live(&format!("ns-{i}"));
+        }
+        a.merge(&b);
+        let fresh = a.record_live("new");
+        assert!(fresh > b.iter().map(|(_, e)| e.epoch).max().unwrap_or(0), "minted epoch must beat every merged one");
+    }
+
+    #[test]
+    fn json_round_trips_and_rejects_garbage() {
+        let mut l = Ledger::new();
+        l.record_live("keep");
+        l.record_drop("gone");
+        let text = l.to_json();
+        assert_eq!(Ledger::from_json(&text).unwrap(), l);
+
+        for bad in ["", "{", "[]", r#"{"next_epoch": 1}"#, r#"{"next_epoch": -2, "entries": []}"#] {
+            let err = Ledger::from_json(bad).unwrap_err();
+            assert!(matches!(err, GbfError::Backend(ref m) if m.contains("ledger decode")), "{bad:?} -> {err}");
+        }
+    }
+
+    #[test]
+    fn from_parts_clamps_a_lying_mint_counter() {
+        let l = Ledger::from_parts(0, vec![("x".into(), LedgerEntry { epoch: 7, tombstone: false })]);
+        let mut l2 = l.clone();
+        assert!(l2.record_live("y") > 7);
+    }
+
+    #[test]
+    fn save_load_round_trips_and_missing_file_is_empty() {
+        let dir = std::env::temp_dir().join(format!("gbf-ledger-test-{}", std::process::id()));
+        let path = dir.join("LEDGER.json");
+        let mut l = Ledger::new();
+        l.record_live("ns");
+        l.record_drop("dead");
+        l.save(&path).unwrap();
+        assert_eq!(Ledger::load(&path).unwrap(), l);
+        assert_eq!(Ledger::load(&dir.join("absent.json")).unwrap(), Ledger::new());
+        std::fs::write(&path, "not json").unwrap();
+        assert!(Ledger::load(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shared_ledger_hands_out_consistent_snapshots() {
+        let shared = SharedLedger::new(Ledger::new());
+        let epoch = shared.with(|l| l.record_live("ns"));
+        let snap = shared.snapshot();
+        assert_eq!(snap.entry("ns"), Some(LedgerEntry { epoch, tombstone: false }));
+    }
+}
+
+/// Bounded-exhaustive interleaving models for the `cluster.ledger` class:
+/// run with `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_`.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use crate::infra::check;
+    use crate::infra::sync::{thread, Arc};
+
+    /// Concurrent mints never collide and never go backwards: a writer
+    /// recording drops races a writer recording creates, and every epoch
+    /// handed out is unique under any interleaving.
+    #[test]
+    fn loom_ledger_epochs_stay_unique_under_races() {
+        check::model(|| {
+            let shared = Arc::new(SharedLedger::new(Ledger::new()));
+            let dropper = {
+                let shared = Arc::clone(&shared);
+                thread::spawn(move || {
+                    let a = shared.with(|l| l.record_drop("ns"));
+                    let b = shared.with(|l| l.record_drop("ns"));
+                    (a, b)
+                })
+            };
+            let c = shared.with(|l| l.record_live("ns"));
+            let (a, b) = dropper.join().unwrap();
+            assert!(a < b, "per-thread mints must be ordered");
+            assert!(c != a && c != b, "epochs must be unique across threads");
+            let last = a.max(b).max(c);
+            let final_entry = shared.snapshot().entry("ns").unwrap();
+            assert_eq!(final_entry.epoch, last, "highest epoch must be the surviving entry");
+            assert_eq!(final_entry.tombstone, last != c);
+        });
+    }
+
+    /// Gossip convergence: merging concurrently from two remote ledgers
+    /// commutes — after both merges land, the result contains the max
+    /// epoch per name no matter the interleaving.
+    #[test]
+    fn loom_ledger_merge_commutes() {
+        check::model(|| {
+            let mut ra = Ledger::new();
+            ra.record_live("ns"); // epoch 1, live
+            let mut rb = ra.clone();
+            rb.record_drop("ns"); // epoch 2, tombstone
+
+            let shared = Arc::new(SharedLedger::new(Ledger::new()));
+            let t = {
+                let shared = Arc::clone(&shared);
+                thread::spawn(move || shared.with(|l| l.merge(&ra)))
+            };
+            shared.with(|l| l.merge(&rb));
+            t.join().unwrap();
+            let merged = shared.snapshot();
+            assert!(merged.is_tombstoned("ns"), "the newer tombstone must win both orders");
+            assert_eq!(merged.entry("ns").unwrap().epoch, 2);
+        });
+    }
+}

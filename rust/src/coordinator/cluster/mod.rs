@@ -22,6 +22,24 @@
 //!   their namespaces by shipping a snapshot from a live replica through
 //!   the shared `sync_dir` (the persist manifest+shards unit, routed
 //!   over the existing wire snapshot/restore calls).
+//! * **Lifecycle ledger** ([`ledger`]): every create/drop/restore mints
+//!   a monotonically increasing epoch in a small replicated ledger,
+//!   persisted to `sync_dir/LEDGER.json` and gossiped to every live
+//!   server on janitor passes. Drops become **tombstones**: a replica
+//!   that slept through a cluster-wide drop learns of it from the
+//!   gossiped ledger at rejoin and deletes its copy instead of
+//!   re-advertising it. Reseeding is epoch-checked end to end — the
+//!   source's epoch is stamped onto the shipped generation and the
+//!   server refuses a stamp older than what it already holds
+//!   ([`GbfError::StaleEpoch`]) — so a restore can never be silently
+//!   overwritten by a same-or-older snapshot.
+//! * **Dynamic membership**: [`ClusterFilterService::add_server`] /
+//!   [`ClusterFilterService::remove_server`] change the fleet at
+//!   runtime (also reachable over the wire as the `cluster-admin`
+//!   request, via `gbf cluster-admin`). Rendezvous placement remaps
+//!   minimally; the janitor migrates namespaces onto new owners and
+//!   retires stray copies only after every new owner provably holds
+//!   the data.
 //!
 //! ## Error mapping
 //!
@@ -42,24 +60,31 @@
 //!
 //! Re-replication ships snapshots **by path**: fleet servers must share
 //! a filesystem view of `sync_dir` (true for the loopback fleets the CLI
-//! and tests run; rsync-style shipping is a follow-on). A namespace
-//! dropped cluster-wide while a replica was down is not garbage-
-//! collected on rejoin (no tombstones yet); re-create it or restart the
-//! replica clean.
+//! and tests run; rsync-style shipping is a follow-on). A config that
+//! names non-loopback servers without a `sync_dir` is rejected at
+//! validation instead of silently landing snapshots in a per-host temp
+//! dir. A server removed from the fleet keeps whatever copies it held —
+//! the cluster stops routing to it; wiping it is the operator's call.
 //!
 //! ## Locking
 //!
-//! Four new classes, all leaf-tier: `cluster.health` (health counters),
+//! Seven classes. `cluster.topology` (config + clients behind one
+//! RwLock, so a runtime membership change swaps both atomically; its
+//! write path resizes `cluster.health` under the guard — the one nested
+//! edge, acyclic). `cluster.ledger` (the epoch ledger; the guard cannot
+//! escape [`ledger::SharedLedger::with`], so ledger file I/O provably
+//! happens outside the lock). `cluster.health` (health counters),
 //! `cluster.janitor`/`cluster.janitor-wake` (janitor parking), and the
 //! per-call completion states `cluster.write`/`cluster.read`. Completion
 //! waits always *take* work out of the state mutex and block with no
-//! guard held, so the witness sees only acyclic, short-lived nesting.
+//! guard held; wire I/O never runs under any cluster guard.
 
 pub mod health;
+pub mod ledger;
 pub mod placement;
 
-use std::collections::BTreeSet;
-use std::path::Path;
+use std::collections::{BTreeSet, HashMap};
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::api::{FilterApi, FilterDataPlane};
@@ -70,19 +95,48 @@ use crate::coordinator::wire::client::{is_connection_error, RemoteFilterHandle, 
 use crate::coordinator::wire::server::WireCatalog;
 use crate::filter::AnswerBits;
 use crate::infra::sync::atomic::{AtomicU64, Ordering};
-use crate::infra::sync::{lock_unpoisoned, thread, Arc, Condvar, Mutex};
+use crate::infra::sync::{lock_unpoisoned, thread, Arc, Condvar, Mutex, RwLock};
 
 pub use health::HealthTracker;
+pub use ledger::{Ledger, LedgerEntry, SharedLedger};
 pub use placement::ClusterConfig;
+
+/// The ledger's file name inside `sync_dir`.
+const LEDGER_FILE: &str = "LEDGER.json";
+
+/// How many snapshot→restore rounds one reconcile pass will ship for a
+/// single namespace before handing the tail to the next janitor pass.
+/// Each round only re-runs when acked writes landed on the source while
+/// the previous round was in flight, so under sustained write load this
+/// bounds a pass without ever declaring a behind replica caught up.
+const RESEED_ROUNDS: usize = 3;
+
+/// The mutable half of the topology: config plus one lazy wire client
+/// per server, indexed like `config.servers`. Both swap together under
+/// one guard so placement, routing and health can never disagree about
+/// fleet size mid-membership-change.
+struct Topology {
+    config: ClusterConfig,
+    clients: Vec<RemoteFilterService>,
+}
 
 /// Shared state behind every handle, completion and the janitor.
 struct ClusterInner {
-    config: ClusterConfig,
-    /// One lazy wire client per server, indexed like `config.servers`.
-    clients: Vec<RemoteFilterService>,
+    /// Guarded topology. Guarded regions are tiny clone-in/clone-out
+    /// scopes: clients are cheap `Arc` clones, so wire calls run on a
+    /// clone with no guard held, and in-flight operations survive a
+    /// concurrent membership change on the clients they started with.
+    topology: RwLock<Topology>,
+    /// The replicated lifecycle ledger (epochs + tombstones).
+    ledger: SharedLedger,
+    /// Where the ledger persists between runs (`sync_dir/LEDGER.json`);
+    /// `None` when `sync_dir` is empty — loopback and test fleets keep
+    /// it in memory only.
+    ledger_path: Option<PathBuf>,
     health: HealthTracker,
     /// Janitor parking: flag says "shut down", condvar wakes it early
-    /// (shutdown, or a recovery that deserves a prompt re-replication).
+    /// (shutdown, a recovery, or a membership change that deserves a
+    /// prompt re-replication).
     stop: Mutex<bool>,
     wake: Condvar,
     /// Uniquifies re-replication snapshot directories.
@@ -104,15 +158,19 @@ impl ClusterFilterService {
         config.validate()?;
         let mut clients = Vec::with_capacity(config.servers.len());
         for addr in &config.servers {
-            let client = RemoteFilterService::connect_lazy(addr.as_str())
-                .map_err(|e| GbfError::InvalidConfig(format!("cluster server {addr:?}: {e:#}")))?;
-            clients.push(client);
+            clients.push(connect_client(addr)?);
         }
+        let ledger_path = ledger_path_for(&config.sync_dir);
+        let ledger = match &ledger_path {
+            Some(path) => Ledger::load(path)?,
+            None => Ledger::new(),
+        };
         let fleet = config.servers.len();
         let heal_interval_ms = config.heal_interval_ms;
         let inner = Arc::new(ClusterInner {
-            config,
-            clients,
+            topology: RwLock::new_class("cluster.topology", Topology { config, clients }),
+            ledger: SharedLedger::new(ledger),
+            ledger_path,
             health: HealthTracker::new(fleet),
             stop: Mutex::new_class("cluster.janitor", false),
             wake: Condvar::new_class("cluster.janitor-wake"),
@@ -131,9 +189,64 @@ impl ClusterFilterService {
         Ok(ClusterFilterService { inner, janitor })
     }
 
-    /// The cluster topology this service routes over.
-    pub fn config(&self) -> &ClusterConfig {
-        &self.inner.config
+    /// A snapshot of the topology this service currently routes over
+    /// (membership can change at runtime, so this is a copy, not a
+    /// reference into live state).
+    pub fn config(&self) -> ClusterConfig {
+        self.inner.topology.read().unwrap().config.clone()
+    }
+
+    /// The ledger as this front end currently knows it (tests and
+    /// tooling; the authoritative copy converges via gossip).
+    pub fn ledger(&self) -> Ledger {
+        self.inner.ledger.snapshot()
+    }
+
+    /// Add `addr` to the fleet at runtime. The new server joins at the
+    /// end of the list, so existing indices — the currency of placement
+    /// and overrides — are untouched; it starts live and empty, and the
+    /// janitor (woken here) migrates onto it whatever rendezvous
+    /// placement now assigns it.
+    pub fn add_server(&self, addr: &str) -> Result<(), GbfError> {
+        let client = connect_client(addr)?; // lazy: no dial under the guard
+        {
+            let mut topo = self.inner.topology.write().unwrap();
+            let mut next = topo.config.clone();
+            next.add_server(addr)?;
+            topo.clients.push(client);
+            // grow health under the same guard so clients, config and
+            // health slots can never disagree about fleet size
+            self.inner.health.grow_to(next.servers.len());
+            topo.config = next;
+        }
+        self.inner.wake.notify_all();
+        Ok(())
+    }
+
+    /// Remove `addr` from the fleet at runtime. Namespaces placed on it
+    /// remap to the survivors; the janitor (woken here) reseeds any copy
+    /// that now lacks a full replica set. The departed server keeps its
+    /// data — the cluster just stops routing to it.
+    pub fn remove_server(&self, addr: &str) -> Result<(), GbfError> {
+        {
+            let mut topo = self.inner.topology.write().unwrap();
+            let mut next = topo.config.clone();
+            next.remove_server(addr)?;
+            let gone = topo
+                .config
+                .servers
+                .iter()
+                .position(|s| s == addr)
+                .expect("remove_server validated the address exists");
+            topo.clients.remove(gone);
+            // indices above `gone` shifted down: stale health attribution
+            // would mislead routing, so restart everyone as live and let
+            // the next probes re-learn reality
+            self.inner.health.reset(next.servers.len());
+            topo.config = next;
+        }
+        self.inner.wake.notify_all();
+        Ok(())
     }
 
     /// Probe every server and reconcile every live one, synchronously.
@@ -141,7 +254,8 @@ impl ClusterFilterService {
     /// use it to make recovery deterministic instead of sleeping for a
     /// janitor tick.
     pub fn reconcile_now(&self) {
-        for (server, client) in self.inner.clients.iter().enumerate() {
+        let (_, clients) = self.inner.topo();
+        for (server, client) in clients.iter().enumerate() {
             let result = client.ping_now();
             self.inner.note(server, result.err().as_ref());
         }
@@ -149,11 +263,12 @@ impl ClusterFilterService {
     }
 
     pub fn create_filter_spec(&self, name: &str, spec: FilterSpec) -> Result<ClusterHandle, GbfError> {
-        let placed = self.inner.config.placement(name);
+        let (config, clients) = self.inner.topo();
+        let placed = config.placement(name);
         let mut legs = Vec::new();
         let mut first_app_error = None;
         for &server in &placed {
-            match self.inner.clients[server].create_filter_spec(name, spec.clone()) {
+            match clients[server].create_filter_spec(name, spec.clone()) {
                 Ok(handle) => {
                     self.inner.note(server, None);
                     legs.push(Leg { server, handle });
@@ -170,22 +285,24 @@ impl ClusterFilterService {
             // catalog mutations are strict: undo this call's successes so
             // a half-created namespace doesn't linger on some replicas
             for leg in &legs {
-                let _ = self.inner.clients[leg.server].drop_filter(name);
+                let _ = clients[leg.server].drop_filter(name);
             }
             return Err(e);
         }
         if legs.is_empty() {
             return Err(GbfError::NoQuorum { name: name.to_string(), replicas: placed.len() });
         }
+        self.inner.stamp_new_generation(name, &clients, &legs);
         Ok(ClusterHandle { inner: Arc::clone(&self.inner), name: name.to_string(), legs })
     }
 
     pub fn drop_filter(&self, name: &str) -> Result<(), GbfError> {
-        let placed = self.inner.config.placement(name);
+        let (config, clients) = self.inner.topo();
+        let placed = config.placement(name);
         let mut dropped_somewhere = false;
         let mut first_app_error = None;
         for &server in &placed {
-            match self.inner.clients[server].drop_filter(name) {
+            match clients[server].drop_filter(name) {
                 Ok(()) => {
                     self.inner.note(server, None);
                     dropped_somewhere = true;
@@ -202,20 +319,27 @@ impl ClusterFilterService {
             return Err(e);
         }
         if dropped_somewhere {
+            // tombstone the name: replicas that slept through this drop
+            // learn of it from gossip at rejoin and delete their copy
+            // instead of re-advertising it
+            self.inner.ledger.with(|l| l.record_drop(name));
+            self.inner.persist_ledger();
             Ok(())
         } else {
             Err(GbfError::NoQuorum { name: name.to_string(), replicas: placed.len() })
         }
     }
 
-    /// Union of namespaces across every reachable server, sorted (a
-    /// replica that is down must not hide namespaces it merely hosts a
-    /// copy of).
+    /// Union of namespaces across every reachable server, sorted, minus
+    /// the tombstoned (a replica that is down must not hide namespaces
+    /// it merely hosts a copy of — and a replica that overslept a drop
+    /// must not resurrect one the ledger says is dead).
     pub fn list_filters(&self) -> Result<Vec<String>, GbfError> {
+        let (_, clients) = self.inner.topo();
         let mut union = BTreeSet::new();
         let mut reached_any = false;
         let mut first_err = None;
-        for (server, client) in self.inner.clients.iter().enumerate() {
+        for (server, client) in clients.iter().enumerate() {
             match client.list_filters() {
                 Ok(names) => {
                     self.inner.note(server, None);
@@ -231,7 +355,8 @@ impl ClusterFilterService {
             }
         }
         if reached_any {
-            Ok(union.into_iter().collect())
+            let ledger = self.inner.ledger.snapshot();
+            Ok(union.into_iter().filter(|name| !ledger.is_tombstoned(name)).collect())
         } else {
             Err(first_err.unwrap_or_else(|| GbfError::Backend("cluster has no servers".into())))
         }
@@ -241,11 +366,12 @@ impl ClusterFilterService {
     /// order), failing over like a read — so `stats().metrics.queries`
     /// agrees with where the queries actually went.
     pub fn stats(&self, name: &str) -> Result<NamespaceStats, GbfError> {
-        let placed = self.inner.config.placement(name);
+        let (config, clients) = self.inner.topo();
+        let placed = config.placement(name);
         let order = self.inner.health.attempt_order(&placed);
         let mut first_app_error = None;
         for &server in &order {
-            match self.inner.clients[server].stats(name) {
+            match clients[server].stats(name) {
                 Ok(stats) => {
                     self.inner.note(server, None);
                     return Ok(stats);
@@ -266,11 +392,12 @@ impl ClusterFilterService {
     /// replica holds the full namespace). `dir` resolves on the server
     /// that takes the snapshot, like the wire transport underneath.
     pub fn snapshot(&self, name: &str, dir: &str) -> Result<(), GbfError> {
-        let placed = self.inner.config.placement(name);
+        let (config, clients) = self.inner.topo();
+        let placed = config.placement(name);
         let order = self.inner.health.attempt_order(&placed);
         let mut first_app_error = None;
         for &server in &order {
-            match self.inner.clients[server].snapshot(name, dir) {
+            match clients[server].snapshot(name, dir) {
                 Ok(()) => {
                     self.inner.note(server, None);
                     return Ok(());
@@ -288,12 +415,17 @@ impl ClusterFilterService {
     }
 
     /// Restore fans out to the whole replica set, strict like create.
+    /// The restored data is a fresh generation: it mints a new ledger
+    /// epoch (newer than any prior drop, so a restore un-tombstones the
+    /// name) and stamps it onto every leg, which in turn makes an older
+    /// in-flight reseed of the same name refuse to overwrite it.
     pub fn restore(&self, name: &str, dir: &str) -> Result<ClusterHandle, GbfError> {
-        let placed = self.inner.config.placement(name);
+        let (config, clients) = self.inner.topo();
+        let placed = config.placement(name);
         let mut legs = Vec::new();
         let mut first_app_error = None;
         for &server in &placed {
-            match self.inner.clients[server].restore(name, dir) {
+            match clients[server].restore(name, dir) {
                 Ok(handle) => {
                     self.inner.note(server, None);
                     legs.push(Leg { server, handle });
@@ -308,13 +440,14 @@ impl ClusterFilterService {
         }
         if let Some(e) = first_app_error {
             for leg in &legs {
-                let _ = self.inner.clients[leg.server].drop_filter(name);
+                let _ = clients[leg.server].drop_filter(name);
             }
             return Err(e);
         }
         if legs.is_empty() {
             return Err(GbfError::NoQuorum { name: name.to_string(), replicas: placed.len() });
         }
+        self.inner.stamp_new_generation(name, &clients, &legs);
         Ok(ClusterHandle { inner: Arc::clone(&self.inner), name: name.to_string(), legs })
     }
 
@@ -322,11 +455,12 @@ impl ClusterFilterService {
     /// `name`. Any one live leg is enough — missing replicas are healed
     /// by the janitor, not by failing the caller.
     pub fn handle(&self, name: &str) -> Result<ClusterHandle, GbfError> {
-        let placed = self.inner.config.placement(name);
+        let (config, clients) = self.inner.topo();
+        let placed = config.placement(name);
         let mut legs = Vec::new();
         let mut first_app_error = None;
         for &server in &placed {
-            match self.inner.clients[server].handle(name) {
+            match clients[server].handle(name) {
                 Ok(handle) => {
                     self.inner.note(server, None);
                     legs.push(Leg { server, handle });
@@ -360,8 +494,22 @@ impl Drop for ClusterFilterService {
     }
 }
 
+fn connect_client(addr: &str) -> Result<RemoteFilterService, GbfError> {
+    RemoteFilterService::connect_lazy(addr)
+        .map_err(|e| GbfError::InvalidConfig(format!("cluster server {addr:?}: {e:#}")))
+}
+
+fn ledger_path_for(sync_dir: &str) -> Option<PathBuf> {
+    if sync_dir.is_empty() {
+        None
+    } else {
+        Some(Path::new(sync_dir).join(LEDGER_FILE))
+    }
+}
+
 fn janitor_loop(inner: &Arc<ClusterInner>) {
-    let interval = Duration::from_millis(inner.config.heal_interval_ms.max(1));
+    let interval =
+        Duration::from_millis(inner.topology.read().unwrap().config.heal_interval_ms.max(1));
     loop {
         {
             let stop = lock_unpoisoned(&inner.stop);
@@ -382,7 +530,43 @@ fn janitor_loop(inner: &Arc<ClusterInner>) {
     }
 }
 
+/// Per-server bindings gossip answer: namespace → epoch of the data
+/// generation that server holds; `None` for servers that did not answer.
+type FleetBindings = Vec<Option<HashMap<String, u64>>>;
+
 impl ClusterInner {
+    /// Clone the current topology out of its lock. Wire calls then run
+    /// against the clone with no guard held (clients are `Arc`-backed,
+    /// so this is cheap and in-flight calls survive membership changes).
+    fn topo(&self) -> (ClusterConfig, Vec<RemoteFilterService>) {
+        let g = self.topology.read().unwrap();
+        (g.config.clone(), g.clients.clone())
+    }
+
+    /// Write the ledger to `sync_dir/LEDGER.json`. Best-effort: fleets
+    /// without a sync_dir keep it in memory, and a full disk must not
+    /// fail the lifecycle call whose epoch is already minted — gossip
+    /// re-spreads the entry on the next pass.
+    fn persist_ledger(&self) {
+        if let Some(path) = &self.ledger_path {
+            let _ = self.ledger.snapshot().save(path);
+        }
+    }
+
+    /// Mint a fresh epoch for `name` (create/restore just fanned out
+    /// successfully) and stamp it onto every leg so each server knows
+    /// which data generation it is holding. Stamps are best-effort: a
+    /// leg that misses one keeps binding 0 and simply looks maximally
+    /// stale to the janitor, which re-stamps it on the next reseed.
+    fn stamp_new_generation(&self, name: &str, clients: &[RemoteFilterService], legs: &[Leg]) {
+        let epoch = self.ledger.with(|l| l.record_live(name));
+        self.persist_ledger();
+        for leg in legs {
+            let result = clients[leg.server].stamp(name, leg.handle.instance(), epoch);
+            self.note(leg.server, result.err().as_ref());
+        }
+    }
+
     /// Fold one wire-leg outcome into the health tracker. Any reply —
     /// even a typed application error — proves the connection, so only
     /// connection errors count against a server. A recovery pokes the
@@ -404,31 +588,79 @@ impl ClusterInner {
     /// live ones. Idempotent — reconciliation re-ships a namespace only
     /// when a replica is missing it or provably behind.
     fn heal_pass(&self) {
+        let (_, clients) = self.topo();
         for server in self.health.down_servers() {
             // ping_now clears the client's dial cooldown: the janitor is
             // the pacer for recovery probes
-            let result = self.clients[server].ping_now();
+            let Some(client) = clients.get(server) else { continue };
+            let result = client.ping_now();
             self.note(server, result.err().as_ref());
         }
         self.reconcile_live_servers();
     }
 
+    /// Gossip the ledger with every live server, then bring each one up
+    /// to date. Gossip runs first on purpose: merging tombstones — and
+    /// letting each server apply them to its own catalog inside its
+    /// `ledger_sync` handler — is what turns "dropped while the replica
+    /// was down" into a deletion at rejoin instead of a resurrection,
+    /// and the bindings that come back steer reseed source selection.
     fn reconcile_live_servers(&self) {
-        for server in 0..self.clients.len() {
+        let (config, clients) = self.topo();
+        let bindings = self.gossip(&clients);
+        for server in 0..clients.len() {
             if !self.health.is_down(server) {
-                self.reconcile_server(server);
+                self.reconcile_server(&config, &clients, server, &bindings);
             }
         }
     }
 
-    /// Bring one live server up to date with the placement function:
-    /// re-seed namespaces it should hold but is missing (or behind on),
-    /// drop copies it no longer owns.
-    fn reconcile_server(&self, target: usize) {
-        let Ok(held) = self.clients[target].list_filters() else { return };
+    /// Push-pull the ledger with every live server: send ours, merge
+    /// back theirs (max-epoch-wins, so order does not matter), collect
+    /// each server's advertised bindings.
+    fn gossip(&self, clients: &[RemoteFilterService]) -> FleetBindings {
+        let local = self.ledger.snapshot();
+        let mut merged = local.clone();
+        let mut changed = false;
+        let mut fleet_bindings = Vec::with_capacity(clients.len());
+        for (server, client) in clients.iter().enumerate() {
+            if self.health.is_down(server) {
+                fleet_bindings.push(None);
+                continue;
+            }
+            match client.ledger_sync(&local) {
+                Ok((remote, bindings)) => {
+                    self.note(server, None);
+                    changed |= merged.merge(&remote);
+                    fleet_bindings.push(Some(bindings.into_iter().collect()));
+                }
+                Err(e) => {
+                    self.note(server, Some(&e));
+                    fleet_bindings.push(None);
+                }
+            }
+        }
+        if changed && self.ledger.with(|l| l.merge(&merged)) {
+            self.persist_ledger();
+        }
+        fleet_bindings
+    }
+
+    /// Bring one live server up to date with placement and the ledger:
+    /// re-seed namespaces it should hold but is missing or behind on,
+    /// retire copies it no longer owns. Tombstoned namespaces are
+    /// skipped — gossip already handed every live server its deletion.
+    fn reconcile_server(
+        &self,
+        config: &ClusterConfig,
+        clients: &[RemoteFilterService],
+        target: usize,
+        bindings: &FleetBindings,
+    ) {
+        let Ok(held) = clients[target].list_filters() else { return };
         let held: BTreeSet<String> = held.into_iter().collect();
         let mut all = held.clone();
-        for (i, client) in self.clients.iter().enumerate() {
+        for (i, client) in clients.iter().enumerate() {
             if i == target || self.health.is_down(i) {
                 continue;
             }
@@ -436,53 +668,147 @@ impl ClusterInner {
                 all.extend(names);
             }
         }
+        let ledger = self.ledger.snapshot();
         for ns in all {
-            let placed = self.config.placement(&ns);
+            if ledger.is_tombstoned(&ns) {
+                continue;
+            }
+            let placed = config.placement(&ns);
             if placed.contains(&target) {
-                self.reseed_if_behind(&ns, &placed, target, held.contains(&ns));
+                self.reseed_if_behind(clients, &ns, target, held.contains(&ns), bindings);
             } else if held.contains(&ns) {
-                // placement/override change moved this namespace away
-                let _ = self.clients[target].drop_filter(&ns);
+                self.retire_if_safe(clients, &ns, &placed, target);
             }
         }
     }
 
-    fn reseed_if_behind(&self, ns: &str, placed: &[usize], target: usize, target_has_it: bool) {
-        // pick the first live co-replica that actually holds the namespace
-        let mut source = None;
+    /// A placement/override/membership change moved `ns` off `target`.
+    /// Dropping the stray copy is only safe once the namespace's real
+    /// replica set provably holds at least everything the stray does —
+    /// right after `add_server` remaps a namespace, the stray may be
+    /// the only complete copy, and the new owners seed *from* it.
+    fn retire_if_safe(&self, clients: &[RemoteFilterService], ns: &str, placed: &[usize], target: usize) {
+        let Ok(stray) = clients[target].stats(ns) else { return };
         for &server in placed {
+            if self.health.is_down(server) {
+                return; // can't prove safety while an owner is down
+            }
+            match clients.get(server).map(|c| c.stats(ns)) {
+                Some(Ok(owner)) if owner.metrics.adds >= stray.metrics.adds => {}
+                _ => return, // an owner is missing the namespace or behind
+            }
+        }
+        let _ = clients[target].drop_filter(ns);
+    }
+
+    /// Re-seed `ns` onto `target` when it is missing the namespace or
+    /// provably behind. The checks, in order:
+    ///
+    /// * **Source selection**: the best live holder anywhere in the
+    ///   fleet — most adds, freshest bound epoch on a tie — not the
+    ///   first co-replica that answers (which may itself be stale after
+    ///   a partition), and not only placed servers (so migration after
+    ///   a membership change can pull from the old owner).
+    /// * **Epoch check**: never ship over a target whose bound epoch is
+    ///   newer than the source's; the post-restore stamp re-checks on
+    ///   the server side, so even a racing restore cannot be
+    ///   overwritten by this reseed.
+    /// * **Catch-up predicate**: equal adds is necessary but not
+    ///   sufficient — a diverged replica can tie on counters with
+    ///   different bits (there is deliberately no `deletes` counter to
+    ///   compare: no delete op exists, and the per-shard digests
+    ///   subsume any counter pair) — so a counter tie must also agree
+    ///   on every shard digest before the target counts as caught up.
+    /// * **Lost writes**: writes acked between the source snapshot and
+    ///   the target restore exist only on the source; re-check the
+    ///   source counter after restoring and ship again until it holds
+    ///   still (bounded per pass by [`RESEED_ROUNDS`]).
+    fn reseed_if_behind(
+        &self,
+        clients: &[RemoteFilterService],
+        ns: &str,
+        target: usize,
+        target_has_it: bool,
+        bindings: &FleetBindings,
+    ) {
+        let epoch_of = |server: usize| -> u64 {
+            bindings
+                .get(server)
+                .and_then(|b| b.as_ref())
+                .and_then(|b| b.get(ns).copied())
+                .unwrap_or(0)
+        };
+        let mut source: Option<(usize, NamespaceStats)> = None;
+        for (server, client) in clients.iter().enumerate() {
             if server == target || self.health.is_down(server) {
                 continue;
             }
-            if let Ok(stats) = self.clients[server].stats(ns) {
+            let Ok(stats) = client.stats(ns) else { continue };
+            let better = match &source {
+                None => true,
+                Some((cur, s)) => {
+                    (stats.metrics.adds, epoch_of(server)) > (s.metrics.adds, epoch_of(*cur))
+                }
+            };
+            if better {
                 source = Some((server, stats));
-                break;
             }
         }
         let Some((source, source_stats)) = source else { return };
+        let source_epoch = epoch_of(source);
         if target_has_it {
-            match self.clients[target].stats(ns) {
-                Ok(t) if t.metrics.adds >= source_stats.metrics.adds => return, // caught up
-                Ok(_) => {}
-                Err(_) => return, // target stopped answering; next pass retries
+            let Ok(t) = clients[target].stats(ns) else { return };
+            let target_epoch = epoch_of(target);
+            if target_epoch > source_epoch {
+                return; // target holds a newer generation; shipping would roll it back
+            }
+            if target_epoch == source_epoch && t.metrics.adds > source_stats.metrics.adds {
+                return; // target is ahead of every live holder; nothing to ship
+            }
+            if target_epoch == source_epoch && t.metrics.adds == source_stats.metrics.adds {
+                match (clients[target].digest(ns), clients[source].digest(ns)) {
+                    (Ok(td), Ok(sd)) if td == sd => return, // provably caught up
+                    _ => {} // diverged bits (or no proof): reseed
+                }
             }
         }
-        // ship: snapshot on the source, restore on the target, through
-        // the shared sync_dir (drop first — restore wants a fresh name)
-        let dir = self.sync_path(ns);
-        if self.clients[source].snapshot(ns, &dir).is_err() {
-            return;
+        for _round in 0..RESEED_ROUNDS {
+            let Ok(before) = clients[source].stats(ns) else { return };
+            let dir = self.sync_path(ns);
+            if clients[source].snapshot(ns, &dir).is_err() {
+                return;
+            }
+            let _ = clients[target].drop_filter(ns);
+            let restored = clients[target].restore(ns, &dir);
+            let _ = std::fs::remove_dir_all(&dir);
+            let Ok(handle) = restored else { return };
+            if source_epoch > 0 {
+                // bind the shipped generation; the server refuses a stamp
+                // older than what it holds, so a restore that raced this
+                // reseed keeps its fresher epoch
+                if let Err(e) = clients[target].stamp(ns, handle.instance(), source_epoch) {
+                    if matches!(e, GbfError::StaleEpoch { .. }) {
+                        return;
+                    }
+                }
+            }
+            match clients[source].stats(ns) {
+                // source held still through the ship: nothing was lost
+                Ok(after) if after.metrics.adds == before.metrics.adds => return,
+                // acked writes landed mid-ship; they live only on the
+                // source until the next round re-ships them
+                Ok(_) => continue,
+                Err(_) => return,
+            }
         }
-        let _ = self.clients[target].drop_filter(ns);
-        let _ = self.clients[target].restore(ns, &dir);
-        let _ = std::fs::remove_dir_all(&dir);
     }
 
     fn sync_path(&self, ns: &str) -> String {
-        let root = if self.config.sync_dir.is_empty() {
+        let sync_dir = self.topology.read().unwrap().config.sync_dir.clone();
+        let root = if sync_dir.is_empty() {
             std::env::temp_dir().join("gbf-cluster-sync").to_string_lossy().into_owned()
         } else {
-            self.config.sync_dir.clone()
+            sync_dir
         };
         // Relaxed: the counter only needs uniqueness, not ordering
         let seq = self.sync_seq.fetch_add(1, Ordering::Relaxed);
@@ -902,6 +1228,53 @@ impl WireCatalog for ClusterFilterService {
             Err(GbfError::NoSuchFilter(name.to_string()))
         }
     }
+
+    fn ledger_sync(&self, remote: &Ledger) -> Result<(Ledger, Vec<(String, u64)>), GbfError> {
+        // a gateway is a ledger peer like any server — merge and answer —
+        // but it holds no filter data itself, so it advertises no bindings
+        if self.inner.ledger.with(|l| l.merge(remote)) {
+            self.inner.persist_ledger();
+        }
+        Ok((self.inner.ledger.snapshot(), Vec::new()))
+    }
+
+    fn stamp(&self, _name: &str, _instance: u64, _epoch: u64) -> Result<(), GbfError> {
+        // bindings describe data generations a server physically holds;
+        // a gateway holds none, so a stamp is a harmless no-op
+        Ok(())
+    }
+
+    fn digest(&self, name: &str) -> Result<Vec<u64>, GbfError> {
+        // read-style failover: any replica's digest answers the call
+        let (config, clients) = self.inner.topo();
+        let placed = config.placement(name);
+        let order = self.inner.health.attempt_order(&placed);
+        let mut first_app_error = None;
+        for &server in &order {
+            match clients[server].digest(name) {
+                Ok(digest) => {
+                    self.inner.note(server, None);
+                    return Ok(digest);
+                }
+                Err(e) => {
+                    self.inner.note(server, Some(&e));
+                    if !is_connection_error(&e) && first_app_error.is_none() {
+                        first_app_error = Some(e);
+                    }
+                }
+            }
+        }
+        Err(first_app_error
+            .unwrap_or_else(|| GbfError::NoQuorum { name: name.to_string(), replicas: order.len() }))
+    }
+
+    fn cluster_admin(&self, add: bool, addr: &str) -> Result<(), GbfError> {
+        if add {
+            self.add_server(addr)
+        } else {
+            self.remove_server(addr)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -984,6 +1357,42 @@ mod tests {
         assert_ne!(a, b);
         assert!(a.contains("resync-ns-"), "{a}");
     }
+
+    /// Membership changes validate against the live topology and swap
+    /// config, clients and health slots together — no server needs to
+    /// be reachable for the bookkeeping itself.
+    #[test]
+    fn membership_changes_validate_and_swap_the_topology() {
+        let config =
+            ClusterConfig::new(vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()], 2).unwrap();
+        let cluster = ClusterFilterService::connect(config).unwrap();
+        assert!(matches!(cluster.add_server("127.0.0.1:1"), Err(GbfError::InvalidConfig(_))));
+        cluster.add_server("127.0.0.1:3").unwrap();
+        let grown = cluster.config();
+        assert_eq!(grown.servers.len(), 3);
+        assert_eq!(grown.servers[2], "127.0.0.1:3", "new server appends, indices stable");
+        assert!(matches!(cluster.remove_server("127.0.0.1:9"), Err(GbfError::InvalidConfig(_))));
+        cluster.remove_server("127.0.0.1:3").unwrap();
+        assert_eq!(cluster.config().servers.len(), 2);
+        // shrinking below the replication factor is refused
+        assert!(matches!(cluster.remove_server("127.0.0.1:2"), Err(GbfError::InvalidConfig(_))));
+        assert_eq!(cluster.config().servers.len(), 2);
+    }
+
+    /// The gateway answers ledger gossip like any peer: it merges the
+    /// remote ledger and echoes the union back, with no bindings.
+    #[test]
+    fn gateway_ledger_sync_merges_and_answers() {
+        let config = ClusterConfig::new(vec!["127.0.0.1:1".into()], 1).unwrap();
+        let cluster = ClusterFilterService::connect(config).unwrap();
+        let mut remote = Ledger::new();
+        remote.record_live("ns");
+        remote.record_drop("ns");
+        let (answer, bindings) = WireCatalog::ledger_sync(&cluster, &remote).unwrap();
+        assert!(bindings.is_empty());
+        assert!(answer.is_tombstoned("ns"));
+        assert!(cluster.ledger().is_tombstoned("ns"), "merge must stick");
+    }
 }
 
 /// Bounded-exhaustive interleaving models for the replica-set write
@@ -1005,8 +1414,9 @@ mod loom_tests {
             .collect();
         Arc::new(ClusterInner {
             health: HealthTracker::new(config.servers.len()),
-            config,
-            clients,
+            topology: RwLock::new_class("cluster.topology", Topology { config, clients }),
+            ledger: SharedLedger::new(Ledger::new()),
+            ledger_path: None,
             stop: Mutex::new_class("cluster.janitor", false),
             wake: Condvar::new_class("cluster.janitor-wake"),
             sync_seq: AtomicU64::new(0),

@@ -74,6 +74,47 @@ impl ClusterConfig {
         Ok(self)
     }
 
+    /// Add a server to the fleet (runtime membership change). The new
+    /// address appends to the list, so every existing index — the
+    /// currency of placement and overrides — is untouched; rendezvous
+    /// hashing then moves only the namespaces the newcomer wins.
+    pub fn add_server(&mut self, addr: &str) -> Result<(), GbfError> {
+        let mut next = self.clone();
+        next.servers.push(addr.to_string());
+        next.validate()?;
+        *self = next;
+        Ok(())
+    }
+
+    /// Remove a server by address. Indices above the removed slot shift
+    /// down by one, so overrides are rewritten to keep following their
+    /// servers; an override pinned to the departing server loses that
+    /// replica. Refused when it would empty an override or shrink the
+    /// fleet below the replication factor.
+    pub fn remove_server(&mut self, addr: &str) -> Result<(), GbfError> {
+        let Some(gone) = self.servers.iter().position(|s| s == addr) else {
+            return Err(GbfError::InvalidConfig(format!("no server {addr:?} in the fleet")));
+        };
+        let mut next = self.clone();
+        next.servers.remove(gone);
+        for (name, indices) in next.overrides.iter_mut() {
+            indices.retain(|&i| i != gone);
+            if indices.is_empty() {
+                return Err(GbfError::InvalidConfig(format!(
+                    "removing {addr:?} would leave the override for {name:?} with no replicas"
+                )));
+            }
+            for i in indices.iter_mut() {
+                if *i > gone {
+                    *i -= 1;
+                }
+            }
+        }
+        next.validate()?;
+        *self = next;
+        Ok(())
+    }
+
     /// Every invariant the rest of the cluster code leans on.
     pub fn validate(&self) -> Result<(), GbfError> {
         if self.servers.is_empty() {
@@ -93,6 +134,18 @@ impl ClusterConfig {
                 self.servers.len(),
                 self.replicas
             )));
+        }
+        // re-replication ships snapshots by path through `sync_dir`; an
+        // empty sync_dir falls back to the front end's temp dir, which
+        // only the front end's own host can see — fine for a loopback
+        // fleet, a silent misconfiguration for a real multi-host one
+        if self.sync_dir.is_empty() && self.servers.len() > 1 {
+            if let Some(remote) = self.servers.iter().find(|s| !is_loopback_addr(s)) {
+                return Err(GbfError::InvalidConfig(format!(
+                    "multi-host fleet (e.g. {remote:?}) needs an explicit sync_dir reachable by \
+                     every server: the temp-dir default is only visible to this host"
+                )));
+            }
         }
         for (name, indices) in &self.overrides {
             if indices.is_empty() {
@@ -179,6 +232,13 @@ impl ClusterConfig {
     }
 }
 
+/// Whether `addr`'s host part names this machine (loopback), making a
+/// front-end-local `sync_dir` fallback visible to the server too.
+fn is_loopback_addr(addr: &str) -> bool {
+    let host = addr.rsplit_once(':').map_or(addr, |(h, _)| h);
+    host == "localhost" || host == "[::1]" || host == "::1" || host.starts_with("127.")
+}
+
 /// FNV-1a over `server ‖ 0xFF ‖ name`. The 0xFF separator (never a UTF-8
 /// byte) makes the concatenation unambiguous: ("ab","c") and ("a","bc")
 /// score differently.
@@ -197,8 +257,10 @@ fn rendezvous_score(server: &str, name: &str) -> u64 {
 mod tests {
     use super::*;
 
+    // loopback addresses: these configs keep an empty sync_dir, which
+    // validation only allows for single-host (loopback) fleets
     fn fleet(n: usize) -> Vec<String> {
-        (0..n).map(|i| format!("10.0.0.{i}:7070")).collect()
+        (0..n).map(|i| format!("127.0.0.{i}:7070")).collect()
     }
 
     #[test]
@@ -243,7 +305,7 @@ mod tests {
         // every namespace that was NOT placed on it keeps its exact
         // replica set (compared by address, since indices shift)
         let big = ClusterConfig::new(fleet(5), 2).unwrap();
-        let small = ClusterConfig::new(fleet(4), 2).unwrap(); // drops 10.0.0.4
+        let small = ClusterConfig::new(fleet(4), 2).unwrap(); // drops 127.0.0.4
         let by_addr = |config: &ClusterConfig, ns: &str| -> Vec<String> {
             config.placement(ns).into_iter().map(|i| config.servers[i].clone()).collect()
         };
@@ -251,7 +313,7 @@ mod tests {
         for i in 0..200 {
             let ns = format!("ns-{i}");
             let before = by_addr(&big, &ns);
-            if before.iter().any(|addr| addr == "10.0.0.4:7070") {
+            if before.iter().any(|addr| addr == "127.0.0.4:7070") {
                 continue; // this namespace legitimately moves
             }
             assert_eq!(before, by_addr(&small, &ns), "{ns} moved without losing a replica");
@@ -301,5 +363,73 @@ mod tests {
     #[test]
     fn separator_disambiguates_concatenation() {
         assert_ne!(rendezvous_score("ab", "c"), rendezvous_score("a", "bc"));
+    }
+
+    /// An empty `sync_dir` silently lands re-replication snapshots in
+    /// the front end's temp dir — only correct when every server runs
+    /// on this host. Multi-host fleets must say where snapshots go.
+    #[test]
+    fn empty_sync_dir_requires_a_loopback_fleet() {
+        let remote = vec!["10.0.0.1:7070".to_string(), "10.0.0.2:7070".to_string()];
+        match ClusterConfig::new(remote.clone(), 2) {
+            Err(GbfError::InvalidConfig(msg)) => {
+                assert!(msg.contains("sync_dir"), "error must name the missing field: {msg}");
+                assert!(msg.contains("10.0.0."), "error must name a remote server: {msg}");
+            }
+            other => panic!("multi-host fleet with no sync_dir must be rejected, got {other:?}"),
+        }
+        // the same fleet with an explicit sync_dir is fine
+        let mut fixed = ClusterConfig::new(fleet(2), 2).unwrap();
+        fixed.servers = remote;
+        fixed.sync_dir = "/srv/gbf-sync".into();
+        fixed.validate().unwrap();
+        // loopback fleets (and single servers) keep the temp-dir default
+        assert!(ClusterConfig::new(fleet(3), 2).is_ok());
+        assert!(ClusterConfig::new(vec!["localhost:7070".into(), "[::1]:7071".into()], 2).is_ok());
+        assert!(ClusterConfig::new(vec!["10.0.0.1:7070".into()], 1).is_ok());
+    }
+
+    #[test]
+    fn add_server_appends_and_validates() {
+        let mut config = ClusterConfig::new(fleet(2), 2).unwrap();
+        assert!(matches!(config.add_server("127.0.0.0:7070"), Err(GbfError::InvalidConfig(_))));
+        assert!(matches!(config.add_server(""), Err(GbfError::InvalidConfig(_))));
+        config.add_server("127.0.0.9:7070").unwrap();
+        assert_eq!(config.servers, vec!["127.0.0.0:7070", "127.0.0.1:7070", "127.0.0.9:7070"]);
+        // a failed add leaves the config untouched
+        let before = config.clone();
+        assert!(config.add_server("127.0.0.9:7070").is_err());
+        assert_eq!(config, before);
+    }
+
+    #[test]
+    fn remove_server_shifts_overrides_with_their_servers() {
+        let mut config = ClusterConfig::new(fleet(4), 2)
+            .unwrap()
+            .with_override("pinned", vec![3, 1])
+            .unwrap();
+        config.remove_server("127.0.0.2:7070").unwrap();
+        assert_eq!(config.servers, vec!["127.0.0.0:7070", "127.0.0.1:7070", "127.0.0.3:7070"]);
+        // index 3 slid down to 2; index 1 is untouched
+        assert_eq!(config.overrides["pinned"], vec![2, 1]);
+        assert_eq!(
+            config.placement("pinned").iter().map(|&i| config.servers[i].as_str()).collect::<Vec<_>>(),
+            vec!["127.0.0.3:7070", "127.0.0.1:7070"],
+            "the override still names the same machines"
+        );
+    }
+
+    #[test]
+    fn remove_server_refuses_unsafe_shrinks() {
+        let mut config = ClusterConfig::new(fleet(2), 2).unwrap();
+        assert!(matches!(config.remove_server("127.0.0.9:7070"), Err(GbfError::InvalidConfig(_))));
+        // dropping below the replication factor
+        assert!(matches!(config.remove_server("127.0.0.1:7070"), Err(GbfError::InvalidConfig(_))));
+        assert_eq!(config.servers.len(), 2, "failed removal must not mutate");
+        // emptying an override
+        let mut pinned =
+            ClusterConfig::new(fleet(3), 1).unwrap().with_override("solo", vec![2]).unwrap();
+        assert!(matches!(pinned.remove_server("127.0.0.2:7070"), Err(GbfError::InvalidConfig(_))));
+        assert_eq!(pinned.overrides["solo"], vec![2]);
     }
 }

@@ -39,6 +39,14 @@ pub enum GbfError {
     /// replica failures degrade to the next replica; this fires only when
     /// the whole replica set is down.
     NoQuorum { name: String, replicas: usize },
+    /// Cluster mode: a lifecycle operation (stamp, reseed restore) named
+    /// a ledger epoch that is not newer than the one already bound —
+    /// accepting it would let stale data overwrite a fresher generation.
+    StaleEpoch { name: String, held: u64, proposed: u64 },
+    /// The request is valid wire protocol but this endpoint cannot serve
+    /// it (e.g. `cluster-admin` sent to a plain wire server instead of a
+    /// cluster gateway).
+    NotSupported(String),
 }
 
 impl GbfError {
@@ -46,8 +54,11 @@ impl GbfError {
     pub fn filter_name(&self) -> Option<&str> {
         match self {
             GbfError::NoSuchFilter(n) | GbfError::FilterExists(n) => Some(n),
-            GbfError::Overloaded { name, .. } | GbfError::NoQuorum { name, .. } => Some(name),
-            GbfError::InvalidConfig(_)
+            GbfError::Overloaded { name, .. }
+            | GbfError::NoQuorum { name, .. }
+            | GbfError::StaleEpoch { name, .. } => Some(name),
+            GbfError::NotSupported(_)
+            | GbfError::InvalidConfig(_)
             | GbfError::Backend(_)
             | GbfError::SnapshotVersion { .. }
             | GbfError::SnapshotGeometry(_)
@@ -81,6 +92,10 @@ impl fmt::Display for GbfError {
             GbfError::NoQuorum { name, replicas } => {
                 write!(f, "namespace {name:?} has no live replica (all {replicas} replica(s) unreachable)")
             }
+            GbfError::StaleEpoch { name, held, proposed } => {
+                write!(f, "namespace {name:?} holds ledger epoch {held}; refusing stale epoch {proposed}")
+            }
+            GbfError::NotSupported(msg) => write!(f, "not supported here: {msg}"),
         }
     }
 }
@@ -125,6 +140,15 @@ mod tests {
         let e = GbfError::NoQuorum { name: "ha".into(), replicas: 2 };
         assert!(e.to_string().contains("ha") && e.to_string().contains('2'), "{e}");
         assert_eq!(e.filter_name(), Some("ha"));
+    }
+
+    #[test]
+    fn stale_epoch_names_namespace_and_both_epochs() {
+        let e = GbfError::StaleEpoch { name: "ns".into(), held: 9, proposed: 4 };
+        assert!(e.to_string().contains("ns") && e.to_string().contains('9') && e.to_string().contains('4'), "{e}");
+        assert_eq!(e.filter_name(), Some("ns"));
+        assert_eq!(GbfError::NotSupported("cluster-admin".into()).filter_name(), None);
+        assert!(GbfError::NotSupported("cluster-admin".into()).to_string().contains("cluster-admin"));
     }
 
     #[test]

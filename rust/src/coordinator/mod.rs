@@ -73,7 +73,7 @@ pub mod wire;
 
 pub use api::{FilterApi, FilterDataPlane};
 pub use backend::{FilterBackend, NativeBackend, PjrtBackend};
-pub use cluster::{ClusterConfig, ClusterFilterService};
+pub use cluster::{ClusterConfig, ClusterFilterService, Ledger, LedgerEntry};
 pub use batcher::BatchPolicy;
 pub use error::GbfError;
 pub use metrics::{Metrics, MetricsSnapshot, ShardStats};

@@ -27,20 +27,22 @@
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::fmt;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use anyhow::Result;
 
+use crate::infra::json::{self, Json};
 use crate::infra::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use crate::infra::sync::{Arc, RwLock};
+use crate::infra::sync::{lock_unpoisoned, Arc, Mutex, RwLock};
 
 use crate::filter::params::FilterConfig;
 use crate::filter::AnswerBits;
 
 use super::backend::{FilterBackend, NativeBackend};
 use super::batcher::BatchPolicy;
+use super::cluster::ledger::Ledger;
 use super::error::GbfError;
 use super::metrics::{MetricsSnapshot, ShardStats};
-use super::persist::{SnapshotReader, SnapshotWriter};
+use super::persist::{checksum_words, SnapshotReader, SnapshotWriter};
 use super::server::{Coordinator, CoordinatorConfig, Op};
 use super::ticket::{finish_all, finish_bits, finish_one, finish_unit, Ticket};
 
@@ -181,14 +183,55 @@ fn validate_name(name: &str) -> Result<(), GbfError> {
     }
 }
 
+/// Server-side cluster metadata (ISSUE 9): the merged lifecycle
+/// [`Ledger`] this server has gossiped so far, plus its per-namespace
+/// **epoch bindings** — for each held namespace, the ledger epoch of the
+/// data generation the local copy belongs to (stamped by the cluster
+/// front end after every create/restore). A server standing alone keeps
+/// an empty ledger and no bindings; the state only grows when a cluster
+/// front end gossips with it.
+struct ClusterMeta {
+    ledger: Ledger,
+    bindings: HashMap<String, u64>,
+    /// When set (by `serve --state-dir`), both pieces persist here —
+    /// `LEDGER.json` + `BINDINGS.json`, next to the snapshots.
+    dir: Option<PathBuf>,
+}
+
+impl ClusterMeta {
+    const LEDGER_FILE: &'static str = "LEDGER.json";
+    const BINDINGS_FILE: &'static str = "BINDINGS.json";
+}
+
+/// Write both cluster-meta files durably (temp + rename, like the
+/// snapshots beside them). Called with clones taken outside the
+/// `service.ledger` guard — never under it.
+fn persist_cluster_meta(dir: &Path, ledger: &Ledger, bindings: &HashMap<String, u64>) -> Result<(), GbfError> {
+    ledger.save(&dir.join(ClusterMeta::LEDGER_FILE))?;
+    let obj = Json::Obj(bindings.iter().map(|(k, &v)| (k.clone(), Json::Int(v as i64))).collect());
+    let path = dir.join(ClusterMeta::BINDINGS_FILE);
+    let io = |e: std::io::Error| GbfError::Backend(format!("bindings save {}: {e}", path.display()));
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, obj.to_string()).map_err(io)?;
+    std::fs::rename(&tmp, &path).map_err(io)?;
+    Ok(())
+}
+
 /// The multi-tenant filter catalog (see module docs).
 pub struct FilterService {
     namespaces: RwLock<HashMap<String, Arc<Namespace>>>,
+    cluster_meta: Mutex<ClusterMeta>,
 }
 
 impl Default for FilterService {
     fn default() -> FilterService {
-        FilterService { namespaces: RwLock::new_class("service.catalog", HashMap::new()) }
+        FilterService {
+            namespaces: RwLock::new_class("service.catalog", HashMap::new()),
+            cluster_meta: Mutex::new_class(
+                "service.ledger",
+                ClusterMeta { ledger: Ledger::new(), bindings: HashMap::new(), dir: None },
+            ),
+        }
     }
 }
 
@@ -404,6 +447,137 @@ impl FilterService {
     /// Admin-plane introspection of one namespace.
     pub fn stats(&self, name: &str) -> Result<NamespaceStats, GbfError> {
         Ok(self.lookup(name)?.stats())
+    }
+
+    // ---- cluster metadata: ledger gossip, epoch bindings, digests ----
+
+    /// Push-pull gossip step (ISSUE 9): merge `remote` into the local
+    /// ledger, drop any local namespace the merged ledger tombstones at
+    /// an epoch newer than the local copy's binding (that copy is a
+    /// resurrection — its drop happened while this server was down), and
+    /// answer with the merged ledger plus the bindings of the namespaces
+    /// actually held. Merge is max-epoch-wins, so gossip converges in any
+    /// order.
+    pub fn ledger_sync(&self, remote: &Ledger) -> Result<(Ledger, Vec<(String, u64)>), GbfError> {
+        // Merge and collect doomed names under the meta lock; the catalog
+        // drops happen after it is released (service.ledger is a leaf
+        // class — no nested locks, no I/O under the guard).
+        let doomed: Vec<String> = {
+            let mut meta = lock_unpoisoned(&self.cluster_meta);
+            meta.ledger.merge(remote);
+            let bindings = &meta.bindings;
+            meta.ledger
+                .iter()
+                .filter(|(name, e)| e.tombstone && e.epoch > bindings.get(*name).copied().unwrap_or(0))
+                .map(|(name, _)| name.to_string())
+                .collect()
+        };
+        let mut dropped = Vec::new();
+        for name in doomed {
+            if self.drop_filter(&name).is_ok() {
+                dropped.push(name);
+            }
+        }
+        let live = self.list_filters();
+        let (ledger, answer, all_bindings, dir) = {
+            let mut meta = lock_unpoisoned(&self.cluster_meta);
+            for name in &dropped {
+                meta.bindings.remove(name);
+            }
+            // answer only bindings for namespaces currently in the
+            // catalog: a binding whose namespace is gone says nothing
+            // about data this server can actually serve
+            let answer: Vec<(String, u64)> = live
+                .iter()
+                .filter_map(|n| meta.bindings.get(n).map(|&e| (n.clone(), e)))
+                .collect();
+            (meta.ledger.clone(), answer, meta.bindings.clone(), meta.dir.clone())
+        };
+        if let Some(dir) = dir {
+            persist_cluster_meta(&dir, &ledger, &all_bindings)?;
+        }
+        Ok((ledger, answer))
+    }
+
+    /// Record that this server's copy of `name` (pinned by `instance`)
+    /// belongs to ledger epoch `epoch`. Stamps only move forward: a
+    /// proposal older than the held binding is refused with
+    /// [`GbfError::StaleEpoch`], so a delayed stamp from a superseded
+    /// reseed can never mark fresh data as old (or vice versa).
+    pub fn stamp(&self, name: &str, instance: u64, epoch: u64) -> Result<(), GbfError> {
+        let ns = self.lookup(name)?;
+        if ns.instance != instance {
+            return Err(GbfError::NoSuchFilter(name.to_string()));
+        }
+        let (ledger, bindings, dir) = {
+            let mut meta = lock_unpoisoned(&self.cluster_meta);
+            let held = meta.bindings.get(name).copied().unwrap_or(0);
+            if epoch < held {
+                return Err(GbfError::StaleEpoch { name: name.to_string(), held, proposed: epoch });
+            }
+            meta.bindings.insert(name.to_string(), epoch);
+            (meta.ledger.clone(), meta.bindings.clone(), meta.dir.clone())
+        };
+        if let Some(dir) = dir {
+            persist_cluster_meta(&dir, &ledger, &bindings)?;
+        }
+        Ok(())
+    }
+
+    /// Per-shard content checksums of a namespace (the same FNV the
+    /// snapshot manifests use), read in one atomic-load pass per shard.
+    /// Two replicas with equal digests hold bit-identical filter state —
+    /// the cluster janitor's divergence detector when add counters tie.
+    pub fn digest(&self, name: &str) -> Result<Vec<u64>, GbfError> {
+        let ns = self.lookup(name)?;
+        let shards = ns.engine.num_shards();
+        let mut out = Vec::with_capacity(shards);
+        for idx in 0..shards {
+            let words = ns.engine.snapshot_shard(idx).map_err(|e| GbfError::Backend(format!("{e:#}")))?;
+            out.push(checksum_words(&words));
+        }
+        Ok(out)
+    }
+
+    /// Wire up durable cluster metadata under `dir` (`serve
+    /// --state-dir`): load the persisted ledger + bindings, keep only
+    /// bindings for namespaces that actually came back from snapshots,
+    /// then apply the loaded tombstones — a namespace restored from a
+    /// snapshot that predates its own drop is deleted here instead of
+    /// resurrecting. Returns the names that were dropped, for boot logs.
+    pub fn attach_cluster_meta_dir(&self, dir: &Path) -> Result<Vec<String>, GbfError> {
+        let loaded = Ledger::load(&dir.join(ClusterMeta::LEDGER_FILE))?;
+        let bindings_path = dir.join(ClusterMeta::BINDINGS_FILE);
+        let mut bindings: HashMap<String, u64> = HashMap::new();
+        match std::fs::read_to_string(&bindings_path) {
+            Ok(text) => {
+                let bad = |e: anyhow::Error| {
+                    GbfError::Backend(format!("bindings decode {}: {e:#}", bindings_path.display()))
+                };
+                let root = json::parse(&text).map_err(bad)?;
+                for (name, v) in root.as_obj().map_err(bad)? {
+                    bindings.insert(name.clone(), v.as_u64().map_err(bad)?);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                return Err(GbfError::Backend(format!("bindings load {}: {e}", bindings_path.display())))
+            }
+        }
+        let live = self.list_filters();
+        bindings.retain(|name, _| live.contains(name));
+        {
+            let mut meta = lock_unpoisoned(&self.cluster_meta);
+            meta.ledger.merge(&loaded);
+            meta.bindings = bindings;
+            meta.dir = Some(dir.to_path_buf());
+        }
+        // an empty-remote gossip step applies the loaded tombstones and
+        // rewrites the now-normalized files
+        let before = self.list_filters();
+        self.ledger_sync(&Ledger::new())?;
+        let after = self.list_filters();
+        Ok(before.into_iter().filter(|n| !after.contains(n)).collect())
     }
 
     fn lookup(&self, name: &str) -> Result<Arc<Namespace>, GbfError> {

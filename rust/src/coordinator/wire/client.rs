@@ -35,6 +35,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context, Result};
 
+use crate::coordinator::cluster::ledger::Ledger;
 use crate::coordinator::error::GbfError;
 use crate::coordinator::service::{FilterSpec, NamespaceStats};
 use crate::coordinator::ticket::{finish_all, finish_bits, finish_one, finish_unit, Completion, Ticket};
@@ -690,6 +691,45 @@ impl RemoteFilterService {
                 Ok(RemoteFilterHandle { client: self.clone(), name: name.to_string(), instance })
             }
             other => Err(protocol_error("restore", &other)),
+        }
+    }
+
+    /// One ledger gossip round-trip (ISSUE 9): ship `ledger`, get back
+    /// the server's merged view plus its per-namespace epoch bindings.
+    /// Idempotent by construction (merge is max-epoch-wins), so it rides
+    /// the retry budget.
+    pub fn ledger_sync(&self, ledger: &Ledger) -> Result<(Ledger, Vec<(String, u64)>), GbfError> {
+        match self.admin_idempotent(&Request::LedgerSync { ledger: ledger.clone() })? {
+            Response::Ledger { ledger, bindings } => Ok((ledger, bindings)),
+            other => Err(protocol_error("ledger-sync", &other)),
+        }
+    }
+
+    /// Bind the server's copy of `name` (pinned to `instance`) to a
+    /// ledger epoch. Stamps only move forward server-side, so a retried
+    /// duplicate is harmless — idempotent budget.
+    pub fn stamp(&self, name: &str, instance: u64, epoch: u64) -> Result<(), GbfError> {
+        match self.admin_idempotent(&Request::Stamp { name: name.to_string(), instance, epoch })? {
+            Response::Ok => Ok(()),
+            other => Err(protocol_error("stamp", &other)),
+        }
+    }
+
+    /// Per-shard content checksums of a remote namespace (read-only).
+    pub fn digest(&self, name: &str) -> Result<Vec<u64>, GbfError> {
+        match self.admin_idempotent(&Request::Digest { name: name.to_string() })? {
+            Response::Digest(checksums) => Ok(checksums),
+            other => Err(protocol_error("digest", &other)),
+        }
+    }
+
+    /// Runtime membership change on a cluster gateway. NOT idempotent
+    /// (`add` then a retried duplicate would be a typed error anyway, but
+    /// exactly-once keeps the error surface honest).
+    pub fn cluster_admin(&self, add: bool, addr: &str) -> Result<(), GbfError> {
+        match self.admin(&Request::ClusterAdmin { add, addr: addr.to_string() })? {
+            Response::Ok => Ok(()),
+            other => Err(protocol_error("cluster-admin", &other)),
         }
     }
 

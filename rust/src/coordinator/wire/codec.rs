@@ -29,6 +29,7 @@ use std::time::Duration;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::cluster::ledger::{Ledger, LedgerEntry};
 use crate::coordinator::error::GbfError;
 use crate::coordinator::metrics::{MetricsSnapshot, ShardStats};
 use crate::coordinator::service::{FilterSpec, NamespaceStats};
@@ -67,6 +68,25 @@ pub enum Request {
     /// catalog. The cluster health tracker uses it to detect recovery of
     /// a down server without side effects.
     Ping,
+    /// Push-pull gossip of the lifecycle ledger (ISSUE 9): the sender
+    /// ships its ledger, the receiver merges it (max-epoch-wins), applies
+    /// any newly learned tombstones to its catalog, and answers
+    /// [`Response::Ledger`] with the merged view plus its per-namespace
+    /// epoch bindings.
+    LedgerSync { ledger: Ledger },
+    /// Record which ledger epoch the data generation a server holds for
+    /// `name` belongs to. `instance` pins the exact namespace instance
+    /// being stamped (same staleness contract as `AddBulk`), so a stamp
+    /// can never land on a copy it did not describe.
+    Stamp { name: String, instance: u64, epoch: u64 },
+    /// Per-shard content checksums of a namespace (FNV over the shard
+    /// words, same function the snapshot manifests use). The cluster
+    /// janitor compares digests to detect diverged replicas whose add
+    /// counters happen to tie.
+    Digest { name: String },
+    /// Runtime membership change on a cluster gateway: add or remove a
+    /// fleet server. Plain wire servers refuse it with a typed error.
+    ClusterAdmin { add: bool, addr: String },
 }
 
 /// Every way the server answers.
@@ -88,6 +108,11 @@ pub enum Response {
     Hits(AnswerBits),
     /// Any call's typed failure — `GbfError` round-trips the codec.
     Err(GbfError),
+    /// LedgerSync answer: the merged ledger plus the answering server's
+    /// (namespace → epoch) bindings.
+    Ledger { ledger: Ledger, bindings: Vec<(String, u64)> },
+    /// Digest answer: one checksum per shard, in shard order.
+    Digest(Vec<u64>),
 }
 
 // ---- request/response tags ----
@@ -101,6 +126,10 @@ const REQ_QUERY_BULK: u8 = 0x06;
 const REQ_SNAPSHOT: u8 = 0x07;
 const REQ_RESTORE: u8 = 0x08;
 const REQ_PING: u8 = 0x09;
+const REQ_LEDGER_SYNC: u8 = 0x0A;
+const REQ_STAMP: u8 = 0x0B;
+const REQ_DIGEST: u8 = 0x0C;
+const REQ_CLUSTER_ADMIN: u8 = 0x0D;
 
 const RESP_OK: u8 = 0x81;
 const RESP_NAMES: u8 = 0x82;
@@ -108,6 +137,8 @@ const RESP_STATS: u8 = 0x83;
 const RESP_HITS: u8 = 0x84;
 const RESP_ERR: u8 = 0x85;
 const RESP_CREATED: u8 = 0x86;
+const RESP_LEDGER: u8 = 0x87;
+const RESP_DIGEST: u8 = 0x88;
 
 const ERR_NO_SUCH_FILTER: u8 = 0;
 const ERR_FILTER_EXISTS: u8 = 1;
@@ -119,6 +150,8 @@ const ERR_SNAPSHOT_GEOMETRY: u8 = 6;
 const ERR_SNAPSHOT_CHECKSUM: u8 = 7;
 const ERR_SNAPSHOT_CORRUPT: u8 = 8;
 const ERR_NO_QUORUM: u8 = 9;
+const ERR_STALE_EPOCH: u8 = 10;
+const ERR_NOT_A_GATEWAY: u8 = 11;
 
 // ---- frame I/O ----
 
@@ -265,6 +298,26 @@ impl Enc {
         }
     }
 
+    /// Ledger wire form: mint counter, then `u32` count + (name, epoch,
+    /// tombstone byte) per entry, in the ledger's own (sorted) order.
+    fn ledger(&mut self, l: &Ledger) {
+        self.u64(l.next_epoch());
+        self.u32(l.len() as u32);
+        for (name, entry) in l.iter() {
+            self.str(name);
+            self.u64(entry.epoch);
+            self.u8(u8::from(entry.tombstone));
+        }
+    }
+
+    fn bindings(&mut self, b: &[(String, u64)]) {
+        self.u32(b.len() as u32);
+        for (name, epoch) in b {
+            self.str(name);
+            self.u64(*epoch);
+        }
+    }
+
     fn error(&mut self, e: &GbfError) {
         match e {
             GbfError::NoSuchFilter(name) => {
@@ -311,6 +364,16 @@ impl Enc {
                 self.u8(ERR_NO_QUORUM);
                 self.str(name);
                 self.u64(*replicas as u64);
+            }
+            GbfError::StaleEpoch { name, held, proposed } => {
+                self.u8(ERR_STALE_EPOCH);
+                self.str(name);
+                self.u64(*held);
+                self.u64(*proposed);
+            }
+            GbfError::NotSupported(msg) => {
+                self.u8(ERR_NOT_A_GATEWAY);
+                self.str(msg);
             }
         }
     }
@@ -472,6 +535,34 @@ impl<'a> Dec<'a> {
         })
     }
 
+    fn ledger(&mut self) -> Result<Ledger> {
+        let next_epoch = self.u64()?;
+        let n = self.u32()? as usize;
+        ensure!(n <= 1 << 20, "ledger entry count {n} exceeds bound");
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = self.str()?;
+            let epoch = self.u64()?;
+            let tombstone = match self.u8()? {
+                0 => false,
+                1 => true,
+                t => bail!("bad tombstone byte {t:#04x}"),
+            };
+            entries.push((name, LedgerEntry { epoch, tombstone }));
+        }
+        Ok(Ledger::from_parts(next_epoch, entries))
+    }
+
+    fn bindings(&mut self) -> Result<Vec<(String, u64)>> {
+        let n = self.u32()? as usize;
+        ensure!(n <= 1 << 20, "binding count {n} exceeds bound");
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push((self.str()?, self.u64()?));
+        }
+        Ok(out)
+    }
+
     fn error(&mut self) -> Result<GbfError> {
         Ok(match self.u8()? {
             ERR_NO_SUCH_FILTER => GbfError::NoSuchFilter(self.str()?),
@@ -488,6 +579,8 @@ impl<'a> Dec<'a> {
             },
             ERR_SNAPSHOT_CORRUPT => GbfError::SnapshotCorrupt(self.str()?),
             ERR_NO_QUORUM => GbfError::NoQuorum { name: self.str()?, replicas: self.usize()? },
+            ERR_STALE_EPOCH => GbfError::StaleEpoch { name: self.str()?, held: self.u64()?, proposed: self.u64()? },
+            ERR_NOT_A_GATEWAY => GbfError::NotSupported(self.str()?),
             t => bail!("unknown error tag {t:#04x}"),
         })
     }
@@ -557,6 +650,29 @@ pub fn encode_request(request_id: u64, req: &Request) -> Vec<u8> {
             e
         }
         Request::Ping => Enc::envelope(request_id, REQ_PING),
+        Request::LedgerSync { ledger } => {
+            let mut e = Enc::envelope(request_id, REQ_LEDGER_SYNC);
+            e.ledger(ledger);
+            e
+        }
+        Request::Stamp { name, instance, epoch } => {
+            let mut e = Enc::envelope(request_id, REQ_STAMP);
+            e.str(name);
+            e.u64(*instance);
+            e.u64(*epoch);
+            e
+        }
+        Request::Digest { name } => {
+            let mut e = Enc::envelope(request_id, REQ_DIGEST);
+            e.str(name);
+            e
+        }
+        Request::ClusterAdmin { add, addr } => {
+            let mut e = Enc::envelope(request_id, REQ_CLUSTER_ADMIN);
+            e.u8(u8::from(*add));
+            e.str(addr);
+            e
+        }
     };
     std::mem::take(&mut e.buf)
 }
@@ -587,6 +703,17 @@ pub fn decode_request(payload: &[u8]) -> Result<(u64, Request)> {
         REQ_SNAPSHOT => Request::Snapshot { name: d.str()?, dir: d.str()? },
         REQ_RESTORE => Request::Restore { name: d.str()?, dir: d.str()? },
         REQ_PING => Request::Ping,
+        REQ_LEDGER_SYNC => Request::LedgerSync { ledger: d.ledger()? },
+        REQ_STAMP => Request::Stamp { name: d.str()?, instance: d.u64()?, epoch: d.u64()? },
+        REQ_DIGEST => Request::Digest { name: d.str()? },
+        REQ_CLUSTER_ADMIN => Request::ClusterAdmin {
+            add: match d.u8()? {
+                0 => false,
+                1 => true,
+                t => bail!("bad cluster-admin op byte {t:#04x}"),
+            },
+            addr: d.str()?,
+        },
         t => bail!("unknown request tag {t:#04x}"),
     };
     d.finish()?;
@@ -625,6 +752,20 @@ pub fn encode_response(request_id: u64, resp: &Response) -> Vec<u8> {
             e.error(err);
             e
         }
+        Response::Ledger { ledger, bindings } => {
+            let mut e = Enc::envelope(request_id, RESP_LEDGER);
+            e.ledger(ledger);
+            e.bindings(bindings);
+            e
+        }
+        Response::Digest(checksums) => {
+            let mut e = Enc::envelope(request_id, RESP_DIGEST);
+            e.u32(checksums.len() as u32);
+            for &c in checksums {
+                e.u64(c);
+            }
+            e
+        }
     };
     std::mem::take(&mut e.buf)
 }
@@ -648,6 +789,16 @@ pub fn decode_response(payload: &[u8]) -> Result<(u64, Response)> {
         RESP_STATS => Response::Stats(Box::new(d.namespace_stats()?)),
         RESP_HITS => Response::Hits(d.answers()?),
         RESP_ERR => Response::Err(d.error()?),
+        RESP_LEDGER => Response::Ledger { ledger: d.ledger()?, bindings: d.bindings()? },
+        RESP_DIGEST => {
+            let n = d.u32()? as usize;
+            ensure!(n <= 1 << 16, "digest count {n} exceeds shard bound");
+            let mut checksums = Vec::with_capacity(n);
+            for _ in 0..n {
+                checksums.push(d.u64()?);
+            }
+            Response::Digest(checksums)
+        }
         t => bail!("unknown response tag {t:#04x}"),
     };
     d.finish()?;
@@ -821,6 +972,8 @@ mod tests {
             GbfError::SnapshotChecksum { shard: 5, expected: u64::MAX, found: 0 },
             GbfError::SnapshotCorrupt("MANIFEST.json truncated".into()),
             GbfError::NoQuorum { name: "ha".into(), replicas: 2 },
+            GbfError::StaleEpoch { name: "ns".into(), held: 9, proposed: 4 },
+            GbfError::NotSupported("cluster-admin: not a cluster gateway".into()),
         ];
         for e in errors {
             match rt_resp(Response::Err(e.clone())).1 {
@@ -875,6 +1028,74 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn ledger_requests_and_responses_round_trip() {
+        let mut ledger = Ledger::new();
+        ledger.record_live("kept");
+        ledger.record_drop("gone");
+        match rt_req(Request::LedgerSync { ledger: ledger.clone() }).1 {
+            Request::LedgerSync { ledger: got } => assert_eq!(got, ledger),
+            other => panic!("{other:?}"),
+        }
+        match rt_req(Request::Stamp { name: "ns".into(), instance: 17, epoch: 5 }).1 {
+            Request::Stamp { name, instance, epoch } => {
+                assert_eq!((name.as_str(), instance, epoch), ("ns", 17, 5));
+            }
+            other => panic!("{other:?}"),
+        }
+        match rt_req(Request::Digest { name: "ns".into() }).1 {
+            Request::Digest { name } => assert_eq!(name, "ns"),
+            other => panic!("{other:?}"),
+        }
+        for add in [true, false] {
+            match rt_req(Request::ClusterAdmin { add, addr: "10.1.2.3:7070".into() }).1 {
+                Request::ClusterAdmin { add: a, addr } => {
+                    assert_eq!(a, add);
+                    assert_eq!(addr, "10.1.2.3:7070");
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+
+        let bindings = vec![("kept".to_string(), 1u64), ("other".to_string(), 7)];
+        match rt_resp(Response::Ledger { ledger: ledger.clone(), bindings: bindings.clone() }).1 {
+            Response::Ledger { ledger: l, bindings: b } => {
+                assert_eq!(l, ledger);
+                assert_eq!(b, bindings);
+            }
+            other => panic!("{other:?}"),
+        }
+        match rt_resp(Response::Digest(vec![u64::MAX, 0, 12345])).1 {
+            Response::Digest(d) => assert_eq!(d, vec![u64::MAX, 0, 12345]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn ledger_decode_rejects_hostile_counts_and_bytes() {
+        // tombstone byte outside {0, 1}
+        let mut ledger = Ledger::new();
+        ledger.record_live("x");
+        let mut payload = encode_request(1, &Request::LedgerSync { ledger });
+        let n = payload.len();
+        payload[n - 1] = 2; // the tombstone byte is the last body byte
+        assert!(decode_request(&payload).unwrap_err().to_string().contains("tombstone"));
+
+        // entry-count lie: huge count with an empty body
+        let mut e = Vec::new();
+        e.push(WIRE_VERSION);
+        e.extend_from_slice(&1u64.to_le_bytes());
+        e.push(0x0A); // REQ_LEDGER_SYNC
+        e.extend_from_slice(&1u64.to_le_bytes()); // next_epoch
+        e.extend_from_slice(&u32::MAX.to_le_bytes()); // count lie
+        assert!(decode_request(&e).is_err());
+
+        // cluster-admin op byte outside {0, 1}
+        let mut payload = encode_request(1, &Request::ClusterAdmin { add: true, addr: "a:1".into() });
+        payload[10] = 9; // op byte follows the envelope
+        assert!(decode_request(&payload).unwrap_err().to_string().contains("op byte"));
     }
 
     #[test]

@@ -44,6 +44,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::coordinator::api::FilterDataPlane;
+use crate::coordinator::cluster::ledger::Ledger;
 use crate::coordinator::error::GbfError;
 use crate::coordinator::service::{FilterService, FilterSpec, NamespaceStats};
 use crate::coordinator::ticket::Ticket;
@@ -84,6 +85,16 @@ pub trait WireCatalog: Send + Sync + 'static {
     /// instance; a dropped-and-recreated name answers `NoSuchFilter`,
     /// matching in-process stale-handle semantics.
     fn bind(&self, name: &str, instance: u64) -> Result<Box<dyn FilterDataPlane>, GbfError>;
+    /// Ledger gossip step (ISSUE 9): merge the remote ledger, apply newly
+    /// learned tombstones, answer the merged view + epoch bindings.
+    fn ledger_sync(&self, remote: &Ledger) -> Result<(Ledger, Vec<(String, u64)>), GbfError>;
+    /// Bind `name`'s held data generation (pinned by `instance`) to a
+    /// ledger epoch.
+    fn stamp(&self, name: &str, instance: u64, epoch: u64) -> Result<(), GbfError>;
+    /// Per-shard content checksums of `name` (divergence detection).
+    fn digest(&self, name: &str) -> Result<Vec<u64>, GbfError>;
+    /// Runtime membership change; only the cluster gateway supports it.
+    fn cluster_admin(&self, add: bool, addr: &str) -> Result<(), GbfError>;
 }
 
 impl WireCatalog for FilterService {
@@ -124,6 +135,22 @@ impl WireCatalog for FilterService {
         } else {
             Err(GbfError::NoSuchFilter(name.to_string()))
         }
+    }
+
+    fn ledger_sync(&self, remote: &Ledger) -> Result<(Ledger, Vec<(String, u64)>), GbfError> {
+        FilterService::ledger_sync(self, remote)
+    }
+
+    fn stamp(&self, name: &str, instance: u64, epoch: u64) -> Result<(), GbfError> {
+        FilterService::stamp(self, name, instance, epoch)
+    }
+
+    fn digest(&self, name: &str) -> Result<Vec<u64>, GbfError> {
+        FilterService::digest(self, name)
+    }
+
+    fn cluster_admin(&self, _add: bool, _addr: &str) -> Result<(), GbfError> {
+        Err(GbfError::NotSupported("cluster-admin: this server is a plain wire server, not a cluster gateway".into()))
     }
 }
 
@@ -514,6 +541,39 @@ fn handle_conn(stream: TcpStream, service: Arc<dyn WireCatalog>) -> Result<()> {
             // liveness probe: reply inline, touch nothing
             Request::Ping => {
                 send(&writer, id, &Response::Ok)?;
+            }
+            // ledger gossip can persist + drop tombstoned namespaces —
+            // cheap (the ledger is one entry per name ever seen), but it
+            // does touch disk when a state dir is attached, so it rides a
+            // worker like the other admin mutations
+            Request::LedgerSync { ledger } => {
+                let service = Arc::clone(&service);
+                run_on_worker(&writer, id, move || match service.ledger_sync(&ledger) {
+                    Ok((merged, bindings)) => Response::Ledger { ledger: merged, bindings },
+                    Err(e) => Response::Err(e),
+                })?;
+            }
+            Request::Stamp { name, instance, epoch } => {
+                let service = Arc::clone(&service);
+                run_on_worker(&writer, id, move || match service.stamp(&name, instance, epoch) {
+                    Ok(()) => Response::Ok,
+                    Err(e) => Response::Err(e),
+                })?;
+            }
+            // digests read every shard word — worker, not the reader loop
+            Request::Digest { name } => {
+                let service = Arc::clone(&service);
+                run_on_worker(&writer, id, move || match service.digest(&name) {
+                    Ok(checksums) => Response::Digest(checksums),
+                    Err(e) => Response::Err(e),
+                })?;
+            }
+            Request::ClusterAdmin { add, addr } => {
+                let resp = match service.cluster_admin(add, &addr) {
+                    Ok(()) => Response::Ok,
+                    Err(e) => Response::Err(e),
+                };
+                send(&writer, id, &resp)?;
             }
             Request::Stats { name } => {
                 let resp = match service.stats(&name) {

@@ -9,6 +9,7 @@
 //!   serve --filters spec         run the multi-tenant filter service demo
 //!         --listen <addr>        ... or host it on a wire server instead
 //!   cluster --servers a,b,c      replicated front end over a wire fleet
+//!   cluster-admin <gw> add a:p   change a running gateway's membership
 //!   client <addr> <cmd>          drive a remote filter service
 
 use std::path::PathBuf;
@@ -83,6 +84,7 @@ fn main() {
         Some("gups") => experiments::run("gups", None).map(|_| ()),
         Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
+        Some("cluster-admin") => cmd_cluster_admin(&args),
         Some("client") => cmd_client(&args),
         _ => {
             print_usage();
@@ -111,6 +113,7 @@ fn print_usage() {
                  [--max-queue-depth D] [--listen addr:port] [--state-dir dir]\n  \
            cluster --servers a:p1,b:p2,... [--replicas R] [--listen addr:port]\n  \
                  [--place ns=0:1,...] [--sync-dir dir] [--heal-interval-ms MS]\n  \
+           cluster-admin <gateway-addr> (add|remove) <server-addr:port>\n  \
            client <addr> list\n  \
            client <addr> create name:variant:<N>bits [--shards S] [--max-queue-depth D]\n  \
            client <addr> drop <name> | stats <name>\n  \
@@ -131,7 +134,10 @@ fn print_usage() {
          them), writes replicate to all replicas, reads fail over, and a\n\
          janitor re-replicates namespaces onto recovered servers; with\n\
          --listen the cluster itself serves the wire protocol, so plain\n\
-         `gbf client` works against the whole fleet"
+         `gbf client` works against the whole fleet.\n\
+         cluster-admin adds or removes a fleet server on a running\n\
+         gateway without a restart: placement remaps minimally and the\n\
+         janitor migrates namespaces onto their new owners"
     );
 }
 
@@ -350,6 +356,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 restored.push(name);
             }
         }
+        // cluster-meta catch-up: load the persisted ledger/bindings and
+        // apply any tombstones before serving, so a namespace dropped
+        // cluster-wide while this server was down stays dropped instead
+        // of resurrecting from its local snapshot
+        let dropped = service.attach_cluster_meta_dir(dir)?;
+        for name in &dropped {
+            println!("namespace {name:?} is tombstoned in the cluster ledger; local copy deleted");
+        }
+        restored.retain(|name| !dropped.contains(name));
     }
 
     // keep the engine actor alive for the whole serve session
@@ -541,6 +556,28 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             Err(e) => println!("  {name}: {e}"),
         }
     }
+    Ok(())
+}
+
+fn cmd_cluster_admin(args: &Args) -> Result<()> {
+    args.check_known(&[])?;
+    let usage = "usage: gbf cluster-admin <gateway-addr> (add|remove) <server-addr:port>";
+    let mut pos = args.positional.iter();
+    let gateway = pos.next().with_context(|| usage.to_string())?;
+    let verb = pos.next().with_context(|| usage.to_string())?;
+    let server = pos.next().with_context(|| usage.to_string())?;
+    let add = match verb.as_str() {
+        "add" => true,
+        "remove" => false,
+        other => bail!("unknown cluster-admin verb {other:?}; {usage}"),
+    };
+    let client = RemoteFilterService::connect(gateway.as_str())?;
+    client.cluster_admin(add, server)?;
+    println!(
+        "{} {server} {} the fleet behind {gateway}",
+        if add { "added" } else { "removed" },
+        if add { "to" } else { "from" }
+    );
     Ok(())
 }
 

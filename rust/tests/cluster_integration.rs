@@ -6,6 +6,14 @@
 //! (reads fail over, writes keep acking), a rejoining replica is
 //! re-seeded by snapshot shipping, and a fully dead replica set answers
 //! with the typed `NoQuorum` — never a hang.
+//!
+//! The epoch/ledger suite below covers the cluster lifecycle protocol:
+//! a drop issued while a replica sleeps stays dropped when it rejoins
+//! (tombstones travel by gossip, no resurrection), reseeding never
+//! loses a concurrently acked write, source selection prefers the
+//! freshest holder over the first answerer, counter ties fall back to
+//! per-shard digests, and membership changes (`add_server` /
+//! `remove_server`) remap and migrate namespaces at runtime.
 
 use std::net::TcpListener;
 use std::sync::Arc;
@@ -192,4 +200,255 @@ fn gateway_serves_unmodified_wire_clients() {
     }
     client.drop_filter("gw").unwrap();
     assert!(client.list_filters().unwrap().is_empty());
+}
+
+#[test]
+fn a_drop_while_a_replica_sleeps_is_not_resurrected_at_rejoin() {
+    // the victim replica binds a reserved address so it can rejoin on
+    // the same one after being killed
+    let reserved = TcpListener::bind("127.0.0.1:0").unwrap();
+    let victim_addr = reserved.local_addr().unwrap().to_string();
+    drop(reserved);
+
+    let survivor = Arc::new(FilterService::new());
+    let server0 = WireServer::bind(Arc::clone(&survivor), "127.0.0.1:0").unwrap();
+    let victim = Arc::new(FilterService::new());
+    let victim_server = WireServer::bind(Arc::clone(&victim), victim_addr.as_str()).unwrap();
+    let addrs = vec![server0.local_addr().to_string(), victim_addr.clone()];
+    let cluster = ClusterFilterService::connect(ClusterConfig::new(addrs, 2).unwrap()).unwrap();
+
+    let h = cluster.create_filter_spec("ghost", spec(12, 1, 1024, 150)).unwrap();
+    h.add_bulk(&unique_keys(1_000, 0xC5)).wait().unwrap();
+    assert_eq!(victim.stats("ghost").unwrap().metrics.adds, 1_000, "both replicas hold the data");
+
+    // kill the victim's listener (its catalog keeps the namespace), then
+    // drop through the cluster: the survivor deletes, the ledger mints a
+    // tombstone for the replica that slept through it
+    drop(victim_server);
+    cluster.drop_filter("ghost").unwrap();
+    assert!(cluster.list_filters().unwrap().is_empty());
+    assert!(cluster.ledger().is_tombstoned("ghost"), "drop minted a tombstone epoch");
+    assert_eq!(victim.stats("ghost").unwrap().metrics.adds, 1_000, "sleeping replica still holds its copy");
+
+    // rejoin on the same address with the stale catalog: gossip hands it
+    // the tombstone and the resurrection is deleted, not re-advertised
+    let _victim_server2 = WireServer::bind(Arc::clone(&victim), victim_addr.as_str()).unwrap();
+    cluster.reconcile_now();
+    match victim.stats("ghost") {
+        Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "ghost"),
+        other => panic!("rejoined replica must delete the tombstoned namespace, got {other:?}"),
+    }
+    assert!(cluster.list_filters().unwrap().is_empty(), "no resurrection through the cluster");
+
+    // and none through a gateway either: a stock wire client listing the
+    // fleet never sees the dead name
+    let gateway = WireServer::bind_catalog(Arc::new(cluster), "127.0.0.1:0").unwrap();
+    let client = RemoteFilterService::connect(gateway.local_addr()).unwrap();
+    assert!(client.list_filters().unwrap().is_empty());
+    match client.stats("ghost") {
+        Err(GbfError::NoSuchFilter(n)) => assert_eq!(n, "ghost"),
+        other => panic!("expected NoSuchFilter through the gateway, got {other:?}"),
+    }
+}
+
+#[test]
+fn reseed_keeps_every_acked_write_during_concurrent_writes() {
+    // replica 1 starts dark; every write acks on replica 0 alone
+    let reserved = TcpListener::bind("127.0.0.1:0").unwrap();
+    let dark_addr = reserved.local_addr().unwrap().to_string();
+    drop(reserved);
+
+    let live = Arc::new(FilterService::new());
+    let server0 = WireServer::bind(Arc::clone(&live), "127.0.0.1:0").unwrap();
+    let addrs = vec![server0.local_addr().to_string(), dark_addr.clone()];
+    let sync_dir = scratch_dir("cluster-lost-write");
+    let mut config = ClusterConfig::new(addrs, 2).unwrap();
+    config.sync_dir = sync_dir.to_str().unwrap().to_string();
+    let cluster = ClusterFilterService::connect(config).unwrap();
+
+    let h = cluster.create_filter_spec("lw", spec(13, 2, 1024, 150)).unwrap();
+    let seed_keys = unique_keys(2_000, 0xC6);
+    h.add_bulk(&seed_keys).wait().unwrap();
+
+    // the dark replica rejoins empty; a writer keeps acking batches on
+    // the surviving leg WHILE reconciliation ships snapshots across —
+    // the regression this guards: a write acked between the source
+    // snapshot and the target restore must not exist only on the source
+    let rejoined = Arc::new(FilterService::new());
+    let _server1 = WireServer::bind(Arc::clone(&rejoined), dark_addr.as_str()).unwrap();
+    let writer_keys = unique_keys(2_000, 0xC7);
+    let writer = {
+        let h = h.clone();
+        let keys = writer_keys.clone();
+        std::thread::spawn(move || {
+            for batch in keys.chunks(100) {
+                h.add_bulk(batch).wait().unwrap(); // every batch is acked
+            }
+        })
+    };
+    for _ in 0..4 {
+        cluster.reconcile_now();
+    }
+    writer.join().unwrap();
+    // writes have stopped; one more pass must reach a fixed point
+    cluster.reconcile_now();
+
+    let mut acked = seed_keys;
+    acked.extend(writer_keys);
+    assert_eq!(
+        rejoined.stats("lw").unwrap().metrics.adds,
+        acked.len() as u64,
+        "reseeded replica holds every acked write"
+    );
+    let rh = rejoined.handle("lw").unwrap();
+    let hits = rh.query_bulk(&acked).wait().unwrap();
+    assert!(hits.iter().all(|&x| x), "an acked key is missing on the reseeded replica");
+    std::fs::remove_dir_all(&sync_dir).ok();
+}
+
+#[test]
+fn reseed_picks_the_freshest_source_not_the_first_answerer() {
+    let (_servers, addrs) = fleet(3);
+    let cluster =
+        ClusterFilterService::connect(ClusterConfig::new(addrs.clone(), 3).unwrap()).unwrap();
+
+    let h = cluster.create_filter_spec("div", spec(13, 2, 1024, 150)).unwrap();
+    let base = unique_keys(3_000, 0xC8);
+    h.add_bulk(&base).wait().unwrap();
+
+    // diverge: only the MIDDLE replica in placement order receives an
+    // extra batch (written directly, behind the cluster's back). A
+    // first-answerer source policy would pick the stale preferred
+    // replica, conclude "counters match, caught up", and freeze the
+    // fleet at 3 000 forever.
+    let placed = cluster.config().placement("div");
+    assert_eq!(placed.len(), 3);
+    let fresh = placed[1];
+    let extra = unique_keys(1_000, 0xC9);
+    let direct_fresh = RemoteFilterService::connect(addrs[fresh].as_str()).unwrap();
+    direct_fresh.handle("div").unwrap().add_bulk(&extra).wait().unwrap();
+
+    cluster.reconcile_now();
+
+    let mut digests = Vec::new();
+    for (i, addr) in addrs.iter().enumerate() {
+        let direct = RemoteFilterService::connect(addr.as_str()).unwrap();
+        assert_eq!(
+            direct.stats("div").unwrap().metrics.adds,
+            4_000,
+            "replica {i} reseeded from the freshest holder"
+        );
+        let hits = direct.handle("div").unwrap().query_bulk(&extra).wait().unwrap();
+        assert!(hits.iter().all(|&x| x), "replica {i} is missing diverged keys");
+        digests.push(direct.digest("div").unwrap());
+    }
+    assert!(digests.windows(2).all(|w| w[0] == w[1]), "fleet converged to identical bits");
+}
+
+#[test]
+fn counter_ties_with_diverged_bits_reconverge_via_digests() {
+    let (_servers, addrs) = fleet(2);
+    let cluster =
+        ClusterFilterService::connect(ClusterConfig::new(addrs.clone(), 2).unwrap()).unwrap();
+
+    let h = cluster.create_filter_spec("tie", spec(13, 2, 1024, 150)).unwrap();
+    let base = unique_keys(2_000, 0xCA);
+    h.add_bulk(&base).wait().unwrap();
+
+    // split-brain the replicas with EQUAL counters but different bits:
+    // 500 distinct keys straight into each side. A counters-only
+    // catch-up predicate calls this "caught up"; the digest fallback
+    // must catch it and reconverge the fleet.
+    for (addr, seed) in [(&addrs[0], 0xCB), (&addrs[1], 0xCC)] {
+        let direct = RemoteFilterService::connect(addr.as_str()).unwrap();
+        direct.handle("tie").unwrap().add_bulk(&unique_keys(500, seed)).wait().unwrap();
+    }
+
+    cluster.reconcile_now();
+
+    let d0 = RemoteFilterService::connect(addrs[0].as_str()).unwrap();
+    let d1 = RemoteFilterService::connect(addrs[1].as_str()).unwrap();
+    assert_eq!(d0.digest("tie").unwrap(), d1.digest("tie").unwrap(), "bits reconverged");
+    assert_eq!(d0.stats("tie").unwrap().metrics.adds, 2_500);
+    assert_eq!(d1.stats("tie").unwrap().metrics.adds, 2_500);
+    // every CLUSTER-acked key survives the repair on both replicas (the
+    // backdoor splits were never acked by the cluster; one side loses
+    // by design — bloom shards cannot be merged bitwise here)
+    for direct in [&d0, &d1] {
+        let hits = direct.handle("tie").unwrap().query_bulk(&base).wait().unwrap();
+        assert!(hits.iter().all(|&x| x), "a cluster-acked key vanished in divergence repair");
+    }
+    // and the repair is a fixed point: another pass changes nothing
+    cluster.reconcile_now();
+    assert_eq!(d0.stats("tie").unwrap().metrics.adds, 2_500);
+    assert_eq!(d0.digest("tie").unwrap(), d1.digest("tie").unwrap());
+}
+
+#[test]
+fn runtime_membership_changes_remap_and_migrate() {
+    // three live servers, but the cluster starts with only the first two
+    let (_servers, addrs) = fleet(3);
+    let cluster =
+        ClusterFilterService::connect(ClusterConfig::new(addrs[..2].to_vec(), 2).unwrap())
+            .unwrap();
+
+    let names: Vec<String> = (0..12).map(|i| format!("m-{i:02}")).collect();
+    let keys = unique_keys(300, 0xCD);
+    for name in &names {
+        let h = cluster.create_filter_spec(name, spec(12, 1, 1024, 150)).unwrap();
+        h.add_bulk(&keys).wait().unwrap();
+    }
+
+    // grow the fleet at runtime: no restart, indices stay stable, the
+    // janitor migrates whatever rendezvous now assigns the newcomer
+    // (pass 1 seeds the new owners, pass 2 retires the strays — a stray
+    // is only dropped once every owner provably caught up)
+    cluster.add_server(&addrs[2]).unwrap();
+    assert_eq!(cluster.config().servers.len(), 3);
+    cluster.reconcile_now();
+    cluster.reconcile_now();
+
+    let mut on_new_server = 0;
+    for name in &names {
+        let placed = cluster.config().placement(name);
+        assert_eq!(placed.len(), 2);
+        on_new_server += usize::from(placed.contains(&2));
+        for (i, addr) in addrs.iter().enumerate() {
+            let direct = RemoteFilterService::connect(addr.as_str()).unwrap();
+            match direct.stats(name) {
+                Ok(stats) => {
+                    assert!(placed.contains(&i), "stray copy of {name} survived on server {i}");
+                    assert_eq!(stats.metrics.adds, 300, "migrated copy of {name} is complete");
+                }
+                Err(GbfError::NoSuchFilter(_)) => {
+                    assert!(!placed.contains(&i), "server {i} is missing its copy of {name}");
+                }
+                Err(other) => panic!("direct stats for {name} on server {i}: {other:?}"),
+            }
+        }
+    }
+    // 12 namespaces over a 3-of-2 rendezvous: the newcomer getting
+    // nothing has probability (1/3)^12 — a deterministic-enough claim
+    assert!(on_new_server > 0, "add_server never received a namespace");
+
+    // shrink back: namespaces remap onto the survivors and reseed from
+    // whichever copy remains (every namespace kept >= 1 surviving copy)
+    cluster.remove_server(&addrs[2]).unwrap();
+    assert_eq!(cluster.config().servers.len(), 2);
+    cluster.reconcile_now();
+    cluster.reconcile_now();
+
+    let mut listed = cluster.list_filters().unwrap();
+    listed.sort();
+    assert_eq!(listed, names, "every namespace survived the round-trip");
+    for name in &names {
+        for addr in &addrs[..2] {
+            let direct = RemoteFilterService::connect(addr.as_str()).unwrap();
+            assert_eq!(
+                direct.stats(name).unwrap().metrics.adds,
+                300,
+                "{name} fully re-replicated after the shrink"
+            );
+        }
+    }
 }

@@ -22,7 +22,7 @@ use std::time::Duration;
 use gbf::coordinator::wire::codec::{
     decode_request, decode_response, encode_request, encode_response, read_frame, write_frame, Request, Response,
 };
-use gbf::coordinator::{BatchPolicy, FilterService, FilterSpec, GbfError};
+use gbf::coordinator::{BatchPolicy, FilterService, FilterSpec, GbfError, Ledger, LedgerEntry};
 use gbf::filter::params::FilterConfig;
 use gbf::infra::fuzz::{corpus_dir, load_corpus, Mutator};
 
@@ -66,6 +66,16 @@ fn small_spec(max_batch: usize) -> FilterSpec {
     }
 }
 
+fn small_ledger() -> Ledger {
+    Ledger::from_parts(
+        3,
+        vec![
+            ("dead".into(), LedgerEntry { epoch: 2, tombstone: true }),
+            ("live".into(), LedgerEntry { epoch: 1, tombstone: false }),
+        ],
+    )
+}
+
 fn valid_requests() -> Vec<Vec<u8>> {
     let reqs = [
         Request::List,
@@ -77,6 +87,10 @@ fn valid_requests() -> Vec<Vec<u8>> {
         Request::QueryBulk { name: "ns".into(), instance: 7, keys: vec![9, 10] },
         Request::Snapshot { name: "ns".into(), dir: "snapshots/a".into() },
         Request::Restore { name: "ns".into(), dir: "snapshots/a".into() },
+        Request::LedgerSync { ledger: small_ledger() },
+        Request::Stamp { name: "ns".into(), instance: 7, epoch: 2 },
+        Request::Digest { name: "ns".into() },
+        Request::ClusterAdmin { add: true, addr: "127.0.0.1:7070".into() },
     ];
     reqs.iter().enumerate().map(|(i, r)| encode_request(i as u64, r)).collect()
 }
@@ -89,6 +103,10 @@ fn valid_responses() -> Vec<Vec<u8>> {
         Response::Err(GbfError::Overloaded { name: "ns".into(), depth: 12 }),
         Response::Err(GbfError::SnapshotVersion { found: 9, supported: 1 }),
         Response::Err(GbfError::NoQuorum { name: "ns".into(), replicas: 2 }),
+        Response::Err(GbfError::StaleEpoch { name: "ns".into(), held: 5, proposed: 2 }),
+        Response::Err(GbfError::NotSupported("cluster-admin".into())),
+        Response::Ledger { ledger: small_ledger(), bindings: vec![("live".into(), 1)] },
+        Response::Digest(vec![0xDEAD_BEEF, 1]),
     ];
     resps.iter().enumerate().map(|(i, r)| encode_response(i as u64, r)).collect()
 }
@@ -183,6 +201,10 @@ fn hostile_corpus_entries_fail_typed() {
         "truncated-restore-path.hex",
         "snapshot-name-oversize.hex",
         "ping-trailing-garbage.hex",
+        "ledger-bad-tombstone.hex",
+        "ledger-count-lie.hex",
+        "cluster-admin-bad-op.hex",
+        "stamp-truncated.hex",
     ] {
         assert!(decode_request(&entry(&corpus, name)).is_err(), "{name} must be a typed decode error");
     }
@@ -193,6 +215,50 @@ fn hostile_corpus_entries_fail_typed() {
         let bytes = entry(&corpus, name);
         assert!(read_frame(&mut &bytes[..]).is_err(), "{name} must be a typed frame error");
     }
+}
+
+#[test]
+fn cluster_corpus_entries_decode() {
+    let corpus = wire_corpus();
+    let (id, req) = decode_request(&entry(&corpus, "valid-ledger-sync.hex")).expect("ledger-sync decodes");
+    assert_eq!(id, 13);
+    match req {
+        Request::LedgerSync { ledger } => {
+            assert_eq!(ledger.next_epoch(), 3);
+            assert!(ledger.is_tombstoned("dead"));
+            assert!(!ledger.is_tombstoned("live"));
+        }
+        other => panic!("valid-ledger-sync decoded as {other:?}"),
+    }
+    let (id, req) = decode_request(&entry(&corpus, "valid-stamp.hex")).expect("stamp decodes");
+    assert_eq!(id, 14);
+    match req {
+        Request::Stamp { name, instance, epoch } => {
+            assert_eq!((name.as_str(), instance, epoch), ("ns", 7, 2));
+        }
+        other => panic!("valid-stamp decoded as {other:?}"),
+    }
+    let (_, req) = decode_request(&entry(&corpus, "valid-digest.hex")).expect("digest decodes");
+    assert!(matches!(req, Request::Digest { ref name } if name == "ns"));
+    let (_, req) = decode_request(&entry(&corpus, "valid-cluster-admin.hex")).expect("cluster-admin decodes");
+    match req {
+        Request::ClusterAdmin { add, addr } => {
+            assert!(add);
+            assert_eq!(addr, "127.0.0.1:7070");
+        }
+        other => panic!("valid-cluster-admin decoded as {other:?}"),
+    }
+    let (_, resp) = decode_response(&entry(&corpus, "resp-valid-ledger.hex")).expect("ledger response decodes");
+    match resp {
+        Response::Ledger { ledger, bindings } => {
+            assert_eq!(ledger.next_epoch(), 2);
+            assert!(!ledger.is_tombstoned("ns"));
+            assert_eq!(bindings, vec![("ns".to_string(), 1)]);
+        }
+        other => panic!("resp-valid-ledger decoded as {other:?}"),
+    }
+    let (_, resp) = decode_response(&entry(&corpus, "resp-valid-digest.hex")).expect("digest response decodes");
+    assert!(matches!(resp, Response::Digest(ref d) if d == &[0xDEAD_BEEF, 1]));
 }
 
 /// Regression (fuzzer finding): a hostile Create carrying
