@@ -22,6 +22,7 @@ use crate::infra::sync::{Arc, Condvar, Mutex};
 use crate::coordinator::backend::FilterBackend;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::registry::panic_message;
+use crate::fail_point;
 use crate::filter::AnswerBits;
 
 /// Batch formation policy.
@@ -182,6 +183,10 @@ impl Batcher {
         loop {
             let batch = self.next_batch();
             let Some(batch) = batch else { return };
+            // chaos lever: a delay rule here stalls the namespace's one
+            // worker between drain and execute (queue depth grows, every
+            // outstanding ticket waits) without holding the queue lock
+            fail_point!("batcher.drain");
             execute_batch(batch, backend, metrics);
         }
     }
@@ -293,6 +298,11 @@ fn execute_batch(batch: Vec<Pending>, backend: &dyn FilterBackend, metrics: &Met
     // a batch error delivered to the waiting sinks, never a dead worker
     // with every outstanding ticket wedged
     let outcome = catch_unwind(AssertUnwindSafe(|| {
+        // inside the panic shield on purpose: an injected `panic` rule
+        // must exercise the same worker-survival path a real backend
+        // panic does, and an `err` rule becomes a batch error delivered
+        // to every waiting sink
+        fail_point!("batcher.execute", Err(anyhow::anyhow!("failpoint batcher.execute: injected batch failure")));
         if is_add {
             backend.bulk_add(&keys).map(|()| AnswerBits::ones(keys.len()))
         } else {

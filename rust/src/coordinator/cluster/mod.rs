@@ -54,7 +54,22 @@
 //!
 //! An *app error* is any typed [`GbfError`] carried in a wire reply — it
 //! proves the connection works, so it records a health OK even as the
-//! call fails.
+//! call fails. [`GbfError::DeadlineExceeded`] is the one typed error
+//! that does *not* prove the connection: a deadline miss indicts the
+//! server, so it counts against health and triggers failover exactly
+//! like a connection error (`counts_against_health` in the wire client
+//! is the shared predicate).
+//!
+//! ## Deadlines
+//!
+//! Every wire leg is already bounded by its client's per-op deadline
+//! (`RetryPolicy::op_timeout`). On top of that, a failover read holds
+//! one [`Deadline`] for the whole replica walk and gives each leg a
+//! [`Deadline::split_across`] share of what remains — a stalled replica
+//! costs its share, not the whole budget, before the read moves down
+//! the replica set. Write fan-outs wait on every leg, each self-bounded
+//! at the wire layer, so a fan-out can never outlive
+//! `replicas × op_timeout`.
 //!
 //! ## Limits (documented, by design)
 //!
@@ -88,11 +103,15 @@ use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::api::{FilterApi, FilterDataPlane};
+use crate::coordinator::deadline::Deadline;
 use crate::coordinator::error::GbfError;
 use crate::coordinator::service::{FilterSpec, NamespaceStats};
 use crate::coordinator::ticket::{finish_all, finish_bits, finish_one, finish_unit, Completion, Ticket};
-use crate::coordinator::wire::client::{is_connection_error, RemoteFilterHandle, RemoteFilterService};
+use crate::coordinator::wire::client::{
+    counts_against_health, RemoteFilterHandle, RemoteFilterService, RetryPolicy,
+};
 use crate::coordinator::wire::server::WireCatalog;
+use crate::fail_point;
 use crate::filter::AnswerBits;
 use crate::infra::sync::atomic::{AtomicU64, Ordering};
 use crate::infra::sync::{lock_unpoisoned, thread, Arc, Condvar, Mutex, RwLock};
@@ -158,7 +177,7 @@ impl ClusterFilterService {
         config.validate()?;
         let mut clients = Vec::with_capacity(config.servers.len());
         for addr in &config.servers {
-            clients.push(connect_client(addr)?);
+            clients.push(connect_client(addr, config.op_timeout_ms)?);
         }
         let ledger_path = ledger_path_for(&config.sync_dir);
         let ledger = match &ledger_path {
@@ -208,7 +227,8 @@ impl ClusterFilterService {
     /// janitor (woken here) migrates onto it whatever rendezvous
     /// placement now assigns it.
     pub fn add_server(&self, addr: &str) -> Result<(), GbfError> {
-        let client = connect_client(addr)?; // lazy: no dial under the guard
+        let op_timeout_ms = self.inner.topology.read().unwrap().config.op_timeout_ms;
+        let client = connect_client(addr, op_timeout_ms)?; // lazy: no dial under the guard
         {
             let mut topo = self.inner.topology.write().unwrap();
             let mut next = topo.config.clone();
@@ -275,7 +295,7 @@ impl ClusterFilterService {
                 }
                 Err(e) => {
                     self.inner.note(server, Some(&e));
-                    if !is_connection_error(&e) && first_app_error.is_none() {
+                    if !counts_against_health(&e) && first_app_error.is_none() {
                         first_app_error = Some(e);
                     }
                 }
@@ -309,7 +329,7 @@ impl ClusterFilterService {
                 }
                 Err(e) => {
                     self.inner.note(server, Some(&e));
-                    if !is_connection_error(&e) && first_app_error.is_none() {
+                    if !counts_against_health(&e) && first_app_error.is_none() {
                         first_app_error = Some(e);
                     }
                 }
@@ -378,7 +398,7 @@ impl ClusterFilterService {
                 }
                 Err(e) => {
                     self.inner.note(server, Some(&e));
-                    if !is_connection_error(&e) && first_app_error.is_none() {
+                    if !counts_against_health(&e) && first_app_error.is_none() {
                         first_app_error = Some(e);
                     }
                 }
@@ -404,7 +424,7 @@ impl ClusterFilterService {
                 }
                 Err(e) => {
                     self.inner.note(server, Some(&e));
-                    if !is_connection_error(&e) && first_app_error.is_none() {
+                    if !counts_against_health(&e) && first_app_error.is_none() {
                         first_app_error = Some(e);
                     }
                 }
@@ -432,7 +452,7 @@ impl ClusterFilterService {
                 }
                 Err(e) => {
                     self.inner.note(server, Some(&e));
-                    if !is_connection_error(&e) && first_app_error.is_none() {
+                    if !counts_against_health(&e) && first_app_error.is_none() {
                         first_app_error = Some(e);
                     }
                 }
@@ -467,7 +487,7 @@ impl ClusterFilterService {
                 }
                 Err(e) => {
                     self.inner.note(server, Some(&e));
-                    if !is_connection_error(&e) && first_app_error.is_none() {
+                    if !counts_against_health(&e) && first_app_error.is_none() {
                         first_app_error = Some(e);
                     }
                 }
@@ -494,8 +514,16 @@ impl Drop for ClusterFilterService {
     }
 }
 
-fn connect_client(addr: &str) -> Result<RemoteFilterService, GbfError> {
-    RemoteFilterService::connect_lazy(addr)
+/// Lazy wire client with the cluster's per-op deadline: every call this
+/// front end makes — data plane, admin, janitor probe — is bounded by
+/// `op_timeout_ms`, so a stalled server can never wedge a caller or the
+/// janitor.
+fn connect_client(addr: &str, op_timeout_ms: u64) -> Result<RemoteFilterService, GbfError> {
+    let policy = RetryPolicy {
+        op_timeout: Duration::from_millis(op_timeout_ms.max(1)),
+        ..RetryPolicy::default()
+    };
+    RemoteFilterService::connect_lazy_with(addr, policy)
         .map_err(|e| GbfError::InvalidConfig(format!("cluster server {addr:?}: {e:#}")))
 }
 
@@ -569,11 +597,13 @@ impl ClusterInner {
 
     /// Fold one wire-leg outcome into the health tracker. Any reply —
     /// even a typed application error — proves the connection, so only
-    /// connection errors count against a server. A recovery pokes the
-    /// janitor so re-replication starts within one wake, not one tick.
+    /// errors that indict the server (connection failures and deadline
+    /// misses, the `counts_against_health` predicate) count against it.
+    /// A recovery pokes the janitor so re-replication starts within one
+    /// wake, not one tick.
     fn note(&self, server: usize, err: Option<&GbfError>) {
         match err {
-            Some(e) if is_connection_error(e) => {
+            Some(e) if counts_against_health(e) => {
                 self.health.record_error(server);
             }
             _ => {
@@ -588,6 +618,9 @@ impl ClusterInner {
     /// live ones. Idempotent — reconciliation re-ships a namespace only
     /// when a replica is missing it or provably behind.
     fn heal_pass(&self) {
+        // delay lever: a slow janitor keeps down servers down longer and
+        // widens the window where a fleet runs under-replicated
+        fail_point!("cluster.janitor.heal");
         let (_, clients) = self.topo();
         for server in self.health.down_servers() {
             // ping_now clears the client's dial cooldown: the janitor is
@@ -619,6 +652,7 @@ impl ClusterInner {
     /// back theirs (max-epoch-wins, so order does not matter), collect
     /// each server's advertised bindings.
     fn gossip(&self, clients: &[RemoteFilterService]) -> FleetBindings {
+        fail_point!("cluster.ledger_sync");
         let local = self.ledger.snapshot();
         let mut merged = local.clone();
         let mut changed = false;
@@ -731,6 +765,10 @@ impl ClusterInner {
         target_has_it: bool,
         bindings: &FleetBindings,
     ) {
+        // an err rule abandons this namespace's reseed for the pass —
+        // the next janitor pass retries, which is exactly the idempotence
+        // the chaos suite leans on
+        fail_point!("cluster.reseed", ());
         let epoch_of = |server: usize| -> u64 {
             bindings
                 .get(server)
@@ -847,6 +885,9 @@ impl ClusterHandle {
     }
 
     fn submit_write<T>(&self, keys: &[u64], finish: fn(AnswerBits) -> T) -> Ticket<T> {
+        // delay lever: stall the fan-out before any leg is submitted
+        // (err/panic rules are not meaningful at this point)
+        fail_point!("cluster.fanout");
         let mut pending = Vec::with_capacity(self.legs.len());
         for leg in &self.legs {
             pending.push(WriteLeg { server: leg.server, ticket: leg.handle.add_bulk(keys) });
@@ -874,11 +915,16 @@ impl ClusterHandle {
                 legs.push(leg.clone());
             }
         }
+        // one budget spans the whole replica walk: the cluster's per-op
+        // deadline, split across the legs as the walk progresses
+        let budget =
+            Duration::from_millis(self.inner.topology.read().unwrap().config.op_timeout_ms.max(1));
         let first = legs[0].handle.query_bulk_bits(keys);
         let read = FailoverRead {
             inner: Arc::clone(&self.inner),
             name: self.name.clone(),
             keys: keys.to_vec(),
+            deadline: Deadline::after(budget),
             legs,
             state: Mutex::new_class(
                 "cluster.read",
@@ -946,7 +992,9 @@ struct FanoutWrite {
 /// Write resolution (module docs table): one ack suffices — replication
 /// is best-effort-now, janitor-guaranteed-later; with zero acks the
 /// first application error (placement order) beats the unreachability
-/// verdict.
+/// verdict. Deadline misses group with connection errors here: a leg
+/// that timed out may or may not have executed, which is exactly the
+/// ambiguity `NoQuorum` (not a replayable app error) must cover.
 fn resolve_write(
     name: &str,
     replicas: usize,
@@ -957,7 +1005,7 @@ fn resolve_write(
     }
     for (_, outcome) in outcomes {
         if let Some(e) = outcome {
-            if !is_connection_error(e) {
+            if !counts_against_health(e) {
                 return Err(e.clone());
             }
         }
@@ -1029,13 +1077,26 @@ struct ReadState {
     first_app_error: Option<GbfError>,
 }
 
+/// Floor for one leg's share of the read budget: even with the budget
+/// exhausted, each remaining leg gets a beat to answer — a live replica
+/// behind a stalled one should still win the read.
+const MIN_LEG_WAIT: Duration = Duration::from_millis(100);
+
 /// Completion that walks the replica set until one leg answers. Leg
 /// submissions and blocking waits happen with no guard held; the state
 /// mutex only shuttles the in-flight ticket in and out.
+///
+/// The walk is budgeted: `deadline` spans all legs, and each leg waits
+/// at most [`Deadline::split_across`] the remaining legs. A leg that
+/// uses up its share is abandoned (its wire ticket resolves unheard)
+/// and settled as a [`GbfError::DeadlineExceeded`] — counting against
+/// that server's health — before the read fails over to the next leg.
 struct FailoverRead {
     inner: Arc<ClusterInner>,
     name: String,
     keys: Vec<u64>,
+    /// Budget for the whole replica walk, started at submission.
+    deadline: Deadline,
     /// Attempt order (live first), fixed at submission.
     legs: Vec<Leg>,
     state: Mutex<ReadState>,
@@ -1074,7 +1135,7 @@ impl FailoverRead {
             }
             Err(e) => {
                 self.inner.note(server, Some(&e));
-                if !is_connection_error(&e) {
+                if !counts_against_health(&e) {
                     let mut g = lock_unpoisoned(&self.state);
                     if g.first_app_error.is_none() {
                         g.first_app_error = Some(e);
@@ -1105,8 +1166,21 @@ impl Completion for FailoverRead {
         loop {
             match self.next_step() {
                 ReadStep::Wait(leg, ticket) => {
-                    if let Some(final_answer) = self.settle(leg, ticket.wait()) {
-                        return final_answer;
+                    let share = self.deadline.split_across(self.legs.len() - leg, MIN_LEG_WAIT);
+                    match ticket.wait_timeout(share) {
+                        Ok(resolved) => {
+                            if let Some(final_answer) = self.settle(leg, resolved) {
+                                return final_answer;
+                            }
+                        }
+                        // the leg spent its share of the read budget:
+                        // abandon its ticket and fail over
+                        Err(_abandoned) => {
+                            let miss = self.deadline.exceeded("query_bulk");
+                            if let Some(final_answer) = self.settle(leg, Err(miss)) {
+                                return final_answer;
+                            }
+                        }
                     }
                 }
                 ReadStep::Submit(leg) => {
@@ -1119,20 +1193,32 @@ impl Completion for FailoverRead {
     }
 
     fn wait_timeout(&self, timeout: Duration) -> Option<Result<AnswerBits, GbfError>> {
-        let deadline = Instant::now() + timeout;
+        let caller = Instant::now() + timeout;
         loop {
             match self.next_step() {
                 ReadStep::Wait(leg, ticket) => {
-                    let remaining = deadline.saturating_duration_since(Instant::now());
-                    match ticket.wait_timeout(remaining) {
+                    let caller_left = caller.saturating_duration_since(Instant::now());
+                    let share = self.deadline.split_across(self.legs.len() - leg, MIN_LEG_WAIT);
+                    match ticket.wait_timeout(share.min(caller_left)) {
                         Ok(resolved) => {
                             if let Some(final_answer) = self.settle(leg, resolved) {
                                 return Some(final_answer);
                             }
                         }
                         Err(ticket) => {
-                            self.park(leg, ticket);
-                            return None;
+                            if share < caller_left {
+                                // the leg's budget share expired first:
+                                // abandon it and fail over
+                                let miss = self.deadline.exceeded("query_bulk");
+                                if let Some(final_answer) = self.settle(leg, Err(miss)) {
+                                    return Some(final_answer);
+                                }
+                            } else {
+                                // the caller's bound expired: the leg is
+                                // still live, hand it back for next time
+                                self.park(leg, ticket);
+                                return None;
+                            }
                         }
                     }
                 }
@@ -1258,7 +1344,7 @@ impl WireCatalog for ClusterFilterService {
                 }
                 Err(e) => {
                     self.inner.note(server, Some(&e));
-                    if !is_connection_error(&e) && first_app_error.is_none() {
+                    if !counts_against_health(&e) && first_app_error.is_none() {
                         first_app_error = Some(e);
                     }
                 }
@@ -1280,9 +1366,14 @@ impl WireCatalog for ClusterFilterService {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::wire::client::is_connection_error;
 
     fn conn_err() -> Option<GbfError> {
         Some(GbfError::Backend("wire client: connection closed by server".into()))
+    }
+
+    fn deadline_err() -> Option<GbfError> {
+        Some(GbfError::DeadlineExceeded { op: "add_bulk".into(), elapsed_ms: 10_000 })
     }
 
     #[test]
@@ -1302,6 +1393,14 @@ mod tests {
             }
             other => panic!("expected NoQuorum, got {other:?}"),
         }
+        // a deadline miss is ambiguous (may or may not have executed):
+        // it groups with connection errors, never replays as an app error
+        assert!(matches!(
+            resolve_write("ns", 2, &[(0, deadline_err()), (1, conn_err())]),
+            Err(GbfError::NoQuorum { .. })
+        ));
+        // one ack still wins even when the other leg missed its deadline
+        assert!(resolve_write("ns", 2, &[(0, deadline_err()), (1, None)]).is_ok());
     }
 
     /// A fully dead fleet constructs fine (lazy), then answers every

@@ -51,6 +51,12 @@ pub struct ClusterConfig {
     /// milliseconds. `0` disables the background janitor (tests drive
     /// recovery explicitly via `reconcile_now`).
     pub heal_interval_ms: u64,
+    /// Per-operation deadline for every wire call this front end makes
+    /// (data plane, admin plane, and janitor probes alike), in
+    /// milliseconds. A stalled server costs a caller at most this much
+    /// before the call resolves as a typed `DeadlineExceeded` and the
+    /// server takes a health strike. Must be non-zero.
+    pub op_timeout_ms: u64,
 }
 
 impl ClusterConfig {
@@ -62,6 +68,7 @@ impl ClusterConfig {
             overrides: BTreeMap::new(),
             sync_dir: String::new(),
             heal_interval_ms: 0,
+            op_timeout_ms: 10_000,
         };
         config.validate()?;
         Ok(config)
@@ -135,6 +142,13 @@ impl ClusterConfig {
                 self.replicas
             )));
         }
+        if self.op_timeout_ms == 0 {
+            return Err(GbfError::InvalidConfig(
+                "op_timeout_ms must be non-zero: a zero per-op deadline would fail every call \
+                 before it starts"
+                    .into(),
+            ));
+        }
         // re-replication ships snapshots by path through `sync_dir`; an
         // empty sync_dir falls back to the front end's temp dir, which
         // only the front end's own host can see — fine for a loopback
@@ -204,6 +218,7 @@ impl ClusterConfig {
             ("overrides", overrides),
             ("sync_dir", Json::str(self.sync_dir.clone())),
             ("heal_interval_ms", Json::Int(self.heal_interval_ms as i64)),
+            ("op_timeout_ms", Json::Int(self.op_timeout_ms as i64)),
         ])
         .to_string()
     }
@@ -226,7 +241,9 @@ impl ClusterConfig {
         }
         let sync_dir = doc.expect("sync_dir").map_err(bad)?.as_str().map_err(bad)?.to_string();
         let heal_interval_ms = doc.expect("heal_interval_ms").map_err(bad)?.as_u64().map_err(bad)?;
-        let config = ClusterConfig { servers, replicas, overrides, sync_dir, heal_interval_ms };
+        let op_timeout_ms = doc.expect("op_timeout_ms").map_err(bad)?.as_u64().map_err(bad)?;
+        let config =
+            ClusterConfig { servers, replicas, overrides, sync_dir, heal_interval_ms, op_timeout_ms };
         config.validate()?;
         Ok(config)
     }
@@ -342,6 +359,7 @@ mod tests {
             overrides: BTreeMap::from([("pinned".to_string(), vec![2, 1])]),
             sync_dir: "/tmp/gbf-sync".to_string(),
             heal_interval_ms: 500,
+            op_timeout_ms: 300,
         };
         config.validate().unwrap();
         let text = config.to_json();
@@ -356,8 +374,21 @@ mod tests {
         assert!(matches!(ClusterConfig::from_json("not json"), Err(GbfError::InvalidConfig(_))));
         assert!(ClusterConfig::from_json("{}").is_err());
         // well-formed JSON, incoherent topology: replicas > fleet
-        let text = r#"{"servers":["a:1"],"replicas":2,"overrides":{},"sync_dir":"","heal_interval_ms":0}"#;
+        let text = r#"{"servers":["a:1"],"replicas":2,"overrides":{},"sync_dir":"","heal_interval_ms":0,"op_timeout_ms":10000}"#;
         assert!(ClusterConfig::from_json(text).is_err());
+    }
+
+    #[test]
+    fn zero_op_timeout_is_rejected() {
+        let mut config = ClusterConfig::new(fleet(2), 2).unwrap();
+        assert_eq!(config.op_timeout_ms, 10_000, "default per-op deadline");
+        config.op_timeout_ms = 0;
+        match config.validate() {
+            Err(GbfError::InvalidConfig(msg)) => {
+                assert!(msg.contains("op_timeout_ms"), "error names the field: {msg}");
+            }
+            other => panic!("zero op_timeout_ms must be rejected, got {other:?}"),
+        }
     }
 
     #[test]

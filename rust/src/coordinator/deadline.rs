@@ -1,0 +1,99 @@
+//! `Deadline` — the per-operation time budget (ISSUE 10).
+//!
+//! A deadline is minted when an operation starts and threaded through
+//! every blocking step it takes: socket waits, ticket completions,
+//! cluster failover attempts. Each step waits at most
+//! [`remaining`](Deadline::remaining); when the budget runs dry the
+//! operation surfaces [`GbfError::DeadlineExceeded`] naming itself and
+//! how long it actually ran — never a hang.
+//!
+//! The cluster layer *splits* one budget across replicas
+//! ([`split_across`](Deadline::split_across)): a read with three
+//! replicas left gives the first attempt a third of what remains, so a
+//! stalled replica burns its slice and the op still has budget to fail
+//! over with.
+
+use std::time::{Duration, Instant};
+
+use super::error::GbfError;
+
+/// A monotonic time budget: `start + budget` is the instant after which
+/// the operation must stop waiting and answer `DeadlineExceeded`.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    start: Instant,
+    budget: Duration,
+}
+
+impl Deadline {
+    /// A deadline `budget` from now.
+    pub fn after(budget: Duration) -> Deadline {
+        Deadline { start: Instant::now(), budget }
+    }
+
+    /// Time the operation has been running.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Budget left (zero once expired, never negative).
+    pub fn remaining(&self) -> Duration {
+        self.budget.saturating_sub(self.start.elapsed())
+    }
+
+    pub fn expired(&self) -> bool {
+        self.remaining().is_zero()
+    }
+
+    /// The typed error for blowing this deadline on operation `op`.
+    pub fn exceeded(&self, op: &str) -> GbfError {
+        GbfError::DeadlineExceeded { op: op.to_string(), elapsed_ms: self.elapsed().as_millis() as u64 }
+    }
+
+    /// An even slice of the remaining budget for the next of `attempts`
+    /// tries, floored at `min` so the last attempts aren't starved into
+    /// guaranteed failure by earlier slow ones (the floor may overshoot
+    /// the deadline slightly; [`expired`](Deadline::expired) between
+    /// attempts keeps the overall op bounded).
+    pub fn split_across(&self, attempts: usize, min: Duration) -> Duration {
+        let share = self.remaining() / attempts.max(1) as u32;
+        share.max(min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_deadline_has_its_budget() {
+        let d = Deadline::after(Duration::from_secs(10));
+        assert!(!d.expired());
+        assert!(d.remaining() > Duration::from_secs(9));
+        assert!(d.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn expired_deadline_reports_zero_and_types_the_error() {
+        let d = Deadline::after(Duration::ZERO);
+        assert!(d.expired());
+        assert_eq!(d.remaining(), Duration::ZERO);
+        match d.exceeded("stats") {
+            GbfError::DeadlineExceeded { op, .. } => assert_eq!(op, "stats"),
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn split_shares_the_remainder_with_a_floor() {
+        let d = Deadline::after(Duration::from_millis(900));
+        let slice = d.split_across(3, Duration::from_millis(10));
+        assert!(slice <= Duration::from_millis(300));
+        assert!(slice >= Duration::from_millis(250), "near an even third: {slice:?}");
+        // the floor protects late attempts
+        let spent = Deadline::after(Duration::ZERO);
+        assert_eq!(spent.split_across(3, Duration::from_millis(10)), Duration::from_millis(10));
+        // zero attempts is treated as one, not a division panic
+        assert!(d.split_across(0, Duration::ZERO) > Duration::ZERO);
+    }
+}

@@ -47,6 +47,12 @@ pub enum GbfError {
     /// it (e.g. `cluster-admin` sent to a plain wire server instead of a
     /// cluster gateway).
     NotSupported(String),
+    /// The operation ran out of its deadline budget (ISSUE 10): the peer
+    /// was reachable but did not answer in time. Distinct from a
+    /// connection error — the op may have executed remotely; callers must
+    /// treat it as ambiguous for non-idempotent work. `op` names the
+    /// operation that timed out, `elapsed_ms` how long it actually ran.
+    DeadlineExceeded { op: String, elapsed_ms: u64 },
 }
 
 impl GbfError {
@@ -63,7 +69,8 @@ impl GbfError {
             | GbfError::SnapshotVersion { .. }
             | GbfError::SnapshotGeometry(_)
             | GbfError::SnapshotChecksum { .. }
-            | GbfError::SnapshotCorrupt(_) => None,
+            | GbfError::SnapshotCorrupt(_)
+            | GbfError::DeadlineExceeded { .. } => None,
         }
     }
 }
@@ -96,6 +103,9 @@ impl fmt::Display for GbfError {
                 write!(f, "namespace {name:?} holds ledger epoch {held}; refusing stale epoch {proposed}")
             }
             GbfError::NotSupported(msg) => write!(f, "not supported here: {msg}"),
+            GbfError::DeadlineExceeded { op, elapsed_ms } => {
+                write!(f, "operation {op:?} exceeded its deadline after {elapsed_ms}ms")
+            }
         }
     }
 }
@@ -149,6 +159,14 @@ mod tests {
         assert_eq!(e.filter_name(), Some("ns"));
         assert_eq!(GbfError::NotSupported("cluster-admin".into()).filter_name(), None);
         assert!(GbfError::NotSupported("cluster-admin".into()).to_string().contains("cluster-admin"));
+    }
+
+    #[test]
+    fn deadline_exceeded_names_op_and_elapsed() {
+        let e = GbfError::DeadlineExceeded { op: "query_bulk".into(), elapsed_ms: 750 };
+        assert!(e.to_string().contains("query_bulk") && e.to_string().contains("750"), "{e}");
+        assert_eq!(e.filter_name(), None);
+        assert!(matches!(e, GbfError::DeadlineExceeded { ref op, elapsed_ms: 750 } if op == "query_bulk"));
     }
 
     #[test]

@@ -61,6 +61,7 @@ pub mod api;
 pub mod backend;
 pub(crate) mod batcher;
 pub mod cluster;
+pub mod deadline;
 pub mod error;
 pub mod metrics;
 pub mod persist;
@@ -75,6 +76,7 @@ pub use api::{FilterApi, FilterDataPlane};
 pub use backend::{FilterBackend, NativeBackend, PjrtBackend};
 pub use cluster::{ClusterConfig, ClusterFilterService, Ledger, LedgerEntry};
 pub use batcher::BatchPolicy;
+pub use deadline::Deadline;
 pub use error::GbfError;
 pub use metrics::{Metrics, MetricsSnapshot, ShardStats};
 pub use persist::{SnapshotManifest, SnapshotReader, SnapshotWriter};

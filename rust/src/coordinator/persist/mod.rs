@@ -56,6 +56,7 @@ use std::sync::OnceLock;
 
 use crate::filter::params::FilterConfig;
 use crate::infra::sync::Mutex;
+use crate::{fail_point, fail_torn};
 
 use super::error::GbfError;
 
@@ -217,9 +218,25 @@ impl SnapshotWriter {
             )));
         }
         let file = shard_file_name(idx);
+        fail_point!(
+            "persist.shard_write",
+            Err(GbfError::SnapshotCorrupt(format!("injected shard write failure at {file}")))
+        );
         let mut bytes = Vec::with_capacity(words.len() * 8);
         for &w in words {
             bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        if let Some(cut) = fail_torn!("persist.shard_write", bytes.len()) {
+            // a torn rule leaves the short prefix on disk — exactly the
+            // wreckage a crash mid-write leaves in the temp dir — and
+            // surfaces the typed error; the destination stays untouched
+            // because nothing torn is ever published
+            let path = self.tmp_dir.join(&file);
+            let _ = fs::write(&path, &bytes[..cut]);
+            return Err(GbfError::SnapshotCorrupt(format!(
+                "injected torn shard write: {cut}/{} bytes at {path:?}",
+                bytes.len()
+            )));
         }
         write_fsync(&self.tmp_dir.join(&file), &bytes)?;
         self.entries.push(ShardFile { file, words: words.len() as u64, checksum: checksum_words(words) });
@@ -261,8 +278,21 @@ impl SnapshotWriter {
             max_batch: self.max_batch,
             max_queue_depth: self.max_queue_depth,
         };
+        fail_point!(
+            "persist.manifest_write",
+            Err(GbfError::SnapshotCorrupt("injected manifest write failure".into()))
+        );
         write_fsync(&self.tmp_dir.join(MANIFEST_FILE), manifest.to_json().as_bytes())?;
         fsync_dir(&self.tmp_dir);
+        // `persist.commit_publish` generalizes the crash hook below: an
+        // `err` rule stops here exactly like `commit_crash_before_publish`
+        // (kept for the tier-1 persistence suite, which runs without
+        // `--cfg failpoints`), and a `panic` rule aborts the thread
+        // mid-protocol for real.
+        fail_point!(
+            "persist.commit_publish",
+            Err(GbfError::SnapshotCorrupt("injected crash before publish".into()))
+        );
         if crash_before_publish {
             return Ok(());
         }

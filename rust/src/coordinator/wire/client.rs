@@ -24,6 +24,16 @@
 //! per call, though each call starts by re-dialing a dead connection.
 //! Every failure path is a typed error, never a hang: while the backoff
 //! window is open, calls fail fast with the recorded reason.
+//!
+//! **Deadlines (ISSUE 10):** every blocking wait is bounded by the
+//! policy's [`op_timeout`](RetryPolicy::op_timeout). A server that
+//! accepts the connection but never answers surfaces
+//! [`GbfError::DeadlineExceeded`] naming the operation and its elapsed
+//! time; the stalled connection is evicted so the next call re-dials.
+//! Deadline misses are deliberately *not* classified as connection
+//! errors — the request may have executed remotely, so blind replay of
+//! non-idempotent work would be wrong — but they do count against a
+//! replica's health ([`counts_against_health`]).
 
 use std::collections::HashMap;
 use std::hash::BuildHasher;
@@ -36,7 +46,9 @@ use std::time::{Duration, Instant};
 use anyhow::{ensure, Context, Result};
 
 use crate::coordinator::cluster::ledger::Ledger;
+use crate::coordinator::deadline::Deadline;
 use crate::coordinator::error::GbfError;
+use crate::{fail_point, fail_torn};
 use crate::coordinator::service::{FilterSpec, NamespaceStats};
 use crate::coordinator::ticket::{finish_all, finish_bits, finish_one, finish_unit, Completion, Ticket};
 use crate::filter::params::FilterConfig;
@@ -74,19 +86,9 @@ impl Slot {
         lock_unpoisoned(&self.state).is_some()
     }
 
-    fn wait(&self) -> Response {
-        let mut st = lock_unpoisoned(&self.state);
-        while st.is_none() {
-            st = self.done.wait(st).unwrap_or_else(PoisonError::into_inner);
-        }
-        match st.take() {
-            Some(resp) => resp,
-            // unreachable (the loop exits on Some), but the wire path is
-            // panic-free by contract: surface a typed error instead
-            None => Response::Err(GbfError::Backend("wire slot resolved empty".into())),
-        }
-    }
-
+    /// Bounded park — deliberately the *only* wait a slot offers: every
+    /// path that used to block forever now rides a [`Deadline`] budget
+    /// (ISSUE 10), so a silent server can never wedge a caller.
     fn wait_timeout(&self, timeout: Duration) -> Option<Response> {
         let deadline = std::time::Instant::now() + timeout;
         let mut st = lock_unpoisoned(&self.state);
@@ -118,8 +120,22 @@ struct WireCompletion {
     /// Keeps the connection (and with it the reader thread) alive while
     /// this ticket is outstanding, so a ticket still resolves — with its
     /// answer or a typed connection error — even after the last client
-    /// clone is dropped.
-    _client: Arc<ClientInner>,
+    /// clone is dropped. Also the eviction target when the deadline
+    /// expires: a stalled connection must not stay installed.
+    conn: Arc<ClientInner>,
+    /// The owning service, so a deadline expiry can evict `conn`.
+    service: RemoteFilterService,
+    /// Data-plane op name for the deadline error.
+    op: &'static str,
+    /// Completion budget, from the policy's `op_timeout`.
+    budget: Duration,
+}
+
+impl WireCompletion {
+    fn expire(&self, elapsed: Duration) -> GbfError {
+        self.service.evict(&self.conn);
+        GbfError::DeadlineExceeded { op: self.op.to_string(), elapsed_ms: elapsed.as_millis() as u64 }
+    }
 }
 
 impl Completion for WireCompletion {
@@ -128,11 +144,21 @@ impl Completion for WireCompletion {
     }
 
     fn wait(&self) -> Result<AnswerBits, GbfError> {
-        interpret(self.slot.wait())
+        let deadline = Deadline::after(self.budget);
+        match self.slot.wait_timeout(self.budget) {
+            Some(resp) => interpret(resp),
+            None => Err(self.expire(deadline.elapsed())),
+        }
     }
 
     fn wait_timeout(&self, timeout: Duration) -> Option<Result<AnswerBits, GbfError>> {
-        self.slot.wait_timeout(timeout).map(interpret)
+        match self.slot.wait_timeout(timeout.min(self.budget)) {
+            Some(resp) => Some(interpret(resp)),
+            // the caller's (shorter) bound ran out first: still pending
+            None if timeout < self.budget => None,
+            // the op budget itself ran out: resolve, don't dangle
+            None => Some(Err(self.expire(self.budget))),
+        }
     }
 }
 
@@ -166,6 +192,13 @@ impl RetryRead {
     fn current_slot(&self) -> Arc<Slot> {
         let g = lock_unpoisoned(&self.attempt);
         Arc::clone(&g.slot)
+    }
+
+    /// Snapshot the current attempt's connection (same tiny-guard rule),
+    /// for eviction when the read's deadline expires.
+    fn current_conn(&self) -> Arc<ClientInner> {
+        let g = lock_unpoisoned(&self.attempt);
+        Arc::clone(&g.conn)
     }
 
     /// Consume one retry from the budget; false when exhausted.
@@ -225,10 +258,16 @@ impl Completion for RetryRead {
     }
 
     fn wait(&self) -> Result<AnswerBits, GbfError> {
+        // One deadline across ALL retry attempts: reconnect-and-resubmit
+        // must tighten the remaining budget, not restart it.
+        let deadline = Deadline::after(self.client.shared.policy.op_timeout);
         loop {
             let slot = self.current_slot();
-            let resolved = interpret(slot.wait());
-            match self.settle(resolved) {
+            let Some(resp) = slot.wait_timeout(deadline.remaining()) else {
+                self.client.evict(&self.current_conn());
+                return Err(deadline.exceeded("query_bulk"));
+            };
+            match self.settle(interpret(resp)) {
                 Ok(result) => return result,
                 Err(()) => {}
             }
@@ -236,13 +275,21 @@ impl Completion for RetryRead {
     }
 
     fn wait_timeout(&self, timeout: Duration) -> Option<Result<AnswerBits, GbfError>> {
-        let deadline = Instant::now() + timeout;
+        let op_deadline = Deadline::after(self.client.shared.policy.op_timeout);
+        let caller_deadline = Instant::now() + timeout;
         loop {
             let slot = self.current_slot();
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            let resp = slot.wait_timeout(remaining)?;
-            let resolved = interpret(resp);
-            match self.settle(resolved) {
+            let until_caller = caller_deadline.saturating_duration_since(Instant::now());
+            let Some(resp) = slot.wait_timeout(until_caller.min(op_deadline.remaining())) else {
+                if op_deadline.expired() {
+                    // the op budget ran out: resolve, don't dangle
+                    self.client.evict(&self.current_conn());
+                    return Some(Err(op_deadline.exceeded("query_bulk")));
+                }
+                // the caller's (shorter) bound ran out first: still pending
+                return None;
+            };
+            match self.settle(interpret(resp)) {
                 Ok(result) => return Some(result),
                 Err(()) => {}
             }
@@ -264,6 +311,12 @@ pub struct RetryPolicy {
     pub max_backoff: Duration,
     /// Per-address TCP connect timeout on every dial.
     pub dial_timeout: Duration,
+    /// Budget for one operation's full round-trip (send → reply, or
+    /// ticket completion). A server that accepts the connection but
+    /// stalls past it surfaces [`GbfError::DeadlineExceeded`] instead of
+    /// hanging the caller (ISSUE 10). Socket write timeouts and the
+    /// reader thread's in-flight read timeout derive from it too.
+    pub op_timeout: Duration,
 }
 
 impl Default for RetryPolicy {
@@ -273,6 +326,7 @@ impl Default for RetryPolicy {
             base_backoff: Duration::from_millis(25),
             max_backoff: Duration::from_secs(1),
             dial_timeout: Duration::from_secs(2),
+            op_timeout: Duration::from_secs(10),
         }
     }
 }
@@ -286,6 +340,16 @@ pub(crate) fn is_connection_error(e: &GbfError) -> bool {
         GbfError::Backend(msg) => msg.starts_with("wire client:") || msg.starts_with("wire send failed"),
         _ => false,
     }
+}
+
+/// Failures that count against a replica's health (the cluster's
+/// 3-strike tracker): transport failures AND deadline misses. A replica
+/// that still answers `Ping` but stalls real operations past their
+/// budget must be marked down like a dead one (ISSUE 10) — but a
+/// deadline miss is *not* a connection error: the op may have executed
+/// remotely, so it must never be blindly replayed.
+pub(crate) fn counts_against_health(e: &GbfError) -> bool {
+    is_connection_error(e) || matches!(e, GbfError::DeadlineExceeded { .. })
 }
 
 /// Cooldown before the next dial attempt after `streak` consecutive dial
@@ -362,6 +426,10 @@ fn fresh_id(conn: &ClientInner) -> u64 {
 
 /// Dial the first reachable address and start its reader thread.
 fn dial(shared: &ClientShared) -> Result<Arc<ClientInner>, GbfError> {
+    fail_point!(
+        "wire.client.connect",
+        Err(GbfError::Backend(format!("wire client: dial {} failed: injected fault", shared.label)))
+    );
     let mut last_err = String::from("no addresses resolved");
     for addr in &shared.addrs {
         let stream = match TcpStream::connect_timeout(addr, shared.policy.dial_timeout) {
@@ -372,6 +440,11 @@ fn dial(shared: &ClientShared) -> Result<Arc<ClientInner>, GbfError> {
             }
         };
         stream.set_nodelay(true).ok();
+        // A peer that stops draining its receive buffer must not wedge
+        // the writer mutex forever: bound every socket write by the op
+        // budget (a fired timeout surfaces as a send failure, which
+        // kills just this disposable connection).
+        stream.set_write_timeout(Some(shared.policy.op_timeout)).ok();
         let reader_stream = match stream.try_clone() {
             Ok(s) => s,
             Err(e) => {
@@ -387,9 +460,10 @@ fn dial(shared: &ClientShared) -> Result<Arc<ClientInner>, GbfError> {
             dead_flag: AtomicBool::new(false),
         });
         let weak = Arc::downgrade(&inner);
+        let op_timeout = shared.policy.op_timeout;
         let spawned = thread::Builder::new()
             .name("gbf-wire-reader".into())
-            .spawn(move || reader_loop(reader_stream, weak));
+            .spawn(move || reader_loop(reader_stream, weak, op_timeout));
         match spawned {
             Ok(_) => return Ok(inner),
             Err(e) => last_err = format!("{addr}: spawning reader: {e}"),
@@ -402,6 +476,7 @@ fn dial(shared: &ClientShared) -> Result<Arc<ClientInner>, GbfError> {
 /// straight from borrowed key slices); the returned slot resolves when
 /// the reply for `id` lands.
 fn send_payload(conn: &Arc<ClientInner>, id: u64, payload: Vec<u8>) -> Result<Arc<Slot>, GbfError> {
+    fail_point!("wire.client.send", Err(GbfError::Backend("wire send failed: injected fault".into())));
     if let Some(reason) = lock_unpoisoned(&conn.dead).clone() {
         return Err(GbfError::Backend(format!("wire client: {reason}")));
     }
@@ -417,7 +492,10 @@ fn send_payload(conn: &Arc<ClientInner>, id: u64, payload: Vec<u8>) -> Result<Ar
     lock_unpoisoned(&conn.pending).insert(id, Arc::clone(&slot));
     let write_result = {
         let mut w = lock_unpoisoned(&conn.writer);
-        write_frame(&mut *w, &payload)
+        match fail_torn!("wire.client.send", payload.len()) {
+            Some(cut) => torn_write(&mut w, &payload, cut),
+            None => write_frame(&mut *w, &payload),
+        }
     };
     if let Err(e) = write_result {
         lock_unpoisoned(&conn.pending).remove(&id);
@@ -433,6 +511,22 @@ fn send_payload(conn: &Arc<ClientInner>, id: u64, payload: Vec<u8>) -> Result<Ar
         }
     }
     Ok(slot)
+}
+
+/// A `torn` failpoint fired on the send path: ship a frame header that
+/// promises the full payload, then stop `cut` bytes into the body and
+/// fail the call — exactly the half-written frame a mid-send crash
+/// leaves behind. The server's decoder must treat the stall/short frame
+/// as a dead peer, never as a parseable request.
+fn torn_write(w: &mut TcpStream, payload: &[u8], cut: usize) -> std::io::Result<()> {
+    use std::io::Write as _;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload[..cut])?;
+    w.flush()?;
+    Err(std::io::Error::new(
+        std::io::ErrorKind::BrokenPipe,
+        format!("torn frame injected after {cut}/{} payload bytes", payload.len()),
+    ))
 }
 
 impl RemoteFilterService {
@@ -561,39 +655,53 @@ impl RemoteFilterService {
     }
 
     /// Blocking admin round-trip on the current connection, exactly once.
-    fn admin(&self, req: &Request) -> Result<Response, GbfError> {
-        self.admin_with_budget(req, 0)
+    /// `op` names the operation in deadline errors and attempt tags.
+    fn admin(&self, op: &str, req: &Request) -> Result<Response, GbfError> {
+        self.admin_with_budget(op, req, 0)
     }
 
     /// Blocking admin round-trip for idempotent requests: connection
     /// errors are retried (with a fresh `acquire`, hence a re-dial) up to
-    /// the policy's budget; application errors return immediately.
-    fn admin_idempotent(&self, req: &Request) -> Result<Response, GbfError> {
-        self.admin_with_budget(req, self.shared.policy.retries)
+    /// the policy's budget; application errors and deadline misses return
+    /// immediately (a stalled op may have executed — see
+    /// [`counts_against_health`]).
+    fn admin_idempotent(&self, op: &str, req: &Request) -> Result<Response, GbfError> {
+        self.admin_with_budget(op, req, self.shared.policy.retries)
     }
 
-    fn admin_with_budget(&self, req: &Request, budget: u32) -> Result<Response, GbfError> {
+    fn admin_with_budget(&self, op: &str, req: &Request, budget: u32) -> Result<Response, GbfError> {
         let mut attempt = 0u32;
         loop {
-            match self.admin_once(req) {
-                Err(e) if attempt < budget && is_connection_error(&e) => attempt += 1,
-                other => return other,
+            attempt += 1;
+            match self.admin_once(op, req) {
+                Err(e) if attempt <= budget && is_connection_error(&e) => continue,
+                Err(e) => return Err(tag_attempt(e, op, attempt, budget + 1)),
+                ok => return ok,
             }
         }
     }
 
-    fn admin_once(&self, req: &Request) -> Result<Response, GbfError> {
+    /// One bounded admin round-trip. The wait is capped by the policy's
+    /// `op_timeout`; on expiry the pending slot is withdrawn (a late
+    /// reply has nowhere to land), the stalled connection is evicted, and
+    /// the caller gets `DeadlineExceeded` naming `op`.
+    fn admin_once(&self, op: &str, req: &Request) -> Result<Response, GbfError> {
+        let deadline = Deadline::after(self.shared.policy.op_timeout);
         let conn = self.acquire()?;
         let id = fresh_id(&conn);
         let result = match send_payload(&conn, id, encode_request(id, req)) {
-            Ok(slot) => match slot.wait() {
-                Response::Err(e) => Err(e),
-                resp => Ok(resp),
+            Ok(slot) => match slot.wait_timeout(deadline.remaining()) {
+                Some(Response::Err(e)) => Err(e),
+                Some(resp) => Ok(resp),
+                None => {
+                    lock_unpoisoned(&conn.pending).remove(&id);
+                    Err(deadline.exceeded(op))
+                }
             },
             Err(e) => Err(e),
         };
         if let Err(e) = &result {
-            if is_connection_error(e) {
+            if counts_against_health(e) {
                 self.evict(&conn);
             }
         }
@@ -617,7 +725,7 @@ impl RemoteFilterService {
     /// created — atomically, even if another client drops/recreates the
     /// name concurrently.
     pub fn create_filter_spec(&self, name: &str, spec: FilterSpec) -> Result<RemoteFilterHandle, GbfError> {
-        match self.admin(&Request::Create { name: name.to_string(), spec })? {
+        match self.admin("create", &Request::Create { name: name.to_string(), spec })? {
             Response::Created { instance } => {
                 Ok(RemoteFilterHandle { client: self.clone(), name: name.to_string(), instance })
             }
@@ -626,21 +734,21 @@ impl RemoteFilterService {
     }
 
     pub fn drop_filter(&self, name: &str) -> Result<(), GbfError> {
-        match self.admin(&Request::Drop { name: name.to_string() })? {
+        match self.admin("drop", &Request::Drop { name: name.to_string() })? {
             Response::Ok => Ok(()),
             other => Err(protocol_error("drop", &other)),
         }
     }
 
     pub fn list_filters(&self) -> Result<Vec<String>, GbfError> {
-        match self.admin_idempotent(&Request::List)? {
+        match self.admin_idempotent("list", &Request::List)? {
             Response::Names(names) => Ok(names),
             other => Err(protocol_error("list", &other)),
         }
     }
 
     pub fn stats(&self, name: &str) -> Result<NamespaceStats, GbfError> {
-        match self.admin_idempotent(&Request::Stats { name: name.to_string() })? {
+        match self.admin_idempotent("stats", &Request::Stats { name: name.to_string() })? {
             Response::Stats(stats) => Ok(*stats),
             other => Err(protocol_error("stats", &other)),
         }
@@ -649,7 +757,7 @@ impl RemoteFilterService {
     /// Liveness probe: one `Ping` round-trip (idempotent, retried under
     /// the policy budget like the other reads).
     pub fn ping(&self) -> Result<(), GbfError> {
-        match self.admin_idempotent(&Request::Ping)? {
+        match self.admin_idempotent("ping", &Request::Ping)? {
             Response::Ok => Ok(()),
             other => Err(protocol_error("ping", &other)),
         }
@@ -663,7 +771,7 @@ impl RemoteFilterService {
             let mut g = lock_unpoisoned(&self.shared.redial);
             g.cooldown_until = None;
         }
-        match self.admin(&Request::Ping)? {
+        match self.admin("ping", &Request::Ping)? {
             Response::Ok => Ok(()),
             other => Err(protocol_error("ping", &other)),
         }
@@ -674,7 +782,7 @@ impl RemoteFilterService {
     /// bytes, so the call costs one small frame each way no matter how
     /// big the filter is.
     pub fn snapshot(&self, name: &str, dir: &str) -> Result<(), GbfError> {
-        match self.admin(&Request::Snapshot { name: name.to_string(), dir: dir.to_string() })? {
+        match self.admin("snapshot", &Request::Snapshot { name: name.to_string(), dir: dir.to_string() })? {
             Response::Ok => Ok(()),
             other => Err(protocol_error("snapshot", &other)),
         }
@@ -686,7 +794,7 @@ impl RemoteFilterService {
     /// call restored — and handles from before the restore answer
     /// `NoSuchFilter`, matching in-process stale-handle semantics.
     pub fn restore(&self, name: &str, dir: &str) -> Result<RemoteFilterHandle, GbfError> {
-        match self.admin(&Request::Restore { name: name.to_string(), dir: dir.to_string() })? {
+        match self.admin("restore", &Request::Restore { name: name.to_string(), dir: dir.to_string() })? {
             Response::Created { instance } => {
                 Ok(RemoteFilterHandle { client: self.clone(), name: name.to_string(), instance })
             }
@@ -699,7 +807,7 @@ impl RemoteFilterService {
     /// Idempotent by construction (merge is max-epoch-wins), so it rides
     /// the retry budget.
     pub fn ledger_sync(&self, ledger: &Ledger) -> Result<(Ledger, Vec<(String, u64)>), GbfError> {
-        match self.admin_idempotent(&Request::LedgerSync { ledger: ledger.clone() })? {
+        match self.admin_idempotent("ledger-sync", &Request::LedgerSync { ledger: ledger.clone() })? {
             Response::Ledger { ledger, bindings } => Ok((ledger, bindings)),
             other => Err(protocol_error("ledger-sync", &other)),
         }
@@ -709,7 +817,7 @@ impl RemoteFilterService {
     /// ledger epoch. Stamps only move forward server-side, so a retried
     /// duplicate is harmless — idempotent budget.
     pub fn stamp(&self, name: &str, instance: u64, epoch: u64) -> Result<(), GbfError> {
-        match self.admin_idempotent(&Request::Stamp { name: name.to_string(), instance, epoch })? {
+        match self.admin_idempotent("stamp", &Request::Stamp { name: name.to_string(), instance, epoch })? {
             Response::Ok => Ok(()),
             other => Err(protocol_error("stamp", &other)),
         }
@@ -717,7 +825,7 @@ impl RemoteFilterService {
 
     /// Per-shard content checksums of a remote namespace (read-only).
     pub fn digest(&self, name: &str) -> Result<Vec<u64>, GbfError> {
-        match self.admin_idempotent(&Request::Digest { name: name.to_string() })? {
+        match self.admin_idempotent("digest", &Request::Digest { name: name.to_string() })? {
             Response::Digest(checksums) => Ok(checksums),
             other => Err(protocol_error("digest", &other)),
         }
@@ -727,7 +835,7 @@ impl RemoteFilterService {
     /// (`add` then a retried duplicate would be a typed error anyway, but
     /// exactly-once keeps the error surface honest).
     pub fn cluster_admin(&self, add: bool, addr: &str) -> Result<(), GbfError> {
-        match self.admin(&Request::ClusterAdmin { add, addr: addr.to_string() })? {
+        match self.admin("cluster-admin", &Request::ClusterAdmin { add, addr: addr.to_string() })? {
             Response::Ok => Ok(()),
             other => Err(protocol_error("cluster-admin", &other)),
         }
@@ -751,21 +859,58 @@ fn protocol_error(what: &str, got: &Response) -> GbfError {
     GbfError::Backend(format!("protocol error: unexpected {what} response {got:?}"))
 }
 
-fn reader_loop(stream: TcpStream, inner: Weak<ClientInner>) {
+/// Stamp the failing operation and final attempt count into a `Backend`
+/// error's message (ISSUE 10 satellite): the text alone cannot say
+/// *which* op gave up after *how many* tries. Appended as a suffix so
+/// [`is_connection_error`]'s prefix classification is unchanged.
+/// `DeadlineExceeded` (and other typed errors) already name their
+/// context and pass through untouched.
+fn tag_attempt(e: GbfError, op: &str, attempt: u32, allowed: u32) -> GbfError {
+    match e {
+        GbfError::Backend(msg) => GbfError::Backend(format!("{msg} [op {op}, attempt {attempt}/{allowed}]")),
+        other => other,
+    }
+}
+
+fn reader_loop(stream: TcpStream, inner: Weak<ClientInner>, op_timeout: Duration) {
     let mut reader = BufReader::new(stream);
+    // Reads are bounded only while requests are in flight: an idle
+    // connection may legally stay silent forever, but a reply that
+    // stalls mid-stream must not park this thread unbounded. The window
+    // is 2× the op budget so each waiter's own deadline always fires
+    // first and gets the precise `DeadlineExceeded`; this is the
+    // backstop that then reaps the connection.
+    let grace = op_timeout.saturating_mul(2).max(Duration::from_millis(10));
+    let mut armed = false;
     let reason = loop {
+        let in_flight = match inner.upgrade() {
+            Some(strong) => !lock_unpoisoned(&strong.pending).is_empty(),
+            None => return,
+        };
+        if in_flight != armed {
+            if reader.get_ref().set_read_timeout(if in_flight { Some(grace) } else { None }).is_err() {
+                break "socket refused a read timeout".to_string();
+            }
+            armed = in_flight;
+        }
         match read_frame(&mut reader) {
-            Ok(Some(payload)) => match decode_response(&payload) {
-                Ok((id, resp)) => {
-                    let Some(inner) = inner.upgrade() else { return };
-                    let slot = lock_unpoisoned(&inner.pending).remove(&id);
-                    if let Some(slot) = slot {
-                        slot.complete(resp);
+            Ok(Some(payload)) => {
+                fail_point!("wire.client.recv");
+                match decode_response(&payload) {
+                    Ok((id, resp)) => {
+                        let Some(strong) = inner.upgrade() else { return };
+                        let slot = lock_unpoisoned(&strong.pending).remove(&id);
+                        if let Some(slot) = slot {
+                            slot.complete(resp);
+                        }
                     }
+                    Err(e) => break format!("undecodable response: {e:#}"),
                 }
-                Err(e) => break format!("undecodable response: {e:#}"),
-            },
+            }
             Ok(None) => break "connection closed by server".to_string(),
+            Err(e) if armed && is_io_timeout(&e) => {
+                break format!("read stalled past {}ms with request(s) in flight", grace.as_millis())
+            }
             Err(e) => break format!("read failed: {e:#}"),
         }
     };
@@ -781,6 +926,16 @@ fn reader_loop(stream: TcpStream, inner: Weak<ClientInner>) {
     for slot in drained {
         slot.complete(Response::Err(GbfError::Backend(format!("wire client: {reason}"))));
     }
+}
+
+/// Did this read error come from the socket's read timeout (as opposed
+/// to a real transport failure)? Unix surfaces `SO_RCVTIMEO` expiry as
+/// `WouldBlock`, Windows as `TimedOut`.
+fn is_io_timeout(e: &anyhow::Error) -> bool {
+    matches!(
+        e.root_cause().downcast_ref::<std::io::Error>().map(std::io::Error::kind),
+        Some(std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+    )
 }
 
 /// Clonable remote data-plane handle: the wire twin of
@@ -848,10 +1003,17 @@ impl RemoteFilterHandle {
     fn submit<T>(&self, is_add: bool, keys: &[u64], finish: fn(AnswerBits) -> T) -> Ticket<T> {
         if is_add {
             return match self.start(true, keys) {
-                Ok((conn, slot)) => {
-                    Ticket::from_completion(Arc::new(WireCompletion { slot, _client: conn }), finish)
-                }
-                Err(e) => Ticket::failed(e, finish),
+                Ok((conn, slot)) => Ticket::from_completion(
+                    Arc::new(WireCompletion {
+                        slot,
+                        conn,
+                        service: self.client.clone(),
+                        op: "add_bulk",
+                        budget: self.client.shared.policy.op_timeout,
+                    }),
+                    finish,
+                ),
+                Err(e) => Ticket::failed(tag_attempt(e, "add_bulk", 1, 1), finish),
             };
         }
         let budget = self.client.shared.policy.retries;
@@ -873,7 +1035,7 @@ impl RemoteFilterHandle {
                 };
                 Ticket::from_completion(Arc::new(completion), finish)
             }
-            Err(e) => Ticket::failed(e, finish),
+            Err(e) => Ticket::failed(tag_attempt(e, "query_bulk", attempt + 1, budget + 1), finish),
         }
     }
 
@@ -1016,7 +1178,7 @@ mod tests {
         slot.complete(Response::Ok);
         slot.complete(Response::Hits(AnswerBits::from_bools(&[true]))); // second completion ignored
         assert!(slot.is_ready());
-        assert!(matches!(slot.wait(), Response::Ok));
+        assert!(matches!(slot.wait_timeout(Duration::from_millis(5)), Some(Response::Ok)));
     }
 
     #[test]
@@ -1030,6 +1192,46 @@ mod tests {
         assert!(!is_connection_error(&GbfError::Overloaded { name: "x".into(), depth: 9 }));
         assert!(!is_connection_error(&GbfError::Backend("request of 999 bytes exceeds the frame bound".into())));
         assert!(!is_connection_error(&GbfError::NoQuorum { name: "x".into(), replicas: 2 }));
+        // attempt tags are suffixes: classification survives them
+        let tagged = tag_attempt(GbfError::Backend("wire client: connection closed by server".into()), "stats", 3, 3);
+        assert!(is_connection_error(&tagged), "{tagged}");
+        assert!(tagged.to_string().contains("[op stats, attempt 3/3]"), "{tagged}");
+    }
+
+    #[test]
+    fn deadline_misses_count_against_health_but_are_not_retried() {
+        let miss = GbfError::DeadlineExceeded { op: "query_bulk".into(), elapsed_ms: 250 };
+        assert!(counts_against_health(&miss));
+        assert!(!is_connection_error(&miss), "a stalled op may have executed: never blindly replay it");
+        assert!(counts_against_health(&GbfError::Backend("wire client: closed".into())));
+        assert!(!counts_against_health(&GbfError::NoSuchFilter("x".into())));
+        // tagging passes typed errors through untouched
+        assert!(matches!(tag_attempt(miss, "q", 1, 1), GbfError::DeadlineExceeded { .. }));
+    }
+
+    #[test]
+    fn stalled_server_surfaces_deadline_exceeded() {
+        // A listener that completes the TCP handshake (kernel backlog)
+        // but never reads or replies — the janitor-probe shape from
+        // ISSUE 10: the op must time out with a typed error, not hang.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let policy = RetryPolicy { op_timeout: Duration::from_millis(200), ..RetryPolicy::default() };
+        let svc = RemoteFilterService::connect_lazy_with(addr, policy).unwrap();
+        let t0 = Instant::now();
+        let err = svc.ping_now().unwrap_err();
+        let waited = t0.elapsed();
+        assert!(
+            matches!(err, GbfError::DeadlineExceeded { ref op, .. } if op == "ping"),
+            "want DeadlineExceeded on ping, got {err:?}"
+        );
+        assert!(waited >= Duration::from_millis(150), "deadline fired early: {waited:?}");
+        assert!(waited < Duration::from_secs(5), "probe not bounded: {waited:?}");
+        // the stalled connection was evicted: the next call dials fresh
+        // (and times out again) instead of reusing the wedged socket
+        let again = svc.ping_now().unwrap_err();
+        assert!(matches!(again, GbfError::DeadlineExceeded { .. }), "{again:?}");
+        drop(listener);
     }
 
     #[test]

@@ -152,6 +152,7 @@ const ERR_SNAPSHOT_CORRUPT: u8 = 8;
 const ERR_NO_QUORUM: u8 = 9;
 const ERR_STALE_EPOCH: u8 = 10;
 const ERR_NOT_A_GATEWAY: u8 = 11;
+const ERR_DEADLINE_EXCEEDED: u8 = 12;
 
 // ---- frame I/O ----
 
@@ -375,6 +376,11 @@ impl Enc {
                 self.u8(ERR_NOT_A_GATEWAY);
                 self.str(msg);
             }
+            GbfError::DeadlineExceeded { op, elapsed_ms } => {
+                self.u8(ERR_DEADLINE_EXCEEDED);
+                self.str(op);
+                self.u64(*elapsed_ms);
+            }
         }
     }
 }
@@ -581,6 +587,7 @@ impl<'a> Dec<'a> {
             ERR_NO_QUORUM => GbfError::NoQuorum { name: self.str()?, replicas: self.usize()? },
             ERR_STALE_EPOCH => GbfError::StaleEpoch { name: self.str()?, held: self.u64()?, proposed: self.u64()? },
             ERR_NOT_A_GATEWAY => GbfError::NotSupported(self.str()?),
+            ERR_DEADLINE_EXCEEDED => GbfError::DeadlineExceeded { op: self.str()?, elapsed_ms: self.u64()? },
             t => bail!("unknown error tag {t:#04x}"),
         })
     }
@@ -974,6 +981,7 @@ mod tests {
             GbfError::NoQuorum { name: "ha".into(), replicas: 2 },
             GbfError::StaleEpoch { name: "ns".into(), held: 9, proposed: 4 },
             GbfError::NotSupported("cluster-admin: not a cluster gateway".into()),
+            GbfError::DeadlineExceeded { op: "query_bulk".into(), elapsed_ms: 1500 },
         ];
         for e in errors {
             match rt_resp(Response::Err(e.clone())).1 {

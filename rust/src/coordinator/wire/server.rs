@@ -51,6 +51,7 @@ use crate::coordinator::ticket::Ticket;
 use crate::filter::AnswerBits;
 use crate::infra::sync::atomic::{AtomicBool, Ordering};
 use crate::infra::sync::{lock_unpoisoned, Arc, Mutex};
+use crate::{fail_point, fail_torn};
 
 use super::codec::{decode_request, encode_response, read_frame, write_frame, Request, Response};
 
@@ -391,10 +392,31 @@ fn accept_loop(
 }
 
 /// Write one tagged reply under the shared writer lock.
+///
+/// Failpoint `wire.server.pre_reply` is the chaos suite's flaky-replica
+/// lever for EVERY reply (admin included): a `delay` rule stalls them
+/// past the client's deadline, an `err` rule drops them, and a `torn`
+/// rule ships a half-frame the client reader must classify as a dead
+/// peer. For a replica that stays Ping-able while its *data* replies
+/// stall — the case only deadline accounting can catch — use
+/// `wire.server.data_reply` (in the completer) instead.
 fn send(writer: &Arc<Mutex<TcpStream>>, id: u64, resp: &Response) -> std::io::Result<()> {
+    fail_point!(
+        "wire.server.pre_reply",
+        Err(std::io::Error::new(std::io::ErrorKind::ConnectionReset, "failpoint: reply suppressed"))
+    );
     let payload = encode_response(id, resp);
     let mut w = lock_unpoisoned(writer);
-    write_frame(&mut *w, &payload)
+    match fail_torn!("wire.server.pre_reply", payload.len()) {
+        Some(cut) => {
+            use std::io::Write as _;
+            w.write_all(&(payload.len() as u32).to_le_bytes())?;
+            w.write_all(&payload[..cut])?;
+            w.flush()?;
+            Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "failpoint: torn reply"))
+        }
+        None => write_frame(&mut *w, &payload),
+    }
 }
 
 /// Run `work` on a short-lived worker thread and send its reply under
@@ -447,6 +469,11 @@ fn completer_loop(rx: Receiver<(u64, PendingOp)>, writer: Arc<Mutex<TcpStream>>)
         while i < in_flight.len() {
             if in_flight[i].1.is_ready() {
                 let (id, op) = in_flight.remove(i);
+                // the slow-replica lever: a delay rule here stalls
+                // data-plane replies while Ping stays healthy, so only
+                // deadline accounting (not the janitor probe) can tell
+                // this replica is sick
+                fail_point!("wire.server.data_reply");
                 // a failed send means the connection is gone: keep
                 // resolving the rest (namespaces stay consistent), the
                 // replies just have nowhere to go
@@ -463,6 +490,12 @@ fn completer_loop(rx: Receiver<(u64, PendingOp)>, writer: Arc<Mutex<TcpStream>>)
 }
 
 fn handle_conn(stream: TcpStream, service: Arc<dyn WireCatalog>) -> Result<()> {
+    // A client that stops draining its socket must not wedge the reply
+    // path behind one blocking write forever (ISSUE 10). Socket options
+    // live on the shared file description, so the writer clone below
+    // inherits the bound; a fired timeout fails that send, which ends
+    // just this connection.
+    stream.set_write_timeout(Some(Duration::from_secs(30))).ok();
     let writer =
         Arc::new(Mutex::new_class("wire.server.writer", stream.try_clone().context("cloning connection stream")?));
     let (tx, rx) = channel::<(u64, PendingOp)>();

@@ -1,0 +1,410 @@
+//! `fault` — deterministic failpoints for the chaos suite (ISSUE 10).
+//!
+//! A **failpoint** is a named hook compiled into a production code path:
+//!
+//! ```ignore
+//! fail_point!("wire.client.send", Err(GbfError::Backend("injected".into())));
+//! ```
+//!
+//! Without `--cfg failpoints` the macro expands to **nothing** — the
+//! shipping binary carries no registry, no branch, no string. With the
+//! cfg on, each point consults the armed [`FaultPlan`]; an unarmed
+//! process still pays only one relaxed atomic load per point.
+//!
+//! Plans are parsed from a compact grammar (the `GBF_FAULT_PLAN`
+//! environment variable, or [`arm`] directly):
+//!
+//! ```text
+//! plan   := rule (';' rule)*
+//! rule   := point '=' action (':' modifier)*
+//! action := 'delay(' N 'ms' ')' | 'err' | 'torn' | 'panic'
+//! mod    := float in (0,1]   — fire with that probability
+//!         | 'once'           — fire exactly once, then the rule is spent
+//!         | 'x' N            — fire N times, then spent
+//! ```
+//!
+//! e.g. `wire.client.send=delay(50ms):0.3;persist.shard_write=err:once`.
+//!
+//! Probability draws come from a **seeded** [`Gen`] (`GBF_FAULT_SEED`,
+//! default `0xFA117`), never wall-clock randomness, so a failing chaos
+//! run replays. Hit counters ([`evals`]/[`fires`]) are exported for test
+//! assertions, and [`active_rules`] reports how much of the plan is left
+//! so suites can assert recovery *after the plan drains*.
+//!
+//! Action semantics at the call site:
+//! * `delay` / `panic` happen inside [`eval`] itself;
+//! * `err` makes `fail_point!($name, $ret)` execute `return $ret` — the
+//!   site chooses the typed error its layer speaks;
+//! * `torn` fires only through [`fail_torn!`]/[`torn_len`], which hands
+//!   the site a seeded shorter length to write (a torn/short write).
+
+/// Evaluate the named failpoint. First form: delays and panics only
+/// (injected errors have nowhere to go). Second form: an `err` rule
+/// executes `return $ret` from the enclosing function. Expands to
+/// nothing without `--cfg failpoints`.
+#[macro_export]
+macro_rules! fail_point {
+    ($name:expr) => {
+        #[cfg(failpoints)]
+        {
+            let _ = $crate::infra::fault::eval($name);
+        }
+    };
+    ($name:expr, $ret:expr) => {
+        #[cfg(failpoints)]
+        {
+            if $crate::infra::fault::eval($name).inject_err {
+                return $ret;
+            }
+        }
+    };
+}
+
+/// Torn-write length for the named failpoint: `Some(shorter_len)` when a
+/// `torn` rule fires, `None` otherwise (always `None` without
+/// `--cfg failpoints`). The site writes only the returned prefix.
+#[macro_export]
+macro_rules! fail_torn {
+    ($name:expr, $len:expr) => {{
+        #[cfg(failpoints)]
+        {
+            $crate::infra::fault::torn_len($name, $len)
+        }
+        #[cfg(not(failpoints))]
+        {
+            None::<usize>
+        }
+    }};
+}
+
+#[cfg(failpoints)]
+mod imp {
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    // Plain std primitives on purpose: the registry must not mint lockdep
+    // classes or edges of its own — injected faults would otherwise show
+    // up in the committed lock hierarchy of a build that ships none of
+    // this code. `infra/` is inside the sync-shim boundary, so direct
+    // std::sync is allowed here (same as the shim internals).
+    use std::sync::{Mutex, OnceLock};
+    use std::time::Duration;
+
+    use crate::infra::prop::Gen;
+
+    /// Fast path: one relaxed load decides "no plan armed" without
+    /// touching the registry lock. Relaxed is enough — arming happens
+    /// strictly before the workload under test starts, and a stale
+    /// `false` during disarm only skips an injection.
+    static ARMED: AtomicBool = AtomicBool::new(false);
+
+    static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+
+    #[derive(Debug, Clone, PartialEq)]
+    enum Action {
+        Delay(Duration),
+        Err,
+        Torn,
+        Panic,
+    }
+
+    #[derive(Debug, Clone)]
+    struct Rule {
+        point: String,
+        action: Action,
+        /// Fire probability in (0, 1]; 1.0 = always.
+        prob: f64,
+        /// Remaining fires; `None` = unlimited.
+        remaining: Option<u64>,
+    }
+
+    #[derive(Default)]
+    struct Registry {
+        rules: Vec<Rule>,
+        gen: Option<Gen>,
+        /// point name → (evaluations, fired injections)
+        counters: HashMap<String, (u64, u64)>,
+    }
+
+    fn registry() -> &'static Mutex<Registry> {
+        REGISTRY.get_or_init(|| Mutex::new(Registry::default()))
+    }
+
+    /// What [`eval`] decided for this hit (delays/panics already
+    /// happened inside).
+    pub struct Shot {
+        pub inject_err: bool,
+    }
+
+    fn parse_duration(s: &str) -> Result<Duration, String> {
+        if let Some(ms) = s.strip_suffix("ms") {
+            ms.trim().parse::<u64>().map(Duration::from_millis).map_err(|e| format!("bad delay {s:?}: {e}"))
+        } else if let Some(secs) = s.strip_suffix('s') {
+            secs.trim().parse::<u64>().map(Duration::from_secs).map_err(|e| format!("bad delay {s:?}: {e}"))
+        } else {
+            Err(format!("delay wants 'Nms' or 'Ns', got {s:?}"))
+        }
+    }
+
+    fn parse_rule(spec: &str) -> Result<Rule, String> {
+        let (point, rhs) = spec.split_once('=').ok_or_else(|| format!("rule {spec:?} missing '='"))?;
+        let point = point.trim();
+        if point.is_empty() {
+            return Err(format!("rule {spec:?} has an empty point name"));
+        }
+        let mut parts = rhs.split(':');
+        let action_str = parts.next().unwrap_or("").trim();
+        let action = if let Some(arg) = action_str.strip_prefix("delay(").and_then(|a| a.strip_suffix(')')) {
+            Action::Delay(parse_duration(arg)?)
+        } else {
+            match action_str {
+                "err" => Action::Err,
+                "torn" => Action::Torn,
+                "panic" => Action::Panic,
+                other => return Err(format!("unknown action {other:?} in rule {spec:?}")),
+            }
+        };
+        let mut prob = 1.0f64;
+        let mut remaining = None;
+        for m in parts {
+            let m = m.trim();
+            if m == "once" {
+                remaining = Some(1);
+            } else if let Some(n) = m.strip_prefix('x') {
+                let n: u64 = n.parse().map_err(|e| format!("bad count {m:?}: {e}"))?;
+                remaining = Some(n);
+            } else if let Ok(p) = m.parse::<f64>() {
+                if !(p > 0.0 && p <= 1.0) {
+                    return Err(format!("probability {p} out of (0, 1] in rule {spec:?}"));
+                }
+                prob = p;
+            } else {
+                return Err(format!("unknown modifier {m:?} in rule {spec:?}"));
+            }
+        }
+        Ok(Rule { point: point.to_string(), action, prob, remaining })
+    }
+
+    /// Arm `plan` with the given PRNG seed, replacing any previous plan
+    /// and zeroing all counters.
+    pub fn arm(plan: &str, seed: u64) -> Result<(), String> {
+        let mut rules = Vec::new();
+        for spec in plan.split(';') {
+            let spec = spec.trim();
+            if spec.is_empty() {
+                continue;
+            }
+            rules.push(parse_rule(spec)?);
+        }
+        let mut reg = registry().lock().unwrap();
+        reg.rules = rules;
+        reg.gen = Some(Gen::new(seed));
+        reg.counters.clear();
+        ARMED.store(!reg.rules.is_empty(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Arm from `GBF_FAULT_PLAN` / `GBF_FAULT_SEED` if set; returns
+    /// whether a plan was armed. Called at process start by the CLI (and
+    /// explicitly by tests); a bad plan string is a hard error — chaos
+    /// runs must not silently proceed un-armed.
+    pub fn arm_from_env() -> Result<bool, String> {
+        let Ok(plan) = std::env::var("GBF_FAULT_PLAN") else { return Ok(false) };
+        let seed = std::env::var("GBF_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xFA117);
+        arm(&plan, seed)?;
+        Ok(true)
+    }
+
+    /// Drop the plan; points go quiet. Counters survive for inspection.
+    pub fn disarm() {
+        if let Some(reg) = REGISTRY.get() {
+            let mut reg = reg.lock().unwrap();
+            reg.rules.clear();
+            reg.gen = None;
+        }
+        ARMED.store(false, Ordering::Relaxed);
+    }
+
+    /// Times the named point was evaluated while a plan was armed.
+    pub fn evals(point: &str) -> u64 {
+        REGISTRY.get().map_or(0, |r| r.lock().unwrap().counters.get(point).map_or(0, |c| c.0))
+    }
+
+    /// Times an injection actually fired at the named point.
+    pub fn fires(point: &str) -> u64 {
+        REGISTRY.get().map_or(0, |r| r.lock().unwrap().counters.get(point).map_or(0, |c| c.1))
+    }
+
+    /// Rules that can still fire (unlimited rules count as active): the
+    /// chaos suite asserts recovery once this reaches zero.
+    pub fn active_rules() -> usize {
+        REGISTRY
+            .get()
+            .map_or(0, |r| r.lock().unwrap().rules.iter().filter(|ru| ru.remaining != Some(0)).count())
+    }
+
+    /// Decide the named point's fate; `Torn` rules never fire here (they
+    /// fire through [`torn_len`], which knows the buffer being torn).
+    /// Delays sleep and panics panic inside this call.
+    pub fn eval(point: &str) -> Shot {
+        if !ARMED.load(Ordering::Relaxed) {
+            return Shot { inject_err: false };
+        }
+        let decision = {
+            let mut reg = registry().lock().unwrap();
+            reg.counters.entry(point.to_string()).or_insert((0, 0)).0 += 1;
+            let Some(idx) = reg
+                .rules
+                .iter()
+                .position(|r| r.point == point && r.action != Action::Torn && r.remaining != Some(0))
+            else {
+                return Shot { inject_err: false };
+            };
+            let prob = reg.rules[idx].prob;
+            let fire = prob >= 1.0 || reg.gen.as_mut().is_some_and(|g| g.f64_unit() < prob);
+            if !fire {
+                return Shot { inject_err: false };
+            }
+            if let Some(n) = reg.rules[idx].remaining.as_mut() {
+                *n -= 1;
+            }
+            if let Some(c) = reg.counters.get_mut(point) {
+                c.1 += 1;
+            }
+            reg.rules[idx].action.clone()
+            // registry lock released here: delays must not serialize
+            // every other failpoint behind one sleeping rule
+        };
+        match decision {
+            Action::Delay(d) => {
+                std::thread::sleep(d);
+                Shot { inject_err: false }
+            }
+            Action::Err => Shot { inject_err: true },
+            Action::Panic => panic!("failpoint {point:?}: injected panic"),
+            Action::Torn => Shot { inject_err: false },
+        }
+    }
+
+    /// Torn-write length for the named point: when a `torn` rule fires,
+    /// a seeded strictly-shorter prefix length (possibly 0) of `full`.
+    pub fn torn_len(point: &str, full: usize) -> Option<usize> {
+        if !ARMED.load(Ordering::Relaxed) || full == 0 {
+            return None;
+        }
+        let mut reg = registry().lock().unwrap();
+        reg.counters.entry(point.to_string()).or_insert((0, 0)).0 += 1;
+        let idx = reg
+            .rules
+            .iter()
+            .position(|r| r.point == point && r.action == Action::Torn && r.remaining != Some(0))?;
+        let prob = reg.rules[idx].prob;
+        let fire = prob >= 1.0 || reg.gen.as_mut().is_some_and(|g| g.f64_unit() < prob);
+        if !fire {
+            return None;
+        }
+        if let Some(n) = reg.rules[idx].remaining.as_mut() {
+            *n -= 1;
+        }
+        if let Some(c) = reg.counters.get_mut(point) {
+            c.1 += 1;
+        }
+        let cut = reg.gen.as_mut().map_or(full as u64 / 2, |g| g.below(full as u64));
+        Some(cut as usize)
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        // The registry is process-global, so every test serializes on
+        // this lock and re-arms its own plan.
+        static SERIAL: Mutex<()> = Mutex::new(());
+
+        #[test]
+        fn unarmed_points_pass() {
+            let _g = SERIAL.lock().unwrap();
+            disarm();
+            assert!(!eval("nope").inject_err);
+            assert_eq!(torn_len("nope", 100), None);
+        }
+
+        #[test]
+        fn err_once_fires_exactly_once_and_counts() {
+            let _g = SERIAL.lock().unwrap();
+            arm("a.b=err:once", 1).unwrap();
+            assert_eq!(active_rules(), 1);
+            assert!(eval("a.b").inject_err);
+            assert!(!eval("a.b").inject_err, "once means once");
+            assert_eq!(evals("a.b"), 2);
+            assert_eq!(fires("a.b"), 1);
+            assert_eq!(active_rules(), 0, "plan drained");
+            disarm();
+        }
+
+        #[test]
+        fn probability_draws_are_seeded_and_deterministic() {
+            let _g = SERIAL.lock().unwrap();
+            let run = |seed: u64| -> Vec<bool> {
+                arm("p=err:0.5", seed).unwrap();
+                (0..32).map(|_| eval("p").inject_err).collect()
+            };
+            let a = run(42);
+            let b = run(42);
+            assert_eq!(a, b, "same seed, same firing pattern");
+            assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x), "0.5 both fires and passes");
+            disarm();
+        }
+
+        #[test]
+        fn torn_returns_a_strictly_shorter_prefix() {
+            let _g = SERIAL.lock().unwrap();
+            arm("w=torn", 7).unwrap();
+            let cut = torn_len("w", 1000).expect("torn fires");
+            assert!(cut < 1000);
+            // err-form eval never fires a torn rule
+            assert!(!eval("w").inject_err);
+            disarm();
+        }
+
+        #[test]
+        fn delay_rule_actually_delays() {
+            let _g = SERIAL.lock().unwrap();
+            arm("d=delay(30ms):once", 1).unwrap();
+            let t0 = std::time::Instant::now();
+            assert!(!eval("d").inject_err);
+            assert!(t0.elapsed() >= Duration::from_millis(25), "delay injected");
+            let t1 = std::time::Instant::now();
+            let _ = eval("d");
+            assert!(t1.elapsed() < Duration::from_millis(25), "spent rule no longer delays");
+            disarm();
+        }
+
+        #[test]
+        fn plan_grammar_rejects_garbage() {
+            let _g = SERIAL.lock().unwrap();
+            for bad in ["x", "a=explode", "a=err:1.5", "a=delay(10)", "a=err:xq", "=err"] {
+                assert!(arm(bad, 1).is_err(), "{bad:?} must be rejected");
+            }
+            // a rejected plan leaves nothing armed
+            assert_eq!(active_rules(), 0);
+            disarm();
+        }
+
+        #[test]
+        fn multi_rule_plans_parse_and_route_by_point() {
+            let _g = SERIAL.lock().unwrap();
+            arm("a=err; b = delay(1ms) : x2 ; c=torn:0.9", 3).unwrap();
+            assert_eq!(active_rules(), 3);
+            assert!(eval("a").inject_err);
+            assert!(!eval("b").inject_err);
+            assert!(!eval("unlisted").inject_err);
+            disarm();
+        }
+    }
+}
+
+#[cfg(failpoints)]
+pub use imp::*;

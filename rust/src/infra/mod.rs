@@ -14,10 +14,12 @@
 //! * [`sync`]      — sync shim: classed std types normally, [`check`] types under `--cfg loom`
 //! * [`lockdep`]   — runtime lock-order witness behind [`sync`] (debug builds only)
 //! * [`fuzz`]      — deterministic structure-aware fuzzing harness + corpus loader
+//! * [`fault`]     — deterministic failpoint registry (`--cfg failpoints` only)
 
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod fault;
 pub mod fuzz;
 pub mod json;
 pub mod lockdep;

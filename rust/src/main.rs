@@ -11,6 +11,7 @@
 //!   cluster --servers a,b,c      replicated front end over a wire fleet
 //!   cluster-admin <gw> add a:p   change a running gateway's membership
 //!   client <addr> <cmd>          drive a remote filter service
+//!   chaos [--plan p] [--seed s]  fault-injection smoke (failpoints builds)
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -76,6 +77,18 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Deterministic failpoints (chaos builds only): a GBF_FAULT_PLAN in
+    // the environment arms every subcommand — this is how the chaos CI
+    // smoke injects faults into `serve`/`cluster` child processes.
+    #[cfg(failpoints)]
+    match gbf::infra::fault::arm_from_env() {
+        Ok(true) => eprintln!("failpoints armed from GBF_FAULT_PLAN"),
+        Ok(false) => {}
+        Err(e) => {
+            eprintln!("bad GBF_FAULT_PLAN: {e}");
+            std::process::exit(2);
+        }
+    }
     let result = match args.subcommand.as_deref() {
         Some("info") => cmd_info(&args),
         Some("bench") => cmd_bench(&args),
@@ -86,6 +99,7 @@ fn main() {
         Some("cluster") => cmd_cluster(&args),
         Some("cluster-admin") => cmd_cluster_admin(&args),
         Some("client") => cmd_client(&args),
+        Some("chaos") => cmd_chaos(&args),
         _ => {
             print_usage();
             Ok(())
@@ -113,6 +127,7 @@ fn print_usage() {
                  [--max-queue-depth D] [--listen addr:port] [--state-dir dir]\n  \
            cluster --servers a:p1,b:p2,... [--replicas R] [--listen addr:port]\n  \
                  [--place ns=0:1,...] [--sync-dir dir] [--heal-interval-ms MS]\n  \
+                 [--op-timeout-ms MS]\n  \
            cluster-admin <gateway-addr> (add|remove) <server-addr:port>\n  \
            client <addr> list\n  \
            client <addr> create name:variant:<N>bits [--shards S] [--max-queue-depth D]\n  \
@@ -120,7 +135,8 @@ fn print_usage() {
            client <addr> add <name> (--keys 1,2,3 | --count N [--seed S])\n  \
            client <addr> query <name> (--keys 1,2,3 | --count N [--seed S])\n  \
            client <addr> snapshot <name> <server-side-dir>\n  \
-           client <addr> restore <name> <server-side-dir>\n\n\
+           client <addr> restore <name> <server-side-dir>\n  \
+           chaos [--plan spec] [--seed S] [--rounds N] [--keys K]\n\n\
          serve hosts one namespace per --filters entry on a FilterService,\n\
          e.g. --filters hot:sbf:23bits,cold:bbf:20bits; with --listen it\n\
          serves the same catalog over the wire protocol instead of running\n\
@@ -516,7 +532,9 @@ fn parse_place_flag(mut config: ClusterConfig, place: &str) -> Result<ClusterCon
 }
 
 fn cmd_cluster(args: &Args) -> Result<()> {
-    args.check_known(&["servers", "replicas", "listen", "sync-dir", "heal-interval-ms", "place"])?;
+    args.check_known(&[
+        "servers", "replicas", "listen", "sync-dir", "heal-interval-ms", "place", "op-timeout-ms",
+    ])?;
     let servers: Vec<String> = args
         .required("servers")?
         .split(',')
@@ -530,6 +548,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     config.sync_dir = args.get_or("sync-dir", "").to_string();
     config.heal_interval_ms = args.get_parse("heal-interval-ms", 500u64)?;
+    config.op_timeout_ms = args.get_parse("op-timeout-ms", 10_000u64)?;
     config.validate()?;
     println!("cluster config: {}", config.to_json());
     let cluster = ClusterFilterService::connect(config)?;
@@ -675,6 +694,147 @@ fn cmd_client(args: &Args) -> Result<()> {
             }
         }
         other => bail!("unknown client command {other:?}; {usage}"),
+    }
+    Ok(())
+}
+
+/// `gbf chaos` — run a loopback wire workload under a deterministic
+/// fault plan and check the robustness invariants hold: every failure
+/// is a typed error, no ticket wedges, no acked write is lost, and the
+/// service recovers fully once the plan is disarmed. The heavyweight
+/// scenarios live in `tests/chaos.rs`; this is the operator-facing
+/// smoke over the same machinery.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    args.check_known(&["plan", "seed", "rounds", "keys"])?;
+    run_chaos(args)
+}
+
+#[cfg(not(failpoints))]
+fn run_chaos(_args: &Args) -> Result<()> {
+    bail!(
+        "this gbf binary was built without failpoints; rebuild with \
+         RUSTFLAGS=\"--cfg failpoints\" to run chaos scenarios \
+         (see DESIGN.md, 'Fault injection & deadlines')"
+    );
+}
+
+#[cfg(failpoints)]
+fn run_chaos(args: &Args) -> Result<()> {
+    use gbf::infra::fault;
+    use std::time::Duration;
+
+    const DEFAULT_PLAN: &str = "wire.client.send=err:0.1;\
+                                wire.server.data_reply=delay(2ms):0.2;\
+                                persist.shard_write=err:0.3";
+    /// A resolved ticket always beats this bound by orders of magnitude;
+    /// hitting it means a wedge, which is exactly what chaos hunts.
+    const WEDGE: Duration = Duration::from_secs(30);
+
+    let plan = args.get_or("plan", DEFAULT_PLAN).to_string();
+    let seed = args.get_parse("seed", 0xFA117u64)?;
+    let rounds = args.get_parse("rounds", 20usize)?;
+    let keys_per_round = args.get_parse("keys", 512usize)?;
+
+    let service = Arc::new(FilterService::new());
+    let server = WireServer::bind(Arc::clone(&service), "127.0.0.1:0")?;
+    let client = RemoteFilterService::connect(server.local_addr())?;
+
+    fault::arm(&plan, seed).map_err(|e| anyhow::anyhow!("bad fault plan: {e}"))?;
+    println!("chaos: plan {plan:?}, seed {seed:#x}, {rounds} round(s) x {keys_per_round} key(s)");
+
+    let (name, config) = parse_filter_entry("chaos:sbf:20bits")?;
+    let mut handle = None;
+    for attempt in 1..=10 {
+        match client.create_filter_spec(&name, FilterSpec::new(config, 2)) {
+            Ok(h) => {
+                handle = Some(h);
+                break;
+            }
+            Err(e) => println!("  create attempt {attempt}: typed failure ({e})"),
+        }
+    }
+    let handle = handle.context("could not create the chaos namespace in 10 attempts")?;
+
+    let mut acked: Vec<u64> = Vec::new();
+    let mut typed_failures = 0usize;
+    for round in 0..rounds {
+        let keys = unique_keys(keys_per_round, 0xC0FFEE + round as u64);
+        let round_acked = match handle.add_bulk(&keys).wait_timeout(WEDGE) {
+            Ok(Ok(())) => {
+                acked.extend(&keys);
+                true
+            }
+            Ok(Err(e)) => {
+                typed_failures += 1;
+                println!("  round {round} add: typed failure ({e})");
+                false
+            }
+            Err(_) => bail!("wedged ticket: round {round} add_bulk unresolved after {WEDGE:?}"),
+        };
+        match handle.query_bulk(&keys).wait_timeout(WEDGE) {
+            Ok(Ok(hits)) => {
+                // an acked add must be visible to a later successful
+                // query — chaos may fail calls, never drop acked data
+                if round_acked {
+                    ensure!(
+                        hits.iter().all(|&h| h),
+                        "round {round}: a key acked this round queried absent under chaos"
+                    );
+                }
+            }
+            Ok(Err(e)) => {
+                typed_failures += 1;
+                println!("  round {round} query: typed failure ({e})");
+            }
+            Err(_) => bail!("wedged ticket: round {round} query_bulk unresolved after {WEDGE:?}"),
+        }
+        if round % 5 == 4 {
+            // exercise the persist failpoints through the admin plane
+            let dir = std::env::temp_dir().join(format!("gbf-chaos-{}-{round}", std::process::id()));
+            match client.snapshot(&name, &dir.to_string_lossy()) {
+                Ok(()) => {}
+                Err(e) => {
+                    typed_failures += 1;
+                    println!("  round {round} snapshot: typed failure ({e})");
+                }
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    fault::disarm();
+    // recovery: with the plan gone, a full round and a read-back of
+    // every acked key must succeed end to end
+    let keys = unique_keys(keys_per_round, 0x5EED);
+    handle.add_bulk(&keys).wait()?;
+    acked.extend(&keys);
+    let hits = handle.query_bulk(&acked).wait()?;
+    ensure!(
+        hits.iter().all(|&h| h),
+        "lost an acked write: an acked key queried absent after the plan drained"
+    );
+
+    println!(
+        "chaos: ok — {typed_failures} typed failure(s), 0 wedges, {} acked key(s) all present",
+        acked.len()
+    );
+    println!("failpoint counters (evals/fires):");
+    for point in [
+        "wire.client.connect",
+        "wire.client.send",
+        "wire.client.recv",
+        "wire.server.pre_reply",
+        "wire.server.data_reply",
+        "persist.shard_write",
+        "persist.manifest_write",
+        "persist.commit_publish",
+        "batcher.drain",
+        "batcher.execute",
+    ] {
+        let (evals, fires) = (fault::evals(point), fault::fires(point));
+        if evals > 0 {
+            println!("  {point:<26} {evals:>8} / {fires:<8}");
+        }
     }
     Ok(())
 }

@@ -1,0 +1,322 @@
+//! Chaos suite (ISSUE 10): adversarial fault plans against the
+//! wire/persist/cluster stack, driven through the deterministic
+//! failpoint registry (`infra::fault`). The whole file compiles away
+//! unless the build carries `--cfg failpoints` (CI's chaos job sets
+//! `RUSTFLAGS=--cfg failpoints`); the tier-1 build sees an empty suite.
+//!
+//! The invariants under fire, in every scenario:
+//!   - failures surface as TYPED errors (never a wedged ticket, never a
+//!     lost wakeup) within a generous wedge bound;
+//!   - a write that was ACKED is never lost, no matter what the plan
+//!     injected around it;
+//!   - pure-delay plans are answer-preserving — timing faults shift
+//!     latency, never results;
+//!   - once the plan drains (`once`/`xN` budgets spent, or disarm), the
+//!     stack recovers without a restart.
+//!
+//! The registry is process-global, so every test serializes on one gate
+//! and re-arms its own plan; `arm` zeroes the hit counters, which makes
+//! the per-test `evals`/`fires` assertions exact.
+#![cfg(failpoints)]
+
+use std::net::TcpListener;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use gbf::coordinator::{
+    ClusterConfig, ClusterFilterService, FilterService, GbfError, RemoteFilterService, RetryPolicy,
+    WireServer,
+};
+use gbf::infra::fault;
+use gbf::workload::keygen::unique_keys;
+
+mod common;
+use common::{drive_api, scratch_dir, spec};
+
+/// One gate for the process-global registry. A failed test leaves the
+/// mutex poisoned; the next test claims the guard anyway (the registry
+/// itself is re-armed fresh, so there is no state worth protecting) and
+/// disarms whatever the casualty left behind.
+static REGISTRY_GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    let g = REGISTRY_GATE.lock().unwrap_or_else(|p| p.into_inner());
+    fault::disarm();
+    g
+}
+
+/// Arms a plan on construction, disarms on drop — so a panicking
+/// assertion cannot leak an armed plan into the next test.
+struct Armed;
+
+impl Armed {
+    fn plan(plan: &str, seed: u64) -> Armed {
+        fault::arm(plan, seed).expect("chaos plan parses");
+        Armed
+    }
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        fault::disarm();
+    }
+}
+
+/// Generous bound separating "slow under injected delays" from "wedged":
+/// no ticket in this suite may take longer than this to resolve.
+const WEDGE: Duration = Duration::from_secs(30);
+
+// ---- answer preservation: delays are invisible to correctness ----
+
+/// The UNMODIFIED acceptance driver runs over a loopback wire transport
+/// while a pure-delay plan fires on the server's data replies and in the
+/// batcher's drain loop. Answers, typed errors, and counters must be
+/// bit-identical to the quiet in-process run — delays shift timing and
+/// nothing else.
+#[test]
+fn pure_delay_plan_is_answer_preserving() {
+    let _gate = gate();
+
+    // oracle first, with the registry quiet
+    let local = FilterService::new();
+    let (local_hits, local_stats) = drive_api(&local);
+
+    let _armed = Armed::plan(
+        "wire.server.data_reply=delay(2ms):0.2;batcher.drain=delay(1ms):0.2",
+        0xFA117,
+    );
+    let service = Arc::new(FilterService::new());
+    let server = WireServer::bind(Arc::clone(&service), "127.0.0.1:0").unwrap();
+    let client = RemoteFilterService::connect(server.local_addr()).unwrap();
+    let (wire_hits, wire_stats) = drive_api(&client);
+
+    assert_eq!(local_hits, wire_hits, "delays shifted an answer");
+    assert_eq!(local_stats.metrics.adds, wire_stats.metrics.adds);
+    assert_eq!(local_stats.metrics.queries, wire_stats.metrics.queries);
+    // the instrumented points were actually on the path (fires are
+    // probabilistic; evals are not)
+    assert!(fault::evals("wire.server.data_reply") > 0, "data replies never reached the failpoint");
+    assert!(fault::evals("batcher.drain") > 0, "the batcher never reached the failpoint");
+}
+
+// ---- adversarial plan: typed errors, no wedges, no lost acked writes ----
+
+/// Twenty rounds of writes and reads through a loopback wire transport
+/// while a hostile plan fires across the client send path, the server
+/// reply path, the persist layer, and the batcher. Every round resolves
+/// within the wedge bound — as an ack or a typed error, never a hang —
+/// acked keys stay queryable mid-chaos, and after the plan is disarmed
+/// the same handle recovers with zero acked writes lost.
+#[test]
+fn adversarial_plan_yields_typed_errors_and_no_lost_acked_writes() {
+    let _gate = gate();
+
+    let service = Arc::new(FilterService::new());
+    let server = WireServer::bind(Arc::clone(&service), "127.0.0.1:0").unwrap();
+    // short per-op deadline: a suppressed reply (`wire.server.pre_reply=err`
+    // swallows the frame) costs 500ms of waiting, not the default 10s
+    let policy = RetryPolicy { op_timeout: Duration::from_millis(500), ..RetryPolicy::default() };
+    let client = RemoteFilterService::connect_lazy_with(server.local_addr(), policy).unwrap();
+    let h = client.create_filter_spec("chaos", spec(16, 2, 1024, 150)).unwrap();
+
+    // the once-rule guarantees at least one typed failure
+    // deterministically; the probabilistic rules supply the weather
+    let armed = Armed::plan(
+        "wire.client.send=err:once;wire.server.pre_reply=err:0.1;\
+         persist.shard_write=err:0.5;batcher.execute=err:0.05",
+        0xD15EA5E,
+    );
+
+    let mut acked: Vec<u64> = Vec::new();
+    let mut typed_failures = 0u32;
+    for round in 0..20u64 {
+        let keys = unique_keys(256, 0x1000 + round);
+        match h.add_bulk(&keys).wait_timeout(WEDGE) {
+            Ok(Ok(())) => acked.extend_from_slice(&keys),
+            Ok(Err(_typed)) => typed_failures += 1,
+            Err(_ticket) => panic!("wedged add ticket in round {round}"),
+        }
+        if !acked.is_empty() {
+            match h.query_bulk(&acked).wait_timeout(WEDGE) {
+                Ok(Ok(hits)) => {
+                    assert!(hits.iter().all(|&x| x), "acked key missing mid-chaos (round {round})")
+                }
+                Ok(Err(_typed)) => typed_failures += 1,
+                Err(_ticket) => panic!("wedged query ticket in round {round}"),
+            }
+        }
+        // every fifth round, poke the admin plane: the persist rules make
+        // snapshot fail often, but it must fail TYPED and return
+        if round % 5 == 4 {
+            let dir = scratch_dir("chaos-snap");
+            let _ = client.snapshot("chaos", &dir.to_string_lossy());
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+    assert!(typed_failures > 0, "the plan never fired — this run proved nothing");
+
+    // plan drained: the SAME handle recovers without a reconnect ritual,
+    // and every key that was ever acked is still present
+    drop(armed);
+    let tail = unique_keys(512, 0x2000);
+    h.add_bulk(&tail).wait().unwrap();
+    acked.extend_from_slice(&tail);
+    let hits = h.query_bulk(&acked).wait().unwrap();
+    assert!(hits.iter().all(|&x| x), "an acked write was lost across the chaos window");
+    assert_eq!(client.list_filters().unwrap(), vec!["chaos".to_string()]);
+}
+
+// ---- determinism: a once-rule fires exactly once, tagged with the op ----
+
+/// `err:once` on the client send path: the FIRST add after arming fails
+/// with a typed `Backend` error carrying the failing op name and attempt
+/// count (`[op add_bulk, attempt 1/1]` — writes get exactly one
+/// shipment), the rule is spent, and the identical retry succeeds.
+#[test]
+fn once_rule_fires_exactly_once_and_tags_the_failing_op() {
+    let _gate = gate();
+
+    let service = Arc::new(FilterService::new());
+    let server = WireServer::bind(Arc::clone(&service), "127.0.0.1:0").unwrap();
+    let client = RemoteFilterService::connect(server.local_addr()).unwrap();
+    let h = client.create_filter_spec("once", spec(12, 1, 256, 100)).unwrap();
+
+    let _armed = Armed::plan("wire.client.send=err:once", 1);
+    let err = h.add_bulk(&[1, 2, 3]).wait().unwrap_err();
+    assert!(matches!(err, GbfError::Backend(_)), "injected fault surfaces typed, got {err:?}");
+    let msg = err.to_string();
+    assert!(msg.contains("[op add_bulk, attempt 1/1]"), "op and attempt count in: {msg}");
+    assert_eq!(fault::fires("wire.client.send"), 1);
+    assert_eq!(fault::active_rules(), 0, "the once-rule is spent");
+
+    // the spent rule is inert: the same call now succeeds, and the
+    // failed shipment provably never reached the backend
+    h.add_bulk(&[1, 2, 3]).wait().unwrap();
+    assert!(h.query_bulk(&[1, 2, 3]).wait().unwrap().iter().all(|&x| x));
+    assert_eq!(fault::fires("wire.client.send"), 1, "no further fires after the budget drained");
+    assert_eq!(service.stats("once").unwrap().metrics.adds, 3, "only the acked shipment landed");
+}
+
+// ---- persist: a torn shard write never publishes a snapshot ----
+
+/// `torn:once` on the shard writer: the snapshot fails with a typed
+/// `SnapshotCorrupt`, the destination directory is never published (a
+/// restore from it fails typed too), and with the rule spent the same
+/// snapshot succeeds and round-trips bit-identically.
+#[test]
+fn torn_shard_write_fails_typed_and_never_publishes() {
+    let _gate = gate();
+
+    let service = FilterService::new();
+    let h = service.create_filter_spec("torn", spec(13, 2, 1024, 150)).unwrap();
+    let keys = unique_keys(2_000, 0xD7);
+    h.add_bulk(&keys).wait().unwrap();
+    let mut probe = keys.clone();
+    probe.extend(unique_keys(1_000, 0xD8));
+    let pre = h.query_bulk(&probe).wait().unwrap();
+
+    let torn_dir = scratch_dir("chaos-torn");
+    let armed = Armed::plan("persist.shard_write=torn:once", 0x70A2);
+    match service.snapshot("torn", &torn_dir) {
+        Err(GbfError::SnapshotCorrupt(msg)) => {
+            assert!(msg.contains("torn shard write"), "torn write names itself: {msg}")
+        }
+        other => panic!("expected SnapshotCorrupt from the torn shard write, got {other:?}"),
+    }
+    // nothing was published: the wreckage stays in the temp dir, the
+    // destination has no manifest to restore from
+    match service.restore("torn-ghost", &torn_dir) {
+        Err(GbfError::SnapshotCorrupt(_)) => {}
+        other => panic!("a half-written snapshot must not restore, got {other:?}"),
+    }
+    assert_eq!(fault::fires("persist.shard_write"), 1);
+    assert_eq!(fault::active_rules(), 0, "the once-rule is spent");
+    drop(armed);
+
+    // rule drained: the same namespace snapshots cleanly and the warm
+    // start answers identically — including the false positives
+    let good_dir = scratch_dir("chaos-torn-good");
+    service.snapshot("torn", &good_dir).unwrap();
+    let warm = service.restore("torn-restored", &good_dir).unwrap();
+    let post = warm.query_bulk(&probe).wait().unwrap();
+    assert_eq!(pre, post, "recovered snapshot answers identically");
+    std::fs::remove_dir_all(&torn_dir).ok();
+    std::fs::remove_dir_all(&good_dir).ok();
+}
+
+// ---- batcher: an injected panic is contained, the worker survives ----
+
+/// `panic:once` inside the batch executor: the panic is caught by the
+/// worker's panic shield, the batch fails with a typed `Backend` error
+/// naming the panic, and the SAME worker keeps serving — the exact
+/// survival path a real panicking backend takes.
+#[test]
+fn injected_batch_panic_is_contained_and_the_worker_survives() {
+    let _gate = gate();
+
+    let service = FilterService::new();
+    let h = service.create_filter_spec("boom", spec(12, 1, 256, 100)).unwrap();
+
+    let _armed = Armed::plan("batcher.execute=panic:once", 3);
+    let err = h.add_bulk(&[1, 2, 3]).wait().unwrap_err();
+    assert!(matches!(err, GbfError::Backend(_)), "panic surfaces typed, got {err:?}");
+    assert!(err.to_string().contains("panicked during batch"), "{err}");
+    assert_eq!(fault::fires("batcher.execute"), 1);
+
+    // the namespace's one worker survived the panic: same handle, same
+    // worker thread, next batch lands (throughput metrics count both
+    // batches — they record attempts, success or not)
+    h.add_bulk(&[4, 5, 6]).wait().unwrap();
+    assert!(h.query_bulk(&[4, 5, 6]).wait().unwrap().iter().all(|&x| x));
+    assert_eq!(service.stats("boom").unwrap().metrics.adds, 6);
+}
+
+// ---- cluster: reconciliation converges once reseed faults drain ----
+
+/// A dark replica rejoins empty while the first three reseed attempts
+/// are injected away (`err:x3`) and the janitor's heal passes run under
+/// random delays. Reseeding is idempotent per pass, so the janitor
+/// simply retries: once the x3 budget is spent the replica converges to
+/// every acked key, with no operator intervention.
+#[test]
+fn cluster_reconciles_after_reseed_faults_drain() {
+    let _gate = gate();
+
+    // reserve an address for the replica that starts dark
+    let reserved = TcpListener::bind("127.0.0.1:0").unwrap();
+    let dark_addr = reserved.local_addr().unwrap().to_string();
+    drop(reserved);
+
+    let live = Arc::new(FilterService::new());
+    let server0 = WireServer::bind(Arc::clone(&live), "127.0.0.1:0").unwrap();
+    let addrs = vec![server0.local_addr().to_string(), dark_addr.clone()];
+    let sync_dir = scratch_dir("chaos-reseed");
+    let mut config = ClusterConfig::new(addrs, 2).unwrap();
+    config.sync_dir = sync_dir.to_str().unwrap().to_string();
+    let cluster = ClusterFilterService::connect(config).unwrap();
+
+    let h = cluster.create_filter_spec("mend", spec(13, 2, 1024, 150)).unwrap();
+    let keys = unique_keys(3_000, 0xE8);
+    h.add_bulk(&keys).wait().unwrap();
+
+    let armed = Armed::plan("cluster.reseed=err:x3;cluster.janitor.heal=delay(2ms):0.5", 0xC1A05);
+    let rejoined = Arc::new(FilterService::new());
+    let _server1 = WireServer::bind(Arc::clone(&rejoined), dark_addr.as_str()).unwrap();
+
+    let mut passes = 0u32;
+    while rejoined.stats("mend").map(|s| s.metrics.adds).unwrap_or(0) < keys.len() as u64 {
+        cluster.reconcile_now();
+        passes += 1;
+        assert!(passes < 50, "reseed never converged after the x3 budget drained");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(
+        fault::fires("cluster.reseed") >= 3,
+        "convergence without consuming the x3 budget — the failpoint is off the reseed path"
+    );
+    drop(armed);
+
+    let hits = rejoined.handle("mend").unwrap().query_bulk(&keys).wait().unwrap();
+    assert!(hits.iter().all(|&x| x), "reseeded replica is missing an acked key");
+    std::fs::remove_dir_all(&sync_dir).ok();
+}

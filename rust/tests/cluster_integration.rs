@@ -452,3 +452,142 @@ fn runtime_membership_changes_remap_and_migrate() {
         }
     }
 }
+
+// ---- deadline propagation (ISSUE 10): a STALLED replica — reachable
+// at the TCP level but never answering — is strictly nastier than a
+// dead one: without per-op deadlines every call into it hangs forever.
+// The stall is built from a bound listener that never calls accept():
+// connects land in the kernel's accept queue and succeed, sends buffer,
+// and no reply ever comes. No failpoints needed, so these run in the
+// tier-1 suite. ----
+
+/// Reads against a namespace whose PREFERRED replica is stalled fail
+/// over to the live co-replica within the per-op deadline budget
+/// (`op_timeout_ms`), and the answers are bit-identical to asking the
+/// live replica directly — false positives included.
+#[test]
+fn stalled_replica_reads_fail_over_within_the_deadline_budget() {
+    use std::time::{Duration, Instant};
+
+    // the stalled "server": bound, never accepting
+    let stalled = TcpListener::bind("127.0.0.1:0").unwrap();
+    let stalled_addr = stalled.local_addr().unwrap().to_string();
+    let live = Arc::new(FilterService::new());
+    let server1 = WireServer::bind(Arc::clone(&live), "127.0.0.1:0").unwrap();
+
+    let addrs = vec![stalled_addr, server1.local_addr().to_string()];
+    let mut config = ClusterConfig::new(addrs, 2)
+        .unwrap()
+        // the stalled replica is PREFERRED: every read starts there
+        .with_override("slow", vec![0, 1])
+        .unwrap();
+    // short per-op deadline so a stalled leg costs 300ms, not 10s
+    config.op_timeout_ms = 300;
+    let cluster = ClusterFilterService::connect(config).unwrap();
+
+    // create + ingest ack on the live replica; each fan-out leg into the
+    // stalled one burns its deadline and surfaces as a health strike,
+    // never as a caller-visible failure
+    let h = cluster.create_filter_spec("slow", spec(13, 2, 1024, 150)).unwrap();
+    let keys = unique_keys(2_000, 0xD1);
+    h.add_bulk(&keys).wait().unwrap();
+    let mut probe = keys.clone();
+    probe.extend(unique_keys(1_000, 0xD2));
+
+    // oracle: the live replica asked directly
+    let direct = RemoteFilterService::connect(server1.local_addr()).unwrap();
+    let expected = direct.handle("slow").unwrap().query_bulk(&probe).wait().unwrap();
+
+    // the measured read walks the stalled leg first, abandons it when
+    // its share of the budget is spent, and settles on the live one —
+    // all inside 2x the per-op timeout
+    let t0 = Instant::now();
+    let hits = h.query_bulk(&probe).wait().unwrap();
+    let elapsed = t0.elapsed();
+    assert_eq!(hits, expected, "failover answer is bit-identical to the live replica");
+    assert!(
+        elapsed < Duration::from_millis(2 * 300),
+        "failover read took {elapsed:?}, over 2x the 300ms per-op timeout"
+    );
+    drop(stalled);
+}
+
+/// The strike side of the same setup: deadline misses count against
+/// health exactly like connection errors, so the stalled replica is
+/// marked down after `DOWN_THRESHOLD` consecutive misses (reads then
+/// skip it entirely), the janitor's recovery probe into it stays
+/// bounded, and once a real server binds the address the janitor
+/// revives and reseeds it to full fidelity.
+#[test]
+fn stalled_replica_is_marked_down_then_revived_and_reseeded() {
+    use std::time::{Duration, Instant};
+
+    let stalled = TcpListener::bind("127.0.0.1:0").unwrap();
+    let stalled_addr = stalled.local_addr().unwrap().to_string();
+    let live = Arc::new(FilterService::new());
+    let server1 = WireServer::bind(Arc::clone(&live), "127.0.0.1:0").unwrap();
+
+    let addrs = vec![stalled_addr.clone(), server1.local_addr().to_string()];
+    let sync_dir = scratch_dir("cluster-stalled");
+    let mut config = ClusterConfig::new(addrs, 2)
+        .unwrap()
+        .with_override("sick", vec![0, 1])
+        .unwrap();
+    config.op_timeout_ms = 300;
+    // janitor driven by hand (reconcile_now) so the down/up transitions
+    // in this test have exactly one driver
+    config.heal_interval_ms = 0;
+    config.sync_dir = sync_dir.to_str().unwrap().to_string();
+    let cluster = ClusterFilterService::connect(config).unwrap();
+
+    let h = cluster.create_filter_spec("sick", spec(13, 2, 1024, 150)).unwrap();
+    let keys = unique_keys(2_000, 0xD3);
+    h.add_bulk(&keys).wait().unwrap();
+
+    // burn through the strike threshold: every op's stalled leg misses
+    // its deadline; the caller still gets acks and answers throughout
+    for i in 0..3 {
+        assert!(
+            h.query_bulk(&keys[..64]).wait().unwrap().iter().all(|&x| x),
+            "answers stay correct while striking (op {i})"
+        );
+    }
+
+    // marked down: reads now START at the live replica instead of
+    // spending a deadline's worth of waiting on the stalled one
+    let t0 = Instant::now();
+    let hits = h.query_bulk(&keys[..64]).wait().unwrap();
+    let elapsed = t0.elapsed();
+    assert!(hits.iter().all(|&x| x));
+    assert!(
+        elapsed < Duration::from_millis(150),
+        "read took {elapsed:?}: the down replica was not skipped"
+    );
+
+    // the janitor probes the down server every pass; with the listener
+    // still stalled the Ping burns one deadline and returns — bounded,
+    // never a wedged janitor
+    let t0 = Instant::now();
+    cluster.reconcile_now();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "janitor pass wedged on a stalled recovery probe: {:?}",
+        t0.elapsed()
+    );
+
+    // recovery: a real (empty) server takes over the stalled address;
+    // the next probes revive it and reseed every acked key
+    drop(stalled);
+    let revived = Arc::new(FilterService::new());
+    let _server0 = WireServer::bind(Arc::clone(&revived), stalled_addr.as_str()).unwrap();
+    let mut passes = 0u32;
+    while revived.stats("sick").map(|s| s.metrics.adds).unwrap_or(0) < keys.len() as u64 {
+        cluster.reconcile_now();
+        passes += 1;
+        assert!(passes < 50, "revived replica never reseeded");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let back = revived.handle("sick").unwrap().query_bulk(&keys).wait().unwrap();
+    assert!(back.iter().all(|&x| x), "reseeded replica is missing an acked key");
+    std::fs::remove_dir_all(&sync_dir).ok();
+}

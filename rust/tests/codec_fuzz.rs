@@ -105,6 +105,7 @@ fn valid_responses() -> Vec<Vec<u8>> {
         Response::Err(GbfError::NoQuorum { name: "ns".into(), replicas: 2 }),
         Response::Err(GbfError::StaleEpoch { name: "ns".into(), held: 5, proposed: 2 }),
         Response::Err(GbfError::NotSupported("cluster-admin".into())),
+        Response::Err(GbfError::DeadlineExceeded { op: "add_bulk".into(), elapsed_ms: 1500 }),
         Response::Ledger { ledger: small_ledger(), bindings: vec![("live".into(), 1)] },
         Response::Digest(vec![0xDEAD_BEEF, 1]),
     ];
@@ -189,6 +190,24 @@ fn snapshot_restore_corpus_entries_decode() {
     }
 }
 
+/// Error byte 12 (ISSUE 10): the committed corpus pins the
+/// `DeadlineExceeded` wire layout — err tag `0x0c`, op-name string,
+/// `elapsed_ms` u64 — so a codec change that silently renumbers or
+/// reshapes it fails here, not in a cross-version fleet.
+#[test]
+fn deadline_error_corpus_entry_decodes() {
+    let corpus = wire_corpus();
+    let (id, resp) = decode_response(&entry(&corpus, "resp-valid-err-deadline.hex"))
+        .expect("resp-valid-err-deadline decodes");
+    assert_eq!(id, 15);
+    match resp {
+        Response::Err(GbfError::DeadlineExceeded { op, elapsed_ms }) => {
+            assert_eq!((op.as_str(), elapsed_ms), ("add_bulk", 1500));
+        }
+        other => panic!("resp-valid-err-deadline decoded as {other:?}"),
+    }
+}
+
 #[test]
 fn hostile_corpus_entries_fail_typed() {
     let corpus = wire_corpus();
@@ -208,7 +227,7 @@ fn hostile_corpus_entries_fail_typed() {
     ] {
         assert!(decode_request(&entry(&corpus, name)).is_err(), "{name} must be a typed decode error");
     }
-    for name in ["resp-names-count-lie.hex", "resp-err-truncated.hex"] {
+    for name in ["resp-names-count-lie.hex", "resp-err-truncated.hex", "resp-deadline-truncated.hex"] {
         assert!(decode_response(&entry(&corpus, name)).is_err(), "{name} must be a typed decode error");
     }
     for name in ["frame-oversize-lie.hex", "frame-truncated.hex"] {

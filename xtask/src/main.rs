@@ -89,6 +89,8 @@ pub(crate) struct Violation {
 /// | `filter/`                                  | no `get_unchecked` — kernel loops stay bounds-checked (the optimizer hoists the checks) |
 /// | everywhere                                 | every `unsafe` needs an adjacent `// SAFETY:` comment |
 /// | everywhere                                 | every `Ordering::` choice needs a justifying comment within 10 lines |
+/// | outside [`FAILPOINT_FILES`]                | no `fail_point!` / `fail_torn!` — failpoints live only in the instrumented modules catalogued in DESIGN.md |
+/// | `infra/fault.rs`                           | `mod imp` and `pub use imp::*` must sit under `#[cfg(failpoints)]` — failpoints-off builds carry no registry code |
 fn lint() -> Result<()> {
     let src = repo_root().join("rust").join("src");
     let violations = lint_tree(&src)?;
@@ -195,12 +197,27 @@ fn is_ident_char(b: u8) -> bool {
     b.is_ascii_alphanumeric() || b == b'_'
 }
 
+/// The instrumented-module allowlist (ISSUE 10): every `fail_point!` /
+/// `fail_torn!` site lives in one of these files, mirroring the
+/// failpoint catalog in DESIGN.md. A failpoint anywhere else widens the
+/// chaos surface silently — add the point to the catalog (and the chaos
+/// suite) first, then extend this list.
+const FAILPOINT_FILES: [&str; 6] = [
+    "coordinator/batcher.rs",
+    "coordinator/cluster/mod.rs",
+    "coordinator/persist/mod.rs",
+    "coordinator/wire/client.rs",
+    "coordinator/wire/server.rs",
+    "infra/fault.rs",
+];
+
 fn lint_file(file: &Path, rel: &str, text: &str, violations: &mut Vec<Violation>) {
     let lines: Vec<&str> = text.lines().collect();
     let in_test = test_region_mask(&lines);
 
     let wire_scope = rel.starts_with("coordinator/wire/") || rel == "coordinator/server.rs";
     let filter_scope = rel.starts_with("filter/");
+    let failpoint_scope = FAILPOINT_FILES.contains(&rel);
 
     for (idx, &line) in lines.iter().enumerate() {
         if in_test[idx] || is_comment(line) {
@@ -242,6 +259,33 @@ fn lint_file(file: &Path, rel: &str, text: &str, violations: &mut Vec<Violation>
                 file: file.to_path_buf(),
                 line: lineno,
                 message: "memory-ordering choice without a justifying comment within 10 lines".into(),
+            });
+        }
+
+        if !failpoint_scope && (code.contains("fail_point!") || code.contains("fail_torn!")) {
+            violations.push(Violation {
+                file: file.to_path_buf(),
+                line: lineno,
+                message: "failpoint outside the instrumented-module allowlist — add the point to \
+                          DESIGN.md's catalog (and FAILPOINT_FILES) first"
+                    .into(),
+            });
+        }
+
+        // the zero-cost claim: without `--cfg failpoints` the registry
+        // is not compiled at all, so the module body and its re-export
+        // must each sit directly under the cfg gate
+        if rel == "infra/fault.rs"
+            && (code.trim_start().starts_with("mod imp")
+                || code.trim_start().starts_with("pub use imp::"))
+            && !(idx > 0 && lines[idx - 1].contains("#[cfg(failpoints)]"))
+        {
+            violations.push(Violation {
+                file: file.to_path_buf(),
+                line: lineno,
+                message: "fault registry internals must be `#[cfg(failpoints)]`-gated — \
+                          failpoints-off builds carry no registry code"
+                    .into(),
             });
         }
     }
@@ -397,6 +441,7 @@ fn is_hostile(name: &str) -> bool {
         "keys-length-lie",
         "resp-names-count-lie",
         "resp-err-truncated",
+        "resp-deadline-truncated",
         "snapshot-name-oversize",
         "ping-trailing-garbage",
     ]
@@ -444,12 +489,24 @@ mod tests {
             "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        Some(1).unwrap();\n    }\n}\n",
         )
         .expect("write");
+        // failpoints outside the instrumented allowlist are rejected
+        std::fs::write(
+            filter.join("chaotic.rs"),
+            "fn f() {\n    fail_point!(\"filter.rogue\");\n}\n",
+        )
+        .expect("write");
+        // the fault registry's internals must carry the cfg gate
+        let infra = dir.join("infra");
+        std::fs::create_dir_all(&infra).expect("mkdir");
+        std::fs::write(infra.join("fault.rs"), "mod imp {\n}\npub use imp::*;\n").expect("write");
         let violations = lint_tree(&dir).expect("lint runs");
         let messages: Vec<&str> = violations.iter().map(|v| v.message.as_str()).collect();
         assert!(messages.iter().any(|m| m.contains("unwrap/expect")), "{messages:?}");
         assert!(messages.iter().any(|m| m.contains("unchecked indexing")), "{messages:?}");
         assert!(messages.iter().any(|m| m.contains("SAFETY")), "{messages:?}");
         assert!(messages.iter().any(|m| m.contains("memory-ordering")), "{messages:?}");
+        assert!(messages.iter().any(|m| m.contains("instrumented-module allowlist")), "{messages:?}");
+        assert!(messages.iter().any(|m| m.contains("cfg(failpoints)")), "{messages:?}");
         assert!(
             violations.iter().all(|v| !v.file.ends_with("tested.rs")),
             "test regions must be exempt: {violations:?}"
